@@ -1,0 +1,54 @@
+//! Quickstart: serve the paper's single-model mixed workload (W_A) on a
+//! small simulated A100 fleet with QLM and print the headline metrics —
+//! the 60-second tour of the public API.
+//!
+//!     cargo run --release --example quickstart
+
+use qlm::backend::{ModelCatalog, ModelId};
+use qlm::baselines::Policy;
+use qlm::sim::{fleet_a100, SimConfig, Simulation};
+use qlm::workload::{SloClass, Trace, WorkloadSpec};
+
+fn main() {
+    // 1. A workload: interactive (20 s TTFT SLO) + batch requests for
+    //    Vicuna-13B, Poisson arrivals at 20 req/s — the paper's W_A shape.
+    let spec = WorkloadSpec::w_a(ModelId(1), 20.0, 1500);
+    let trace = Trace::generate(&spec, 42);
+    println!(
+        "workload: {} requests, mean output {:.0} tokens",
+        trace.len(),
+        trace.mean_output_tokens()
+    );
+
+    // 2. A cluster: four simulated A100 serving instances.
+    let fleet = fleet_a100(4);
+
+    // 3. QLM: request groups + RWT estimator + global scheduler + LSOs.
+    let cfg = SimConfig::new(fleet, ModelCatalog::paper(), Policy::qlm());
+    let metrics = Simulation::new(cfg, &trace).run(&trace);
+
+    println!("{}", metrics.summary());
+    for class in [SloClass::Interactive, SloClass::Batch1, SloClass::Batch2] {
+        println!(
+            "  {:12} SLO attainment: {:5.1}%",
+            class.name(),
+            100.0 * metrics.slo_attainment_class(class)
+        );
+    }
+    println!(
+        "  p50 TTFT {:.2}s  p99 TTFT {:.2}s  device util {:.0}%",
+        metrics.ttft_percentile(50.0),
+        metrics.ttft_percentile(99.0),
+        100.0 * metrics.mean_utilization()
+    );
+
+    // 4. Compare against vanilla vLLM FCFS on the identical workload.
+    let cfg = SimConfig::new(fleet_a100(4), ModelCatalog::paper(), Policy::VllmFcfs);
+    let baseline = Simulation::new(cfg, &trace).run(&trace);
+    println!("{}", baseline.summary());
+    println!(
+        "QLM vs vLLM interactive SLO attainment: {:.1}% vs {:.1}%",
+        100.0 * metrics.slo_attainment_class(SloClass::Interactive),
+        100.0 * baseline.slo_attainment_class(SloClass::Interactive),
+    );
+}

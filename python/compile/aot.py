@@ -1,0 +1,125 @@
+"""AOT export: lower the Layer-2 model (with its Layer-1 Pallas kernels)
+to HLO *text* for the rust PJRT runtime.
+
+HLO text, not serialized HloModuleProto: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version the `xla`
+0.1.6 crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts, per batch bucket B in {1, 4, 8}:
+  artifacts/prefill_b{B}.hlo.txt   (tokens[B,S], lengths[B]) -> (logits, k, v)
+  artifacts/decode_b{B}.hlo.txt    (tokens[B], k, v, lengths[B]) -> (logits, k, v)
+  artifacts/manifest.json          shapes + model config for the rust loader
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import ModelConfig, bound_model, decode_step, prefill
+
+BATCH_BUCKETS = (1, 4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the baked weights MUST survive the text
+    # round-trip (default printing elides them as `{...}`).
+    return comp.as_hlo_text(True)
+
+
+def lower_prefill(cfg: ModelConfig, params, b: int) -> str:
+    s = cfg.max_seq
+
+    def fn(tokens, lengths):
+        return prefill(params, cfg, tokens, lengths)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((b, s), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_decode(cfg: ModelConfig, params, b: int) -> str:
+    s = cfg.max_seq
+    cache = jax.ShapeDtypeStruct(
+        (cfg.n_layers, b, s, cfg.n_heads, cfg.head_dim), jnp.float32
+    )
+
+    def fn(tokens, k, v, lengths):
+        return decode_step(params, cfg, tokens, k, v, lengths)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        cache,
+        cache,
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+    )
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="stamp file; artifacts land in its directory")
+    ap.add_argument("--buckets", type=int, nargs="*", default=list(BATCH_BUCKETS))
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    cfg, params = bound_model()
+
+    manifest = {
+        "model": "tiny-qlm",
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "head_dim": cfg.head_dim,
+        "max_seq": cfg.max_seq,
+        "param_count": cfg.param_count,
+        "seed": cfg.seed,
+        "buckets": [],
+    }
+    for b in args.buckets:
+        pre = lower_prefill(cfg, params, b)
+        dec = lower_decode(cfg, params, b)
+        pre_path = os.path.join(out_dir, f"prefill_b{b}.hlo.txt")
+        dec_path = os.path.join(out_dir, f"decode_b{b}.hlo.txt")
+        with open(pre_path, "w") as f:
+            f.write(pre)
+        with open(dec_path, "w") as f:
+            f.write(dec)
+        manifest["buckets"].append({
+            "batch": b,
+            "prefill": os.path.basename(pre_path),
+            "decode": os.path.basename(dec_path),
+        })
+        print(f"bucket B={b}: prefill {len(pre)//1024} KiB, decode {len(dec)//1024} KiB")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # Plain-text twin for the dependency-free rust loader.
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        for key in ("vocab", "d_model", "n_layers", "n_heads", "head_dim",
+                    "max_seq", "param_count", "seed"):
+            f.write(f"{key} {manifest[key]}\n")
+        for b in manifest["buckets"]:
+            f.write(f"bucket {b['batch']} {b['prefill']} {b['decode']}\n")
+    # Stamp file for make's dependency tracking.
+    with open(os.path.abspath(args.out), "w") as f:
+        f.write("artifacts built\n")
+    print(f"wrote manifest + stamp to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

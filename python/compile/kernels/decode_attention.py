@@ -1,0 +1,143 @@
+"""Layer-1 Pallas kernel: decode attention over the KV cache.
+
+The paper's serving hot spot is vLLM's PagedAttention decode step (CUDA:
+one warp group per head, shared-memory tiles over KV pages). The TPU
+rethink (DESIGN.md SS Hardware-Adaptation):
+
+  * the KV cache streams HBM->VMEM in BlockSpec tiles over a (batch,
+    kv-chunk) grid -- BlockSpec plays the role threadblock tiling plays
+    on GPU;
+  * q.k^T and p.v contractions are shaped for the MXU (lane-dim 128
+    friendly head_dim, f32 accumulation);
+  * an online-softmax (flash-style running max / denominator carried in
+    VMEM scratch across the kv-chunk grid dimension) makes one pass over
+    the cache suffice, so VMEM residency is O(chunk), not O(S).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; TPU performance is estimated analytically in
+EXPERIMENTS.md SSPerf from the VMEM footprint and MXU utilization of
+these block shapes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_CHUNK = 128  # kv positions per VMEM tile; multiple of MXU lanes.
+
+
+def _decode_attn_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, chunk, kv_chunks):
+    """Grid: (batch, kv_chunks). One program instance handles one
+    (sequence, kv-chunk) pair for all heads; scratch carries the online
+    softmax state across the kv-chunk dimension (innermost grid axis).
+    """
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # [H, D]
+    k = k_ref[0].astype(jnp.float32)            # [chunk, H, D]
+    v = v_ref[0].astype(jnp.float32)            # [chunk, H, D]
+    length = lengths_ref[0]
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    # scores: [H, chunk] -- MXU-shaped contraction over D.
+    scores = jnp.einsum("hd,chd->hc", q, k) * scale
+
+    # Mask positions beyond the sequence length.
+    pos = c * chunk + jax.lax.broadcasted_iota(jnp.int32, (1, chunk), 1)
+    valid = pos < length                         # [1, chunk]
+    scores = jnp.where(valid, scores, -1e30)
+
+    # Online softmax update.
+    m_prev = m_ref[...]                          # [H, 1]
+    l_prev = l_ref[...]                          # [H, 1]
+    acc_prev = acc_ref[...]                      # [H, D]
+
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)       # [H, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)                        # rescale old
+    p = jnp.exp(scores - m_new)                            # [H, chunk]
+    p = jnp.where(valid, p, 0.0)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = alpha * acc_prev + jnp.einsum("hc,chd->hd", p, v)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(c == kv_chunks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def decode_attention(q, k_cache, v_cache, lengths, *, chunk=DEFAULT_CHUNK):
+    """Pallas decode attention.
+
+    Args:
+      q:        [B, H, D]    current-step queries.
+      k_cache:  [B, S, H, D] padded key cache (S % chunk == 0 after pad).
+      v_cache:  [B, S, H, D] padded value cache.
+      lengths:  [B] int32    valid tokens per sequence.
+      chunk:    kv positions per VMEM tile.
+
+    Returns:
+      [B, H, D] f32 attention output.
+    """
+    b, h, d = q.shape
+    s = k_cache.shape[1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        cfg = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        k_cache = jnp.pad(k_cache, cfg)
+        v_cache = jnp.pad(v_cache, cfg)
+        s += pad
+    kv_chunks = s // chunk
+
+    kernel = functools.partial(
+        _decode_attn_kernel, chunk=chunk, kv_chunks=kv_chunks
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kv_chunks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, c: (i,)),                     # lengths
+            pl.BlockSpec((1, h, d), lambda i, c: (i, 0, 0)),           # q
+            pl.BlockSpec((1, chunk, h, d), lambda i, c: (i, c, 0, 0)), # k tile
+            pl.BlockSpec((1, chunk, h, d), lambda i, c: (i, c, 0, 0)), # v tile
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda i, c: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+        scratch_shapes=[
+            # Online-softmax carry: running max, denominator, accumulator.
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, d), jnp.float32),
+        ],
+        interpret=True,
+    )(lengths, q, k_cache, v_cache)
+
+
+def vmem_bytes(h, d, chunk):
+    """Estimated VMEM residency of one program instance (f32)."""
+    q = h * d * 4
+    kv = 2 * chunk * h * d * 4
+    scratch = (2 * h + h * d) * 4
+    out = h * d * 4
+    return q + kv + scratch + out
+
+
+def mxu_flops_per_instance(h, d, chunk):
+    """MAC-FLOPs the MXU executes per (seq, chunk) instance."""
+    return 2 * h * d * chunk * 2  # q.k and p.v contractions

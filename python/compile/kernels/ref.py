@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (Layer-1 correctness signal).
+
+Every kernel in this package has a reference implementation here written
+with plain jax.numpy ops only. pytest (and hypothesis sweeps) assert
+allclose between kernel and oracle across shapes/dtypes.
+"""
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Single-token decode attention over a padded KV cache.
+
+    Args:
+      q:        [B, H, D]      query for the current decode step.
+      k_cache:  [B, S, H, D]   padded key cache.
+      v_cache:  [B, S, H, D]   padded value cache.
+      lengths:  [B] int32      valid tokens per sequence (<= S).
+
+    Returns:
+      [B, H, D] attention output, f32.
+    """
+    q = q.astype(jnp.float32)
+    k = k_cache.astype(jnp.float32)
+    v = v_cache.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    # scores: [B, H, S]
+    scores = jnp.einsum("bhd,bshd->bhs", q, k) * scale
+    s = k.shape[1]
+    mask = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = jnp.where(mask, probs, 0.0)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bshd->bhd", probs, v)
+
+
+def matmul_ref(a, b):
+    """Tiled-matmul oracle: plain f32 matmul."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def rmsnorm_ref(x, w, eps=1e-6):
+    """RMSNorm oracle."""
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + eps)) * w.astype(jnp.float32)

@@ -1,0 +1,216 @@
+"""Layer-2: a tiny GPT-style decoder in JAX, the real model served
+end-to-end by the rust runtime (examples/e2e_serve.rs).
+
+Two entry points are AOT-lowered per batch bucket (aot.py):
+
+  * ``prefill(tokens, lengths)``   -> (logits, k_cache, v_cache)
+  * ``decode_step(tokens, k, v, lengths)`` -> (logits, k, v)
+
+The decode step's attention is the Layer-1 Pallas kernel
+(kernels/decode_attention.py), so the kernel lowers into the same HLO
+module the rust PJRT client executes. Weights are generated
+deterministically from a seed and baked into the HLO as constants: the
+rust side feeds only tokens/caches.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.ref import rmsnorm_ref as rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Matches rust `ModelCatalog::tiny()`: 4 layers x 4 heads x 16 dim."""
+    vocab: int = 256          # byte-level tokenizer
+    d_model: int = 64
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 16
+    d_ff: int = 256
+    max_seq: int = 256
+    seed: int = 20240711
+
+    @property
+    def param_count(self):
+        l = self.n_layers
+        attn = 4 * self.d_model * self.n_heads * self.head_dim
+        ff = 2 * self.d_model * self.d_ff
+        norms = 2 * self.d_model
+        embed = self.vocab * self.d_model
+        return l * (attn + ff + norms) + 2 * embed + self.d_model
+
+
+def init_params(cfg: ModelConfig):
+    """Deterministic weights from cfg.seed."""
+    key = jax.random.PRNGKey(cfg.seed)
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+    scale = 0.02
+
+    def dense(k, shape):
+        return (jax.random.normal(k, shape, jnp.float32) * scale)
+
+    params = {
+        "embed": dense(keys[0], (cfg.vocab, cfg.d_model)),
+        "unembed": dense(keys[1], (cfg.d_model, cfg.vocab)),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": [],
+    }
+    h = cfg.n_heads * cfg.head_dim
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(keys[2 + i], 6)
+        params["layers"].append({
+            "wq": dense(ks[0], (cfg.d_model, h)),
+            "wk": dense(ks[1], (cfg.d_model, h)),
+            "wv": dense(ks[2], (cfg.d_model, h)),
+            "wo": dense(ks[3], (h, cfg.d_model)),
+            "w1": dense(ks[4], (cfg.d_model, cfg.d_ff)),
+            "w2": dense(ks[5], (cfg.d_ff, cfg.d_model)),
+            "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+            "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+        })
+    return params
+
+
+def _split_heads(x, cfg):
+    b, s, _ = x.shape
+    return x.reshape(b, s, cfg.n_heads, cfg.head_dim)
+
+
+def _pos_encoding(cfg):
+    """Sinusoidal positions, [max_seq, d_model]."""
+    pos = jnp.arange(cfg.max_seq)[:, None].astype(jnp.float32)
+    dim = jnp.arange(cfg.d_model // 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, 2.0 * dim / cfg.d_model)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def prefill(params, cfg: ModelConfig, tokens, lengths):
+    """Full-prompt forward pass.
+
+    Args:
+      tokens:  [B, S] int32, right-padded to cfg.max_seq.
+      lengths: [B] int32 valid prompt lengths.
+
+    Returns:
+      logits:  [B, vocab] at each sequence's last valid position.
+      k_cache: [L, B, S, H, D] f32.
+      v_cache: [L, B, S, H, D] f32.
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens] + _pos_encoding(cfg)[None, :s]
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    pad = jnp.arange(s)[None, :] < lengths[:, None]      # [B, S]
+    mask = causal[None, None] & pad[:, None, None, :]    # [B, 1, S, S]
+
+    ks, vs = [], []
+    for layer in params["layers"]:
+        h = rmsnorm(x, layer["norm1"])
+        q = _split_heads(h @ layer["wq"], cfg)
+        k = _split_heads(h @ layer["wk"], cfg)
+        v = _split_heads(h @ layer["wv"], cfg)
+        ks.append(k)
+        vs.append(v)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.head_dim, jnp.float32))
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+        scores = jnp.where(mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+        x = x + attn.reshape(b, s, -1) @ layer["wo"]
+        h2 = rmsnorm(x, layer["norm2"])
+        x = x + jax.nn.gelu(h2 @ layer["w1"]) @ layer["w2"]
+
+    x = rmsnorm(x, params["final_norm"])
+    # Logits at the last valid position of each sequence.
+    idx = jnp.clip(lengths - 1, 0, s - 1)
+    last = jnp.take_along_axis(x, idx[:, None, None].repeat(cfg.d_model, -1), 1)
+    logits = last[:, 0, :] @ params["unembed"]
+    k_cache = jnp.stack(ks)  # [L, B, S, H, D]
+    v_cache = jnp.stack(vs)
+    return logits, k_cache, v_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, k_cache, v_cache, lengths):
+    """One autoregressive decode iteration for the whole batch.
+
+    Args:
+      tokens:  [B] int32 last generated token per sequence.
+      k_cache: [L, B, S, H, D] f32; positions >= lengths are garbage.
+      v_cache: [L, B, S, H, D].
+      lengths: [B] int32 tokens already in the cache.
+
+    Returns:
+      (logits [B, vocab], k_cache, v_cache) with the new K/V written at
+      position `lengths` (caller increments lengths).
+    """
+    b = tokens.shape[0]
+    x = params["embed"][tokens] + _pos_encoding(cfg)[lengths]  # [B, D_model]
+
+    def write_at(cache, new, pos):
+        # cache: [B, S, H, D], new: [B, H, D], pos: [B]
+        def one(c, n, p):
+            return jax.lax.dynamic_update_slice(c, n[None], (p, 0, 0))
+        return jax.vmap(one)(cache, new, pos)
+
+    new_k, new_v = [], []
+    for li, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["norm1"])
+        q = (h @ layer["wq"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        k = (h @ layer["wk"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        v = (h @ layer["wv"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        kc = write_at(k_cache[li], k, lengths)
+        vc = write_at(v_cache[li], v, lengths)
+        new_k.append(kc)
+        new_v.append(vc)
+        # Layer-1 Pallas kernel on the decode hot path.
+        attn = decode_attention(q, kc, vc, lengths + 1)
+        x = x + attn.reshape(b, -1) @ layer["wo"]
+        h2 = rmsnorm(x, layer["norm2"])
+        x = x + jax.nn.gelu(h2 @ layer["w1"]) @ layer["w2"]
+
+    x = rmsnorm(x, params["final_norm"])
+    logits = x @ params["unembed"]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def decode_step_ref(params, cfg, tokens, k_cache, v_cache, lengths):
+    """Oracle decode step: identical math with ref attention (no Pallas)."""
+    from compile.kernels.ref import decode_attention_ref
+
+    b = tokens.shape[0]
+    x = params["embed"][tokens] + _pos_encoding(cfg)[lengths]
+
+    def write_at(cache, new, pos):
+        def one(c, n, p):
+            return jax.lax.dynamic_update_slice(c, n[None], (p, 0, 0))
+        return jax.vmap(one)(cache, new, pos)
+
+    new_k, new_v = [], []
+    for li, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["norm1"])
+        q = (h @ layer["wq"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        k = (h @ layer["wk"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        v = (h @ layer["wv"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        kc = write_at(k_cache[li], k, lengths)
+        vc = write_at(v_cache[li], v, lengths)
+        new_k.append(kc)
+        new_v.append(vc)
+        attn = decode_attention_ref(q, kc, vc, lengths + 1)
+        x = x + attn.reshape(b, -1) @ layer["wo"]
+        h2 = rmsnorm(x, layer["norm2"])
+        x = x + jax.nn.gelu(h2 @ layer["w1"]) @ layer["w2"]
+
+    x = rmsnorm(x, params["final_norm"])
+    logits = x @ params["unembed"]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+@functools.lru_cache(maxsize=4)
+def bound_model(seed=None):
+    """(cfg, params) with weights closed over — the unit aot.py lowers."""
+    cfg = ModelConfig() if seed is None else ModelConfig(seed=seed)
+    return cfg, init_params(cfg)

@@ -1,0 +1,135 @@
+"""Layer-1 correctness: Pallas decode-attention kernel vs pure-jnp oracle.
+
+The CORE correctness signal for the compute layer — the same kernel code
+lowers into the HLO the rust runtime executes. Hypothesis sweeps shapes,
+lengths, chunk sizes, and dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.decode_attention import (
+    decode_attention,
+    mxu_flops_per_instance,
+    vmem_bytes,
+)
+from compile.kernels.ref import decode_attention_ref
+
+
+def _rand(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+def run_case(b, s, h, d, lengths, chunk, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h, d), dtype)
+    k = _rand(rng, (b, s, h, d), dtype)
+    v = _rand(rng, (b, s, h, d), dtype)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    out = decode_attention(q, k, v, lengths, chunk=chunk)
+    ref = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(out, ref, atol=2e-3, rtol=2e-3)
+
+
+class TestDecodeAttentionBasics:
+    def test_full_length(self):
+        run_case(2, 128, 4, 16, [128, 128], 64)
+
+    def test_partial_lengths(self):
+        run_case(3, 128, 4, 16, [1, 64, 97], 64)
+
+    def test_single_token_cache(self):
+        run_case(2, 64, 2, 8, [1, 1], 32)
+
+    def test_unaligned_seq_padding(self):
+        # S not a multiple of chunk: kernel pads internally.
+        run_case(2, 100, 4, 16, [100, 37], 64)
+
+    def test_chunk_larger_than_seq(self):
+        run_case(1, 32, 2, 16, [20], 128)
+
+    def test_single_head(self):
+        run_case(2, 64, 1, 32, [64, 10], 32)
+
+    def test_batch_one(self):
+        run_case(1, 256, 4, 16, [173], 128)
+
+    def test_bf16_inputs(self):
+        run_case(2, 64, 2, 16, [64, 30], 32, dtype=jnp.bfloat16)
+
+    def test_deterministic(self):
+        rng = np.random.default_rng(7)
+        q = _rand(rng, (2, 4, 16))
+        k = _rand(rng, (2, 64, 4, 16))
+        v = _rand(rng, (2, 64, 4, 16))
+        lengths = jnp.asarray([64, 9], jnp.int32)
+        a = decode_attention(q, k, v, lengths, chunk=32)
+        b = decode_attention(q, k, v, lengths, chunk=32)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_chunk_invariance(self):
+        # The online softmax must make the result independent of chunking.
+        rng = np.random.default_rng(8)
+        q = _rand(rng, (2, 4, 16))
+        k = _rand(rng, (2, 128, 4, 16))
+        v = _rand(rng, (2, 128, 4, 16))
+        lengths = jnp.asarray([128, 55], jnp.int32)
+        outs = [
+            np.asarray(decode_attention(q, k, v, lengths, chunk=c))
+            for c in (16, 32, 64, 128)
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], atol=1e-5, rtol=1e-5)
+
+    def test_extreme_scores_stable(self):
+        # Large-magnitude logits: online softmax must not overflow.
+        rng = np.random.default_rng(9)
+        q = _rand(rng, (1, 2, 16)) * 100.0
+        k = _rand(rng, (1, 64, 2, 16)) * 100.0
+        v = _rand(rng, (1, 64, 2, 16))
+        lengths = jnp.asarray([64], jnp.int32)
+        out = decode_attention(q, k, v, lengths, chunk=32)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([8, 16, 32]),
+    s=st.integers(8, 160),
+    chunk=st.sampled_from([16, 32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_decode_attention_hypothesis(b, h, d, s, chunk, seed, data):
+    lengths = data.draw(
+        st.lists(st.integers(1, s), min_size=b, max_size=b), label="lengths"
+    )
+    run_case(b, s, h, d, lengths, chunk, seed=seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    s=st.integers(8, 96),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_decode_attention_hypothesis_bf16(b, s, seed, data):
+    lengths = data.draw(
+        st.lists(st.integers(1, s), min_size=b, max_size=b), label="lengths"
+    )
+    run_case(b, s, 2, 16, lengths, 32, dtype=jnp.bfloat16, seed=seed)
+
+
+class TestPerfEstimators:
+    def test_vmem_within_budget(self):
+        # Production shape: 16 heads x 128 dim, 512-token chunks.
+        assert vmem_bytes(16, 128, 512) < 16 * 1024 * 1024
+
+    def test_flops_scale_with_chunk(self):
+        assert mxu_flops_per_instance(4, 16, 128) == 2 * mxu_flops_per_instance(4, 16, 64)

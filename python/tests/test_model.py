@@ -1,0 +1,175 @@
+"""Layer-2 correctness: prefill/decode shapes, kernel-vs-oracle decode
+parity, autoregressive consistency, and AOT lowering round-trips."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ModelConfig,
+    bound_model,
+    decode_step,
+    decode_step_ref,
+    init_params,
+    prefill,
+)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return bound_model()
+
+
+def random_prompt(cfg, b, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(
+        rng.integers(0, cfg.vocab - 1, size=(b, cfg.max_seq)), jnp.int32
+    )
+    return tokens, jnp.asarray(lengths, jnp.int32)
+
+
+class TestPrefill:
+    def test_shapes(self, model):
+        cfg, params = model
+        tokens, lengths = random_prompt(cfg, 2, [10, 50])
+        logits, k, v = prefill(params, cfg, tokens, lengths)
+        assert logits.shape == (2, cfg.vocab)
+        assert k.shape == (cfg.n_layers, 2, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+        assert v.shape == k.shape
+
+    def test_logits_depend_only_on_valid_prefix(self, model):
+        cfg, params = model
+        tokens, lengths = random_prompt(cfg, 1, [10], seed=1)
+        logits_a, _, _ = prefill(params, cfg, tokens, lengths)
+        # Scramble the padding region; logits must not change.
+        scrambled = tokens.at[:, 10:].set((tokens[:, 10:] + 17) % cfg.vocab)
+        logits_b, _, _ = prefill(params, cfg, scrambled, lengths)
+        np.testing.assert_allclose(logits_a, logits_b, atol=1e-5)
+
+    def test_batch_consistency(self, model):
+        # Same prompt alone vs batched with another: same logits.
+        cfg, params = model
+        tokens, _ = random_prompt(cfg, 2, [20, 40], seed=2)
+        lengths = jnp.asarray([20, 40], jnp.int32)
+        logits_batch, _, _ = prefill(params, cfg, tokens, lengths)
+        logits_solo, _, _ = prefill(
+            params, cfg, tokens[:1], jnp.asarray([20], jnp.int32)
+        )
+        np.testing.assert_allclose(logits_batch[0], logits_solo[0], atol=1e-4, rtol=1e-4)
+
+
+class TestDecode:
+    def test_kernel_matches_oracle(self, model):
+        cfg, params = model
+        tokens, lengths = random_prompt(cfg, 3, [5, 30, 100], seed=3)
+        _, k, v = prefill(params, cfg, tokens, lengths)
+        step_tokens = jnp.asarray([1, 2, 3], jnp.int32)
+        l1, k1, v1 = decode_step(params, cfg, step_tokens, k, v, lengths)
+        l2, k2, v2 = decode_step_ref(params, cfg, step_tokens, k, v, lengths)
+        np.testing.assert_allclose(l1, l2, atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(k1, k2, atol=1e-5)
+        np.testing.assert_allclose(v1, v2, atol=1e-5)
+
+    def test_decode_matches_prefill_extension(self, model):
+        # Greedy-decoding one token then prefilling prompt+token must give
+        # consistent next-step logits (autoregressive consistency).
+        cfg, params = model
+        n = 12
+        tokens, lengths = random_prompt(cfg, 1, [n], seed=4)
+        logits_p, k, v = prefill(params, cfg, tokens, lengths)
+        next_tok = jnp.argmax(logits_p, -1).astype(jnp.int32)
+        # Path A: decode_step after prefill.
+        logits_d, _, _ = decode_step(params, cfg, next_tok, k, v, lengths)
+        # Path B: prefill over the extended prompt.
+        ext = tokens.at[0, n].set(next_tok[0])
+        logits_e, _, _ = prefill(params, cfg, ext, jnp.asarray([n + 1], jnp.int32))
+        np.testing.assert_allclose(logits_d, logits_e, atol=2e-3, rtol=2e-3)
+
+    def test_multi_step_generation_finite(self, model):
+        cfg, params = model
+        tokens, lengths = random_prompt(cfg, 2, [8, 16], seed=5)
+        logits, k, v = prefill(params, cfg, tokens, lengths)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        ln = lengths
+        for _ in range(5):
+            logits, k, v = decode_step(params, cfg, cur, k, v, ln)
+            assert np.isfinite(np.asarray(logits)).all()
+            cur = jnp.argmax(logits, -1).astype(jnp.int32)
+            ln = ln + 1
+
+    def test_batch_entry_isolation(self, model):
+        # Changing one sequence must not affect another's logits.
+        cfg, params = model
+        tokens, lengths = random_prompt(cfg, 2, [20, 20], seed=6)
+        _, k, v = prefill(params, cfg, tokens, lengths)
+        t_a = jnp.asarray([1, 2], jnp.int32)
+        t_b = jnp.asarray([1, 200], jnp.int32)  # second seq token differs
+        la, _, _ = decode_step(params, cfg, t_a, k, v, lengths)
+        lb, _, _ = decode_step(params, cfg, t_b, k, v, lengths)
+        np.testing.assert_allclose(la[0], lb[0], atol=1e-5)
+        assert np.abs(np.asarray(la[1] - lb[1])).max() > 1e-4
+
+
+class TestDeterminism:
+    def test_weights_deterministic_by_seed(self):
+        a = init_params(ModelConfig())
+        b = init_params(ModelConfig())
+        np.testing.assert_array_equal(np.asarray(a["embed"]), np.asarray(b["embed"]))
+        c = init_params(ModelConfig(seed=1))
+        assert np.abs(np.asarray(a["embed"] - c["embed"])).max() > 0
+
+    def test_param_count_formula(self):
+        cfg = ModelConfig()
+        params = init_params(cfg)
+        total = 0
+        def count(t):
+            nonlocal total
+            total += int(np.prod(t.shape))
+        jax.tree_util.tree_map(count, params)
+        assert total == cfg.param_count
+
+
+class TestArtifacts:
+    """Validate the AOT manifest when artifacts have been built."""
+
+    ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(ART, "manifest.json")),
+        reason="run `make artifacts` first",
+    )
+    def test_manifest_consistent_with_model(self):
+        cfg, _ = bound_model()
+        with open(os.path.join(self.ART, "manifest.json")) as f:
+            m = json.load(f)
+        assert m["vocab"] == cfg.vocab
+        assert m["n_layers"] == cfg.n_layers
+        assert m["max_seq"] == cfg.max_seq
+        for b in m["buckets"]:
+            for kind in ("prefill", "decode"):
+                p = os.path.join(self.ART, b[kind])
+                assert os.path.exists(p), p
+                with open(p) as f:
+                    head = f.read(65536)
+                assert "ENTRY" in head
+                # Weights must not be elided from the text.
+                assert "{...}" not in head
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(ART, "manifest.json")),
+        reason="run `make artifacts` first",
+    )
+    def test_hlo_entry_signatures(self):
+        with open(os.path.join(self.ART, "manifest.json")) as f:
+            m = json.load(f)
+        b1 = next(b for b in m["buckets"] if b["batch"] == 1)
+        text = open(os.path.join(self.ART, b1["decode"])).read()
+        # decode entry takes 4 runtime parameters (tokens, k, v, lengths);
+        # ENTRY is the final computation in the text dump.
+        entry = text[text.index("ENTRY") :]
+        n_params = entry.count("parameter(")
+        assert n_params == 4, f"found {n_params} entry parameters"

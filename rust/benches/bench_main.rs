@@ -1,0 +1,252 @@
+//! Benchmark harness (hand-rolled — the offline environment has no
+//! criterion). `cargo bench` runs every benchmark and prints
+//! mean ± stddev wall time plus derived throughput numbers.
+//!
+//! Benches cover the paper's headline end-to-end results (Fig. 9 / 12
+//! operating points) and the hot paths the §Perf pass optimizes:
+//! RWT estimation, global-scheduler solves, the KV allocator, the
+//! continuous-batching step loop, and the PJRT decode step (when
+//! artifacts exist).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use qlm::backend::{
+    GpuKind, Instance, InstanceConfig, KvCache, ModelCatalog, ModelId, PerfModel, RunningSeq,
+};
+use qlm::baselines::Policy;
+use qlm::coordinator::request_group::{GroupId, RequestGroup};
+use qlm::coordinator::rwt::{ProfileTable, RwtEstimator};
+use qlm::coordinator::scheduler::{GlobalScheduler, InstanceView, SchedulerConfig, SolverKind};
+use qlm::sim::{fleet_a100, SimConfig, Simulation};
+use qlm::util::{mean, stddev};
+use qlm::workload::{SloClass, Trace, WorkloadSpec};
+
+/// Run `f` for `iters` timed iterations (after 1 warmup); report stats.
+fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
+    let _ = f(); // warmup
+    let mut times = Vec::with_capacity(iters);
+    let mut work = 0u64;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        work = f();
+        times.push(t0.elapsed().as_secs_f64() * 1000.0);
+    }
+    let m = mean(&times);
+    let sd = stddev(&times);
+    let per_item = if work > 0 {
+        format!("  ({:.3} µs/item over {} items)", m * 1000.0 / work as f64, work)
+    } else {
+        String::new()
+    };
+    println!("{name:<44} {m:>9.3} ms ± {sd:>7.3}{per_item}");
+}
+
+fn grp(id: u64, model: u32, n: usize, slo: f64) -> RequestGroup {
+    RequestGroup {
+        id: GroupId(id),
+        model: ModelId(model),
+        class: SloClass::Batch1,
+        slo_s: slo,
+        earliest_arrival_s: 0.0,
+        members: VecDeque::from_iter(0..n as u64),
+        mega: false,
+    }
+}
+
+fn views(n: u32, catalog: &ModelCatalog) -> Vec<InstanceView> {
+    (0..n)
+        .map(|i| {
+            let mut perf_for = std::collections::HashMap::new();
+            let mut swap_time = std::collections::HashMap::new();
+            for m in catalog.ids() {
+                if let Some(p) = PerfModel::try_profile(catalog.get(m), GpuKind::A100, 161.0) {
+                    swap_time.insert(m, p.swap_cpu_gpu_s);
+                    perf_for.insert(m, p);
+                }
+            }
+            InstanceView {
+                id: qlm::backend::InstanceId(i),
+                active_model: Some(ModelId(0)),
+                perf_for,
+                swap_time,
+                executing: None,
+            }
+        })
+        .collect()
+}
+
+fn bench_rwt() {
+    let catalog = ModelCatalog::paper();
+    let est = RwtEstimator::new(ProfileTable::default());
+    let perf = PerfModel::profile(catalog.get(ModelId(0)), GpuKind::A100, 161.0);
+    let groups: Vec<RequestGroup> = (0..512).map(|i| grp(i, 0, 256, 60.0)).collect();
+    let refs: Vec<&RequestGroup> = groups.iter().collect();
+    bench("rwt/estimate_queue (512 groups)", 50, || {
+        let e = est.estimate_queue(&refs, &perf, Some(ModelId(0)), |_| 1.0);
+        e.len() as u64
+    });
+}
+
+fn bench_scheduler() {
+    let catalog = ModelCatalog::paper_multi_model();
+    let est = RwtEstimator::new(ProfileTable::default());
+    let vs = views(10, &catalog);
+    for n_groups in [64usize, 390, 1562] {
+        let groups: Vec<RequestGroup> = (0..n_groups as u64)
+            .map(|g| grp(g, (g % 4) as u32, 256, 60.0 + (g % 7) as f64 * 300.0))
+            .collect();
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                ..Default::default()
+            },
+            est.clone(),
+        );
+        bench(
+            &format!(
+                "scheduler/greedy ({n_groups} groups ≈ {}K reqs)",
+                n_groups * 256 / 1000
+            ),
+            5,
+            || sched.schedule(&groups, &vs, 0.0).stats.groups as u64,
+        );
+    }
+    // Exact MILP reference point (Fig. 20's right-hand regime).
+    let groups: Vec<RequestGroup> =
+        (0..5u64).map(|g| grp(g, (g % 2) as u32, 256, 60.0)).collect();
+    let sched = GlobalScheduler::new(
+        SchedulerConfig {
+            solver: SolverKind::ExactMilp,
+            milp_max_groups: 5,
+            node_limit: 50_000,
+        },
+        est,
+    );
+    bench("scheduler/exact-milp (5 groups)", 5, || {
+        sched.schedule(&groups, &vs[..1], 0.0).stats.milp_nodes as u64
+    });
+}
+
+fn bench_kv() {
+    bench("kv_cache/alloc+append+free (1000 seqs)", 20, || {
+        let mut kv = KvCache::new(500_000, 1_000_000);
+        let mut n = 0;
+        for i in 0..1000u64 {
+            if kv.alloc_seq(i, 161).is_ok() {
+                for _ in 0..64 {
+                    let _ = kv.append_token(i);
+                }
+                n += 1;
+            }
+        }
+        for i in 0..1000u64 {
+            let _ = kv.free_seq(i);
+        }
+        n
+    });
+}
+
+fn bench_instance_step() {
+    bench("instance/step-loop (64 seqs × 200 iters)", 10, || {
+        let mut inst = Instance::new(
+            InstanceConfig::new(0, GpuKind::A100),
+            ModelCatalog::paper(),
+        );
+        inst.swap_model(ModelId(0), 0.0);
+        let t0 = inst.busy_until();
+        for i in 0..64u64 {
+            let _ = inst.try_admit(
+                RunningSeq {
+                    req_id: i,
+                    model: ModelId(0),
+                    prompt_tokens: 161,
+                    target_output: 500,
+                    generated: 0,
+                    first_token_at: None,
+                    arrival_s: 0.0,
+                },
+                t0,
+            );
+        }
+        let mut now = t0;
+        let mut steps = 0u64;
+        for _ in 0..200 {
+            let out = inst.step(now);
+            now += out.dt;
+            steps += 1;
+        }
+        steps * 64
+    });
+}
+
+fn bench_e2e_fig09() {
+    // Fig. 9 operating point at bench scale: W_A, 2×A100.
+    let trace = Trace::generate(&WorkloadSpec::w_a(ModelId(1), 20.0, 600), 21);
+    for policy in [Policy::qlm(), Policy::VllmFcfs] {
+        let name = format!("e2e/single-model W_A 600 reqs [{}]", policy.name());
+        let t = trace.clone();
+        bench(&name, 3, || {
+            let cfg = SimConfig::new(fleet_a100(2), ModelCatalog::paper(), policy);
+            let m = Simulation::new(cfg, &t).run(&t);
+            m.completed_count() as u64
+        });
+    }
+}
+
+fn bench_e2e_fig12() {
+    // Fig. 12 operating point: W_B multi-model, 2×A100.
+    let trace = Trace::generate(
+        &WorkloadSpec::w_b(
+            vec![ModelId(3), ModelId(4)],
+            vec![ModelId(5), ModelId(6)],
+            8.0,
+            600,
+        ),
+        24,
+    );
+    for policy in [Policy::qlm(), Policy::Shepherd] {
+        let name = format!("e2e/multi-model W_B 600 reqs [{}]", policy.name());
+        let t = trace.clone();
+        bench(&name, 3, || {
+            let cfg = SimConfig::new(
+                fleet_a100(2),
+                ModelCatalog::paper_multi_model(),
+                policy,
+            );
+            let m = Simulation::new(cfg, &t).run(&t);
+            m.completed_count() as u64
+        });
+    }
+}
+
+fn bench_runtime_decode() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.txt").exists() {
+        println!("runtime/decode-step: skipped (run `make artifacts`)");
+        return;
+    }
+    let model = qlm::runtime::TinyModel::load(dir).expect("artifacts");
+    let prompts: Vec<&[u8]> = vec![b"benchmark prompt for the tiny model"; 8];
+    let (logits, mut state) = model.prefill(&prompts).expect("prefill");
+    let tokens: Vec<i32> = logits
+        .iter()
+        .map(|l| qlm::runtime::TinyModel::argmax(l))
+        .collect();
+    bench("runtime/pjrt decode step (batch 8)", 20, || {
+        let out = model.decode_step(&mut state, &tokens).expect("step");
+        out.len() as u64 // 8 sequences → 8 tokens per step
+    });
+}
+
+fn main() {
+    println!("qlm benchmarks (mean ± stddev over timed iterations)\n");
+    bench_rwt();
+    bench_scheduler();
+    bench_kv();
+    bench_instance_step();
+    bench_e2e_fig09();
+    bench_e2e_fig12();
+    bench_runtime_decode();
+    println!("\nfigure regeneration: `qlm figures [--fig N] [--full]` (see DESIGN.md index)");
+}

@@ -1,0 +1,75 @@
+//! GPU device catalog. The paper's testbed: 30× NVIDIA A10 (24 GB) and
+//! 50× NVIDIA A100 (80 GB) (§8, Experiment Setup). Heterogeneity enters
+//! QLM only through the profiled constants the RWT estimator consumes, so
+//! a device is fully described by this spec.
+
+/// Device model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GpuKind {
+    A10,
+    A100,
+}
+
+/// Static hardware description used by the analytic timing model.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    pub kind: GpuKind,
+    /// HBM capacity in GiB.
+    pub mem_gib: f64,
+    /// HBM bandwidth, GiB/s — decode is weight-load bound (§2.1).
+    pub hbm_gibs: f64,
+    /// Host link bandwidth, GiB/s — governs KV eviction and CPU→GPU model
+    /// swaps ("GPU-to-CPU memory bandwidth is typically at least 10× less
+    /// than the GPU memory bandwidth", §5).
+    pub pcie_gibs: f64,
+    /// Dense bf16 throughput, TFLOP/s — prefill is compute bound.
+    pub bf16_tflops: f64,
+}
+
+impl GpuKind {
+    pub fn spec(&self) -> GpuSpec {
+        match self {
+            GpuKind::A10 => GpuSpec {
+                kind: *self,
+                mem_gib: 24.0,
+                hbm_gibs: 600.0,
+                pcie_gibs: 25.0,
+                bf16_tflops: 125.0,
+            },
+            GpuKind::A100 => GpuSpec {
+                kind: *self,
+                mem_gib: 80.0,
+                hbm_gibs: 1935.0,
+                pcie_gibs: 32.0,
+                bf16_tflops: 312.0,
+            },
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GpuKind::A10 => "A10",
+            GpuKind::A100 => "A100",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_roughly_3x_a10_memory() {
+        // §8.3: "The A10 ... ~3× lower GPU memory".
+        let r = GpuKind::A100.spec().mem_gib / GpuKind::A10.spec().mem_gib;
+        assert!((3.0..3.5).contains(&r));
+    }
+
+    #[test]
+    fn pcie_much_slower_than_hbm() {
+        for k in [GpuKind::A10, GpuKind::A100] {
+            let s = k.spec();
+            assert!(s.hbm_gibs / s.pcie_gibs >= 10.0, "{k:?}");
+        }
+    }
+}

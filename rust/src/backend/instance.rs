@@ -1,0 +1,669 @@
+//! A vLLM-like LLM serving instance: continuous batching with iteration-
+//! level scheduling (§2.1), a paged KV cache, internal preemption when the
+//! cache overflows, LSO-initiated request eviction (§5), and model
+//! swapping. Timing comes from [`PerfModel`] — the simulated analogue of a
+//! profiled real instance (DESIGN.md §Substitutions).
+//!
+//! All methods take `now` explicitly: the discrete-event simulator owns
+//! the clock, and the real PJRT-backed engine (`runtime::engine`) reuses
+//! the same batching logic with wall-clock timing.
+
+use std::collections::HashMap;
+
+use crate::backend::kv_cache::KvError;
+use crate::backend::{GpuKind, KvCache, ModelCatalog, ModelId, ModelRegistry, PerfModel};
+
+/// Identifier of a serving instance (one per virtual queue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InstanceId(pub u32);
+
+/// Static configuration of one instance.
+#[derive(Debug, Clone)]
+pub struct InstanceConfig {
+    pub id: InstanceId,
+    pub gpu: GpuKind,
+    /// CPU memory for warm models, GiB (§8.3 overhead discussion).
+    pub cpu_model_mem_gib: f64,
+    /// CPU swap space for evicted KV, in tokens.
+    pub cpu_kv_tokens: u64,
+    /// Mean prompt length used for profiling (workload profiling, §6).
+    pub mean_prompt_tokens: f64,
+}
+
+impl InstanceConfig {
+    pub fn new(id: u32, gpu: GpuKind) -> Self {
+        InstanceConfig {
+            id: InstanceId(id),
+            gpu,
+            cpu_model_mem_gib: 320.0,
+            cpu_kv_tokens: 2_000_000,
+            mean_prompt_tokens: 161.0,
+        }
+    }
+}
+
+/// A sequence admitted to the instance.
+#[derive(Debug, Clone)]
+pub struct RunningSeq {
+    pub req_id: u64,
+    pub model: ModelId,
+    pub prompt_tokens: u32,
+    /// Ground-truth output length (simulator-only knowledge).
+    pub target_output: u32,
+    pub generated: u32,
+    pub first_token_at: Option<f64>,
+    pub arrival_s: f64,
+}
+
+impl RunningSeq {
+    pub fn remaining(&self) -> u32 {
+        self.target_output.saturating_sub(self.generated)
+    }
+}
+
+/// Result of one continuous-batching iteration.
+#[derive(Debug, Default)]
+pub struct StepOutcome {
+    /// Simulated duration of this iteration.
+    pub dt: f64,
+    /// Sequences that emitted their final token this iteration.
+    pub completed: Vec<RunningSeq>,
+    /// (req_id, t) pairs whose first token was produced this iteration.
+    pub first_tokens: Vec<(u64, f64)>,
+    /// Sequences internally preempted to CPU swap this iteration.
+    pub preempted: u64,
+}
+
+/// Why an admission attempt was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// KV cache cannot hold the prompt right now (HOL blocking).
+    NoCapacity,
+    /// Instance serves a different model; a swap LSO is needed first.
+    WrongModel,
+    /// Running batch at max_num_seqs.
+    BatchFull,
+    /// Instance is mid-swap.
+    Busy,
+}
+
+/// Counters exported to the metrics layer.
+#[derive(Debug, Clone, Default)]
+pub struct InstanceStats {
+    pub tokens_generated: u64,
+    pub requests_completed: u64,
+    pub internal_preemptions: u64,
+    pub lso_evictions: u64,
+    pub kv_bytes_evicted: u64,
+    pub busy_s: f64,
+    pub idle_s: f64,
+    pub swap_s: f64,
+    /// Integral of batch size over busy time (for mean-batch metrics).
+    pub batch_time_integral: f64,
+}
+
+/// One LLM serving instance (Def. 2.3: serving system + loaded model).
+#[derive(Debug)]
+pub struct Instance {
+    pub config: InstanceConfig,
+    registry: ModelRegistry,
+    perf_cache: HashMap<ModelId, PerfModel>,
+    kv: KvCache,
+    running: Vec<RunningSeq>,
+    /// Internally preempted sequences (KV parked in CPU swap), resumed
+    /// LIFO when space frees — mirrors vLLM's recompute/swap policy.
+    swapped: Vec<RunningSeq>,
+    /// Time until which the instance is occupied by a model swap.
+    busy_until: f64,
+    pub stats: InstanceStats,
+    last_step_end: f64,
+}
+
+impl Instance {
+    pub fn new(config: InstanceConfig, catalog: ModelCatalog) -> Self {
+        let registry = ModelRegistry::new(catalog, config.cpu_model_mem_gib);
+        Instance {
+            kv: KvCache::new(0, config.cpu_kv_tokens),
+            config,
+            registry,
+            perf_cache: HashMap::new(),
+            running: Vec::new(),
+            swapped: Vec::new(),
+            busy_until: 0.0,
+            stats: InstanceStats::default(),
+            last_step_end: 0.0,
+        }
+    }
+
+    /// Profiled constants for `model` on this instance's GPU (cached —
+    /// profiling is a one-time cost per combination, §6).
+    pub fn perf(&mut self, model: ModelId) -> PerfModel {
+        let gpu = self.config.gpu;
+        let prompt = self.config.mean_prompt_tokens;
+        let catalog = self.registry.catalog();
+        *self
+            .perf_cache
+            .entry(model)
+            .or_insert_with(|| PerfModel::profile(catalog.get(model), gpu, prompt))
+    }
+
+    /// Read-only perf lookup (panics if not yet profiled).
+    pub fn perf_cached(&self, model: ModelId) -> &PerfModel {
+        &self.perf_cache[&model]
+    }
+
+    pub fn active_model(&self) -> Option<ModelId> {
+        self.registry.active()
+    }
+
+    pub fn registry_mut(&mut self) -> &mut ModelRegistry {
+        &mut self.registry
+    }
+
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.registry
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn swapped_len(&self) -> usize {
+        self.swapped.len()
+    }
+
+    pub fn kv_utilization(&self) -> f64 {
+        self.kv.utilization()
+    }
+
+    pub fn busy_until(&self) -> f64 {
+        self.busy_until
+    }
+
+    pub fn is_swapping(&self, now: f64) -> bool {
+        now < self.busy_until
+    }
+
+    /// True if the instance has no work at all.
+    pub fn is_idle(&self) -> bool {
+        self.running.is_empty() && self.swapped.is_empty()
+    }
+
+    /// Total tokens (prompt + generated so far) of the running batch.
+    pub fn resident_tokens(&self) -> u64 {
+        self.kv.gpu_tokens()
+    }
+
+    /// Spare KV capacity (tokens) available for admission, after holding
+    /// back a 5% watermark for decode growth of the running batch
+    /// (vLLM-style headroom to limit preemption thrash).
+    pub fn spare_tokens(&self) -> u64 {
+        let free = self.kv.free_blocks() as u64 * crate::backend::kv_cache::BLOCK_TOKENS as u64;
+        let reserve = (self.kv.total_blocks() as u64
+            * crate::backend::kv_cache::BLOCK_TOKENS as u64)
+            / 20;
+        free.saturating_sub(reserve)
+    }
+
+    /// Free running-batch slots under max_num_seqs.
+    pub fn batch_slots_free(&self) -> u32 {
+        match self.registry.active() {
+            Some(m) => {
+                let max = self.perf_cache.get(&m).map(|p| p.max_batch).unwrap_or(256);
+                max.saturating_sub(self.running.len() as u32)
+            }
+            None => 0,
+        }
+    }
+
+    /// Swap the active model (Model Swapping LSO, §5). Flushes the KV
+    /// cache; all running/preempted sequences are returned so the caller
+    /// (QLM agent) re-enqueues them in the global queue. Returns
+    /// (ready_at, displaced sequences).
+    pub fn swap_model(&mut self, model: ModelId, now: f64) -> (f64, Vec<RunningSeq>) {
+        if self.registry.active() == Some(model) {
+            return (now, Vec::new());
+        }
+        let perf = self.perf(model);
+        let swap_s = self.registry.swap_in_time_s(model, &perf);
+        self.registry.swap_to_gpu(model, &perf);
+        let mut displaced: Vec<RunningSeq> = self.running.drain(..).collect();
+        displaced.extend(self.swapped.drain(..));
+        // New KV geometry for the new model.
+        self.kv = KvCache::new(perf.token_capacity, self.config.cpu_kv_tokens);
+        self.busy_until = now + swap_s;
+        self.stats.swap_s += swap_s;
+        (self.busy_until, displaced)
+    }
+
+    /// Pull one request into the running batch (Request Pulling LSO, §5).
+    /// KV for the prompt is allocated; prefill is charged in the next
+    /// `step`. `kv_restore_tokens` > 0 marks a previously evicted request
+    /// whose KV is being restored instead of recomputed.
+    pub fn try_admit(&mut self, seq: RunningSeq, now: f64) -> Result<(), (RunningSeq, AdmitError)> {
+        if self.is_swapping(now) {
+            return Err((seq, AdmitError::Busy));
+        }
+        let Some(active) = self.registry.active() else {
+            return Err((seq, AdmitError::WrongModel));
+        };
+        if active != seq.model {
+            return Err((seq, AdmitError::WrongModel));
+        }
+        let perf = self.perf(active);
+        if self.running.len() as u32 >= perf.max_batch {
+            return Err((seq, AdmitError::BatchFull));
+        }
+        let tokens = seq.prompt_tokens as u64 + seq.generated as u64;
+        match self.kv.alloc_seq(seq.req_id, tokens) {
+            Ok(()) => {
+                self.running.push(seq);
+                Ok(())
+            }
+            Err(_) => Err((seq, AdmitError::NoCapacity)),
+        }
+    }
+
+    /// Evict specific requests back to the global queue (Request Eviction
+    /// LSO, §5). KV is migrated to CPU asynchronously (the paper hides the
+    /// copy with async transfers, so no time is charged on the inference
+    /// path); the evicted sequences are returned for re-queueing.
+    pub fn evict(&mut self, req_ids: &[u64], _now: f64) -> Vec<RunningSeq> {
+        let mut out = Vec::new();
+        let kv_bytes = self
+            .registry
+            .active()
+            .map(|m| self.registry.catalog().get(m).kv_bytes_per_token)
+            .unwrap_or(0);
+        let mut i = 0;
+        while i < self.running.len() {
+            if req_ids.contains(&self.running[i].req_id) {
+                let seq = self.running.swap_remove(i);
+                let moved = self
+                    .kv
+                    .evict_to_cpu(seq.req_id)
+                    .unwrap_or_else(|_| self.kv.free_seq(seq.req_id).unwrap_or(0));
+                self.stats.lso_evictions += 1;
+                self.stats.kv_bytes_evicted += moved * kv_bytes;
+                out.push(seq);
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Evict everything (used when the global scheduler replaces the head
+    /// request group wholesale).
+    pub fn evict_all(&mut self, now: f64) -> Vec<RunningSeq> {
+        let ids: Vec<u64> = self.running.iter().map(|s| s.req_id).collect();
+        self.evict(&ids, now)
+    }
+
+    /// Restore an evicted sequence whose KV is still in this instance's
+    /// CPU swap (cheap re-admission after eviction).
+    pub fn try_restore(&mut self, seq: RunningSeq, now: f64) -> Result<(), (RunningSeq, AdmitError)> {
+        if self.kv.cpu_resident(seq.req_id).is_some() {
+            if self.is_swapping(now) {
+                return Err((seq, AdmitError::Busy));
+            }
+            match self.kv.restore_from_cpu(seq.req_id) {
+                Ok(_) => {
+                    self.running.push(seq);
+                    Ok(())
+                }
+                Err(_) => Err((seq, AdmitError::NoCapacity)),
+            }
+        } else {
+            self.try_admit(seq, now)
+        }
+    }
+
+    /// One continuous-batching iteration: resume preempted sequences if
+    /// space allows, prefill newly admitted sequences, generate one token
+    /// for every running sequence, preempt on KV overflow, and retire
+    /// finished sequences.
+    pub fn step(&mut self, now: f64) -> StepOutcome {
+        let mut out = StepOutcome::default();
+        if self.is_swapping(now) {
+            // Swap in flight: the instance is blocked until busy_until.
+            out.dt = self.busy_until - now;
+            return out;
+        }
+        let Some(active) = self.registry.active() else {
+            return out;
+        };
+        let perf = self.perf(active);
+
+        // 1. Resume internally preempted sequences (LIFO) while space allows.
+        while let Some(seq) = self.swapped.pop() {
+            if (self.running.len() as u32) < perf.max_batch
+                && self.kv.restore_from_cpu(seq.req_id).is_ok()
+            {
+                self.running.push(seq);
+            } else {
+                self.swapped.push(seq);
+                break;
+            }
+        }
+
+        if self.running.is_empty() {
+            return out;
+        }
+
+        // 2. Prefill any sequence that hasn't produced its first token.
+        //    Prefills batch together in one iteration; compute-bound, so
+        //    cost is additive per prompt.
+        let mut prefill_s = 0.0;
+        for seq in self.running.iter_mut() {
+            if seq.first_token_at.is_none() && seq.generated == 0 {
+                prefill_s += perf.prefill_s;
+            }
+        }
+        let decode_s = perf.step_time(self.kv.gpu_tokens());
+        let dt = prefill_s + decode_s;
+        let t_end = now + dt;
+
+        // 3. Decode one token per running sequence; allocate KV growth,
+        //    preempting the most recently admitted sequences on overflow
+        //    (vLLM preempts the newest to guarantee progress of the oldest).
+        let mut idx = 0;
+        while idx < self.running.len() {
+            let req_id = self.running[idx].req_id;
+            match self.kv.append_token(req_id) {
+                Ok(()) => idx += 1,
+                Err(KvError::OutOfBlocks) => {
+                    // Preempt the last sequence (not the one making progress
+                    // unless it is the only one).
+                    let victim_idx = if self.running.len() > 1 && idx < self.running.len() - 1 {
+                        self.running.len() - 1
+                    } else {
+                        idx
+                    };
+                    let victim = self.running.swap_remove(victim_idx);
+                    match self.kv.evict_to_cpu(victim.req_id) {
+                        Ok(_) => {
+                            self.swapped.push(victim);
+                            out.preempted += 1;
+                            self.stats.internal_preemptions += 1;
+                        }
+                        Err(_) => {
+                            // CPU swap full: drop KV; the sequence will
+                            // recompute its prefix when resumed.
+                            let _ = self.kv.free_seq(victim.req_id);
+                            self.swapped.push(victim);
+                            out.preempted += 1;
+                            self.stats.internal_preemptions += 1;
+                        }
+                    }
+                    if victim_idx == idx {
+                        // The current sequence was the victim; don't advance.
+                        continue;
+                    }
+                }
+                Err(_) => unreachable!("running seq must be allocated"),
+            }
+        }
+
+        // 4. Account generation and completions. Prefills within one
+        // iteration are staggered: the i-th new prompt's first token lands
+        // after the cumulative prefill time of the prompts before it.
+        let mut i = 0;
+        let mut cum_prefill = 0.0;
+        while i < self.running.len() {
+            let seq = &mut self.running[i];
+            seq.generated += 1;
+            self.stats.tokens_generated += 1;
+            if seq.first_token_at.is_none() {
+                cum_prefill += perf.prefill_s;
+                let t = now + cum_prefill;
+                seq.first_token_at = Some(t);
+                out.first_tokens.push((seq.req_id, t));
+            }
+            if seq.generated >= seq.target_output {
+                let done = self.running.swap_remove(i);
+                let _ = self.kv.free_seq(done.req_id);
+                self.stats.requests_completed += 1;
+                out.completed.push(done);
+            } else {
+                i += 1;
+            }
+        }
+
+        self.stats.busy_s += dt;
+        self.stats.batch_time_integral += dt * (self.running.len() + out.completed.len()) as f64;
+        if now > self.last_step_end {
+            self.stats.idle_s += now - self.last_step_end;
+        }
+        self.last_step_end = t_end;
+        out.dt = dt;
+        out
+    }
+
+    /// Observed token throughput Θ over the instance lifetime.
+    pub fn observed_throughput(&self) -> f64 {
+        if self.stats.busy_s == 0.0 {
+            0.0
+        } else {
+            self.stats.tokens_generated as f64 / self.stats.busy_s
+        }
+    }
+
+    /// Mean running batch size over busy time.
+    pub fn mean_batch(&self) -> f64 {
+        if self.stats.busy_s == 0.0 {
+            0.0
+        } else {
+            self.stats.batch_time_integral / self.stats.busy_s
+        }
+    }
+
+    /// Device utilization = busy / (busy + idle).
+    pub fn utilization(&self) -> f64 {
+        let t = self.stats.busy_s + self.stats.idle_s + self.stats.swap_s;
+        if t == 0.0 {
+            0.0
+        } else {
+            self.stats.busy_s / t
+        }
+    }
+
+    /// Ids of currently running requests (for LSO decisions).
+    pub fn running_req_ids(&self) -> Vec<u64> {
+        self.running.iter().map(|s| s.req_id).collect()
+    }
+
+    /// Running sequences view.
+    pub fn running(&self) -> &[RunningSeq] {
+        &self.running
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_seq(id: u64, prompt: u32, output: u32) -> RunningSeq {
+        RunningSeq {
+            req_id: id,
+            model: ModelId(0),
+            prompt_tokens: prompt,
+            target_output: output,
+            generated: 0,
+            first_token_at: None,
+            arrival_s: 0.0,
+        }
+    }
+
+    fn mk_instance() -> Instance {
+        let mut inst = Instance::new(
+            InstanceConfig::new(0, GpuKind::A100),
+            ModelCatalog::paper(),
+        );
+        inst.swap_model(ModelId(0), 0.0);
+        inst
+    }
+
+    #[test]
+    fn admit_requires_matching_model() {
+        let mut inst = mk_instance();
+        let mut seq = mk_seq(1, 100, 10);
+        seq.model = ModelId(1);
+        let err = inst.try_admit(seq, 100.0).unwrap_err().1;
+        assert_eq!(err, AdmitError::WrongModel);
+    }
+
+    #[test]
+    fn admit_during_swap_refused() {
+        let mut inst = mk_instance();
+        // swap_model(…, 0.0) leaves busy_until > 0 (storage→gpu cost).
+        assert!(inst.is_swapping(0.0));
+        let err = inst.try_admit(mk_seq(1, 100, 10), 0.0).unwrap_err().1;
+        assert_eq!(err, AdmitError::Busy);
+    }
+
+    #[test]
+    fn request_runs_to_completion_with_ttft() {
+        let mut inst = mk_instance();
+        let t0 = inst.busy_until();
+        inst.try_admit(mk_seq(1, 100, 5), t0).unwrap();
+        let mut now = t0;
+        let mut completed = Vec::new();
+        let mut first = None;
+        for _ in 0..10 {
+            let out = inst.step(now);
+            now += out.dt;
+            if let Some(&(_, t)) = out.first_tokens.first() {
+                first = Some(t);
+            }
+            completed.extend(out.completed);
+            if !completed.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(completed.len(), 1);
+        assert_eq!(completed[0].generated, 5);
+        let perf = *inst.perf_cached(ModelId(0));
+        // First token lands after one prefill.
+        assert!((first.unwrap() - (t0 + perf.prefill_s)).abs() < 1e-9);
+        assert_eq!(inst.stats.requests_completed, 1);
+        assert_eq!(inst.resident_tokens(), 0, "KV freed at completion");
+    }
+
+    #[test]
+    fn continuous_batching_joins_mid_flight() {
+        let mut inst = mk_instance();
+        let t0 = inst.busy_until();
+        inst.try_admit(mk_seq(1, 50, 100), t0).unwrap();
+        let out = inst.step(t0);
+        let now = t0 + out.dt;
+        // Second request joins while the first is decoding.
+        inst.try_admit(mk_seq(2, 50, 3), now).unwrap();
+        assert_eq!(inst.running_len(), 2);
+        let resident = inst.resident_tokens();
+        let out2 = inst.step(now);
+        // Step with one new prefill costs prefill + decode (incl. KV read).
+        let perf = *inst.perf_cached(ModelId(0));
+        assert!((out2.dt - (perf.prefill_s + perf.step_time(resident))).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eviction_returns_seqs_and_frees_kv() {
+        let mut inst = mk_instance();
+        let t0 = inst.busy_until();
+        inst.try_admit(mk_seq(1, 100, 50), t0).unwrap();
+        inst.try_admit(mk_seq(2, 100, 50), t0).unwrap();
+        let before = inst.resident_tokens();
+        assert!(before > 0);
+        let evicted = inst.evict(&[1], t0);
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].req_id, 1);
+        assert_eq!(inst.running_len(), 1);
+        assert!(inst.resident_tokens() < before);
+        assert_eq!(inst.stats.lso_evictions, 1);
+    }
+
+    #[test]
+    fn evicted_seq_restores_without_reprefill() {
+        let mut inst = mk_instance();
+        let t0 = inst.busy_until();
+        inst.try_admit(mk_seq(1, 100, 50), t0).unwrap();
+        // Generate a few tokens first.
+        let mut now = t0;
+        for _ in 0..3 {
+            now += inst.step(now).dt;
+        }
+        let mut evicted = inst.evict(&[1], now);
+        let seq = evicted.pop().unwrap();
+        assert_eq!(seq.generated, 3);
+        inst.try_restore(seq, now).unwrap();
+        assert_eq!(inst.running_len(), 1);
+        // KV restored including generated tokens: 100 + 3.
+        assert_eq!(inst.resident_tokens(), 103);
+    }
+
+    #[test]
+    fn swap_model_displaces_running() {
+        let mut inst = mk_instance();
+        let t0 = inst.busy_until();
+        inst.try_admit(mk_seq(1, 100, 50), t0).unwrap();
+        let (ready_at, displaced) = inst.swap_model(ModelId(1), t0);
+        assert_eq!(displaced.len(), 1);
+        assert!(ready_at > t0);
+        assert_eq!(inst.active_model(), Some(ModelId(1)));
+        assert_eq!(inst.running_len(), 0);
+    }
+
+    #[test]
+    fn preemption_on_kv_overflow() {
+        // Tiny KV: force overflow during decode.
+        let mut inst = Instance::new(
+            InstanceConfig::new(0, GpuKind::A100),
+            ModelCatalog::paper(),
+        );
+        inst.swap_model(ModelId(0), 0.0);
+        let t0 = inst.busy_until();
+        // Shrink the cache artificially by filling with big prompts near
+        // capacity: compute capacity and admit prompts to fill ~100%.
+        let perf = inst.perf(ModelId(0));
+        let cap = perf.token_capacity;
+        let n = 4u64;
+        // Leave a small margin so all prompts admit (block rounding), but
+        // little enough that decode growth overflows within a few steps.
+        let per = cap / n - 64;
+        for id in 0..n {
+            inst.try_admit(mk_seq(id, per as u32, 1000), t0).unwrap();
+        }
+        let mut now = t0;
+        let mut preempted = 0;
+        for _ in 0..200 {
+            let out = inst.step(now);
+            now += out.dt;
+            preempted += out.preempted;
+        }
+        assert!(preempted > 0, "expected KV-overflow preemption");
+        // Everyone still alive somewhere (running or swapped).
+        assert_eq!(inst.running_len() + inst.swapped_len(), n as usize);
+    }
+
+    #[test]
+    fn throughput_and_batch_accounting() {
+        let mut inst = mk_instance();
+        let t0 = inst.busy_until();
+        for id in 0..8 {
+            inst.try_admit(mk_seq(id, 50, 20), t0).unwrap();
+        }
+        let mut now = t0;
+        while !inst.is_idle() {
+            let out = inst.step(now);
+            now += out.dt;
+            if out.dt == 0.0 {
+                break;
+            }
+        }
+        assert_eq!(inst.stats.requests_completed, 8);
+        assert_eq!(inst.stats.tokens_generated, 8 * 20);
+        assert!(inst.observed_throughput() > 0.0);
+        assert!(inst.mean_batch() > 1.0);
+    }
+}

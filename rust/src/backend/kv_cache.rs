@@ -1,0 +1,323 @@
+//! Paged KV-cache block allocator — the PagedAttention memory manager
+//! (§2.1). KV memory is carved into fixed-size blocks (16 tokens each, as
+//! in vLLM); a sequence holds an ordered list of blocks; allocation is
+//! O(1) via a free list; eviction moves a sequence's blocks to a CPU-side
+//! table so decoding can resume without prompt recompute (§5, Request
+//! Eviction).
+
+use std::collections::HashMap;
+
+/// Tokens per KV block (vLLM default).
+pub const BLOCK_TOKENS: u32 = 16;
+
+/// Identifier of a physical KV block on the device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BlockId(pub u32);
+
+/// A sequence's KV footprint.
+#[derive(Debug, Clone, Default)]
+struct SeqAlloc {
+    blocks: Vec<BlockId>,
+    tokens: u64,
+}
+
+/// Paged allocator over a fixed device token budget, plus a CPU-side
+/// swap space for evicted sequences.
+#[derive(Debug)]
+pub struct KvCache {
+    free: Vec<BlockId>,
+    total_blocks: u32,
+    gpu: HashMap<u64, SeqAlloc>,
+    /// seq id → token count parked in CPU memory (blocks are freed on
+    /// device; token count suffices to re-admit).
+    cpu: HashMap<u64, u64>,
+    cpu_tokens: u64,
+    cpu_token_capacity: u64,
+}
+
+/// Errors from allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvError {
+    OutOfBlocks,
+    UnknownSeq,
+    CpuFull,
+}
+
+impl KvCache {
+    /// `token_capacity` device tokens, `cpu_token_capacity` swap tokens.
+    pub fn new(token_capacity: u64, cpu_token_capacity: u64) -> Self {
+        let total_blocks = (token_capacity / BLOCK_TOKENS as u64) as u32;
+        KvCache {
+            free: (0..total_blocks).rev().map(BlockId).collect(),
+            total_blocks,
+            gpu: HashMap::new(),
+            cpu: HashMap::new(),
+            cpu_tokens: 0,
+            cpu_token_capacity,
+        }
+    }
+
+    pub fn total_blocks(&self) -> u32 {
+        self.total_blocks
+    }
+
+    pub fn free_blocks(&self) -> u32 {
+        self.free.len() as u32
+    }
+
+    pub fn used_blocks(&self) -> u32 {
+        self.total_blocks - self.free_blocks()
+    }
+
+    /// Device tokens currently allocated.
+    pub fn gpu_tokens(&self) -> u64 {
+        self.gpu.values().map(|s| s.tokens).sum()
+    }
+
+    /// Tokens parked in CPU swap space.
+    pub fn cpu_tokens(&self) -> u64 {
+        self.cpu_tokens
+    }
+
+    /// Device utilization in [0,1].
+    pub fn utilization(&self) -> f64 {
+        if self.total_blocks == 0 {
+            return 0.0;
+        }
+        self.used_blocks() as f64 / self.total_blocks as f64
+    }
+
+    fn blocks_for(tokens: u64) -> u32 {
+        tokens.div_ceil(BLOCK_TOKENS as u64) as u32
+    }
+
+    /// Can `tokens` more tokens be appended for `seq` (or a new seq)?
+    pub fn can_grow(&self, seq: u64, tokens: u64) -> bool {
+        let cur = self.gpu.get(&seq).map(|s| s.tokens).unwrap_or(0);
+        let need = Self::blocks_for(cur + tokens)
+            .saturating_sub(Self::blocks_for(cur).min(Self::blocks_for(cur + tokens)));
+        need <= self.free_blocks()
+    }
+
+    /// Allocate KV for a new sequence's prompt (prefill).
+    pub fn alloc_seq(&mut self, seq: u64, prompt_tokens: u64) -> Result<(), KvError> {
+        debug_assert!(!self.gpu.contains_key(&seq), "seq {seq} already allocated");
+        let need = Self::blocks_for(prompt_tokens);
+        if need > self.free_blocks() {
+            return Err(KvError::OutOfBlocks);
+        }
+        let blocks = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.gpu.insert(
+            seq,
+            SeqAlloc {
+                blocks,
+                tokens: prompt_tokens,
+            },
+        );
+        Ok(())
+    }
+
+    /// Append one generated token (decode iteration); may need a new block.
+    pub fn append_token(&mut self, seq: u64) -> Result<(), KvError> {
+        let alloc = self.gpu.get_mut(&seq).ok_or(KvError::UnknownSeq)?;
+        let before = Self::blocks_for(alloc.tokens);
+        let after = Self::blocks_for(alloc.tokens + 1);
+        if after > before {
+            match self.free.pop() {
+                Some(b) => alloc.blocks.push(b),
+                None => return Err(KvError::OutOfBlocks),
+            }
+        }
+        alloc.tokens += 1;
+        Ok(())
+    }
+
+    /// Free a finished sequence's device blocks.
+    pub fn free_seq(&mut self, seq: u64) -> Result<u64, KvError> {
+        let alloc = self.gpu.remove(&seq).ok_or(KvError::UnknownSeq)?;
+        self.free.extend(alloc.blocks);
+        Ok(alloc.tokens)
+    }
+
+    /// Evict a running sequence's KV to CPU memory (§5, Request Eviction:
+    /// "we migrate it to CPU memory instead"). Returns tokens moved.
+    pub fn evict_to_cpu(&mut self, seq: u64) -> Result<u64, KvError> {
+        let tokens = self.gpu.get(&seq).ok_or(KvError::UnknownSeq)?.tokens;
+        if self.cpu_tokens + tokens > self.cpu_token_capacity {
+            return Err(KvError::CpuFull);
+        }
+        let alloc = self.gpu.remove(&seq).unwrap();
+        self.free.extend(alloc.blocks);
+        self.cpu.insert(seq, tokens);
+        self.cpu_tokens += tokens;
+        Ok(tokens)
+    }
+
+    /// Restore an evicted sequence's KV from CPU to the device.
+    pub fn restore_from_cpu(&mut self, seq: u64) -> Result<u64, KvError> {
+        let &tokens = self.cpu.get(&seq).ok_or(KvError::UnknownSeq)?;
+        let need = Self::blocks_for(tokens);
+        if need > self.free_blocks() {
+            return Err(KvError::OutOfBlocks);
+        }
+        self.cpu.remove(&seq);
+        self.cpu_tokens -= tokens;
+        let blocks = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.gpu.insert(seq, SeqAlloc { blocks, tokens });
+        Ok(tokens)
+    }
+
+    /// Tokens held in CPU swap for `seq`, if evicted.
+    pub fn cpu_resident(&self, seq: u64) -> Option<u64> {
+        self.cpu.get(&seq).copied()
+    }
+
+    /// Drop an evicted sequence entirely (e.g. it finished elsewhere).
+    pub fn drop_cpu(&mut self, seq: u64) {
+        if let Some(t) = self.cpu.remove(&seq) {
+            self.cpu_tokens -= t;
+        }
+    }
+
+    /// Flush everything (model swap flushes the KV cache, §5).
+    pub fn flush(&mut self) {
+        self.gpu.clear();
+        self.cpu.clear();
+        self.cpu_tokens = 0;
+        self.free = (0..self.total_blocks).rev().map(BlockId).collect();
+    }
+
+    /// Tokens on device for `seq`.
+    pub fn seq_tokens(&self, seq: u64) -> Option<u64> {
+        self.gpu.get(&seq).map(|s| s.tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_and_free_round_trip() {
+        let mut kv = KvCache::new(1024, 10_000);
+        assert_eq!(kv.total_blocks(), 64);
+        kv.alloc_seq(1, 100).unwrap();
+        assert_eq!(kv.used_blocks(), 7); // ceil(100/16)
+        assert_eq!(kv.free_seq(1).unwrap(), 100);
+        assert_eq!(kv.used_blocks(), 0);
+    }
+
+    #[test]
+    fn append_grows_blocks_lazily() {
+        let mut kv = KvCache::new(1024, 0);
+        kv.alloc_seq(1, 16).unwrap();
+        assert_eq!(kv.used_blocks(), 1);
+        kv.append_token(1).unwrap(); // 17 tokens → 2 blocks
+        assert_eq!(kv.used_blocks(), 2);
+        for _ in 0..15 {
+            kv.append_token(1).unwrap();
+        }
+        assert_eq!(kv.used_blocks(), 2); // 32 tokens still 2 blocks
+    }
+
+    #[test]
+    fn out_of_blocks_reported() {
+        let mut kv = KvCache::new(32, 0);
+        kv.alloc_seq(1, 32).unwrap();
+        assert_eq!(kv.alloc_seq(2, 1), Err(KvError::OutOfBlocks));
+        assert_eq!(kv.append_token(1), Err(KvError::OutOfBlocks));
+    }
+
+    #[test]
+    fn evict_restore_preserves_tokens() {
+        let mut kv = KvCache::new(1024, 10_000);
+        kv.alloc_seq(7, 200).unwrap();
+        let moved = kv.evict_to_cpu(7).unwrap();
+        assert_eq!(moved, 200);
+        assert_eq!(kv.used_blocks(), 0);
+        assert_eq!(kv.cpu_tokens(), 200);
+        assert_eq!(kv.cpu_resident(7), Some(200));
+        let back = kv.restore_from_cpu(7).unwrap();
+        assert_eq!(back, 200);
+        assert_eq!(kv.seq_tokens(7), Some(200));
+        assert_eq!(kv.cpu_tokens(), 0);
+    }
+
+    #[test]
+    fn cpu_capacity_enforced() {
+        let mut kv = KvCache::new(1024, 100);
+        kv.alloc_seq(1, 80).unwrap();
+        kv.alloc_seq(2, 80).unwrap();
+        kv.evict_to_cpu(1).unwrap();
+        assert_eq!(kv.evict_to_cpu(2), Err(KvError::CpuFull));
+    }
+
+    #[test]
+    fn eviction_frees_device_space_for_new_seq() {
+        // The §2.4 Insight-2 scenario: device full of batch requests, an
+        // interactive request needs room now.
+        let mut kv = KvCache::new(160, 10_000);
+        kv.alloc_seq(1, 160).unwrap();
+        assert!(kv.alloc_seq(2, 64).is_err());
+        kv.evict_to_cpu(1).unwrap();
+        kv.alloc_seq(2, 64).unwrap();
+        assert_eq!(kv.seq_tokens(2), Some(64));
+    }
+
+    #[test]
+    fn flush_resets_everything() {
+        let mut kv = KvCache::new(1024, 1000);
+        kv.alloc_seq(1, 100).unwrap();
+        kv.alloc_seq(2, 50).unwrap();
+        kv.evict_to_cpu(2).unwrap();
+        kv.flush();
+        assert_eq!(kv.used_blocks(), 0);
+        assert_eq!(kv.cpu_tokens(), 0);
+        assert_eq!(kv.free_blocks(), kv.total_blocks());
+    }
+
+    #[test]
+    fn no_block_leak_under_churn() {
+        let mut kv = KvCache::new(10_000, 100_000);
+        let mut rng = crate::util::Rng::new(42);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..2_000 {
+            match rng.usize(4) {
+                0 => {
+                    let t = 1 + rng.usize(300) as u64;
+                    if kv.alloc_seq(next_id, t).is_ok() {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                1 if !live.is_empty() => {
+                    let i = rng.usize(live.len());
+                    let s = live.swap_remove(i);
+                    kv.free_seq(s).unwrap();
+                }
+                2 if !live.is_empty() => {
+                    let s = live[rng.usize(live.len())];
+                    let _ = kv.append_token(s);
+                }
+                3 if !live.is_empty() => {
+                    let i = rng.usize(live.len());
+                    let s = live[i];
+                    if kv.evict_to_cpu(s).is_ok() {
+                        live.swap_remove(i);
+                        if kv.restore_from_cpu(s).is_ok() {
+                            live.push(s);
+                        } else {
+                            kv.drop_cpu(s);
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        for s in live.drain(..) {
+            kv.free_seq(s).unwrap();
+        }
+        assert_eq!(kv.free_blocks(), kv.total_blocks(), "leaked blocks");
+    }
+}

@@ -1,0 +1,21 @@
+//! The serving-instance substrate: everything below QLM's coordinator.
+//!
+//! The paper runs vLLM on NVIDIA A10/A100 GPUs; we rebuild the pieces QLM
+//! interacts with — a continuous-batching engine with a paged KV cache,
+//! request preemption/eviction, and two-tier model swapping — with an
+//! analytic timing model calibrated per (model, GPU) exactly the way QLM's
+//! offline profiling step (§6) characterizes real instances.
+
+pub mod gpu;
+pub mod model;
+pub mod perf;
+pub mod kv_cache;
+pub mod instance;
+pub mod model_registry;
+
+pub use gpu::{GpuKind, GpuSpec};
+pub use instance::{Instance, InstanceConfig, InstanceId, RunningSeq, StepOutcome};
+pub use kv_cache::{BlockId, KvCache};
+pub use model::{ModelCatalog, ModelId, ModelSpec};
+pub use model_registry::{ModelRegistry, ModelTier};
+pub use perf::PerfModel;

@@ -1,0 +1,149 @@
+//! LLM model catalog. The paper serves Mistral-7B, Vicuna-13B, and
+//! Llama-70B (plus fine-tuned variants for the multi-model workloads).
+//! A model is characterized by the constants that drive the timing model
+//! and memory accounting: weight bytes, KV bytes/token, parameter count.
+
+/// Opaque model identifier (index into a [`ModelCatalog`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelId(pub u32);
+
+/// Static description of an LLM.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub id: ModelId,
+    pub name: String,
+    /// Parameter count (drives prefill FLOPs).
+    pub params_b: f64,
+    /// Weight footprint in GiB (bf16 unless noted).
+    pub weight_gib: f64,
+    /// KV cache bytes per token = 2 (K,V) · layers · kv_heads · head_dim · 2 B.
+    pub kv_bytes_per_token: u64,
+    /// Tensor-parallel degree the instance uses (Llama-70B spans GPUs).
+    pub tp_degree: u32,
+}
+
+impl ModelSpec {
+    fn new(
+        id: u32,
+        name: &str,
+        params_b: f64,
+        layers: u64,
+        kv_heads: u64,
+        head_dim: u64,
+        tp_degree: u32,
+    ) -> Self {
+        ModelSpec {
+            id: ModelId(id),
+            name: name.to_string(),
+            params_b,
+            weight_gib: params_b * 2.0 / 1.073741824, // bf16, GiB
+            kv_bytes_per_token: 2 * layers * kv_heads * head_dim * 2,
+            tp_degree,
+        }
+    }
+}
+
+/// The set of models available to a cluster.
+#[derive(Debug, Clone)]
+pub struct ModelCatalog {
+    pub models: Vec<ModelSpec>,
+}
+
+impl ModelCatalog {
+    /// The paper's three base models.
+    pub fn paper() -> Self {
+        ModelCatalog {
+            models: vec![
+                // Mistral-7B: 32 layers, GQA 8 kv-heads × 128.
+                ModelSpec::new(0, "mistral-7b", 7.3, 32, 8, 128, 1),
+                // Vicuna-13B: 40 layers, MHA 40 kv-heads × 128.
+                ModelSpec::new(1, "vicuna-13b", 13.0, 40, 40, 128, 1),
+                // Llama-70B: 80 layers, GQA 8 kv-heads × 128, TP-4.
+                ModelSpec::new(2, "llama-70b", 70.0, 80, 8, 128, 4),
+            ],
+        }
+    }
+
+    /// Paper catalog plus fine-tuned variants (same architecture, distinct
+    /// weights ⇒ distinct swaps), as used by W_B: Batch-1 on fine-tuned
+    /// Mistral-7B + Llama-70B, Batch-2 on fine-tuned Vicuna-13B + Llama-70B.
+    pub fn paper_multi_model() -> Self {
+        let mut c = Self::paper();
+        let mk = |id: u32, base: &ModelSpec, suffix: &str| {
+            let mut m = base.clone();
+            m.id = ModelId(id);
+            m.name = format!("{}-{}", m.name, suffix);
+            m
+        };
+        let mistral = c.models[0].clone();
+        let vicuna = c.models[1].clone();
+        let llama = c.models[2].clone();
+        c.models.push(mk(3, &mistral, "ft-b1"));
+        c.models.push(mk(4, &llama, "ft-b1"));
+        c.models.push(mk(5, &vicuna, "ft-b2"));
+        c.models.push(mk(6, &llama, "ft-b2"));
+        c
+    }
+
+    /// The tiny real model served end-to-end through the PJRT runtime
+    /// (examples/e2e_serve.rs). Must match python/compile/model.py.
+    pub fn tiny() -> Self {
+        ModelCatalog {
+            models: vec![ModelSpec::new(0, "tiny-qlm-2m", 0.002, 4, 4, 16, 1)],
+        }
+    }
+
+    pub fn get(&self, id: ModelId) -> &ModelSpec {
+        &self.models[id.0 as usize]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ModelSpec> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    pub fn ids(&self) -> Vec<ModelId> {
+        self.models.iter().map(|m| m.id).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_bytes_match_architecture() {
+        let c = ModelCatalog::paper();
+        // Mistral-7B GQA: 2·32·8·128·2 = 131072 B/token.
+        assert_eq!(c.by_name("mistral-7b").unwrap().kv_bytes_per_token, 131_072);
+        // Vicuna-13B MHA: 2·40·40·128·2 = 819200 B/token.
+        assert_eq!(c.by_name("vicuna-13b").unwrap().kv_bytes_per_token, 819_200);
+        // Llama-70B GQA: 2·80·8·128·2 = 327680 B/token.
+        assert_eq!(c.by_name("llama-70b").unwrap().kv_bytes_per_token, 327_680);
+    }
+
+    #[test]
+    fn weights_are_bf16_sized() {
+        let c = ModelCatalog::paper();
+        let m = c.by_name("llama-70b").unwrap();
+        assert!((m.weight_gib - 130.4).abs() < 1.0, "{}", m.weight_gib);
+    }
+
+    #[test]
+    fn multi_model_variants_share_architecture() {
+        let c = ModelCatalog::paper_multi_model();
+        assert_eq!(c.models.len(), 7);
+        let base = c.by_name("mistral-7b").unwrap();
+        let ft = c.by_name("mistral-7b-ft-b1").unwrap();
+        assert_eq!(base.kv_bytes_per_token, ft.kv_bytes_per_token);
+        assert_ne!(base.id, ft.id);
+    }
+
+    #[test]
+    fn lookup_by_id_and_name_agree() {
+        let c = ModelCatalog::paper();
+        for m in &c.models {
+            assert_eq!(c.get(m.id).name, m.name);
+            assert_eq!(c.by_name(&m.name).unwrap().id, m.id);
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Two-tier model placement (§5, Model Swapping): models live in storage,
+//! are staged into CPU memory ("warm"), and swapped into GPU memory
+//! ("active"). The registry tracks the tier of each model for one serving
+//! instance and prices each transition.
+
+use crate::backend::{ModelCatalog, ModelId, PerfModel};
+
+/// Where a model's weights currently are, per instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelTier {
+    /// Active in GPU memory.
+    Gpu,
+    /// Warm in host CPU memory.
+    Cpu,
+    /// Cold in the model registry (storage).
+    Storage,
+}
+
+/// Per-instance model placement state.
+#[derive(Debug, Clone)]
+pub struct ModelRegistry {
+    catalog: ModelCatalog,
+    /// CPU memory budget for warm models (GiB). The paper provisions
+    /// 80 GB for 7B/13B models and 320 GB for Llama-70B (§8.3).
+    cpu_capacity_gib: f64,
+    cpu_resident: Vec<ModelId>,
+    gpu_model: Option<ModelId>,
+    /// Cumulative swap counts for metrics / Fig. 5-style analyses.
+    pub swaps_to_gpu: u64,
+    pub stages_to_cpu: u64,
+}
+
+impl ModelRegistry {
+    pub fn new(catalog: ModelCatalog, cpu_capacity_gib: f64) -> Self {
+        ModelRegistry {
+            catalog,
+            cpu_capacity_gib,
+            cpu_resident: Vec::new(),
+            gpu_model: None,
+            swaps_to_gpu: 0,
+            stages_to_cpu: 0,
+        }
+    }
+
+    pub fn catalog(&self) -> &ModelCatalog {
+        &self.catalog
+    }
+
+    pub fn active(&self) -> Option<ModelId> {
+        self.gpu_model
+    }
+
+    pub fn tier(&self, m: ModelId) -> ModelTier {
+        if self.gpu_model == Some(m) {
+            ModelTier::Gpu
+        } else if self.cpu_resident.contains(&m) {
+            ModelTier::Cpu
+        } else {
+            ModelTier::Storage
+        }
+    }
+
+    fn cpu_used_gib(&self) -> f64 {
+        self.cpu_resident
+            .iter()
+            .map(|&m| self.catalog.get(m).weight_gib)
+            .sum()
+    }
+
+    /// Warm-start hint from the virtual-queue order (§5): models appearing
+    /// later in the virtual queue are staged into CPU memory, front first,
+    /// until the CPU budget is exhausted; the rest stay cold.
+    pub fn set_warm_set(&mut self, queue_order: &[ModelId]) {
+        let mut resident = Vec::new();
+        let mut used = 0.0;
+        for &m in queue_order {
+            if Some(m) == self.gpu_model || resident.contains(&m) {
+                continue;
+            }
+            let w = self.catalog.get(m).weight_gib;
+            if used + w <= self.cpu_capacity_gib {
+                if !self.cpu_resident.contains(&m) {
+                    self.stages_to_cpu += 1;
+                }
+                resident.push(m);
+                used += w;
+            }
+        }
+        self.cpu_resident = resident;
+    }
+
+    /// Time to make `m` active on the GPU from its current tier.
+    /// Storage-resident models pay both the storage→CPU stage and the
+    /// CPU→GPU swap (§5: "two distinct swaps").
+    pub fn swap_in_time_s(&self, m: ModelId, perf: &PerfModel) -> f64 {
+        match self.tier(m) {
+            ModelTier::Gpu => 0.0,
+            ModelTier::Cpu => perf.swap_cpu_gpu_s,
+            ModelTier::Storage => perf.swap_storage_cpu_s + perf.swap_cpu_gpu_s,
+        }
+    }
+
+    /// Make `m` the active GPU model; returns the swap latency. The
+    /// previously active model is demoted to CPU if it fits, else storage.
+    pub fn swap_to_gpu(&mut self, m: ModelId, perf: &PerfModel) -> f64 {
+        let t = self.swap_in_time_s(m, perf);
+        if self.gpu_model == Some(m) {
+            return 0.0;
+        }
+        if let Some(prev) = self.gpu_model.take() {
+            let w = self.catalog.get(prev).weight_gib;
+            if self.cpu_used_gib() + w <= self.cpu_capacity_gib
+                && !self.cpu_resident.contains(&prev)
+            {
+                self.cpu_resident.push(prev);
+            }
+        }
+        self.cpu_resident.retain(|&x| x != m);
+        self.gpu_model = Some(m);
+        self.swaps_to_gpu += 1;
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::GpuKind;
+
+    fn setup() -> (ModelRegistry, PerfModel) {
+        let catalog = ModelCatalog::paper();
+        let perf = PerfModel::profile(catalog.get(ModelId(0)), GpuKind::A100, 161.0);
+        (ModelRegistry::new(catalog, 80.0), perf)
+    }
+
+    #[test]
+    fn initial_tier_is_storage() {
+        let (reg, _) = setup();
+        assert_eq!(reg.tier(ModelId(0)), ModelTier::Storage);
+        assert_eq!(reg.active(), None);
+    }
+
+    #[test]
+    fn swap_from_storage_costs_both_hops() {
+        let (mut reg, perf) = setup();
+        let cold = reg.swap_in_time_s(ModelId(0), &perf);
+        assert!((cold - (perf.swap_storage_cpu_s + perf.swap_cpu_gpu_s)).abs() < 1e-12);
+        reg.set_warm_set(&[ModelId(0)]);
+        let warm = reg.swap_in_time_s(ModelId(0), &perf);
+        assert!((warm - perf.swap_cpu_gpu_s).abs() < 1e-12);
+        reg.swap_to_gpu(ModelId(0), &perf);
+        assert_eq!(reg.swap_in_time_s(ModelId(0), &perf), 0.0);
+    }
+
+    #[test]
+    fn warm_set_respects_cpu_budget() {
+        let (mut reg, _) = setup();
+        // 80 GiB budget: mistral (13.6) + vicuna (24.2) fit; llama (130) doesn't.
+        reg.set_warm_set(&[ModelId(2), ModelId(0), ModelId(1)]);
+        assert_eq!(reg.tier(ModelId(2)), ModelTier::Storage);
+        assert_eq!(reg.tier(ModelId(0)), ModelTier::Cpu);
+        assert_eq!(reg.tier(ModelId(1)), ModelTier::Cpu);
+    }
+
+    #[test]
+    fn swap_demotes_previous_to_cpu() {
+        let (mut reg, perf) = setup();
+        reg.swap_to_gpu(ModelId(0), &perf);
+        reg.swap_to_gpu(ModelId(1), &perf);
+        assert_eq!(reg.active(), Some(ModelId(1)));
+        assert_eq!(reg.tier(ModelId(0)), ModelTier::Cpu);
+        assert_eq!(reg.swaps_to_gpu, 2);
+    }
+
+    #[test]
+    fn swap_to_active_model_is_free() {
+        let (mut reg, perf) = setup();
+        reg.swap_to_gpu(ModelId(0), &perf);
+        let swaps = reg.swaps_to_gpu;
+        assert_eq!(reg.swap_to_gpu(ModelId(0), &perf), 0.0);
+        assert_eq!(reg.swaps_to_gpu, swaps);
+    }
+}

@@ -1,0 +1,265 @@
+//! Analytic timing model for a serving instance — the substitute for the
+//! paper's real-GPU profiling (DESIGN.md §Substitutions).
+//!
+//! QLM's RWT estimator consumes exactly the constants this module
+//! produces for a (model, GPU, tp_degree) triple: prefill time `P`, decode
+//! time per output token `d`, inefficiency factor `ε`, token generation
+//! throughput `Θ`, and model swap time `S` (paper §6, Table 1; §7).
+//!
+//! First-order physics, matching published vLLM measurements within ~2×:
+//! * decode step is weight-load bound: one iteration streams all weights
+//!   from HBM once regardless of batch size (hence continuous batching);
+//! * prefill is compute bound: 2·params·prompt_tokens FLOPs at a fraction
+//!   of peak;
+//! * swap is link bound: weights move over PCIe, parallel across the TP
+//!   group members.
+
+use crate::backend::{GpuKind, ModelSpec};
+
+/// Fraction of GPU memory usable for KV after runtime overheads
+/// (vLLM's gpu_memory_utilization default is 0.9).
+pub const GPU_MEM_UTIL: f64 = 0.9;
+
+/// Achievable fraction of peak bf16 FLOPs during prefill.
+const PREFILL_EFF: f64 = 0.45;
+
+/// Achievable fraction of peak HBM bandwidth during decode.
+const DECODE_BW_EFF: f64 = 0.75;
+
+/// Storage → CPU staging bandwidth (GiB/s) for cold model loads.
+const STORAGE_GIBS: f64 = 4.0;
+
+/// Per-iteration fixed overhead (scheduler, kernel launch), seconds.
+const STEP_OVERHEAD_S: f64 = 0.002;
+
+/// Achievable fraction of PCIe bandwidth during a weight swap (allocation,
+/// layout, and driver overheads halve the raw link rate in practice).
+const SWAP_EFF: f64 = 0.5;
+
+/// Profiled performance constants for one (model, GPU) combination — the
+/// output of QLM's "Hardware Profiling" step (§6, Offline Profiling).
+#[derive(Debug, Clone, Copy)]
+pub struct PerfModel {
+    pub gpu: GpuKind,
+    /// Tensor-parallel degree (GPUs per instance).
+    pub tp: u32,
+    /// Weight-load-bound decode step floor, seconds (`d`).
+    pub decode_s_per_token: f64,
+    /// Incremental step cost per KV-resident token (attention reads the
+    /// cache every iteration): seconds per resident token per step.
+    pub kv_read_s_per_token: f64,
+    /// Token throughput measured by hardware profiling (§6 Offline
+    /// Profiling) — when set, the RWT estimator uses this instead of the
+    /// analytic model.
+    pub measured_theta: Option<f64>,
+    /// Constant prefill time per request, seconds (`P`). §6: prefill is
+    /// near-constant per model for in-distribution prompt lengths.
+    pub prefill_s: f64,
+    /// Continuous-batching inefficiency factor (`ε` ≥ 1).
+    pub epsilon: f64,
+    /// Max tokens resident in the KV cache across the running batch.
+    pub token_capacity: u64,
+    /// Max concurrently running sequences (vLLM max_num_seqs analogue).
+    pub max_batch: u32,
+    /// CPU → GPU model swap time, seconds (`S`).
+    pub swap_cpu_gpu_s: f64,
+    /// Storage → CPU model staging time, seconds.
+    pub swap_storage_cpu_s: f64,
+    /// KV eviction bandwidth GPU→CPU, bytes/s.
+    pub evict_bytes_per_s: f64,
+}
+
+impl PerfModel {
+    /// Does `model` fit on a `tp_degree`-way group of `gpu` devices?
+    pub fn fits(model: &ModelSpec, gpu: GpuKind) -> bool {
+        let spec = gpu.spec();
+        let tp = model.tp_degree.max(1);
+        model.weight_gib < spec.mem_gib * tp as f64 * GPU_MEM_UTIL
+    }
+
+    /// Non-panicking profile.
+    pub fn try_profile(
+        model: &ModelSpec,
+        gpu: GpuKind,
+        mean_prompt_tokens: f64,
+    ) -> Option<PerfModel> {
+        if Self::fits(model, gpu) {
+            Some(Self::profile(model, gpu, mean_prompt_tokens))
+        } else {
+            None
+        }
+    }
+
+    /// Build the profile for `model` running on `tp`-way `gpu` devices.
+    /// Panics if the weights do not fit in the TP group's memory.
+    pub fn profile(model: &ModelSpec, gpu: GpuKind, mean_prompt_tokens: f64) -> PerfModel {
+        let spec = gpu.spec();
+        let tp = model.tp_degree.max(1);
+        let total_mem_gib = spec.mem_gib * tp as f64 * GPU_MEM_UTIL;
+        assert!(
+            model.weight_gib < total_mem_gib,
+            "{} ({:.0} GiB) does not fit on {}x{} ({:.0} GiB usable)",
+            model.name,
+            model.weight_gib,
+            tp,
+            gpu.name(),
+            total_mem_gib
+        );
+
+        // Decode: stream weights once per step across the TP group, plus
+        // read the resident KV cache (charged per token in step()).
+        let bw = spec.hbm_gibs * tp as f64 * DECODE_BW_EFF;
+        let decode_s = model.weight_gib / bw + STEP_OVERHEAD_S;
+        let kv_read_s_per_token =
+            model.kv_bytes_per_token as f64 / (bw * 1024.0 * 1024.0 * 1024.0);
+
+        // Prefill: compute-bound on the mean prompt.
+        let flops = 2.0 * model.params_b * 1e9 * mean_prompt_tokens;
+        let prefill_s = flops / (spec.bf16_tflops * 1e12 * tp as f64 * PREFILL_EFF)
+            + STEP_OVERHEAD_S;
+
+        // KV capacity from leftover memory.
+        let kv_mem_bytes = ((total_mem_gib - model.weight_gib) * 1024.0 * 1024.0 * 1024.0)
+            .max(0.0) as u64;
+        let token_capacity = kv_mem_bytes / model.kv_bytes_per_token;
+
+        // Swap times: PCIe transfers parallel across TP members.
+        let link = spec.pcie_gibs * tp as f64 * SWAP_EFF;
+        let swap_cpu_gpu_s = model.weight_gib / link;
+        let swap_storage_cpu_s = model.weight_gib / STORAGE_GIBS;
+
+        PerfModel {
+            gpu,
+            tp,
+            decode_s_per_token: decode_s,
+            kv_read_s_per_token,
+            measured_theta: None,
+            prefill_s,
+            epsilon: 1.15,
+            token_capacity,
+            max_batch: 256,
+            swap_cpu_gpu_s,
+            swap_storage_cpu_s,
+            evict_bytes_per_s: spec.pcie_gibs * 1024.0 * 1024.0 * 1024.0,
+        }
+    }
+
+    /// Decode-step latency at `resident_tokens` of live KV.
+    pub fn step_time(&self, resident_tokens: u64) -> f64 {
+        (self.decode_s_per_token + resident_tokens as f64 * self.kv_read_s_per_token)
+            * self.epsilon
+    }
+
+    /// Token generation throughput Θ (tokens/s) at running batch size `b`
+    /// with `mean_tokens_per_req` resident per request — Appendix A.1,
+    /// Eq. 15: Θ = B / (δ · ε), with δ including the KV-read term.
+    pub fn throughput_at(&self, b: u32, mean_tokens_per_req: f64) -> f64 {
+        let b = b.min(self.max_batch) as f64;
+        b / self.step_time((b * mean_tokens_per_req) as u64)
+    }
+
+    /// Θ = B / (δ·ε) at full weight-load-bound batching (Eq. 15 with the
+    /// original constant-δ reading).
+    pub fn throughput(&self, b: u32) -> f64 {
+        b.min(self.max_batch) as f64 / (self.decode_s_per_token * self.epsilon)
+    }
+
+    /// Θ at the steady-state batch size implied by the token capacity and
+    /// a mean per-request footprint — Appendix A.1, Eq. 16. Prefers the
+    /// hardware-profiled measurement when available (§6).
+    pub fn steady_throughput(&self, mean_tokens_per_req: f64) -> f64 {
+        if let Some(t) = self.measured_theta {
+            return t;
+        }
+        let b = (self.token_capacity as f64 / mean_tokens_per_req)
+            .min(self.max_batch as f64)
+            .max(1.0);
+        self.throughput_at(b as u32, mean_tokens_per_req)
+    }
+
+    /// Steady-state batch size for a mean per-request token footprint.
+    pub fn steady_batch(&self, mean_tokens_per_req: f64) -> u32 {
+        (self.token_capacity as f64 / mean_tokens_per_req)
+            .min(self.max_batch as f64)
+            .max(1.0) as u32
+    }
+
+    /// Time to evict `tokens` of KV to CPU memory (GPU→CPU copy).
+    pub fn evict_time_s(&self, tokens: u64, kv_bytes_per_token: u64) -> f64 {
+        (tokens * kv_bytes_per_token) as f64 / self.evict_bytes_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::ModelCatalog;
+
+    fn profiles() -> Vec<PerfModel> {
+        let c = ModelCatalog::paper();
+        c.models
+            .iter()
+            .map(|m| PerfModel::profile(m, GpuKind::A100, 161.0))
+            .collect()
+    }
+
+    #[test]
+    fn decode_times_plausible() {
+        let ps = profiles();
+        // Mistral-7B on A100: ~10-15 ms/step; Llama-70B TP4: ~25-35 ms.
+        assert!(ps[0].decode_s_per_token < 0.02, "{}", ps[0].decode_s_per_token);
+        assert!(ps[2].decode_s_per_token < 0.05, "{}", ps[2].decode_s_per_token);
+        assert!(ps[2].decode_s_per_token > ps[0].decode_s_per_token);
+    }
+
+    #[test]
+    fn larger_model_lower_token_capacity_per_gib() {
+        let ps = profiles();
+        // Vicuna-13B MHA has ~6× the KV bytes/token of Mistral ⇒ far lower capacity.
+        assert!(ps[0].token_capacity > ps[1].token_capacity);
+    }
+
+    #[test]
+    fn swap_slower_than_decode_step() {
+        // §2.4 Insight 3: swaps are expensive relative to per-token work.
+        for p in profiles() {
+            assert!(p.swap_cpu_gpu_s > 50.0 * p.decode_s_per_token);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn llama70_does_not_fit_single_a10() {
+        let c = ModelCatalog::paper();
+        let mut llama = c.by_name("llama-70b").unwrap().clone();
+        llama.tp_degree = 1;
+        PerfModel::profile(&llama, GpuKind::A10, 161.0);
+    }
+
+    #[test]
+    fn throughput_monotone_in_batch() {
+        let p = &profiles()[0];
+        assert!(p.throughput(64) > p.throughput(8));
+        // Saturates at max_batch.
+        assert_eq!(p.throughput(256), p.throughput(512));
+    }
+
+    #[test]
+    fn a10_slower_than_a100() {
+        let c = ModelCatalog::paper();
+        let m = c.by_name("mistral-7b").unwrap();
+        let a10 = PerfModel::profile(m, GpuKind::A10, 161.0);
+        let a100 = PerfModel::profile(m, GpuKind::A100, 161.0);
+        assert!(a10.decode_s_per_token > a100.decode_s_per_token);
+        assert!(a10.token_capacity < a100.token_capacity);
+        assert!(a10.steady_throughput(500.0) < a100.steady_throughput(500.0));
+    }
+
+    #[test]
+    fn evict_time_linear_in_tokens() {
+        let p = &profiles()[0];
+        let t1 = p.evict_time_s(1000, 131_072);
+        let t2 = p.evict_time_s(2000, 131_072);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,163 @@
+//! Scheduling policies: QLM and the paper's three baselines (§8,
+//! Experiment Setup).
+//!
+//! * **EDF** — requests sorted by SLO deadline; swaps whenever the head
+//!   model differs (Insight #3's thrashing); no eviction.
+//! * **vLLM** — default FCFS continuous batching; instances statically
+//!   pinned to models; no reordering, eviction, or swapping.
+//! * **SHEPHERD** — request groups with an ILP-style placement, but built
+//!   on the DNN-serving assumptions the paper critiques: fixed-size
+//!   batches with deterministic (worst-case) execution-time estimates and
+//!   no continuous batching, which overestimates waiting time (Fig. 1).
+//! * **QLM** — request groups + RWT estimator + global scheduler + all
+//!   four LSOs.
+
+use crate::coordinator::lso::LsoConfig;
+use crate::coordinator::scheduler::SolverKind;
+
+/// Which serving policy a simulation runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// Full QLM with configurable LSO ablations and solver choice.
+    Qlm {
+        lso: LsoConfig,
+        solver: SolverKind,
+    },
+    /// Earliest-deadline-first over individual requests.
+    Edf,
+    /// Vanilla vLLM: FCFS, static model placement.
+    VllmFcfs,
+    /// SHEPHERD-style: groups + placement, deterministic worst-case
+    /// estimates, fixed batches, no eviction.
+    Shepherd,
+}
+
+impl Policy {
+    pub fn qlm() -> Self {
+        Policy::Qlm {
+            lso: LsoConfig::all(),
+            solver: SolverKind::Greedy,
+        }
+    }
+
+    pub fn qlm_with(lso: LsoConfig) -> Self {
+        Policy::Qlm {
+            lso,
+            solver: SolverKind::Greedy,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Policy::Qlm { lso, .. } => {
+                let mut n = "qlm".to_string();
+                if !lso.eviction {
+                    n.push_str("-noevict");
+                }
+                if !lso.model_swapping {
+                    n.push_str("-noswap");
+                }
+                if !lso.load_balancing {
+                    n.push_str("-nolb");
+                }
+                if !lso.ordered_pulling {
+                    n.push_str("-nopull");
+                }
+                n
+            }
+            Policy::Edf => "edf".into(),
+            Policy::VllmFcfs => "vllm".into(),
+            Policy::Shepherd => "shepherd".into(),
+        }
+    }
+
+    /// Effective LSO set for the policy (baselines disable LSOs).
+    pub fn lso(&self) -> LsoConfig {
+        match self {
+            Policy::Qlm { lso, .. } => *lso,
+            Policy::Edf => LsoConfig {
+                ordered_pulling: true,
+                eviction: false,
+                load_balancing: true,
+                model_swapping: true, // EDF swaps eagerly — the thrash case
+            },
+            Policy::VllmFcfs => LsoConfig {
+                ordered_pulling: false,
+                eviction: false,
+                load_balancing: false,
+                model_swapping: false,
+            },
+            Policy::Shepherd => LsoConfig {
+                ordered_pulling: true,
+                eviction: false,
+                load_balancing: true,
+                model_swapping: true,
+            },
+        }
+    }
+
+    /// Does this policy use request groups (vs per-request decisions)?
+    pub fn uses_groups(&self) -> bool {
+        matches!(self, Policy::Qlm { .. } | Policy::Shepherd)
+    }
+
+    /// Does the waiting-time estimate model continuous batching (QLM's
+    /// RWT) or assume deterministic worst-case fixed batches (SHEPHERD /
+    /// Clockwork-style)?
+    pub fn conservative_estimator(&self) -> bool {
+        matches!(self, Policy::Shepherd)
+    }
+
+    /// Fixed-batch serving (no continuous joining) — SHEPHERD's dynamic
+    /// batching operates on whole batches.
+    pub fn fixed_batches(&self) -> bool {
+        matches!(self, Policy::Shepherd)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_distinct() {
+        let names: Vec<String> = [
+            Policy::qlm(),
+            Policy::Edf,
+            Policy::VllmFcfs,
+            Policy::Shepherd,
+        ]
+        .iter()
+        .map(|p| p.name())
+        .collect();
+        let mut dedup = names.clone();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+    }
+
+    #[test]
+    fn ablation_names_encode_flags() {
+        assert_eq!(
+            Policy::qlm_with(LsoConfig::without_eviction()).name(),
+            "qlm-noevict"
+        );
+        assert_eq!(
+            Policy::qlm_with(LsoConfig::without_swapping()).name(),
+            "qlm-noswap"
+        );
+    }
+
+    #[test]
+    fn vllm_disables_all_smart_lsos() {
+        let l = Policy::VllmFcfs.lso();
+        assert!(!l.eviction && !l.model_swapping && !l.load_balancing && !l.ordered_pulling);
+    }
+
+    #[test]
+    fn shepherd_flags() {
+        assert!(Policy::Shepherd.uses_groups());
+        assert!(Policy::Shepherd.conservative_estimator());
+        assert!(Policy::Shepherd.fixed_batches());
+        assert!(!Policy::qlm().fixed_batches());
+    }
+}

@@ -1,0 +1,310 @@
+//! The QLM agent (§5): one per LLM serving instance. It monitors the
+//! instance's virtual queue and converts queue state into LSO actions —
+//! pull when there is spare token capacity, swap when the head group's
+//! model differs from the active one, evict when the head group changed
+//! and running lower-priority requests block its admission.
+//!
+//! The agent holds no policy: "the intelligence required to configure
+//! when and which action to set comes from the virtual queue ordering set
+//! by the global scheduler."
+
+use std::collections::HashMap;
+
+use crate::backend::{InstanceId, ModelId};
+use crate::coordinator::lso::{LsoAction, LsoConfig};
+use crate::coordinator::request_group::{GroupId, RequestGroup};
+use crate::coordinator::virtual_queue::VirtualQueue;
+
+/// Instance state the agent can observe (decoupled from `backend` so the
+/// same agent drives both the simulator and the PJRT engine).
+#[derive(Debug, Clone)]
+pub struct InstanceObservation {
+    pub id: InstanceId,
+    pub active_model: Option<ModelId>,
+    pub swapping: bool,
+    /// Running request ids with their group ids.
+    pub running: Vec<(u64, GroupId)>,
+    /// Can one more request with `prompt_tokens` be admitted right now?
+    pub spare_capacity_tokens: u64,
+    pub batch_slots_free: u32,
+}
+
+/// Per-instance agent. Stateless between invocations except for the LSO
+/// config (ablation toggles).
+#[derive(Debug, Clone)]
+pub struct QlmAgent {
+    pub instance: InstanceId,
+    pub lso: LsoConfig,
+}
+
+impl QlmAgent {
+    pub fn new(instance: InstanceId, lso: LsoConfig) -> Self {
+        QlmAgent { instance, lso }
+    }
+
+    /// Decide the next LSO actions for this instance given its virtual
+    /// queue and observation. Returns actions in execution order.
+    ///
+    /// * Head group's model ≠ active ⇒ `SwapModel` (if enabled).
+    /// * Head group has waiting members and no capacity while running
+    ///   requests belong to non-head groups ⇒ `Evict` the newest
+    ///   non-head-group requests (if enabled).
+    /// * Otherwise `Pull` waiting members of the head group (then deeper
+    ///   groups of the same model) while capacity remains.
+    pub fn decide(
+        &self,
+        vq: &VirtualQueue,
+        groups: &HashMap<GroupId, RequestGroup>,
+        waiting_of_group: impl Fn(GroupId) -> Vec<u64>,
+        obs: &InstanceObservation,
+        prompt_tokens_of: impl Fn(u64) -> u64,
+    ) -> Vec<LsoAction> {
+        let mut actions = Vec::new();
+        if obs.swapping {
+            return actions;
+        }
+        let Some(head_id) = vq.head() else {
+            return actions;
+        };
+        let Some(head) = groups.get(&head_id) else {
+            return actions;
+        };
+
+        // ④ Model swapping.
+        if obs.active_model != Some(head.model) {
+            if self.lso.model_swapping || obs.active_model.is_none() {
+                actions.push(LsoAction::SwapModel {
+                    instance: self.instance,
+                    model: head.model,
+                });
+            }
+            // Either way nothing else can happen until the model matches.
+            return actions;
+        }
+
+        // ① Request pulling: head group first (FCFS within group), then
+        // same-model groups deeper in the queue.
+        let mut spare_tokens = obs.spare_capacity_tokens;
+        let mut slots = obs.batch_slots_free;
+        let mut pull_ids: Vec<u64> = Vec::new();
+        if self.lso.ordered_pulling {
+            for &gid in vq.groups.iter() {
+                let Some(g) = groups.get(&gid) else { continue };
+                if g.model != head.model {
+                    break; // stop at the first model boundary
+                }
+                for r in waiting_of_group(gid) {
+                    let need = prompt_tokens_of(r);
+                    if slots == 0 || need > spare_tokens {
+                        break;
+                    }
+                    spare_tokens -= need;
+                    slots -= 1;
+                    pull_ids.push(r);
+                }
+                if slots == 0 {
+                    break;
+                }
+            }
+        } else {
+            // Ablation: FCFS over all waiting members regardless of order.
+            let mut all: Vec<u64> = vq
+                .groups
+                .iter()
+                .filter(|gid| groups.get(gid).map(|g| g.model) == Some(head.model))
+                .flat_map(|&gid| waiting_of_group(gid))
+                .collect();
+            all.sort_unstable();
+            for r in all {
+                let need = prompt_tokens_of(r);
+                if slots == 0 || need > spare_tokens {
+                    break;
+                }
+                spare_tokens -= need;
+                slots -= 1;
+                pull_ids.push(r);
+            }
+        }
+
+        // ② Request eviction: head group members still waiting, no room,
+        // and the batch is occupied by non-head groups ⇒ evict newest
+        // non-head requests to clear space (§5: "requests of the head
+        // request group are pulled into the running batch ... previously
+        // running requests are evicted").
+        let head_waiting: Vec<u64> = waiting_of_group(head_id);
+        let head_blocked = !head_waiting.is_empty()
+            && pull_ids.iter().filter(|r| head_waiting.contains(r)).count() == 0;
+        if head_blocked && self.lso.eviction {
+            let victims: Vec<u64> = obs
+                .running
+                .iter()
+                .filter(|(_, g)| *g != head_id)
+                .map(|(r, _)| *r)
+                .collect();
+            if !victims.is_empty() {
+                // Evict enough newest victims to fit the first head request.
+                let need = head_waiting
+                    .first()
+                    .map(|&r| prompt_tokens_of(r))
+                    .unwrap_or(0);
+                let mut freed = 0u64;
+                let mut chosen = Vec::new();
+                for &v in victims.iter().rev() {
+                    chosen.push(v);
+                    freed += prompt_tokens_of(v);
+                    if freed + obs.spare_capacity_tokens >= need {
+                        break;
+                    }
+                }
+                actions.push(LsoAction::Evict {
+                    instance: self.instance,
+                    requests: chosen,
+                });
+            }
+        }
+
+        actions.extend(pull_ids.into_iter().map(|request| LsoAction::Pull {
+            instance: self.instance,
+            request,
+        }));
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::SloClass;
+    use std::collections::VecDeque;
+
+    fn grp(id: u64, model: u32, members: &[u64]) -> RequestGroup {
+        RequestGroup {
+            id: GroupId(id),
+            model: ModelId(model),
+            class: SloClass::Batch1,
+            slo_s: 60.0,
+            earliest_arrival_s: 0.0,
+            members: VecDeque::from(members.to_vec()),
+            mega: false,
+        }
+    }
+
+    fn setup(
+        vq_groups: &[RequestGroup],
+    ) -> (VirtualQueue, HashMap<GroupId, RequestGroup>) {
+        let mut vq = VirtualQueue::new(InstanceId(0));
+        let mut map = HashMap::new();
+        for g in vq_groups {
+            vq.push_back(g.id);
+            map.insert(g.id, g.clone());
+        }
+        (vq, map)
+    }
+
+    fn obs(active: Option<u32>, spare: u64, slots: u32) -> InstanceObservation {
+        InstanceObservation {
+            id: InstanceId(0),
+            active_model: active.map(ModelId),
+            swapping: false,
+            running: vec![],
+            spare_capacity_tokens: spare,
+            batch_slots_free: slots,
+        }
+    }
+
+    #[test]
+    fn swap_issued_when_head_model_differs() {
+        let agent = QlmAgent::new(InstanceId(0), LsoConfig::all());
+        let (vq, map) = setup(&[grp(1, 1, &[10])]);
+        let actions = agent.decide(&vq, &map, |g| map[&g].members.iter().copied().collect(), &obs(Some(0), 1000, 8), |_| 100);
+        assert_eq!(
+            actions,
+            vec![LsoAction::SwapModel {
+                instance: InstanceId(0),
+                model: ModelId(1)
+            }]
+        );
+    }
+
+    #[test]
+    fn swap_suppressed_by_ablation_unless_cold() {
+        let agent = QlmAgent::new(InstanceId(0), LsoConfig::without_swapping());
+        let (vq, map) = setup(&[grp(1, 1, &[10])]);
+        // Active model present but different: no swap under ablation.
+        let a = agent.decide(&vq, &map, |g| map[&g].members.iter().copied().collect(), &obs(Some(0), 1000, 8), |_| 100);
+        assert!(a.is_empty());
+        // Cold instance must still load its first model.
+        let a2 = agent.decide(&vq, &map, |g| map[&g].members.iter().copied().collect(), &obs(None, 1000, 8), |_| 100);
+        assert_eq!(a2.len(), 1);
+    }
+
+    #[test]
+    fn pulls_fcfs_from_head_group_within_capacity() {
+        let agent = QlmAgent::new(InstanceId(0), LsoConfig::all());
+        let (vq, map) = setup(&[grp(1, 0, &[10, 11, 12])]);
+        let actions = agent.decide(&vq, &map, |g| map[&g].members.iter().copied().collect(), &obs(Some(0), 250, 8), |_| 100);
+        // 250 tokens of space, 100 per prompt → two pulls.
+        assert_eq!(
+            actions,
+            vec![
+                LsoAction::Pull {
+                    instance: InstanceId(0),
+                    request: 10
+                },
+                LsoAction::Pull {
+                    instance: InstanceId(0),
+                    request: 11
+                },
+            ]
+        );
+    }
+
+    #[test]
+    fn pulls_cross_group_boundary_same_model_only() {
+        let agent = QlmAgent::new(InstanceId(0), LsoConfig::all());
+        let (vq, map) = setup(&[grp(1, 0, &[10]), grp(2, 0, &[20]), grp(3, 1, &[30])]);
+        let actions = agent.decide(&vq, &map, |g| map[&g].members.iter().copied().collect(), &obs(Some(0), 10_000, 8), |_| 100);
+        let pulled: Vec<u64> = actions
+            .iter()
+            .filter_map(|a| match a {
+                LsoAction::Pull { request, .. } => Some(*request),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(pulled, vec![10, 20], "model-1 group must not be pulled");
+    }
+
+    #[test]
+    fn evicts_non_head_requests_when_head_blocked() {
+        let agent = QlmAgent::new(InstanceId(0), LsoConfig::all());
+        let (vq, map) = setup(&[grp(1, 0, &[10]), grp(2, 0, &[])]);
+        let mut o = obs(Some(0), 0, 8); // no spare capacity
+        o.running = vec![(20, GroupId(2)), (21, GroupId(2))];
+        let actions = agent.decide(&vq, &map, |g| map[&g].members.iter().copied().collect(), &o, |_| 100);
+        match &actions[0] {
+            LsoAction::Evict { requests, .. } => {
+                assert!(requests.contains(&21), "newest victim evicted first");
+            }
+            other => panic!("expected eviction, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn no_eviction_under_ablation() {
+        let agent = QlmAgent::new(InstanceId(0), LsoConfig::without_eviction());
+        let (vq, map) = setup(&[grp(1, 0, &[10]), grp(2, 0, &[])]);
+        let mut o = obs(Some(0), 0, 8);
+        o.running = vec![(20, GroupId(2))];
+        let actions = agent.decide(&vq, &map, |g| map[&g].members.iter().copied().collect(), &o, |_| 100);
+        assert!(actions.is_empty(), "{actions:?}");
+    }
+
+    #[test]
+    fn idle_during_swap() {
+        let agent = QlmAgent::new(InstanceId(0), LsoConfig::all());
+        let (vq, map) = setup(&[grp(1, 0, &[10])]);
+        let mut o = obs(Some(0), 1000, 8);
+        o.swapping = true;
+        assert!(agent.decide(&vq, &map, |g| map[&g].members.iter().copied().collect(), &o, |_| 100).is_empty());
+    }
+}

@@ -1,0 +1,231 @@
+//! The global request queue (§3.1, §4 "Fault Tolerance in Queue
+//! Management").
+//!
+//! QLM stores a *single replica* of each request and its metadata in a
+//! distributed broker (RabbitMQ in the paper); virtual queues hold only
+//! references. We reproduce the broker's semantics in-process: submit /
+//! ack (complete) / requeue-on-eviction, plus the consistency property
+//! that virtual queues can be rebuilt from the global queue alone after
+//! an instance failure.
+
+use std::collections::HashMap;
+
+use crate::coordinator::request::{Request, RequestState};
+
+/// The single-replica request store + waiting set.
+#[derive(Debug, Default)]
+pub struct GlobalQueue {
+    store: HashMap<u64, Request>,
+    /// Waiting request ids in arrival order (FCFS base ordering).
+    waiting: Vec<u64>,
+    next_id: u64,
+    pub completed: Vec<Request>,
+}
+
+impl GlobalQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue a new request; returns its broker id.
+    pub fn submit(&mut self, mut req: Request) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        req.id = id;
+        req.state = RequestState::Waiting;
+        self.waiting.push(id);
+        self.store.insert(id, req);
+        id
+    }
+
+    pub fn len_waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn len_total(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    pub fn get(&self, id: u64) -> Option<&Request> {
+        self.store.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut Request> {
+        self.store.get_mut(&id)
+    }
+
+    /// Ids currently waiting (arrival order).
+    pub fn waiting_ids(&self) -> &[u64] {
+        &self.waiting
+    }
+
+    /// Mark a request as pulled into a running batch (Request Pulling LSO).
+    /// Removes it from the waiting set; the broker keeps the data until ack.
+    pub fn mark_running(&mut self, id: u64) {
+        if let Some(r) = self.store.get_mut(&id) {
+            r.state = RequestState::Running;
+        }
+        self.waiting.retain(|&x| x != id);
+    }
+
+    /// Re-queue an evicted request (Request Eviction LSO): it returns to
+    /// the waiting set, retaining progress metadata.
+    pub fn requeue_evicted(
+        &mut self,
+        id: u64,
+        generated: u32,
+        evicted_from: crate::backend::InstanceId,
+    ) {
+        if let Some(r) = self.store.get_mut(&id) {
+            r.state = RequestState::Evicted;
+            r.generated = generated;
+            r.evicted_from = Some(evicted_from);
+            if !self.waiting.contains(&id) {
+                self.waiting.push(id);
+            }
+        }
+    }
+
+    /// Ack a completed request: removed from the broker, archived for
+    /// metrics.
+    pub fn complete(&mut self, id: u64, first_token_s: Option<f64>, completed_s: f64) {
+        if let Some(mut r) = self.store.remove(&id) {
+            r.state = RequestState::Completed;
+            if r.first_token_s.is_none() {
+                r.first_token_s = first_token_s;
+            }
+            r.completed_s = Some(completed_s);
+            self.completed.push(r);
+        }
+        self.waiting.retain(|&x| x != id);
+    }
+
+    /// Record a first-token event.
+    pub fn record_first_token(&mut self, id: u64, t: f64) {
+        if let Some(r) = self.store.get_mut(&id) {
+            if r.first_token_s.is_none() {
+                r.first_token_s = Some(t);
+            }
+        }
+    }
+
+    /// Instance failure (§4 Fault Isolation): every request that was
+    /// running on the lost instance reverts to Waiting; evicted-KV
+    /// references to that instance are invalidated (the KV is gone, so
+    /// generation restarts from the prompt). Returns affected ids.
+    pub fn fail_instance(&mut self, inst: crate::backend::InstanceId, running_ids: &[u64]) -> Vec<u64> {
+        let mut affected = Vec::new();
+        for &id in running_ids {
+            if let Some(r) = self.store.get_mut(&id) {
+                r.state = RequestState::Waiting;
+                r.generated = 0;
+                r.evicted_from = None;
+                if !self.waiting.contains(&id) {
+                    self.waiting.push(id);
+                }
+                affected.push(id);
+            }
+        }
+        // Invalidate stale eviction pointers into the dead instance.
+        for r in self.store.values_mut() {
+            if r.evicted_from == Some(inst) {
+                r.evicted_from = None;
+                r.generated = 0;
+            }
+        }
+        affected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{InstanceId, ModelId};
+    use crate::workload::{SloClass, TraceRequest};
+
+    fn trace_req(arrival: f64) -> TraceRequest {
+        TraceRequest {
+            arrival_s: arrival,
+            model: ModelId(0),
+            class: SloClass::Interactive,
+            slo_s: 20.0,
+            input_tokens: 100,
+            output_tokens: 50,
+            mega: false,
+        }
+    }
+
+    fn submit_one(q: &mut GlobalQueue, arrival: f64) -> u64 {
+        q.submit(Request::from_trace(0, &trace_req(arrival)))
+    }
+
+    #[test]
+    fn submit_assigns_ids_in_order() {
+        let mut q = GlobalQueue::new();
+        let a = submit_one(&mut q, 0.0);
+        let b = submit_one(&mut q, 1.0);
+        assert_eq!(b, a + 1);
+        assert_eq!(q.waiting_ids(), &[a, b]);
+        assert_eq!(q.len_waiting(), 2);
+    }
+
+    #[test]
+    fn pull_then_complete_lifecycle() {
+        let mut q = GlobalQueue::new();
+        let id = submit_one(&mut q, 0.0);
+        q.mark_running(id);
+        assert_eq!(q.len_waiting(), 0);
+        assert_eq!(q.get(id).unwrap().state, RequestState::Running);
+        q.record_first_token(id, 3.0);
+        q.complete(id, None, 10.0);
+        assert!(q.get(id).is_none());
+        assert_eq!(q.completed.len(), 1);
+        assert_eq!(q.completed[0].ttft(), Some(3.0));
+    }
+
+    #[test]
+    fn eviction_requeues_with_progress() {
+        let mut q = GlobalQueue::new();
+        let id = submit_one(&mut q, 0.0);
+        q.mark_running(id);
+        q.requeue_evicted(id, 17, InstanceId(3));
+        let r = q.get(id).unwrap();
+        assert_eq!(r.state, RequestState::Evicted);
+        assert_eq!(r.generated, 17);
+        assert_eq!(r.evicted_from, Some(InstanceId(3)));
+        assert!(q.waiting_ids().contains(&id));
+    }
+
+    #[test]
+    fn instance_failure_restores_waiting_state() {
+        let mut q = GlobalQueue::new();
+        let a = submit_one(&mut q, 0.0);
+        let b = submit_one(&mut q, 1.0);
+        q.mark_running(a);
+        q.mark_running(b);
+        // b was evicted earlier, its KV parked on the failed instance.
+        q.requeue_evicted(b, 9, InstanceId(1));
+        let affected = q.fail_instance(InstanceId(1), &[a]);
+        assert_eq!(affected, vec![a]);
+        let ra = q.get(a).unwrap();
+        assert_eq!(ra.state, RequestState::Waiting);
+        let rb = q.get(b).unwrap();
+        assert_eq!(rb.evicted_from, None, "stale KV pointer invalidated");
+        assert_eq!(rb.generated, 0);
+        // No request was lost: broker holds the single replica.
+        assert_eq!(q.len_total(), 2);
+    }
+
+    #[test]
+    fn first_token_recorded_once() {
+        let mut q = GlobalQueue::new();
+        let id = submit_one(&mut q, 0.0);
+        q.record_first_token(id, 5.0);
+        q.record_first_token(id, 9.0);
+        assert_eq!(q.get(id).unwrap().first_token_s, Some(5.0));
+    }
+}

@@ -1,0 +1,129 @@
+//! LLM Serving Operations (§5): the four backend actions the QLM agent
+//! actuates from virtual-queue state. The LSOs are "merely action
+//! actuators" — policy lives in the global scheduler's queue ordering.
+
+use crate::backend::{InstanceId, ModelId};
+
+/// One actuated backend operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LsoAction {
+    /// ① Dequeue a request from the virtual queue into the running batch.
+    Pull {
+        instance: InstanceId,
+        request: u64,
+    },
+    /// ② Evict running requests back to the global queue (KV → CPU).
+    Evict {
+        instance: InstanceId,
+        requests: Vec<u64>,
+    },
+    /// ④ Swap the active model (flushes KV, displaces running requests).
+    SwapModel {
+        instance: InstanceId,
+        model: ModelId,
+    },
+}
+
+/// Which LSOs are enabled — the knobs for the ablation studies
+/// (Fig. 11 / Fig. 14 remove one LSO at a time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LsoConfig {
+    /// Request pulling can't be disabled (nothing would ever run);
+    /// the ablation downgrade is "pull strictly FCFS, ignore the virtual
+    /// queue ordering".
+    pub ordered_pulling: bool,
+    /// ② Request eviction.
+    pub eviction: bool,
+    /// ③ Load balancing (RWT-aware assignment vs round-robin).
+    pub load_balancing: bool,
+    /// ④ Model swapping (off ⇒ instances are pinned to their first model).
+    pub model_swapping: bool,
+}
+
+impl Default for LsoConfig {
+    fn default() -> Self {
+        LsoConfig {
+            ordered_pulling: true,
+            eviction: true,
+            load_balancing: true,
+            model_swapping: true,
+        }
+    }
+}
+
+impl LsoConfig {
+    pub fn all() -> Self {
+        Self::default()
+    }
+
+    pub fn without_eviction() -> Self {
+        LsoConfig {
+            eviction: false,
+            ..Self::default()
+        }
+    }
+
+    pub fn without_swapping() -> Self {
+        LsoConfig {
+            model_swapping: false,
+            ..Self::default()
+        }
+    }
+
+    pub fn without_load_balancing() -> Self {
+        LsoConfig {
+            load_balancing: false,
+            ..Self::default()
+        }
+    }
+
+    pub fn without_ordered_pulling() -> Self {
+        LsoConfig {
+            ordered_pulling: false,
+            ..Self::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_enables_everything() {
+        let c = LsoConfig::default();
+        assert!(c.ordered_pulling && c.eviction && c.load_balancing && c.model_swapping);
+    }
+
+    #[test]
+    fn ablation_constructors_disable_one() {
+        assert!(!LsoConfig::without_eviction().eviction);
+        assert!(!LsoConfig::without_swapping().model_swapping);
+        assert!(!LsoConfig::without_load_balancing().load_balancing);
+        assert!(!LsoConfig::without_ordered_pulling().ordered_pulling);
+        // And leave the rest on.
+        assert!(LsoConfig::without_eviction().model_swapping);
+    }
+
+    #[test]
+    fn actions_are_comparable() {
+        let a = LsoAction::Pull {
+            instance: InstanceId(0),
+            request: 1,
+        };
+        assert_eq!(
+            a,
+            LsoAction::Pull {
+                instance: InstanceId(0),
+                request: 1
+            }
+        );
+        assert_ne!(
+            a,
+            LsoAction::SwapModel {
+                instance: InstanceId(0),
+                model: ModelId(1)
+            }
+        );
+    }
+}

@@ -1,0 +1,27 @@
+//! Layer 3 — the QLM coordinator, the paper's contribution (§3–§7).
+//!
+//! Requests enter the [`GlobalQueue`] (single-replica broker), are grouped
+//! into [`RequestGroup`]s (§4, Algorithm 1), which are assigned and
+//! ordered on per-instance [`VirtualQueue`]s by the [`GlobalScheduler`]
+//! (§7) using waiting-time estimates from the [`RwtEstimator`] (§6). A
+//! per-instance [`QlmAgent`] (§5) translates virtual-queue state into the
+//! four LSO actions: request pulling, request eviction, load balancing
+//! (implicit in assignment), and model swapping.
+
+pub mod request;
+pub mod global_queue;
+pub mod request_group;
+pub mod virtual_queue;
+pub mod rwt;
+pub mod scheduler;
+pub mod lso;
+pub mod agent;
+
+pub use agent::QlmAgent;
+pub use global_queue::GlobalQueue;
+pub use lso::{LsoAction, LsoConfig};
+pub use request::{Request, RequestState};
+pub use request_group::{GroupId, Grouper, RequestGroup};
+pub use rwt::{GroupEstimate, RwtEstimator, WorkloadProfile};
+pub use scheduler::{GlobalScheduler, SchedulerConfig, SolverKind};
+pub use virtual_queue::VirtualQueue;

@@ -1,0 +1,134 @@
+//! Request model (Def. 2.1/2.2): prompt token count plus metadata — model
+//! type and SLO value (p99 TTFT bound). The ground-truth output length is
+//! carried for the execution backend only; the coordinator's estimator
+//! never reads it (the paper's premise: output lengths are unknown a
+//! priori and must be modeled as a distribution).
+
+use crate::backend::ModelId;
+use crate::workload::{SloClass, TraceRequest};
+
+/// Lifecycle state of a request in QLM (§3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    /// In the global queue, not yet assigned to a running batch.
+    Waiting,
+    /// In some instance's running batch.
+    Running,
+    /// Evicted from a running batch back to the waiting queue; its KV may
+    /// still be parked in the source instance's CPU memory.
+    Evicted,
+    /// Final token emitted.
+    Completed,
+}
+
+/// A queued LLM request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub model: ModelId,
+    pub class: SloClass,
+    /// TTFT SLO in seconds relative to arrival.
+    pub slo_s: f64,
+    pub input_tokens: u32,
+    /// Ground truth output length — execution backend only.
+    pub output_tokens_hidden: u32,
+    pub arrival_s: f64,
+    pub mega: bool,
+    pub state: RequestState,
+    /// Tokens already generated (nonzero after an eviction).
+    pub generated: u32,
+    /// Instance holding this request's evicted KV, if any.
+    pub evicted_from: Option<crate::backend::InstanceId>,
+    /// First-token timestamp, once produced.
+    pub first_token_s: Option<f64>,
+    /// Completion timestamp.
+    pub completed_s: Option<f64>,
+}
+
+impl Request {
+    pub fn from_trace(id: u64, t: &TraceRequest) -> Self {
+        Request {
+            id,
+            model: t.model,
+            class: t.class,
+            slo_s: t.slo_s,
+            input_tokens: t.input_tokens,
+            output_tokens_hidden: t.output_tokens,
+            arrival_s: t.arrival_s,
+            mega: t.mega,
+            state: RequestState::Waiting,
+            generated: 0,
+            evicted_from: None,
+            first_token_s: None,
+            completed_s: None,
+        }
+    }
+
+    /// Absolute deadline for the first token.
+    pub fn deadline(&self) -> f64 {
+        self.arrival_s + self.slo_s
+    }
+
+    /// TTFT if the first token has been produced.
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_s.map(|t| t - self.arrival_s)
+    }
+
+    /// Did the request meet its TTFT SLO? Unfinished requests count as
+    /// violations once `now` passes the deadline.
+    pub fn slo_met(&self, now: f64) -> Option<bool> {
+        match self.ttft() {
+            Some(t) => Some(t <= self.slo_s),
+            None if now > self.deadline() => Some(false),
+            None => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(arrival: f64, slo: f64) -> Request {
+        Request::from_trace(
+            1,
+            &TraceRequest {
+                arrival_s: arrival,
+                model: ModelId(0),
+                class: SloClass::Interactive,
+                slo_s: slo,
+                input_tokens: 100,
+                output_tokens: 50,
+                mega: false,
+            },
+        )
+    }
+
+    #[test]
+    fn deadline_is_arrival_plus_slo() {
+        let r = mk(10.0, 20.0);
+        assert_eq!(r.deadline(), 30.0);
+    }
+
+    #[test]
+    fn ttft_and_slo() {
+        let mut r = mk(10.0, 20.0);
+        assert_eq!(r.ttft(), None);
+        assert_eq!(r.slo_met(15.0), None);
+        assert_eq!(r.slo_met(31.0), Some(false));
+        r.first_token_s = Some(25.0);
+        assert_eq!(r.ttft(), Some(15.0));
+        assert_eq!(r.slo_met(100.0), Some(true));
+        r.first_token_s = Some(35.0);
+        assert_eq!(r.slo_met(100.0), Some(false));
+    }
+
+    #[test]
+    fn from_trace_copies_fields() {
+        let r = mk(1.0, 20.0);
+        assert_eq!(r.state, RequestState::Waiting);
+        assert_eq!(r.input_tokens, 100);
+        assert_eq!(r.output_tokens_hidden, 50);
+        assert_eq!(r.generated, 0);
+    }
+}

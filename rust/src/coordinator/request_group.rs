@@ -1,0 +1,365 @@
+//! Request groups (§4, Definition 4.1, Algorithm 1).
+//!
+//! Each group collects requests with homogeneous performance
+//! characteristics — model type, SLO value, and token distribution. Groups
+//! are created by k-means over numeric features within each model
+//! partition, then large groups are split to at most δ × avg_batch_size
+//! members. Requests within a group are served FCFS.
+
+use std::collections::VecDeque;
+
+use crate::backend::ModelId;
+use crate::coordinator::request::Request;
+use crate::util::{kmeans::kmeans, Rng};
+use crate::workload::SloClass;
+
+/// Identifier of a request group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GroupId(pub u64);
+
+/// A collection of homogeneous requests, FCFS-ordered.
+#[derive(Debug, Clone)]
+pub struct RequestGroup {
+    pub id: GroupId,
+    pub model: ModelId,
+    pub class: SloClass,
+    /// Tightest SLO among members (the group's binding constraint).
+    pub slo_s: f64,
+    /// Earliest member arrival (deadline anchor for the group).
+    pub earliest_arrival_s: f64,
+    /// Member request ids in FCFS order.
+    pub members: VecDeque<u64>,
+    /// Whether members are mega prompts (distinct token distribution —
+    /// kept separate so the RWT estimator sees the right moments, §8.3).
+    pub mega: bool,
+}
+
+impl RequestGroup {
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Group deadline: earliest member arrival + group SLO.
+    pub fn deadline(&self) -> f64 {
+        self.earliest_arrival_s + self.slo_s
+    }
+}
+
+/// Groups requests per §4 Algorithm 1. `delta` is the group-size multiple
+/// of the average batch size (δ = 4 default per §8.3).
+#[derive(Debug)]
+pub struct Grouper {
+    pub delta: f64,
+    pub avg_batch_size: u32,
+    next_id: u64,
+    rng: Rng,
+}
+
+impl Grouper {
+    pub fn new(delta: f64, avg_batch_size: u32, seed: u64) -> Self {
+        Grouper {
+            delta,
+            avg_batch_size,
+            next_id: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn max_group_size(&self) -> usize {
+        ((self.avg_batch_size as f64 * self.delta).ceil() as usize).max(1)
+    }
+
+    fn fresh_id(&mut self) -> GroupId {
+        let id = GroupId(self.next_id);
+        self.next_id += 1;
+        id
+    }
+
+    /// Algorithm 1: k-means clustering over request features, then split
+    /// oversized groups in half until all fit δ × avg_batch_size.
+    ///
+    /// Features: SLO value (log-scaled — 20 s vs 1 h differ by orders of
+    /// magnitude), input length, mega flag. Model identity is a hard
+    /// partition (a group maps to exactly one set of weights to swap in).
+    pub fn regroup(&mut self, requests: &[&Request]) -> Vec<RequestGroup> {
+        let mut groups: Vec<RequestGroup> = Vec::new();
+        // Hard partition by model.
+        let mut models: Vec<ModelId> = requests.iter().map(|r| r.model).collect();
+        models.sort();
+        models.dedup();
+        for model in models {
+            let subset: Vec<&Request> = requests
+                .iter()
+                .copied()
+                .filter(|r| r.model == model)
+                .collect();
+            groups.extend(self.group_one_model(model, &subset));
+        }
+        groups
+    }
+
+    fn group_one_model(&mut self, model: ModelId, reqs: &[&Request]) -> Vec<RequestGroup> {
+        if reqs.is_empty() {
+            return Vec::new();
+        }
+        // Feature vectors: (ln slo, input tokens / 100, mega flag * 10).
+        let feats: Vec<Vec<f64>> = reqs
+            .iter()
+            .map(|r| {
+                vec![
+                    r.slo_s.ln() * 3.0,
+                    (r.input_tokens as f64 / 100.0).min(20.0),
+                    if r.mega { 30.0 } else { 0.0 },
+                ]
+            })
+            .collect();
+        // k = number of distinct (class, mega) pairs — the natural cluster
+        // count; k-means then recovers the partition from features alone.
+        let mut keys: Vec<(SloClass, bool)> = reqs.iter().map(|r| (r.class, r.mega)).collect();
+        keys.sort();
+        keys.dedup();
+        let k = keys.len().max(1);
+        let km = kmeans(&feats, k, 30, &mut self.rng);
+
+        let mut clusters: Vec<Vec<&Request>> = vec![Vec::new(); km.centroids.len()];
+        for (i, &a) in km.assignment.iter().enumerate() {
+            clusters[a].push(reqs[i]);
+        }
+
+        let cap = self.max_group_size();
+        let mut out = Vec::new();
+        for cluster in clusters.into_iter().filter(|c| !c.is_empty()) {
+            // FCFS within the group: order members by arrival.
+            let mut members: Vec<&Request> = cluster;
+            members.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+            // Split-half until under the size cap (Algorithm 1 lines 3-6).
+            let mut stack = vec![members];
+            while let Some(chunk) = stack.pop() {
+                if chunk.len() > cap {
+                    let mid = chunk.len() / 2;
+                    let (a, b) = chunk.split_at(mid);
+                    stack.push(b.to_vec());
+                    stack.push(a.to_vec());
+                } else {
+                    out.push(self.build_group(model, &chunk));
+                }
+            }
+        }
+        // Deterministic ordering for downstream reproducibility.
+        out.sort_by(|a, b| {
+            a.deadline()
+                .partial_cmp(&b.deadline())
+                .unwrap()
+                .then(a.id.0.cmp(&b.id.0))
+        });
+        out
+    }
+
+    fn build_group(&mut self, model: ModelId, members: &[&Request]) -> RequestGroup {
+        let slo_s = members.iter().map(|r| r.slo_s).fold(f64::INFINITY, f64::min);
+        let earliest = members
+            .iter()
+            .map(|r| r.arrival_s)
+            .fold(f64::INFINITY, f64::min);
+        let class = members[0].class;
+        let mega = members.iter().filter(|r| r.mega).count() * 2 > members.len();
+        RequestGroup {
+            id: self.fresh_id(),
+            model,
+            class,
+            slo_s,
+            earliest_arrival_s: earliest,
+            members: members.iter().map(|r| r.id).collect(),
+            mega,
+        }
+    }
+
+    /// Incremental classification (§4, Handling New Incoming Requests):
+    /// place a new request into an existing compatible group with space,
+    /// else mint a new group for it.
+    pub fn classify(
+        &mut self,
+        req: &Request,
+        groups: &mut Vec<RequestGroup>,
+    ) -> GroupId {
+        let cap = self.max_group_size();
+        if let Some(g) = groups.iter_mut().find(|g| {
+            g.model == req.model
+                && g.class == req.class
+                && g.mega == req.mega
+                && g.len() < cap
+        }) {
+            g.members.push_back(req.id);
+            g.slo_s = g.slo_s.min(req.slo_s);
+            g.earliest_arrival_s = g.earliest_arrival_s.min(req.arrival_s);
+            return g.id;
+        }
+        let g = RequestGroup {
+            id: self.fresh_id(),
+            model: req.model,
+            class: req.class,
+            slo_s: req.slo_s,
+            earliest_arrival_s: req.arrival_s,
+            members: VecDeque::from([req.id]),
+            mega: req.mega,
+        };
+        let id = g.id;
+        groups.push(g);
+        id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TraceRequest;
+
+    fn mk(id: u64, model: u32, class: SloClass, arrival: f64, mega: bool) -> Request {
+        let mut r = Request::from_trace(
+            id,
+            &TraceRequest {
+                arrival_s: arrival,
+                model: ModelId(model),
+                class,
+                slo_s: class.slo_s(),
+                input_tokens: if mega { 2000 } else { 150 },
+                output_tokens: 100,
+                mega,
+            },
+        );
+        r.id = id;
+        r
+    }
+
+    #[test]
+    fn groups_partition_by_model() {
+        let mut g = Grouper::new(4.0, 16, 1);
+        let reqs: Vec<Request> = (0..40)
+            .map(|i| mk(i, (i % 2) as u32, SloClass::Batch1, i as f64, false))
+            .collect();
+        let refs: Vec<&Request> = reqs.iter().collect();
+        let groups = g.regroup(&refs);
+        for grp in &groups {
+            for &m in &grp.members {
+                assert_eq!(reqs[m as usize].model, grp.model);
+            }
+        }
+        let models: std::collections::HashSet<_> = groups.iter().map(|g| g.model).collect();
+        assert_eq!(models.len(), 2);
+    }
+
+    #[test]
+    fn groups_separate_slo_classes() {
+        let mut g = Grouper::new(4.0, 16, 2);
+        let mut reqs = Vec::new();
+        for i in 0..30 {
+            reqs.push(mk(i, 0, SloClass::Interactive, i as f64, false));
+        }
+        for i in 30..60 {
+            reqs.push(mk(i, 0, SloClass::Batch2, i as f64, false));
+        }
+        let refs: Vec<&Request> = reqs.iter().collect();
+        let groups = g.regroup(&refs);
+        for grp in &groups {
+            let classes: std::collections::HashSet<_> = grp
+                .members
+                .iter()
+                .map(|&m| reqs[m as usize].class)
+                .collect();
+            assert_eq!(classes.len(), 1, "group mixes SLO classes");
+        }
+    }
+
+    #[test]
+    fn oversized_groups_split() {
+        let mut g = Grouper::new(2.0, 8, 3); // cap = 16
+        let reqs: Vec<Request> = (0..100)
+            .map(|i| mk(i, 0, SloClass::Batch1, i as f64, false))
+            .collect();
+        let refs: Vec<&Request> = reqs.iter().collect();
+        let groups = g.regroup(&refs);
+        assert!(groups.iter().all(|g| g.len() <= 16));
+        let total: usize = groups.iter().map(|g| g.len()).sum();
+        assert_eq!(total, 100, "no request lost in splitting");
+    }
+
+    #[test]
+    fn members_fcfs_within_group() {
+        let mut g = Grouper::new(4.0, 64, 4);
+        let reqs: Vec<Request> = (0..20)
+            .map(|i| mk(i, 0, SloClass::Batch1, (20 - i) as f64, false))
+            .collect();
+        let refs: Vec<&Request> = reqs.iter().collect();
+        let groups = g.regroup(&refs);
+        for grp in &groups {
+            let arrivals: Vec<f64> = grp
+                .members
+                .iter()
+                .map(|&m| reqs[m as usize].arrival_s)
+                .collect();
+            assert!(arrivals.windows(2).all(|w| w[1] >= w[0]));
+        }
+    }
+
+    #[test]
+    fn mega_prompts_isolated() {
+        let mut g = Grouper::new(4.0, 16, 5);
+        let mut reqs = Vec::new();
+        for i in 0..20 {
+            reqs.push(mk(i, 0, SloClass::Batch1, i as f64, false));
+        }
+        for i in 20..30 {
+            reqs.push(mk(i, 0, SloClass::Batch1, i as f64, true));
+        }
+        let refs: Vec<&Request> = reqs.iter().collect();
+        let groups = g.regroup(&refs);
+        for grp in &groups {
+            let megas: std::collections::HashSet<_> = grp
+                .members
+                .iter()
+                .map(|&m| reqs[m as usize].mega)
+                .collect();
+            assert_eq!(megas.len(), 1, "group mixes mega and regular prompts");
+        }
+    }
+
+    #[test]
+    fn classify_joins_compatible_group() {
+        let mut g = Grouper::new(4.0, 16, 6);
+        let mut groups = Vec::new();
+        let a = mk(0, 0, SloClass::Batch1, 0.0, false);
+        let id_a = g.classify(&a, &mut groups);
+        let b = mk(1, 0, SloClass::Batch1, 1.0, false);
+        let id_b = g.classify(&b, &mut groups);
+        assert_eq!(id_a, id_b);
+        let c = mk(2, 1, SloClass::Batch1, 2.0, false);
+        let id_c = g.classify(&c, &mut groups);
+        assert_ne!(id_a, id_c, "different model → different group");
+        assert_eq!(groups.len(), 2);
+    }
+
+    #[test]
+    fn classify_respects_size_cap() {
+        let mut g = Grouper::new(1.0, 2, 7); // cap = 2
+        let mut groups = Vec::new();
+        for i in 0..5 {
+            let r = mk(i, 0, SloClass::Batch1, i as f64, false);
+            g.classify(&r, &mut groups);
+        }
+        assert_eq!(groups.len(), 3);
+        assert!(groups.iter().all(|g| g.len() <= 2));
+    }
+
+    #[test]
+    fn group_deadline_uses_earliest_member() {
+        let mut g = Grouper::new(4.0, 16, 8);
+        let mut groups = Vec::new();
+        g.classify(&mk(0, 0, SloClass::Batch1, 5.0, false), &mut groups);
+        g.classify(&mk(1, 0, SloClass::Batch1, 2.0, false), &mut groups);
+        assert_eq!(groups[0].deadline(), 2.0 + 60.0);
+    }
+}

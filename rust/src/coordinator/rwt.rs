@@ -1,0 +1,369 @@
+//! Request Waiting Time (RWT) estimator — §6 and Appendix A.1.
+//!
+//! Completion time of request q:   C_q = W_q + P + D_q            (Eq. 1)
+//! Waiting time:                   W_q = Σ_{i<q} O_i / Θ          (Eq. 2)
+//! Output tokens ahead:            Σ O_i ~ N((q-1)μ_o,(q-1)σ_o²)  (Eq. 3)
+//! Decode time:                    D_q = O_q · ε · d              (Eq. 4)
+//! Group completion:               C   = max_q C_q                (Eq. 5)
+//!
+//! Token generation throughput Θ = B/(δ·ε) with B set by GPU token
+//! capacity over the mean per-request footprint (Appendix Eqs. 15–16).
+//! O_q is unknown a priori: per-group (μ_o, σ_o) come from workload
+//! profiling; the single-request decode term uses the model's max output
+//! bound — conservative for short queues, with the error vanishing as the
+//! queue grows and W dominates (§6, Fig. 18).
+
+use std::collections::HashMap;
+
+use crate::backend::{ModelId, PerfModel};
+use crate::coordinator::request_group::RequestGroup;
+use crate::workload::{SloClass, Trace};
+
+/// Per-(model, class, mega) output/input token moments — the product of
+/// QLM's offline *workload profiling* step (§6).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadProfile {
+    pub mu_in: f64,
+    pub sigma_in: f64,
+    pub mu_out: f64,
+    pub sigma_out: f64,
+    /// Maximum output tokens the model will generate (generation cap) —
+    /// the conservative single-request decode bound.
+    pub max_out: f64,
+}
+
+impl WorkloadProfile {
+    /// Mean tokens resident per request (prompt + generated KV).
+    pub fn mean_tokens_per_req(&self) -> f64 {
+        self.mu_in + self.mu_out
+    }
+}
+
+/// Profile table keyed by (model, class, mega).
+#[derive(Debug, Clone, Default)]
+pub struct ProfileTable {
+    map: HashMap<(ModelId, SloClass, bool), WorkloadProfile>,
+}
+
+impl ProfileTable {
+    /// Workload profiling: sample moments from a trace (the paper samples
+    /// the request history dataset per request group).
+    pub fn from_trace(trace: &Trace) -> Self {
+        let mut acc: HashMap<(ModelId, SloClass, bool), (Vec<f64>, Vec<f64>)> = HashMap::new();
+        for r in &trace.requests {
+            let e = acc.entry((r.model, r.class, r.mega)).or_default();
+            e.0.push(r.input_tokens as f64);
+            e.1.push(r.output_tokens as f64);
+        }
+        let mut map = HashMap::new();
+        for (k, (ins, outs)) in acc {
+            map.insert(
+                k,
+                WorkloadProfile {
+                    mu_in: crate::util::mean(&ins),
+                    sigma_in: crate::util::stddev(&ins),
+                    mu_out: crate::util::mean(&outs),
+                    sigma_out: crate::util::stddev(&outs),
+                    max_out: outs.iter().cloned().fold(0.0, f64::max),
+                },
+            );
+        }
+        ProfileTable { map }
+    }
+
+    pub fn insert(&mut self, model: ModelId, class: SloClass, mega: bool, p: WorkloadProfile) {
+        self.map.insert((model, class, mega), p);
+    }
+
+    pub fn get(&self, model: ModelId, class: SloClass, mega: bool) -> WorkloadProfile {
+        if let Some(p) = self.map.get(&(model, class, mega)) {
+            return *p;
+        }
+        // Fall back to any profile for the model, then to a generic prior.
+        self.map
+            .iter()
+            .find(|((m, _, _), _)| *m == model)
+            .map(|(_, p)| *p)
+            .unwrap_or(WorkloadProfile {
+                mu_in: 161.0,
+                sigma_in: 200.0,
+                mu_out: 338.0,
+                sigma_out: 280.0,
+                max_out: 2048.0,
+            })
+    }
+}
+
+/// Estimate for one request group's position in a virtual queue.
+#[derive(Debug, Clone, Copy)]
+pub struct GroupEstimate {
+    /// Mean waiting time until the group reaches the head (starts serving).
+    pub wait_mean_s: f64,
+    /// Std of the waiting time (CLT over output tokens ahead, Eq. 3).
+    pub wait_std_s: f64,
+    /// Mean time until the whole group completes (Eq. 5 aggregate).
+    pub completion_mean_s: f64,
+    /// Conservative (upper-bound) completion incl. the max-output decode
+    /// term — what the scheduler compares against SLOs.
+    pub completion_bound_s: f64,
+    /// Swap latency charged before this group starts, if any.
+    pub swap_s: f64,
+}
+
+/// The RWT estimator: stateless over (perf, profiles); all methods are
+/// pure so the global scheduler can evaluate candidate orderings cheaply.
+#[derive(Debug, Clone)]
+pub struct RwtEstimator {
+    pub profiles: ProfileTable,
+}
+
+impl RwtEstimator {
+    pub fn new(profiles: ProfileTable) -> Self {
+        RwtEstimator { profiles }
+    }
+
+    /// Θ for a group's steady state on `perf` (Appendix Eqs. 15–16).
+    pub fn throughput(&self, perf: &PerfModel, profile: &WorkloadProfile) -> f64 {
+        perf.steady_throughput(profile.mean_tokens_per_req())
+    }
+
+    /// Eq. 2/3 — waiting time distribution for a request with `q_ahead`
+    /// requests ahead of it in the queue: mean and std in seconds.
+    ///
+    /// Waiting counts *pending* output tokens (§6): the first
+    /// steady-batch-worth of requests ahead are already in the running
+    /// batch and do not queue, so they are excluded.
+    pub fn request_wait(
+        &self,
+        q_ahead: usize,
+        perf: &PerfModel,
+        profile: &WorkloadProfile,
+    ) -> (f64, f64) {
+        let theta = self.throughput(perf, profile);
+        let b = perf.steady_batch(profile.mean_tokens_per_req()) as usize;
+        let pending = q_ahead.saturating_sub(b) as f64;
+        let mean = pending * profile.mu_out / theta;
+        let std = pending.sqrt() * profile.sigma_out / theta;
+        (mean, std)
+    }
+
+    /// Eq. 4 — conservative decode-time bound for a single request.
+    pub fn decode_bound(&self, perf: &PerfModel, profile: &WorkloadProfile) -> f64 {
+        profile.max_out * perf.epsilon * perf.decode_s_per_token
+    }
+
+    /// Mean service time to drain a whole group of `n` requests: the
+    /// group's total expected output tokens over Θ (waiting-time view of
+    /// the group for queue positions behind it).
+    pub fn group_service(
+        &self,
+        group: &RequestGroup,
+        perf: &PerfModel,
+    ) -> (f64, f64) {
+        let p = self.profiles.get(group.model, group.class, group.mega);
+        let theta = self.throughput(perf, &p);
+        let n = group.len() as f64;
+        // Evicted members carry partial progress; we ignore that here —
+        // conservative (overestimates remaining tokens).
+        let mean = n * p.mu_out / theta;
+        let std = n.sqrt() * p.sigma_out / theta;
+        (mean, std)
+    }
+
+    /// Walk a virtual-queue ordering and produce per-group estimates
+    /// (Eq. 10's wt_{g,j} terms): accumulated waiting = service of groups
+    /// ahead + swap times at model transitions; completion adds the
+    /// group's own service plus prefill and the conservative decode bound.
+    pub fn estimate_queue(
+        &self,
+        order: &[&RequestGroup],
+        perf: &PerfModel,
+        active_model: Option<ModelId>,
+        swap_time_for: impl Fn(ModelId) -> f64,
+    ) -> Vec<GroupEstimate> {
+        let mut out = Vec::with_capacity(order.len());
+        let mut wait_mean = 0.0;
+        let mut wait_var: f64 = 0.0;
+        let mut current = active_model;
+        for g in order {
+            let p = self.profiles.get(g.model, g.class, g.mega);
+            let swap_s = if current != Some(g.model) {
+                swap_time_for(g.model)
+            } else {
+                0.0
+            };
+            current = Some(g.model);
+            wait_mean += swap_s;
+            let (svc_mean, svc_std) = self.group_service(g, perf);
+            let start_mean = wait_mean;
+            let start_std = wait_var.max(0.0_f64).sqrt();
+            let completion_mean = start_mean + perf.prefill_s + svc_mean;
+            let completion_bound = completion_mean
+                + 2.0 * (wait_var + svc_std * svc_std).sqrt()
+                + self.decode_bound(perf, &p);
+            out.push(GroupEstimate {
+                wait_mean_s: start_mean,
+                wait_std_s: start_std,
+                completion_mean_s: completion_mean,
+                completion_bound_s: completion_bound,
+                swap_s,
+            });
+            wait_mean += svc_mean + perf.prefill_s;
+            wait_var += svc_std * svc_std;
+        }
+        out
+    }
+
+    /// Does the ordering violate any group SLO *now*? (§4, Handling New
+    /// Incoming Requests: the estimator triggers the global scheduler.)
+    /// `now` converts group deadlines to remaining budgets.
+    pub fn detect_violation(
+        &self,
+        order: &[&RequestGroup],
+        perf: &PerfModel,
+        active_model: Option<ModelId>,
+        swap_time_for: impl Fn(ModelId) -> f64,
+        now: f64,
+    ) -> bool {
+        let est = self.estimate_queue(order, perf, active_model, swap_time_for);
+        order.iter().zip(&est).any(|(g, e)| {
+            let budget = g.deadline() - now;
+            // Conservative (§6): trigger on the upper bound, not the mean.
+            e.completion_bound_s > budget
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{GpuKind, ModelCatalog};
+    use crate::workload::WorkloadSpec;
+    use std::collections::VecDeque;
+
+    fn perf() -> PerfModel {
+        let c = ModelCatalog::paper();
+        PerfModel::profile(c.get(ModelId(0)), GpuKind::A100, 161.0)
+    }
+
+    fn profile() -> WorkloadProfile {
+        WorkloadProfile {
+            mu_in: 161.0,
+            sigma_in: 150.0,
+            mu_out: 338.0,
+            sigma_out: 250.0,
+            max_out: 2048.0,
+        }
+    }
+
+    fn mk_group(id: u64, model: u32, n: usize, arrival: f64, slo: f64) -> RequestGroup {
+        RequestGroup {
+            id: crate::coordinator::request_group::GroupId(id),
+            model: ModelId(model),
+            class: SloClass::Batch1,
+            slo_s: slo,
+            earliest_arrival_s: arrival,
+            members: VecDeque::from_iter(0..n as u64),
+            mega: false,
+        }
+    }
+
+    #[test]
+    fn wait_linear_in_pending_position() {
+        // Insight #1 / Fig. 3: waiting time grows linearly with the number
+        // of *pending* requests ahead (the in-flight batch doesn't queue).
+        let est = RwtEstimator::new(ProfileTable::default());
+        let p = perf();
+        let prof = profile();
+        let b = p.steady_batch(prof.mean_tokens_per_req()) as usize;
+        let (w0, _) = est.request_wait(b, &p, &prof);
+        assert_eq!(w0, 0.0, "requests inside the running batch don't wait");
+        let (w1, _) = est.request_wait(b + 100, &p, &prof);
+        let (w2, _) = est.request_wait(b + 200, &p, &prof);
+        assert!((w2 / w1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wait_std_grows_sublinearly() {
+        // CLT: std ∝ √pending, so relative error shrinks with queue length.
+        let est = RwtEstimator::new(ProfileTable::default());
+        let p = perf();
+        let prof = profile();
+        let b = p.steady_batch(prof.mean_tokens_per_req()) as usize;
+        let (m1, s1) = est.request_wait(b + 16, &p, &prof);
+        let (m2, s2) = est.request_wait(b + 256, &p, &prof);
+        assert!(s2 / m2 < s1 / m1);
+        assert!((s2 / s1 - 4.0).abs() < 1e-9); // √(256/16) = 4
+    }
+
+    #[test]
+    fn profiles_from_trace_reasonable() {
+        let spec = WorkloadSpec::w_a(ModelId(0), 100.0, 3500);
+        let trace = Trace::generate(&spec, 1);
+        let t = ProfileTable::from_trace(&trace);
+        let p = t.get(ModelId(0), SloClass::Interactive, false);
+        assert!((100.0..260.0).contains(&p.mu_in), "{}", p.mu_in);
+        assert!((250.0..430.0).contains(&p.mu_out), "{}", p.mu_out);
+        assert!(p.max_out <= 2048.0);
+    }
+
+    #[test]
+    fn profile_fallback_for_unknown_key() {
+        let t = ProfileTable::default();
+        let p = t.get(ModelId(7), SloClass::Batch2, true);
+        assert!(p.mu_out > 0.0);
+    }
+
+    #[test]
+    fn queue_estimates_accumulate_and_charge_swaps() {
+        let spec = WorkloadSpec::w_a(ModelId(0), 100.0, 2000);
+        let trace = Trace::generate(&spec, 2);
+        let est = RwtEstimator::new(ProfileTable::from_trace(&trace));
+        let p = perf();
+        let g1 = mk_group(1, 0, 32, 0.0, 60.0);
+        let g2 = mk_group(2, 1, 32, 0.0, 3600.0);
+        let g3 = mk_group(3, 0, 32, 0.0, 3600.0);
+        let order = [&g1, &g2, &g3];
+        let swap = |_m: ModelId| 5.0;
+        let es = est.estimate_queue(&order, &p, Some(ModelId(0)), swap);
+        // Group 1: active model matches, no swap.
+        assert_eq!(es[0].swap_s, 0.0);
+        assert_eq!(es[0].wait_mean_s, 0.0);
+        // Group 2: model switch charged.
+        assert_eq!(es[1].swap_s, 5.0);
+        assert!(es[1].wait_mean_s > es[0].wait_mean_s);
+        // Group 3: switch back charged, waits behind both.
+        assert_eq!(es[2].swap_s, 5.0);
+        assert!(es[2].wait_mean_s > es[1].wait_mean_s);
+        // Bound dominates mean (conservative).
+        for e in &es {
+            assert!(e.completion_bound_s > e.completion_mean_s);
+        }
+    }
+
+    #[test]
+    fn violation_detected_for_tight_slo_behind_long_queue() {
+        let spec = WorkloadSpec::w_a(ModelId(0), 100.0, 2000);
+        let trace = Trace::generate(&spec, 3);
+        let est = RwtEstimator::new(ProfileTable::from_trace(&trace));
+        let p = perf();
+        let big = mk_group(1, 0, 256, 0.0, 3600.0);
+        let tight = mk_group(2, 0, 4, 0.0, 5.0); // 5s SLO behind 256 requests
+        let ok_order = [&tight, &big];
+        let bad_order = [&big, &tight];
+        let swap = |_m: ModelId| 0.0;
+        assert!(!est.detect_violation(&ok_order, &p, Some(ModelId(0)), swap, 0.0)
+            || est.detect_violation(&bad_order, &p, Some(ModelId(0)), swap, 0.0));
+        assert!(est.detect_violation(&bad_order, &p, Some(ModelId(0)), swap, 0.0));
+    }
+
+    #[test]
+    fn throughput_uses_steady_batch() {
+        let est = RwtEstimator::new(ProfileTable::default());
+        let p = perf();
+        let prof = profile();
+        let theta = est.throughput(&p, &prof);
+        // Mistral on A100: hundreds-to-thousands of tokens/s regime.
+        assert!(theta > 500.0 && theta < 50_000.0, "theta={theta}");
+    }
+}

@@ -1,0 +1,659 @@
+//! The Global Scheduler (§7): assigns request groups to virtual queues
+//! and orders them to maximize SLO attainment, given RWT estimates.
+//!
+//! Two solver paths:
+//!
+//! * **Exact MILP** — the paper's formulation (Eqs. 6–13): binary
+//!   assignment x_{i,j} of groups to queue positions, model values m_j
+//!   (Eq. 7), big-M switch indicators t_j (Eq. 9), accumulated waiting
+//!   times wt_j (Eq. 10), and penalties p_j = wt_j − slo_j (Eq. 11),
+//!   minimizing total violation (Eq. 13). SLO satisfaction (Eq. 12) is
+//!   soft-constrained through violation variables v_j ≥ p_j so the solver
+//!   still returns the least-bad ordering when demand exceeds capacity
+//!   (the paper falls back to EDF/scale-up in that regime, §9).
+//!   The model-dependent swap time in Eq. 10's product term is
+//!   conservatively uniformized to max_i S_i to stay linear (the exact
+//!   product would need n² extra binaries).
+//!
+//! * **Greedy heuristic** — deadline-ordered assignment with model
+//!   affinity, linear in groups; this is what scales to the 400K-request
+//!   queues of Fig. 20 and is the default for large instances (Design
+//!   Principle #1).
+
+use std::collections::HashMap;
+
+use crate::backend::{InstanceId, ModelId, PerfModel};
+use crate::coordinator::request_group::{GroupId, RequestGroup};
+use crate::coordinator::rwt::RwtEstimator;
+use crate::solver::{Cmp, Lp, Milp, MilpResult};
+
+/// Scheduler's view of one serving instance.
+#[derive(Debug, Clone)]
+pub struct InstanceView {
+    pub id: InstanceId,
+    pub active_model: Option<ModelId>,
+    /// Profiled perf per servable model (absent ⇒ model can't run here,
+    /// e.g. Llama-70B on an A10 — hardware heterogeneity, §8.3).
+    pub perf_for: HashMap<ModelId, PerfModel>,
+    /// Swap-in latency per model from its current tier.
+    pub swap_time: HashMap<ModelId, f64>,
+    /// Group currently executing — pinned (no preemptive migration, §5).
+    pub executing: Option<GroupId>,
+}
+
+impl InstanceView {
+    pub fn can_serve(&self, m: ModelId) -> bool {
+        self.perf_for.contains_key(&m)
+    }
+
+    fn swap_s(&self, m: ModelId) -> f64 {
+        self.swap_time.get(&m).copied().unwrap_or(0.0)
+    }
+}
+
+/// Which solver the global scheduler uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    Greedy,
+    /// Exact per-queue MILP refinement after greedy assignment.
+    ExactMilp,
+    /// Greedy, with MILP refinement only for queues small enough.
+    Auto,
+}
+
+/// Scheduler configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerConfig {
+    pub solver: SolverKind,
+    /// Max groups per queue for the exact MILP path.
+    pub milp_max_groups: usize,
+    pub node_limit: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            solver: SolverKind::Auto,
+            milp_max_groups: 6,
+            node_limit: 20_000,
+        }
+    }
+}
+
+/// Solve statistics for overhead studies (Fig. 20).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SolveStats {
+    pub groups: usize,
+    pub milp_nodes: usize,
+    pub used_milp: bool,
+}
+
+/// Scheduler output: per-instance virtual-queue orderings.
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    pub orders: HashMap<InstanceId, Vec<GroupId>>,
+    /// True iff every group's estimated completion meets its SLO.
+    pub feasible: bool,
+    /// Σ max(0, estimated completion − budget) across groups, seconds.
+    pub total_penalty_s: f64,
+    pub stats: SolveStats,
+}
+
+/// The global scheduler.
+#[derive(Debug, Clone)]
+pub struct GlobalScheduler {
+    pub cfg: SchedulerConfig,
+    pub estimator: RwtEstimator,
+}
+
+impl GlobalScheduler {
+    pub fn new(cfg: SchedulerConfig, estimator: RwtEstimator) -> Self {
+        GlobalScheduler { cfg, estimator }
+    }
+
+    /// Penalty of an ordering on one instance: Σ max(0, completion − budget).
+    pub fn queue_penalty(
+        &self,
+        order: &[&RequestGroup],
+        view: &InstanceView,
+        now: f64,
+    ) -> f64 {
+        if order.is_empty() {
+            return 0.0;
+        }
+        // Perf is per-model; use the head group's model for Θ (groups on
+        // one queue in one walk segment share the instance's device).
+        let Some(perf) = view.perf_for.get(&order[0].model) else {
+            return f64::INFINITY;
+        };
+        let est = self.estimator.estimate_queue(
+            order,
+            perf,
+            view.active_model,
+            |m| view.swap_s(m),
+        );
+        order
+            .iter()
+            .zip(&est)
+            .map(|(g, e)| (e.completion_mean_s - (g.deadline() - now)).max(0.0))
+            .sum()
+    }
+
+    /// Model-affinity EDF ordering of one queue's groups: cluster by
+    /// model, order clusters by earliest deadline, EDF within cluster —
+    /// the Fig. 5 "Oracle" structure that avoids swap thrashing.
+    pub fn affinity_order(groups: &mut Vec<&RequestGroup>, active: Option<ModelId>) {
+        // Cluster key: model; cluster deadline: min member deadline.
+        let mut cluster_deadline: HashMap<ModelId, f64> = HashMap::new();
+        for g in groups.iter() {
+            let e = cluster_deadline.entry(g.model).or_insert(f64::INFINITY);
+            *e = e.min(g.deadline());
+        }
+        groups.sort_by(|a, b| {
+            let ca = cluster_deadline[&a.model];
+            let cb = cluster_deadline[&b.model];
+            // Active-model cluster first on deadline ties (swap-free).
+            let aa = (Some(a.model) != active) as u8;
+            let ab = (Some(b.model) != active) as u8;
+            ca.partial_cmp(&cb)
+                .unwrap()
+                .then(a.model.cmp(&b.model))
+                .then(aa.cmp(&ab))
+                .then(a.deadline().partial_cmp(&b.deadline()).unwrap())
+                .then(a.id.cmp(&b.id))
+        });
+    }
+
+    /// Main entry: assign + order all schedulable groups.
+    pub fn schedule(
+        &self,
+        groups: &[RequestGroup],
+        instances: &[InstanceView],
+        now: f64,
+    ) -> Assignment {
+        let by_id: HashMap<GroupId, &RequestGroup> =
+            groups.iter().map(|g| (g.id, g)).collect();
+        let mut orders: HashMap<InstanceId, Vec<GroupId>> = HashMap::new();
+        let mut stats = SolveStats {
+            groups: groups.len(),
+            ..Default::default()
+        };
+
+        // 1. Pin executing groups to their instances' heads.
+        let mut pinned: HashMap<GroupId, InstanceId> = HashMap::new();
+        for v in instances {
+            let order = orders.entry(v.id).or_default();
+            if let Some(g) = v.executing {
+                if by_id.contains_key(&g) {
+                    order.push(g);
+                    pinned.insert(g, v.id);
+                }
+            }
+        }
+
+        // 2. Deadline-ordered greedy assignment of the rest.
+        let mut todo: Vec<&RequestGroup> = groups
+            .iter()
+            .filter(|g| !pinned.contains_key(&g.id))
+            .collect();
+        todo.sort_by(|a, b| {
+            a.deadline()
+                .partial_cmp(&b.deadline())
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+
+        // §Perf: incremental O(G·V) assignment — each candidate append is
+        // priced from cached per-queue state (accumulated wait, tail
+        // model) instead of re-walking the whole queue (which made the
+        // assignment quadratic in groups; see EXPERIMENTS.md §Perf).
+        #[derive(Clone, Copy)]
+        struct QState {
+            wait: f64,
+            tail_model: Option<ModelId>,
+            load: f64,
+        }
+        let mut qstate: HashMap<InstanceId, QState> = instances
+            .iter()
+            .map(|v| {
+                let mut st = QState {
+                    wait: 0.0,
+                    tail_model: v.active_model,
+                    load: 0.0,
+                };
+                // Seed with the pinned executing group, if any.
+                if let Some(gid) = v.executing {
+                    if let Some(g) = by_id.get(&gid) {
+                        if let Some(perf) = v.perf_for.get(&g.model) {
+                            let (svc, _) = self.estimator.group_service(g, perf);
+                            st.wait += svc + perf.prefill_s;
+                            st.tail_model = Some(g.model);
+                            st.load += g.len() as f64;
+                        }
+                    }
+                }
+                (v.id, st)
+            })
+            .collect();
+
+        for g in todo {
+            let mut best: Option<(InstanceId, f64, f64, f64)> = None; // (id, pen, completion, load)
+            for v in instances {
+                let Some(perf) = v.perf_for.get(&g.model) else {
+                    continue;
+                };
+                let st = qstate[&v.id];
+                let swap = if st.tail_model != Some(g.model) {
+                    v.swap_s(g.model)
+                } else {
+                    0.0
+                };
+                let (svc, _) = self.estimator.group_service(g, perf);
+                let completion = st.wait + swap + perf.prefill_s + svc;
+                let pen = (completion - (g.deadline() - now)).max(0.0);
+                let better = match &best {
+                    None => true,
+                    Some((_, bp, bc, bl)) => {
+                        pen < bp - 1e-9
+                            || ((pen - bp).abs() < 1e-9
+                                && (completion < bc - 1e-9
+                                    || ((completion - bc).abs() < 1e-9 && st.load < *bl)))
+                    }
+                };
+                if better {
+                    best = Some((v.id, pen, completion, st.load));
+                }
+            }
+            match best {
+                Some((id, _, completion, _)) => {
+                    orders.get_mut(&id).unwrap().push(g.id);
+                    let st = qstate.get_mut(&id).unwrap();
+                    st.wait = completion;
+                    st.tail_model = Some(g.model);
+                    st.load += g.len() as f64;
+                }
+                None => {
+                    if let Some(v0) = instances.first() {
+                        // No instance can serve this model (misconfigured
+                        // fleet): park it; it will surface as penalty.
+                        orders.get_mut(&v0.id).unwrap().push(g.id);
+                    }
+                }
+            }
+        }
+
+        // 3. Per-queue ordering: affinity-EDF, optionally MILP-refined.
+        let mut total_penalty = 0.0;
+        for v in instances {
+            let ids = orders.get_mut(&v.id).unwrap();
+            let all: Vec<&RequestGroup> =
+                ids.iter().filter_map(|id| by_id.get(id).copied()).collect();
+            let (head, mut rest) = split_pinned(&all, v.executing);
+            Self::affinity_order(&mut rest, v.active_model);
+
+            let use_milp = match self.cfg.solver {
+                SolverKind::Greedy => false,
+                SolverKind::ExactMilp => true,
+                SolverKind::Auto => rest.len() <= self.cfg.milp_max_groups,
+            } && rest.len() >= 2
+                && rest.len() <= self.cfg.milp_max_groups;
+
+            if use_milp {
+                if let Some((order, nodes)) = self.milp_order(&rest, v, now) {
+                    stats.milp_nodes += nodes;
+                    stats.used_milp = true;
+                    // Accept MILP order only if it doesn't regress the
+                    // heuristic (node-limit exhaustion can truncate search).
+                    let full_h: Vec<&RequestGroup> =
+                        head.iter().copied().chain(rest.iter().copied()).collect();
+                    let full_m: Vec<&RequestGroup> = head
+                        .iter()
+                        .copied()
+                        .chain(order.iter().map(|&i| rest[i]))
+                        .collect();
+                    if self.queue_penalty(&full_m, v, now)
+                        <= self.queue_penalty(&full_h, v, now) + 1e-9
+                    {
+                        rest = full_m[head.len()..].to_vec();
+                    }
+                }
+            }
+
+            let full: Vec<&RequestGroup> =
+                head.into_iter().chain(rest.into_iter()).collect();
+            total_penalty += self.queue_penalty(&full, v, now);
+            *ids = full.iter().map(|g| g.id).collect();
+        }
+
+        Assignment {
+            feasible: total_penalty <= 1e-9,
+            total_penalty_s: total_penalty,
+            orders,
+            stats,
+        }
+    }
+
+    /// Exact ordering of `groups` on instance `v` via the §7 MILP.
+    /// Returns the permutation (indices into `groups`) and node count.
+    pub fn milp_order(
+        &self,
+        groups: &[&RequestGroup],
+        v: &InstanceView,
+        now: f64,
+    ) -> Option<(Vec<usize>, usize)> {
+        let n = groups.len();
+        if n == 0 {
+            return Some((Vec::new(), 0));
+        }
+        let perf = v.perf_for.get(&groups[0].model)?;
+        // Per-group constants.
+        let svc: Vec<f64> = groups
+            .iter()
+            .map(|g| {
+                let (m, _) = self.estimator.group_service(g, perf);
+                m + perf.prefill_s
+            })
+            .collect();
+        let budget: Vec<f64> = groups.iter().map(|g| g.deadline() - now).collect();
+        let model_val: Vec<f64> = groups.iter().map(|g| g.model.0 as f64 + 1.0).collect();
+        let active_val = v.active_model.map(|m| m.0 as f64 + 1.0).unwrap_or(0.0);
+        let swap_s = groups
+            .iter()
+            .map(|g| v.swap_s(g.model))
+            .fold(0.0_f64, f64::max); // uniformized S (see module docs)
+        let big_m = model_val.iter().fold(active_val, |a, &b| a.max(b)) + 2.0;
+
+        // Variable layout.
+        let x = |i: usize, j: usize| i * n + j;
+        let m_of = |j: usize| n * n + j;
+        let t_of = |j: usize| n * n + n + j;
+        let w_of = |j: usize| n * n + 2 * n + j;
+        let v_of = |j: usize| n * n + 3 * n + j;
+        let nv = n * n + 4 * n;
+
+        let mut lp = Lp::new(nv);
+        // Objective (Eq. 13): minimize Σ v_j + tiny swap regularizer.
+        let mut obj = vec![0.0; nv];
+        for j in 0..n {
+            obj[v_of(j)] = -1.0;
+            obj[t_of(j)] = -0.001 * swap_s.max(1e-3);
+        }
+        // Tie-break: when several orderings are penalty-free, prefer
+        // placing larger-budget groups later (EDF within feasibility).
+        let max_budget = budget.iter().cloned().fold(1.0_f64, f64::max).max(1.0);
+        for i in 0..n {
+            for j in 0..n {
+                obj[x(i, j)] = 1e-5 * (budget[i] / max_budget) * j as f64 / n as f64;
+            }
+        }
+        lp.set_objective(obj);
+
+        // Eq. 6: assignment bijection.
+        for i in 0..n {
+            let mut row = vec![0.0; nv];
+            for j in 0..n {
+                row[x(i, j)] = 1.0;
+            }
+            lp.add(row, Cmp::Eq, 1.0);
+        }
+        for j in 0..n {
+            let mut row = vec![0.0; nv];
+            for i in 0..n {
+                row[x(i, j)] = 1.0;
+            }
+            lp.add(row, Cmp::Eq, 1.0);
+        }
+        // Eq. 7: m_j = Σ_i model_i x_{i,j}.
+        for j in 0..n {
+            let mut row = vec![0.0; nv];
+            for i in 0..n {
+                row[x(i, j)] = model_val[i];
+            }
+            row[m_of(j)] = -1.0;
+            lp.add(row, Cmp::Eq, 0.0);
+        }
+        // Eq. 9 via big-M: |m_j − m_{j−1}| ≤ M t_j (m_{-1} = active).
+        for j in 0..n {
+            let mut r1 = vec![0.0; nv];
+            let mut r2 = vec![0.0; nv];
+            r1[m_of(j)] = 1.0;
+            r2[m_of(j)] = -1.0;
+            let rhs = if j == 0 { active_val } else { 0.0 };
+            if j > 0 {
+                r1[m_of(j - 1)] = -1.0;
+                r2[m_of(j - 1)] = 1.0;
+            }
+            r1[t_of(j)] = -big_m;
+            r2[t_of(j)] = -big_m;
+            lp.add(r1, Cmp::Le, rhs);
+            lp.add(r2, Cmp::Le, -rhs);
+        }
+        // Eq. 10: w_0 = S·t_0; w_j = w_{j−1} + Σ_i svc_i x_{i,j−1} + S·t_j.
+        for j in 0..n {
+            let mut row = vec![0.0; nv];
+            row[w_of(j)] = 1.0;
+            row[t_of(j)] = -swap_s;
+            if j > 0 {
+                row[w_of(j - 1)] = -1.0;
+                for i in 0..n {
+                    row[x(i, j - 1)] = -svc[i];
+                }
+            }
+            lp.add(row, Cmp::Eq, 0.0);
+        }
+        // Eq. 11/12 softened: w_j + Σ_i (svc_i − budget_i) x_{i,j} − v_j ≤ 0.
+        for j in 0..n {
+            let mut row = vec![0.0; nv];
+            row[w_of(j)] = 1.0;
+            for i in 0..n {
+                row[x(i, j)] = svc[i] - budget[i];
+            }
+            row[v_of(j)] = -1.0;
+            lp.add(row, Cmp::Le, 0.0);
+        }
+
+        let mut binaries: Vec<usize> = (0..n * n).collect();
+        binaries.extend((0..n).map(t_of));
+        let mut milp = Milp::new(lp, binaries);
+        milp.node_limit = self.cfg.node_limit;
+        match milp.solve() {
+            MilpResult::Optimal { x: sol, nodes, .. } => {
+                let mut perm = vec![0usize; n];
+                for j in 0..n {
+                    for i in 0..n {
+                        if sol[x(i, j)] > 0.5 {
+                            perm[j] = i;
+                        }
+                    }
+                }
+                Some((perm, nodes))
+            }
+            MilpResult::Infeasible => None,
+        }
+    }
+}
+
+/// Split a queue into (pinned executing head, reorderable rest).
+fn split_pinned<'a>(
+    all: &[&'a RequestGroup],
+    executing: Option<GroupId>,
+) -> (Vec<&'a RequestGroup>, Vec<&'a RequestGroup>) {
+    let mut head = Vec::new();
+    let mut rest = Vec::new();
+    for &g in all {
+        if Some(g.id) == executing {
+            head.push(g);
+        } else {
+            rest.push(g);
+        }
+    }
+    (head, rest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{GpuKind, ModelCatalog};
+    use crate::coordinator::rwt::ProfileTable;
+    use crate::workload::{SloClass, Trace, WorkloadSpec};
+    use std::collections::VecDeque;
+
+    fn estimator() -> RwtEstimator {
+        let spec = WorkloadSpec::w_a(ModelId(0), 100.0, 2000);
+        let trace = Trace::generate(&spec, 11);
+        RwtEstimator::new(ProfileTable::from_trace(&trace))
+    }
+
+    fn view(id: u32, models: &[u32], active: Option<u32>) -> InstanceView {
+        let catalog = ModelCatalog::paper_multi_model();
+        let mut perf_for = HashMap::new();
+        let mut swap_time = HashMap::new();
+        for &m in models {
+            let p = PerfModel::profile(catalog.get(ModelId(m)), GpuKind::A100, 161.0);
+            perf_for.insert(ModelId(m), p);
+            swap_time.insert(ModelId(m), p.swap_cpu_gpu_s);
+        }
+        InstanceView {
+            id: InstanceId(id),
+            active_model: active.map(ModelId),
+            perf_for,
+            swap_time,
+            executing: None,
+        }
+    }
+
+    fn grp(id: u64, model: u32, n: usize, arrival: f64, slo: f64) -> RequestGroup {
+        RequestGroup {
+            id: GroupId(id),
+            model: ModelId(model),
+            class: if slo <= 20.0 {
+                SloClass::Interactive
+            } else {
+                SloClass::Batch1
+            },
+            slo_s: slo,
+            earliest_arrival_s: arrival,
+            members: VecDeque::from_iter(0..n as u64),
+            mega: false,
+        }
+    }
+
+    #[test]
+    fn affinity_order_groups_same_model_together() {
+        let g1 = grp(1, 0, 8, 0.0, 60.0);
+        let g2 = grp(2, 1, 8, 1.0, 61.0);
+        let g3 = grp(3, 0, 8, 2.0, 62.0);
+        let g4 = grp(4, 1, 8, 3.0, 63.0);
+        let mut v = vec![&g4, &g3, &g2, &g1];
+        GlobalScheduler::affinity_order(&mut v, None);
+        let models: Vec<u32> = v.iter().map(|g| g.model.0).collect();
+        // Same-model groups contiguous ⇒ exactly one transition.
+        let transitions = models.windows(2).filter(|w| w[0] != w[1]).count();
+        assert_eq!(transitions, 1, "order {models:?}");
+    }
+
+    #[test]
+    fn tight_slo_scheduled_ahead() {
+        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
+        let big = grp(1, 0, 200, 0.0, 3600.0);
+        let tight = grp(2, 0, 4, 0.0, 20.0);
+        let groups = vec![big, tight];
+        let views = vec![view(0, &[0], Some(0))];
+        let a = sched.schedule(&groups, &views, 0.0);
+        let order = &a.orders[&InstanceId(0)];
+        assert_eq!(order[0], GroupId(2), "interactive group must lead");
+    }
+
+    #[test]
+    fn multi_instance_load_balances() {
+        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
+        let groups: Vec<RequestGroup> =
+            (0..8).map(|i| grp(i, 0, 64, 0.0, 60.0)).collect();
+        let views = vec![view(0, &[0], Some(0)), view(1, &[0], Some(0))];
+        let a = sched.schedule(&groups, &views, 0.0);
+        let l0 = a.orders[&InstanceId(0)].len();
+        let l1 = a.orders[&InstanceId(1)].len();
+        assert_eq!(l0 + l1, 8);
+        assert!(l0 >= 2 && l1 >= 2, "unbalanced {l0}/{l1}");
+    }
+
+    #[test]
+    fn respects_model_servability() {
+        // Llama-70B (model 2) can only run on instance 1.
+        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
+        let groups = vec![grp(1, 2, 8, 0.0, 3600.0), grp(2, 0, 8, 0.0, 3600.0)];
+        let views = vec![view(0, &[0], Some(0)), view(1, &[0, 2], None)];
+        let a = sched.schedule(&groups, &views, 0.0);
+        assert!(a.orders[&InstanceId(1)].contains(&GroupId(1)));
+        assert!(!a.orders[&InstanceId(0)].contains(&GroupId(1)));
+    }
+
+    #[test]
+    fn pinned_group_stays_at_head() {
+        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
+        let executing = grp(7, 0, 32, 0.0, 3600.0);
+        let urgent = grp(8, 0, 4, 0.0, 10.0);
+        let mut v = view(0, &[0], Some(0));
+        v.executing = Some(GroupId(7));
+        let a = sched.schedule(&[executing, urgent], &[v], 0.0);
+        let order = &a.orders[&InstanceId(0)];
+        assert_eq!(order[0], GroupId(7), "executing group pinned");
+        assert_eq!(order[1], GroupId(8));
+    }
+
+    #[test]
+    fn milp_orders_by_deadline_single_model() {
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::ExactMilp,
+                milp_max_groups: 4,
+                node_limit: 50_000,
+            },
+            estimator(),
+        );
+        let g1 = grp(1, 0, 16, 0.0, 3600.0);
+        let g2 = grp(2, 0, 16, 0.0, 30.0);
+        let g3 = grp(3, 0, 16, 0.0, 600.0);
+        let v = view(0, &[0], Some(0));
+        let refs = vec![&g1, &g2, &g3];
+        let (perm, _) = sched.milp_order(&refs, &v, 0.0).unwrap();
+        // Tightest (g2) first.
+        assert_eq!(perm[0], 1, "perm {perm:?}");
+    }
+
+    #[test]
+    fn milp_avoids_needless_swaps() {
+        // Two models, relaxed SLOs: optimal order clusters by model
+        // (1 swap), not interleaved (3 swaps).
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::ExactMilp,
+                milp_max_groups: 4,
+                node_limit: 50_000,
+            },
+            estimator(),
+        );
+        let g1 = grp(1, 0, 16, 0.0, 7200.0);
+        let g2 = grp(2, 3, 16, 0.0, 7200.0);
+        let g3 = grp(3, 0, 16, 0.0, 7200.0);
+        let g4 = grp(4, 3, 16, 0.0, 7200.0);
+        let v = view(0, &[0, 3], Some(0));
+        let refs = vec![&g1, &g2, &g3, &g4];
+        let (perm, _) = sched.milp_order(&refs, &v, 0.0).unwrap();
+        let models: Vec<u32> = perm.iter().map(|&i| refs[i].model.0).collect();
+        let transitions = models.windows(2).filter(|w| w[0] != w[1]).count();
+        assert_eq!(transitions, 1, "models {models:?}");
+    }
+
+    #[test]
+    fn infeasible_flagged_when_capacity_exceeded() {
+        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
+        // Enormous backlog with tiny SLOs.
+        let groups: Vec<RequestGroup> =
+            (0..20).map(|i| grp(i, 0, 256, 0.0, 5.0)).collect();
+        let views = vec![view(0, &[0], Some(0))];
+        let a = sched.schedule(&groups, &views, 0.0);
+        assert!(!a.feasible);
+        assert!(a.total_penalty_s > 0.0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Virtual queues (§4, Definition 4.2): an ordered sequence of request
+//! groups per LLM serving instance. Virtual queues are lightweight — they
+//! hold group ids referencing requests stored once in the global queue, so
+//! they can be dropped and rebuilt on instance failure without losing data
+//! (§4, Fault Tolerance).
+
+use std::collections::VecDeque;
+
+use crate::backend::{InstanceId, ModelId};
+use crate::coordinator::request_group::{GroupId, RequestGroup};
+
+/// Per-instance ordered queue of request groups.
+#[derive(Debug, Clone)]
+pub struct VirtualQueue {
+    pub instance: InstanceId,
+    pub groups: VecDeque<GroupId>,
+}
+
+impl VirtualQueue {
+    pub fn new(instance: InstanceId) -> Self {
+        VirtualQueue {
+            instance,
+            groups: VecDeque::new(),
+        }
+    }
+
+    pub fn head(&self) -> Option<GroupId> {
+        self.groups.front().copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+
+    pub fn push_back(&mut self, g: GroupId) {
+        self.groups.push_back(g);
+    }
+
+    /// Place a group at the head — the scheduler's eviction trigger (§5):
+    /// "the global scheduler replaces an existing request group by placing
+    /// a request group at the head of the virtual queue".
+    pub fn push_front(&mut self, g: GroupId) {
+        self.groups.push_front(g);
+    }
+
+    pub fn remove(&mut self, g: GroupId) -> bool {
+        let before = self.groups.len();
+        self.groups.retain(|&x| x != g);
+        before != self.groups.len()
+    }
+
+    /// Dequeue the head group (all its requests completed, §4).
+    pub fn pop_head(&mut self) -> Option<GroupId> {
+        self.groups.pop_front()
+    }
+
+    pub fn contains(&self, g: GroupId) -> bool {
+        self.groups.contains(&g)
+    }
+
+    /// Replace the entire ordering (global scheduler output).
+    pub fn set_order(&mut self, order: Vec<GroupId>) {
+        self.groups = order.into();
+    }
+
+    /// The model sequence this queue implies, given the group table —
+    /// consumed by the model-swap LSO and the warm-set logic (§5).
+    pub fn model_order<'a>(
+        &self,
+        lookup: impl Fn(GroupId) -> Option<&'a RequestGroup>,
+    ) -> Vec<ModelId> {
+        self.groups
+            .iter()
+            .filter_map(|&g| lookup(g).map(|grp| grp.model))
+            .collect()
+    }
+
+    /// Number of model switches this ordering implies (Fig. 5 metric).
+    pub fn swap_count<'a>(
+        &self,
+        lookup: impl Fn(GroupId) -> Option<&'a RequestGroup>,
+        active: Option<ModelId>,
+    ) -> usize {
+        let mut swaps = 0;
+        let mut cur = active;
+        for m in self.model_order(lookup) {
+            if cur != Some(m) {
+                swaps += 1;
+                cur = Some(m);
+            }
+        }
+        swaps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::SloClass;
+    use std::collections::HashMap;
+
+    fn grp(id: u64, model: u32) -> RequestGroup {
+        RequestGroup {
+            id: GroupId(id),
+            model: ModelId(model),
+            class: SloClass::Batch1,
+            slo_s: 60.0,
+            earliest_arrival_s: 0.0,
+            members: Default::default(),
+            mega: false,
+        }
+    }
+
+    fn table(groups: &[RequestGroup]) -> HashMap<GroupId, RequestGroup> {
+        groups.iter().map(|g| (g.id, g.clone())).collect()
+    }
+
+    #[test]
+    fn fifo_order_and_head() {
+        let mut vq = VirtualQueue::new(InstanceId(0));
+        vq.push_back(GroupId(1));
+        vq.push_back(GroupId(2));
+        assert_eq!(vq.head(), Some(GroupId(1)));
+        vq.push_front(GroupId(3));
+        assert_eq!(vq.head(), Some(GroupId(3)));
+        assert_eq!(vq.pop_head(), Some(GroupId(3)));
+        assert_eq!(vq.len(), 2);
+    }
+
+    #[test]
+    fn remove_group() {
+        let mut vq = VirtualQueue::new(InstanceId(0));
+        vq.push_back(GroupId(1));
+        vq.push_back(GroupId(2));
+        assert!(vq.remove(GroupId(1)));
+        assert!(!vq.remove(GroupId(9)));
+        assert_eq!(vq.head(), Some(GroupId(2)));
+    }
+
+    #[test]
+    fn swap_count_counts_transitions() {
+        let groups = vec![grp(1, 0), grp(2, 1), grp(3, 1), grp(4, 0)];
+        let t = table(&groups);
+        let mut vq = VirtualQueue::new(InstanceId(0));
+        for g in &groups {
+            vq.push_back(g.id);
+        }
+        // none active: 0→1 (swap to 0), then to 1, then to 0 again = 3.
+        assert_eq!(vq.swap_count(|g| t.get(&g), None), 3);
+        // model 0 already active: 2 swaps.
+        assert_eq!(vq.swap_count(|g| t.get(&g), Some(ModelId(0))), 2);
+    }
+
+    #[test]
+    fn set_order_replaces() {
+        let mut vq = VirtualQueue::new(InstanceId(0));
+        vq.push_back(GroupId(1));
+        vq.set_order(vec![GroupId(5), GroupId(6)]);
+        assert_eq!(vq.head(), Some(GroupId(5)));
+        assert_eq!(vq.len(), 2);
+    }
+}

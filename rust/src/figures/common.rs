@@ -1,0 +1,168 @@
+//! Shared helpers for the figure harness: experiment scale, policy
+//! sweeps, and text-table rendering.
+
+use crate::backend::{InstanceConfig, ModelCatalog};
+use crate::baselines::Policy;
+use crate::metrics::RunMetrics;
+use crate::sim::{SimConfig, Simulation};
+use crate::workload::Trace;
+
+/// Experiment scale: quick (CI-sized) or full (paper-sized fleets).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    /// Scale a paper-sized count down for quick runs.
+    pub fn n(&self, quick: usize, full: usize) -> usize {
+        match self {
+            Scale::Quick => quick,
+            Scale::Full => full,
+        }
+    }
+
+    pub fn f(&self, quick: f64, full: f64) -> f64 {
+        match self {
+            Scale::Quick => quick,
+            Scale::Full => full,
+        }
+    }
+}
+
+/// A rendered figure: rows of (label, values) with column headers.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    pub id: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form notes (paper-expected shape, caveats).
+    pub notes: Vec<String>,
+}
+
+impl Figure {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> Self {
+        Figure {
+            id: id.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("== {} — {} ==\n", self.id, self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.columns, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+}
+
+/// Run one (trace, fleet, policy) simulation.
+pub fn run_one(
+    trace: &Trace,
+    fleet: Vec<InstanceConfig>,
+    catalog: ModelCatalog,
+    policy: Policy,
+) -> RunMetrics {
+    let cfg = SimConfig::new(fleet, catalog, policy);
+    Simulation::new(cfg, trace).run(trace)
+}
+
+/// Run all four headline policies on the same workload.
+pub fn run_policies(
+    trace: &Trace,
+    fleet: &[InstanceConfig],
+    catalog: &ModelCatalog,
+) -> Vec<RunMetrics> {
+    [
+        Policy::qlm(),
+        Policy::Edf,
+        Policy::VllmFcfs,
+        Policy::Shepherd,
+    ]
+    .into_iter()
+    .map(|p| run_one(trace, fleet.to_vec(), catalog.clone(), p))
+    .collect()
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut f = Figure::new("fig0", "test", &["a", "bbbb"]);
+        f.row(vec!["1".into(), "2".into()]);
+        f.note("shape");
+        let r = f.render();
+        assert!(r.contains("fig0"));
+        assert!(r.contains("note: shape"));
+        assert_eq!(r.lines().count(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut f = Figure::new("x", "t", &["a"]);
+        f.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn scale_selects() {
+        assert_eq!(Scale::Quick.n(1, 10), 1);
+        assert_eq!(Scale::Full.n(1, 10), 10);
+    }
+}

@@ -1,0 +1,247 @@
+//! Figures 9–14 (§8.1, §8.2): single- and multi-model evaluation —
+//! request throughput, SLO attainment, and per-LSO ablations.
+//!
+//! Quick scale uses a 4-instance fleet with proportionally scaled arrival
+//! rates; full scale uses the paper's 50 A100s. Rates sweep from
+//! under-provisioned to overloaded so the SLO curves show the paper's
+//! shape: everyone fails far above capacity, QLM holds attainment highest
+//! as pressure rises.
+
+use crate::backend::{ModelCatalog, ModelId};
+use crate::baselines::Policy;
+use crate::coordinator::lso::LsoConfig;
+use crate::figures::common::{f1, pct, run_one, run_policies, Figure, Scale};
+use crate::sim::fleet_a100;
+use crate::workload::{Trace, WorkloadSpec};
+
+fn fleet_size(scale: Scale) -> u32 {
+    scale.n(4, 50) as u32
+}
+
+/// Interactive arrival rates (req/s) swept for W_A, scaled to fleet.
+fn rates(scale: Scale) -> Vec<f64> {
+    match scale {
+        Scale::Quick => vec![15.0, 40.0, 100.0, 250.0],
+        Scale::Full => vec![125.0, 250.0, 500.0, 1000.0, 2000.0],
+    }
+}
+
+fn w_a_trace(rate: f64, scale: Scale, seed: u64) -> Trace {
+    Trace::generate(
+        &WorkloadSpec::w_a(ModelId(1), rate, scale.n(1200, 3500)),
+        seed,
+    )
+}
+
+fn w_b_trace(rate: f64, scale: Scale, seed: u64) -> Trace {
+    // Batch-1: fine-tuned Mistral-7B + Llama-70B; Batch-2: fine-tuned
+    // Vicuna-13B + Llama-70B (§8 workloads).
+    Trace::generate(
+        &WorkloadSpec::w_b(
+            vec![ModelId(3), ModelId(4)],
+            vec![ModelId(5), ModelId(6)],
+            rate,
+            scale.n(1200, 3500),
+        ),
+        seed,
+    )
+}
+
+/// Fig. 9: single-model serving throughput at the rate where QLM holds
+/// SLOs (paper: 0.5K req/s interactive).
+pub fn fig09(scale: Scale) -> Figure {
+    let rate = scale.f(40.0, 500.0);
+    let trace = w_a_trace(rate, scale, 21);
+    let fleet = fleet_a100(fleet_size(scale));
+    let catalog = ModelCatalog::paper();
+    let mut fig = Figure::new(
+        "fig09",
+        "single-model throughput (W_A)",
+        &["policy", "req_per_s", "tok_per_s", "util"],
+    );
+    for m in run_policies(&trace, &fleet, &catalog) {
+        fig.row(vec![
+            m.policy.clone(),
+            f1(m.throughput_rps()),
+            f1(m.token_throughput()),
+            pct(m.mean_utilization()),
+        ]);
+    }
+    fig.note("paper Fig. 9: QLM ≈ +20% vs vLLM/EDF, +50% vs SHEPHERD");
+    fig
+}
+
+/// Fig. 10: single-model SLO attainment vs interactive arrival rate.
+pub fn fig10(scale: Scale) -> Figure {
+    let fleet = fleet_a100(fleet_size(scale));
+    let catalog = ModelCatalog::paper();
+    let mut fig = Figure::new(
+        "fig10",
+        "single-model SLO attainment vs arrival rate (W_A)",
+        &["rate_rps", "qlm", "edf", "vllm", "shepherd"],
+    );
+    for rate in rates(scale) {
+        let trace = w_a_trace(rate, scale, 22);
+        let ms = run_policies(&trace, &fleet, &catalog);
+        fig.row(vec![
+            f1(rate),
+            pct(ms[0].slo_attainment()),
+            pct(ms[1].slo_attainment()),
+            pct(ms[2].slo_attainment()),
+            pct(ms[3].slo_attainment()),
+        ]);
+    }
+    fig.note("paper Fig. 10: QLM 40-90% above vLLM, 50-90% above SHEPHERD; all fail far beyond capacity");
+    fig
+}
+
+/// LSO ablation rows for a trace/fleet (figs. 11 and 14).
+fn ablation_rows(
+    fig: &mut Figure,
+    trace: &Trace,
+    fleet_n: u32,
+    catalog: &ModelCatalog,
+) {
+    let fleet = fleet_a100(fleet_n);
+    let variants: Vec<(&str, Policy)> = vec![
+        ("qlm-all", Policy::qlm()),
+        ("no-ordered-pull", Policy::qlm_with(LsoConfig::without_ordered_pulling())),
+        ("no-eviction", Policy::qlm_with(LsoConfig::without_eviction())),
+        ("no-load-balance", Policy::qlm_with(LsoConfig::without_load_balancing())),
+        ("no-model-swap", Policy::qlm_with(LsoConfig::without_swapping())),
+    ];
+    for (name, p) in variants {
+        let m = run_one(trace, fleet.clone(), catalog.clone(), p);
+        fig.row(vec![
+            name.into(),
+            pct(m.slo_attainment()),
+            f1(m.throughput_rps()),
+            format!("{}", m.total_model_swaps()),
+            format!("{}", m.total_evictions()),
+        ]);
+    }
+}
+
+/// Fig. 11: single-model LSO ablation at the Fig. 9 operating point.
+pub fn fig11(scale: Scale) -> Figure {
+    let trace = w_a_trace(scale.f(40.0, 500.0), scale, 23);
+    let mut fig = Figure::new(
+        "fig11",
+        "single-model LSO ablation (W_A)",
+        &["variant", "slo", "req_per_s", "swaps", "evictions"],
+    );
+    ablation_rows(&mut fig, &trace, fleet_size(scale), &ModelCatalog::paper());
+    fig.note("paper Fig. 11: pulling + eviction drive SLOs; model swapping is a no-op single-model");
+    fig
+}
+
+/// Fig. 12: multi-model throughput vs Batch-1 arrival rate.
+pub fn fig12(scale: Scale) -> Figure {
+    let fleet = fleet_a100(scale.n(3, 40) as u32);
+    let catalog = ModelCatalog::paper_multi_model();
+    let mut fig = Figure::new(
+        "fig12",
+        "multi-model throughput vs Batch-1 rate (W_B)",
+        &["rate_rps", "qlm", "edf", "vllm", "shepherd"],
+    );
+    for rate in rates(scale).into_iter().take(4) {
+        let trace = w_b_trace(rate * 0.5, scale, 24);
+        let ms = run_policies(&trace, &fleet, &catalog);
+        fig.row(vec![
+            f1(rate * 0.5),
+            f1(ms[0].throughput_rps()),
+            f1(ms[1].throughput_rps()),
+            f1(ms[2].throughput_rps()),
+            f1(ms[3].throughput_rps()),
+        ]);
+    }
+    fig.note("paper Fig. 12: QLM 3-4× baselines (request groups amortize swaps)");
+    fig
+}
+
+/// Fig. 13: multi-model SLO attainment vs Batch-1 rate.
+pub fn fig13(scale: Scale) -> Figure {
+    let fleet = fleet_a100(scale.n(3, 40) as u32);
+    let catalog = ModelCatalog::paper_multi_model();
+    let mut fig = Figure::new(
+        "fig13",
+        "multi-model SLO attainment vs Batch-1 rate (W_B)",
+        &["rate_rps", "qlm", "edf", "vllm", "shepherd"],
+    );
+    for rate in rates(scale).into_iter().take(4) {
+        let trace = w_b_trace(rate * 0.5, scale, 25);
+        let ms = run_policies(&trace, &fleet, &catalog);
+        fig.row(vec![
+            f1(rate * 0.5),
+            pct(ms[0].slo_attainment()),
+            pct(ms[1].slo_attainment()),
+            pct(ms[2].slo_attainment()),
+            pct(ms[3].slo_attainment()),
+        ]);
+    }
+    fig.note("paper Fig. 13: QLM >90% below 0.5K req/s; baselines ignore swap cost and fall behind");
+    fig
+}
+
+/// Fig. 14: multi-model LSO ablation.
+pub fn fig14(scale: Scale) -> Figure {
+    let trace = w_b_trace(scale.f(10.0, 250.0), scale, 26);
+    let mut fig = Figure::new(
+        "fig14",
+        "multi-model LSO ablation (W_B)",
+        &["variant", "slo", "req_per_s", "swaps", "evictions"],
+    );
+    ablation_rows(
+        &mut fig,
+        &trace,
+        scale.n(3, 40) as u32,
+        &ModelCatalog::paper_multi_model(),
+    );
+    fig.note("paper Fig. 14: model swapping (warm start) contributes most multi-model");
+    fig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_qlm_dominates_at_moderate_load() {
+        let fleet = fleet_a100(2);
+        let catalog = ModelCatalog::paper();
+        let trace = w_a_trace(15.0, Scale::Quick, 1);
+        let ms = run_policies(&trace, &fleet, &catalog);
+        let qlm = ms[0].slo_attainment();
+        for m in &ms[1..] {
+            assert!(
+                qlm >= m.slo_attainment() - 0.02,
+                "qlm {} vs {} {}",
+                qlm,
+                m.policy,
+                m.slo_attainment()
+            );
+        }
+    }
+
+    #[test]
+    fn fig12_qlm_beats_baselines_multi_model() {
+        let fleet = fleet_a100(2);
+        let catalog = ModelCatalog::paper_multi_model();
+        let trace = w_b_trace(8.0, Scale::Quick, 2);
+        let ms = run_policies(&trace, &fleet, &catalog);
+        let qlm = ms[0].throughput_rps();
+        // QLM must beat vLLM and SHEPHERD on multi-model throughput.
+        assert!(qlm > ms[2].throughput_rps() * 0.99, "qlm {qlm} vs vllm {}", ms[2].throughput_rps());
+        assert!(qlm > ms[3].throughput_rps() * 0.99, "qlm {qlm} vs shepherd {}", ms[3].throughput_rps());
+    }
+
+    #[test]
+    fn ablations_produce_distinct_rows() {
+        let f = fig11(Scale::Quick);
+        assert_eq!(f.rows.len(), 5);
+        // Single-model: swapping ablation must not change SLO materially.
+        let slo_all: f64 = f.rows[0][1].trim_end_matches('%').parse().unwrap();
+        let slo_noswap: f64 = f.rows[4][1].trim_end_matches('%').parse().unwrap();
+        assert!((slo_all - slo_noswap).abs() < 15.0);
+    }
+}

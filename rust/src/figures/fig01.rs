@@ -1,0 +1,131 @@
+//! Figure 1 (§1): prior SLO-oriented serving systems overestimate queue
+//! waiting time, and the overestimate costs GPUs.
+//!
+//! Left: estimated vs actual waiting time at increasing queue depth —
+//! QLM's RWT estimate (statistical, continuous batching) against a
+//! Clockwork/SHEPHERD-style deterministic worst-case estimate (fixed
+//! batches, max output length per request).
+//!
+//! Right: GPUs required to keep the 20 s p99 TTFT SLO, single- and
+//! multi-model — found by sweeping fleet size under QLM vs SHEPHERD.
+
+use crate::backend::{GpuKind, ModelCatalog, ModelId, PerfModel};
+use crate::baselines::Policy;
+use crate::coordinator::rwt::{ProfileTable, RwtEstimator};
+use crate::figures::common::{f1, run_one, Figure, Scale};
+use crate::figures::fig03::{dump_trace, wait_curve};
+use crate::sim::fleet_a100;
+use crate::workload::{SloClass, Trace, WorkloadSpec};
+
+/// Deterministic worst-case wait estimate for position q — what systems
+/// assuming fixed batches with deterministic execution times produce.
+pub fn worst_case_wait(q: usize, perf: &PerfModel, max_out: f64, fixed_batch: u32) -> f64 {
+    let batches_ahead = (q as f64 / fixed_batch as f64).ceil();
+    batches_ahead * max_out * perf.epsilon * perf.decode_s_per_token + perf.prefill_s
+}
+
+/// Minimum fleet size (A100 instances) for ≥`target` interactive SLO
+/// attainment on `trace` under `policy`.
+pub fn gpus_required(trace: &Trace, policy: Policy, target: f64, max_fleet: u32) -> u32 {
+    let catalog = ModelCatalog::paper_multi_model();
+    for n in 1..=max_fleet {
+        let m = run_one(trace, fleet_a100(n), catalog.clone(), policy);
+        if m.slo_attainment() >= target {
+            return n;
+        }
+    }
+    max_fleet
+}
+
+pub fn run(scale: Scale) -> Figure {
+    let mut fig = Figure::new(
+        "fig01",
+        "waiting-time overestimation and its GPU cost",
+        &["panel", "x", "actual/qlm", "prior-systems"],
+    );
+
+    // ---- Left panel: estimate vs actual, Llama-70B standing queue. ----
+    let model = ModelId(2);
+    let n = scale.n(1000, 3000);
+    let (_pos, meas, pred, _r2) = wait_curve(model, n, 5);
+    let catalog = ModelCatalog::paper();
+    let perf = PerfModel::profile(catalog.get(model), GpuKind::A100, 161.0);
+    let trace = dump_trace(model, n, 5);
+    let est = RwtEstimator::new(ProfileTable::from_trace(&trace));
+    let profile = est.profiles.get(model, SloClass::Batch2, false);
+    for q in (0..meas.len()).step_by((meas.len() / 6).max(1)) {
+        let wc = worst_case_wait(q, &perf, profile.max_out, 16);
+        fig.row(vec![
+            "est-vs-actual".into(),
+            format!("q={q}"),
+            format!("{} / {}", f1(meas[q]), f1(pred[q])),
+            f1(wc),
+        ]);
+    }
+    let q_last = meas.len() - 1;
+    let over = worst_case_wait(q_last, &perf, profile.max_out, 16) / meas[q_last].max(1e-9);
+    fig.note(format!(
+        "prior systems overestimate the queue drain by {:.1}× at q={} (paper Fig. 1-left shows the same gap)",
+        over, q_last
+    ));
+
+    // ---- Right panel: GPUs to hold the 20 s TTFT SLO. ----
+    let max_fleet = scale.n(8, 24) as u32;
+    let reqs = scale.n(400, 3500);
+    // Single model: interactive + batch on Mistral.
+    let single = Trace::generate(
+        &WorkloadSpec::w_a(ModelId(0), scale.f(60.0, 500.0), reqs),
+        11,
+    );
+    // Multi model: same but over two models.
+    let multi = Trace::generate(
+        &WorkloadSpec::w_b(
+            vec![ModelId(0), ModelId(1)],
+            vec![ModelId(2), ModelId(1)],
+            scale.f(60.0, 500.0),
+            reqs,
+        ),
+        12,
+    );
+    for (name, trace) in [("single-model", &single), ("multi-model", &multi)] {
+        let q = gpus_required(trace, Policy::qlm(), 0.95, max_fleet);
+        let s = gpus_required(trace, Policy::Shepherd, 0.95, max_fleet);
+        fig.row(vec![
+            "gpus-required".into(),
+            name.into(),
+            format!("{q}"),
+            format!("{s}"),
+        ]);
+    }
+    fig.note("paper Fig. 1-right: QLM needs fewer GPUs, gap larger multi-model");
+    fig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worst_case_exceeds_statistical_estimate() {
+        let catalog = ModelCatalog::paper();
+        let perf = PerfModel::profile(catalog.get(ModelId(0)), GpuKind::A100, 161.0);
+        let trace = dump_trace(ModelId(0), 200, 1);
+        let est = RwtEstimator::new(ProfileTable::from_trace(&trace));
+        let profile = est.profiles.get(ModelId(0), SloClass::Batch2, false);
+        let q = 100;
+        let wc = worst_case_wait(q, &perf, profile.max_out, 16);
+        let (rwt, _) = est.request_wait(q, &perf, &profile);
+        assert!(
+            wc > 2.0 * rwt,
+            "worst-case {wc} should dwarf statistical {rwt}"
+        );
+    }
+
+    #[test]
+    fn qlm_needs_no_more_gpus_than_shepherd() {
+        let trace = Trace::generate(&WorkloadSpec::w_a(ModelId(0), 15.0, 250), 2);
+        let q = gpus_required(&trace, Policy::qlm(), 0.9, 6);
+        let s = gpus_required(&trace, Policy::Shepherd, 0.9, 6);
+        assert!(q <= s, "qlm {q} vs shepherd {s}");
+    }
+}

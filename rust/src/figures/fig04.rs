@@ -1,0 +1,105 @@
+//! Figure 4 (§2.4 Insight #2): head-of-line blocking from continuous
+//! batching is tens of seconds; forced request eviction cuts interactive
+//! waiting by orders of magnitude.
+//!
+//! Setup: one instance saturated with long batch requests; an interactive
+//! burst arrives mid-run. Compare interactive TTFT with eviction enabled
+//! (QLM) vs disabled (qlm-noevict).
+
+use crate::backend::{GpuKind, InstanceConfig, ModelCatalog, ModelId};
+use crate::baselines::Policy;
+use crate::coordinator::lso::LsoConfig;
+use crate::figures::common::{f2, run_one, Figure, Scale};
+use crate::workload::{
+    ArrivalProcess, RequestClassSpec, ShareGptSampler, SloClass, Trace, WorkloadSpec,
+};
+
+/// Saturating batch load + a delayed interactive burst.
+pub fn hol_trace(n_batch: usize, n_interactive: usize, seed: u64) -> Trace {
+    let spec = WorkloadSpec {
+        name: "hol".into(),
+        streams: vec![
+            RequestClassSpec {
+                class: SloClass::Batch2,
+                models: vec![ModelId(0)],
+                arrivals: ArrivalProcess::Dump,
+                count: n_batch,
+                // Long-running mega requests: few completions, saturated
+                // KV — the setting where HOL blocking bites (§2.4).
+                mega_fraction: 1.0,
+            },
+            RequestClassSpec {
+                class: SloClass::Interactive,
+                models: vec![ModelId(0)],
+                // Burst arrives while the batch work is mid-flight.
+                arrivals: ArrivalProcess::Poisson { rate: 10.0 },
+                count: n_interactive,
+                mega_fraction: 0.0,
+            },
+        ],
+        sampler: ShareGptSampler::default(),
+    };
+    Trace::generate(&spec, seed)
+}
+
+/// (mean, p99) interactive TTFT under a policy.
+pub fn interactive_ttft(policy: Policy, n_batch: usize, seed: u64) -> (f64, f64) {
+    let trace = hol_trace(n_batch, 40, seed);
+    let m = run_one(
+        &trace,
+        vec![InstanceConfig::new(0, GpuKind::A10)],
+        ModelCatalog::paper(),
+        policy,
+    );
+    let ts: Vec<f64> = m
+        .records
+        .iter()
+        .filter(|r| r.class == SloClass::Interactive)
+        .filter_map(|r| r.ttft())
+        .collect();
+    (
+        crate::util::mean(&ts),
+        crate::util::percentile(&ts, 99.0),
+    )
+}
+
+pub fn run(scale: Scale) -> Figure {
+    let mut fig = Figure::new(
+        "fig04",
+        "HOL blocking: interactive TTFT with vs without request eviction",
+        &["batch_backlog", "evict_mean_s", "evict_p99_s", "noevict_mean_s", "noevict_p99_s"],
+    );
+    for &n_batch in &[scale.n(200, 800), scale.n(400, 1600), scale.n(800, 3200)] {
+        let (em, ep) = interactive_ttft(Policy::qlm(), n_batch, 7);
+        let (nm, np) = interactive_ttft(
+            Policy::qlm_with(LsoConfig::without_eviction()),
+            n_batch,
+            7,
+        );
+        fig.row(vec![
+            format!("{n_batch}"),
+            f2(em),
+            f2(ep),
+            f2(nm),
+            f2(np),
+        ]);
+    }
+    fig.note("paper Fig. 4: eviction reduces HOL blocking 100-1000×; shape target: noevict ≫ evict, gap grows with backlog");
+    fig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eviction_reduces_interactive_ttft() {
+        let (evict_mean, _) = interactive_ttft(Policy::qlm(), 400, 3);
+        let (noevict_mean, _) =
+            interactive_ttft(Policy::qlm_with(LsoConfig::without_eviction()), 400, 3);
+        assert!(
+            evict_mean < noevict_mean,
+            "evict {evict_mean} vs noevict {noevict_mean}"
+        );
+    }
+}

@@ -1,0 +1,94 @@
+//! Figure 5 (§2.4 Insight #3): EDF thrash — interleaved deadlines across
+//! models force repeated swaps; grouping requests by model (QLM's
+//! request-group ordering, the paper's "Oracle") drains the queue far
+//! faster.
+//!
+//! Setup: a standing multi-model queue with interleaved SLO values; EDF
+//! vs QLM on one instance. Metrics: queue drain time and swap count.
+
+use crate::backend::{GpuKind, InstanceConfig, ModelCatalog, ModelId};
+use crate::baselines::Policy;
+use crate::figures::common::{f1, run_one, Figure, Scale};
+use crate::workload::{
+    ArrivalProcess, RequestClassSpec, ShareGptSampler, SloClass, Trace, WorkloadSpec,
+};
+
+/// Standing queue of `n` requests interleaved across `k` models.
+pub fn multi_model_dump(k: usize, n: usize, seed: u64) -> Trace {
+    let models: Vec<ModelId> = (0..k as u32).map(ModelId).collect();
+    let spec = WorkloadSpec {
+        name: format!("mmdump-{k}"),
+        streams: vec![
+            // Interleaved deadlines: two SLO classes over all models so
+            // EDF hops between models chasing deadlines.
+            RequestClassSpec {
+                class: SloClass::Batch1,
+                models: models.clone(),
+                arrivals: ArrivalProcess::Dump,
+                count: n / 2,
+                mega_fraction: 0.0,
+            },
+            RequestClassSpec {
+                class: SloClass::Batch2,
+                models,
+                arrivals: ArrivalProcess::Dump,
+                count: n - n / 2,
+                mega_fraction: 0.0,
+            },
+        ],
+        sampler: ShareGptSampler::default(),
+    };
+    Trace::generate(&spec, seed)
+}
+
+/// (drain time, swaps) for a policy.
+pub fn drain(policy: Policy, k: usize, n: usize, seed: u64) -> (f64, u64) {
+    let trace = multi_model_dump(k, n, seed);
+    let m = run_one(
+        &trace,
+        vec![InstanceConfig::new(0, GpuKind::A100)],
+        ModelCatalog::paper_multi_model(),
+        policy,
+    );
+    let drain_t = m
+        .records
+        .iter()
+        .filter_map(|r| r.completed_s)
+        .fold(0.0_f64, f64::max);
+    (drain_t, m.total_model_swaps())
+}
+
+pub fn run(scale: Scale) -> Figure {
+    let n = scale.n(240, 1000);
+    let mut fig = Figure::new(
+        "fig05",
+        "queue drain time: EDF swap-thrash vs QLM model grouping",
+        &["models", "edf_drain_s", "edf_swaps", "qlm_drain_s", "qlm_swaps"],
+    );
+    for k in [2usize, 3] {
+        let (ed, es) = drain(Policy::Edf, k, n, 13);
+        let (qd, qs) = drain(Policy::qlm(), k, n, 13);
+        fig.row(vec![
+            format!("{k}"),
+            f1(ed),
+            format!("{es}"),
+            f1(qd),
+            format!("{qs}"),
+        ]);
+    }
+    fig.note("paper Fig. 5: EDF drain ≫ Oracle/QLM drain; QLM swaps once per model cluster");
+    fig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qlm_swaps_less_and_drains_faster() {
+        let (ed, es) = drain(Policy::Edf, 3, 180, 2);
+        let (qd, qs) = drain(Policy::qlm(), 3, 180, 2);
+        assert!(qs <= es, "qlm swaps {qs} vs edf {es}");
+        assert!(qd <= ed * 1.05, "qlm drain {qd} vs edf {ed}");
+    }
+}

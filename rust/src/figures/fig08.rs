@@ -1,0 +1,63 @@
+//! Figure 8 (§8): input/output token distribution of the (synthetic)
+//! ShareGPT workload — validates the fitted sampler's shape against the
+//! published histogram (heavy right tail, output longer than input).
+
+use crate::figures::common::{f1, Figure, Scale};
+use crate::util::{Histogram, Rng};
+use crate::workload::ShareGptSampler;
+
+pub fn run(scale: Scale) -> Figure {
+    let n = scale.n(3500, 35_000);
+    let s = ShareGptSampler::default();
+    let mut rng = Rng::new(8);
+    let mut hin = Histogram::new(2048.0, 16);
+    let mut hout = Histogram::new(2048.0, 16);
+    let mut ins = Vec::with_capacity(n);
+    let mut outs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (i, o) = s.sample(&mut rng);
+        hin.record(i as f64);
+        hout.record(o as f64);
+        ins.push(i as f64);
+        outs.push(o as f64);
+    }
+    let mut fig = Figure::new(
+        "fig08",
+        "ShareGPT token distribution (fitted sampler)",
+        &["bucket_tokens", "input_count", "output_count"],
+    );
+    for ((c, i), (_, o)) in hin.rows().into_iter().zip(hout.rows()) {
+        fig.row(vec![f1(c), format!("{i}"), format!("{o}")]);
+    }
+    fig.note(format!(
+        "input: mean={:.0} p50={:.0} p99={:.0}; output: mean={:.0} p50={:.0} p99={:.0} (ShareGPT: in≈161, out≈338, heavy tail)",
+        crate::util::mean(&ins),
+        crate::util::percentile(&ins, 50.0),
+        crate::util::percentile(&ins, 99.0),
+        crate::util::mean(&outs),
+        crate::util::percentile(&outs, 50.0),
+        crate::util::percentile(&outs, 99.0),
+    ));
+    fig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_has_mass_and_tail() {
+        let f = run(Scale::Quick);
+        assert_eq!(f.rows.len(), 17); // 16 bins + overflow
+        let outputs: Vec<u64> = f
+            .rows
+            .iter()
+            .map(|r| r[2].parse::<u64>().unwrap())
+            .collect();
+        let total: u64 = outputs.iter().sum();
+        assert_eq!(total, 3500);
+        // Right tail exists but is small.
+        let tail: u64 = outputs[8..].iter().sum();
+        assert!(tail > 0 && tail < total / 4);
+    }
+}

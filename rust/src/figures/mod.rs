@@ -1,0 +1,50 @@
+//! Figure harness: regenerates every table/figure in the paper's
+//! evaluation (§2.4 motivation + §8). Each `figNN` function returns a
+//! [`Figure`] of printable rows; `qlm figures --fig N` runs one,
+//! `qlm figures` runs all. DESIGN.md's experiment index maps figures to
+//! modules; EXPERIMENTS.md records paper-vs-measured.
+//!
+//! Scale: the default "quick" scale shrinks fleets/traces so the whole
+//! suite runs in minutes on CPU; `--full` uses paper-sized fleets. The
+//! *shape* of each result (who wins, by what factor, where crossovers
+//! fall) is the reproduction target, not absolute numbers — the substrate
+//! is a calibrated simulator (DESIGN.md §Substitutions).
+
+pub mod common;
+pub mod fig01;
+pub mod fig03;
+pub mod fig04;
+pub mod fig05;
+pub mod fig08;
+pub mod eval;
+pub mod robustness;
+pub mod estimator;
+
+pub use common::{Figure, Scale};
+
+/// Run one figure by number; None ⇒ unknown id.
+pub fn run_figure(id: u32, scale: Scale) -> Option<Figure> {
+    Some(match id {
+        1 => fig01::run(scale),
+        3 => fig03::run(scale),
+        4 => fig04::run(scale),
+        5 => fig05::run(scale),
+        8 => fig08::run(scale),
+        9 => eval::fig09(scale),
+        10 => eval::fig10(scale),
+        11 => eval::fig11(scale),
+        12 => eval::fig12(scale),
+        13 => eval::fig13(scale),
+        14 => eval::fig14(scale),
+        15 => robustness::fig15(scale),
+        16 => robustness::fig16(scale),
+        17 => robustness::fig17(scale),
+        18 => estimator::fig18(scale),
+        19 => estimator::fig19(scale),
+        20 => estimator::fig20(scale),
+        _ => return None,
+    })
+}
+
+/// All figure ids in paper order.
+pub const ALL_FIGURES: &[u32] = &[1, 3, 4, 5, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18, 19, 20];

@@ -1,0 +1,24 @@
+//! QLM: Queue Management for SLO-Oriented Large Language Model Serving.
+//!
+//! Reproduction of Patke et al., SoCC '24 (doi:10.1145/3698038.3698523) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * Layer 3 (this crate): the QLM coordinator — global queue, request
+//!   groups, virtual queues, RWT estimator, global scheduler (MILP), and
+//!   the four LLM Serving Operations (request pulling, request eviction,
+//!   load balancing, model swapping) driving vLLM-like serving instances.
+//! * Layer 2 (`python/compile/model.py`): a JAX transformer decode/prefill
+//!   graph, AOT-lowered to HLO text loaded by [`runtime`].
+//! * Layer 1 (`python/compile/kernels/`): Pallas paged-attention kernels
+//!   (interpret mode) invoked from the Layer-2 graph.
+
+pub mod util;
+pub mod workload;
+pub mod backend;
+pub mod coordinator;
+pub mod solver;
+pub mod sim;
+pub mod baselines;
+pub mod metrics;
+pub mod runtime;
+pub mod figures;

@@ -1,0 +1,266 @@
+//! The `qlm` CLI: run simulations, regenerate paper figures, and serve
+//! the real tiny model through the PJRT runtime.
+//!
+//! Argument parsing is hand-rolled (the offline build has no clap);
+//! subcommands:
+//!
+//! ```text
+//! qlm figures [--fig N] [--full]        regenerate paper figures
+//! qlm simulate [--policy P] [--rate R] [--requests N] [--fleet N]
+//!              [--multi-model] [--seed S]
+//! qlm serve [--artifacts DIR] [--requests N] [--fcfs]
+//! qlm bench-scheduler [--requests N]    Fig. 20-style overhead probe
+//! ```
+
+use std::process::ExitCode;
+
+use qlm::backend::{ModelCatalog, ModelId};
+use qlm::baselines::Policy;
+use qlm::coordinator::lso::LsoConfig;
+use qlm::figures::{run_figure, Scale, ALL_FIGURES};
+use qlm::sim::{fleet_a100, SimConfig, Simulation};
+use qlm::workload::{Trace, WorkloadSpec};
+
+/// Minimal flag parser: --key value / --switch.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let val = argv.get(i + 1).filter(|v| !v.starts_with("--"));
+                if let Some(v) = val {
+                    flags.push((name.to_string(), Some(v.clone())));
+                    i += 2;
+                } else {
+                    flags.push((name.to_string(), None));
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "qlm — Queue Management for SLO-Oriented LLM Serving (SoCC '24 reproduction)
+
+USAGE:
+  qlm figures [--fig N] [--full]
+  qlm simulate [--policy qlm|edf|vllm|shepherd|qlm-noevict|qlm-noswap|qlm-nolb]
+               [--rate R] [--requests N] [--fleet N] [--multi-model] [--seed S]
+  qlm serve [--artifacts DIR] [--requests N] [--fcfs] [--max-new N]
+  qlm bench-scheduler"
+    );
+    ExitCode::from(2)
+}
+
+fn parse_policy(name: &str) -> Option<Policy> {
+    Some(match name {
+        "qlm" => Policy::qlm(),
+        "edf" => Policy::Edf,
+        "vllm" => Policy::VllmFcfs,
+        "shepherd" => Policy::Shepherd,
+        "qlm-noevict" => Policy::qlm_with(LsoConfig::without_eviction()),
+        "qlm-noswap" => Policy::qlm_with(LsoConfig::without_swapping()),
+        "qlm-nolb" => Policy::qlm_with(LsoConfig::without_load_balancing()),
+        "qlm-nopull" => Policy::qlm_with(LsoConfig::without_ordered_pulling()),
+        _ => return None,
+    })
+}
+
+fn cmd_figures(args: &Args) -> ExitCode {
+    let scale = if args.has("full") {
+        Scale::Full
+    } else {
+        Scale::Quick
+    };
+    let ids: Vec<u32> = match args.get("fig") {
+        Some(v) => match v.parse() {
+            Ok(id) => vec![id],
+            Err(_) => {
+                eprintln!("bad --fig {v}");
+                return ExitCode::from(2);
+            }
+        },
+        None => ALL_FIGURES.to_vec(),
+    };
+    for id in ids {
+        match run_figure(id, scale) {
+            Some(fig) => println!("{}", fig.render()),
+            None => {
+                eprintln!("unknown figure {id} (known: {ALL_FIGURES:?})");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_simulate(args: &Args) -> ExitCode {
+    let policy = match parse_policy(args.get("policy").unwrap_or("qlm")) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown policy");
+            return ExitCode::from(2);
+        }
+    };
+    let rate = args.get_f64("rate", 20.0);
+    let requests = args.get_usize("requests", 1500);
+    let fleet_n = args.get_usize("fleet", 4) as u32;
+    let seed = args.get_usize("seed", 42) as u64;
+    let (catalog, spec) = if args.has("multi-model") {
+        (
+            ModelCatalog::paper_multi_model(),
+            WorkloadSpec::w_b(
+                vec![ModelId(3), ModelId(4)],
+                vec![ModelId(5), ModelId(6)],
+                rate,
+                requests,
+            ),
+        )
+    } else {
+        (
+            ModelCatalog::paper(),
+            WorkloadSpec::w_a(ModelId(1), rate, requests),
+        )
+    };
+    let trace = Trace::generate(&spec, seed);
+    let mut cfg = SimConfig::new(fleet_a100(fleet_n), catalog, policy);
+    cfg.seed = seed;
+    let m = Simulation::new(cfg, &trace).run(&trace);
+    println!("{}", m.summary());
+    println!(
+        "  completed={}/{} mean_ttft={:.2}s p50={:.2}s p99={:.2}s sched_invocations={} sched_wall={:.1}ms",
+        m.completed_count(),
+        m.records.len(),
+        m.mean_ttft(),
+        m.ttft_percentile(50.0),
+        m.ttft_percentile(99.0),
+        m.scheduler_invocations,
+        1000.0 * m.scheduler_wall_s,
+    );
+    ExitCode::SUCCESS
+}
+
+fn cmd_serve(args: &Args) -> ExitCode {
+    use qlm::runtime::{EngineConfig, EngineRequest, ServeEngine, TinyModel};
+    let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+    let n = args.get_usize("requests", 16);
+    let max_new = args.get_usize("max-new", 16) as u32;
+    let model = match TinyModel::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("failed to load artifacts from {dir}: {e:#}\nrun `make artifacts` first");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!(
+        "loaded {} params on {} (buckets {:?})",
+        model.manifest.param_count,
+        model.platform(),
+        model
+            .manifest
+            .buckets
+            .iter()
+            .map(|b| b.batch)
+            .collect::<Vec<_>>()
+    );
+    let mut engine = ServeEngine::new(
+        model,
+        EngineConfig {
+            ordered: !args.has("fcfs"),
+            eos: None,
+        },
+    );
+    for i in 0..n {
+        engine.submit(EngineRequest {
+            id: i as u64,
+            prompt: format!("request {i}: the queue management system")
+                .into_bytes(),
+            max_new_tokens: max_new,
+            slo_s: if i % 4 == 0 { 0.5 } else { 30.0 },
+        });
+    }
+    let t0 = std::time::Instant::now();
+    let results = match engine.run_to_completion() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("serving failed: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    let ttfts: Vec<f64> = results.iter().map(|r| r.ttft_s).collect();
+    println!(
+        "served {} requests in {:.2}s  ({:.1} req/s, {:.0} tok/s decode)",
+        results.len(),
+        wall,
+        results.len() as f64 / wall,
+        engine.stats.decode_tokens_per_s(),
+    );
+    println!(
+        "TTFT p50={:.3}s p99={:.3}s  batches={} prefill={:.2}s decode={:.2}s",
+        qlm::util::percentile(&ttfts, 50.0),
+        qlm::util::percentile(&ttfts, 99.0),
+        engine.stats.batches,
+        engine.stats.prefill_s,
+        engine.stats.decode_s,
+    );
+    ExitCode::SUCCESS
+}
+
+fn cmd_bench_scheduler(args: &Args) -> ExitCode {
+    let _ = args;
+    match run_figure(20, Scale::Quick) {
+        Some(f) => println!("{}", f.render()),
+        None => unreachable!(),
+    }
+    ExitCode::SUCCESS
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    match args.positional.first().map(String::as_str) {
+        Some("figures") => cmd_figures(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("bench-scheduler") => cmd_bench_scheduler(&args),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,309 @@
+//! Run metrics: SLO attainment, request throughput, TTFT percentiles,
+//! device utilization — the quantities every evaluation figure reports.
+
+use std::collections::HashMap;
+
+use crate::backend::ModelId;
+use crate::coordinator::request::Request;
+use crate::workload::SloClass;
+
+/// Final record for one request.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub model: ModelId,
+    pub class: SloClass,
+    pub slo_s: f64,
+    pub arrival_s: f64,
+    pub first_token_s: Option<f64>,
+    pub completed_s: Option<f64>,
+    pub mega: bool,
+}
+
+impl RequestRecord {
+    pub fn from_request(r: &Request) -> Self {
+        RequestRecord {
+            id: r.id,
+            model: r.model,
+            class: r.class,
+            slo_s: r.slo_s,
+            arrival_s: r.arrival_s,
+            first_token_s: r.first_token_s,
+            completed_s: r.completed_s,
+            mega: r.mega,
+        }
+    }
+
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_s.map(|t| t - self.arrival_s)
+    }
+
+    /// SLO met ⇔ first token within the TTFT bound. Requests that never
+    /// produced a first token are violations.
+    pub fn slo_met(&self) -> bool {
+        self.ttft().map(|t| t <= self.slo_s).unwrap_or(false)
+    }
+}
+
+/// Aggregated per-instance counters.
+#[derive(Debug, Clone, Default)]
+pub struct InstanceMetrics {
+    pub id: u32,
+    pub busy_s: f64,
+    pub idle_s: f64,
+    pub swap_s: f64,
+    pub tokens_generated: u64,
+    pub requests_completed: u64,
+    pub internal_preemptions: u64,
+    pub lso_evictions: u64,
+    pub model_swaps: u64,
+    pub mean_batch: f64,
+}
+
+/// Complete metrics for one simulated (or real) run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub policy: String,
+    pub records: Vec<RequestRecord>,
+    pub instances: Vec<InstanceMetrics>,
+    pub duration_s: f64,
+    /// Wall-clock spent inside the global scheduler (overhead, Fig. 20).
+    pub scheduler_wall_s: f64,
+    pub scheduler_invocations: u64,
+}
+
+impl RunMetrics {
+    /// Fraction of requests whose TTFT met the SLO, over all requests.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.records.is_empty() {
+            return 1.0;
+        }
+        self.records.iter().filter(|r| r.slo_met()).count() as f64
+            / self.records.len() as f64
+    }
+
+    /// SLO attainment restricted to one class.
+    pub fn slo_attainment_class(&self, class: SloClass) -> f64 {
+        let rs: Vec<_> = self.records.iter().filter(|r| r.class == class).collect();
+        if rs.is_empty() {
+            return 1.0;
+        }
+        rs.iter().filter(|r| r.slo_met()).count() as f64 / rs.len() as f64
+    }
+
+    /// Completed requests per second over the run.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.records
+            .iter()
+            .filter(|r| r.completed_s.is_some())
+            .count() as f64
+            / self.duration_s
+    }
+
+    /// Generated tokens per second (cluster aggregate).
+    pub fn token_throughput(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.instances
+            .iter()
+            .map(|i| i.tokens_generated)
+            .sum::<u64>() as f64
+            / self.duration_s
+    }
+
+    /// TTFT percentile over requests that produced a first token.
+    pub fn ttft_percentile(&self, p: f64) -> f64 {
+        let ts: Vec<f64> = self.records.iter().filter_map(|r| r.ttft()).collect();
+        crate::util::percentile(&ts, p)
+    }
+
+    pub fn mean_ttft(&self) -> f64 {
+        let ts: Vec<f64> = self.records.iter().filter_map(|r| r.ttft()).collect();
+        crate::util::mean(&ts)
+    }
+
+    /// Mean device utilization (busy / wall) across instances.
+    pub fn mean_utilization(&self) -> f64 {
+        if self.instances.is_empty() {
+            return 0.0;
+        }
+        let us: Vec<f64> = self
+            .instances
+            .iter()
+            .map(|i| {
+                let t = i.busy_s + i.idle_s + i.swap_s;
+                if t > 0.0 {
+                    i.busy_s / t
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        crate::util::mean(&us)
+    }
+
+    pub fn total_model_swaps(&self) -> u64 {
+        self.instances.iter().map(|i| i.model_swaps).sum()
+    }
+
+    pub fn total_evictions(&self) -> u64 {
+        self.instances.iter().map(|i| i.lso_evictions).sum()
+    }
+
+    pub fn completed_count(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| r.completed_s.is_some())
+            .count()
+    }
+
+    /// Mean TTFT per model — used by heterogeneity analyses.
+    pub fn ttft_by_model(&self) -> HashMap<ModelId, f64> {
+        let mut acc: HashMap<ModelId, Vec<f64>> = HashMap::new();
+        for r in &self.records {
+            if let Some(t) = r.ttft() {
+                acc.entry(r.model).or_default().push(t);
+            }
+        }
+        acc.into_iter()
+            .map(|(m, v)| (m, crate::util::mean(&v)))
+            .collect()
+    }
+
+    /// One-line summary for CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: slo={:.1}% thr={:.1} req/s tok/s={:.0} p99_ttft={:.2}s util={:.1}% swaps={} evictions={}",
+            self.policy,
+            100.0 * self.slo_attainment(),
+            self.throughput_rps(),
+            self.token_throughput(),
+            self.ttft_percentile(99.0),
+            100.0 * self.mean_utilization(),
+            self.total_model_swaps(),
+            self.total_evictions(),
+        )
+    }
+}
+
+/// Convert a finished instance into metrics.
+pub fn instance_metrics(inst: &crate::backend::Instance) -> InstanceMetrics {
+    InstanceMetrics {
+        id: inst.config.id.0,
+        busy_s: inst.stats.busy_s,
+        idle_s: inst.stats.idle_s,
+        swap_s: inst.stats.swap_s,
+        tokens_generated: inst.stats.tokens_generated,
+        requests_completed: inst.stats.requests_completed,
+        internal_preemptions: inst.stats.internal_preemptions,
+        lso_evictions: inst.stats.lso_evictions,
+        model_swaps: inst.registry().swaps_to_gpu,
+        mean_batch: inst.mean_batch(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(arrival: f64, first: Option<f64>, slo: f64, class: SloClass) -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            model: ModelId(0),
+            class,
+            slo_s: slo,
+            arrival_s: arrival,
+            first_token_s: first,
+            completed_s: first.map(|f| f + 1.0),
+            mega: false,
+        }
+    }
+
+    #[test]
+    fn slo_attainment_counts_unserved_as_violations() {
+        let m = RunMetrics {
+            records: vec![
+                rec(0.0, Some(5.0), 20.0, SloClass::Interactive), // met
+                rec(0.0, Some(30.0), 20.0, SloClass::Interactive), // missed
+                rec(0.0, None, 20.0, SloClass::Interactive),      // never served
+            ],
+            duration_s: 100.0,
+            ..Default::default()
+        };
+        assert!((m.slo_attainment() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn class_filtering() {
+        let m = RunMetrics {
+            records: vec![
+                rec(0.0, Some(5.0), 20.0, SloClass::Interactive),
+                rec(0.0, Some(3600.0), 60.0, SloClass::Batch1),
+            ],
+            ..Default::default()
+        };
+        assert_eq!(m.slo_attainment_class(SloClass::Interactive), 1.0);
+        assert_eq!(m.slo_attainment_class(SloClass::Batch1), 0.0);
+        assert_eq!(m.slo_attainment_class(SloClass::Batch2), 1.0); // vacuous
+    }
+
+    #[test]
+    fn throughput_counts_completed_only() {
+        let m = RunMetrics {
+            records: vec![
+                rec(0.0, Some(1.0), 20.0, SloClass::Interactive),
+                rec(0.0, None, 20.0, SloClass::Interactive),
+            ],
+            duration_s: 2.0,
+            ..Default::default()
+        };
+        assert!((m.throughput_rps() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_over_served() {
+        let mut records = Vec::new();
+        for i in 0..100 {
+            records.push(rec(0.0, Some(i as f64), 20.0, SloClass::Interactive));
+        }
+        let m = RunMetrics {
+            records,
+            ..Default::default()
+        };
+        assert!((m.ttft_percentile(50.0) - 49.5).abs() < 1.0);
+        assert!(m.ttft_percentile(99.0) > 95.0);
+    }
+
+    #[test]
+    fn utilization_mean() {
+        let m = RunMetrics {
+            instances: vec![
+                InstanceMetrics {
+                    busy_s: 50.0,
+                    idle_s: 50.0,
+                    ..Default::default()
+                },
+                InstanceMetrics {
+                    busy_s: 100.0,
+                    idle_s: 0.0,
+                    ..Default::default()
+                },
+            ],
+            ..Default::default()
+        };
+        assert!((m.mean_utilization() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_contains_policy() {
+        let m = RunMetrics {
+            policy: "qlm".into(),
+            ..Default::default()
+        };
+        assert!(m.summary().starts_with("qlm:"));
+    }
+}

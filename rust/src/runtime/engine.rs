@@ -1,0 +1,273 @@
+//! Real serving engine over the PJRT runtime: batched prefill + decode
+//! with QLM-style deadline ordering of the waiting queue. This is the
+//! end-to-end proof that L3 (queue management) composes with L2/L1 (the
+//! AOT-compiled model): examples/e2e_serve.rs drives it and reports
+//! latency/throughput (EXPERIMENTS.md §E2E).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::model::TinyModel;
+
+/// One serving request.
+#[derive(Debug, Clone)]
+pub struct EngineRequest {
+    pub id: u64,
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: u32,
+    /// TTFT SLO in seconds (used for deadline ordering).
+    pub slo_s: f64,
+}
+
+/// Completed request with measured latencies.
+#[derive(Debug, Clone)]
+pub struct EngineResult {
+    pub id: u64,
+    pub output: Vec<i32>,
+    pub ttft_s: f64,
+    pub total_s: f64,
+    pub queue_s: f64,
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// QLM ordering (deadline-sorted waiting queue) vs plain FCFS.
+    pub ordered: bool,
+    /// Stop token (generation also stops at max_new_tokens).
+    pub eos: Option<i32>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            ordered: true,
+            eos: None,
+        }
+    }
+}
+
+struct Waiting {
+    req: EngineRequest,
+    enqueued: Instant,
+}
+
+/// Aggregate engine statistics.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub requests: u64,
+    pub tokens_generated: u64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub batches: u64,
+}
+
+impl EngineStats {
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        if self.decode_s > 0.0 {
+            self.tokens_generated as f64 / self.decode_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Batched serving engine.
+pub struct ServeEngine {
+    model: TinyModel,
+    cfg: EngineConfig,
+    waiting: VecDeque<Waiting>,
+    pub stats: EngineStats,
+}
+
+impl ServeEngine {
+    pub fn new(model: TinyModel, cfg: EngineConfig) -> Self {
+        ServeEngine {
+            model,
+            cfg,
+            waiting: VecDeque::new(),
+            stats: EngineStats::default(),
+        }
+    }
+
+    pub fn model(&self) -> &TinyModel {
+        &self.model
+    }
+
+    pub fn submit(&mut self, req: EngineRequest) {
+        self.waiting.push_back(Waiting {
+            req,
+            enqueued: Instant::now(),
+        });
+    }
+
+    pub fn pending(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Serve one batch (up to the largest compiled bucket). Returns the
+    /// completed results, or None if the queue is empty.
+    pub fn serve_batch(&mut self) -> Result<Option<Vec<EngineResult>>> {
+        if self.waiting.is_empty() {
+            return Ok(None);
+        }
+        if self.cfg.ordered {
+            // QLM request pulling: tightest TTFT budget first (the
+            // virtual-queue order for a single instance, single model).
+            let mut v: Vec<Waiting> = self.waiting.drain(..).collect();
+            v.sort_by(|a, b| {
+                let da = a.req.slo_s - a.enqueued.elapsed().as_secs_f64();
+                let db = b.req.slo_s - b.enqueued.elapsed().as_secs_f64();
+                da.partial_cmp(&db).unwrap()
+            });
+            self.waiting = v.into();
+        }
+        let take = (self.model.manifest.max_bucket() as usize).min(self.waiting.len());
+        let batch: Vec<Waiting> = self.waiting.drain(..take).collect();
+
+        let t0 = Instant::now();
+        let prompts: Vec<&[u8]> = batch.iter().map(|w| w.req.prompt.as_slice()).collect();
+        let (logits, mut state) = self.model.prefill(&prompts)?;
+        let prefill_s = t0.elapsed().as_secs_f64();
+        self.stats.prefill_s += prefill_s;
+
+        let n = batch.len();
+        let mut tokens: Vec<i32> = logits.iter().map(|l| TinyModel::argmax(l)).collect();
+        tokens.resize(state.batch as usize, 0);
+        let mut outputs: Vec<Vec<i32>> = (0..n).map(|i| vec![tokens[i]]).collect();
+        let ttft: Vec<f64> = batch
+            .iter()
+            .map(|w| w.enqueued.elapsed().as_secs_f64())
+            .collect();
+        let mut done = vec![false; n];
+        for (i, w) in batch.iter().enumerate() {
+            if w.req.max_new_tokens <= 1 || self.cfg.eos == Some(outputs[i][0]) {
+                done[i] = true;
+            }
+        }
+
+        let td = Instant::now();
+        let max_iters = batch
+            .iter()
+            .map(|w| w.req.max_new_tokens)
+            .max()
+            .unwrap_or(1)
+            .min(self.model.manifest.max_seq - 1);
+        for _ in 1..max_iters {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let step = self.model.decode_step(&mut state, &tokens)?;
+            for i in 0..n {
+                if done[i] {
+                    continue;
+                }
+                let t = TinyModel::argmax(&step[i]);
+                tokens[i] = t;
+                outputs[i].push(t);
+                self.stats.tokens_generated += 1;
+                if outputs[i].len() as u32 >= batch[i].req.max_new_tokens
+                    || self.cfg.eos == Some(t)
+                {
+                    done[i] = true;
+                }
+            }
+        }
+        self.stats.decode_s += td.elapsed().as_secs_f64();
+        self.stats.batches += 1;
+        self.stats.requests += n as u64;
+
+        let results = batch
+            .into_iter()
+            .enumerate()
+            .map(|(i, w)| EngineResult {
+                id: w.req.id,
+                output: std::mem::take(&mut outputs[i]),
+                ttft_s: ttft[i],
+                total_s: w.enqueued.elapsed().as_secs_f64(),
+                queue_s: ttft[i] - prefill_s,
+            })
+            .collect();
+        Ok(Some(results))
+    }
+
+    /// Drain the whole queue; returns all results.
+    pub fn run_to_completion(&mut self) -> Result<Vec<EngineResult>> {
+        let mut all = Vec::new();
+        while let Some(mut rs) = self.serve_batch()? {
+            all.append(&mut rs);
+        }
+        Ok(all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(ordered: bool) -> Option<ServeEngine> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        let model = TinyModel::load(dir).unwrap();
+        Some(ServeEngine::new(model, EngineConfig { ordered, eos: None }))
+    }
+
+    #[test]
+    fn serves_batch_with_outputs() {
+        let Some(mut e) = engine(true) else { return };
+        for i in 0..3 {
+            e.submit(EngineRequest {
+                id: i,
+                prompt: format!("request number {i}").into_bytes(),
+                max_new_tokens: 6,
+                slo_s: 10.0,
+            });
+        }
+        let results = e.run_to_completion().unwrap();
+        assert_eq!(results.len(), 3);
+        for r in &results {
+            assert_eq!(r.output.len(), 6);
+            assert!(r.ttft_s >= 0.0 && r.total_s >= r.ttft_s);
+        }
+        assert_eq!(e.stats.requests, 3);
+        assert!(e.stats.tokens_generated >= 15);
+    }
+
+    #[test]
+    fn ordered_queue_serves_tight_slo_first() {
+        let Some(mut e) = engine(true) else { return };
+        // More requests than one bucket: the relaxed one should come last.
+        for i in 0..9 {
+            e.submit(EngineRequest {
+                id: i,
+                prompt: vec![b'a'; 8],
+                max_new_tokens: 2,
+                slo_s: if i == 8 { 0.001 } else { 100.0 },
+            });
+        }
+        let first = e.serve_batch().unwrap().unwrap();
+        let ids: Vec<u64> = first.iter().map(|r| r.id).collect();
+        assert!(ids.contains(&8), "tightest SLO in first batch: {ids:?}");
+    }
+
+    #[test]
+    fn fcfs_preserves_arrival_order() {
+        let Some(mut e) = engine(false) else { return };
+        for i in 0..9 {
+            e.submit(EngineRequest {
+                id: i,
+                prompt: vec![b'b'; 4],
+                max_new_tokens: 2,
+                slo_s: if i == 8 { 0.001 } else { 100.0 },
+            });
+        }
+        let first = e.serve_batch().unwrap().unwrap();
+        let ids: Vec<u64> = first.iter().map(|r| r.id).collect();
+        assert!(!ids.contains(&8), "FCFS must not jump the queue: {ids:?}");
+    }
+}

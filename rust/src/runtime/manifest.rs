@@ -1,0 +1,155 @@
+//! Artifact manifest parsing (the plain-text twin of manifest.json that
+//! `python/compile/aot.py` emits — no JSON dependency needed).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One (batch bucket → executables) entry.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    pub batch: u32,
+    pub prefill: PathBuf,
+    pub decode: PathBuf,
+}
+
+/// Parsed artifacts/manifest.txt.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub vocab: u32,
+    pub d_model: u32,
+    pub n_layers: u32,
+    pub n_heads: u32,
+    pub head_dim: u32,
+    pub max_seq: u32,
+    pub param_count: u64,
+    pub seed: u64,
+    pub buckets: Vec<Bucket>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut kv: BTreeMap<&str, &str> = BTreeMap::new();
+        let mut buckets = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let key = parts.next().context("empty manifest line")?;
+            if key == "bucket" {
+                let batch: u32 = parts.next().context("bucket batch")?.parse()?;
+                let prefill = dir.join(parts.next().context("bucket prefill")?);
+                let decode = dir.join(parts.next().context("bucket decode")?);
+                buckets.push(Bucket {
+                    batch,
+                    prefill,
+                    decode,
+                });
+            } else {
+                let val = parts.next().with_context(|| format!("value for {key}"))?;
+                kv.insert(key, val);
+            }
+        }
+        let get = |k: &str| -> Result<u64> {
+            kv.get(k)
+                .with_context(|| format!("manifest missing key {k}"))?
+                .parse::<u64>()
+                .with_context(|| format!("parsing {k}"))
+        };
+        if buckets.is_empty() {
+            bail!("manifest has no buckets");
+        }
+        buckets.sort_by_key(|b| b.batch);
+        Ok(Manifest {
+            vocab: get("vocab")? as u32,
+            d_model: get("d_model")? as u32,
+            n_layers: get("n_layers")? as u32,
+            n_heads: get("n_heads")? as u32,
+            head_dim: get("head_dim")? as u32,
+            max_seq: get("max_seq")? as u32,
+            param_count: get("param_count")?,
+            seed: get("seed")?,
+            buckets,
+            dir,
+        })
+    }
+
+    /// Smallest bucket that fits `n` concurrent sequences, else the
+    /// largest bucket.
+    pub fn bucket_for(&self, n: u32) -> &Bucket {
+        self.buckets
+            .iter()
+            .find(|b| b.batch >= n)
+            .unwrap_or_else(|| self.buckets.last().unwrap())
+    }
+
+    pub fn max_bucket(&self) -> u32 {
+        self.buckets.last().map(|b| b.batch).unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+vocab 256
+d_model 64
+n_layers 4
+n_heads 4
+head_dim 16
+max_seq 256
+param_count 229952
+seed 20240711
+bucket 1 prefill_b1.hlo.txt decode_b1.hlo.txt
+bucket 8 prefill_b8.hlo.txt decode_b8.hlo.txt
+bucket 4 prefill_b4.hlo.txt decode_b4.hlo.txt
+";
+
+    #[test]
+    fn parses_and_sorts_buckets() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.param_count, 229_952);
+        let batches: Vec<u32> = m.buckets.iter().map(|b| b.batch).collect();
+        assert_eq!(batches, vec![1, 4, 8]);
+        assert_eq!(m.buckets[0].prefill, PathBuf::from("/a/prefill_b1.hlo.txt"));
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        assert_eq!(m.bucket_for(1).batch, 1);
+        assert_eq!(m.bucket_for(2).batch, 4);
+        assert_eq!(m.bucket_for(5).batch, 8);
+        assert_eq!(m.bucket_for(100).batch, 8, "clamped to largest");
+        assert_eq!(m.max_bucket(), 8);
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        assert!(Manifest::parse("vocab 1\nbucket 1 a b\n", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn no_buckets_is_error() {
+        let text = SAMPLE
+            .lines()
+            .filter(|l| !l.starts_with("bucket"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        assert!(Manifest::parse(&text, PathBuf::new()).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! The PJRT runtime: loads the AOT-compiled HLO artifacts (Layer-2 JAX
+//! model with Layer-1 Pallas kernels baked in) and executes them from the
+//! rust request path. Python never runs at serving time.
+
+pub mod manifest;
+pub mod model;
+pub mod engine;
+
+pub use engine::{EngineConfig, EngineRequest, EngineResult, ServeEngine};
+pub use manifest::Manifest;
+pub use model::TinyModel;

@@ -1,0 +1,227 @@
+//! The compiled tiny model: loads HLO text per batch bucket, compiles on
+//! the PJRT CPU client, and exposes typed prefill/decode calls.
+//!
+//! HLO text is the interchange format — jax ≥ 0.5 emits HloModuleProto
+//! with 64-bit ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::manifest::Manifest;
+
+/// Compiled executables for one batch bucket.
+struct BucketExe {
+    prefill: xla::PjRtLoadedExecutable,
+    decode: xla::PjRtLoadedExecutable,
+}
+
+/// KV cache state for a batch, as host-side literals round-tripped
+/// through PJRT between steps.
+pub struct BatchState {
+    pub batch: u32,
+    pub k: xla::Literal,
+    pub v: xla::Literal,
+    pub lengths: Vec<i32>,
+}
+
+/// The runtime model.
+pub struct TinyModel {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: HashMap<u32, BucketExe>,
+}
+
+impl TinyModel {
+    /// Load every bucket's executables from the artifact directory.
+    pub fn load(artifacts_dir: &str) -> Result<TinyModel> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+        let mut exes = HashMap::new();
+        for b in &manifest.buckets {
+            let load = |p: &std::path::Path| -> Result<xla::PjRtLoadedExecutable> {
+                let proto = xla::HloModuleProto::from_text_file(
+                    p.to_str().context("path utf8")?,
+                )
+                .map_err(|e| anyhow!("loading {}: {e:?}", p.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {}: {e:?}", p.display()))
+            };
+            exes.insert(
+                b.batch,
+                BucketExe {
+                    prefill: load(&b.prefill)?,
+                    decode: load(&b.decode)?,
+                },
+            );
+        }
+        Ok(TinyModel {
+            manifest,
+            client,
+            exes,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Prefill a batch of prompts (byte tokens). Prompts longer than
+    /// max_seq−1 are truncated. Returns per-sequence logits and the KV
+    /// state for subsequent decode steps.
+    pub fn prefill(&self, prompts: &[&[u8]]) -> Result<(Vec<Vec<f32>>, BatchState)> {
+        let n = prompts.len() as u32;
+        let bucket = self.manifest.bucket_for(n).batch;
+        let exe = &self.exes[&bucket];
+        let s = self.manifest.max_seq as usize;
+        let b = bucket as usize;
+
+        let mut tokens = vec![0i32; b * s];
+        let mut lengths = vec![1i32; b]; // pad rows decode garbage len 1
+        for (i, p) in prompts.iter().enumerate() {
+            let l = p.len().min(s - 1).max(1);
+            for (j, &byte) in p[..l].iter().enumerate() {
+                tokens[i * s + j] = byte as i32;
+            }
+            lengths[i] = l as i32;
+        }
+        let tok_lit = xla::Literal::vec1(&tokens)
+            .reshape(&[b as i64, s as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let len_lit = xla::Literal::vec1(&lengths);
+
+        let result = exe
+            .prefill
+            .execute::<xla::Literal>(&[tok_lit, len_lit])
+            .map_err(|e| anyhow!("prefill exec: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let (logits, k, v) = result.to_tuple3().map_err(|e| anyhow!("{e:?}"))?;
+        let logits_flat: Vec<f32> = logits.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let vsize = self.manifest.vocab as usize;
+        let out = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, _)| logits_flat[i * vsize..(i + 1) * vsize].to_vec())
+            .collect();
+        Ok((
+            out,
+            BatchState {
+                batch: bucket,
+                k,
+                v,
+                lengths,
+            },
+        ))
+    }
+
+    /// One decode step: feed each sequence's latest token; returns
+    /// per-sequence logits and advances the KV state in place.
+    pub fn decode_step(
+        &self,
+        state: &mut BatchState,
+        tokens: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let b = state.batch as usize;
+        let exe = &self.exes[&state.batch];
+        let mut toks = vec![0i32; b];
+        toks[..tokens.len().min(b)].copy_from_slice(&tokens[..tokens.len().min(b)]);
+        let tok_lit = xla::Literal::vec1(&toks);
+        let len_lit = xla::Literal::vec1(&state.lengths);
+        // §Perf: the caches from to_tuple3 already carry the right shape;
+        // reshaping cloned ~16 MiB per step. Pass them by reference.
+        let result = exe
+            .decode
+            .execute::<&xla::Literal>(&[&tok_lit, &state.k, &state.v, &len_lit])
+            .map_err(|e| anyhow!("decode exec: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let (logits, nk, nv) = result.to_tuple3().map_err(|e| anyhow!("{e:?}"))?;
+        state.k = nk;
+        state.v = nv;
+        for l in state.lengths.iter_mut() {
+            *l = (*l + 1).min(self.manifest.max_seq as i32 - 1);
+        }
+        let logits_flat: Vec<f32> = logits.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let vsize = self.manifest.vocab as usize;
+        Ok((0..b)
+            .map(|i| logits_flat[i * vsize..(i + 1) * vsize].to_vec())
+            .collect())
+    }
+
+    /// Greedy argmax sampling.
+    pub fn argmax(logits: &[f32]) -> i32 {
+        let mut best = 0;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        best as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<TinyModel> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(TinyModel::load(dir).expect("load artifacts"))
+    }
+
+    #[test]
+    fn prefill_decode_roundtrip() {
+        let Some(model) = artifacts() else { return };
+        let prompts: Vec<&[u8]> = vec![b"hello qlm", b"queue management"];
+        let (logits, mut state) = model.prefill(&prompts).unwrap();
+        assert_eq!(logits.len(), 2);
+        assert_eq!(logits[0].len(), 256);
+        assert!(logits[0].iter().all(|v| v.is_finite()));
+        let toks: Vec<i32> = logits.iter().map(|l| TinyModel::argmax(l)).collect();
+        let l0 = state.lengths.clone();
+        let out = model.decode_step(&mut state, &toks).unwrap();
+        assert_eq!(out.len(), state.batch as usize);
+        assert!(out[0].iter().all(|v| v.is_finite()));
+        assert_eq!(state.lengths[0], l0[0] + 1);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let Some(model) = artifacts() else { return };
+        let gen = || {
+            let (logits, mut st) = model.prefill(&[b"abc"]).unwrap();
+            let mut t = TinyModel::argmax(&logits[0]);
+            let mut seq = vec![t];
+            for _ in 0..4 {
+                let out = model.decode_step(&mut st, &[t]).unwrap();
+                t = TinyModel::argmax(&out[0]);
+                seq.push(t);
+            }
+            seq
+        };
+        assert_eq!(gen(), gen());
+    }
+
+    #[test]
+    fn different_prompts_differ() {
+        let Some(model) = artifacts() else { return };
+        let (la, _) = model.prefill(&[b"aaaa"]).unwrap();
+        let (lb, _) = model.prefill(&[b"zzzz"]).unwrap();
+        let diff: f32 = la[0]
+            .iter()
+            .zip(&lb[0])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(diff > 1e-4);
+    }
+}

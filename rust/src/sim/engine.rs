@@ -1,0 +1,1026 @@
+//! The discrete-event simulation engine.
+//!
+//! Events are (time, seq, kind) in a min-heap; instances wake to run one
+//! continuous-batching iteration, QLM agents actuate LSOs at wake time,
+//! and the global scheduler reorders virtual queues when the RWT
+//! estimator flags trouble (§3.1 lifecycle).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::time::Instant as WallInstant;
+
+use crate::backend::{Instance, InstanceConfig, InstanceId, ModelCatalog, ModelId, PerfModel, RunningSeq};
+use crate::baselines::Policy;
+use crate::coordinator::agent::{InstanceObservation, QlmAgent};
+use crate::coordinator::lso::LsoAction;
+use crate::coordinator::request::{Request, RequestState};
+use crate::coordinator::request_group::{GroupId, Grouper, RequestGroup};
+use crate::coordinator::rwt::{ProfileTable, RwtEstimator};
+use crate::coordinator::scheduler::{
+    GlobalScheduler, InstanceView, SchedulerConfig, SolverKind,
+};
+use crate::coordinator::virtual_queue::VirtualQueue;
+use crate::coordinator::GlobalQueue;
+use crate::metrics::{instance_metrics, RequestRecord, RunMetrics};
+use crate::sim::profiler::ThetaCache;
+use crate::workload::Trace;
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub fleet: Vec<InstanceConfig>,
+    pub catalog: ModelCatalog,
+    pub policy: Policy,
+    pub seed: u64,
+    /// δ — request-group size as a multiple of avg batch size (§8.3).
+    pub delta: f64,
+    /// Average batch size used for the group-size cap.
+    pub avg_batch: u32,
+    /// Hard stop (simulated seconds).
+    pub horizon_s: f64,
+    /// Min simulated gap between global-scheduler invocations.
+    pub sched_interval_s: f64,
+}
+
+impl SimConfig {
+    pub fn new(fleet: Vec<InstanceConfig>, catalog: ModelCatalog, policy: Policy) -> Self {
+        SimConfig {
+            fleet,
+            catalog,
+            policy,
+            seed: 0,
+            delta: 4.0,
+            avg_batch: 64,
+            horizon_s: 7200.0,
+            sched_interval_s: 0.25,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum EventKind {
+    Arrival(usize),
+    Wake(InstanceId),
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    t: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .partial_cmp(&other.t)
+            .unwrap()
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// The simulator.
+pub struct Simulation {
+    cfg: SimConfig,
+    now: f64,
+    seq: u64,
+    events: BinaryHeap<Reverse<Event>>,
+    instances: Vec<Instance>,
+    vqs: HashMap<InstanceId, VirtualQueue>,
+    agents: HashMap<InstanceId, QlmAgent>,
+    queue: GlobalQueue,
+    groups: HashMap<GroupId, RequestGroup>,
+    group_of: HashMap<u64, GroupId>,
+    grouper: Grouper,
+    scheduler: GlobalScheduler,
+    /// Static model pinning for no-swap policies (vLLM baseline).
+    pinned_model: HashMap<InstanceId, ModelId>,
+    needs_schedule: bool,
+    last_schedule: f64,
+    scheduler_wall_s: f64,
+    scheduler_invocations: u64,
+    /// Per-request wake deduplication: at most one pending Wake per
+    /// instance (avoids event-storm blowup).
+    wake_pending: HashMap<InstanceId, f64>,
+    /// Hardware-profiled Θ per (gpu, model) — §6 Offline Profiling.
+    thetas: ThetaCache,
+    /// End time of each instance's in-flight iteration: a step is an
+    /// atomic unit of GPU work; wakes landing inside it are deferred.
+    next_free: Vec<f64>,
+}
+
+impl Simulation {
+    pub fn new(cfg: SimConfig, trace: &Trace) -> Self {
+        // Workload profiling (§6, Offline Profiling): moments from the
+        // request history dataset — we use the trace itself as history.
+        let mut profiles = ProfileTable::from_trace(trace);
+        if cfg.policy.conservative_estimator() {
+            // SHEPHERD-style deterministic worst-case estimates: every
+            // request is assumed to run to the max output length.
+            profiles = conservative(&profiles, trace);
+        }
+        let estimator = RwtEstimator::new(profiles);
+        let solver = match cfg.policy {
+            Policy::Qlm { solver, .. } => solver,
+            _ => SolverKind::Greedy,
+        };
+        let scheduler = GlobalScheduler::new(
+            SchedulerConfig {
+                solver,
+                ..Default::default()
+            },
+            estimator,
+        );
+        let instances: Vec<Instance> = cfg
+            .fleet
+            .iter()
+            .map(|c| Instance::new(c.clone(), cfg.catalog.clone()))
+            .collect();
+        let vqs = instances
+            .iter()
+            .map(|i| (i.config.id, VirtualQueue::new(i.config.id)))
+            .collect();
+        let lso = cfg.policy.lso();
+        let agents = instances
+            .iter()
+            .map(|i| (i.config.id, QlmAgent::new(i.config.id, lso)))
+            .collect();
+        let grouper = Grouper::new(cfg.delta, cfg.avg_batch, cfg.seed ^ 0x9E37);
+        let n_instances = instances.len();
+        let mut sim = Simulation {
+            now: 0.0,
+            seq: 0,
+            events: BinaryHeap::new(),
+            instances,
+            vqs,
+            agents,
+            queue: GlobalQueue::new(),
+            groups: HashMap::new(),
+            group_of: HashMap::new(),
+            grouper,
+            scheduler,
+            pinned_model: HashMap::new(),
+            needs_schedule: false,
+            last_schedule: -1e9,
+            scheduler_wall_s: 0.0,
+            scheduler_invocations: 0,
+            wake_pending: HashMap::new(),
+            thetas: ThetaCache::new(),
+            next_free: vec![0.0; n_instances],
+            cfg,
+        };
+        sim.init_pinning(trace);
+        for (i, r) in trace.requests.iter().enumerate() {
+            sim.push_event(r.arrival_s, EventKind::Arrival(i));
+        }
+        sim
+    }
+
+    fn push_event(&mut self, t: f64, kind: EventKind) {
+        self.seq += 1;
+        self.events.push(Reverse(Event {
+            t,
+            seq: self.seq,
+            kind,
+        }));
+    }
+
+    fn wake(&mut self, id: InstanceId, t: f64) {
+        // Coalesce: skip if an earlier-or-equal wake is already pending.
+        if let Some(&pending) = self.wake_pending.get(&id) {
+            if pending <= t + 1e-12 {
+                return;
+            }
+        }
+        self.wake_pending.insert(id, t);
+        self.push_event(t, EventKind::Wake(id));
+    }
+
+    /// Static model placement for policies without model swapping:
+    /// distribute instances over models proportionally to request share
+    /// (what an operator running vanilla vLLM would provision).
+    fn init_pinning(&mut self, trace: &Trace) {
+        if self.cfg.policy.lso().model_swapping {
+            return;
+        }
+        let mut counts: HashMap<ModelId, usize> = HashMap::new();
+        for r in &trace.requests {
+            *counts.entry(r.model).or_default() += 1;
+        }
+        let mut models: Vec<(ModelId, usize)> = counts.into_iter().collect();
+        models.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let total: usize = models.iter().map(|(_, c)| c).sum();
+        let n_inst = self.instances.len();
+        // Quota per model (≥1), largest first.
+        let mut quota: Vec<(ModelId, usize)> = models
+            .iter()
+            .map(|&(m, c)| (m, ((c as f64 / total as f64) * n_inst as f64).round().max(1.0) as usize))
+            .collect();
+        // Trim/extend to exactly n_inst.
+        let mut assigned: usize = quota.iter().map(|(_, q)| q).sum();
+        let mut i = 0;
+        let nq = quota.len();
+        while assigned > n_inst && nq > 0 {
+            // Prefer shrinking an over-provisioned model; if every quota
+            // is already 1 (more models than instances), drop the least
+            // popular model entirely — static provisioning cannot serve
+            // more models than it has instances.
+            if let Some(k) = (0..nq).filter(|&k| quota[k].1 > 1).max_by_key(|&k| quota[k].1)
+            {
+                quota[k].1 -= 1;
+            } else if let Some(k) = (0..nq).rev().find(|&k| quota[k].1 == 1) {
+                quota[k].1 = 0;
+            } else {
+                break;
+            }
+            assigned -= 1;
+        }
+        while assigned < n_inst && nq > 0 {
+            quota[i % nq].1 += 1;
+            assigned += 1;
+            i += 1;
+        }
+        // Pin: each instance gets the next model with remaining quota it
+        // can actually serve.
+        let catalog = self.cfg.catalog.clone();
+        for inst in &mut self.instances {
+            let gpu = inst.config.gpu;
+            let pick = quota
+                .iter_mut()
+                .find(|(m, q)| *q > 0 && PerfModel::fits(catalog.get(*m), gpu))
+                .map(|e| {
+                    e.1 -= 1;
+                    e.0
+                })
+                .or_else(|| {
+                    quota
+                        .iter()
+                        .map(|&(m, _)| m)
+                        .find(|&m| PerfModel::fits(catalog.get(m), gpu))
+                });
+            if let Some(m) = pick {
+                self.pinned_model.insert(inst.config.id, m);
+                let (_ready, displaced) = inst.swap_model(m, 0.0);
+                debug_assert!(displaced.is_empty());
+            }
+        }
+    }
+
+    /// Run to completion (all requests served) or the horizon.
+    pub fn run(mut self, trace: &Trace) -> RunMetrics {
+        let total = trace.len();
+        while let Some(Reverse(ev)) = self.events.pop() {
+            if ev.t > self.cfg.horizon_s {
+                // Horizon hit: still register any not-yet-arrived requests
+                // so metrics count them (as violations if unserved).
+                if let EventKind::Arrival(i) = ev.kind {
+                    let req = Request::from_trace(0, &trace.requests[i]);
+                    self.queue.submit(req);
+                }
+                while let Some(Reverse(e2)) = self.events.pop() {
+                    if let EventKind::Arrival(i) = e2.kind {
+                        let req = Request::from_trace(0, &trace.requests[i]);
+                        self.queue.submit(req);
+                    }
+                }
+                break;
+            }
+            self.now = ev.t;
+            match ev.kind {
+                EventKind::Arrival(i) => self.on_arrival(&trace.requests[i]),
+                EventKind::Wake(id) => {
+                    self.wake_pending.remove(&id);
+                    self.on_wake(id);
+                }
+            }
+            self.maybe_schedule();
+            if self.queue.completed.len() == total {
+                break;
+            }
+        }
+        self.finish()
+    }
+
+    fn on_arrival(&mut self, tr: &crate::workload::TraceRequest) {
+        let req = Request::from_trace(0, tr);
+        let id = self.queue.submit(req);
+        // Group formation (§4).
+        let req = self.queue.get(id).unwrap().clone();
+        let gid = if self.cfg.policy.uses_groups() {
+            // §Perf: classify in place (cloning every live group per
+            // arrival was O(groups × members) per request).
+            self.classify_in_place(&req)
+        } else {
+            // Per-request singleton groups (EDF / vLLM).
+            let mut group_list: Vec<RequestGroup> = Vec::new();
+            let mut single = Grouper::new(0.0, 1, self.cfg.seed);
+            // fresh ids must not collide with grouper's: offset by req id.
+            let _ = single.classify(&req, &mut group_list);
+            let mut g = group_list.pop().unwrap();
+            g.id = GroupId(id); // singleton groups: id = request id (FCFS order)
+            let gid = g.id;
+            self.groups.insert(gid, g);
+            let _ = single;
+            let _ = gid;
+            self.group_of.insert(id, gid);
+            self.needs_schedule = true;
+            self.wake_idle();
+            return;
+        };
+        self.group_of.insert(id, gid);
+        self.needs_schedule = true;
+        self.wake_idle();
+    }
+
+    /// Incremental request-group classification (§4, Handling New
+    /// Incoming Requests) against the live group table, no copies.
+    fn classify_in_place(&mut self, req: &Request) -> GroupId {
+        let cap = self.grouper.max_group_size();
+        if let Some(g) = self.groups.values_mut().find(|g| {
+            g.model == req.model
+                && g.class == req.class
+                && g.mega == req.mega
+                && g.len() < cap
+        }) {
+            g.members.push_back(req.id);
+            g.slo_s = g.slo_s.min(req.slo_s);
+            g.earliest_arrival_s = g.earliest_arrival_s.min(req.arrival_s);
+            return g.id;
+        }
+        let mut list = Vec::new();
+        let gid = self.grouper.classify(req, &mut list);
+        let g = list.pop().unwrap();
+        self.groups.insert(gid, g);
+        gid
+    }
+
+    fn wake_idle(&mut self) {
+        let ids: Vec<InstanceId> = self
+            .instances
+            .iter()
+            .filter(|i| i.is_idle())
+            .map(|i| i.config.id)
+            .collect();
+        for id in ids {
+            let t = self.now.max(self.inst(id).busy_until());
+            self.wake(id, t);
+        }
+    }
+
+    fn inst(&self, id: InstanceId) -> &Instance {
+        &self.instances[id.0 as usize]
+    }
+
+    fn inst_mut(&mut self, id: InstanceId) -> &mut Instance {
+        &mut self.instances[id.0 as usize]
+    }
+
+    /// Waiting members of a group (Waiting or Evicted state).
+    fn waiting_of(&self, gid: GroupId) -> Vec<u64> {
+        let Some(g) = self.groups.get(&gid) else {
+            return Vec::new();
+        };
+        g.members
+            .iter()
+            .copied()
+            .filter(|id| {
+                self.queue
+                    .get(*id)
+                    .map(|r| {
+                        matches!(r.state, RequestState::Waiting | RequestState::Evicted)
+                    })
+                    .unwrap_or(false)
+            })
+            .collect()
+    }
+
+    fn observation(&self, id: InstanceId) -> InstanceObservation {
+        let inst = self.inst(id);
+        let running = inst
+            .running()
+            .iter()
+            .filter_map(|s| self.group_of.get(&s.req_id).map(|&g| (s.req_id, g)))
+            .collect();
+        // vLLM semantics: internally preempted (swapped) sequences have
+        // strict priority over new admissions — while any exist, the
+        // instance is considered full. Without this gate, fresh prompts
+        // steal the blocks preempted sequences need and TTFT collapses to
+        // prefill time while per-request progress starves.
+        let spare = if inst.swapped_len() > 0 {
+            0
+        } else {
+            inst.spare_tokens()
+        };
+        InstanceObservation {
+            id,
+            active_model: inst.active_model(),
+            swapping: inst.is_swapping(self.now),
+            running,
+            spare_capacity_tokens: spare,
+            batch_slots_free: inst.batch_slots_free(),
+        }
+    }
+
+    fn on_wake(&mut self, id: InstanceId) {
+        // Mid-swap: try again when the swap completes.
+        let busy_until = self.inst(id).busy_until();
+        if self.now < busy_until {
+            self.wake(id, busy_until);
+            return;
+        }
+        // Mid-iteration: a decode step is atomic GPU work; defer.
+        let free_at = self.next_free[id.0 as usize];
+        if self.now < free_at - 1e-12 {
+            self.wake(id, free_at);
+            return;
+        }
+
+        // SHEPHERD fixed batches: only admit when the batch fully drained.
+        let fixed = self.cfg.policy.fixed_batches();
+        let can_admit = !fixed || self.inst(id).running_len() == 0;
+
+        if can_admit {
+            let vq = self.vqs.get(&id).unwrap().clone();
+            let obs = self.observation(id);
+            let agent = self.agents.get(&id).unwrap().clone();
+            let queue_ref = &self.queue;
+            let groups_ref = &self.groups;
+            let profiles_ref = &self.scheduler.estimator.profiles;
+            let actions = agent.decide(
+                &vq,
+                groups_ref,
+                |g| {
+                    // inline waiting_of to avoid double borrow
+                    groups_ref
+                        .get(&g)
+                        .map(|grp| {
+                            grp.members
+                                .iter()
+                                .copied()
+                                .filter(|rid| {
+                                    queue_ref
+                                        .get(*rid)
+                                        .map(|r| {
+                                            matches!(
+                                                r.state,
+                                                RequestState::Waiting | RequestState::Evicted
+                                            )
+                                        })
+                                        .unwrap_or(false)
+                                })
+                                .collect()
+                        })
+                        .unwrap_or_default()
+                },
+                &obs,
+                |rid| {
+                    queue_ref
+                        .get(rid)
+                        .map(|r| {
+                            if fixed {
+                                // SHEPHERD-style fixed batches must be
+                                // sized for the deterministic worst case:
+                                // prompt + max output tokens (this is the
+                                // under-utilization Fig. 1 critiques).
+                                let prof = profiles_ref.get(r.model, r.class, r.mega);
+                                r.input_tokens as u64 + prof.max_out as u64
+                            } else {
+                                (r.input_tokens + r.generated) as u64
+                            }
+                        })
+                        .unwrap_or(0)
+                },
+            );
+            self.apply_actions(id, actions);
+        }
+
+        // One continuous-batching iteration.
+        let now = self.now;
+        let out = self.inst_mut(id).step(now);
+        for (rid, t) in &out.first_tokens {
+            self.queue.record_first_token(*rid, *t);
+        }
+        let t_done = self.now + out.dt;
+        for seq in out.completed {
+            self.queue
+                .complete(seq.req_id, seq.first_token_at, t_done);
+            self.on_request_done(seq.req_id, id);
+        }
+        if out.dt > 0.0 {
+            self.next_free[id.0 as usize] = t_done;
+            self.wake(id, t_done);
+        } else if !self.inst(id).is_idle() {
+            // Has swapped-out work but no progress possible; re-check soon.
+            self.wake(id, self.now + 0.05);
+        }
+    }
+
+    fn apply_actions(&mut self, id: InstanceId, actions: Vec<LsoAction>) {
+        for a in actions {
+            match a {
+                LsoAction::SwapModel { model, .. } => {
+                    let now = self.now;
+                    let (ready, displaced) = self.inst_mut(id).swap_model(model, now);
+                    for seq in displaced {
+                        self.queue.requeue_evicted(seq.req_id, seq.generated, id);
+                    }
+                    // Warm-set update from the vq's model order (§5).
+                    let order: Vec<ModelId> = {
+                        let vq = &self.vqs[&id];
+                        let groups = &self.groups;
+                        vq.model_order(|g| groups.get(&g))
+                    };
+                    self.inst_mut(id).registry_mut().set_warm_set(&order);
+                    self.wake(id, ready);
+                }
+                LsoAction::Evict { requests, .. } => {
+                    let now = self.now;
+                    let evicted = self.inst_mut(id).evict(&requests, now);
+                    for seq in evicted {
+                        self.queue.requeue_evicted(seq.req_id, seq.generated, id);
+                    }
+                    self.needs_schedule = true;
+                }
+                LsoAction::Pull { request, .. } => {
+                    let Some(r) = self.queue.get(request) else {
+                        continue;
+                    };
+                    let seq = RunningSeq {
+                        req_id: r.id,
+                        model: r.model,
+                        prompt_tokens: r.input_tokens,
+                        target_output: r.output_tokens_hidden.max(1),
+                        generated: r.generated,
+                        first_token_at: r.first_token_s,
+                        arrival_s: r.arrival_s,
+                    };
+                    let now = self.now;
+                    let res = if r.evicted_from == Some(id) {
+                        self.inst_mut(id).try_restore(seq, now)
+                    } else {
+                        self.inst_mut(id).try_admit(seq, now)
+                    };
+                    if res.is_ok() {
+                        self.queue.mark_running(request);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Request finished: drop from its group; empty groups leave their
+    /// virtual queue (§4: groups dequeue when all requests complete).
+    fn on_request_done(&mut self, rid: u64, _inst: InstanceId) {
+        let Some(gid) = self.group_of.remove(&rid) else {
+            return;
+        };
+        let empty = {
+            let Some(g) = self.groups.get_mut(&gid) else {
+                return;
+            };
+            g.members.retain(|&m| m != rid);
+            g.is_empty()
+        };
+        if empty {
+            self.groups.remove(&gid);
+            for vq in self.vqs.values_mut() {
+                vq.remove(gid);
+            }
+            self.needs_schedule = true;
+        }
+    }
+
+    /// Scheduler's instance views.
+    fn views(&mut self) -> Vec<InstanceView> {
+        let catalog = self.cfg.catalog.clone();
+        let mut views = Vec::new();
+        let model_ids = catalog.ids();
+        for idx in 0..self.instances.len() {
+            let id = self.instances[idx].config.id;
+            let gpu = self.instances[idx].config.gpu;
+            let mut perf_for = HashMap::new();
+            let mut swap_time = HashMap::new();
+            for &m in &model_ids {
+                // Pinned instances only serve their pinned model.
+                if let Some(&pm) = self.pinned_model.get(&id) {
+                    if pm != m {
+                        continue;
+                    }
+                }
+                if let Some(p) = self.thetas.perf(gpu, m, &catalog, 161.0) {
+                    swap_time
+                        .insert(m, self.instances[idx].registry().swap_in_time_s(m, &p));
+                    perf_for.insert(m, p);
+                }
+            }
+            // Executing group: group of the oldest running request.
+            let executing = self.instances[idx]
+                .running()
+                .first()
+                .and_then(|s| self.group_of.get(&s.req_id).copied());
+            views.push(InstanceView {
+                id,
+                active_model: self.instances[idx].active_model(),
+                perf_for,
+                swap_time,
+                executing,
+            });
+        }
+        views
+    }
+
+    fn maybe_schedule(&mut self) {
+        if !self.needs_schedule
+            || self.now - self.last_schedule < self.cfg.sched_interval_s
+        {
+            return;
+        }
+        self.needs_schedule = false;
+        self.last_schedule = self.now;
+        // Re-anchor each group's deadline to its earliest *unserved*
+        // member: served members have their TTFT already, so a group's
+        // binding constraint is the oldest request still waiting. Without
+        // this, long-lived batch groups permanently outrank fresh
+        // interactive arrivals in deadline order.
+        let earliest: Vec<(GroupId, f64)> = self
+            .groups
+            .values()
+            .map(|g| {
+                let e = g
+                    .members
+                    .iter()
+                    .filter(|&&m| {
+                        self.queue
+                            .get(m)
+                            .map(|r| {
+                                matches!(
+                                    r.state,
+                                    RequestState::Waiting | RequestState::Evicted
+                                )
+                            })
+                            .unwrap_or(false)
+                    })
+                    .filter_map(|&m| self.queue.get(m).map(|r| r.arrival_s))
+                    .fold(f64::INFINITY, f64::min);
+                (g.id, e)
+            })
+            .collect();
+        for (gid, e) in earliest {
+            if e.is_finite() {
+                if let Some(g) = self.groups.get_mut(&gid) {
+                    g.earliest_arrival_s = e;
+                }
+            }
+        }
+        let wall = WallInstant::now();
+
+        match self.cfg.policy {
+            Policy::VllmFcfs => self.schedule_fcfs(),
+            Policy::Edf => self.schedule_edf(),
+            Policy::Qlm { lso, .. } if !lso.load_balancing => {
+                self.schedule_round_robin()
+            }
+            _ => self.schedule_qlm(),
+        }
+
+        self.scheduler_wall_s += wall.elapsed().as_secs_f64();
+        self.scheduler_invocations += 1;
+        // New orders may unblock idle instances.
+        self.wake_idle();
+        let ids: Vec<InstanceId> =
+            self.instances.iter().map(|i| i.config.id).collect();
+        for id in ids {
+            let t = self.now.max(self.inst(id).busy_until());
+            self.wake(id, t);
+        }
+    }
+
+    /// QLM / SHEPHERD: global scheduler over request groups.
+    fn schedule_qlm(&mut self) {
+        let views = self.views();
+        let groups: Vec<RequestGroup> = self.groups.values().cloned().collect();
+        let assignment = self.scheduler.schedule(&groups, &views, self.now);
+        for (id, order) in assignment.orders {
+            if let Some(vq) = self.vqs.get_mut(&id) {
+                vq.set_order(order);
+            }
+        }
+        // Refresh warm sets from the new orderings (§5 model swapping).
+        if self.cfg.policy.lso().model_swapping {
+            let ids: Vec<InstanceId> = self.vqs.keys().copied().collect();
+            for id in ids {
+                let order: Vec<ModelId> = {
+                    let vq = &self.vqs[&id];
+                    let groups = &self.groups;
+                    vq.model_order(|g| groups.get(&g))
+                };
+                self.inst_mut(id).registry_mut().set_warm_set(&order);
+            }
+        }
+    }
+
+    /// Load-balancing ablation (Fig. 15's round-robin comparator, and
+    /// the `-nolb` rows of Figs. 11/14): groups are dealt round-robin to
+    /// compatible instances with no RWT-informed placement; per-queue
+    /// ordering keeps arrival order.
+    fn schedule_round_robin(&mut self) {
+        let views = self.views();
+        let mut groups: Vec<&RequestGroup> = self.groups.values().collect();
+        groups.sort_by(|a, b| {
+            a.deadline()
+                .partial_cmp(&b.deadline())
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        let mut orders: HashMap<InstanceId, Vec<GroupId>> =
+            views.iter().map(|v| (v.id, Vec::new())).collect();
+        for v in &views {
+            if let Some(g) = v.executing {
+                if self.groups.contains_key(&g) {
+                    orders.get_mut(&v.id).unwrap().push(g);
+                }
+            }
+        }
+        let pinned: Vec<GroupId> = views.iter().filter_map(|v| v.executing).collect();
+        let mut rr = 0usize;
+        for g in groups {
+            if pinned.contains(&g.id) {
+                continue;
+            }
+            // Next compatible instance in rotation, blind to load.
+            let mut placed = false;
+            for k in 0..views.len() {
+                let v = &views[(rr + k) % views.len()];
+                if v.can_serve(g.model) {
+                    orders.get_mut(&v.id).unwrap().push(g.id);
+                    rr = (rr + k + 1) % views.len();
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                if let Some(v) = views.first() {
+                    orders.get_mut(&v.id).unwrap().push(g.id);
+                }
+            }
+        }
+        for (id, order) in orders {
+            if let Some(vq) = self.vqs.get_mut(&id) {
+                vq.set_order(order);
+            }
+        }
+    }
+
+    /// EDF baseline: deadline-sorted singleton groups, least-loaded
+    /// compatible instance.
+    fn schedule_edf(&mut self) {
+        let views = self.views();
+        let mut groups: Vec<&RequestGroup> = self.groups.values().collect();
+        groups.sort_by(|a, b| {
+            a.deadline()
+                .partial_cmp(&b.deadline())
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        // Load = total waiting tokens per instance.
+        let mut load: HashMap<InstanceId, f64> =
+            views.iter().map(|v| (v.id, 0.0)).collect();
+        let mut orders: HashMap<InstanceId, Vec<GroupId>> =
+            views.iter().map(|v| (v.id, Vec::new())).collect();
+        // Keep executing groups pinned at the head.
+        for v in &views {
+            if let Some(g) = v.executing {
+                if self.groups.contains_key(&g) {
+                    orders.get_mut(&v.id).unwrap().push(g);
+                }
+            }
+        }
+        let pinned: Vec<GroupId> = views.iter().filter_map(|v| v.executing).collect();
+        for g in groups {
+            if pinned.contains(&g.id) {
+                continue;
+            }
+            let best = views
+                .iter()
+                .filter(|v| v.can_serve(g.model))
+                .min_by(|a, b| load[&a.id].partial_cmp(&load[&b.id]).unwrap());
+            if let Some(v) = best {
+                orders.get_mut(&v.id).unwrap().push(g.id);
+                *load.get_mut(&v.id).unwrap() += g.len() as f64;
+            }
+        }
+        for (id, order) in orders {
+            if let Some(vq) = self.vqs.get_mut(&id) {
+                vq.set_order(order);
+            }
+        }
+    }
+
+    /// vLLM baseline: FCFS onto the pinned instance with least load.
+    fn schedule_fcfs(&mut self) {
+        let views = self.views();
+        let mut groups: Vec<&RequestGroup> = self.groups.values().collect();
+        // FCFS = earliest arrival first (group id breaks Dump-trace ties).
+        groups.sort_by(|a, b| {
+            a.earliest_arrival_s
+                .partial_cmp(&b.earliest_arrival_s)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        let mut load: HashMap<InstanceId, f64> =
+            views.iter().map(|v| (v.id, 0.0)).collect();
+        let mut orders: HashMap<InstanceId, Vec<GroupId>> =
+            views.iter().map(|v| (v.id, Vec::new())).collect();
+        for v in &views {
+            if let Some(g) = v.executing {
+                if self.groups.contains_key(&g) {
+                    orders.get_mut(&v.id).unwrap().push(g);
+                }
+            }
+        }
+        let pinned: Vec<GroupId> = views.iter().filter_map(|v| v.executing).collect();
+        for g in groups {
+            if pinned.contains(&g.id) {
+                continue;
+            }
+            let best = views
+                .iter()
+                .filter(|v| self.pinned_model.get(&v.id) == Some(&g.model))
+                .min_by(|a, b| load[&a.id].partial_cmp(&load[&b.id]).unwrap());
+            if let Some(v) = best {
+                orders.get_mut(&v.id).unwrap().push(g.id);
+                *load.get_mut(&v.id).unwrap() += g.len() as f64;
+            }
+        }
+        for (id, order) in orders {
+            if let Some(vq) = self.vqs.get_mut(&id) {
+                vq.set_order(order);
+            }
+        }
+    }
+
+    fn finish(self) -> RunMetrics {
+        // Archive unfinished requests too (they count as violations).
+        let remaining: Vec<u64> = self.queue.waiting_ids().to_vec();
+        let mut records: Vec<RequestRecord> = self
+            .queue
+            .completed
+            .iter()
+            .map(RequestRecord::from_request)
+            .collect();
+        for id in remaining {
+            if let Some(r) = self.queue.get(id) {
+                records.push(RequestRecord::from_request(r));
+            }
+        }
+        // Running-but-unfinished at horizon.
+        for inst in &self.instances {
+            for s in inst.running() {
+                if let Some(r) = self.queue.get(s.req_id) {
+                    records.push(RequestRecord::from_request(r));
+                }
+            }
+        }
+        records.sort_by_key(|r| r.id);
+        records.dedup_by_key(|r| r.id);
+        let duration = records
+            .iter()
+            .filter_map(|r| r.completed_s)
+            .fold(0.0_f64, f64::max)
+            .max(self.now);
+        RunMetrics {
+            policy: self.cfg.policy.name(),
+            records,
+            instances: self.instances.iter().map(instance_metrics).collect(),
+            duration_s: duration,
+            scheduler_wall_s: self.scheduler_wall_s,
+            scheduler_invocations: self.scheduler_invocations,
+        }
+    }
+}
+
+/// SHEPHERD's deterministic worst-case profile: μ_out := max_out, σ := 0.
+fn conservative(profiles: &ProfileTable, trace: &Trace) -> ProfileTable {
+    let mut out = ProfileTable::default();
+    let mut keys: Vec<(ModelId, crate::workload::SloClass, bool)> = trace
+        .requests
+        .iter()
+        .map(|r| (r.model, r.class, r.mega))
+        .collect();
+    keys.sort();
+    keys.dedup();
+    for (m, c, mg) in keys {
+        let mut p = profiles.get(m, c, mg);
+        p.mu_out = p.max_out;
+        p.sigma_out = 0.0;
+        out.insert(m, c, mg, p);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fleet_a100;
+    use crate::workload::WorkloadSpec;
+
+    fn small_trace(rate: f64, n: usize) -> Trace {
+        let spec = WorkloadSpec::w_a(ModelId(0), rate, n);
+        Trace::generate(&spec, 42)
+    }
+
+    fn run_policy(policy: Policy, rate: f64, n: usize, fleet: u32) -> RunMetrics {
+        let trace = small_trace(rate, n);
+        let cfg = SimConfig::new(fleet_a100(fleet), ModelCatalog::paper(), policy);
+        Simulation::new(cfg, &trace).run(&trace)
+    }
+
+    #[test]
+    fn qlm_completes_all_requests_light_load() {
+        let m = run_policy(Policy::qlm(), 5.0, 200, 2);
+        assert_eq!(m.completed_count(), 200, "{}", m.summary());
+        assert!(m.slo_attainment() > 0.9, "{}", m.summary());
+    }
+
+    #[test]
+    fn vllm_completes_all_requests_light_load() {
+        let m = run_policy(Policy::VllmFcfs, 5.0, 200, 2);
+        assert_eq!(m.completed_count(), 200, "{}", m.summary());
+    }
+
+    #[test]
+    fn edf_completes_all_requests_light_load() {
+        let m = run_policy(Policy::Edf, 5.0, 200, 2);
+        assert_eq!(m.completed_count(), 200, "{}", m.summary());
+    }
+
+    #[test]
+    fn shepherd_completes_all_requests_light_load() {
+        let m = run_policy(Policy::Shepherd, 5.0, 200, 2);
+        assert_eq!(m.completed_count(), 200, "{}", m.summary());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run_policy(Policy::qlm(), 10.0, 150, 2);
+        let b = run_policy(Policy::qlm(), 10.0, 150, 2);
+        assert_eq!(a.completed_count(), b.completed_count());
+        assert!((a.slo_attainment() - b.slo_attainment()).abs() < 1e-12);
+        assert!((a.mean_ttft() - b.mean_ttft()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn qlm_beats_vllm_under_pressure() {
+        // Overloaded single instance: QLM should prioritize interactive
+        // requests and win on SLO attainment.
+        let qlm = run_policy(Policy::qlm(), 40.0, 400, 1);
+        let vllm = run_policy(Policy::VllmFcfs, 40.0, 400, 1);
+        assert!(
+            qlm.slo_attainment() >= vllm.slo_attainment(),
+            "qlm {} vs vllm {}",
+            qlm.summary(),
+            vllm.summary()
+        );
+    }
+
+    #[test]
+    fn multi_model_swapping_occurs() {
+        let b1 = vec![ModelId(0), ModelId(1)];
+        let b2 = vec![ModelId(2), ModelId(1)];
+        let spec = WorkloadSpec::w_b(b1, b2, 20.0, 300);
+        let trace = Trace::generate(&spec, 7);
+        let cfg = SimConfig::new(
+            fleet_a100(2),
+            ModelCatalog::paper(),
+            Policy::qlm(),
+        );
+        let m = Simulation::new(cfg, &trace).run(&trace);
+        assert!(m.total_model_swaps() >= 2, "{}", m.summary());
+        assert!(m.completed_count() > 250, "{}", m.summary());
+    }
+
+    #[test]
+    fn horizon_caps_runtime() {
+        let trace = small_trace(50.0, 500);
+        let mut cfg = SimConfig::new(
+            fleet_a100(1),
+            ModelCatalog::paper(),
+            Policy::qlm(),
+        );
+        cfg.horizon_s = 5.0;
+        let m = Simulation::new(cfg, &trace).run(&trace);
+        // Not all done, but the run terminates and records everyone.
+        assert_eq!(m.records.len(), 500);
+    }
+}

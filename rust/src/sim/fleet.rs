@@ -1,0 +1,83 @@
+//! Fleet construction helpers for the paper's testbed configurations.
+
+use crate::backend::{GpuKind, InstanceConfig};
+
+/// A cluster description: counts per GPU kind.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetSpec {
+    pub a100: u32,
+    pub a10: u32,
+}
+
+impl FleetSpec {
+    /// The paper's full testbed (§8): 50 A100 + 30 A10.
+    pub fn paper() -> Self {
+        FleetSpec { a100: 50, a10: 30 }
+    }
+
+    pub fn total(&self) -> u32 {
+        self.a100 + self.a10
+    }
+
+    pub fn build(&self) -> Vec<InstanceConfig> {
+        let mut out = Vec::new();
+        let mut id = 0;
+        for _ in 0..self.a100 {
+            out.push(InstanceConfig::new(id, GpuKind::A100));
+            id += 1;
+        }
+        for _ in 0..self.a10 {
+            out.push(InstanceConfig::new(id, GpuKind::A10));
+            id += 1;
+        }
+        out
+    }
+}
+
+/// `n` homogeneous A100 instances.
+pub fn fleet_a100(n: u32) -> Vec<InstanceConfig> {
+    FleetSpec { a100: n, a10: 0 }.build()
+}
+
+/// Mixed fleet with `a10_fraction` of `total` instances as A10s
+/// (Fig. 15's heterogeneity sweep).
+pub fn fleet_mixed(total: u32, a10_fraction: f64) -> Vec<InstanceConfig> {
+    let a10 = (total as f64 * a10_fraction).round() as u32;
+    FleetSpec {
+        a100: total - a10,
+        a10,
+    }
+    .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fleet_size() {
+        let f = FleetSpec::paper();
+        assert_eq!(f.total(), 80);
+        assert_eq!(f.build().len(), 80);
+    }
+
+    #[test]
+    fn mixed_fraction() {
+        let f = fleet_mixed(10, 0.3);
+        let a10 = f
+            .iter()
+            .filter(|c| c.gpu == GpuKind::A10)
+            .count();
+        assert_eq!(a10, 3);
+        assert_eq!(f.len(), 10);
+    }
+
+    #[test]
+    fn ids_unique() {
+        let f = FleetSpec { a100: 5, a10: 5 }.build();
+        let mut ids: Vec<u32> = f.iter().map(|c| c.id.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 10);
+    }
+}

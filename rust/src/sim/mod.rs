@@ -1,0 +1,12 @@
+//! Discrete-event cluster simulator: the paper's 30×A10 + 50×A100 testbed
+//! in software. Drives [`crate::backend::Instance`]s token-accurately
+//! under a [`crate::baselines::Policy`], with the QLM coordinator on the
+//! control path exactly as in Fig. 6.
+
+pub mod engine;
+pub mod fleet;
+pub mod profiler;
+
+pub use engine::{SimConfig, Simulation};
+pub use fleet::{fleet_a100, fleet_mixed, FleetSpec};
+pub use profiler::{profile_theta, ThetaCache};

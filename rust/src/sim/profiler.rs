@@ -1,0 +1,172 @@
+//! Hardware profiling (§6, Offline Profiling): "requires running the
+//! model with a single batch of requests on the specific GPU. Fixed
+//! variables ... are obtained by directly logging these metrics from the
+//! LLM serving instance."
+//!
+//! We do exactly that against the simulated instance: load the model,
+//! keep the batch topped up with workload-representative requests, and
+//! log the steady-state token generation throughput Θ. The measured Θ is
+//! attached to [`PerfModel::measured_theta`] so the RWT estimator and the
+//! backend share one ground truth — as they do in the real system.
+
+use std::collections::HashMap;
+
+use crate::backend::{GpuKind, Instance, InstanceConfig, ModelCatalog, ModelId, PerfModel, RunningSeq};
+use crate::util::Rng;
+use crate::workload::ShareGptSampler;
+
+/// Cache of profiled Θ per (gpu, model).
+#[derive(Debug, Default, Clone)]
+pub struct ThetaCache {
+    map: HashMap<(GpuKind, ModelId), f64>,
+}
+
+impl ThetaCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get_or_profile(
+        &mut self,
+        gpu: GpuKind,
+        model: ModelId,
+        catalog: &ModelCatalog,
+    ) -> f64 {
+        *self
+            .map
+            .entry((gpu, model))
+            .or_insert_with(|| profile_theta(model, gpu, catalog, 0xBEEF))
+    }
+
+    /// Profiled perf for (model, gpu) with Θ attached; None if the model
+    /// doesn't fit.
+    pub fn perf(
+        &mut self,
+        gpu: GpuKind,
+        model: ModelId,
+        catalog: &ModelCatalog,
+        mean_prompt: f64,
+    ) -> Option<PerfModel> {
+        let mut p = PerfModel::try_profile(catalog.get(model), gpu, mean_prompt)?;
+        p.measured_theta = Some(self.get_or_profile(gpu, model, catalog));
+        Some(p)
+    }
+}
+
+/// Run the single-batch profiling workload and return steady-state Θ
+/// (tokens/second).
+pub fn profile_theta(model: ModelId, gpu: GpuKind, catalog: &ModelCatalog, seed: u64) -> f64 {
+    let mut inst = Instance::new(InstanceConfig::new(0, gpu), catalog.clone());
+    let (ready, _) = inst.swap_model(model, 0.0);
+    let mut now = ready;
+    let sampler = ShareGptSampler::default();
+    let mut rng = Rng::new(seed);
+    let mut next_id = 0u64;
+
+    let mut admit = |inst: &mut Instance, now: f64, rng: &mut Rng, next_id: &mut u64| {
+        // Top up the batch (vLLM keeps admitting while the prompt fits and
+        // no preempted sequences are pending).
+        while inst.swapped_len() == 0 && inst.batch_slots_free() > 0 {
+            let (input, output) = sampler.sample(rng);
+            if inst.spare_tokens() < input as u64 {
+                break;
+            }
+            let seq = RunningSeq {
+                req_id: *next_id,
+                model,
+                prompt_tokens: input,
+                target_output: output,
+                generated: 0,
+                first_token_at: None,
+                arrival_s: now,
+            };
+            if inst.try_admit(seq, now).is_err() {
+                break;
+            }
+            *next_id += 1;
+        }
+    };
+
+    // Warm up until the batch reaches steady state.
+    for _ in 0..300 {
+        admit(&mut inst, now, &mut rng, &mut next_id);
+        let out = inst.step(now);
+        if out.dt <= 0.0 {
+            break;
+        }
+        now += out.dt;
+    }
+    // Measure.
+    let t0 = now;
+    let tok0 = inst.stats.tokens_generated;
+    for _ in 0..500 {
+        admit(&mut inst, now, &mut rng, &mut next_id);
+        let out = inst.step(now);
+        if out.dt <= 0.0 {
+            break;
+        }
+        now += out.dt;
+    }
+    let tokens = inst.stats.tokens_generated - tok0;
+    let elapsed = now - t0;
+    if elapsed <= 0.0 {
+        return 1.0;
+    }
+    tokens as f64 / elapsed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theta_positive_and_plausible() {
+        let catalog = ModelCatalog::paper();
+        for m in catalog.ids() {
+            let theta = profile_theta(m, GpuKind::A100, &catalog, 1);
+            assert!(
+                (100.0..50_000.0).contains(&theta),
+                "{}: theta={theta}",
+                catalog.get(m).name
+            );
+        }
+    }
+
+    #[test]
+    fn bigger_model_lower_theta() {
+        let catalog = ModelCatalog::paper();
+        let mistral = profile_theta(ModelId(0), GpuKind::A100, &catalog, 2);
+        let llama = profile_theta(ModelId(2), GpuKind::A100, &catalog, 2);
+        assert!(mistral > llama, "mistral {mistral} vs llama {llama}");
+    }
+
+    #[test]
+    fn a10_slower_than_a100() {
+        let catalog = ModelCatalog::paper();
+        let a100 = profile_theta(ModelId(0), GpuKind::A100, &catalog, 3);
+        let a10 = profile_theta(ModelId(0), GpuKind::A10, &catalog, 3);
+        assert!(a100 > a10, "a100 {a100} vs a10 {a10}");
+    }
+
+    #[test]
+    fn cache_returns_same_value() {
+        let catalog = ModelCatalog::paper();
+        let mut c = ThetaCache::new();
+        let a = c.get_or_profile(GpuKind::A100, ModelId(0), &catalog);
+        let b = c.get_or_profile(GpuKind::A100, ModelId(0), &catalog);
+        assert_eq!(a, b);
+        let p = c.perf(GpuKind::A100, ModelId(0), &catalog, 161.0).unwrap();
+        assert_eq!(p.measured_theta, Some(a));
+    }
+
+    #[test]
+    fn llama_unfit_on_a10_returns_none() {
+        let catalog = ModelCatalog::paper();
+        let mut llama = catalog.get(ModelId(2)).clone();
+        llama.tp_degree = 1;
+        let mut cat2 = catalog.clone();
+        cat2.models[2] = llama;
+        let mut c = ThetaCache::new();
+        assert!(c.perf(GpuKind::A10, ModelId(2), &cat2, 161.0).is_none());
+    }
+}

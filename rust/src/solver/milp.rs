@@ -1,0 +1,249 @@
+//! Branch-and-bound MILP over the simplex relaxation.
+//!
+//! The global scheduler's formulation (§7) has binary assignment
+//! variables x_{g,i,j} and switch indicators t_{g,j}; everything else is
+//! continuous. Depth-first branch and bound with best-bound pruning on
+//! the LP relaxation is exact and fast at request-group granularity —
+//! which is precisely the paper's Design Principle #1 argument for
+//! groups: they shrink the integer dimension.
+
+use crate::solver::simplex::{solve, Cmp, Lp, LpResult};
+
+/// A mixed-integer LP: `lp` plus the indices of binary variables
+/// (bounded to [0,1] automatically).
+#[derive(Debug, Clone)]
+pub struct Milp {
+    pub lp: Lp,
+    pub binaries: Vec<usize>,
+    /// Node budget; exceeded ⇒ best-so-far is returned with `proven: false`.
+    pub node_limit: usize,
+}
+
+/// MILP outcome.
+#[derive(Debug, Clone)]
+pub enum MilpResult {
+    Optimal {
+        x: Vec<f64>,
+        obj: f64,
+        nodes: usize,
+        /// False if the node budget expired before proving optimality.
+        proven: bool,
+    },
+    Infeasible,
+}
+
+impl Milp {
+    pub fn new(lp: Lp, binaries: Vec<usize>) -> Self {
+        Milp {
+            lp,
+            binaries,
+            node_limit: 100_000,
+        }
+    }
+
+    pub fn solve(&self) -> MilpResult {
+        // Root LP with binary bounds.
+        let mut root = self.lp.clone();
+        for &b in &self.binaries {
+            root.add_upper(b, 1.0);
+        }
+        let mut best: Option<(Vec<f64>, f64)> = None;
+        let mut nodes = 0usize;
+        let mut proven = true;
+
+        // Stack of (extra fixings) — each entry fixes var to 0 or 1.
+        let mut stack: Vec<Vec<(usize, f64)>> = vec![Vec::new()];
+        while let Some(fixings) = stack.pop() {
+            nodes += 1;
+            if nodes > self.node_limit {
+                proven = false;
+                break;
+            }
+            let mut lp = root.clone();
+            for &(v, val) in &fixings {
+                let mut row = vec![0.0; lp.n];
+                row[v] = 1.0;
+                lp.add(row, Cmp::Eq, val);
+            }
+            let sol = match solve(&lp) {
+                LpResult::Optimal { x, obj } => (x, obj),
+                LpResult::Infeasible => continue,
+                LpResult::Unbounded => {
+                    // Binary box makes the integer problem bounded in the
+                    // binaries; an unbounded relaxation means a continuous
+                    // direction — treat as no useful bound and skip.
+                    continue;
+                }
+            };
+            // Prune by bound.
+            if let Some((_, best_obj)) = &best {
+                if sol.1 <= *best_obj + 1e-9 {
+                    continue;
+                }
+            }
+            // Find most fractional binary.
+            let mut frac_var = None;
+            let mut frac_dist = 1e-6;
+            for &b in &self.binaries {
+                let v = sol.0[b];
+                let d = (v - v.round()).abs();
+                if d > frac_dist {
+                    frac_dist = d;
+                    frac_var = Some(b);
+                }
+            }
+            match frac_var {
+                None => {
+                    // Integral — candidate incumbent.
+                    if best.as_ref().map(|(_, o)| sol.1 > *o).unwrap_or(true) {
+                        best = Some(sol);
+                    }
+                }
+                Some(v) => {
+                    let frac = sol.0[v] - sol.0[v].floor();
+                    // Branch on the nearer side first (DFS dives greedily).
+                    let (first, second) = if frac > 0.5 { (1.0, 0.0) } else { (0.0, 1.0) };
+                    let mut f1 = fixings.clone();
+                    f1.push((v, second));
+                    stack.push(f1);
+                    let mut f0 = fixings;
+                    f0.push((v, first));
+                    stack.push(f0);
+                }
+            }
+        }
+        match best {
+            Some((x, obj)) => MilpResult::Optimal {
+                x,
+                obj,
+                nodes,
+                proven,
+            },
+            None => MilpResult::Infeasible,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opt(r: MilpResult) -> (Vec<f64>, f64) {
+        match r {
+            MilpResult::Optimal { x, obj, .. } => (x, obj),
+            MilpResult::Infeasible => panic!("infeasible"),
+        }
+    }
+
+    #[test]
+    fn knapsack_small() {
+        // max 10a + 13b + 7c st 3a + 4b + 2c ≤ 6, binaries → a+c (17).
+        let mut lp = Lp::new(3);
+        lp.set_objective(vec![10.0, 13.0, 7.0]);
+        lp.add(vec![3.0, 4.0, 2.0], Cmp::Le, 6.0);
+        let (x, obj) = opt(Milp::new(lp, vec![0, 1, 2]).solve());
+        assert!((obj - 20.0).abs() < 1e-6, "obj={obj} x={x:?}"); // b + c = 20
+    }
+
+    #[test]
+    fn forces_integrality_where_lp_is_fractional() {
+        // max x + y st 2x + 2y ≤ 3, binaries → LP gives 1.5, MILP gives 1.
+        let mut lp = Lp::new(2);
+        lp.set_objective(vec![1.0, 1.0]);
+        lp.add(vec![2.0, 2.0], Cmp::Le, 3.0);
+        let (x, obj) = opt(Milp::new(lp, vec![0, 1]).solve());
+        assert!((obj - 1.0).abs() < 1e-6);
+        for &v in &x {
+            assert!(v.abs() < 1e-6 || (v - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn infeasible_binary_system() {
+        // x = 0.5 with x binary.
+        let mut lp = Lp::new(1);
+        lp.set_objective(vec![1.0]);
+        lp.add(vec![1.0], Cmp::Eq, 0.5);
+        assert!(matches!(
+            Milp::new(lp, vec![0]).solve(),
+            MilpResult::Infeasible
+        ));
+    }
+
+    #[test]
+    fn assignment_with_switch_cost_big_m() {
+        // Two items (models 1 and 2) into two slots; switch indicator t
+        // must be 1 iff slot models differ: t ≥ (m1-m0)/M, t ≥ (m0-m1)/M.
+        // Objective rewards keeping same model: max -t + placement value.
+        // Items: both model 1 available (x0 slot0, x1 slot1 for item A m=1;
+        // x2 slot0, x3 slot1 for item B m=2). Slots take exactly one item.
+        // vars: x0..x3, m0, m1, t
+        let big_m = 10.0;
+        let mut lp = Lp::new(7);
+        lp.set_objective(vec![0.0, 0.0, 0.0, 0.0, 0.0, 0.0, -1.0]);
+        // each item in exactly one slot
+        lp.add(vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0], Cmp::Eq, 1.0);
+        lp.add(vec![0.0, 0.0, 1.0, 1.0, 0.0, 0.0, 0.0], Cmp::Eq, 1.0);
+        // each slot exactly one item
+        lp.add(vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0], Cmp::Eq, 1.0);
+        lp.add(vec![0.0, 1.0, 0.0, 1.0, 0.0, 0.0, 0.0], Cmp::Eq, 1.0);
+        // slot model values: m0 = 1*x0 + 2*x2 ; m1 = 1*x1 + 2*x3
+        lp.add(vec![1.0, 0.0, 2.0, 0.0, -1.0, 0.0, 0.0], Cmp::Eq, 0.0);
+        lp.add(vec![0.0, 1.0, 0.0, 2.0, 0.0, -1.0, 0.0], Cmp::Eq, 0.0);
+        // big-M switch: m1 - m0 ≤ M t ; m0 - m1 ≤ M t
+        lp.add(vec![0.0, 0.0, 0.0, 0.0, -1.0, 1.0, -big_m], Cmp::Le, 0.0);
+        lp.add(vec![0.0, 0.0, 0.0, 0.0, 1.0, -1.0, -big_m], Cmp::Le, 0.0);
+        let (x, _) = opt(Milp::new(lp, vec![0, 1, 2, 3, 6]).solve());
+        // Different models must be placed, so t must be 1.
+        assert!((x[6] - 1.0).abs() < 1e-6, "t={}", x[6]);
+    }
+
+    #[test]
+    fn respects_node_limit() {
+        // A 12-var knapsack; tiny node limit still yields some incumbent
+        // or proves nothing but terminates.
+        let n = 12;
+        let mut lp = Lp::new(n);
+        lp.set_objective((0..n).map(|i| (i % 5) as f64 + 1.0).collect());
+        lp.add(vec![1.0; n], Cmp::Le, 4.0);
+        let mut m = Milp::new(lp, (0..n).collect());
+        m.node_limit = 5;
+        match m.solve() {
+            MilpResult::Optimal { nodes, .. } => assert!(nodes <= 6),
+            MilpResult::Infeasible => {}
+        }
+    }
+
+    #[test]
+    fn matches_exhaustive_on_random_knapsacks() {
+        let mut rng = crate::util::Rng::new(99);
+        for trial in 0..20 {
+            let n = 8;
+            let w: Vec<f64> = (0..n).map(|_| 1.0 + rng.f64() * 9.0).collect();
+            let v: Vec<f64> = (0..n).map(|_| 1.0 + rng.f64() * 9.0).collect();
+            let cap = w.iter().sum::<f64>() * 0.4;
+            let mut lp = Lp::new(n);
+            lp.set_objective(v.clone());
+            lp.add(w.clone(), Cmp::Le, cap);
+            let (_, obj) = opt(Milp::new(lp, (0..n).collect()).solve());
+            // Exhaustive.
+            let mut best = 0.0f64;
+            for mask in 0u32..(1 << n) {
+                let (mut tw, mut tv) = (0.0, 0.0);
+                for i in 0..n {
+                    if mask & (1 << i) != 0 {
+                        tw += w[i];
+                        tv += v[i];
+                    }
+                }
+                if tw <= cap + 1e-9 {
+                    best = best.max(tv);
+                }
+            }
+            assert!(
+                (obj - best).abs() < 1e-5,
+                "trial {trial}: milp {obj} vs brute {best}"
+            );
+        }
+    }
+}

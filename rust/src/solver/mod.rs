@@ -1,0 +1,14 @@
+//! Optimization substrate for the global scheduler (§7): a dense
+//! two-phase simplex LP solver and a branch-and-bound MILP layer for the
+//! binary assignment variables x_{g,i,j}, with the big-M linearization of
+//! the model-switch indicator (Eq. 9).
+//!
+//! Built from scratch — the offline environment has no LP crates, and the
+//! paper's Design Principle #1 (scalability) is exactly about when an
+//! exact solver is affordable; owning the solver lets Fig. 20 measure it.
+
+pub mod simplex;
+pub mod milp;
+
+pub use milp::{Milp, MilpResult};
+pub use simplex::{Cmp, Lp, LpResult};

@@ -1,0 +1,391 @@
+//! Dense two-phase primal simplex.
+//!
+//! Solves  maximize c·x  subject to  A x {≤,=,≥} b,  x ≥ 0.
+//! Phase 1 drives artificial variables out of the basis; phase 2
+//! optimizes the real objective. Bland's rule breaks ties to guarantee
+//! termination. Sizes here are small (scheduler instances), so a dense
+//! tableau is the right tool.
+
+const EPS: f64 = 1e-9;
+
+/// Constraint comparator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// A linear program in natural form.
+#[derive(Debug, Clone, Default)]
+pub struct Lp {
+    /// Number of decision variables (all ≥ 0).
+    pub n: usize,
+    /// Objective coefficients (maximize).
+    pub objective: Vec<f64>,
+    /// (row coefficients, comparator, rhs).
+    pub constraints: Vec<(Vec<f64>, Cmp, f64)>,
+}
+
+impl Lp {
+    pub fn new(n: usize) -> Self {
+        Lp {
+            n,
+            objective: vec![0.0; n],
+            constraints: Vec::new(),
+        }
+    }
+
+    pub fn set_objective(&mut self, c: Vec<f64>) {
+        assert_eq!(c.len(), self.n);
+        self.objective = c;
+    }
+
+    pub fn add(&mut self, row: Vec<f64>, cmp: Cmp, rhs: f64) {
+        assert_eq!(row.len(), self.n);
+        self.constraints.push((row, cmp, rhs));
+    }
+
+    /// Convenience: bound x_i ≤ ub.
+    pub fn add_upper(&mut self, i: usize, ub: f64) {
+        let mut row = vec![0.0; self.n];
+        row[i] = 1.0;
+        self.add(row, Cmp::Le, ub);
+    }
+}
+
+/// Solver outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpResult {
+    Optimal { x: Vec<f64>, obj: f64 },
+    Infeasible,
+    Unbounded,
+}
+
+struct Tableau {
+    /// m rows × (cols) coefficients; last column is rhs.
+    a: Vec<Vec<f64>>,
+    basis: Vec<usize>,
+    n_total: usize,
+}
+
+impl Tableau {
+    fn pivot(&mut self, row: usize, col: usize) {
+        let m = self.a.len();
+        let piv = self.a[row][col];
+        debug_assert!(piv.abs() > EPS);
+        let inv = 1.0 / piv;
+        for v in self.a[row].iter_mut() {
+            *v *= inv;
+        }
+        for r in 0..m {
+            if r != row {
+                let f = self.a[r][col];
+                if f.abs() > EPS {
+                    let (head, tail) = self.a.split_at_mut(row.max(r));
+                    let (src, dst) = if r < row {
+                        (&tail[0], &mut head[r])
+                    } else {
+                        (&head[row], &mut tail[0])
+                    };
+                    for (d, s) in dst.iter_mut().zip(src.iter()) {
+                        *d -= f * s;
+                    }
+                }
+            }
+        }
+        self.basis[row] = col;
+    }
+
+    /// One simplex run on reduced costs `z` (maximize). Returns false if
+    /// unbounded.
+    fn optimize(&mut self, z: &mut Vec<f64>) -> bool {
+        let m = self.a.len();
+        let rhs = self.n_total;
+        loop {
+            // Entering variable: Bland — smallest index with positive
+            // reduced cost.
+            let Some(col) = (0..self.n_total).find(|&j| z[j] > EPS) else {
+                return true;
+            };
+            // Leaving variable: min ratio, Bland tie-break.
+            let mut best: Option<(usize, f64)> = None;
+            for r in 0..m {
+                let a = self.a[r][col];
+                if a > EPS {
+                    let ratio = self.a[r][rhs] / a;
+                    match best {
+                        None => best = Some((r, ratio)),
+                        Some((br, bratio)) => {
+                            if ratio < bratio - EPS
+                                || (ratio < bratio + EPS && self.basis[r] < self.basis[br])
+                            {
+                                best = Some((r, ratio));
+                            }
+                        }
+                    }
+                }
+            }
+            let Some((row, _)) = best else {
+                return false; // unbounded
+            };
+            self.pivot(row, col);
+            // Update reduced costs: z -= z[col] * (pivot row).
+            let f = z[col];
+            for j in 0..=self.n_total {
+                z[j] -= f * self.a[row][j];
+            }
+        }
+    }
+}
+
+/// Solve the LP. O(m·n) memory, dense pivots.
+pub fn solve(lp: &Lp) -> LpResult {
+    let m = lp.constraints.len();
+    let n = lp.n;
+
+    // Column layout: [x (n)] [slack/surplus (s)] [artificial (t)] [rhs].
+    // Rows with negative rhs are flipped first; counts happen after.
+    let mut rows: Vec<(Vec<f64>, Cmp, f64)> = lp.constraints.clone();
+    for (row, cmp, rhs) in rows.iter_mut() {
+        if *rhs < 0.0 {
+            for v in row.iter_mut() {
+                *v = -*v;
+            }
+            *rhs = -*rhs;
+            *cmp = match *cmp {
+                Cmp::Le => Cmp::Ge,
+                Cmp::Ge => Cmp::Le,
+                Cmp::Eq => Cmp::Eq,
+            };
+        }
+    }
+    let mut n_slack = 0;
+    let mut n_art = 0;
+    for (_, cmp, _) in &rows {
+        match cmp {
+            Cmp::Le => n_slack += 1,
+            Cmp::Ge => {
+                n_slack += 1;
+                n_art += 1;
+            }
+            Cmp::Eq => n_art += 1,
+        }
+    }
+    // A ≤-row with rhs ≥ 0 can seed the basis with its slack; others need
+    // artificials.
+    let n_total = n + n_slack + n_art;
+    let mut a = vec![vec![0.0; n_total + 1]; m];
+    let mut basis = vec![0usize; m];
+    let mut s_idx = n;
+    let mut t_idx = n + n_slack;
+    let mut art_cols = Vec::new();
+    for (r, (row, cmp, rhs)) in rows.iter().enumerate() {
+        a[r][..n].copy_from_slice(row);
+        a[r][n_total] = *rhs;
+        match cmp {
+            Cmp::Le => {
+                a[r][s_idx] = 1.0;
+                basis[r] = s_idx;
+                s_idx += 1;
+            }
+            Cmp::Ge => {
+                a[r][s_idx] = -1.0;
+                s_idx += 1;
+                a[r][t_idx] = 1.0;
+                basis[r] = t_idx;
+                art_cols.push(t_idx);
+                t_idx += 1;
+            }
+            Cmp::Eq => {
+                a[r][t_idx] = 1.0;
+                basis[r] = t_idx;
+                art_cols.push(t_idx);
+                t_idx += 1;
+            }
+        }
+    }
+
+    let mut tab = Tableau { a, basis, n_total };
+
+    // Phase 1: maximize -Σ artificials → reduced costs start as the sum of
+    // rows whose basis is artificial.
+    if !art_cols.is_empty() {
+        let mut z = vec![0.0; n_total + 1];
+        for r in 0..m {
+            if art_cols.contains(&tab.basis[r]) {
+                for j in 0..=n_total {
+                    z[j] += tab.a[r][j];
+                }
+            }
+        }
+        // Zero out artificial columns in z (they're basic).
+        for &c in &art_cols {
+            z[c] = 0.0;
+        }
+        if !tab.optimize(&mut z) {
+            return LpResult::Infeasible; // phase 1 can't be unbounded, defensive
+        }
+        if z[n_total] > 1e-6 {
+            return LpResult::Infeasible;
+        }
+        // Pivot any artificial still in the basis out (degenerate rows).
+        for r in 0..m {
+            if art_cols.contains(&tab.basis[r]) {
+                if let Some(col) = (0..n + n_slack).find(|&j| tab.a[r][j].abs() > EPS) {
+                    tab.pivot(r, col);
+                }
+            }
+        }
+    }
+
+    // Phase 2: real objective. Build reduced costs z = c - c_B B⁻¹ A in
+    // tableau form: start with c, then eliminate basic columns.
+    let mut z = vec![0.0; n_total + 1];
+    z[..n].copy_from_slice(&lp.objective);
+    // Artificials must never re-enter.
+    for &c in &art_cols {
+        z[c] = f64::NEG_INFINITY;
+    }
+    for r in 0..m {
+        let b = tab.basis[r];
+        let f = z[b];
+        if f != 0.0 && f.is_finite() {
+            for j in 0..=n_total {
+                if z[j].is_finite() {
+                    z[j] -= f * tab.a[r][j];
+                }
+            }
+        }
+    }
+    // Replace -inf with a strongly negative cost so they are never chosen.
+    for &c in &art_cols {
+        z[c] = -1e30;
+    }
+    if !tab.optimize(&mut z) {
+        return LpResult::Unbounded;
+    }
+
+    let mut x = vec![0.0; n];
+    for r in 0..m {
+        if tab.basis[r] < n {
+            x[tab.basis[r]] = tab.a[r][n_total];
+        }
+    }
+    let obj = lp
+        .objective
+        .iter()
+        .zip(&x)
+        .map(|(c, v)| c * v)
+        .sum::<f64>();
+    LpResult::Optimal { x, obj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opt(r: LpResult) -> (Vec<f64>, f64) {
+        match r {
+            LpResult::Optimal { x, obj } => (x, obj),
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn textbook_max() {
+        // max 3x + 5y s.t. x ≤ 4, 2y ≤ 12, 3x + 2y ≤ 18 → obj 36 at (2,6).
+        let mut lp = Lp::new(2);
+        lp.set_objective(vec![3.0, 5.0]);
+        lp.add(vec![1.0, 0.0], Cmp::Le, 4.0);
+        lp.add(vec![0.0, 2.0], Cmp::Le, 12.0);
+        lp.add(vec![3.0, 2.0], Cmp::Le, 18.0);
+        let (x, obj) = opt(solve(&lp));
+        assert!((obj - 36.0).abs() < 1e-6);
+        assert!((x[0] - 2.0).abs() < 1e-6 && (x[1] - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ge_and_eq_constraints() {
+        // max x + y s.t. x + y ≤ 10, x ≥ 2, y = 3 → (7,3), obj 10.
+        let mut lp = Lp::new(2);
+        lp.set_objective(vec![1.0, 1.0]);
+        lp.add(vec![1.0, 1.0], Cmp::Le, 10.0);
+        lp.add(vec![1.0, 0.0], Cmp::Ge, 2.0);
+        lp.add(vec![0.0, 1.0], Cmp::Eq, 3.0);
+        let (x, obj) = opt(solve(&lp));
+        assert!((obj - 10.0).abs() < 1e-6);
+        assert!((x[1] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        // x ≤ 1 and x ≥ 2.
+        let mut lp = Lp::new(1);
+        lp.set_objective(vec![1.0]);
+        lp.add(vec![1.0], Cmp::Le, 1.0);
+        lp.add(vec![1.0], Cmp::Ge, 2.0);
+        assert_eq!(solve(&lp), LpResult::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut lp = Lp::new(1);
+        lp.set_objective(vec![1.0]);
+        lp.add(vec![-1.0], Cmp::Le, 5.0); // -x ≤ 5 doesn't bound x above
+        assert_eq!(solve(&lp), LpResult::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalized() {
+        // max -x s.t. -x ≤ -3  (i.e. x ≥ 3) → x = 3.
+        let mut lp = Lp::new(1);
+        lp.set_objective(vec![-1.0]);
+        lp.add(vec![-1.0], Cmp::Le, -3.0);
+        let (x, obj) = opt(solve(&lp));
+        assert!((x[0] - 3.0).abs() < 1e-6);
+        assert!((obj + 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn minimization_via_negated_objective() {
+        // min 2x + 3y s.t. x + y ≥ 4, x ≤ 3 → (3,1) obj 9.
+        let mut lp = Lp::new(2);
+        lp.set_objective(vec![-2.0, -3.0]);
+        lp.add(vec![1.0, 1.0], Cmp::Ge, 4.0);
+        lp.add(vec![1.0, 0.0], Cmp::Le, 3.0);
+        let (x, obj) = opt(solve(&lp));
+        assert!((-obj - 9.0).abs() < 1e-6, "obj {obj} x {x:?}");
+    }
+
+    #[test]
+    fn degenerate_lp_terminates() {
+        // Multiple redundant constraints meeting at a vertex.
+        let mut lp = Lp::new(2);
+        lp.set_objective(vec![1.0, 1.0]);
+        lp.add(vec![1.0, 0.0], Cmp::Le, 1.0);
+        lp.add(vec![1.0, 0.0], Cmp::Le, 1.0);
+        lp.add(vec![0.0, 1.0], Cmp::Le, 1.0);
+        lp.add(vec![1.0, 1.0], Cmp::Le, 2.0);
+        let (_, obj) = opt(solve(&lp));
+        assert!((obj - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn assignment_relaxation_is_integral() {
+        // 2×2 assignment: max Σ w_ij x_ij, rows/cols sum to 1 — the LP
+        // relaxation of an assignment problem has an integral optimum.
+        let w = [[3.0, 1.0], [2.0, 4.0]];
+        let mut lp = Lp::new(4); // x00 x01 x10 x11
+        lp.set_objective(vec![w[0][0], w[0][1], w[1][0], w[1][1]]);
+        lp.add(vec![1.0, 1.0, 0.0, 0.0], Cmp::Eq, 1.0);
+        lp.add(vec![0.0, 0.0, 1.0, 1.0], Cmp::Eq, 1.0);
+        lp.add(vec![1.0, 0.0, 1.0, 0.0], Cmp::Eq, 1.0);
+        lp.add(vec![0.0, 1.0, 0.0, 1.0], Cmp::Eq, 1.0);
+        let (x, obj) = opt(solve(&lp));
+        assert!((obj - 7.0).abs() < 1e-6);
+        for v in x {
+            assert!(v.abs() < 1e-6 || (v - 1.0).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Fixed-bin latency histogram with exact-percentile support via a bounded
+//! reservoir — used for TTFT distributions in metrics and Fig. 8 (token
+//! distribution plots).
+
+/// Linear-bin histogram over [0, max) plus an overflow bin.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bins: Vec<u64>,
+    bin_width: f64,
+    max: f64,
+    count: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    /// `n_bins` linear bins covering [0, max); values >= max land in the
+    /// final overflow bin.
+    pub fn new(max: f64, n_bins: usize) -> Self {
+        assert!(max > 0.0 && n_bins > 0);
+        Self {
+            bins: vec![0; n_bins + 1],
+            bin_width: max / n_bins as f64,
+            max,
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let v = v.max(0.0);
+        let idx = if v >= self.max {
+            self.bins.len() - 1
+        } else {
+            (v / self.bin_width) as usize
+        };
+        self.bins[idx] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate percentile from bin midpoints.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                if i == self.bins.len() - 1 {
+                    return self.max;
+                }
+                return (i as f64 + 0.5) * self.bin_width;
+            }
+        }
+        self.max
+    }
+
+    /// Fraction of samples at or below `v`.
+    pub fn cdf(&self, v: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let mut acc = 0u64;
+        let cut = if v >= self.max {
+            self.bins.len() - 1
+        } else {
+            (v / self.bin_width) as usize
+        };
+        for &c in &self.bins[..=cut] {
+            acc += c;
+        }
+        acc as f64 / self.count as f64
+    }
+
+    /// (bin_center, count) rows for plotting / figure output.
+    pub fn rows(&self) -> Vec<(f64, u64)> {
+        self.bins
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| ((i as f64 + 0.5) * self.bin_width, c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_counts() {
+        let mut h = Histogram::new(10.0, 10);
+        for i in 0..10 {
+            h.record(i as f64 + 0.5);
+        }
+        assert_eq!(h.count(), 10);
+        assert!((h.mean() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overflow_bin() {
+        let mut h = Histogram::new(10.0, 10);
+        h.record(100.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile(50.0), 10.0);
+    }
+
+    #[test]
+    fn percentile_approx() {
+        let mut h = Histogram::new(100.0, 1000);
+        for i in 0..1000 {
+            h.record(i as f64 / 10.0);
+        }
+        let p50 = h.percentile(50.0);
+        assert!((p50 - 50.0).abs() < 1.0, "p50={p50}");
+        let p99 = h.percentile(99.0);
+        assert!((p99 - 99.0).abs() < 1.5, "p99={p99}");
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let mut h = Histogram::new(10.0, 20);
+        for i in 0..100 {
+            h.record((i % 10) as f64);
+        }
+        assert!(h.cdf(2.0) <= h.cdf(5.0));
+        assert!((h.cdf(20.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn negative_values_clamped() {
+        let mut h = Histogram::new(10.0, 10);
+        h.record(-5.0);
+        assert_eq!(h.count(), 1);
+        assert!(h.cdf(0.5) > 0.99);
+    }
+}

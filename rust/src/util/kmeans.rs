@@ -1,0 +1,154 @@
+//! Lightweight k-means (Lloyd's algorithm with k-means++ seeding) over
+//! small feature vectors.
+//!
+//! QLM's request-group creation (paper §4, Algorithm 1) clusters requests
+//! by (model, SLO, input/output token distribution). Model identity is a
+//! hard partition handled by the caller; this module clusters the numeric
+//! features (SLO value, token-length statistics).
+
+use crate::util::Rng;
+
+/// Result of a clustering run.
+#[derive(Debug, Clone)]
+pub struct KMeans {
+    pub centroids: Vec<Vec<f64>>,
+    pub assignment: Vec<usize>,
+    pub inertia: f64,
+}
+
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Run k-means with k-means++ seeding. `points` are row vectors of equal
+/// dimension. Returns centroids, per-point assignment, and inertia.
+/// Deterministic given `rng` state.
+pub fn kmeans(points: &[Vec<f64>], k: usize, max_iters: usize, rng: &mut Rng) -> KMeans {
+    assert!(!points.is_empty());
+    let k = k.min(points.len()).max(1);
+    let dim = points[0].len();
+
+    // k-means++ seeding.
+    let mut centroids: Vec<Vec<f64>> = Vec::with_capacity(k);
+    centroids.push(points[rng.usize(points.len())].clone());
+    let mut d2: Vec<f64> = points.iter().map(|p| sq_dist(p, &centroids[0])).collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            points[rng.usize(points.len())].clone()
+        } else {
+            let mut u = rng.f64() * total;
+            let mut idx = points.len() - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                u -= d;
+                if u <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            points[idx].clone()
+        };
+        for (i, p) in points.iter().enumerate() {
+            d2[i] = d2[i].min(sq_dist(p, &next));
+        }
+        centroids.push(next);
+    }
+
+    let mut assignment = vec![0usize; points.len()];
+    for _ in 0..max_iters {
+        // Assign.
+        let mut changed = false;
+        for (i, p) in points.iter().enumerate() {
+            let mut best = 0;
+            let mut best_d = f64::INFINITY;
+            for (c, cent) in centroids.iter().enumerate() {
+                let d = sq_dist(p, cent);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        // Update.
+        let mut sums = vec![vec![0.0; dim]; centroids.len()];
+        let mut counts = vec![0usize; centroids.len()];
+        for (i, p) in points.iter().enumerate() {
+            let c = assignment[i];
+            counts[c] += 1;
+            for (s, v) in sums[c].iter_mut().zip(p) {
+                *s += v;
+            }
+        }
+        for (c, cent) in centroids.iter_mut().enumerate() {
+            if counts[c] > 0 {
+                for (ci, s) in cent.iter_mut().zip(&sums[c]) {
+                    *ci = s / counts[c] as f64;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    let inertia = points
+        .iter()
+        .zip(&assignment)
+        .map(|(p, &a)| sq_dist(p, &centroids[a]))
+        .sum();
+    KMeans {
+        centroids,
+        assignment,
+        inertia,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separates_two_obvious_clusters() {
+        let mut rng = Rng::new(1);
+        let mut pts = Vec::new();
+        for _ in 0..50 {
+            pts.push(vec![rng.normal(0.0, 0.1), rng.normal(0.0, 0.1)]);
+        }
+        for _ in 0..50 {
+            pts.push(vec![rng.normal(10.0, 0.1), rng.normal(10.0, 0.1)]);
+        }
+        let km = kmeans(&pts, 2, 50, &mut rng);
+        let a0 = km.assignment[0];
+        assert!(km.assignment[..50].iter().all(|&a| a == a0));
+        assert!(km.assignment[50..].iter().all(|&a| a != a0));
+    }
+
+    #[test]
+    fn k_clamped_to_point_count() {
+        let mut rng = Rng::new(2);
+        let pts = vec![vec![1.0], vec![2.0]];
+        let km = kmeans(&pts, 10, 10, &mut rng);
+        assert!(km.centroids.len() <= 2);
+    }
+
+    #[test]
+    fn identical_points_zero_inertia() {
+        let mut rng = Rng::new(3);
+        let pts = vec![vec![5.0, 5.0]; 20];
+        let km = kmeans(&pts, 3, 10, &mut rng);
+        assert!(km.inertia < 1e-12);
+    }
+
+    #[test]
+    fn single_cluster() {
+        let mut rng = Rng::new(4);
+        let pts: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let km = kmeans(&pts, 1, 10, &mut rng);
+        assert_eq!(km.centroids.len(), 1);
+        assert!((km.centroids[0][0] - 4.5).abs() < 1e-9);
+    }
+}

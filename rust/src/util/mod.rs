@@ -1,0 +1,15 @@
+//! Small self-contained utilities: deterministic RNG, statistics,
+//! histograms, and linear algebra helpers used across the crate.
+//!
+//! We implement our own RNG/stat substrate (rather than pulling `rand` /
+//! `statrs`) so that every simulation in the paper-reproduction harness is
+//! bit-reproducible from a seed across platforms.
+
+pub mod rng;
+pub mod stats;
+pub mod histogram;
+pub mod kmeans;
+
+pub use rng::Rng;
+pub use stats::{linear_fit, mean, percentile, r_squared, stddev, variance, OnlineStats};
+pub use histogram::Histogram;

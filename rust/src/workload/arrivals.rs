@@ -1,0 +1,159 @@
+//! Arrival processes. The paper models request arrivals as Poisson (§8,
+//! Workloads) and additionally studies burstiness (§8.3); we provide
+//! Poisson, Gamma-modulated (bursty), and closed-loop batch-dump arrivals.
+
+use crate::util::Rng;
+
+/// Kinds of arrival process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// Markov-modulated Poisson: alternates between a quiet and a burst
+    /// phase; `burstiness` ≥ 1 scales the burst-phase rate.
+    Bursty {
+        rate: f64,
+        burstiness: f64,
+        phase_len_s: f64,
+    },
+    /// All requests arrive at t=0 — the "drain a standing queue" setup
+    /// used by Fig. 5 / Fig. 17 style experiments.
+    Dump,
+    /// Fixed inter-arrival gap (deterministic) — used by unit tests.
+    Uniform { rate: f64 },
+}
+
+/// Stateful arrival-time generator.
+#[derive(Debug, Clone)]
+pub struct Arrivals {
+    process: ArrivalProcess,
+    now: f64,
+    /// For Bursty: true if currently in the burst phase.
+    in_burst: bool,
+    phase_left: f64,
+}
+
+impl Arrivals {
+    pub fn new(process: ArrivalProcess) -> Self {
+        let phase_left = match process {
+            ArrivalProcess::Bursty { phase_len_s, .. } => phase_len_s,
+            _ => 0.0,
+        };
+        Self {
+            process,
+            now: 0.0,
+            in_burst: false,
+            phase_left,
+        }
+    }
+
+    /// Next arrival timestamp (seconds since epoch 0), monotone
+    /// non-decreasing.
+    pub fn next(&mut self, rng: &mut Rng) -> f64 {
+        match self.process {
+            ArrivalProcess::Poisson { rate } => {
+                self.now += rng.exponential(rate.max(1e-9));
+            }
+            ArrivalProcess::Uniform { rate } => {
+                self.now += 1.0 / rate.max(1e-9);
+            }
+            ArrivalProcess::Dump => { /* all at t = 0 */ }
+            ArrivalProcess::Bursty {
+                rate,
+                burstiness,
+                phase_len_s,
+            } => {
+                let eff_rate = if self.in_burst {
+                    rate * burstiness
+                } else {
+                    // Keep the long-run average at `rate`: quiet phase gets
+                    // the residual rate 2r - r*b, floored at 5% of r.
+                    (rate * (2.0 - burstiness)).max(rate * 0.05)
+                };
+                let gap = rng.exponential(eff_rate.max(1e-9));
+                self.now += gap;
+                self.phase_left -= gap;
+                if self.phase_left <= 0.0 {
+                    self.in_burst = !self.in_burst;
+                    self.phase_left = phase_len_s;
+                }
+            }
+        }
+        self.now
+    }
+
+    /// Generate `n` arrival timestamps.
+    pub fn take(&mut self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        (0..n).map(|_| self.next(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mean;
+
+    #[test]
+    fn poisson_rate_matches() {
+        let mut a = Arrivals::new(ArrivalProcess::Poisson { rate: 100.0 });
+        let mut rng = Rng::new(1);
+        let ts = a.take(50_000, &mut rng);
+        let horizon = *ts.last().unwrap();
+        let measured = ts.len() as f64 / horizon;
+        assert!((measured - 100.0).abs() / 100.0 < 0.05, "rate {measured}");
+    }
+
+    #[test]
+    fn arrivals_monotone() {
+        for p in [
+            ArrivalProcess::Poisson { rate: 10.0 },
+            ArrivalProcess::Bursty {
+                rate: 10.0,
+                burstiness: 5.0,
+                phase_len_s: 1.0,
+            },
+            ArrivalProcess::Uniform { rate: 10.0 },
+        ] {
+            let mut a = Arrivals::new(p);
+            let mut rng = Rng::new(2);
+            let ts = a.take(1_000, &mut rng);
+            assert!(ts.windows(2).all(|w| w[1] >= w[0]));
+        }
+    }
+
+    #[test]
+    fn dump_all_zero() {
+        let mut a = Arrivals::new(ArrivalProcess::Dump);
+        let mut rng = Rng::new(3);
+        assert!(a.take(100, &mut rng).iter().all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn bursty_has_higher_cv_than_poisson() {
+        let mut rng = Rng::new(4);
+        let gaps = |p: ArrivalProcess, rng: &mut Rng| -> Vec<f64> {
+            let mut a = Arrivals::new(p);
+            let ts = a.take(20_000, rng);
+            ts.windows(2).map(|w| w[1] - w[0]).collect()
+        };
+        let pg = gaps(ArrivalProcess::Poisson { rate: 50.0 }, &mut rng);
+        let bg = gaps(
+            ArrivalProcess::Bursty {
+                rate: 50.0,
+                burstiness: 8.0,
+                phase_len_s: 2.0,
+            },
+            &mut rng,
+        );
+        let cv = |g: &[f64]| crate::util::stddev(g) / mean(g);
+        assert!(cv(&bg) > cv(&pg) * 1.1, "cv_burst={} cv_poisson={}", cv(&bg), cv(&pg));
+    }
+
+    #[test]
+    fn uniform_gap_exact() {
+        let mut a = Arrivals::new(ArrivalProcess::Uniform { rate: 4.0 });
+        let mut rng = Rng::new(5);
+        let ts = a.take(4, &mut rng);
+        assert!((ts[3] - 1.0).abs() < 1e-12);
+    }
+}

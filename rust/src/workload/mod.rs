@@ -1,0 +1,13 @@
+//! Workload generation: ShareGPT-fitted token distributions, Poisson /
+//! bursty arrival processes, SLO classes, and the paper's three evaluation
+//! workloads W_A, W_B, W_C (§8).
+
+pub mod sharegpt;
+pub mod arrivals;
+pub mod spec;
+pub mod trace;
+
+pub use sharegpt::ShareGptSampler;
+pub use arrivals::{ArrivalProcess, Arrivals};
+pub use spec::{RequestClassSpec, SloClass, WorkloadSpec};
+pub use trace::{Trace, TraceRequest};

@@ -1,0 +1,194 @@
+//! Workload specifications: SLO classes and the paper's evaluation
+//! workloads W_A (single-model interactive+batch), W_B (multi-model
+//! batch), W_C (mega-prompt) — §8, "Workloads".
+
+use crate::backend::ModelId;
+use crate::workload::{ArrivalProcess, ShareGptSampler};
+
+/// The three request categories of §8, with p99-TTFT SLOs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SloClass {
+    /// Chatbot-style: p99 TTFT < 20 s.
+    Interactive,
+    /// Relaxed batch: 1 minute.
+    Batch1,
+    /// Very relaxed batch: 1 hour.
+    Batch2,
+}
+
+impl SloClass {
+    /// SLO value in seconds (p99 TTFT bound).
+    pub fn slo_s(&self) -> f64 {
+        match self {
+            SloClass::Interactive => 20.0,
+            SloClass::Batch1 => 60.0,
+            SloClass::Batch2 => 3600.0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Batch1 => "batch-1",
+            SloClass::Batch2 => "batch-2",
+        }
+    }
+}
+
+/// One stream of requests: a class, the models it targets (uniformly
+/// chosen), an arrival process, and how many requests it contributes.
+#[derive(Debug, Clone)]
+pub struct RequestClassSpec {
+    pub class: SloClass,
+    pub models: Vec<ModelId>,
+    pub arrivals: ArrivalProcess,
+    pub count: usize,
+    /// Fraction of this stream drawn from the mega-prompt sampler (W_C).
+    pub mega_fraction: f64,
+}
+
+/// A full workload: several request streams sharing a token sampler.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub streams: Vec<RequestClassSpec>,
+    pub sampler: ShareGptSampler,
+}
+
+impl WorkloadSpec {
+    /// W_A: single-model interactive + batch (paper §8). `rate` is the
+    /// interactive arrival rate (requests/s); batch streams arrive at a
+    /// fixed fraction of it. Total requests ≈ `total` split 50/25/25.
+    pub fn w_a(model: ModelId, interactive_rate: f64, total: usize) -> Self {
+        let n_i = total / 2;
+        let n_b = total / 4;
+        WorkloadSpec {
+            name: format!("W_A(rate={interactive_rate})"),
+            streams: vec![
+                RequestClassSpec {
+                    class: SloClass::Interactive,
+                    models: vec![model],
+                    arrivals: ArrivalProcess::Poisson {
+                        rate: interactive_rate,
+                    },
+                    count: n_i,
+                    mega_fraction: 0.0,
+                },
+                RequestClassSpec {
+                    class: SloClass::Batch1,
+                    models: vec![model],
+                    arrivals: ArrivalProcess::Poisson {
+                        rate: interactive_rate * 0.5,
+                    },
+                    count: n_b,
+                    mega_fraction: 0.0,
+                },
+                RequestClassSpec {
+                    class: SloClass::Batch2,
+                    models: vec![model],
+                    arrivals: ArrivalProcess::Poisson {
+                        rate: interactive_rate * 0.5,
+                    },
+                    count: n_b,
+                    mega_fraction: 0.0,
+                },
+            ],
+            sampler: ShareGptSampler::default(),
+        }
+    }
+
+    /// W_B: multi-model batch workload. Batch-1 over `b1_models`
+    /// (fine-tuned Mistral-7B and Llama-70B in the paper), Batch-2 over
+    /// `b2_models` (fine-tuned Vicuna-13B and Llama-70B). `b1_rate` is the
+    /// swept Batch-1 arrival rate.
+    pub fn w_b(
+        b1_models: Vec<ModelId>,
+        b2_models: Vec<ModelId>,
+        b1_rate: f64,
+        total: usize,
+    ) -> Self {
+        let n = total / 2;
+        WorkloadSpec {
+            name: format!("W_B(b1_rate={b1_rate})"),
+            streams: vec![
+                RequestClassSpec {
+                    class: SloClass::Batch1,
+                    models: b1_models,
+                    arrivals: ArrivalProcess::Poisson { rate: b1_rate },
+                    count: n,
+                    mega_fraction: 0.0,
+                },
+                RequestClassSpec {
+                    class: SloClass::Batch2,
+                    models: b2_models,
+                    arrivals: ArrivalProcess::Poisson { rate: b1_rate * 0.5 },
+                    count: total - n,
+                    mega_fraction: 0.0,
+                },
+            ],
+            sampler: ShareGptSampler::default(),
+        }
+    }
+
+    /// W_C: W_B plus a fraction of mega prompts (3K–4K total tokens).
+    pub fn w_c(
+        b1_models: Vec<ModelId>,
+        b2_models: Vec<ModelId>,
+        b1_rate: f64,
+        total: usize,
+        mega_fraction: f64,
+    ) -> Self {
+        let mut w = Self::w_b(b1_models, b2_models, b1_rate, total);
+        w.name = format!("W_C(mega={mega_fraction})");
+        for s in &mut w.streams {
+            s.mega_fraction = mega_fraction;
+        }
+        w
+    }
+
+    pub fn total_requests(&self) -> usize {
+        self.streams.iter().map(|s| s.count).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slo_values_match_paper() {
+        assert_eq!(SloClass::Interactive.slo_s(), 20.0);
+        assert_eq!(SloClass::Batch1.slo_s(), 60.0);
+        assert_eq!(SloClass::Batch2.slo_s(), 3600.0);
+    }
+
+    #[test]
+    fn w_a_is_single_model_three_classes() {
+        let w = WorkloadSpec::w_a(ModelId(0), 100.0, 3500);
+        assert_eq!(w.streams.len(), 3);
+        assert!(w
+            .streams
+            .iter()
+            .all(|s| s.models == vec![ModelId(0)]));
+        assert!(w.total_requests() >= 3400);
+    }
+
+    #[test]
+    fn w_b_two_batch_classes() {
+        let w = WorkloadSpec::w_b(
+            vec![ModelId(0), ModelId(1)],
+            vec![ModelId(2), ModelId(1)],
+            250.0,
+            3500,
+        );
+        assert_eq!(w.streams.len(), 2);
+        assert!(w.streams.iter().all(|s| s.class != SloClass::Interactive));
+        assert_eq!(w.total_requests(), 3500);
+    }
+
+    #[test]
+    fn w_c_sets_mega_fraction() {
+        let w = WorkloadSpec::w_c(vec![ModelId(0)], vec![ModelId(1)], 100.0, 1000, 0.1);
+        assert!(w.streams.iter().all(|s| (s.mega_fraction - 0.1).abs() < 1e-12));
+    }
+}

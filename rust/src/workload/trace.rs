@@ -1,0 +1,158 @@
+//! Materialized request traces: a `WorkloadSpec` is expanded into a
+//! time-sorted list of concrete requests with ground-truth token counts.
+//! The ground-truth output length is visible to the simulator only — the
+//! coordinator's RWT estimator sees just per-group distributions, exactly
+//! as in the paper (§6: output tokens are unknown a priori).
+
+use crate::backend::ModelId;
+use crate::util::Rng;
+use crate::workload::{SloClass, WorkloadSpec};
+use crate::workload::arrivals::Arrivals;
+
+/// A single concrete request in a trace.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    pub arrival_s: f64,
+    pub model: ModelId,
+    pub class: SloClass,
+    pub slo_s: f64,
+    pub input_tokens: u32,
+    /// Ground truth — hidden from the estimator.
+    pub output_tokens: u32,
+    pub mega: bool,
+}
+
+/// A materialized workload trace, sorted by arrival time.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    pub requests: Vec<TraceRequest>,
+}
+
+impl Trace {
+    /// Expand a spec into a concrete trace. Deterministic given `seed`.
+    pub fn generate(spec: &WorkloadSpec, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let mut requests = Vec::with_capacity(spec.total_requests());
+        for stream in &spec.streams {
+            let mut arrivals = Arrivals::new(stream.arrivals);
+            for _ in 0..stream.count {
+                let arrival_s = arrivals.next(&mut rng);
+                let mega = rng.f64() < stream.mega_fraction;
+                let (input_tokens, output_tokens) = if mega {
+                    spec.sampler.mega_prompt(&mut rng)
+                } else {
+                    spec.sampler.sample(&mut rng)
+                };
+                let model = *rng.choose(&stream.models);
+                requests.push(TraceRequest {
+                    arrival_s,
+                    model,
+                    class: stream.class,
+                    slo_s: stream.class.slo_s(),
+                    input_tokens,
+                    output_tokens,
+                    mega,
+                });
+            }
+        }
+        requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        Trace {
+            name: spec.name.clone(),
+            requests,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Distinct models referenced by the trace.
+    pub fn models(&self) -> Vec<ModelId> {
+        let mut ms: Vec<ModelId> = self.requests.iter().map(|r| r.model).collect();
+        ms.sort();
+        ms.dedup();
+        ms
+    }
+
+    /// Mean output tokens — used by tests and figure harnesses.
+    pub fn mean_output_tokens(&self) -> f64 {
+        crate::util::mean(
+            &self
+                .requests
+                .iter()
+                .map(|r| r.output_tokens as f64)
+                .collect::<Vec<_>>(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_sorted_and_complete() {
+        let spec = WorkloadSpec::w_a(ModelId(0), 50.0, 2000);
+        let t = Trace::generate(&spec, 7);
+        assert_eq!(t.len(), spec.total_requests());
+        assert!(t
+            .requests
+            .windows(2)
+            .all(|w| w[1].arrival_s >= w[0].arrival_s));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let spec = WorkloadSpec::w_a(ModelId(0), 50.0, 500);
+        let a = Trace::generate(&spec, 1);
+        let b = Trace::generate(&spec, 1);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.input_tokens, y.input_tokens);
+            assert_eq!(x.output_tokens, y.output_tokens);
+        }
+        let c = Trace::generate(&spec, 2);
+        assert!(a
+            .requests
+            .iter()
+            .zip(&c.requests)
+            .any(|(x, y)| x.input_tokens != y.input_tokens));
+    }
+
+    #[test]
+    fn multi_model_trace_uses_all_models() {
+        let spec = WorkloadSpec::w_b(
+            vec![ModelId(0), ModelId(1)],
+            vec![ModelId(2), ModelId(1)],
+            100.0,
+            2000,
+        );
+        let t = Trace::generate(&spec, 3);
+        assert_eq!(t.models(), vec![ModelId(0), ModelId(1), ModelId(2)]);
+    }
+
+    #[test]
+    fn mega_fraction_respected() {
+        let spec = WorkloadSpec::w_c(vec![ModelId(0)], vec![ModelId(0)], 100.0, 4000, 0.25);
+        let t = Trace::generate(&spec, 4);
+        let mega = t.requests.iter().filter(|r| r.mega).count() as f64 / t.len() as f64;
+        assert!((mega - 0.25).abs() < 0.05, "mega frac {mega}");
+        assert!(t
+            .requests
+            .iter()
+            .filter(|r| r.mega)
+            .all(|r| (3000..=4000).contains(&(r.input_tokens + r.output_tokens))));
+    }
+
+    #[test]
+    fn slo_matches_class() {
+        let spec = WorkloadSpec::w_a(ModelId(0), 10.0, 300);
+        let t = Trace::generate(&spec, 5);
+        assert!(t.requests.iter().all(|r| r.slo_s == r.class.slo_s()));
+    }
+}

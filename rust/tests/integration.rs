@@ -1,0 +1,195 @@
+//! Integration tests: cross-module scenarios over the full coordinator +
+//! backend + simulator stack.
+
+use qlm::backend::{InstanceId, ModelCatalog, ModelId};
+use qlm::baselines::Policy;
+use qlm::coordinator::lso::LsoConfig;
+use qlm::coordinator::request::Request;
+use qlm::coordinator::GlobalQueue;
+use qlm::sim::{fleet_a100, fleet_mixed, SimConfig, Simulation};
+use qlm::workload::{SloClass, Trace, TraceRequest, WorkloadSpec};
+
+fn run(policy: Policy, trace: &Trace, fleet_n: u32, multi: bool) -> qlm::metrics::RunMetrics {
+    let catalog = if multi {
+        ModelCatalog::paper_multi_model()
+    } else {
+        ModelCatalog::paper()
+    };
+    let cfg = SimConfig::new(fleet_a100(fleet_n), catalog, policy);
+    Simulation::new(cfg, trace).run(trace)
+}
+
+#[test]
+fn all_policies_conserve_requests() {
+    // Every submitted request is accounted exactly once in the records.
+    let trace = Trace::generate(&WorkloadSpec::w_a(ModelId(0), 20.0, 400), 1);
+    for policy in [
+        Policy::qlm(),
+        Policy::Edf,
+        Policy::VllmFcfs,
+        Policy::Shepherd,
+        Policy::qlm_with(LsoConfig::without_eviction()),
+        Policy::qlm_with(LsoConfig::without_load_balancing()),
+    ] {
+        let m = run(policy, &trace, 2, false);
+        assert_eq!(m.records.len(), 400, "{}", m.policy);
+        let mut ids: Vec<u64> = m.records.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 400, "{}: duplicated records", m.policy);
+    }
+}
+
+#[test]
+fn ttft_never_negative_and_completion_after_first_token() {
+    let trace = Trace::generate(&WorkloadSpec::w_a(ModelId(1), 25.0, 500), 2);
+    let m = run(Policy::qlm(), &trace, 2, false);
+    for r in &m.records {
+        if let Some(t) = r.ttft() {
+            assert!(t >= 0.0, "negative ttft for {}", r.id);
+        }
+        if let (Some(f), Some(c)) = (r.first_token_s, r.completed_s) {
+            assert!(c >= f, "completed before first token for {}", r.id);
+        }
+    }
+}
+
+#[test]
+fn interactive_prioritized_under_overload() {
+    // Under 3× overload, QLM must keep interactive attainment well above
+    // the batch-1 class (the whole point of queue reordering).
+    let trace = Trace::generate(&WorkloadSpec::w_a(ModelId(1), 120.0, 1200), 3);
+    let m = run(Policy::qlm(), &trace, 1, false);
+    let inter = m.slo_attainment_class(SloClass::Interactive);
+    let vllm = run(Policy::VllmFcfs, &trace, 1, false);
+    assert!(
+        inter >= vllm.slo_attainment_class(SloClass::Interactive),
+        "qlm interactive {} < vllm {}",
+        inter,
+        vllm.slo_attainment_class(SloClass::Interactive)
+    );
+}
+
+#[test]
+fn multi_model_qlm_beats_edf_throughput() {
+    let trace = Trace::generate(
+        &WorkloadSpec::w_b(
+            vec![ModelId(3), ModelId(4)],
+            vec![ModelId(5), ModelId(6)],
+            10.0,
+            600,
+        ),
+        4,
+    );
+    let qlm = run(Policy::qlm(), &trace, 2, true);
+    let edf = run(Policy::Edf, &trace, 2, true);
+    assert!(
+        qlm.throughput_rps() > edf.throughput_rps(),
+        "qlm {} vs edf {}",
+        qlm.throughput_rps(),
+        edf.throughput_rps()
+    );
+    assert!(
+        qlm.total_model_swaps() < edf.total_model_swaps(),
+        "qlm swaps {} vs edf {}",
+        qlm.total_model_swaps(),
+        edf.total_model_swaps()
+    );
+}
+
+#[test]
+fn heterogeneous_fleet_serves_everything() {
+    // Enough pressure that the scheduler must spill onto the slower A10s
+    // (at light load parking everything on the A100s is the right call).
+    let trace = Trace::generate(&WorkloadSpec::w_a(ModelId(0), 60.0, 900), 5);
+    let cfg = SimConfig::new(fleet_mixed(4, 0.5), ModelCatalog::paper(), Policy::qlm());
+    let m = Simulation::new(cfg, &trace).run(&trace);
+    assert_eq!(m.completed_count(), 900, "{}", m.summary());
+    // Both device kinds must have done work.
+    let a10_tokens: u64 = m.instances[2..].iter().map(|i| i.tokens_generated).sum();
+    let a100_tokens: u64 = m.instances[..2].iter().map(|i| i.tokens_generated).sum();
+    assert!(
+        a10_tokens > 0 && a100_tokens > 0,
+        "a10={a10_tokens} a100={a100_tokens}"
+    );
+    // And the faster devices should carry more of the load.
+    assert!(a100_tokens > a10_tokens);
+}
+
+#[test]
+fn global_queue_survives_instance_failure() {
+    // §4 fault tolerance: losing an instance loses no request data.
+    let mut q = GlobalQueue::new();
+    let mk = |arrival: f64| {
+        Request::from_trace(
+            0,
+            &TraceRequest {
+                arrival_s: arrival,
+                model: ModelId(0),
+                class: SloClass::Interactive,
+                slo_s: 20.0,
+                input_tokens: 64,
+                output_tokens: 16,
+                mega: false,
+            },
+        )
+    };
+    let ids: Vec<u64> = (0..10).map(|i| q.submit(mk(i as f64))).collect();
+    for &id in &ids[..5] {
+        q.mark_running(id);
+    }
+    let affected = q.fail_instance(InstanceId(0), &ids[..5]);
+    assert_eq!(affected.len(), 5);
+    assert_eq!(q.len_total(), 10, "no request lost");
+    assert_eq!(q.len_waiting(), 10, "all requests schedulable again");
+}
+
+#[test]
+fn deterministic_end_to_end() {
+    let trace = Trace::generate(&WorkloadSpec::w_a(ModelId(1), 30.0, 400), 6);
+    let a = run(Policy::qlm(), &trace, 2, false);
+    let b = run(Policy::qlm(), &trace, 2, false);
+    assert_eq!(a.completed_count(), b.completed_count());
+    assert_eq!(a.total_model_swaps(), b.total_model_swaps());
+    assert!((a.mean_ttft() - b.mean_ttft()).abs() < 1e-9);
+    assert!((a.duration_s - b.duration_s).abs() < 1e-9);
+}
+
+#[test]
+fn scale_up_improves_attainment() {
+    // §9: when SLOs can't be met, adding GPUs is the remedy — attainment
+    // must be monotone (within noise) in fleet size.
+    let trace = Trace::generate(&WorkloadSpec::w_a(ModelId(1), 80.0, 800), 7);
+    let m1 = run(Policy::qlm(), &trace, 1, false);
+    let m4 = run(Policy::qlm(), &trace, 4, false);
+    assert!(
+        m4.slo_attainment() >= m1.slo_attainment() - 0.02,
+        "1 gpu {} vs 4 gpus {}",
+        m1.slo_attainment(),
+        m4.slo_attainment()
+    );
+    assert!(m4.duration_s <= m1.duration_s * 1.05);
+}
+
+#[test]
+fn bursty_arrivals_handled() {
+    use qlm::workload::{ArrivalProcess, RequestClassSpec, ShareGptSampler};
+    let spec = WorkloadSpec {
+        name: "bursty".into(),
+        streams: vec![RequestClassSpec {
+            class: SloClass::Interactive,
+            models: vec![ModelId(0)],
+            arrivals: ArrivalProcess::Bursty {
+                rate: 20.0,
+                burstiness: 6.0,
+                phase_len_s: 2.0,
+            },
+            count: 400,
+            mega_fraction: 0.0,
+        }],
+        sampler: ShareGptSampler::default(),
+    };
+    let trace = Trace::generate(&spec, 8);
+    let m = run(Policy::qlm(), &trace, 2, false);
+    assert_eq!(m.completed_count(), 400, "{}", m.summary());
+}

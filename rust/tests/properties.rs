@@ -1,0 +1,312 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! state). The offline build has no proptest crate, so properties are
+//! exercised with seeded random-case sweeps over the crate's own RNG —
+//! each test runs dozens of randomized trials and asserts invariants on
+//! every one.
+
+use std::collections::HashMap;
+use std::collections::HashSet;
+use std::collections::VecDeque;
+
+use qlm::backend::{GpuKind, Instance, InstanceConfig, KvCache, ModelCatalog, ModelId, PerfModel, RunningSeq};
+use qlm::coordinator::request::Request;
+use qlm::coordinator::request_group::{GroupId, Grouper, RequestGroup};
+use qlm::coordinator::rwt::{ProfileTable, RwtEstimator};
+use qlm::coordinator::scheduler::{GlobalScheduler, InstanceView, SchedulerConfig};
+use qlm::util::Rng;
+use qlm::workload::{SloClass, TraceRequest};
+
+fn rand_request(rng: &mut Rng, id: u64, n_models: u32) -> Request {
+    let class = *rng.choose(&[SloClass::Interactive, SloClass::Batch1, SloClass::Batch2]);
+    let mut r = Request::from_trace(
+        id,
+        &TraceRequest {
+            arrival_s: rng.range(0.0, 100.0),
+            model: ModelId(rng.usize(n_models as usize) as u32),
+            class,
+            slo_s: class.slo_s(),
+            input_tokens: 1 + rng.usize(2000) as u32,
+            output_tokens: 1 + rng.usize(1500) as u32,
+            mega: rng.f64() < 0.1,
+        },
+    );
+    r.id = id;
+    r
+}
+
+/// Property: regrouping partitions the request set — every request in
+/// exactly one group; groups are model- and class-homogeneous; sizes
+/// respect δ × avg_batch.
+#[test]
+fn prop_grouping_partitions_requests() {
+    for seed in 0..30 {
+        let mut rng = Rng::new(seed);
+        let n = 50 + rng.usize(300);
+        let reqs: Vec<Request> = (0..n as u64)
+            .map(|i| rand_request(&mut rng, i, 3))
+            .collect();
+        let refs: Vec<&Request> = reqs.iter().collect();
+        let mut grouper = Grouper::new(4.0, 16, seed);
+        let groups = grouper.regroup(&refs);
+
+        let mut seen: HashSet<u64> = HashSet::new();
+        for g in &groups {
+            assert!(g.len() <= grouper.max_group_size(), "seed {seed}: oversize");
+            for &m in &g.members {
+                assert!(seen.insert(m), "seed {seed}: request {m} in two groups");
+                assert_eq!(reqs[m as usize].model, g.model, "seed {seed}");
+            }
+        }
+        assert_eq!(seen.len(), n, "seed {seed}: lost requests");
+    }
+}
+
+/// Property: incremental classification never exceeds group capacity and
+/// always lands a request in a compatible group.
+#[test]
+fn prop_incremental_classify_compatible() {
+    for seed in 100..130 {
+        let mut rng = Rng::new(seed);
+        let mut grouper = Grouper::new(2.0, 8, seed);
+        let mut groups: Vec<RequestGroup> = Vec::new();
+        for i in 0..200u64 {
+            let r = rand_request(&mut rng, i, 4);
+            let gid = grouper.classify(&r, &mut groups);
+            let g = groups.iter().find(|g| g.id == gid).unwrap();
+            assert_eq!(g.model, r.model);
+            assert_eq!(g.class, r.class);
+            assert!(g.len() <= grouper.max_group_size());
+        }
+        let total: usize = groups.iter().map(|g| g.len()).sum();
+        assert_eq!(total, 200);
+    }
+}
+
+/// Property: the scheduler's assignment is a partition of schedulable
+/// groups — no group appears on two queues, none is dropped, and every
+/// group lands on an instance that can serve its model when one exists.
+#[test]
+fn prop_scheduler_assignment_is_partition() {
+    let catalog = ModelCatalog::paper_multi_model();
+    let est = RwtEstimator::new(ProfileTable::default());
+    let sched = GlobalScheduler::new(SchedulerConfig::default(), est);
+    for seed in 200..230 {
+        let mut rng = Rng::new(seed);
+        let n_groups = 2 + rng.usize(30);
+        let groups: Vec<RequestGroup> = (0..n_groups as u64)
+            .map(|g| RequestGroup {
+                id: GroupId(g),
+                model: ModelId(rng.usize(4) as u32),
+                class: SloClass::Batch1,
+                slo_s: 30.0 + rng.f64() * 3600.0,
+                earliest_arrival_s: rng.f64() * 50.0,
+                members: VecDeque::from_iter(0..(1 + rng.usize(64)) as u64),
+                mega: false,
+            })
+            .collect();
+        let n_inst = 1 + rng.usize(5) as u32;
+        let views: Vec<InstanceView> = (0..n_inst)
+            .map(|i| {
+                let mut perf_for = HashMap::new();
+                let mut swap_time = HashMap::new();
+                for m in catalog.ids() {
+                    // Random serve capability, but instance 0 serves all.
+                    if i == 0 || rng.f64() < 0.7 {
+                        if let Some(p) =
+                            PerfModel::try_profile(catalog.get(m), GpuKind::A100, 161.0)
+                        {
+                            swap_time.insert(m, p.swap_cpu_gpu_s);
+                            perf_for.insert(m, p);
+                        }
+                    }
+                }
+                InstanceView {
+                    id: qlm::backend::InstanceId(i),
+                    active_model: None,
+                    perf_for,
+                    swap_time,
+                    executing: None,
+                }
+            })
+            .collect();
+        let a = sched.schedule(&groups, &views, 0.0);
+        let mut seen: HashSet<GroupId> = HashSet::new();
+        for (inst, order) in &a.orders {
+            for gid in order {
+                assert!(seen.insert(*gid), "seed {seed}: group {gid:?} duplicated");
+                let g = groups.iter().find(|g| g.id == *gid).unwrap();
+                let v = views.iter().find(|v| v.id == *inst).unwrap();
+                // Instance 0 serves everything, so a capable instance
+                // always exists ⇒ placement must be servable.
+                assert!(
+                    v.can_serve(g.model),
+                    "seed {seed}: group on incapable instance"
+                );
+            }
+        }
+        assert_eq!(seen.len(), groups.len(), "seed {seed}: groups dropped");
+    }
+}
+
+/// Property: KV cache never leaks blocks and never double-frees across a
+/// random operation schedule (alloc / append / evict / restore / free /
+/// flush).
+#[test]
+fn prop_kv_cache_conservation() {
+    for seed in 300..340 {
+        let mut rng = Rng::new(seed);
+        let total_tokens = 4096 + rng.usize(100_000) as u64;
+        let mut kv = KvCache::new(total_tokens, 50_000);
+        let total_blocks = kv.total_blocks();
+        let mut gpu_live: Vec<u64> = Vec::new();
+        let mut cpu_live: Vec<u64> = Vec::new();
+        let mut next = 0u64;
+        for _ in 0..1500 {
+            match rng.usize(6) {
+                0 => {
+                    if kv.alloc_seq(next, 1 + rng.usize(900) as u64).is_ok() {
+                        gpu_live.push(next);
+                    }
+                    next += 1;
+                }
+                1 if !gpu_live.is_empty() => {
+                    let s = *rng.choose(&gpu_live);
+                    let _ = kv.append_token(s);
+                }
+                2 if !gpu_live.is_empty() => {
+                    let i = rng.usize(gpu_live.len());
+                    let s = gpu_live.swap_remove(i);
+                    kv.free_seq(s).unwrap();
+                }
+                3 if !gpu_live.is_empty() => {
+                    let i = rng.usize(gpu_live.len());
+                    let s = gpu_live[i];
+                    if kv.evict_to_cpu(s).is_ok() {
+                        gpu_live.swap_remove(i);
+                        cpu_live.push(s);
+                    }
+                }
+                4 if !cpu_live.is_empty() => {
+                    let i = rng.usize(cpu_live.len());
+                    let s = cpu_live[i];
+                    if kv.restore_from_cpu(s).is_ok() {
+                        cpu_live.swap_remove(i);
+                        gpu_live.push(s);
+                    }
+                }
+                5 if rng.f64() < 0.02 => {
+                    kv.flush();
+                    gpu_live.clear();
+                    cpu_live.clear();
+                }
+                _ => {}
+            }
+            // Invariant: used + free == total, always.
+            assert_eq!(
+                kv.used_blocks() + kv.free_blocks(),
+                total_blocks,
+                "seed {seed}"
+            );
+        }
+        for s in gpu_live {
+            kv.free_seq(s).unwrap();
+        }
+        assert_eq!(kv.free_blocks(), total_blocks, "seed {seed}: leak");
+    }
+}
+
+/// Property: instance state machine — running + swapped + completed
+/// accounts for every admitted sequence; token accounting is exact.
+#[test]
+fn prop_instance_accounting() {
+    for seed in 400..420 {
+        let mut rng = Rng::new(seed);
+        let mut inst = Instance::new(
+            InstanceConfig::new(0, GpuKind::A100),
+            ModelCatalog::paper(),
+        );
+        inst.swap_model(ModelId(0), 0.0);
+        let mut now = inst.busy_until();
+        let mut admitted = 0u64;
+        let mut completed = 0u64;
+        let n = 20 + rng.usize(60) as u64;
+        let mut next = 0u64;
+        for _ in 0..400 {
+            // Random admissions.
+            if next < n && rng.f64() < 0.4 {
+                let seq = RunningSeq {
+                    req_id: next,
+                    model: ModelId(0),
+                    prompt_tokens: 1 + rng.usize(500) as u32,
+                    target_output: 1 + rng.usize(200) as u32,
+                    generated: 0,
+                    first_token_at: None,
+                    arrival_s: now,
+                };
+                if inst.try_admit(seq, now).is_ok() {
+                    admitted += 1;
+                    next += 1;
+                }
+            }
+            let out = inst.step(now);
+            completed += out.completed.len() as u64;
+            for c in &out.completed {
+                assert_eq!(c.generated, c.target_output, "seed {seed}");
+            }
+            if out.dt <= 0.0 && inst.is_idle() && next >= n {
+                break;
+            }
+            now += out.dt.max(1e-3);
+        }
+        assert_eq!(
+            completed + inst.running_len() as u64 + inst.swapped_len() as u64,
+            admitted,
+            "seed {seed}: sequences lost"
+        );
+        assert_eq!(inst.stats.requests_completed, completed, "seed {seed}");
+    }
+}
+
+/// Property: RWT estimates are monotone — adding a group ahead never
+/// decreases a group's waiting time; swap charges only at model changes.
+#[test]
+fn prop_rwt_monotone_in_queue_prefix() {
+    let catalog = ModelCatalog::paper();
+    let est = RwtEstimator::new(ProfileTable::default());
+    let perf = PerfModel::profile(catalog.get(ModelId(0)), GpuKind::A100, 161.0);
+    for seed in 500..530 {
+        let mut rng = Rng::new(seed);
+        let n = 2 + rng.usize(20);
+        let groups: Vec<RequestGroup> = (0..n as u64)
+            .map(|g| RequestGroup {
+                id: GroupId(g),
+                model: ModelId(rng.usize(3) as u32),
+                class: SloClass::Batch1,
+                slo_s: 60.0,
+                earliest_arrival_s: 0.0,
+                members: VecDeque::from_iter(0..(1 + rng.usize(128)) as u64),
+                mega: false,
+            })
+            .collect();
+        let refs: Vec<&RequestGroup> = groups.iter().collect();
+        let full = est.estimate_queue(&refs, &perf, Some(ModelId(0)), |_| 3.0);
+        // Wait times are non-decreasing along the queue when service is
+        // non-negative (they are cumulative sums of non-negative terms).
+        for w in full.windows(2) {
+            assert!(
+                w[1].wait_mean_s >= w[0].wait_mean_s - 1e-9,
+                "seed {seed}: waits not monotone"
+            );
+        }
+        // Dropping the head group never increases anyone's wait.
+        if refs.len() > 1 {
+            let tail = est.estimate_queue(&refs[1..], &perf, Some(ModelId(0)), |_| 3.0);
+            for (a, b) in tail.iter().zip(full[1..].iter()) {
+                assert!(
+                    a.wait_mean_s <= b.wait_mean_s + 3.0 + 1e-9,
+                    "seed {seed}: removing head increased wait"
+                );
+            }
+        }
+    }
+}
