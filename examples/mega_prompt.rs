@@ -20,13 +20,7 @@ fn main() {
         "mega_frac", "qlm_slo%", "vllm_slo%", "qlm_p99_ttft"
     );
     for mega_frac in [0.0, 0.05, 0.15, 0.4] {
-        let spec = WorkloadSpec::w_c(
-            vec![ModelId(0)],
-            vec![ModelId(0)],
-            15.0,
-            1000,
-            mega_frac,
-        );
+        let spec = WorkloadSpec::w_c(vec![ModelId(0)], vec![ModelId(0)], 15.0, 1000, mega_frac);
         let trace = Trace::generate(&spec, 16);
         let qlm = Simulation::new(
             SimConfig::new(fleet_mixed(3, 1.0), catalog.clone(), Policy::qlm()),

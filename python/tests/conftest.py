@@ -1,0 +1,18 @@
+"""Collection guards for optional heavy dependencies.
+
+The Pallas/JAX layer is exercised only where JAX is installed (the CI
+python job, developer machines with `jax[cpu]`). Everywhere else the
+suite must still be invocable — `python -m pytest python/tests -q`
+reports the modules as skipped rather than erroring at import time.
+"""
+
+import importlib.util
+
+collect_ignore = []
+
+if importlib.util.find_spec("jax") is None:
+    # Both layers import jax at module scope.
+    collect_ignore += ["test_kernel.py", "test_model.py"]
+elif importlib.util.find_spec("hypothesis") is None:
+    # The kernel sweep additionally property-tests with hypothesis.
+    collect_ignore += ["test_kernel.py"]

@@ -1,29 +1,37 @@
 //! Benchmark harness (hand-rolled — the offline environment has no
 //! criterion). `cargo bench` runs every benchmark and prints
-//! mean ± stddev wall time plus derived throughput numbers.
+//! mean ± stddev wall time plus derived throughput numbers; pass a
+//! substring to run a subset, e.g. `cargo bench -- queue` (the CI
+//! bench-smoke job runs exactly that).
 //!
 //! Benches cover the paper's headline end-to-end results (Fig. 9 / 12
 //! operating points) and the hot paths the §Perf pass optimizes:
-//! RWT estimation, global-scheduler solves, the KV allocator, the
-//! continuous-batching step loop, and the PJRT decode step (when
-//! artifacts exist).
+//! the global-queue submit→schedule→ack loop (measured against the
+//! committed pre-refactor baseline below), RWT estimation,
+//! global-scheduler solves, the KV allocator, the continuous-batching
+//! step loop, and the PJRT decode step (feature "pjrt", artifacts
+//! required).
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use qlm::backend::{
-    GpuKind, Instance, InstanceConfig, KvCache, ModelCatalog, ModelId, PerfModel, RunningSeq,
+    GpuKind, Instance, InstanceConfig, InstanceId, KvCache, ModelCatalog, ModelId, PerfModel,
+    RunningSeq,
 };
 use qlm::baselines::Policy;
+use qlm::coordinator::request::Request;
 use qlm::coordinator::request_group::{GroupId, RequestGroup};
 use qlm::coordinator::rwt::{ProfileTable, RwtEstimator};
 use qlm::coordinator::scheduler::{GlobalScheduler, InstanceView, SchedulerConfig, SolverKind};
+use qlm::coordinator::GlobalQueue;
 use qlm::sim::{fleet_a100, SimConfig, Simulation};
 use qlm::util::{mean, stddev};
-use qlm::workload::{SloClass, Trace, WorkloadSpec};
+use qlm::workload::{SloClass, Trace, TraceRequest, WorkloadSpec};
 
-/// Run `f` for `iters` timed iterations (after 1 warmup); report stats.
-fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
+/// Run `f` for `iters` timed iterations (after 1 warmup); report stats
+/// and return the mean wall time in milliseconds.
+fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) -> f64 {
     let _ = f(); // warmup
     let mut times = Vec::with_capacity(iters);
     let mut work = 0u64;
@@ -35,11 +43,16 @@ fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
     let m = mean(&times);
     let sd = stddev(&times);
     let per_item = if work > 0 {
-        format!("  ({:.3} µs/item over {} items)", m * 1000.0 / work as f64, work)
+        format!(
+            "  ({:.3} µs/item over {} items)",
+            m * 1000.0 / work as f64,
+            work
+        )
     } else {
         String::new()
     };
     println!("{name:<44} {m:>9.3} ms ± {sd:>7.3}{per_item}");
+    m
 }
 
 fn grp(id: u64, model: u32, n: usize, slo: f64) -> RequestGroup {
@@ -66,7 +79,7 @@ fn views(n: u32, catalog: &ModelCatalog) -> Vec<InstanceView> {
                 }
             }
             InstanceView {
-                id: qlm::backend::InstanceId(i),
+                id: InstanceId(i),
                 active_model: Some(ModelId(0)),
                 perf_for,
                 swap_time,
@@ -74,6 +87,176 @@ fn views(n: u32, catalog: &ModelCatalog) -> Vec<InstanceView> {
             }
         })
         .collect()
+}
+
+/// The seed's `GlobalQueue` (pre-refactor baseline, committed here so the
+/// speedup claim stays measurable): `HashMap` store + linearly scanned
+/// `Vec` waiting set — `mark_running`/`complete` pay an O(n) retain.
+mod legacy {
+    use std::collections::HashMap;
+
+    use qlm::backend::InstanceId;
+    use qlm::coordinator::request::{Request, RequestState};
+
+    #[derive(Debug, Default)]
+    pub struct LegacyGlobalQueue {
+        store: HashMap<u64, Request>,
+        waiting: Vec<u64>,
+        next_id: u64,
+        pub completed: Vec<Request>,
+    }
+
+    impl LegacyGlobalQueue {
+        pub fn new() -> Self {
+            Self::default()
+        }
+
+        pub fn submit(&mut self, mut req: Request) -> u64 {
+            let id = self.next_id;
+            self.next_id += 1;
+            req.id = id;
+            req.state = RequestState::Waiting;
+            self.waiting.push(id);
+            self.store.insert(id, req);
+            id
+        }
+
+        pub fn waiting_ids(&self) -> &[u64] {
+            &self.waiting
+        }
+
+        pub fn mark_running(&mut self, id: u64) {
+            if let Some(r) = self.store.get_mut(&id) {
+                r.state = RequestState::Running;
+            }
+            self.waiting.retain(|&x| x != id);
+        }
+
+        pub fn requeue_evicted(&mut self, id: u64, generated: u32, evicted_from: InstanceId) {
+            if let Some(r) = self.store.get_mut(&id) {
+                r.state = RequestState::Evicted;
+                r.generated = generated;
+                r.evicted_from = Some(evicted_from);
+                if !self.waiting.contains(&id) {
+                    self.waiting.push(id);
+                }
+            }
+        }
+
+        pub fn complete(&mut self, id: u64, first_token_s: Option<f64>, completed_s: f64) {
+            if let Some(mut r) = self.store.remove(&id) {
+                r.state = RequestState::Completed;
+                if r.first_token_s.is_none() {
+                    r.first_token_s = first_token_s;
+                }
+                r.completed_s = Some(completed_s);
+                self.completed.push(r);
+            }
+            self.waiting.retain(|&x| x != id);
+        }
+    }
+}
+
+fn hot_path_request(arrival: f64) -> Request {
+    Request::from_trace(
+        0,
+        &TraceRequest {
+            arrival_s: arrival,
+            model: ModelId(0),
+            class: SloClass::Interactive,
+            slo_s: 20.0,
+            input_tokens: 161,
+            output_tokens: 338,
+            mega: false,
+        },
+    )
+}
+
+const HOT_PATH_N: usize = 8_000;
+const HOT_PATH_BATCH: usize = 64;
+
+/// The submit→schedule→ack loop against the slab-backed queue.
+fn drive_slab(n: usize) -> u64 {
+    let mut q = GlobalQueue::new();
+    let ids: Vec<u64> = (0..n)
+        .map(|i| q.submit(hot_path_request(i as f64)))
+        .collect();
+    let mut acked = 0u64;
+    for _chunk in ids.chunks(HOT_PATH_BATCH) {
+        // "Schedule": snapshot the head of the waiting set, as the
+        // scheduler's group refresh does.
+        let head: Vec<u64> = q.waiting_ids().take(HOT_PATH_BATCH).collect();
+        for &id in &head {
+            q.mark_running(id);
+        }
+        for (j, &id) in head.iter().enumerate() {
+            if j % 4 == 0 {
+                q.requeue_evicted(id, 3, InstanceId(0));
+            } else {
+                q.complete(id, Some(1.0), 2.0);
+                acked += 1;
+            }
+        }
+    }
+    // Drain the requeued tail.
+    let rest: Vec<u64> = q.waiting_ids().collect();
+    for id in rest {
+        q.mark_running(id);
+        q.complete(id, Some(1.0), 2.0);
+        acked += 1;
+    }
+    acked
+}
+
+/// The identical op sequence against the pre-refactor baseline.
+fn drive_legacy(n: usize) -> u64 {
+    let mut q = legacy::LegacyGlobalQueue::new();
+    let ids: Vec<u64> = (0..n)
+        .map(|i| q.submit(hot_path_request(i as f64)))
+        .collect();
+    let mut acked = 0u64;
+    for _chunk in ids.chunks(HOT_PATH_BATCH) {
+        let head: Vec<u64> = q
+            .waiting_ids()
+            .iter()
+            .take(HOT_PATH_BATCH)
+            .copied()
+            .collect();
+        for &id in &head {
+            q.mark_running(id);
+        }
+        for (j, &id) in head.iter().enumerate() {
+            if j % 4 == 0 {
+                q.requeue_evicted(id, 3, InstanceId(0));
+            } else {
+                q.complete(id, Some(1.0), 2.0);
+                acked += 1;
+            }
+        }
+    }
+    let rest: Vec<u64> = q.waiting_ids().to_vec();
+    for id in rest {
+        q.mark_running(id);
+        q.complete(id, Some(1.0), 2.0);
+        acked += 1;
+    }
+    acked
+}
+
+/// The PR's headline perf claim: slab store + ordered waiting set vs the
+/// seed's HashMap + Vec on the same submit→schedule→ack op sequence.
+fn bench_queue_hot_path() {
+    let slab_ms = bench("queue/submit-schedule-ack (slab)", 20, || {
+        drive_slab(HOT_PATH_N)
+    });
+    let legacy_ms = bench("queue/submit-schedule-ack (legacy)", 20, || {
+        drive_legacy(HOT_PATH_N)
+    });
+    let speedup = legacy_ms / slab_ms.max(1e-9);
+    println!(
+        "queue/hot-path speedup: {speedup:.1}x over pre-refactor baseline \
+         ({legacy_ms:.2} ms -> {slab_ms:.2} ms, target >= 2x)"
+    );
 }
 
 fn bench_rwt() {
@@ -96,6 +279,7 @@ fn bench_scheduler() {
         let groups: Vec<RequestGroup> = (0..n_groups as u64)
             .map(|g| grp(g, (g % 4) as u32, 256, 60.0 + (g % 7) as f64 * 300.0))
             .collect();
+        let refs: Vec<&RequestGroup> = groups.iter().collect();
         let sched = GlobalScheduler::new(
             SchedulerConfig {
                 solver: SolverKind::Greedy,
@@ -109,12 +293,13 @@ fn bench_scheduler() {
                 n_groups * 256 / 1000
             ),
             5,
-            || sched.schedule(&groups, &vs, 0.0).stats.groups as u64,
+            || sched.schedule(&refs, &vs, 0.0).stats.groups as u64,
         );
     }
     // Exact MILP reference point (Fig. 20's right-hand regime).
     let groups: Vec<RequestGroup> =
         (0..5u64).map(|g| grp(g, (g % 2) as u32, 256, 60.0)).collect();
+    let refs: Vec<&RequestGroup> = groups.iter().collect();
     let sched = GlobalScheduler::new(
         SchedulerConfig {
             solver: SolverKind::ExactMilp,
@@ -124,7 +309,7 @@ fn bench_scheduler() {
         est,
     );
     bench("scheduler/exact-milp (5 groups)", 5, || {
-        sched.schedule(&groups, &vs[..1], 0.0).stats.milp_nodes as u64
+        sched.schedule(&refs, &vs[..1], 0.0).stats.milp_nodes as u64
     });
 }
 
@@ -149,10 +334,7 @@ fn bench_kv() {
 
 fn bench_instance_step() {
     bench("instance/step-loop (64 seqs × 200 iters)", 10, || {
-        let mut inst = Instance::new(
-            InstanceConfig::new(0, GpuKind::A100),
-            ModelCatalog::paper(),
-        );
+        let mut inst = Instance::new(InstanceConfig::new(0, GpuKind::A100), ModelCatalog::paper());
         inst.swap_model(ModelId(0), 0.0);
         let t0 = inst.busy_until();
         for i in 0..64u64 {
@@ -209,17 +391,14 @@ fn bench_e2e_fig12() {
         let name = format!("e2e/multi-model W_B 600 reqs [{}]", policy.name());
         let t = trace.clone();
         bench(&name, 3, || {
-            let cfg = SimConfig::new(
-                fleet_a100(2),
-                ModelCatalog::paper_multi_model(),
-                policy,
-            );
+            let cfg = SimConfig::new(fleet_a100(2), ModelCatalog::paper_multi_model(), policy);
             let m = Simulation::new(cfg, &t).run(&t);
             m.completed_count() as u64
         });
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn bench_runtime_decode() {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     if !std::path::Path::new(dir).join("manifest.txt").exists() {
@@ -239,14 +418,41 @@ fn bench_runtime_decode() {
     });
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn bench_runtime_decode() {
+    println!("runtime/decode-step: skipped (build with --features pjrt)");
+}
+
 fn main() {
+    // Optional substring filter: `cargo bench -- queue` runs only the
+    // queue hot-path benches (what the CI bench-smoke job does).
+    let filter: Option<String> = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let runs = |name: &str| match filter.as_deref() {
+        Some(f) => name.contains(f),
+        None => true,
+    };
     println!("qlm benchmarks (mean ± stddev over timed iterations)\n");
-    bench_rwt();
-    bench_scheduler();
-    bench_kv();
-    bench_instance_step();
-    bench_e2e_fig09();
-    bench_e2e_fig12();
-    bench_runtime_decode();
+    if runs("queue") {
+        bench_queue_hot_path();
+    }
+    if runs("rwt") {
+        bench_rwt();
+    }
+    if runs("scheduler") {
+        bench_scheduler();
+    }
+    if runs("kv") {
+        bench_kv();
+    }
+    if runs("instance") {
+        bench_instance_step();
+    }
+    if runs("e2e") {
+        bench_e2e_fig09();
+        bench_e2e_fig12();
+    }
+    if runs("runtime") {
+        bench_runtime_decode();
+    }
     println!("\nfigure regeneration: `qlm figures [--fig N] [--full]` (see DESIGN.md index)");
 }

@@ -300,9 +300,25 @@ impl Instance {
         self.evict(&ids, now)
     }
 
+    /// Hard instance failure (§4 Fault Isolation): the device and its
+    /// CPU swap space are gone. Every running and internally-preempted
+    /// sequence is returned so the coordinator can revert it to Waiting
+    /// in the global queue; the caller must stop scheduling onto this
+    /// instance afterwards.
+    pub fn fail(&mut self) -> Vec<RunningSeq> {
+        let mut lost: Vec<RunningSeq> = self.running.drain(..).collect();
+        lost.extend(self.swapped.drain(..));
+        self.kv.flush();
+        lost
+    }
+
     /// Restore an evicted sequence whose KV is still in this instance's
     /// CPU swap (cheap re-admission after eviction).
-    pub fn try_restore(&mut self, seq: RunningSeq, now: f64) -> Result<(), (RunningSeq, AdmitError)> {
+    pub fn try_restore(
+        &mut self,
+        seq: RunningSeq,
+        now: f64,
+    ) -> Result<(), (RunningSeq, AdmitError)> {
         if self.kv.cpu_resident(seq.req_id).is_some() {
             if self.is_swapping(now) {
                 return Err((seq, AdmitError::Busy));
@@ -496,10 +512,7 @@ mod tests {
     }
 
     fn mk_instance() -> Instance {
-        let mut inst = Instance::new(
-            InstanceConfig::new(0, GpuKind::A100),
-            ModelCatalog::paper(),
-        );
+        let mut inst = Instance::new(InstanceConfig::new(0, GpuKind::A100), ModelCatalog::paper());
         inst.swap_model(ModelId(0), 0.0);
         inst
     }
@@ -617,10 +630,7 @@ mod tests {
     #[test]
     fn preemption_on_kv_overflow() {
         // Tiny KV: force overflow during decode.
-        let mut inst = Instance::new(
-            InstanceConfig::new(0, GpuKind::A100),
-            ModelCatalog::paper(),
-        );
+        let mut inst = Instance::new(InstanceConfig::new(0, GpuKind::A100), ModelCatalog::paper());
         inst.swap_model(ModelId(0), 0.0);
         let t0 = inst.busy_until();
         // Shrink the cache artificially by filling with big prompts near

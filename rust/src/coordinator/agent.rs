@@ -189,9 +189,7 @@ mod tests {
         }
     }
 
-    fn setup(
-        vq_groups: &[RequestGroup],
-    ) -> (VirtualQueue, HashMap<GroupId, RequestGroup>) {
+    fn setup(vq_groups: &[RequestGroup]) -> (VirtualQueue, HashMap<GroupId, RequestGroup>) {
         let mut vq = VirtualQueue::new(InstanceId(0));
         let mut map = HashMap::new();
         for g in vq_groups {
@@ -212,11 +210,17 @@ mod tests {
         }
     }
 
+    /// The waiting-members closure every test hands to `decide`.
+    fn members_of(map: &HashMap<GroupId, RequestGroup>) -> impl Fn(GroupId) -> Vec<u64> + '_ {
+        |g| map[&g].members.iter().copied().collect()
+    }
+
     #[test]
     fn swap_issued_when_head_model_differs() {
         let agent = QlmAgent::new(InstanceId(0), LsoConfig::all());
         let (vq, map) = setup(&[grp(1, 1, &[10])]);
-        let actions = agent.decide(&vq, &map, |g| map[&g].members.iter().copied().collect(), &obs(Some(0), 1000, 8), |_| 100);
+        let o = obs(Some(0), 1000, 8);
+        let actions = agent.decide(&vq, &map, members_of(&map), &o, |_| 100);
         assert_eq!(
             actions,
             vec![LsoAction::SwapModel {
@@ -231,10 +235,11 @@ mod tests {
         let agent = QlmAgent::new(InstanceId(0), LsoConfig::without_swapping());
         let (vq, map) = setup(&[grp(1, 1, &[10])]);
         // Active model present but different: no swap under ablation.
-        let a = agent.decide(&vq, &map, |g| map[&g].members.iter().copied().collect(), &obs(Some(0), 1000, 8), |_| 100);
+        let o = obs(Some(0), 1000, 8);
+        let a = agent.decide(&vq, &map, members_of(&map), &o, |_| 100);
         assert!(a.is_empty());
         // Cold instance must still load its first model.
-        let a2 = agent.decide(&vq, &map, |g| map[&g].members.iter().copied().collect(), &obs(None, 1000, 8), |_| 100);
+        let a2 = agent.decide(&vq, &map, members_of(&map), &obs(None, 1000, 8), |_| 100);
         assert_eq!(a2.len(), 1);
     }
 
@@ -242,7 +247,8 @@ mod tests {
     fn pulls_fcfs_from_head_group_within_capacity() {
         let agent = QlmAgent::new(InstanceId(0), LsoConfig::all());
         let (vq, map) = setup(&[grp(1, 0, &[10, 11, 12])]);
-        let actions = agent.decide(&vq, &map, |g| map[&g].members.iter().copied().collect(), &obs(Some(0), 250, 8), |_| 100);
+        let o = obs(Some(0), 250, 8);
+        let actions = agent.decide(&vq, &map, members_of(&map), &o, |_| 100);
         // 250 tokens of space, 100 per prompt → two pulls.
         assert_eq!(
             actions,
@@ -263,7 +269,8 @@ mod tests {
     fn pulls_cross_group_boundary_same_model_only() {
         let agent = QlmAgent::new(InstanceId(0), LsoConfig::all());
         let (vq, map) = setup(&[grp(1, 0, &[10]), grp(2, 0, &[20]), grp(3, 1, &[30])]);
-        let actions = agent.decide(&vq, &map, |g| map[&g].members.iter().copied().collect(), &obs(Some(0), 10_000, 8), |_| 100);
+        let o = obs(Some(0), 10_000, 8);
+        let actions = agent.decide(&vq, &map, members_of(&map), &o, |_| 100);
         let pulled: Vec<u64> = actions
             .iter()
             .filter_map(|a| match a {
@@ -280,7 +287,7 @@ mod tests {
         let (vq, map) = setup(&[grp(1, 0, &[10]), grp(2, 0, &[])]);
         let mut o = obs(Some(0), 0, 8); // no spare capacity
         o.running = vec![(20, GroupId(2)), (21, GroupId(2))];
-        let actions = agent.decide(&vq, &map, |g| map[&g].members.iter().copied().collect(), &o, |_| 100);
+        let actions = agent.decide(&vq, &map, members_of(&map), &o, |_| 100);
         match &actions[0] {
             LsoAction::Evict { requests, .. } => {
                 assert!(requests.contains(&21), "newest victim evicted first");
@@ -295,7 +302,7 @@ mod tests {
         let (vq, map) = setup(&[grp(1, 0, &[10]), grp(2, 0, &[])]);
         let mut o = obs(Some(0), 0, 8);
         o.running = vec![(20, GroupId(2))];
-        let actions = agent.decide(&vq, &map, |g| map[&g].members.iter().copied().collect(), &o, |_| 100);
+        let actions = agent.decide(&vq, &map, members_of(&map), &o, |_| 100);
         assert!(actions.is_empty(), "{actions:?}");
     }
 
@@ -305,6 +312,7 @@ mod tests {
         let (vq, map) = setup(&[grp(1, 0, &[10])]);
         let mut o = obs(Some(0), 1000, 8);
         o.swapping = true;
-        assert!(agent.decide(&vq, &map, |g| map[&g].members.iter().copied().collect(), &o, |_| 100).is_empty());
+        let actions = agent.decide(&vq, &map, members_of(&map), &o, |_| 100);
+        assert!(actions.is_empty());
     }
 }

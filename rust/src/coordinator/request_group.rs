@@ -181,11 +181,7 @@ impl Grouper {
     /// Incremental classification (§4, Handling New Incoming Requests):
     /// place a new request into an existing compatible group with space,
     /// else mint a new group for it.
-    pub fn classify(
-        &mut self,
-        req: &Request,
-        groups: &mut Vec<RequestGroup>,
-    ) -> GroupId {
+    pub fn classify(&mut self, req: &Request, groups: &mut Vec<RequestGroup>) -> GroupId {
         let cap = self.max_group_size();
         if let Some(g) = groups.iter_mut().find(|g| {
             g.model == req.model

@@ -13,10 +13,11 @@
 //! bound — conservative for short queues, with the error vanishing as the
 //! queue grows and W dominates (§6, Fig. 18).
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 
-use crate::backend::{ModelId, PerfModel};
-use crate::coordinator::request_group::RequestGroup;
+use crate::backend::{GpuKind, ModelId, PerfModel};
+use crate::coordinator::request_group::{GroupId, RequestGroup};
 use crate::workload::{SloClass, Trace};
 
 /// Per-(model, class, mega) output/input token moments — the product of
@@ -110,16 +111,105 @@ pub struct GroupEstimate {
     pub swap_s: f64,
 }
 
+/// Memo key for a group-service estimate: the estimate is a pure
+/// function of the group's profile identity (model, class, mega), its
+/// current member count, and [`PerfKey`] — every perf constant the
+/// service computation reads. The group id is included so pruning tracks
+/// live groups rather than deduplicating across identically-shaped ones.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct ServiceKey {
+    group: GroupId,
+    model: ModelId,
+    class: SloClass,
+    mega: bool,
+    len: u32,
+    perf: PerfKey,
+}
+
+/// Exact identity of the perf constants consumed by
+/// [`RwtEstimator::group_service`]: Θ comes from `measured_theta` when
+/// set, else from `steady_throughput` — which reads the decode floor,
+/// KV-read slope, ε, token capacity, and max batch. All of them are in
+/// the key so two views never share an entry unless the estimate is
+/// genuinely identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct PerfKey {
+    gpu: GpuKind,
+    tp: u32,
+    theta_bits: u64,
+    decode_bits: u64,
+    kv_read_bits: u64,
+    epsilon_bits: u64,
+    token_capacity: u64,
+    max_batch: u32,
+}
+
+impl PerfKey {
+    fn of(perf: &PerfModel) -> Self {
+        PerfKey {
+            gpu: perf.gpu,
+            tp: perf.tp,
+            theta_bits: perf.measured_theta.map(f64::to_bits).unwrap_or(0),
+            decode_bits: perf.decode_s_per_token.to_bits(),
+            kv_read_bits: perf.kv_read_s_per_token.to_bits(),
+            epsilon_bits: perf.epsilon.to_bits(),
+            token_capacity: perf.token_capacity,
+            max_batch: perf.max_batch,
+        }
+    }
+}
+
+/// §Perf: per-(group, instance-view) epoch memo of [`RwtEstimator::group_service`].
+/// The global scheduler re-prices every (group × instance) pair on each
+/// invocation; between invocations almost nothing changes — a group's
+/// service estimate only moves when members complete. Entries untouched
+/// for a full epoch window are pruned so the map tracks the live group
+/// set instead of growing with every group ever created.
+#[derive(Debug, Clone, Default)]
+struct ServiceMemo {
+    map: HashMap<ServiceKey, (f64, f64, u64)>,
+    epoch: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// How many epochs between prune sweeps of the service memo.
+const MEMO_PRUNE_INTERVAL: u64 = 256;
+
 /// The RWT estimator: stateless over (perf, profiles); all methods are
 /// pure so the global scheduler can evaluate candidate orderings cheaply.
+/// The only interior state is the epoch memo above, which caches — never
+/// changes — results.
 #[derive(Debug, Clone)]
 pub struct RwtEstimator {
     pub profiles: ProfileTable,
+    memo: RefCell<ServiceMemo>,
 }
 
 impl RwtEstimator {
     pub fn new(profiles: ProfileTable) -> Self {
-        RwtEstimator { profiles }
+        RwtEstimator {
+            profiles,
+            memo: RefCell::new(ServiceMemo::default()),
+        }
+    }
+
+    /// Advance the memo epoch (one global-scheduler invocation) and
+    /// periodically prune entries not referenced since the last sweep.
+    pub fn begin_epoch(&self) {
+        let mut m = self.memo.borrow_mut();
+        m.epoch += 1;
+        if m.epoch % MEMO_PRUNE_INTERVAL == 0 {
+            let cutoff = m.epoch.saturating_sub(MEMO_PRUNE_INTERVAL);
+            m.map.retain(|_, v| v.2 >= cutoff);
+        }
+    }
+
+    /// (hits, misses) of the group-service memo — observability for the
+    /// perf tests and the bench harness.
+    pub fn memo_stats(&self) -> (u64, u64) {
+        let m = self.memo.borrow();
+        (m.hits, m.misses)
     }
 
     /// Θ for a group's steady state on `perf` (Appendix Eqs. 15–16).
@@ -154,12 +244,26 @@ impl RwtEstimator {
 
     /// Mean service time to drain a whole group of `n` requests: the
     /// group's total expected output tokens over Θ (waiting-time view of
-    /// the group for queue positions behind it).
-    pub fn group_service(
-        &self,
-        group: &RequestGroup,
-        perf: &PerfModel,
-    ) -> (f64, f64) {
+    /// the group for queue positions behind it). Memoized per
+    /// (group, instance-view) epoch — see [`ServiceMemo`].
+    pub fn group_service(&self, group: &RequestGroup, perf: &PerfModel) -> (f64, f64) {
+        let key = ServiceKey {
+            group: group.id,
+            model: group.model,
+            class: group.class,
+            mega: group.mega,
+            len: group.len() as u32,
+            perf: PerfKey::of(perf),
+        };
+        {
+            let mut guard = self.memo.borrow_mut();
+            let m = &mut *guard;
+            if let Some(v) = m.map.get_mut(&key) {
+                v.2 = m.epoch;
+                m.hits += 1;
+                return (v.0, v.1);
+            }
+        }
         let p = self.profiles.get(group.model, group.class, group.mega);
         let theta = self.throughput(perf, &p);
         let n = group.len() as f64;
@@ -167,6 +271,10 @@ impl RwtEstimator {
         // conservative (overestimates remaining tokens).
         let mean = n * p.mu_out / theta;
         let std = n.sqrt() * p.sigma_out / theta;
+        let mut m = self.memo.borrow_mut();
+        m.misses += 1;
+        let epoch = m.epoch;
+        m.map.insert(key, (mean, std, epoch));
         (mean, std)
     }
 
@@ -355,6 +463,62 @@ mod tests {
         assert!(!est.detect_violation(&ok_order, &p, Some(ModelId(0)), swap, 0.0)
             || est.detect_violation(&bad_order, &p, Some(ModelId(0)), swap, 0.0));
         assert!(est.detect_violation(&bad_order, &p, Some(ModelId(0)), swap, 0.0));
+    }
+
+    #[test]
+    fn group_service_memoized_per_group_and_view() {
+        let est = RwtEstimator::new(ProfileTable::default());
+        let p = perf();
+        let g = mk_group(1, 0, 64, 0.0, 60.0);
+        let a = est.group_service(&g, &p);
+        let b = est.group_service(&g, &p);
+        assert_eq!(a, b);
+        let (hits, misses) = est.memo_stats();
+        assert_eq!((hits, misses), (1, 1), "second lookup must hit");
+    }
+
+    #[test]
+    fn group_service_memo_invalidated_by_member_count() {
+        let est = RwtEstimator::new(ProfileTable::default());
+        let p = perf();
+        let mut g = mk_group(2, 0, 64, 0.0, 60.0);
+        let (full, _) = est.group_service(&g, &p);
+        g.members.pop_front();
+        let (smaller, _) = est.group_service(&g, &p);
+        assert!(
+            smaller < full,
+            "shrunk group must be re-priced: {smaller} vs {full}"
+        );
+    }
+
+    #[test]
+    fn memo_distinguishes_perf_constants() {
+        // Same gpu/tp/decode floor but different token capacity ⇒ a
+        // different steady batch ⇒ a different estimate. The memo must
+        // not serve the first perf's value for the second.
+        let est = RwtEstimator::new(ProfileTable::default());
+        let p1 = perf();
+        let mut p2 = p1;
+        p2.token_capacity /= 8;
+        let g = mk_group(4, 0, 64, 0.0, 60.0);
+        let (a, _) = est.group_service(&g, &p1);
+        let (b, _) = est.group_service(&g, &p2);
+        assert!(b > a, "smaller KV capacity must slow service: {a} vs {b}");
+    }
+
+    #[test]
+    fn memo_prunes_stale_entries_after_epoch_window() {
+        let est = RwtEstimator::new(ProfileTable::default());
+        let p = perf();
+        let g = mk_group(3, 0, 32, 0.0, 60.0);
+        est.group_service(&g, &p);
+        for _ in 0..512 {
+            est.begin_epoch();
+        }
+        est.group_service(&g, &p);
+        let (hits, misses) = est.memo_stats();
+        assert_eq!(hits, 0, "entry was pruned, so this is a miss");
+        assert_eq!(misses, 2);
     }
 
     #[test]

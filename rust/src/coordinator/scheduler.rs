@@ -112,12 +112,7 @@ impl GlobalScheduler {
     }
 
     /// Penalty of an ordering on one instance: Σ max(0, completion − budget).
-    pub fn queue_penalty(
-        &self,
-        order: &[&RequestGroup],
-        view: &InstanceView,
-        now: f64,
-    ) -> f64 {
+    pub fn queue_penalty(&self, order: &[&RequestGroup], view: &InstanceView, now: f64) -> f64 {
         if order.is_empty() {
             return 0.0;
         }
@@ -142,7 +137,7 @@ impl GlobalScheduler {
     /// Model-affinity EDF ordering of one queue's groups: cluster by
     /// model, order clusters by earliest deadline, EDF within cluster —
     /// the Fig. 5 "Oracle" structure that avoids swap thrashing.
-    pub fn affinity_order(groups: &mut Vec<&RequestGroup>, active: Option<ModelId>) {
+    pub fn affinity_order(groups: &mut [&RequestGroup], active: Option<ModelId>) {
         // Cluster key: model; cluster deadline: min member deadline.
         let mut cluster_deadline: HashMap<ModelId, f64> = HashMap::new();
         for g in groups.iter() {
@@ -165,14 +160,20 @@ impl GlobalScheduler {
     }
 
     /// Main entry: assign + order all schedulable groups.
+    ///
+    /// Takes group *references* so callers holding groups in a table
+    /// (the simulator's live group map) schedule without deep-cloning
+    /// every member list per invocation (§Perf).
     pub fn schedule(
         &self,
-        groups: &[RequestGroup],
+        groups: &[&RequestGroup],
         instances: &[InstanceView],
         now: f64,
     ) -> Assignment {
+        // One scheduler invocation = one memo epoch for service pricing.
+        self.estimator.begin_epoch();
         let by_id: HashMap<GroupId, &RequestGroup> =
-            groups.iter().map(|g| (g.id, g)).collect();
+            groups.iter().map(|g| (g.id, *g)).collect();
         let mut orders: HashMap<InstanceId, Vec<GroupId>> = HashMap::new();
         let mut stats = SolveStats {
             groups: groups.len(),
@@ -194,6 +195,7 @@ impl GlobalScheduler {
         // 2. Deadline-ordered greedy assignment of the rest.
         let mut todo: Vec<&RequestGroup> = groups
             .iter()
+            .copied()
             .filter(|g| !pinned.contains_key(&g.id))
             .collect();
         todo.sort_by(|a, b| {
@@ -557,9 +559,8 @@ mod tests {
         let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
         let big = grp(1, 0, 200, 0.0, 3600.0);
         let tight = grp(2, 0, 4, 0.0, 20.0);
-        let groups = vec![big, tight];
         let views = vec![view(0, &[0], Some(0))];
-        let a = sched.schedule(&groups, &views, 0.0);
+        let a = sched.schedule(&[&big, &tight], &views, 0.0);
         let order = &a.orders[&InstanceId(0)];
         assert_eq!(order[0], GroupId(2), "interactive group must lead");
     }
@@ -569,8 +570,9 @@ mod tests {
         let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
         let groups: Vec<RequestGroup> =
             (0..8).map(|i| grp(i, 0, 64, 0.0, 60.0)).collect();
+        let refs: Vec<&RequestGroup> = groups.iter().collect();
         let views = vec![view(0, &[0], Some(0)), view(1, &[0], Some(0))];
-        let a = sched.schedule(&groups, &views, 0.0);
+        let a = sched.schedule(&refs, &views, 0.0);
         let l0 = a.orders[&InstanceId(0)].len();
         let l1 = a.orders[&InstanceId(1)].len();
         assert_eq!(l0 + l1, 8);
@@ -582,8 +584,9 @@ mod tests {
         // Llama-70B (model 2) can only run on instance 1.
         let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
         let groups = vec![grp(1, 2, 8, 0.0, 3600.0), grp(2, 0, 8, 0.0, 3600.0)];
+        let refs: Vec<&RequestGroup> = groups.iter().collect();
         let views = vec![view(0, &[0], Some(0)), view(1, &[0, 2], None)];
-        let a = sched.schedule(&groups, &views, 0.0);
+        let a = sched.schedule(&refs, &views, 0.0);
         assert!(a.orders[&InstanceId(1)].contains(&GroupId(1)));
         assert!(!a.orders[&InstanceId(0)].contains(&GroupId(1)));
     }
@@ -595,10 +598,30 @@ mod tests {
         let urgent = grp(8, 0, 4, 0.0, 10.0);
         let mut v = view(0, &[0], Some(0));
         v.executing = Some(GroupId(7));
-        let a = sched.schedule(&[executing, urgent], &[v], 0.0);
+        let a = sched.schedule(&[&executing, &urgent], &[v], 0.0);
         let order = &a.orders[&InstanceId(0)];
         assert_eq!(order[0], GroupId(7), "executing group pinned");
         assert_eq!(order[1], GroupId(8));
+    }
+
+    #[test]
+    fn repeated_schedules_reuse_service_memo() {
+        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
+        // 8 groups: enough to stay on the greedy path (no MILP) while
+        // still exercising the assignment + penalty pricing.
+        let groups: Vec<RequestGroup> =
+            (0..8).map(|i| grp(i, 0, 32, 0.0, 600.0)).collect();
+        let refs: Vec<&RequestGroup> = groups.iter().collect();
+        let views = vec![view(0, &[0], Some(0))];
+        let a = sched.schedule(&refs, &views, 0.0);
+        let b = sched.schedule(&refs, &views, 0.0);
+        assert_eq!(a.orders, b.orders, "identical inputs, identical plan");
+        let (hits, misses) = sched.estimator.memo_stats();
+        assert!(hits > 0, "second invocation must hit the memo");
+        assert!(
+            hits >= misses,
+            "unchanged groups should mostly hit: {hits} hits / {misses} misses"
+        );
     }
 
     #[test]
@@ -651,8 +674,9 @@ mod tests {
         // Enormous backlog with tiny SLOs.
         let groups: Vec<RequestGroup> =
             (0..20).map(|i| grp(i, 0, 256, 0.0, 5.0)).collect();
+        let refs: Vec<&RequestGroup> = groups.iter().collect();
         let views = vec![view(0, &[0], Some(0))];
-        let a = sched.schedule(&groups, &views, 0.0);
+        let a = sched.schedule(&refs, &views, 0.0);
         assert!(!a.feasible);
         assert!(a.total_penalty_s > 0.0);
     }

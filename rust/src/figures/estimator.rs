@@ -5,15 +5,12 @@ use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use crate::backend::{GpuKind, InstanceConfig, ModelCatalog, ModelId, PerfModel};
+use crate::backend::{GpuKind, ModelCatalog, ModelId, PerfModel};
 use crate::baselines::Policy;
 use crate::coordinator::request_group::{GroupId, RequestGroup};
 use crate::coordinator::rwt::{ProfileTable, RwtEstimator};
-use crate::coordinator::scheduler::{
-    GlobalScheduler, InstanceView, SchedulerConfig, SolverKind,
-};
-use crate::figures::common::{f1, f3, pct, run_one, Figure, Scale};
-use crate::figures::fig03::dump_trace;
+use crate::coordinator::scheduler::{GlobalScheduler, InstanceView, SchedulerConfig, SolverKind};
+use crate::figures::common::{f1, f3, pct, Figure, Scale};
 use crate::sim::{fleet_a100, SimConfig, Simulation};
 use crate::util::r_squared;
 use crate::workload::{SloClass, Trace, WorkloadSpec};
@@ -40,7 +37,10 @@ pub fn fig18(scale: Scale) -> Figure {
             ]);
         }
     }
-    fig.note("paper Fig. 18: accuracy rises with queue size, ≈0.99 by 4 groups; short queues are conservatively overestimated");
+    fig.note(
+        "paper Fig. 18: accuracy rises with queue size, ≈0.99 by 4 groups; \
+         short queues are conservatively overestimated",
+    );
     fig
 }
 
@@ -49,60 +49,6 @@ pub fn fig18(scale: Scale) -> Figure {
 fn wait_pairs(model: ModelId, n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
     let (_pos, meas, pred, _r2) = crate::figures::fig03::wait_curve(model, n, seed);
     (pred, meas)
-}
-
-/// Predicted vs simulated completion time of each group in a standing
-/// queue of `n_groups × group_sz` requests on one A100.
-fn group_completion_pairs(
-    model: ModelId,
-    n_groups: usize,
-    group_sz: usize,
-    seed: u64,
-) -> (Vec<f64>, Vec<f64>) {
-    let n = n_groups * group_sz;
-    let trace = dump_trace(model, n, seed);
-    let catalog = ModelCatalog::paper();
-
-    // Prediction from the estimator over synthetic groups (FCFS slices).
-    let est = RwtEstimator::new(ProfileTable::from_trace(&trace));
-    let perf = PerfModel::profile(catalog.get(model), GpuKind::A100, 161.0);
-    let groups: Vec<RequestGroup> = (0..n_groups)
-        .map(|g| RequestGroup {
-            id: GroupId(g as u64),
-            model,
-            class: SloClass::Batch2,
-            slo_s: 3600.0,
-            earliest_arrival_s: 0.0,
-            members: VecDeque::from_iter(
-                (g * group_sz..(g + 1) * group_sz).map(|x| x as u64),
-            ),
-            mega: false,
-        })
-        .collect();
-    let refs: Vec<&RequestGroup> = groups.iter().collect();
-    let ests = est.estimate_queue(&refs, &perf, Some(model), |_| 0.0);
-    let pred: Vec<f64> = ests.iter().map(|e| e.completion_mean_s).collect();
-
-    // Actual from simulation: completion of the last member of each slice.
-    let m = run_one(
-        &trace,
-        vec![InstanceConfig::new(0, GpuKind::A100)],
-        catalog,
-        Policy::qlm(),
-    );
-    let mut done: HashMap<u64, f64> = m
-        .records
-        .iter()
-        .filter_map(|r| r.completed_s.map(|c| (r.id, c)))
-        .collect();
-    let actual: Vec<f64> = (0..n_groups)
-        .map(|g| {
-            (g * group_sz..(g + 1) * group_sz)
-                .filter_map(|x| done.remove(&(x as u64)))
-                .fold(0.0, f64::max)
-        })
-        .collect();
-    (pred, actual)
 }
 
 /// Fig. 19: δ trade-off — SLO attainment (decision granularity) vs
@@ -135,7 +81,10 @@ pub fn fig19(scale: Scale) -> Figure {
             format!("{}", m.scheduler_invocations),
         ]);
     }
-    fig.note("paper Fig. 19: δ=1 best performance / highest overhead; δ=4 ≈ no degradation at low overhead");
+    fig.note(
+        "paper Fig. 19: δ=1 best performance / highest overhead; \
+         δ=4 ≈ no degradation at low overhead",
+    );
     fig
 }
 
@@ -189,6 +138,7 @@ pub fn fig20(scale: Scale) -> Figure {
                 mega: false,
             })
             .collect();
+        let refs: Vec<&RequestGroup> = groups.iter().collect();
         let sched = GlobalScheduler::new(
             SchedulerConfig {
                 solver: SolverKind::Greedy,
@@ -197,7 +147,7 @@ pub fn fig20(scale: Scale) -> Figure {
             est.clone(),
         );
         let t0 = Instant::now();
-        let a = sched.schedule(&groups, &views, 0.0);
+        let a = sched.schedule(&refs, &views, 0.0);
         let ms = 1000.0 * t0.elapsed().as_secs_f64();
         fig.row(vec![
             format!("{n_requests}"),
@@ -219,6 +169,7 @@ pub fn fig20(scale: Scale) -> Figure {
             mega: false,
         })
         .collect();
+    let small_refs: Vec<&RequestGroup> = small.iter().collect();
     let sched = GlobalScheduler::new(
         SchedulerConfig {
             solver: SolverKind::ExactMilp,
@@ -228,7 +179,7 @@ pub fn fig20(scale: Scale) -> Figure {
         est,
     );
     let t0 = Instant::now();
-    let a = sched.schedule(&small, &views[..1], 0.0);
+    let a = sched.schedule(&small_refs, &views[..1], 0.0);
     let ms = 1000.0 * t0.elapsed().as_secs_f64();
     fig.row(vec![
         format!("{}", 5 * group_sz),
@@ -238,7 +189,10 @@ pub fn fig20(scale: Scale) -> Figure {
         f3(ms / 5.0),
     ]);
     let _ = a;
-    fig.note("paper Fig. 20: ~5 s per scheduling pass at 400K requests (5 ms/request-group); greedy path scales linearly in groups");
+    fig.note(
+        "paper Fig. 20: ~5 s per scheduling pass at 400K requests \
+         (5 ms/request-group); greedy path scales linearly in groups",
+    );
     fig
 }
 

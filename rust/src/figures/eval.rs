@@ -91,17 +91,15 @@ pub fn fig10(scale: Scale) -> Figure {
             pct(ms[3].slo_attainment()),
         ]);
     }
-    fig.note("paper Fig. 10: QLM 40-90% above vLLM, 50-90% above SHEPHERD; all fail far beyond capacity");
+    fig.note(
+        "paper Fig. 10: QLM 40-90% above vLLM, 50-90% above SHEPHERD; \
+         all fail far beyond capacity",
+    );
     fig
 }
 
 /// LSO ablation rows for a trace/fleet (figs. 11 and 14).
-fn ablation_rows(
-    fig: &mut Figure,
-    trace: &Trace,
-    fleet_n: u32,
-    catalog: &ModelCatalog,
-) {
+fn ablation_rows(fig: &mut Figure, trace: &Trace, fleet_n: u32, catalog: &ModelCatalog) {
     let fleet = fleet_a100(fleet_n);
     let variants: Vec<(&str, Policy)> = vec![
         ("qlm-all", Policy::qlm()),
@@ -131,7 +129,10 @@ pub fn fig11(scale: Scale) -> Figure {
         &["variant", "slo", "req_per_s", "swaps", "evictions"],
     );
     ablation_rows(&mut fig, &trace, fleet_size(scale), &ModelCatalog::paper());
-    fig.note("paper Fig. 11: pulling + eviction drive SLOs; model swapping is a no-op single-model");
+    fig.note(
+        "paper Fig. 11: pulling + eviction drive SLOs; \
+         model swapping is a no-op single-model",
+    );
     fig
 }
 
@@ -179,7 +180,10 @@ pub fn fig13(scale: Scale) -> Figure {
             pct(ms[3].slo_attainment()),
         ]);
     }
-    fig.note("paper Fig. 13: QLM >90% below 0.5K req/s; baselines ignore swap cost and fall behind");
+    fig.note(
+        "paper Fig. 13: QLM >90% below 0.5K req/s; \
+         baselines ignore swap cost and fall behind",
+    );
     fig
 }
 
@@ -231,8 +235,16 @@ mod tests {
         let ms = run_policies(&trace, &fleet, &catalog);
         let qlm = ms[0].throughput_rps();
         // QLM must beat vLLM and SHEPHERD on multi-model throughput.
-        assert!(qlm > ms[2].throughput_rps() * 0.99, "qlm {qlm} vs vllm {}", ms[2].throughput_rps());
-        assert!(qlm > ms[3].throughput_rps() * 0.99, "qlm {qlm} vs shepherd {}", ms[3].throughput_rps());
+        assert!(
+            qlm > ms[2].throughput_rps() * 0.99,
+            "qlm {qlm} vs vllm {}",
+            ms[2].throughput_rps()
+        );
+        assert!(
+            qlm > ms[3].throughput_rps() * 0.99,
+            "qlm {qlm} vs shepherd {}",
+            ms[3].throughput_rps()
+        );
     }
 
     #[test]

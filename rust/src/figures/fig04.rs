@@ -84,7 +84,10 @@ pub fn run(scale: Scale) -> Figure {
             f2(np),
         ]);
     }
-    fig.note("paper Fig. 4: eviction reduces HOL blocking 100-1000×; shape target: noevict ≫ evict, gap grows with backlog");
+    fig.note(
+        "paper Fig. 4: eviction reduces HOL blocking 100-1000×; \
+         shape target: noevict ≫ evict, gap grows with backlog",
+    );
     fig
 }
 

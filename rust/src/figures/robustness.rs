@@ -59,13 +59,7 @@ pub fn fig16(scale: Scale) -> Figure {
         &["mega_frac", "qlm", "vllm", "shepherd"],
     );
     for frac in [0.0, 0.05, 0.15, 0.4] {
-        let spec = WorkloadSpec::w_c(
-            vec![ModelId(0)],
-            vec![ModelId(0)],
-            rate,
-            reqs,
-            frac,
-        );
+        let spec = WorkloadSpec::w_c(vec![ModelId(0)], vec![ModelId(0)], rate, reqs, frac);
         let trace = Trace::generate(&spec, 32);
         let q = run_one(&trace, fleet.clone(), catalog.clone(), Policy::qlm());
         let v = run_one(&trace, fleet.clone(), catalog.clone(), Policy::VllmFcfs);
@@ -92,7 +86,13 @@ pub fn fig17(scale: Scale) -> Figure {
         "SLO attainment vs queue size (W_B rate sweep)",
         &["mean_queue", "qlm", "edf", "vllm", "shepherd"],
     );
-    for rate in [scale.f(4.0, 100.0), scale.f(10.0, 250.0), scale.f(25.0, 500.0), scale.f(60.0, 1000.0)] {
+    let rates = [
+        scale.f(4.0, 100.0),
+        scale.f(10.0, 250.0),
+        scale.f(25.0, 500.0),
+        scale.f(60.0, 1000.0),
+    ];
+    for rate in rates {
         let spec = WorkloadSpec::w_b(
             vec![ModelId(3), ModelId(4)],
             vec![ModelId(5), ModelId(6)],

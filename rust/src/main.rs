@@ -5,11 +5,13 @@
 //! subcommands:
 //!
 //! ```text
-//! qlm figures [--fig N] [--full]        regenerate paper figures
+//! qlm sim [--scenario S] [--list] [--policy P] [--rate R] [--requests N]
+//!         [--fleet N] [--seed S] [--horizon SECS]
+//! qlm figures [--fig N] [--full]         regenerate paper figures
 //! qlm simulate [--policy P] [--rate R] [--requests N] [--fleet N]
 //!              [--multi-model] [--seed S]
-//! qlm serve [--artifacts DIR] [--requests N] [--fcfs]
-//! qlm bench-scheduler [--requests N]    Fig. 20-style overhead probe
+//! qlm serve [--artifacts DIR] [--requests N] [--fcfs]   (feature "pjrt")
+//! qlm bench-scheduler [--requests N]     Fig. 20-style overhead probe
 //! ```
 
 use std::process::ExitCode;
@@ -19,7 +21,7 @@ use qlm::baselines::Policy;
 use qlm::coordinator::lso::LsoConfig;
 use qlm::figures::{run_figure, Scale, ALL_FIGURES};
 use qlm::sim::{fleet_a100, SimConfig, Simulation};
-use qlm::workload::{Trace, WorkloadSpec};
+use qlm::workload::{Scenario, ScenarioKnobs, SloClass, Trace, WorkloadSpec};
 
 /// Minimal flag parser: --key value / --switch.
 struct Args {
@@ -80,6 +82,9 @@ fn usage() -> ExitCode {
         "qlm — Queue Management for SLO-Oriented LLM Serving (SoCC '24 reproduction)
 
 USAGE:
+  qlm sim [--scenario burst|diurnal|mixed-slo|multi-model|failover] [--list]
+          [--policy P] [--rate R] [--requests N] [--fleet N] [--seed S]
+          [--horizon SECS]
   qlm figures [--fig N] [--full]
   qlm simulate [--policy qlm|edf|vllm|shepherd|qlm-noevict|qlm-noswap|qlm-nolb]
                [--rate R] [--requests N] [--fleet N] [--multi-model] [--seed S]
@@ -131,6 +136,82 @@ fn cmd_figures(args: &Args) -> ExitCode {
     ExitCode::SUCCESS
 }
 
+/// Scenario-driven simulation: one command per paper regime.
+fn cmd_sim(args: &Args) -> ExitCode {
+    if args.has("list") {
+        println!("available scenarios:");
+        for s in Scenario::ALL {
+            println!("  {:<12} {}", s.name(), s.description());
+        }
+        return ExitCode::SUCCESS;
+    }
+    let name = args.get("scenario").unwrap_or("mixed-slo");
+    let Some(scenario) = Scenario::from_name(name) else {
+        eprintln!(
+            "unknown scenario {name} (known: burst, diurnal, mixed-slo, multi-model, failover)"
+        );
+        return ExitCode::from(2);
+    };
+    let policy = match parse_policy(args.get("policy").unwrap_or("qlm")) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown policy");
+            return ExitCode::from(2);
+        }
+    };
+    let horizon_s = args.get_f64("horizon", 7200.0);
+    let rate = args.get_f64("rate", scenario.default_rate());
+    let knobs = ScenarioKnobs {
+        rate,
+        requests: args.get_usize("requests", scenario.requests_for(rate, horizon_s)),
+        fleet: args.get_usize("fleet", scenario.default_fleet() as usize) as u32,
+        seed: args.get_usize("seed", 42) as u64,
+    };
+    let run = scenario.build(&knobs);
+    let trace = Trace::generate(&run.spec, knobs.seed);
+    println!(
+        "scenario {}: {}\n  {} requests, {} instances, rate {:.1} req/s, horizon {:.0}s",
+        run.name,
+        scenario.description(),
+        trace.len(),
+        run.fleet.len(),
+        knobs.rate,
+        horizon_s,
+    );
+    for (t, inst) in &run.failures {
+        println!("  failure injected: instance {} dies at t={t:.0}s", inst.0);
+    }
+    let mut cfg = SimConfig::new(run.fleet, run.catalog, policy);
+    cfg.seed = knobs.seed;
+    cfg.horizon_s = horizon_s;
+    cfg.failures = run.failures.clone();
+    let wall = std::time::Instant::now();
+    let m = Simulation::new(cfg, &trace).run(&trace);
+    let wall_s = wall.elapsed().as_secs_f64();
+    println!("{}", m.summary());
+    for class in [SloClass::Interactive, SloClass::Batch1, SloClass::Batch2] {
+        println!(
+            "  {:<12} SLO attainment {:5.1}%",
+            class.name(),
+            100.0 * m.slo_attainment_class(class)
+        );
+    }
+    println!(
+        "  completed {}/{} requests over {:.0} simulated seconds ({:.1}s wall)",
+        m.completed_count(),
+        m.records.len(),
+        m.duration_s,
+        wall_s,
+    );
+    println!(
+        "  scheduler: {} invocations, {:.1} ms total ({:.3} ms each)",
+        m.scheduler_invocations,
+        1000.0 * m.scheduler_wall_s,
+        1000.0 * m.scheduler_wall_s / m.scheduler_invocations.max(1) as f64,
+    );
+    ExitCode::SUCCESS
+}
+
 fn cmd_simulate(args: &Args) -> ExitCode {
     let policy = match parse_policy(args.get("policy").unwrap_or("qlm")) {
         Some(p) => p,
@@ -165,7 +246,8 @@ fn cmd_simulate(args: &Args) -> ExitCode {
     let m = Simulation::new(cfg, &trace).run(&trace);
     println!("{}", m.summary());
     println!(
-        "  completed={}/{} mean_ttft={:.2}s p50={:.2}s p99={:.2}s sched_invocations={} sched_wall={:.1}ms",
+        "  completed={}/{} mean_ttft={:.2}s p50={:.2}s p99={:.2}s \
+         sched_invocations={} sched_wall={:.1}ms",
         m.completed_count(),
         m.records.len(),
         m.mean_ttft(),
@@ -177,6 +259,7 @@ fn cmd_simulate(args: &Args) -> ExitCode {
     ExitCode::SUCCESS
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &Args) -> ExitCode {
     use qlm::runtime::{EngineConfig, EngineRequest, ServeEngine, TinyModel};
     let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
@@ -210,8 +293,7 @@ fn cmd_serve(args: &Args) -> ExitCode {
     for i in 0..n {
         engine.submit(EngineRequest {
             id: i as u64,
-            prompt: format!("request {i}: the queue management system")
-                .into_bytes(),
+            prompt: format!("request {i}: the queue management system").into_bytes(),
             max_new_tokens: max_new,
             slo_s: if i % 4 == 0 { 0.5 } else { 30.0 },
         });
@@ -244,6 +326,15 @@ fn cmd_serve(args: &Args) -> ExitCode {
     ExitCode::SUCCESS
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &Args) -> ExitCode {
+    eprintln!(
+        "`qlm serve` needs the PJRT runtime: rebuild with `--features pjrt` \
+         (see README.md, \"Real-model serving\")"
+    );
+    ExitCode::FAILURE
+}
+
 fn cmd_bench_scheduler(args: &Args) -> ExitCode {
     let _ = args;
     match run_figure(20, Scale::Quick) {
@@ -257,6 +348,7 @@ fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv);
     match args.positional.first().map(String::as_str) {
+        Some("sim") => cmd_sim(&args),
         Some("figures") => cmd_figures(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),

@@ -120,11 +120,7 @@ impl TinyModel {
 
     /// One decode step: feed each sequence's latest token; returns
     /// per-sequence logits and advances the KV state in place.
-    pub fn decode_step(
-        &self,
-        state: &mut BatchState,
-        tokens: &[i32],
-    ) -> Result<Vec<Vec<f32>>> {
+    pub fn decode_step(&self, state: &mut BatchState, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
         let b = state.batch as usize;
         let exe = &self.exes[&state.batch];
         let mut toks = vec![0i32; b];

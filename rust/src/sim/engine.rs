@@ -4,21 +4,29 @@
 //! continuous-batching iteration, QLM agents actuate LSOs at wake time,
 //! and the global scheduler reorders virtual queues when the RWT
 //! estimator flags trouble (§3.1 lifecycle).
+//!
+//! §Perf: the event loop is allocation-light in steady state. Per-instance
+//! state (virtual queues, agents, wake dedup, liveness) lives in dense
+//! `Vec`s indexed by `InstanceId` rather than `HashMap`s; instance views
+//! are built once and refreshed in place per scheduler pass; and the
+//! global scheduler receives group *references* instead of a deep clone
+//! of every live group. The seed implementation cloned the virtual queue
+//! and agent on every wake and the entire group table on every schedule.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::time::Instant as WallInstant;
 
-use crate::backend::{Instance, InstanceConfig, InstanceId, ModelCatalog, ModelId, PerfModel, RunningSeq};
+use crate::backend::{
+    Instance, InstanceConfig, InstanceId, ModelCatalog, ModelId, PerfModel, RunningSeq,
+};
 use crate::baselines::Policy;
 use crate::coordinator::agent::{InstanceObservation, QlmAgent};
 use crate::coordinator::lso::LsoAction;
 use crate::coordinator::request::{Request, RequestState};
 use crate::coordinator::request_group::{GroupId, Grouper, RequestGroup};
 use crate::coordinator::rwt::{ProfileTable, RwtEstimator};
-use crate::coordinator::scheduler::{
-    GlobalScheduler, InstanceView, SchedulerConfig, SolverKind,
-};
+use crate::coordinator::scheduler::{GlobalScheduler, InstanceView, SchedulerConfig, SolverKind};
 use crate::coordinator::virtual_queue::VirtualQueue;
 use crate::coordinator::GlobalQueue;
 use crate::metrics::{instance_metrics, RequestRecord, RunMetrics};
@@ -40,6 +48,11 @@ pub struct SimConfig {
     pub horizon_s: f64,
     /// Min simulated gap between global-scheduler invocations.
     pub sched_interval_s: f64,
+    /// Injected instance failures (§4 Fault Tolerance): at simulated
+    /// time `t`, the instance is lost — its running batch and parked KV
+    /// vanish, and every affected request reverts to Waiting in the
+    /// global queue. Drives the `failover` CLI scenario.
+    pub failures: Vec<(f64, InstanceId)>,
 }
 
 impl SimConfig {
@@ -53,6 +66,7 @@ impl SimConfig {
             avg_batch: 64,
             horizon_s: 7200.0,
             sched_interval_s: 0.25,
+            failures: Vec::new(),
         }
     }
 }
@@ -61,6 +75,7 @@ impl SimConfig {
 enum EventKind {
     Arrival(usize),
     Wake(InstanceId),
+    Fail(InstanceId),
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -90,6 +105,27 @@ impl Ord for Event {
     }
 }
 
+/// Waiting (or evicted) members of a group, FCFS.
+fn waiting_members(
+    groups: &HashMap<GroupId, RequestGroup>,
+    queue: &GlobalQueue,
+    gid: GroupId,
+) -> Vec<u64> {
+    let Some(g) = groups.get(&gid) else {
+        return Vec::new();
+    };
+    g.members
+        .iter()
+        .copied()
+        .filter(|id| {
+            queue
+                .get(*id)
+                .map(|r| matches!(r.state, RequestState::Waiting | RequestState::Evicted))
+                .unwrap_or(false)
+        })
+        .collect()
+}
+
 /// The simulator.
 pub struct Simulation {
     cfg: SimConfig,
@@ -97,8 +133,10 @@ pub struct Simulation {
     seq: u64,
     events: BinaryHeap<Reverse<Event>>,
     instances: Vec<Instance>,
-    vqs: HashMap<InstanceId, VirtualQueue>,
-    agents: HashMap<InstanceId, QlmAgent>,
+    /// Dense per-instance state, indexed by `InstanceId.0`.
+    vqs: Vec<VirtualQueue>,
+    agents: Vec<QlmAgent>,
+    alive: Vec<bool>,
     queue: GlobalQueue,
     groups: HashMap<GroupId, RequestGroup>,
     group_of: HashMap<u64, GroupId>,
@@ -110,14 +148,17 @@ pub struct Simulation {
     last_schedule: f64,
     scheduler_wall_s: f64,
     scheduler_invocations: u64,
-    /// Per-request wake deduplication: at most one pending Wake per
+    /// Per-instance wake deduplication: at most one pending Wake per
     /// instance (avoids event-storm blowup).
-    wake_pending: HashMap<InstanceId, f64>,
+    wake_pending: Vec<Option<f64>>,
     /// Hardware-profiled Θ per (gpu, model) — §6 Offline Profiling.
     thetas: ThetaCache,
     /// End time of each instance's in-flight iteration: a step is an
     /// atomic unit of GPU work; wakes landing inside it are deferred.
     next_free: Vec<f64>,
+    /// Scheduler views, built once and refreshed in place per pass
+    /// (dead instances are dropped on failure).
+    views_cache: Vec<InstanceView>,
 }
 
 impl Simulation {
@@ -147,14 +188,18 @@ impl Simulation {
             .iter()
             .map(|c| Instance::new(c.clone(), cfg.catalog.clone()))
             .collect();
+        // Dense indexing requires the fleet builders' sequential ids.
+        for (idx, inst) in instances.iter().enumerate() {
+            debug_assert_eq!(inst.config.id.0 as usize, idx, "fleet ids must be dense");
+        }
         let vqs = instances
             .iter()
-            .map(|i| (i.config.id, VirtualQueue::new(i.config.id)))
+            .map(|i| VirtualQueue::new(i.config.id))
             .collect();
         let lso = cfg.policy.lso();
         let agents = instances
             .iter()
-            .map(|i| (i.config.id, QlmAgent::new(i.config.id, lso)))
+            .map(|i| QlmAgent::new(i.config.id, lso))
             .collect();
         let grouper = Grouper::new(cfg.delta, cfg.avg_batch, cfg.seed ^ 0x9E37);
         let n_instances = instances.len();
@@ -165,6 +210,7 @@ impl Simulation {
             instances,
             vqs,
             agents,
+            alive: vec![true; n_instances],
             queue: GlobalQueue::new(),
             groups: HashMap::new(),
             group_of: HashMap::new(),
@@ -175,14 +221,20 @@ impl Simulation {
             last_schedule: -1e9,
             scheduler_wall_s: 0.0,
             scheduler_invocations: 0,
-            wake_pending: HashMap::new(),
+            wake_pending: vec![None; n_instances],
             thetas: ThetaCache::new(),
             next_free: vec![0.0; n_instances],
+            views_cache: Vec::new(),
             cfg,
         };
         sim.init_pinning(trace);
+        sim.build_views();
         for (i, r) in trace.requests.iter().enumerate() {
             sim.push_event(r.arrival_s, EventKind::Arrival(i));
+        }
+        let failures = sim.cfg.failures.clone();
+        for (t, inst) in failures {
+            sim.push_event(t, EventKind::Fail(inst));
         }
         sim
     }
@@ -197,13 +249,17 @@ impl Simulation {
     }
 
     fn wake(&mut self, id: InstanceId, t: f64) {
+        let idx = id.0 as usize;
+        if !self.alive[idx] {
+            return;
+        }
         // Coalesce: skip if an earlier-or-equal wake is already pending.
-        if let Some(&pending) = self.wake_pending.get(&id) {
+        if let Some(pending) = self.wake_pending[idx] {
             if pending <= t + 1e-12 {
                 return;
             }
         }
-        self.wake_pending.insert(id, t);
+        self.wake_pending[idx] = Some(t);
         self.push_event(t, EventKind::Wake(id));
     }
 
@@ -225,7 +281,10 @@ impl Simulation {
         // Quota per model (≥1), largest first.
         let mut quota: Vec<(ModelId, usize)> = models
             .iter()
-            .map(|&(m, c)| (m, ((c as f64 / total as f64) * n_inst as f64).round().max(1.0) as usize))
+            .map(|&(m, c)| {
+                let q = (c as f64 / total as f64) * n_inst as f64;
+                (m, q.round().max(1.0) as usize)
+            })
             .collect();
         // Trim/extend to exactly n_inst.
         let mut assigned: usize = quota.iter().map(|(_, q)| q).sum();
@@ -277,6 +336,63 @@ impl Simulation {
         }
     }
 
+    /// Build the scheduler views once: `perf_for` is static per
+    /// (instance, model); only swap times, active model, and the
+    /// executing group change between passes.
+    fn build_views(&mut self) {
+        let catalog = self.cfg.catalog.clone();
+        let model_ids = catalog.ids();
+        let mut views = Vec::with_capacity(self.instances.len());
+        for inst in &self.instances {
+            let id = inst.config.id;
+            let gpu = inst.config.gpu;
+            let mut perf_for = HashMap::new();
+            let mut swap_time = HashMap::new();
+            for &m in &model_ids {
+                // Pinned instances only serve their pinned model.
+                if let Some(&pm) = self.pinned_model.get(&id) {
+                    if pm != m {
+                        continue;
+                    }
+                }
+                if let Some(p) = self.thetas.perf(gpu, m, &catalog, 161.0) {
+                    swap_time.insert(m, inst.registry().swap_in_time_s(m, &p));
+                    perf_for.insert(m, p);
+                }
+            }
+            views.push(InstanceView {
+                id,
+                active_model: inst.active_model(),
+                perf_for,
+                swap_time,
+                executing: None,
+            });
+        }
+        self.views_cache = views;
+    }
+
+    /// Refresh the cached views in place for one scheduler pass. Returns
+    /// the views by value (callers put them back via `views_cache`) so
+    /// the scheduling methods can borrow `self` mutably alongside them.
+    fn refresh_views(&mut self) -> Vec<InstanceView> {
+        let mut views = std::mem::take(&mut self.views_cache);
+        views.retain(|v| self.alive[v.id.0 as usize]);
+        for v in views.iter_mut() {
+            let inst = &self.instances[v.id.0 as usize];
+            v.active_model = inst.active_model();
+            v.executing = inst
+                .running()
+                .first()
+                .and_then(|s| self.group_of.get(&s.req_id).copied());
+            // Swap-in times depend on each model's current tier.
+            for (m, t) in v.swap_time.iter_mut() {
+                let p = v.perf_for[m];
+                *t = inst.registry().swap_in_time_s(*m, &p);
+            }
+        }
+        views
+    }
+
     /// Run to completion (all requests served) or the horizon.
     pub fn run(mut self, trace: &Trace) -> RunMetrics {
         let total = trace.len();
@@ -300,9 +416,10 @@ impl Simulation {
             match ev.kind {
                 EventKind::Arrival(i) => self.on_arrival(&trace.requests[i]),
                 EventKind::Wake(id) => {
-                    self.wake_pending.remove(&id);
+                    self.wake_pending[id.0 as usize] = None;
                     self.on_wake(id);
                 }
+                EventKind::Fail(id) => self.on_fail(id),
             }
             self.maybe_schedule();
             if self.queue.completed.len() == total {
@@ -315,28 +432,29 @@ impl Simulation {
     fn on_arrival(&mut self, tr: &crate::workload::TraceRequest) {
         let req = Request::from_trace(0, tr);
         let id = self.queue.submit(req);
-        // Group formation (§4).
         let req = self.queue.get(id).unwrap().clone();
+        // Group formation (§4).
         let gid = if self.cfg.policy.uses_groups() {
             // §Perf: classify in place (cloning every live group per
             // arrival was O(groups × members) per request).
             self.classify_in_place(&req)
         } else {
-            // Per-request singleton groups (EDF / vLLM).
-            let mut group_list: Vec<RequestGroup> = Vec::new();
-            let mut single = Grouper::new(0.0, 1, self.cfg.seed);
-            // fresh ids must not collide with grouper's: offset by req id.
-            let _ = single.classify(&req, &mut group_list);
-            let mut g = group_list.pop().unwrap();
-            g.id = GroupId(id); // singleton groups: id = request id (FCFS order)
-            let gid = g.id;
-            self.groups.insert(gid, g);
-            let _ = single;
-            let _ = gid;
-            self.group_of.insert(id, gid);
-            self.needs_schedule = true;
-            self.wake_idle();
-            return;
+            // Per-request singleton groups (EDF / vLLM): id = request id,
+            // which preserves FCFS order across groups.
+            let gid = GroupId(id);
+            self.groups.insert(
+                gid,
+                RequestGroup {
+                    id: gid,
+                    model: req.model,
+                    class: req.class,
+                    slo_s: req.slo_s,
+                    earliest_arrival_s: req.arrival_s,
+                    members: VecDeque::from([id]),
+                    mega: req.mega,
+                },
+            );
+            gid
         };
         self.group_of.insert(id, gid);
         self.needs_schedule = true;
@@ -344,15 +462,22 @@ impl Simulation {
     }
 
     /// Incremental request-group classification (§4, Handling New
-    /// Incoming Requests) against the live group table, no copies.
+    /// Incoming Requests) against the live group table, no copies. The
+    /// lowest-id compatible group wins so placement is independent of
+    /// hash-map iteration order.
     fn classify_in_place(&mut self, req: &Request) -> GroupId {
         let cap = self.grouper.max_group_size();
-        if let Some(g) = self.groups.values_mut().find(|g| {
-            g.model == req.model
-                && g.class == req.class
-                && g.mega == req.mega
-                && g.len() < cap
-        }) {
+        let target = self
+            .groups
+            .values_mut()
+            .filter(|g| {
+                g.model == req.model
+                    && g.class == req.class
+                    && g.mega == req.mega
+                    && g.len() < cap
+            })
+            .min_by_key(|g| g.id);
+        if let Some(g) = target {
             g.members.push_back(req.id);
             g.slo_s = g.slo_s.min(req.slo_s);
             g.earliest_arrival_s = g.earliest_arrival_s.min(req.arrival_s);
@@ -369,7 +494,7 @@ impl Simulation {
         let ids: Vec<InstanceId> = self
             .instances
             .iter()
-            .filter(|i| i.is_idle())
+            .filter(|i| self.alive[i.config.id.0 as usize] && i.is_idle())
             .map(|i| i.config.id)
             .collect();
         for id in ids {
@@ -384,25 +509,6 @@ impl Simulation {
 
     fn inst_mut(&mut self, id: InstanceId) -> &mut Instance {
         &mut self.instances[id.0 as usize]
-    }
-
-    /// Waiting members of a group (Waiting or Evicted state).
-    fn waiting_of(&self, gid: GroupId) -> Vec<u64> {
-        let Some(g) = self.groups.get(&gid) else {
-            return Vec::new();
-        };
-        g.members
-            .iter()
-            .copied()
-            .filter(|id| {
-                self.queue
-                    .get(*id)
-                    .map(|r| {
-                        matches!(r.state, RequestState::Waiting | RequestState::Evicted)
-                    })
-                    .unwrap_or(false)
-            })
-            .collect()
     }
 
     fn observation(&self, id: InstanceId) -> InstanceObservation {
@@ -433,6 +539,10 @@ impl Simulation {
     }
 
     fn on_wake(&mut self, id: InstanceId) {
+        let idx = id.0 as usize;
+        if !self.alive[idx] {
+            return;
+        }
         // Mid-swap: try again when the swap completes.
         let busy_until = self.inst(id).busy_until();
         if self.now < busy_until {
@@ -440,7 +550,7 @@ impl Simulation {
             return;
         }
         // Mid-iteration: a decode step is atomic GPU work; defer.
-        let free_at = self.next_free[id.0 as usize];
+        let free_at = self.next_free[idx];
         if self.now < free_at - 1e-12 {
             self.wake(id, free_at);
             return;
@@ -451,38 +561,18 @@ impl Simulation {
         let can_admit = !fixed || self.inst(id).running_len() == 0;
 
         if can_admit {
-            let vq = self.vqs.get(&id).unwrap().clone();
+            // §Perf: the agent reads the live virtual queue and group
+            // table by reference — the seed cloned both on every wake.
+            let vq = &self.vqs[idx];
             let obs = self.observation(id);
-            let agent = self.agents.get(&id).unwrap().clone();
+            let agent = &self.agents[idx];
             let queue_ref = &self.queue;
             let groups_ref = &self.groups;
             let profiles_ref = &self.scheduler.estimator.profiles;
             let actions = agent.decide(
-                &vq,
+                vq,
                 groups_ref,
-                |g| {
-                    // inline waiting_of to avoid double borrow
-                    groups_ref
-                        .get(&g)
-                        .map(|grp| {
-                            grp.members
-                                .iter()
-                                .copied()
-                                .filter(|rid| {
-                                    queue_ref
-                                        .get(*rid)
-                                        .map(|r| {
-                                            matches!(
-                                                r.state,
-                                                RequestState::Waiting | RequestState::Evicted
-                                            )
-                                        })
-                                        .unwrap_or(false)
-                                })
-                                .collect()
-                        })
-                        .unwrap_or_default()
-                },
+                |g| waiting_members(groups_ref, queue_ref, g),
                 &obs,
                 |rid| {
                     queue_ref
@@ -513,12 +603,11 @@ impl Simulation {
         }
         let t_done = self.now + out.dt;
         for seq in out.completed {
-            self.queue
-                .complete(seq.req_id, seq.first_token_at, t_done);
+            self.queue.complete(seq.req_id, seq.first_token_at, t_done);
             self.on_request_done(seq.req_id, id);
         }
         if out.dt > 0.0 {
-            self.next_free[id.0 as usize] = t_done;
+            self.next_free[idx] = t_done;
             self.wake(id, t_done);
         } else if !self.inst(id).is_idle() {
             // Has swapped-out work but no progress possible; re-check soon.
@@ -537,7 +626,7 @@ impl Simulation {
                     }
                     // Warm-set update from the vq's model order (§5).
                     let order: Vec<ModelId> = {
-                        let vq = &self.vqs[&id];
+                        let vq = &self.vqs[id.0 as usize];
                         let groups = &self.groups;
                         vq.model_order(|g| groups.get(&g))
                     };
@@ -579,6 +668,27 @@ impl Simulation {
         }
     }
 
+    /// Instance failure (§4 Fault Isolation): the device is gone. Its
+    /// virtual queue is dropped — by design it can be rebuilt from the
+    /// global queue alone — and every request that was on the instance
+    /// reverts to Waiting with progress discarded.
+    fn on_fail(&mut self, id: InstanceId) {
+        let idx = id.0 as usize;
+        if !self.alive[idx] {
+            return;
+        }
+        self.alive[idx] = false;
+        self.wake_pending[idx] = None;
+        let lost = self.inst_mut(id).fail();
+        let lost_ids: Vec<u64> = lost.iter().map(|s| s.req_id).collect();
+        self.queue.fail_instance(id, &lost_ids);
+        self.vqs[idx].set_order(Vec::new());
+        self.views_cache.retain(|v| v.id != id);
+        // Reschedule immediately: survivors inherit the lost queue.
+        self.needs_schedule = true;
+        self.last_schedule = -1e9;
+    }
+
     /// Request finished: drop from its group; empty groups leave their
     /// virtual queue (§4: groups dequeue when all requests complete).
     fn on_request_done(&mut self, rid: u64, _inst: InstanceId) {
@@ -594,50 +704,11 @@ impl Simulation {
         };
         if empty {
             self.groups.remove(&gid);
-            for vq in self.vqs.values_mut() {
+            for vq in self.vqs.iter_mut() {
                 vq.remove(gid);
             }
             self.needs_schedule = true;
         }
-    }
-
-    /// Scheduler's instance views.
-    fn views(&mut self) -> Vec<InstanceView> {
-        let catalog = self.cfg.catalog.clone();
-        let mut views = Vec::new();
-        let model_ids = catalog.ids();
-        for idx in 0..self.instances.len() {
-            let id = self.instances[idx].config.id;
-            let gpu = self.instances[idx].config.gpu;
-            let mut perf_for = HashMap::new();
-            let mut swap_time = HashMap::new();
-            for &m in &model_ids {
-                // Pinned instances only serve their pinned model.
-                if let Some(&pm) = self.pinned_model.get(&id) {
-                    if pm != m {
-                        continue;
-                    }
-                }
-                if let Some(p) = self.thetas.perf(gpu, m, &catalog, 161.0) {
-                    swap_time
-                        .insert(m, self.instances[idx].registry().swap_in_time_s(m, &p));
-                    perf_for.insert(m, p);
-                }
-            }
-            // Executing group: group of the oldest running request.
-            let executing = self.instances[idx]
-                .running()
-                .first()
-                .and_then(|s| self.group_of.get(&s.req_id).copied());
-            views.push(InstanceView {
-                id,
-                active_model: self.instances[idx].active_model(),
-                perf_for,
-                swap_time,
-                executing,
-            });
-        }
-        views
     }
 
     fn maybe_schedule(&mut self) {
@@ -685,21 +756,26 @@ impl Simulation {
         }
         let wall = WallInstant::now();
 
+        let views = self.refresh_views();
         match self.cfg.policy {
-            Policy::VllmFcfs => self.schedule_fcfs(),
-            Policy::Edf => self.schedule_edf(),
+            Policy::VllmFcfs => self.schedule_fcfs(&views),
+            Policy::Edf => self.schedule_edf(&views),
             Policy::Qlm { lso, .. } if !lso.load_balancing => {
-                self.schedule_round_robin()
+                self.schedule_round_robin(&views)
             }
-            _ => self.schedule_qlm(),
+            _ => self.schedule_qlm(&views),
         }
+        self.views_cache = views;
 
         self.scheduler_wall_s += wall.elapsed().as_secs_f64();
         self.scheduler_invocations += 1;
         // New orders may unblock idle instances.
-        self.wake_idle();
-        let ids: Vec<InstanceId> =
-            self.instances.iter().map(|i| i.config.id).collect();
+        let ids: Vec<InstanceId> = self
+            .instances
+            .iter()
+            .filter(|i| self.alive[i.config.id.0 as usize])
+            .map(|i| i.config.id)
+            .collect();
         for id in ids {
             let t = self.now.max(self.inst(id).busy_until());
             self.wake(id, t);
@@ -707,25 +783,25 @@ impl Simulation {
     }
 
     /// QLM / SHEPHERD: global scheduler over request groups.
-    fn schedule_qlm(&mut self) {
-        let views = self.views();
-        let groups: Vec<RequestGroup> = self.groups.values().cloned().collect();
-        let assignment = self.scheduler.schedule(&groups, &views, self.now);
+    fn schedule_qlm(&mut self, views: &[InstanceView]) {
+        // §Perf: pass references — the seed cloned every group (and every
+        // member list) per scheduler invocation.
+        let group_refs: Vec<&RequestGroup> = self.groups.values().collect();
+        let assignment = self.scheduler.schedule(&group_refs, views, self.now);
+        drop(group_refs);
         for (id, order) in assignment.orders {
-            if let Some(vq) = self.vqs.get_mut(&id) {
-                vq.set_order(order);
-            }
+            self.vqs[id.0 as usize].set_order(order);
         }
         // Refresh warm sets from the new orderings (§5 model swapping).
         if self.cfg.policy.lso().model_swapping {
-            let ids: Vec<InstanceId> = self.vqs.keys().copied().collect();
-            for id in ids {
+            for v in views {
+                let idx = v.id.0 as usize;
                 let order: Vec<ModelId> = {
-                    let vq = &self.vqs[&id];
+                    let vq = &self.vqs[idx];
                     let groups = &self.groups;
                     vq.model_order(|g| groups.get(&g))
                 };
-                self.inst_mut(id).registry_mut().set_warm_set(&order);
+                self.instances[idx].registry_mut().set_warm_set(&order);
             }
         }
     }
@@ -734,8 +810,7 @@ impl Simulation {
     /// the `-nolb` rows of Figs. 11/14): groups are dealt round-robin to
     /// compatible instances with no RWT-informed placement; per-queue
     /// ordering keeps arrival order.
-    fn schedule_round_robin(&mut self) {
-        let views = self.views();
+    fn schedule_round_robin(&mut self, views: &[InstanceView]) {
         let mut groups: Vec<&RequestGroup> = self.groups.values().collect();
         groups.sort_by(|a, b| {
             a.deadline()
@@ -745,7 +820,7 @@ impl Simulation {
         });
         let mut orders: HashMap<InstanceId, Vec<GroupId>> =
             views.iter().map(|v| (v.id, Vec::new())).collect();
-        for v in &views {
+        for v in views {
             if let Some(g) = v.executing {
                 if self.groups.contains_key(&g) {
                     orders.get_mut(&v.id).unwrap().push(g);
@@ -776,16 +851,13 @@ impl Simulation {
             }
         }
         for (id, order) in orders {
-            if let Some(vq) = self.vqs.get_mut(&id) {
-                vq.set_order(order);
-            }
+            self.vqs[id.0 as usize].set_order(order);
         }
     }
 
     /// EDF baseline: deadline-sorted singleton groups, least-loaded
     /// compatible instance.
-    fn schedule_edf(&mut self) {
-        let views = self.views();
+    fn schedule_edf(&mut self, views: &[InstanceView]) {
         let mut groups: Vec<&RequestGroup> = self.groups.values().collect();
         groups.sort_by(|a, b| {
             a.deadline()
@@ -799,7 +871,7 @@ impl Simulation {
         let mut orders: HashMap<InstanceId, Vec<GroupId>> =
             views.iter().map(|v| (v.id, Vec::new())).collect();
         // Keep executing groups pinned at the head.
-        for v in &views {
+        for v in views {
             if let Some(g) = v.executing {
                 if self.groups.contains_key(&g) {
                     orders.get_mut(&v.id).unwrap().push(g);
@@ -821,15 +893,12 @@ impl Simulation {
             }
         }
         for (id, order) in orders {
-            if let Some(vq) = self.vqs.get_mut(&id) {
-                vq.set_order(order);
-            }
+            self.vqs[id.0 as usize].set_order(order);
         }
     }
 
     /// vLLM baseline: FCFS onto the pinned instance with least load.
-    fn schedule_fcfs(&mut self) {
-        let views = self.views();
+    fn schedule_fcfs(&mut self, views: &[InstanceView]) {
         let mut groups: Vec<&RequestGroup> = self.groups.values().collect();
         // FCFS = earliest arrival first (group id breaks Dump-trace ties).
         groups.sort_by(|a, b| {
@@ -842,7 +911,7 @@ impl Simulation {
             views.iter().map(|v| (v.id, 0.0)).collect();
         let mut orders: HashMap<InstanceId, Vec<GroupId>> =
             views.iter().map(|v| (v.id, Vec::new())).collect();
-        for v in &views {
+        for v in views {
             if let Some(g) = v.executing {
                 if self.groups.contains_key(&g) {
                     orders.get_mut(&v.id).unwrap().push(g);
@@ -864,15 +933,13 @@ impl Simulation {
             }
         }
         for (id, order) in orders {
-            if let Some(vq) = self.vqs.get_mut(&id) {
-                vq.set_order(order);
-            }
+            self.vqs[id.0 as usize].set_order(order);
         }
     }
 
     fn finish(self) -> RunMetrics {
         // Archive unfinished requests too (they count as violations).
-        let remaining: Vec<u64> = self.queue.waiting_ids().to_vec();
+        let remaining: Vec<u64> = self.queue.waiting_ids().collect();
         let mut records: Vec<RequestRecord> = self
             .queue
             .completed
@@ -1000,11 +1067,7 @@ mod tests {
         let b2 = vec![ModelId(2), ModelId(1)];
         let spec = WorkloadSpec::w_b(b1, b2, 20.0, 300);
         let trace = Trace::generate(&spec, 7);
-        let cfg = SimConfig::new(
-            fleet_a100(2),
-            ModelCatalog::paper(),
-            Policy::qlm(),
-        );
+        let cfg = SimConfig::new(fleet_a100(2), ModelCatalog::paper(), Policy::qlm());
         let m = Simulation::new(cfg, &trace).run(&trace);
         assert!(m.total_model_swaps() >= 2, "{}", m.summary());
         assert!(m.completed_count() > 250, "{}", m.summary());
@@ -1013,14 +1076,41 @@ mod tests {
     #[test]
     fn horizon_caps_runtime() {
         let trace = small_trace(50.0, 500);
-        let mut cfg = SimConfig::new(
-            fleet_a100(1),
-            ModelCatalog::paper(),
-            Policy::qlm(),
-        );
+        let mut cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
         cfg.horizon_s = 5.0;
         let m = Simulation::new(cfg, &trace).run(&trace);
         // Not all done, but the run terminates and records everyone.
         assert_eq!(m.records.len(), 500);
+    }
+
+    #[test]
+    fn instance_failure_loses_no_requests() {
+        // §4 fault tolerance, end to end: kill one of two instances
+        // mid-run; every request still completes on the survivor.
+        let trace = small_trace(8.0, 200);
+        let mut cfg = SimConfig::new(fleet_a100(2), ModelCatalog::paper(), Policy::qlm());
+        cfg.failures = vec![(5.0, InstanceId(1))];
+        let m = Simulation::new(cfg, &trace).run(&trace);
+        assert_eq!(m.completed_count(), 200, "{}", m.summary());
+        // The dead instance did no work after t=5.
+        let healthy = run_policy(Policy::qlm(), 8.0, 200, 2);
+        assert!(
+            m.duration_s >= healthy.duration_s,
+            "losing capacity cannot speed the run up"
+        );
+    }
+
+    #[test]
+    fn failover_is_deterministic() {
+        let trace = small_trace(10.0, 150);
+        let run = || {
+            let mut cfg = SimConfig::new(fleet_a100(2), ModelCatalog::paper(), Policy::qlm());
+            cfg.failures = vec![(3.0, InstanceId(0))];
+            Simulation::new(cfg, &trace).run(&trace)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.completed_count(), b.completed_count());
+        assert!((a.mean_ttft() - b.mean_ttft()).abs() < 1e-9);
     }
 }

@@ -11,7 +11,9 @@
 
 use std::collections::HashMap;
 
-use crate::backend::{GpuKind, Instance, InstanceConfig, ModelCatalog, ModelId, PerfModel, RunningSeq};
+use crate::backend::{
+    GpuKind, Instance, InstanceConfig, ModelCatalog, ModelId, PerfModel, RunningSeq,
+};
 use crate::util::Rng;
 use crate::workload::ShareGptSampler;
 
@@ -26,12 +28,7 @@ impl ThetaCache {
         Self::default()
     }
 
-    pub fn get_or_profile(
-        &mut self,
-        gpu: GpuKind,
-        model: ModelId,
-        catalog: &ModelCatalog,
-    ) -> f64 {
+    pub fn get_or_profile(&mut self, gpu: GpuKind, model: ModelId, catalog: &ModelCatalog) -> f64 {
         *self
             .map
             .entry((gpu, model))

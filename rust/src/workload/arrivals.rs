@@ -21,6 +21,14 @@ pub enum ArrivalProcess {
     Dump,
     /// Fixed inter-arrival gap (deterministic) — used by unit tests.
     Uniform { rate: f64 },
+    /// Nonhomogeneous Poisson with a sinusoidal day/night profile:
+    /// rate(t) = base + (peak − base) · ½(1 − cos 2πt/period), sampled
+    /// by Lewis–Shedler thinning. Drives the `diurnal` CLI scenario.
+    Diurnal {
+        base_rate: f64,
+        peak_rate: f64,
+        period_s: f64,
+    },
 }
 
 /// Stateful arrival-time generator.
@@ -58,6 +66,24 @@ impl Arrivals {
                 self.now += 1.0 / rate.max(1e-9);
             }
             ArrivalProcess::Dump => { /* all at t = 0 */ }
+            ArrivalProcess::Diurnal {
+                base_rate,
+                peak_rate,
+                period_s,
+            } => {
+                // Thinning: propose at the envelope rate, accept with
+                // probability rate(t)/envelope.
+                let envelope = peak_rate.max(base_rate).max(1e-9);
+                loop {
+                    self.now += rng.exponential(envelope);
+                    let phase = self.now / period_s.max(1e-9) * std::f64::consts::TAU;
+                    let rate = base_rate
+                        + (peak_rate - base_rate).max(0.0) * 0.5 * (1.0 - phase.cos());
+                    if rng.f64() * envelope <= rate {
+                        break;
+                    }
+                }
+            }
             ArrivalProcess::Bursty {
                 rate,
                 burstiness,
@@ -147,6 +173,46 @@ mod tests {
         );
         let cv = |g: &[f64]| crate::util::stddev(g) / mean(g);
         assert!(cv(&bg) > cv(&pg) * 1.1, "cv_burst={} cv_poisson={}", cv(&bg), cv(&pg));
+    }
+
+    #[test]
+    fn diurnal_peaks_mid_period() {
+        let mut a = Arrivals::new(ArrivalProcess::Diurnal {
+            base_rate: 2.0,
+            peak_rate: 60.0,
+            period_s: 100.0,
+        });
+        let mut rng = Rng::new(6);
+        let mut mid = 0usize;
+        let mut edge = 0usize;
+        loop {
+            let t = a.next(&mut rng);
+            if t >= 100.0 {
+                break;
+            }
+            let phase = t % 100.0;
+            if (25.0..75.0).contains(&phase) {
+                mid += 1;
+            } else {
+                edge += 1;
+            }
+        }
+        assert!(
+            mid > edge * 2,
+            "diurnal peak not centered: mid={mid} edge={edge}"
+        );
+    }
+
+    #[test]
+    fn diurnal_monotone() {
+        let mut a = Arrivals::new(ArrivalProcess::Diurnal {
+            base_rate: 1.0,
+            peak_rate: 10.0,
+            period_s: 50.0,
+        });
+        let mut rng = Rng::new(7);
+        let ts = a.take(2_000, &mut rng);
+        assert!(ts.windows(2).all(|w| w[1] >= w[0]));
     }
 
     #[test]

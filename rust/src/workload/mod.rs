@@ -6,8 +6,10 @@ pub mod sharegpt;
 pub mod arrivals;
 pub mod spec;
 pub mod trace;
+pub mod scenarios;
 
 pub use sharegpt::ShareGptSampler;
 pub use arrivals::{ArrivalProcess, Arrivals};
+pub use scenarios::{Scenario, ScenarioKnobs, ScenarioRun};
 pub use spec::{RequestClassSpec, SloClass, WorkloadSpec};
 pub use trace::{Trace, TraceRequest};

@@ -1,0 +1,293 @@
+//! Scenario catalog for the `qlm sim --scenario <name>` CLI: one named
+//! entry per paper regime, so a single command reproduces each evaluation
+//! setting — §8's mixed batch/interactive traffic, heterogeneous
+//! multi-model serving, bursty and diurnal arrival patterns, and §4's
+//! instance-failure fault tolerance.
+//!
+//! A scenario expands a small set of knobs (rate, request count, fleet
+//! size, seed) into everything a simulation run needs: model catalog,
+//! workload spec, fleet, and any injected failures.
+
+use crate::backend::{InstanceConfig, InstanceId, ModelCatalog, ModelId};
+use crate::sim::{fleet_a100, fleet_mixed};
+use crate::workload::{ArrivalProcess, RequestClassSpec, ShareGptSampler, SloClass, WorkloadSpec};
+
+/// Named workload scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// Markov-modulated bursts of interactive traffic over a batch floor.
+    Burst,
+    /// Day/night sinusoidal interactive rate over a batch floor.
+    Diurnal,
+    /// The paper's W_A: interactive + two batch classes, one model.
+    MixedSlo,
+    /// The paper's W_B: fine-tuned model variants multiplexed on a
+    /// shared fleet (model swapping dominates).
+    MultiModel,
+    /// Mixed traffic with an instance failure injected mid-run (§4).
+    Failover,
+}
+
+/// Tunable knobs shared by every scenario.
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioKnobs {
+    /// Headline arrival rate, requests/second (scenario-dependent use).
+    pub rate: f64,
+    /// Total requests in the trace.
+    pub requests: usize,
+    /// Instance count.
+    pub fleet: u32,
+    pub seed: u64,
+}
+
+impl Default for ScenarioKnobs {
+    fn default() -> Self {
+        ScenarioKnobs {
+            rate: 20.0,
+            requests: 2000,
+            fleet: 4,
+            seed: 42,
+        }
+    }
+}
+
+/// Everything needed to run a scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioRun {
+    pub name: String,
+    pub catalog: ModelCatalog,
+    pub spec: WorkloadSpec,
+    pub fleet: Vec<InstanceConfig>,
+    /// (time, instance) failure injections.
+    pub failures: Vec<(f64, InstanceId)>,
+}
+
+impl Scenario {
+    pub const ALL: &'static [Scenario] = &[
+        Scenario::Burst,
+        Scenario::Diurnal,
+        Scenario::MixedSlo,
+        Scenario::MultiModel,
+        Scenario::Failover,
+    ];
+
+    pub fn from_name(name: &str) -> Option<Scenario> {
+        Some(match name {
+            "burst" => Scenario::Burst,
+            "diurnal" => Scenario::Diurnal,
+            "mixed-slo" => Scenario::MixedSlo,
+            "multi-model" => Scenario::MultiModel,
+            "failover" => Scenario::Failover,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Burst => "burst",
+            Scenario::Diurnal => "diurnal",
+            Scenario::MixedSlo => "mixed-slo",
+            Scenario::MultiModel => "multi-model",
+            Scenario::Failover => "failover",
+        }
+    }
+
+    /// One-line description for `qlm sim --list` and the README.
+    pub fn description(&self) -> &'static str {
+        match self {
+            Scenario::Burst => {
+                "interactive bursts (MMPP, 6x burst rate) over a steady batch floor"
+            }
+            Scenario::Diurnal => {
+                "sinusoidal day/night interactive rate over a batch floor"
+            }
+            Scenario::MixedSlo => {
+                "the paper's W_A: interactive + batch-1 + batch-2 on one model"
+            }
+            Scenario::MultiModel => {
+                "the paper's W_B: four fine-tuned variants multiplexed by swapping"
+            }
+            Scenario::Failover => {
+                "mixed traffic with one instance killed mid-run (S4 fault tolerance)"
+            }
+        }
+    }
+
+    /// Default headline rate (req/s) that keeps the default fleet at
+    /// moderate utilization — pressured but not unserviceable.
+    pub fn default_rate(&self) -> f64 {
+        match self {
+            Scenario::MultiModel => 8.0,
+            _ => 12.0,
+        }
+    }
+
+    /// Default fleet size for the scenario's model mix.
+    pub fn default_fleet(&self) -> u32 {
+        match self {
+            // Vicuna-13B (mixed-slo) and the W_B variant set are far
+            // heavier per token than Mistral-7B; give them more devices.
+            Scenario::MixedSlo | Scenario::MultiModel => 8,
+            _ => 4,
+        }
+    }
+
+    /// Request count whose arrival span fills `horizon_s` at `rate`
+    /// (per-scenario stream structure), clamped to a sane range.
+    pub fn requests_for(&self, rate: f64, horizon_s: f64) -> usize {
+        let per_second = match self {
+            // W_A: interactive at R spans (n/2)/R; batch streams match.
+            Scenario::MixedSlo | Scenario::Failover => 2.0 * rate,
+            // Two-stream shape: interactive 2n/3 at R.
+            Scenario::Burst | Scenario::Diurnal => 1.5 * rate,
+            // W_B: the half-rate Batch-2 stream is the long pole.
+            Scenario::MultiModel => rate,
+        };
+        ((per_second * horizon_s) as usize).clamp(200, 400_000)
+    }
+
+    /// Expand the scenario into a concrete run description.
+    pub fn build(&self, k: &ScenarioKnobs) -> ScenarioRun {
+        let base = ScenarioRun {
+            name: self.name().to_string(),
+            catalog: ModelCatalog::paper(),
+            spec: WorkloadSpec::w_a(ModelId(0), k.rate, k.requests),
+            fleet: fleet_a100(k.fleet),
+            failures: Vec::new(),
+        };
+        match self {
+            Scenario::MixedSlo => ScenarioRun {
+                // W_A on Vicuna-13B: the heaviest per-token model that
+                // still fits a single A100 — the §8.1 setting.
+                spec: WorkloadSpec::w_a(ModelId(1), k.rate, k.requests),
+                ..base
+            },
+            Scenario::Burst => ScenarioRun {
+                spec: two_stream_spec(
+                    "burst",
+                    ArrivalProcess::Bursty {
+                        rate: k.rate,
+                        burstiness: 6.0,
+                        phase_len_s: 5.0,
+                    },
+                    k,
+                ),
+                ..base
+            },
+            Scenario::Diurnal => ScenarioRun {
+                spec: two_stream_spec(
+                    "diurnal",
+                    ArrivalProcess::Diurnal {
+                        base_rate: k.rate * 0.2,
+                        peak_rate: k.rate * 2.0,
+                        period_s: 1800.0,
+                    },
+                    k,
+                ),
+                ..base
+            },
+            Scenario::MultiModel => ScenarioRun {
+                catalog: ModelCatalog::paper_multi_model(),
+                spec: WorkloadSpec::w_b(
+                    vec![ModelId(3), ModelId(4)],
+                    vec![ModelId(5), ModelId(6)],
+                    k.rate,
+                    k.requests,
+                ),
+                // A10/A100 mix exercises hardware heterogeneity too.
+                fleet: fleet_mixed(k.fleet.max(2), 0.25),
+                ..base
+            },
+            Scenario::Failover => {
+                let fleet = fleet_a100(k.fleet.max(2));
+                // Kill the last instance a tenth into the nominal run:
+                // late enough to have real in-flight state, early enough
+                // that the survivors must absorb most of the trace.
+                let victim = InstanceId(fleet.len() as u32 - 1);
+                ScenarioRun {
+                    spec: WorkloadSpec::w_a(ModelId(0), k.rate, k.requests),
+                    fleet,
+                    failures: vec![(60.0, victim)],
+                    ..base
+                }
+            }
+        }
+    }
+}
+
+/// Interactive stream under `arrivals` + a relaxed batch floor at half
+/// the headline rate — the shape shared by the burst/diurnal scenarios.
+fn two_stream_spec(name: &str, arrivals: ArrivalProcess, k: &ScenarioKnobs) -> WorkloadSpec {
+    let n_i = k.requests * 2 / 3;
+    WorkloadSpec {
+        name: format!("{name}(rate={})", k.rate),
+        streams: vec![
+            RequestClassSpec {
+                class: SloClass::Interactive,
+                models: vec![ModelId(0)],
+                arrivals,
+                count: n_i,
+                mega_fraction: 0.0,
+            },
+            RequestClassSpec {
+                class: SloClass::Batch1,
+                models: vec![ModelId(0)],
+                arrivals: ArrivalProcess::Poisson { rate: k.rate * 0.5 },
+                count: k.requests - n_i,
+                mega_fraction: 0.0,
+            },
+        ],
+        sampler: ShareGptSampler::default(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Trace;
+
+    #[test]
+    fn names_round_trip() {
+        for s in Scenario::ALL {
+            assert_eq!(Scenario::from_name(s.name()), Some(*s));
+            assert!(!s.description().is_empty());
+        }
+        assert_eq!(Scenario::from_name("nope"), None);
+    }
+
+    #[test]
+    fn every_scenario_generates_a_trace() {
+        let k = ScenarioKnobs {
+            requests: 300,
+            ..Default::default()
+        };
+        for s in Scenario::ALL {
+            let run = s.build(&k);
+            let trace = Trace::generate(&run.spec, k.seed);
+            assert_eq!(trace.len(), 300, "{}", s.name());
+            assert!(!run.fleet.is_empty(), "{}", s.name());
+            for m in trace.models() {
+                assert!(
+                    (m.0 as usize) < run.catalog.models.len(),
+                    "{}: model {m:?} outside catalog",
+                    s.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn failover_kills_a_real_instance() {
+        let run = Scenario::Failover.build(&ScenarioKnobs::default());
+        assert_eq!(run.failures.len(), 1);
+        let (t, inst) = run.failures[0];
+        assert!(t > 0.0);
+        assert!(run.fleet.iter().any(|c| c.id == inst));
+    }
+
+    #[test]
+    fn multi_model_uses_variant_catalog() {
+        let run = Scenario::MultiModel.build(&ScenarioKnobs::default());
+        assert!(run.catalog.models.len() >= 7);
+    }
+}

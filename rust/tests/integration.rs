@@ -7,7 +7,7 @@ use qlm::coordinator::lso::LsoConfig;
 use qlm::coordinator::request::Request;
 use qlm::coordinator::GlobalQueue;
 use qlm::sim::{fleet_a100, fleet_mixed, SimConfig, Simulation};
-use qlm::workload::{SloClass, Trace, TraceRequest, WorkloadSpec};
+use qlm::workload::{Scenario, ScenarioKnobs, SloClass, Trace, TraceRequest, WorkloadSpec};
 
 fn run(policy: Policy, trace: &Trace, fleet_n: u32, multi: bool) -> qlm::metrics::RunMetrics {
     let catalog = if multi {
@@ -114,6 +114,52 @@ fn heterogeneous_fleet_serves_everything() {
     );
     // And the faster devices should carry more of the load.
     assert!(a100_tokens > a10_tokens);
+}
+
+#[test]
+fn scenarios_run_end_to_end_at_small_scale() {
+    // Every CLI scenario must run through the full stack and serve
+    // essentially everything at light load.
+    for s in Scenario::ALL {
+        let k = ScenarioKnobs {
+            rate: 6.0,
+            requests: 200,
+            fleet: 2,
+            seed: 11,
+        };
+        let run = s.build(&k);
+        let trace = Trace::generate(&run.spec, k.seed);
+        let mut cfg = SimConfig::new(run.fleet, run.catalog, Policy::qlm());
+        cfg.seed = k.seed;
+        cfg.failures = run.failures.clone();
+        let m = Simulation::new(cfg, &trace).run(&trace);
+        assert_eq!(m.records.len(), 200, "{}", s.name());
+        assert!(
+            m.completed_count() >= 190,
+            "{}: {}",
+            s.name(),
+            m.summary()
+        );
+    }
+}
+
+#[test]
+fn failover_mid_run_completes_on_survivor() {
+    // Kill an instance while requests are genuinely in flight: the
+    // survivor must absorb the dead instance's queue (§4).
+    let trace = Trace::generate(&WorkloadSpec::w_a(ModelId(0), 15.0, 400), 17);
+    let mut cfg = SimConfig::new(fleet_a100(2), ModelCatalog::paper(), Policy::qlm());
+    cfg.failures = vec![(4.0, InstanceId(0))];
+    let m = Simulation::new(cfg, &trace).run(&trace);
+    assert_eq!(m.completed_count(), 400, "{}", m.summary());
+    // The dead instance stops generating after the failure; the survivor
+    // carries the bulk of the load.
+    assert!(
+        m.instances[1].tokens_generated > m.instances[0].tokens_generated,
+        "survivor {} vs dead {}",
+        m.instances[1].tokens_generated,
+        m.instances[0].tokens_generated
+    );
 }
 
 #[test]

@@ -8,11 +8,15 @@ use std::collections::HashMap;
 use std::collections::HashSet;
 use std::collections::VecDeque;
 
-use qlm::backend::{GpuKind, Instance, InstanceConfig, KvCache, ModelCatalog, ModelId, PerfModel, RunningSeq};
-use qlm::coordinator::request::Request;
+use qlm::backend::{
+    GpuKind, Instance, InstanceConfig, InstanceId, KvCache, ModelCatalog, ModelId, PerfModel,
+    RunningSeq,
+};
+use qlm::coordinator::request::{Request, RequestState};
 use qlm::coordinator::request_group::{GroupId, Grouper, RequestGroup};
 use qlm::coordinator::rwt::{ProfileTable, RwtEstimator};
 use qlm::coordinator::scheduler::{GlobalScheduler, InstanceView, SchedulerConfig};
+use qlm::coordinator::GlobalQueue;
 use qlm::util::Rng;
 use qlm::workload::{SloClass, TraceRequest};
 
@@ -121,7 +125,7 @@ fn prop_scheduler_assignment_is_partition() {
                     }
                 }
                 InstanceView {
-                    id: qlm::backend::InstanceId(i),
+                    id: InstanceId(i),
                     active_model: None,
                     perf_for,
                     swap_time,
@@ -129,7 +133,8 @@ fn prop_scheduler_assignment_is_partition() {
                 }
             })
             .collect();
-        let a = sched.schedule(&groups, &views, 0.0);
+        let refs: Vec<&RequestGroup> = groups.iter().collect();
+        let a = sched.schedule(&refs, &views, 0.0);
         let mut seen: HashSet<GroupId> = HashSet::new();
         for (inst, order) in &a.orders {
             for gid in order {
@@ -221,10 +226,7 @@ fn prop_kv_cache_conservation() {
 fn prop_instance_accounting() {
     for seed in 400..420 {
         let mut rng = Rng::new(seed);
-        let mut inst = Instance::new(
-            InstanceConfig::new(0, GpuKind::A100),
-            ModelCatalog::paper(),
-        );
+        let mut inst = Instance::new(InstanceConfig::new(0, GpuKind::A100), ModelCatalog::paper());
         inst.swap_model(ModelId(0), 0.0);
         let mut now = inst.busy_until();
         let mut admitted = 0u64;
@@ -264,6 +266,189 @@ fn prop_instance_accounting() {
             "seed {seed}: sequences lost"
         );
         assert_eq!(inst.stats.requests_completed, completed, "seed {seed}");
+    }
+}
+
+/// Property: the slab-backed `GlobalQueue` agrees with a shadow state
+/// machine across random submit / pull / requeue / ack / fail schedules:
+/// counts match, waiting ids stay ascending (FCFS base ordering), and no
+/// request is ever lost or duplicated.
+#[test]
+fn prop_global_queue_state_machine() {
+    for seed in 700..740 {
+        let mut rng = Rng::new(seed);
+        let mut q = GlobalQueue::new();
+        // Shadow model: id → (live, waiting).
+        let mut live: HashMap<u64, bool> = HashMap::new(); // id → waiting?
+        let mut submitted = 0u64;
+        let mut completed = 0u64;
+        for _ in 0..1200 {
+            match rng.usize(5) {
+                0 => {
+                    let id = q.submit(rand_request(&mut rng, 0, 3));
+                    live.insert(id, true);
+                    submitted += 1;
+                }
+                1 => {
+                    // Pull the head of the waiting set.
+                    let head = q.waiting_ids().next();
+                    if let Some(id) = head {
+                        q.mark_running(id);
+                        live.insert(id, false);
+                    }
+                }
+                2 => {
+                    // Requeue a random running request.
+                    let running: Vec<u64> = live
+                        .iter()
+                        .filter(|(_, &w)| !w)
+                        .map(|(&id, _)| id)
+                        .collect();
+                    let mut running = running;
+                    running.sort_unstable();
+                    if !running.is_empty() {
+                        let id = *rng.choose(&running);
+                        q.requeue_evicted(id, 5, InstanceId(0));
+                        live.insert(id, true);
+                    }
+                }
+                3 => {
+                    // Ack a random running request.
+                    let running: Vec<u64> = live
+                        .iter()
+                        .filter(|(_, &w)| !w)
+                        .map(|(&id, _)| id)
+                        .collect();
+                    let mut running = running;
+                    running.sort_unstable();
+                    if !running.is_empty() {
+                        let id = *rng.choose(&running);
+                        q.complete(id, Some(1.0), 2.0);
+                        live.remove(&id);
+                        completed += 1;
+                    }
+                }
+                4 if rng.f64() < 0.05 => {
+                    // Fail an instance holding every running request.
+                    let mut running: Vec<u64> = live
+                        .iter()
+                        .filter(|(_, &w)| !w)
+                        .map(|(&id, _)| id)
+                        .collect();
+                    running.sort_unstable();
+                    let affected = q.fail_instance(InstanceId(1), &running);
+                    assert_eq!(affected.len(), running.len(), "seed {seed}");
+                    for id in running {
+                        live.insert(id, true);
+                    }
+                }
+                _ => {}
+            }
+            // Invariants after every op.
+            let expect_waiting = live.values().filter(|&&w| w).count();
+            assert_eq!(q.len_waiting(), expect_waiting, "seed {seed}");
+            assert_eq!(q.len_total(), live.len(), "seed {seed}");
+            let ids: Vec<u64> = q.waiting_ids().collect();
+            assert!(ids.windows(2).all(|w| w[0] < w[1]), "seed {seed}: order");
+            for id in ids {
+                assert!(live[&id], "seed {seed}: ghost waiting id {id}");
+            }
+        }
+        assert_eq!(
+            completed + q.len_total() as u64,
+            submitted,
+            "seed {seed}: conservation"
+        );
+        assert_eq!(q.completed.len() as u64, completed, "seed {seed}");
+    }
+}
+
+/// A100 view serving every paper-catalog model.
+fn a100_view(i: u32) -> InstanceView {
+    let catalog = ModelCatalog::paper();
+    let mut perf_for = HashMap::new();
+    let mut swap_time = HashMap::new();
+    for m in catalog.ids() {
+        if let Some(p) = PerfModel::try_profile(catalog.get(m), GpuKind::A100, 161.0) {
+            swap_time.insert(m, p.swap_cpu_gpu_s);
+            perf_for.insert(m, p);
+        }
+    }
+    InstanceView {
+        id: InstanceId(i),
+        active_model: None,
+        perf_for,
+        swap_time,
+        executing: None,
+    }
+}
+
+/// Property (§4 Fault Tolerance): after an instance failure, the
+/// surviving virtual queues are a pure function of the global queue —
+/// two independent rebuilds (fresh grouper, fresh scheduler) produce
+/// identical per-instance orderings, and no waiting request is dropped.
+#[test]
+fn prop_virtual_queues_rebuild_identically_after_failure() {
+    for seed in 800..820 {
+        let mut rng = Rng::new(seed);
+        let mut q = GlobalQueue::new();
+        let n = 40 + rng.usize(160);
+        let ids: Vec<u64> = (0..n as u64)
+            .map(|i| q.submit(rand_request(&mut rng, i, 3)))
+            .collect();
+        // Spread some requests across 3 instances' running batches.
+        let mut per_inst: Vec<Vec<u64>> = vec![Vec::new(); 3];
+        for &id in &ids {
+            if rng.f64() < 0.4 {
+                let v = rng.usize(3);
+                q.mark_running(id);
+                per_inst[v].push(id);
+            }
+        }
+        let dead = rng.usize(3);
+        q.fail_instance(InstanceId(dead as u32), &per_inst[dead]);
+
+        let rebuild = |q: &GlobalQueue| {
+            let reqs: Vec<&Request> = q.waiting_ids().filter_map(|id| q.get(id)).collect();
+            let mut grouper = Grouper::new(4.0, 16, seed ^ 0xABCD);
+            let groups = grouper.regroup(&reqs);
+            let member_count: usize = groups.iter().map(|g| g.len()).sum();
+            let refs: Vec<&RequestGroup> = groups.iter().collect();
+            let views: Vec<InstanceView> = (0..3u32)
+                .filter(|&i| i as usize != dead)
+                .map(a100_view)
+                .collect();
+            let sched = GlobalScheduler::new(
+                SchedulerConfig::default(),
+                RwtEstimator::new(ProfileTable::default()),
+            );
+            let a = sched.schedule(&refs, &views, 0.0);
+            let mut orders: Vec<(u32, Vec<GroupId>)> = a
+                .orders
+                .into_iter()
+                .map(|(k, v)| (k.0, v))
+                .collect();
+            orders.sort();
+            (orders, member_count)
+        };
+
+        let (orders_a, members_a) = rebuild(&q);
+        let (orders_b, members_b) = rebuild(&q);
+        assert_eq!(orders_a, orders_b, "seed {seed}: rebuild not deterministic");
+        assert_eq!(members_a, members_b, "seed {seed}");
+        assert_eq!(
+            members_a,
+            q.len_waiting(),
+            "seed {seed}: rebuild dropped waiting requests"
+        );
+        // The dead instance's requests are all waiting again.
+        for &id in &per_inst[dead] {
+            assert_eq!(
+                q.get(id).unwrap().state,
+                RequestState::Waiting,
+                "seed {seed}"
+            );
+        }
     }
 }
 
