@@ -23,7 +23,9 @@ use qlm::baselines::Policy;
 use qlm::coordinator::request::Request;
 use qlm::coordinator::request_group::{GroupId, RequestGroup};
 use qlm::coordinator::rwt::{ProfileTable, RwtEstimator};
-use qlm::coordinator::scheduler::{GlobalScheduler, InstanceView, SchedulerConfig, SolverKind};
+use qlm::coordinator::scheduler::{
+    GlobalScheduler, InstanceView, SchedDelta, SchedulerConfig, SolverKind,
+};
 use qlm::coordinator::GlobalQueue;
 use qlm::sim::{fleet_a100, SimConfig, Simulation};
 use qlm::util::{mean, stddev};
@@ -305,12 +307,80 @@ fn bench_scheduler() {
             solver: SolverKind::ExactMilp,
             milp_max_groups: 5,
             node_limit: 50_000,
+            ..Default::default()
         },
         est,
     );
     bench("scheduler/exact-milp (5 groups)", 5, || {
         sched.schedule(&refs, &vs[..1], 0.0).stats.milp_nodes as u64
     });
+}
+
+/// The incremental-scheduler claim: a steady-state delta pass (a few
+/// dirty groups patched into the 1562-group cached plan — ≈400K queued
+/// requests at δ·B = 256) vs a full re-solve of the same state. Also
+/// proves the unchanged-input identity: an empty delta changes nothing
+/// and the cached plan still equals the full solve's assignments.
+fn bench_sched_incremental() {
+    let catalog = ModelCatalog::paper_multi_model();
+    let est = RwtEstimator::new(ProfileTable::default());
+    let vs = views(10, &catalog);
+    const N_GROUPS: usize = 1562;
+    let groups: Vec<RequestGroup> = (0..N_GROUPS as u64)
+        .map(|g| grp(g, (g % 4) as u32, 256, 60.0 + (g % 7) as f64 * 300.0))
+        .collect();
+    let refs: Vec<&RequestGroup> = groups.iter().collect();
+    let cfg = SchedulerConfig {
+        solver: SolverKind::Greedy,
+        ..Default::default()
+    };
+    let full = GlobalScheduler::new(cfg, est.clone());
+    let inc = GlobalScheduler::new(cfg, est);
+    let base = full.schedule(&refs, &vs, 0.0);
+    let warm = inc.schedule(&refs, &vs, 0.0);
+    assert_eq!(base.orders, warm.orders, "same inputs, same plan");
+
+    // Identity on unchanged inputs: an empty delta is a no-op patch and
+    // the cached plan still equals the full solve's assignments.
+    let empty = SchedDelta {
+        dirty: vec![],
+        removed: vec![],
+        total_groups: N_GROUPS,
+    };
+    let a = inc.try_schedule_delta(&empty, &vs, 0.0).expect("warm cache");
+    assert!(a.orders.is_empty(), "unchanged inputs must change nothing");
+    assert_eq!(
+        inc.cached_orders().unwrap(),
+        base.orders,
+        "identical assignments on unchanged inputs"
+    );
+
+    let full_ms = bench("sched_incremental/full re-solve (1562 grp)", 10, || {
+        full.schedule(&refs, &vs, 0.0).stats.groups as u64
+    });
+    let mut cursor = 0usize;
+    let inc_ms = bench("sched_incremental/delta pass (4 dirty)", 10, || {
+        let dirty: Vec<&RequestGroup> = (0..4)
+            .map(|k| &groups[(cursor + k) % N_GROUPS])
+            .collect();
+        cursor = (cursor + 4) % N_GROUPS;
+        let d = SchedDelta {
+            dirty,
+            removed: vec![],
+            total_groups: N_GROUPS,
+        };
+        let a = inc.try_schedule_delta(&d, &vs, 0.0).expect("delta path");
+        a.stats.dirty as u64
+    });
+    let speedup = full_ms / inc_ms.max(1e-9);
+    println!(
+        "sched_incremental speedup: {speedup:.1}x delta vs full re-solve \
+         ({full_ms:.3} ms -> {inc_ms:.3} ms, target >= 5x)"
+    );
+    assert!(
+        speedup >= 5.0,
+        "incremental scheduler must be >=5x cheaper in steady state, got {speedup:.1}x"
+    );
 }
 
 fn bench_kv() {
@@ -440,6 +510,9 @@ fn main() {
     }
     if runs("scheduler") {
         bench_scheduler();
+    }
+    if runs("sched_incremental") {
+        bench_sched_incremental();
     }
     if runs("kv") {
         bench_kv();

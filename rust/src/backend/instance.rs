@@ -493,6 +493,13 @@ impl Instance {
     pub fn running(&self) -> &[RunningSeq] {
         &self.running
     }
+
+    /// Internally preempted sequences parked in CPU swap. These are
+    /// still Running from the broker's point of view — metrics and
+    /// horizon accounting must include them alongside `running()`.
+    pub fn swapped(&self) -> &[RunningSeq] {
+        &self.swapped
+    }
 }
 
 #[cfg(test)]

@@ -88,6 +88,13 @@ impl QlmAgent {
         let mut slots = obs.batch_slots_free;
         let mut pull_ids: Vec<u64> = Vec::new();
         if self.lso.ordered_pulling {
+            // FCFS across the same-model prefix: stop at the first
+            // request that doesn't fit instead of scanning deeper groups
+            // for a smaller one. Skipping a blocked request would both
+            // violate queue order and make every capacity-limited wake
+            // walk the entire virtual queue — O(all groups) per wake,
+            // which dominates at 100K-request queue scale.
+            let mut blocked = false;
             for &gid in vq.groups.iter() {
                 let Some(g) = groups.get(&gid) else { continue };
                 if g.model != head.model {
@@ -96,13 +103,14 @@ impl QlmAgent {
                 for r in waiting_of_group(gid) {
                     let need = prompt_tokens_of(r);
                     if slots == 0 || need > spare_tokens {
+                        blocked = true;
                         break;
                     }
                     spare_tokens -= need;
                     slots -= 1;
                     pull_ids.push(r);
                 }
-                if slots == 0 {
+                if blocked || slots == 0 {
                     break;
                 }
             }

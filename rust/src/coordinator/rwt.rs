@@ -194,8 +194,16 @@ impl RwtEstimator {
         }
     }
 
-    /// Advance the memo epoch (one global-scheduler invocation) and
+    /// Advance the memo epoch (one *full* global-scheduler solve) and
     /// periodically prune entries not referenced since the last sweep.
+    ///
+    /// Incremental delta passes deliberately do **not** advance the
+    /// epoch: a delta pass re-prices only dirty groups, so clean groups'
+    /// entries would look stale after `MEMO_PRUNE_INTERVAL` passes and
+    /// get evicted even though their prices are still live. Service
+    /// prices therefore survive across scheduler passes; the primary
+    /// cleanup path is liveness-based ([`Self::forget_group`]), with
+    /// epoch pruning as a backstop across full solves.
     pub fn begin_epoch(&self) {
         let mut m = self.memo.borrow_mut();
         m.epoch += 1;
@@ -203,6 +211,22 @@ impl RwtEstimator {
             let cutoff = m.epoch.saturating_sub(MEMO_PRUNE_INTERVAL);
             m.map.retain(|_, v| v.2 >= cutoff);
         }
+    }
+
+    /// Drop every memoized service price for `g` — called when the group
+    /// drains (all members complete) or is dissolved. With incremental
+    /// scheduling keeping prices alive across passes indefinitely, this
+    /// liveness-based eviction is what keeps the memo tracking the live
+    /// group set.
+    ///
+    /// Cost note: the retain scans the whole memo, but both factors are
+    /// *group*-granular — drains over a run ≈ requests / (δ·B), and the
+    /// memo holds live-groups × instance-views entries — so even a
+    /// 100K-request `scale` run does a few thousand scans of a
+    /// few-thousand-entry map. A per-group key index isn't worth its
+    /// bookkeeping until group counts grow orders of magnitude.
+    pub fn forget_group(&self, g: GroupId) {
+        self.memo.borrow_mut().map.retain(|k, _| k.group != g);
     }
 
     /// (hits, misses) of the group-service memo — observability for the
@@ -504,6 +528,26 @@ mod tests {
         let (a, _) = est.group_service(&g, &p1);
         let (b, _) = est.group_service(&g, &p2);
         assert!(b > a, "smaller KV capacity must slow service: {a} vs {b}");
+    }
+
+    #[test]
+    fn forget_group_evicts_all_entries_for_that_group() {
+        let est = RwtEstimator::new(ProfileTable::default());
+        let p1 = perf();
+        let mut p2 = p1;
+        p2.token_capacity /= 8;
+        let g = mk_group(5, 0, 64, 0.0, 60.0);
+        let other = mk_group(6, 0, 64, 0.0, 60.0);
+        est.group_service(&g, &p1);
+        est.group_service(&g, &p2);
+        est.group_service(&other, &p1);
+        est.forget_group(g.id);
+        // Both of g's per-view entries are gone; `other` survives.
+        est.group_service(&g, &p1);
+        est.group_service(&other, &p1);
+        let (hits, misses) = est.memo_stats();
+        assert_eq!(hits, 1, "only `other` may hit after forget");
+        assert_eq!(misses, 4);
     }
 
     #[test]

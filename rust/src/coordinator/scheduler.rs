@@ -19,8 +19,21 @@
 //!   affinity, linear in groups; this is what scales to the 400K-request
 //!   queues of Fig. 20 and is the default for large instances (Design
 //!   Principle #1).
+//!
+//! On top of both, an **incremental delta path**
+//! ([`GlobalScheduler::try_schedule_delta`]): the steady-state regime of
+//! a 100K-request queue is "one group arrived / one group drained", and
+//! re-solving the whole table for that is O(groups × instances) per
+//! pass. The scheduler caches its last plan (per-instance orders, tail
+//! queue state, and per-group service prices) and a pass that only
+//! carries a small dirty set re-prices and re-inserts just the dirty
+//! groups; clean groups keep their queue position. Failure events,
+//! instance-set changes, the exact-MILP solver, and dirtiness above
+//! `SchedulerConfig::incremental_dirty_frac` fall back to a full solve,
+//! which refreshes the cache.
 
-use std::collections::HashMap;
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
 
 use crate::backend::{InstanceId, ModelId, PerfModel};
 use crate::coordinator::request_group::{GroupId, RequestGroup};
@@ -61,13 +74,30 @@ pub enum SolverKind {
     Auto,
 }
 
+/// Hard safety cap on the exact-MILP queue size. The dense tableau is
+/// O(n²) variables with O(n) rows of that width, so honoring
+/// `ExactMilp` *unbounded* would allocate gigabytes at Fig. 20 queue
+/// sizes; beyond this cap the heuristic ordering stands in even under
+/// `ExactMilp`. 64 groups ⇒ ~4k binaries, ~10 MB of tableau — the
+/// practical ceiling of the branch-and-bound anyway.
+pub const MILP_HARD_CAP: usize = 64;
+
 /// Scheduler configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct SchedulerConfig {
     pub solver: SolverKind,
-    /// Max groups per queue for the exact MILP path.
+    /// Max groups per queue for the `Auto` MILP refinement path
+    /// (`ExactMilp` refines regardless, up to [`MILP_HARD_CAP`]).
     pub milp_max_groups: usize,
     pub node_limit: usize,
+    /// Incremental passes fall back to a full solve when
+    /// (dirty + removed) exceeds this fraction of the live group table —
+    /// past that point re-walking everything is cheaper than patching.
+    pub incremental_dirty_frac: f64,
+    /// Master switch for the delta path. Off ⇒ `try_schedule_delta`
+    /// always bails and full solves never store a plan cache (they
+    /// still price plans with the same shared walk).
+    pub incremental: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -76,9 +106,17 @@ impl Default for SchedulerConfig {
             solver: SolverKind::Auto,
             milp_max_groups: 6,
             node_limit: 20_000,
+            incremental_dirty_frac: 0.25,
+            incremental: true,
         }
     }
 }
+
+/// Penalty charged per member of a group no instance can serve
+/// (misconfigured fleet). Large but *finite*: the old behavior parked
+/// such groups at a queue head, where `queue_penalty` returned
+/// `f64::INFINITY` and poisoned `total_penalty_s` for every comparison.
+pub const UNSERVABLE_PENALTY_S: f64 = 1e6;
 
 /// Solve statistics for overhead studies (Fig. 20).
 #[derive(Debug, Clone, Copy, Default)]
@@ -86,17 +124,87 @@ pub struct SolveStats {
     pub groups: usize,
     pub milp_nodes: usize,
     pub used_milp: bool,
+    /// This pass went down the cached delta path.
+    pub incremental: bool,
+    /// Dirty groups re-inserted by the delta path.
+    pub dirty: usize,
+    /// Instances whose queue changed this pass.
+    pub touched_instances: usize,
 }
 
 /// Scheduler output: per-instance virtual-queue orderings.
+///
+/// A full solve emits an order for every instance; an incremental pass
+/// emits orders only for instances whose queue actually changed, so
+/// callers apply `orders` as a patch (clean queues keep their position).
 #[derive(Debug, Clone)]
 pub struct Assignment {
     pub orders: HashMap<InstanceId, Vec<GroupId>>,
     /// True iff every group's estimated completion meets its SLO.
     pub feasible: bool,
-    /// Σ max(0, estimated completion − budget) across groups, seconds.
+    /// Σ max(0, estimated completion − budget) across groups, seconds,
+    /// plus [`UNSERVABLE_PENALTY_S`] per member of each unservable group.
     pub total_penalty_s: f64,
+    /// Groups no instance can serve, reported separately instead of
+    /// being parked on an arbitrary queue.
+    pub unservable: Vec<GroupId>,
     pub stats: SolveStats,
+}
+
+/// One scheduler pass's worth of group-table changes, produced by the
+/// engine's dirty tracking and consumed by the incremental path.
+#[derive(Debug, Clone, Default)]
+pub struct SchedDelta<'a> {
+    /// Groups whose membership, deadline anchor, or member states
+    /// changed since the last pass — re-priced and re-inserted.
+    pub dirty: Vec<&'a RequestGroup>,
+    /// Groups that drained or were dissolved since the last pass.
+    pub removed: Vec<GroupId>,
+    /// Live group count (for the full-solve dirtiness threshold).
+    pub total_groups: usize,
+}
+
+/// Cached per-group pricing from the pass that last (re)assigned it —
+/// everything the delta path needs to reorder and re-price a queue
+/// without touching the group table.
+#[derive(Debug, Clone, Copy)]
+struct GroupPricing {
+    model: ModelId,
+    deadline: f64,
+    /// Mean service time including prefill, on the assigned instance.
+    svc_s: f64,
+    len: u32,
+    /// Instance whose cached order holds this group — lets a removal
+    /// touch only the owning queue instead of scanning every order, so
+    /// a delta pass stays O(dirty), independent of total queue size.
+    owner: InstanceId,
+}
+
+/// Aggregate tail state of one cached queue (what a greedy append sees).
+#[derive(Debug, Clone, Copy, Default)]
+struct QTail {
+    wait: f64,
+    tail_model: Option<ModelId>,
+    load: f64,
+}
+
+#[derive(Debug, Clone)]
+struct CachedQueue {
+    id: InstanceId,
+    order: Vec<GroupId>,
+    tail: QTail,
+    penalty: f64,
+    active_model: Option<ModelId>,
+    executing: Option<GroupId>,
+}
+
+/// The scheduler's memory between passes: last plan + pricing.
+#[derive(Debug, Clone, Default)]
+struct SchedCache {
+    queues: Vec<CachedQueue>,
+    pricing: HashMap<GroupId, GroupPricing>,
+    /// (group, member count) pairs currently unservable.
+    unservable: Vec<(GroupId, u32)>,
 }
 
 /// The global scheduler.
@@ -104,11 +212,66 @@ pub struct Assignment {
 pub struct GlobalScheduler {
     pub cfg: SchedulerConfig,
     pub estimator: RwtEstimator,
+    /// Last plan, for the incremental delta path. Interior mutability so
+    /// `schedule` (&self, shared by benches and the engine) can refresh it.
+    cache: RefCell<Option<SchedCache>>,
 }
 
 impl GlobalScheduler {
     pub fn new(cfg: SchedulerConfig, estimator: RwtEstimator) -> Self {
-        GlobalScheduler { cfg, estimator }
+        GlobalScheduler {
+            cfg,
+            estimator,
+            cache: RefCell::new(None),
+        }
+    }
+
+    /// Score appending `g` behind tail `t` of `v`'s queue: returns
+    /// (penalty, completion). The one implementation shared by the
+    /// full-solve assignment loop and the delta insertion loop — the
+    /// two must score identically or their plans drift.
+    fn append_score(
+        &self,
+        t: &QTail,
+        g: &RequestGroup,
+        v: &InstanceView,
+        perf: &PerfModel,
+        now: f64,
+    ) -> (f64, f64) {
+        let swap = if t.tail_model != Some(g.model) {
+            v.swap_s(g.model)
+        } else {
+            0.0
+        };
+        let (svc, _) = self.estimator.group_service(g, perf);
+        let completion = t.wait + swap + perf.prefill_s + svc;
+        let pen = (completion - (g.deadline() - now)).max(0.0);
+        (pen, completion)
+    }
+
+    /// Price one group on `perf` for the cache: mean service including
+    /// prefill, deadline, size, and the queue that will hold it. The
+    /// single constructor for [`GroupPricing`] — the full-solve cache
+    /// rebuild and both delta-path insertion sites must price
+    /// identically or the two paths drift.
+    fn price_group(&self, g: &RequestGroup, perf: &PerfModel, owner: InstanceId) -> GroupPricing {
+        let (svc, _) = self.estimator.group_service(g, perf);
+        GroupPricing {
+            model: g.model,
+            deadline: g.deadline(),
+            svc_s: svc + perf.prefill_s,
+            len: g.len() as u32,
+            owner,
+        }
+    }
+
+    /// The cached per-instance orders from the last pass (full or
+    /// delta), if any — observability for tests and the bench harness.
+    pub fn cached_orders(&self) -> Option<HashMap<InstanceId, Vec<GroupId>>> {
+        self.cache
+            .borrow()
+            .as_ref()
+            .map(|c| c.queues.iter().map(|q| (q.id, q.order.clone())).collect())
     }
 
     /// Penalty of an ordering on one instance: Σ max(0, completion − budget).
@@ -144,19 +307,20 @@ impl GlobalScheduler {
             let e = cluster_deadline.entry(g.model).or_insert(f64::INFINITY);
             *e = e.min(g.deadline());
         }
-        groups.sort_by(|a, b| {
-            let ca = cluster_deadline[&a.model];
-            let cb = cluster_deadline[&b.model];
-            // Active-model cluster first on deadline ties (swap-free).
-            let aa = (Some(a.model) != active) as u8;
-            let ab = (Some(b.model) != active) as u8;
-            ca.partial_cmp(&cb)
-                .unwrap()
-                .then(a.model.cmp(&b.model))
-                .then(aa.cmp(&ab))
-                .then(a.deadline().partial_cmp(&b.deadline()).unwrap())
-                .then(a.id.cmp(&b.id))
-        });
+        // Active-model cluster first on deadline ties (swap-free). The
+        // active-model flag must compare *before* the raw model-id
+        // tie-break: with the old order, equal models made the flags
+        // trivially equal and the preference was unreachable.
+        let key = |g: &RequestGroup| -> AffinityKey {
+            (
+                cluster_deadline[&g.model],
+                Some(g.model) != active,
+                g.model,
+                g.deadline(),
+                g.id,
+            )
+        };
+        groups.sort_by(|a, b| affinity_cmp(&key(a), &key(b)));
     }
 
     /// Main entry: assign + order all schedulable groups.
@@ -175,6 +339,7 @@ impl GlobalScheduler {
         let by_id: HashMap<GroupId, &RequestGroup> =
             groups.iter().map(|g| (g.id, *g)).collect();
         let mut orders: HashMap<InstanceId, Vec<GroupId>> = HashMap::new();
+        let mut unservable: Vec<(GroupId, u32)> = Vec::new();
         let mut stats = SolveStats {
             groups: groups.len(),
             ..Default::default()
@@ -209,16 +374,10 @@ impl GlobalScheduler {
         // priced from cached per-queue state (accumulated wait, tail
         // model) instead of re-walking the whole queue (which made the
         // assignment quadratic in groups; see EXPERIMENTS.md §Perf).
-        #[derive(Clone, Copy)]
-        struct QState {
-            wait: f64,
-            tail_model: Option<ModelId>,
-            load: f64,
-        }
-        let mut qstate: HashMap<InstanceId, QState> = instances
+        let mut qstate: HashMap<InstanceId, QTail> = instances
             .iter()
             .map(|v| {
-                let mut st = QState {
+                let mut st = QTail {
                     wait: 0.0,
                     tail_model: v.active_model,
                     load: 0.0,
@@ -245,24 +404,13 @@ impl GlobalScheduler {
                     continue;
                 };
                 let st = qstate[&v.id];
-                let swap = if st.tail_model != Some(g.model) {
-                    v.swap_s(g.model)
-                } else {
-                    0.0
-                };
-                let (svc, _) = self.estimator.group_service(g, perf);
-                let completion = st.wait + swap + perf.prefill_s + svc;
-                let pen = (completion - (g.deadline() - now)).max(0.0);
-                let better = match &best {
-                    None => true,
-                    Some((_, bp, bc, bl)) => {
-                        pen < bp - 1e-9
-                            || ((pen - bp).abs() < 1e-9
-                                && (completion < bc - 1e-9
-                                    || ((completion - bc).abs() < 1e-9 && st.load < *bl)))
-                    }
-                };
-                if better {
+                let (pen, completion) = self.append_score(&st, g, v, perf, now);
+                if candidate_improves(
+                    best.map(|(_, p, c, l)| (p, c, l)),
+                    pen,
+                    completion,
+                    st.load,
+                ) {
                     best = Some((v.id, pen, completion, st.load));
                 }
             }
@@ -275,17 +423,17 @@ impl GlobalScheduler {
                     st.load += g.len() as f64;
                 }
                 None => {
-                    if let Some(v0) = instances.first() {
-                        // No instance can serve this model (misconfigured
-                        // fleet): park it; it will surface as penalty.
-                        orders.get_mut(&v0.id).unwrap().push(g.id);
-                    }
+                    // No instance can serve this model (misconfigured
+                    // fleet): report separately with a large finite
+                    // penalty. Parking it on an arbitrary queue made
+                    // `queue_penalty` go infinite at the queue head,
+                    // rendering the penalty signal useless.
+                    unservable.push((g.id, g.len() as u32));
                 }
             }
         }
 
         // 3. Per-queue ordering: affinity-EDF, optionally MILP-refined.
-        let mut total_penalty = 0.0;
         for v in instances {
             let ids = orders.get_mut(&v.id).unwrap();
             let all: Vec<&RequestGroup> =
@@ -293,12 +441,19 @@ impl GlobalScheduler {
             let (head, mut rest) = split_pinned(&all, v.executing);
             Self::affinity_order(&mut rest, v.active_model);
 
-            let use_milp = match self.cfg.solver {
-                SolverKind::Greedy => false,
-                SolverKind::ExactMilp => true,
-                SolverKind::Auto => rest.len() <= self.cfg.milp_max_groups,
-            } && rest.len() >= 2
-                && rest.len() <= self.cfg.milp_max_groups;
+            // `ExactMilp` is honored past `milp_max_groups` (the old
+            // code silently fell back to the heuristic there), bounded
+            // only by [`MILP_HARD_CAP`] — the node limit bounds the
+            // search but not tableau construction, and the heuristic-
+            // regression guard below keeps truncated searches harmless.
+            let use_milp = rest.len() >= 2
+                && match self.cfg.solver {
+                    SolverKind::Greedy => false,
+                    SolverKind::ExactMilp => rest.len() <= MILP_HARD_CAP,
+                    SolverKind::Auto => {
+                        rest.len() <= self.cfg.milp_max_groups.min(MILP_HARD_CAP)
+                    }
+                };
 
             if use_milp {
                 if let Some((order, nodes)) = self.milp_order(&rest, v, now) {
@@ -323,16 +478,308 @@ impl GlobalScheduler {
 
             let full: Vec<&RequestGroup> =
                 head.into_iter().chain(rest.into_iter()).collect();
-            total_penalty += self.queue_penalty(&full, v, now);
             *ids = full.iter().map(|g| g.id).collect();
         }
+
+        // Penalty: per-group pricing via the same `reprice_queue` walk
+        // the delta path uses, so full and delta passes report one
+        // consistent signal (head-perf `queue_penalty` stays as the
+        // MILP acceptance metric above). The walk doubles as the cache
+        // rebuild; ExactMilp never feeds the delta path (it always
+        // bails to preserve exactness), so it skips the cache and
+        // prices with `queue_penalty` instead.
+        let mut total_penalty = if self.cfg.solver != SolverKind::ExactMilp {
+            self.store_cache(&orders, &by_id, instances, now, unservable.clone())
+        } else {
+            instances
+                .iter()
+                .map(|v| {
+                    let refs: Vec<&RequestGroup> = orders[&v.id]
+                        .iter()
+                        .filter_map(|id| by_id.get(id).copied())
+                        .collect();
+                    self.queue_penalty(&refs, v, now)
+                })
+                .sum()
+        };
+        total_penalty += unservable
+            .iter()
+            .map(|&(_, n)| UNSERVABLE_PENALTY_S * n as f64)
+            .sum::<f64>();
+
+        let mut unservable: Vec<GroupId> = unservable.into_iter().map(|(g, _)| g).collect();
+        unservable.sort_unstable();
 
         Assignment {
             feasible: total_penalty <= 1e-9,
             total_penalty_s: total_penalty,
             orders,
+            unservable,
             stats,
         }
+    }
+
+    /// Rebuild the incremental cache from a just-computed full plan:
+    /// price every queued group (cheap — the services were just
+    /// memoized), then run the shared [`reprice_queue`] walk per queue
+    /// for tail state and penalty. Returns the summed queue penalty so
+    /// full solves report the exact signal delta passes will maintain.
+    fn store_cache(
+        &self,
+        orders: &HashMap<InstanceId, Vec<GroupId>>,
+        by_id: &HashMap<GroupId, &RequestGroup>,
+        instances: &[InstanceView],
+        now: f64,
+        unservable: Vec<(GroupId, u32)>,
+    ) -> f64 {
+        let mut pricing = HashMap::with_capacity(by_id.len());
+        let mut queues = Vec::with_capacity(instances.len());
+        for v in instances {
+            let order = orders.get(&v.id).cloned().unwrap_or_default();
+            for gid in &order {
+                let Some(g) = by_id.get(gid) else { continue };
+                let Some(perf) = v.perf_for.get(&g.model) else {
+                    continue;
+                };
+                pricing.insert(g.id, self.price_group(g, perf, v.id));
+            }
+            queues.push(CachedQueue {
+                id: v.id,
+                order,
+                tail: QTail::default(),
+                penalty: 0.0,
+                active_model: v.active_model,
+                executing: v.executing,
+            });
+        }
+        let mut total = 0.0;
+        for (cq, v) in queues.iter_mut().zip(instances) {
+            reprice_queue(cq, &pricing, v, now);
+            total += cq.penalty;
+        }
+        // With the delta path disabled there is no consumer for the
+        // plan cache — the walk above still ran (it *is* the penalty
+        // computation), but keep no state a disabled path could read.
+        if self.cfg.incremental {
+            *self.cache.borrow_mut() = Some(SchedCache {
+                queues,
+                pricing,
+                unservable,
+            });
+        }
+        total
+    }
+
+    /// Incremental pass: patch the cached plan with one pass's dirty
+    /// set instead of re-solving the whole group table.
+    ///
+    /// Returns `None` when a full solve is required — no cache yet, the
+    /// instance set changed (failures), the solver demands exactness, or
+    /// dirtiness exceeds `incremental_dirty_frac` — and the caller then
+    /// runs [`Self::schedule`], which refreshes the cache.
+    ///
+    /// Cost is O(dirty × instances + touched queue lengths); clean
+    /// queues keep their order, tail state, and last-priced penalty (an
+    /// amortized approximation: their penalties are not re-anchored to
+    /// `now` until something touches them). Per-queue ordering on
+    /// touched queues is greedy affinity-EDF only; `Auto`-mode MILP
+    /// refinement re-applies at the next full solve.
+    pub fn try_schedule_delta(
+        &self,
+        delta: &SchedDelta,
+        instances: &[InstanceView],
+        now: f64,
+    ) -> Option<Assignment> {
+        if !self.cfg.incremental || self.cfg.solver == SolverKind::ExactMilp {
+            return None;
+        }
+        let mut guard = self.cache.borrow_mut();
+        let cache = guard.as_mut()?;
+        if cache.queues.len() != instances.len()
+            || cache.queues.iter().zip(instances).any(|(c, v)| c.id != v.id)
+        {
+            return None;
+        }
+        let changed = delta.dirty.len() + delta.removed.len();
+        if changed as f64 > self.cfg.incremental_dirty_frac * delta.total_groups.max(1) as f64 {
+            return None;
+        }
+        let SchedCache {
+            queues,
+            pricing,
+            unservable,
+        } = cache;
+
+        // Executing groups stay pinned at their heads even when dirty.
+        let pinned: HashMap<GroupId, usize> = instances
+            .iter()
+            .enumerate()
+            .filter_map(|(k, v)| v.executing.map(|g| (g, k)))
+            .collect();
+
+        // Everything leaving its current queue position.
+        let mut gone: HashSet<GroupId> = delta.removed.iter().copied().collect();
+        for g in &delta.dirty {
+            if !pinned.contains_key(&g.id) {
+                gone.insert(g.id);
+            }
+        }
+        unservable.retain(|(g, _)| !gone.contains(g));
+
+        let mut touched = vec![false; instances.len()];
+        let idx_of: HashMap<InstanceId, usize> = instances
+            .iter()
+            .enumerate()
+            .map(|(k, v)| (v.id, k))
+            .collect();
+
+        // Only queues that actually hold a departing group need their
+        // order rewritten — the owner index keeps this O(dirty) instead
+        // of O(total groups) (see `GroupPricing::owner`).
+        for gid in &gone {
+            if let Some(p) = pricing.get(gid) {
+                if let Some(&k) = idx_of.get(&p.owner) {
+                    touched[k] = true;
+                }
+            }
+        }
+        for gid in &delta.removed {
+            pricing.remove(gid);
+        }
+
+        // 1. Drop departing groups; sync pinning and active-model state.
+        for (k, v) in instances.iter().enumerate() {
+            let cq = &mut queues[k];
+            if touched[k] {
+                cq.order.retain(|g| !gone.contains(g));
+            }
+            if cq.executing != v.executing {
+                cq.executing = v.executing;
+                touched[k] = true;
+            }
+            if let Some(e) = v.executing {
+                if cq.order.first() != Some(&e) && cq.order.contains(&e) {
+                    cq.order.retain(|&g| g != e);
+                    cq.order.insert(0, e);
+                    touched[k] = true;
+                }
+            }
+            if cq.active_model != v.active_model {
+                cq.active_model = v.active_model;
+                touched[k] = true; // head-swap pricing changed
+            }
+        }
+
+        // 2. Re-price pinned dirty groups in place.
+        for g in &delta.dirty {
+            let Some(&k) = pinned.get(&g.id) else { continue };
+            touched[k] = true;
+            if let Some(perf) = instances[k].perf_for.get(&g.model) {
+                pricing.insert(g.id, self.price_group(g, perf, instances[k].id));
+            }
+            if !queues[k].order.contains(&g.id) {
+                queues[k].order.insert(0, g.id);
+            }
+        }
+
+        // 2.5 Refresh tail state of every queue touched so far, *before*
+        //     scoring insertions: without this, step 3 would price
+        //     candidates against tails that still include the groups
+        //     just removed above, steering arrivals away from queues
+        //     that freed capacity this very pass.
+        for (k, v) in instances.iter().enumerate() {
+            if touched[k] {
+                reprice_queue(&mut queues[k], pricing, v, now);
+            }
+        }
+
+        // 3. Greedy re-insertion of dirty groups in deadline order —
+        //    identical candidate scoring to the full solve, priced
+        //    against cached queue tails.
+        let mut todo: Vec<&RequestGroup> = delta
+            .dirty
+            .iter()
+            .copied()
+            .filter(|g| !pinned.contains_key(&g.id))
+            .collect();
+        todo.sort_by(|a, b| {
+            a.deadline()
+                .partial_cmp(&b.deadline())
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        for g in todo {
+            let mut best: Option<(usize, f64, f64, f64)> = None;
+            for (k, v) in instances.iter().enumerate() {
+                let Some(perf) = v.perf_for.get(&g.model) else {
+                    continue;
+                };
+                let t = queues[k].tail;
+                let (pen, completion) = self.append_score(&t, g, v, perf, now);
+                if candidate_improves(
+                    best.map(|(_, p, c, l)| (p, c, l)),
+                    pen,
+                    completion,
+                    t.load,
+                ) {
+                    best = Some((k, pen, completion, t.load));
+                }
+            }
+            match best {
+                Some((k, _, completion, _)) => {
+                    let v = &instances[k];
+                    let perf = v.perf_for[&g.model];
+                    pricing.insert(g.id, self.price_group(g, &perf, v.id));
+                    let cq = &mut queues[k];
+                    cq.order.push(g.id);
+                    cq.tail.wait = completion;
+                    cq.tail.tail_model = Some(g.model);
+                    cq.tail.load += g.len() as f64;
+                    touched[k] = true;
+                }
+                None => unservable.push((g.id, g.len() as u32)),
+            }
+        }
+
+        // 4. Reorder + re-price touched queues from cached pricing.
+        for (k, v) in instances.iter().enumerate() {
+            if !touched[k] {
+                continue;
+            }
+            let cq = &mut queues[k];
+            reorder_cached(cq, pricing);
+            reprice_queue(cq, pricing, v, now);
+        }
+
+        // 5. Assemble the patch: orders only for queues that changed.
+        let mut orders = HashMap::new();
+        for (k, cq) in queues.iter().enumerate() {
+            if touched[k] {
+                orders.insert(cq.id, cq.order.clone());
+            }
+        }
+        let mut total_penalty: f64 = queues.iter().map(|q| q.penalty).sum();
+        total_penalty += unservable
+            .iter()
+            .map(|&(_, n)| UNSERVABLE_PENALTY_S * n as f64)
+            .sum::<f64>();
+        let mut unservable_ids: Vec<GroupId> =
+            unservable.iter().map(|&(g, _)| g).collect();
+        unservable_ids.sort_unstable();
+        let touched_instances = touched.iter().filter(|&&t| t).count();
+        Some(Assignment {
+            feasible: total_penalty <= 1e-9,
+            total_penalty_s: total_penalty,
+            orders,
+            unservable: unservable_ids,
+            stats: SolveStats {
+                groups: delta.total_groups,
+                incremental: true,
+                dirty: delta.dirty.len(),
+                touched_instances,
+                ..Default::default()
+            },
+        })
     }
 
     /// Exact ordering of `groups` on instance `v` via the §7 MILP.
@@ -473,6 +920,101 @@ impl GlobalScheduler {
             MilpResult::Infeasible => None,
         }
     }
+}
+
+/// The better-candidate predicate shared by both greedy assignment
+/// loops: lower penalty, then earlier completion, then lighter load
+/// (1e-9 epsilons throughout). `best` carries (pen, completion, load).
+fn candidate_improves(best: Option<(f64, f64, f64)>, pen: f64, completion: f64, load: f64) -> bool {
+    match best {
+        None => true,
+        Some((bp, bc, bl)) => {
+            pen < bp - 1e-9
+                || ((pen - bp).abs() < 1e-9
+                    && (completion < bc - 1e-9
+                        || ((completion - bc).abs() < 1e-9 && load < bl)))
+        }
+    }
+}
+
+/// The affinity-EDF sort key: (cluster deadline, non-active-model flag,
+/// model id, deadline, group id).
+type AffinityKey = (f64, bool, ModelId, f64, GroupId);
+
+/// The one comparator behind both ordering paths — `affinity_order`
+/// (full solve, over groups) and `reorder_cached` (delta path, over the
+/// pricing table). Keeping it in one place is what guarantees the two
+/// paths produce the same plan for the same state.
+fn affinity_cmp(a: &AffinityKey, b: &AffinityKey) -> std::cmp::Ordering {
+    a.0.partial_cmp(&b.0)
+        .unwrap()
+        .then(a.1.cmp(&b.1))
+        .then(a.2.cmp(&b.2))
+        .then(a.3.partial_cmp(&b.3).unwrap())
+        .then(a.4.cmp(&b.4))
+}
+
+/// Affinity-EDF over cached pricing — driven by the pricing table so
+/// the delta path never touches the group table. The pinned executing
+/// head, if present, is left in place.
+fn reorder_cached(cq: &mut CachedQueue, pricing: &HashMap<GroupId, GroupPricing>) {
+    let start =
+        usize::from(cq.executing.is_some() && cq.order.first() == cq.executing.as_ref());
+    let active = cq.active_model;
+    let rest = &mut cq.order[start..];
+    let mut cluster_deadline: HashMap<ModelId, f64> = HashMap::new();
+    for gid in rest.iter() {
+        if let Some(p) = pricing.get(gid) {
+            let e = cluster_deadline.entry(p.model).or_insert(f64::INFINITY);
+            *e = e.min(p.deadline);
+        }
+    }
+    let key = |gid: &GroupId| -> AffinityKey {
+        match pricing.get(gid) {
+            Some(p) => (
+                cluster_deadline
+                    .get(&p.model)
+                    .copied()
+                    .unwrap_or(f64::INFINITY),
+                Some(p.model) != active,
+                p.model,
+                p.deadline,
+                *gid,
+            ),
+            // Unpriced ids (shouldn't happen) sink to the back, stably.
+            None => (f64::INFINITY, true, ModelId(u32::MAX), f64::INFINITY, *gid),
+        }
+    };
+    rest.sort_by(|a, b| affinity_cmp(&key(a), &key(b)));
+}
+
+/// Walk a cached order front-to-back, recomputing the queue's tail
+/// state (what a greedy append sees) and its penalty from the pricing
+/// table alone.
+fn reprice_queue(
+    cq: &mut CachedQueue,
+    pricing: &HashMap<GroupId, GroupPricing>,
+    v: &InstanceView,
+    now: f64,
+) {
+    let mut tail = QTail {
+        wait: 0.0,
+        tail_model: v.active_model,
+        load: 0.0,
+    };
+    let mut penalty = 0.0;
+    for gid in &cq.order {
+        let Some(p) = pricing.get(gid) else { continue };
+        if tail.tail_model != Some(p.model) {
+            tail.wait += v.swap_s(p.model);
+        }
+        tail.tail_model = Some(p.model);
+        penalty += (tail.wait + p.svc_s - (p.deadline - now)).max(0.0);
+        tail.wait += p.svc_s;
+        tail.load += p.len as f64;
+    }
+    cq.tail = tail;
+    cq.penalty = penalty;
 }
 
 /// Split a queue into (pinned executing head, reorderable rest).
@@ -631,6 +1173,7 @@ mod tests {
                 solver: SolverKind::ExactMilp,
                 milp_max_groups: 4,
                 node_limit: 50_000,
+                ..Default::default()
             },
             estimator(),
         );
@@ -653,6 +1196,7 @@ mod tests {
                 solver: SolverKind::ExactMilp,
                 milp_max_groups: 4,
                 node_limit: 50_000,
+                ..Default::default()
             },
             estimator(),
         );
@@ -679,5 +1223,298 @@ mod tests {
         let a = sched.schedule(&refs, &views, 0.0);
         assert!(!a.feasible);
         assert!(a.total_penalty_s > 0.0);
+    }
+
+    #[test]
+    fn affinity_order_active_model_cluster_leads_on_deadline_tie() {
+        // Regression: the active-model preference used to sit *after*
+        // the raw model-id tie-break, making it unreachable — deadline-
+        // tied clusters ordered by model id and swapped needlessly.
+        let g1 = grp(1, 0, 8, 0.0, 60.0);
+        let g2 = grp(2, 1, 8, 0.0, 60.0); // same cluster deadline as model 0
+        let g3 = grp(3, 0, 8, 0.0, 60.0);
+        let g4 = grp(4, 1, 8, 0.0, 60.0);
+        let mut v = vec![&g1, &g2, &g3, &g4];
+        GlobalScheduler::affinity_order(&mut v, Some(ModelId(1)));
+        let models: Vec<u32> = v.iter().map(|g| g.model.0).collect();
+        assert_eq!(
+            models,
+            vec![1, 1, 0, 0],
+            "active model-1 cluster must lead on a deadline tie"
+        );
+    }
+
+    #[test]
+    fn unservable_group_reported_with_finite_penalty() {
+        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
+        // Model 2 (Llama-70B) is not servable by the only instance.
+        let lost = grp(1, 2, 8, 0.0, 60.0);
+        let ok = grp(2, 0, 8, 0.0, 3600.0);
+        let views = vec![view(0, &[0], Some(0))];
+        let a = sched.schedule(&[&lost, &ok], &views, 0.0);
+        assert!(
+            a.total_penalty_s.is_finite(),
+            "unservable group must not poison the penalty signal"
+        );
+        assert!(a.total_penalty_s >= UNSERVABLE_PENALTY_S);
+        assert!(!a.feasible);
+        assert_eq!(a.unservable, vec![GroupId(1)]);
+        assert!(
+            !a.orders[&InstanceId(0)].contains(&GroupId(1)),
+            "unservable group must not be parked on a queue"
+        );
+        assert!(a.orders[&InstanceId(0)].contains(&GroupId(2)));
+    }
+
+    #[test]
+    fn exact_milp_honored_beyond_milp_max_groups() {
+        // Regression: ExactMilp used to silently fall back to the
+        // heuristic when a queue exceeded `milp_max_groups`.
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::ExactMilp,
+                milp_max_groups: 2,
+                node_limit: 50_000,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        let groups: Vec<RequestGroup> =
+            (0..4).map(|i| grp(i, 0, 16, 0.0, 600.0 + i as f64)).collect();
+        let refs: Vec<&RequestGroup> = groups.iter().collect();
+        let views = vec![view(0, &[0], Some(0))];
+        let a = sched.schedule(&refs, &views, 0.0);
+        assert!(
+            a.stats.used_milp,
+            "ExactMilp must refine queues larger than milp_max_groups"
+        );
+    }
+
+    /// Deterministic Fisher–Yates driven by a splitmix-style LCG.
+    fn lcg_shuffle<T>(v: &mut [T], seed: &mut u64) {
+        for i in (1..v.len()).rev() {
+            *seed = seed
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let j = ((*seed >> 33) as usize) % (i + 1);
+            v.swap(i, j);
+        }
+    }
+
+    #[test]
+    fn schedule_invariant_to_group_slice_order() {
+        // Property: the plan is a function of the group *set*, not the
+        // iteration order of the slice handed in (which comes from a
+        // HashMap in the engine).
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        let groups: Vec<RequestGroup> = (0..24)
+            .map(|i| {
+                let slo = 30.0 + (i % 7) as f64 * 200.0;
+                grp(i, (i % 2) as u32 * 3, 16 + (i % 5) as usize, i as f64, slo)
+            })
+            .collect();
+        let views = vec![
+            view(0, &[0, 3], Some(0)),
+            view(1, &[0, 3], Some(3)),
+            view(2, &[0], None),
+        ];
+        let base_refs: Vec<&RequestGroup> = groups.iter().collect();
+        let base = sched.schedule(&base_refs, &views, 0.0);
+        let mut seed = 0xC0FFEE_u64;
+        for _ in 0..5 {
+            let mut refs = base_refs.clone();
+            lcg_shuffle(&mut refs, &mut seed);
+            let a = sched.schedule(&refs, &views, 0.0);
+            assert_eq!(a.orders, base.orders, "plan depends on slice order");
+            assert!((a.total_penalty_s - base.total_penalty_s).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn delta_without_cache_falls_back_to_full() {
+        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
+        let views = vec![view(0, &[0], Some(0))];
+        let d = SchedDelta::default();
+        assert!(sched.try_schedule_delta(&d, &views, 0.0).is_none());
+    }
+
+    #[test]
+    fn delta_with_empty_dirty_set_changes_nothing() {
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        let groups: Vec<RequestGroup> =
+            (0..8).map(|i| grp(i, 0, 32, 0.0, 60.0 + i as f64)).collect();
+        let refs: Vec<&RequestGroup> = groups.iter().collect();
+        let views = vec![view(0, &[0], Some(0)), view(1, &[0], Some(0))];
+        let full = sched.schedule(&refs, &views, 0.0);
+        let d = SchedDelta {
+            total_groups: groups.len(),
+            ..Default::default()
+        };
+        let a = sched
+            .try_schedule_delta(&d, &views, 0.0)
+            .expect("cache is warm");
+        assert!(a.stats.incremental);
+        assert!(
+            a.orders.is_empty(),
+            "identical inputs must produce an empty patch"
+        );
+        assert_eq!(
+            sched.cached_orders().unwrap(),
+            full.orders,
+            "cached plan must still equal the full solve"
+        );
+    }
+
+    #[test]
+    fn delta_inserts_new_group_like_a_full_solve() {
+        let mk_sched = || {
+            GlobalScheduler::new(
+                SchedulerConfig {
+                    solver: SolverKind::Greedy,
+                    ..Default::default()
+                },
+                estimator(),
+            )
+        };
+        let mut groups: Vec<RequestGroup> =
+            (0..6).map(|i| grp(i, 0, 32, 0.0, 100.0 + 50.0 * i as f64)).collect();
+        let views = vec![view(0, &[0], Some(0))];
+        // Warm the incremental scheduler on the first 6 groups, then
+        // deliver group 6 via the delta path.
+        let inc = mk_sched();
+        let refs: Vec<&RequestGroup> = groups.iter().collect();
+        inc.schedule(&refs, &views, 0.0);
+        groups.push(grp(6, 0, 32, 0.0, 900.0));
+        let d = SchedDelta {
+            dirty: vec![groups.last().unwrap()],
+            removed: vec![],
+            total_groups: groups.len(),
+        };
+        let a = inc.try_schedule_delta(&d, &views, 0.0).expect("warm cache");
+        assert!(a.stats.incremental);
+        assert_eq!(a.stats.dirty, 1);
+        // A fresh full solve over all 7 groups lands on the same plan.
+        let full = mk_sched();
+        let refs: Vec<&RequestGroup> = groups.iter().collect();
+        let b = full.schedule(&refs, &views, 0.0);
+        assert_eq!(inc.cached_orders().unwrap(), b.orders);
+    }
+
+    #[test]
+    fn delta_invariant_to_dirty_iteration_order() {
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                incremental_dirty_frac: 1.0,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        let base: Vec<RequestGroup> =
+            (0..10).map(|i| grp(i, 0, 32, 0.0, 60.0 + 10.0 * i as f64)).collect();
+        let views = vec![view(0, &[0], Some(0)), view(1, &[0], Some(0))];
+        let fresh: Vec<RequestGroup> = (10..14)
+            .map(|i| grp(i, 0, 32, 0.0, 45.0 + 5.0 * i as f64))
+            .collect();
+        let run = |dirty: Vec<&RequestGroup>| {
+            let refs: Vec<&RequestGroup> = base.iter().collect();
+            sched.schedule(&refs, &views, 0.0);
+            let d = SchedDelta {
+                dirty,
+                removed: vec![],
+                total_groups: base.len() + fresh.len(),
+            };
+            sched.try_schedule_delta(&d, &views, 0.0).expect("warm");
+            sched.cached_orders().unwrap()
+        };
+        let fwd = run(fresh.iter().collect());
+        let rev = run(fresh.iter().rev().collect());
+        assert_eq!(fwd, rev, "delta plan depends on dirty iteration order");
+    }
+
+    #[test]
+    fn delta_removed_group_leaves_its_queue() {
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        let groups: Vec<RequestGroup> =
+            (0..6).map(|i| grp(i, 0, 32, 0.0, 60.0 + i as f64)).collect();
+        let refs: Vec<&RequestGroup> = groups.iter().collect();
+        let views = vec![view(0, &[0], Some(0))];
+        sched.schedule(&refs, &views, 0.0);
+        let d = SchedDelta {
+            dirty: vec![],
+            removed: vec![GroupId(3)],
+            total_groups: 5,
+        };
+        let a = sched.try_schedule_delta(&d, &views, 0.0).expect("warm");
+        let order = &a.orders[&InstanceId(0)];
+        assert!(!order.contains(&GroupId(3)));
+        assert_eq!(order.len(), 5);
+    }
+
+    #[test]
+    fn delta_dirtiness_beyond_threshold_forces_full_solve() {
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                incremental_dirty_frac: 0.25,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        let groups: Vec<RequestGroup> =
+            (0..8).map(|i| grp(i, 0, 32, 0.0, 60.0 + i as f64)).collect();
+        let refs: Vec<&RequestGroup> = groups.iter().collect();
+        let views = vec![view(0, &[0], Some(0))];
+        sched.schedule(&refs, &views, 0.0);
+        let d = SchedDelta {
+            dirty: groups.iter().take(4).collect(),
+            removed: vec![],
+            total_groups: groups.len(),
+        };
+        assert!(
+            sched.try_schedule_delta(&d, &views, 0.0).is_none(),
+            "4/8 dirty exceeds the 25% threshold"
+        );
+    }
+
+    #[test]
+    fn delta_instance_set_change_forces_full_solve() {
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        let groups: Vec<RequestGroup> =
+            (0..4).map(|i| grp(i, 0, 32, 0.0, 60.0)).collect();
+        let refs: Vec<&RequestGroup> = groups.iter().collect();
+        let views = vec![view(0, &[0], Some(0)), view(1, &[0], Some(0))];
+        sched.schedule(&refs, &views, 0.0);
+        // Instance 1 failed: the survivor-only view set must not patch.
+        let survivors = vec![view(0, &[0], Some(0))];
+        let d = SchedDelta {
+            total_groups: groups.len(),
+            ..Default::default()
+        };
+        assert!(sched.try_schedule_delta(&d, &survivors, 0.0).is_none());
     }
 }

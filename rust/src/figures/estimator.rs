@@ -175,6 +175,7 @@ pub fn fig20(scale: Scale) -> Figure {
             solver: SolverKind::ExactMilp,
             milp_max_groups: 5,
             node_limit: 50_000,
+            ..Default::default()
         },
         est,
     );

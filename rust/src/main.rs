@@ -82,9 +82,9 @@ fn usage() -> ExitCode {
         "qlm — Queue Management for SLO-Oriented LLM Serving (SoCC '24 reproduction)
 
 USAGE:
-  qlm sim [--scenario burst|diurnal|mixed-slo|multi-model|failover] [--list]
+  qlm sim [--scenario burst|diurnal|mixed-slo|multi-model|failover|scale] [--list]
           [--policy P] [--rate R] [--requests N] [--fleet N] [--seed S]
-          [--horizon SECS]
+          [--horizon SECS] [--full-solve]
   qlm figures [--fig N] [--full]
   qlm simulate [--policy qlm|edf|vllm|shepherd|qlm-noevict|qlm-noswap|qlm-nolb]
                [--rate R] [--requests N] [--fleet N] [--multi-model] [--seed S]
@@ -148,7 +148,8 @@ fn cmd_sim(args: &Args) -> ExitCode {
     let name = args.get("scenario").unwrap_or("mixed-slo");
     let Some(scenario) = Scenario::from_name(name) else {
         eprintln!(
-            "unknown scenario {name} (known: burst, diurnal, mixed-slo, multi-model, failover)"
+            "unknown scenario {name} \
+             (known: burst, diurnal, mixed-slo, multi-model, failover, scale)"
         );
         return ExitCode::from(2);
     };
@@ -185,6 +186,9 @@ fn cmd_sim(args: &Args) -> ExitCode {
     cfg.seed = knobs.seed;
     cfg.horizon_s = horizon_s;
     cfg.failures = run.failures.clone();
+    // `--full-solve` disables the incremental scheduler (the Fig. 20
+    // overhead baseline; see `cargo bench -- sched_incremental`).
+    cfg.sched_incremental = !args.has("full-solve");
     let wall = std::time::Instant::now();
     let m = Simulation::new(cfg, &trace).run(&trace);
     let wall_s = wall.elapsed().as_secs_f64();

@@ -12,9 +12,16 @@
 //! global scheduler receives group *references* instead of a deep clone
 //! of every live group. The seed implementation cloned the virtual queue
 //! and agent on every wake and the entire group table on every schedule.
+//!
+//! On top of that, scheduling itself is *incremental*: the engine tracks
+//! which groups went dirty since the last pass (arrivals, pulls,
+//! evictions, drains, failures) and hands the global scheduler just that
+//! delta; the scheduler patches its cached plan instead of re-solving
+//! the whole table, which is what lets `--scenario scale` push 100K+
+//! queued requests through the paper's Fig. 20 regime.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BTreeSet, BinaryHeap, HashMap, VecDeque};
 use std::time::Instant as WallInstant;
 
 use crate::backend::{
@@ -26,7 +33,9 @@ use crate::coordinator::lso::LsoAction;
 use crate::coordinator::request::{Request, RequestState};
 use crate::coordinator::request_group::{GroupId, Grouper, RequestGroup};
 use crate::coordinator::rwt::{ProfileTable, RwtEstimator};
-use crate::coordinator::scheduler::{GlobalScheduler, InstanceView, SchedulerConfig, SolverKind};
+use crate::coordinator::scheduler::{
+    GlobalScheduler, InstanceView, SchedDelta, SchedulerConfig, SolverKind,
+};
 use crate::coordinator::virtual_queue::VirtualQueue;
 use crate::coordinator::GlobalQueue;
 use crate::metrics::{instance_metrics, RequestRecord, RunMetrics};
@@ -53,6 +62,10 @@ pub struct SimConfig {
     /// vanish, and every affected request reverts to Waiting in the
     /// global queue. Drives the `failover` CLI scenario.
     pub failures: Vec<(f64, InstanceId)>,
+    /// Allow the global scheduler's incremental delta path (on by
+    /// default). Off forces a full re-solve every pass — the Fig. 20
+    /// overhead baseline and the `sched_incremental` bench comparator.
+    pub sched_incremental: bool,
 }
 
 impl SimConfig {
@@ -67,6 +80,7 @@ impl SimConfig {
             horizon_s: 7200.0,
             sched_interval_s: 0.25,
             failures: Vec::new(),
+            sched_incremental: true,
         }
     }
 }
@@ -149,8 +163,23 @@ pub struct Simulation {
     scheduler_wall_s: f64,
     scheduler_invocations: u64,
     /// Per-instance wake deduplication: at most one pending Wake per
-    /// instance (avoids event-storm blowup).
+    /// instance (avoids event-storm blowup). An earlier wake supersedes
+    /// a later pending one; the superseded heap entry cannot be removed
+    /// from the `BinaryHeap` and is dropped at pop time instead (see
+    /// `take_due_wake`).
     wake_pending: Vec<Option<f64>>,
+    /// Wake bookkeeping: honored pops vs superseded (stale) pops.
+    wakes_executed: u64,
+    wakes_stale_dropped: u64,
+    /// Incremental-scheduler dirty tracking: groups whose membership,
+    /// deadline anchor, or member states changed since the last pass.
+    /// `BTreeSet` for deterministic iteration order.
+    dirty_groups: BTreeSet<GroupId>,
+    /// Groups that drained (all members complete) since the last pass.
+    removed_groups: Vec<GroupId>,
+    /// Force the next pass down the full-solve path (instance failures
+    /// change the view set; the cached plan is unusable).
+    sched_force_full: bool,
     /// Hardware-profiled Θ per (gpu, model) — §6 Offline Profiling.
     thetas: ThetaCache,
     /// End time of each instance's in-flight iteration: a step is an
@@ -179,6 +208,7 @@ impl Simulation {
         let scheduler = GlobalScheduler::new(
             SchedulerConfig {
                 solver,
+                incremental: cfg.sched_incremental,
                 ..Default::default()
             },
             estimator,
@@ -222,6 +252,11 @@ impl Simulation {
             scheduler_wall_s: 0.0,
             scheduler_invocations: 0,
             wake_pending: vec![None; n_instances],
+            wakes_executed: 0,
+            wakes_stale_dropped: 0,
+            dirty_groups: BTreeSet::new(),
+            removed_groups: Vec::new(),
+            sched_force_full: false,
             thetas: ThetaCache::new(),
             next_free: vec![0.0; n_instances],
             views_cache: Vec::new(),
@@ -254,6 +289,9 @@ impl Simulation {
             return;
         }
         // Coalesce: skip if an earlier-or-equal wake is already pending.
+        // When an *earlier* wake supersedes a pending later one, the
+        // later heap entry stays behind and is discarded at pop time by
+        // `take_due_wake`.
         if let Some(pending) = self.wake_pending[idx] {
             if pending <= t + 1e-12 {
                 return;
@@ -261,6 +299,33 @@ impl Simulation {
         }
         self.wake_pending[idx] = Some(t);
         self.push_event(t, EventKind::Wake(id));
+    }
+
+    /// Pop-side half of the wake dedup: honor a popped Wake only if it
+    /// *is* the currently pending wake for the instance. Superseded
+    /// entries used to clear `wake_pending` and fire a spurious
+    /// `on_wake` anyway, breaking the at-most-one-pending-Wake
+    /// invariant (a stale pop would also cancel a legitimately pending
+    /// newer wake, duplicating iterations at the old time).
+    fn take_due_wake(&mut self, id: InstanceId, t: f64) -> bool {
+        let idx = id.0 as usize;
+        match self.wake_pending[idx] {
+            Some(pending) if (pending - t).abs() <= 1e-12 => {
+                self.wake_pending[idx] = None;
+                self.wakes_executed += 1;
+                true
+            }
+            _ => {
+                self.wakes_stale_dropped += 1;
+                false
+            }
+        }
+    }
+
+    /// (honored, stale-dropped) wake pops — observability for the
+    /// at-most-one-pending-Wake invariant.
+    pub fn wake_stats(&self) -> (u64, u64) {
+        (self.wakes_executed, self.wakes_stale_dropped)
     }
 
     /// Static model placement for policies without model swapping:
@@ -416,8 +481,13 @@ impl Simulation {
             match ev.kind {
                 EventKind::Arrival(i) => self.on_arrival(&trace.requests[i]),
                 EventKind::Wake(id) => {
-                    self.wake_pending[id.0 as usize] = None;
-                    self.on_wake(id);
+                    // A stale (superseded) pop fires no on_wake, but
+                    // still falls through to maybe_schedule below — an
+                    // interval-deferred pending schedule must not be
+                    // dropped along with the event.
+                    if self.take_due_wake(id, ev.t) {
+                        self.on_wake(id);
+                    }
                 }
                 EventKind::Fail(id) => self.on_fail(id),
             }
@@ -457,6 +527,7 @@ impl Simulation {
             gid
         };
         self.group_of.insert(id, gid);
+        self.dirty_groups.insert(gid);
         self.needs_schedule = true;
         self.wake_idle();
     }
@@ -623,6 +694,9 @@ impl Simulation {
                     let (ready, displaced) = self.inst_mut(id).swap_model(model, now);
                     for seq in displaced {
                         self.queue.requeue_evicted(seq.req_id, seq.generated, id);
+                        if let Some(&g) = self.group_of.get(&seq.req_id) {
+                            self.dirty_groups.insert(g);
+                        }
                     }
                     // Warm-set update from the vq's model order (§5).
                     let order: Vec<ModelId> = {
@@ -638,6 +712,9 @@ impl Simulation {
                     let evicted = self.inst_mut(id).evict(&requests, now);
                     for seq in evicted {
                         self.queue.requeue_evicted(seq.req_id, seq.generated, id);
+                        if let Some(&g) = self.group_of.get(&seq.req_id) {
+                            self.dirty_groups.insert(g);
+                        }
                     }
                     self.needs_schedule = true;
                 }
@@ -662,6 +739,11 @@ impl Simulation {
                     };
                     if res.is_ok() {
                         self.queue.mark_running(request);
+                        // The group's earliest *unserved* member may have
+                        // changed — re-anchor it at the next pass.
+                        if let Some(&g) = self.group_of.get(&request) {
+                            self.dirty_groups.insert(g);
+                        }
                     }
                 }
             }
@@ -681,10 +763,17 @@ impl Simulation {
         self.wake_pending[idx] = None;
         let lost = self.inst_mut(id).fail();
         let lost_ids: Vec<u64> = lost.iter().map(|s| s.req_id).collect();
+        for rid in &lost_ids {
+            if let Some(&g) = self.group_of.get(rid) {
+                self.dirty_groups.insert(g);
+            }
+        }
         self.queue.fail_instance(id, &lost_ids);
         self.vqs[idx].set_order(Vec::new());
         self.views_cache.retain(|v| v.id != id);
-        // Reschedule immediately: survivors inherit the lost queue.
+        // Reschedule immediately, down the full-solve path: the view set
+        // shrank, so the incremental cache is unusable.
+        self.sched_force_full = true;
         self.needs_schedule = true;
         self.last_schedule = -1e9;
     }
@@ -707,7 +796,15 @@ impl Simulation {
             for vq in self.vqs.iter_mut() {
                 vq.remove(gid);
             }
+            // The group is gone: its scheduler-cache entry and memoized
+            // service prices go with it.
+            self.dirty_groups.remove(&gid);
+            self.removed_groups.push(gid);
+            self.scheduler.estimator.forget_group(gid);
             self.needs_schedule = true;
+        } else {
+            // Shrunk group: re-price and re-anchor at the next pass.
+            self.dirty_groups.insert(gid);
         }
     }
 
@@ -724,9 +821,17 @@ impl Simulation {
         // binding constraint is the oldest request still waiting. Without
         // this, long-lived batch groups permanently outrank fresh
         // interactive arrivals in deadline order.
+        //
+        // §Perf: only dirty groups are re-walked. The earliest unserved
+        // member can only change when a member transitions state
+        // (arrival, pull, evict, completion, failure) — and every one of
+        // those marks the group dirty — so this is equivalent to the old
+        // all-groups walk, which was O(all queued requests) per pass and
+        // capped queue scale.
         let earliest: Vec<(GroupId, f64)> = self
-            .groups
-            .values()
+            .dirty_groups
+            .iter()
+            .filter_map(|gid| self.groups.get(gid))
             .map(|g| {
                 let e = g
                     .members
@@ -766,6 +871,11 @@ impl Simulation {
             _ => self.schedule_qlm(&views),
         }
         self.views_cache = views;
+        // Every policy consumes (or rebuilds from scratch over) the full
+        // group table per pass, so the dirt is spent either way.
+        self.dirty_groups.clear();
+        self.removed_groups.clear();
+        self.sched_force_full = false;
 
         self.scheduler_wall_s += wall.elapsed().as_secs_f64();
         self.scheduler_invocations += 1;
@@ -783,19 +893,48 @@ impl Simulation {
     }
 
     /// QLM / SHEPHERD: global scheduler over request groups.
+    ///
+    /// §Perf: steady state goes down the incremental delta path — only
+    /// dirty groups are re-priced and re-inserted against the cached
+    /// plan, and clean queues keep their position (the returned orders
+    /// are a patch covering only changed instances). Cold caches,
+    /// instance failures, and dirtiness above the configured threshold
+    /// fall back to the full solve, which refreshes the cache.
     fn schedule_qlm(&mut self, views: &[InstanceView]) {
-        // §Perf: pass references — the seed cloned every group (and every
-        // member list) per scheduler invocation.
-        let group_refs: Vec<&RequestGroup> = self.groups.values().collect();
-        let assignment = self.scheduler.schedule(&group_refs, views, self.now);
-        drop(group_refs);
+        let assignment = {
+            let delta_try = if self.sched_force_full || !self.cfg.sched_incremental {
+                None
+            } else {
+                let dirty: Vec<&RequestGroup> = self
+                    .dirty_groups
+                    .iter()
+                    .filter_map(|g| self.groups.get(g))
+                    .collect();
+                let delta = SchedDelta {
+                    dirty,
+                    removed: self.removed_groups.clone(),
+                    total_groups: self.groups.len(),
+                };
+                self.scheduler.try_schedule_delta(&delta, views, self.now)
+            };
+            match delta_try {
+                Some(a) => a,
+                None => {
+                    // Full solve. Pass references — the seed cloned every
+                    // group (and every member list) per invocation.
+                    let group_refs: Vec<&RequestGroup> = self.groups.values().collect();
+                    self.scheduler.schedule(&group_refs, views, self.now)
+                }
+            }
+        };
+        let touched: Vec<InstanceId> = assignment.orders.keys().copied().collect();
         for (id, order) in assignment.orders {
             self.vqs[id.0 as usize].set_order(order);
         }
-        // Refresh warm sets from the new orderings (§5 model swapping).
+        // Refresh warm sets for the queues that changed (§5 swapping).
         if self.cfg.policy.lso().model_swapping {
-            for v in views {
-                let idx = v.id.0 as usize;
+            for id in touched {
+                let idx = id.0 as usize;
                 let order: Vec<ModelId> = {
                     let vq = &self.vqs[idx];
                     let groups = &self.groups;
@@ -951,9 +1090,13 @@ impl Simulation {
                 records.push(RequestRecord::from_request(r));
             }
         }
-        // Running-but-unfinished at horizon.
+        // Running-but-unfinished at horizon — including internally
+        // preempted sequences parked in CPU swap: those are Running in
+        // the broker but absent from both `waiting_ids()` and
+        // `running()`, and used to vanish from the records entirely
+        // (undercounting violations).
         for inst in &self.instances {
-            for s in inst.running() {
+            for s in inst.running().iter().chain(inst.swapped()) {
                 if let Some(r) = self.queue.get(s.req_id) {
                     records.push(RequestRecord::from_request(r));
                 }
@@ -1112,5 +1255,136 @@ mod tests {
         let b = run();
         assert_eq!(a.completed_count(), b.completed_count());
         assert!((a.mean_ttft() - b.mean_ttft()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stale_superseded_wake_is_dropped() {
+        let trace = small_trace(5.0, 3);
+        let cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
+        let mut sim = Simulation::new(cfg, &trace);
+        // Out-of-order wake requests: the earlier wake supersedes the
+        // pending later one, whose heap entry cannot be cancelled.
+        sim.wake(InstanceId(0), 10.0);
+        sim.wake(InstanceId(0), 5.0);
+        let mut honored = 0;
+        while let Some(Reverse(ev)) = sim.events.pop() {
+            if let EventKind::Wake(id) = ev.kind {
+                if sim.take_due_wake(id, ev.t) {
+                    honored += 1;
+                }
+            }
+        }
+        assert_eq!(honored, 1, "only the superseding wake may fire");
+        assert_eq!(sim.wake_stats(), (1, 1), "the stale t=10 pop is dropped");
+        assert_eq!(sim.wake_pending[0], None);
+    }
+
+    #[test]
+    fn finish_records_internally_preempted_sequences() {
+        // Horizon accounting with internal preemption active: force a
+        // KV-overflow preemption so a sequence parks in the instance's
+        // CPU swap (Running in the broker, absent from `waiting_ids()`
+        // and `running()`), then close the books — nothing may vanish.
+        let trace = small_trace(5.0, 4);
+        let cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
+        let mut sim = Simulation::new(cfg, &trace);
+        sim.instances[0].swap_model(ModelId(0), 0.0);
+        let t0 = sim.instances[0].busy_until();
+        let perf = sim.instances[0].perf(ModelId(0));
+        let per = (perf.token_capacity / 4).saturating_sub(64) as u32;
+        for i in 0..4usize {
+            let id = sim.queue.submit(Request::from_trace(0, &trace.requests[i]));
+            sim.queue.mark_running(id);
+            let seq = RunningSeq {
+                req_id: id,
+                model: ModelId(0),
+                prompt_tokens: per,
+                target_output: 1000,
+                generated: 0,
+                first_token_at: None,
+                arrival_s: 0.0,
+            };
+            sim.instances[0].try_admit(seq, t0).unwrap();
+        }
+        let mut now = t0;
+        let mut preempted = 0;
+        for _ in 0..300 {
+            let out = sim.instances[0].step(now);
+            now += out.dt;
+            preempted += out.preempted;
+            if preempted > 0 {
+                break;
+            }
+        }
+        assert!(preempted > 0, "expected KV-overflow preemption");
+        assert!(sim.instances[0].swapped_len() > 0);
+        let m = sim.finish();
+        assert_eq!(m.records.len(), 4, "swapped sequences must be recorded");
+    }
+
+    #[test]
+    fn baseline_orders_invariant_to_group_insertion_order() {
+        use crate::coordinator::lso::LsoConfig;
+        use crate::workload::SloClass;
+        // EDF / FCFS / round-robin plans must be functions of the group
+        // *set*, not of HashMap iteration order.
+        let trace = small_trace(5.0, 20);
+        for policy in [
+            Policy::Edf,
+            Policy::VllmFcfs,
+            Policy::qlm_with(LsoConfig::without_load_balancing()),
+        ] {
+            let run_with = |rev: bool| -> Vec<Vec<GroupId>> {
+                let cfg = SimConfig::new(fleet_a100(2), ModelCatalog::paper(), policy);
+                let mut sim = Simulation::new(cfg, &trace);
+                let mut ids: Vec<u64> = (0..20).collect();
+                if rev {
+                    ids.reverse();
+                }
+                for i in ids {
+                    let gid = GroupId(i);
+                    sim.groups.insert(
+                        gid,
+                        RequestGroup {
+                            id: gid,
+                            model: ModelId(0),
+                            class: SloClass::Interactive,
+                            slo_s: 20.0,
+                            earliest_arrival_s: (i % 7) as f64,
+                            members: VecDeque::from([i]),
+                            mega: false,
+                        },
+                    );
+                }
+                let views = sim.refresh_views();
+                match policy {
+                    Policy::Edf => sim.schedule_edf(&views),
+                    Policy::VllmFcfs => sim.schedule_fcfs(&views),
+                    _ => sim.schedule_round_robin(&views),
+                }
+                sim.views_cache = views;
+                sim.vqs
+                    .iter()
+                    .map(|vq| vq.groups.iter().copied().collect())
+                    .collect()
+            };
+            assert_eq!(run_with(false), run_with(true), "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn incremental_and_full_sched_paths_both_serve_everything() {
+        let trace = small_trace(5.0, 200);
+        let run_mode = |inc: bool| {
+            let mut cfg = SimConfig::new(fleet_a100(2), ModelCatalog::paper(), Policy::qlm());
+            cfg.sched_incremental = inc;
+            Simulation::new(cfg, &trace).run(&trace)
+        };
+        let a = run_mode(true);
+        let b = run_mode(false);
+        assert_eq!(a.completed_count(), 200, "{}", a.summary());
+        assert_eq!(b.completed_count(), 200, "{}", b.summary());
+        assert!(a.slo_attainment() > 0.9, "{}", a.summary());
+        assert!(b.slo_attainment() > 0.9, "{}", b.summary());
     }
 }

@@ -26,6 +26,9 @@ pub enum Scenario {
     MultiModel,
     /// Mixed traffic with an instance failure injected mid-run (§4).
     Failover,
+    /// Fig. 20's overhead regime as a live run: 100K+ queued requests,
+    /// mixed SLO classes across multiple models, incremental scheduler.
+    Scale,
 }
 
 /// Tunable knobs shared by every scenario.
@@ -69,6 +72,7 @@ impl Scenario {
         Scenario::MixedSlo,
         Scenario::MultiModel,
         Scenario::Failover,
+        Scenario::Scale,
     ];
 
     pub fn from_name(name: &str) -> Option<Scenario> {
@@ -78,6 +82,7 @@ impl Scenario {
             "mixed-slo" => Scenario::MixedSlo,
             "multi-model" => Scenario::MultiModel,
             "failover" => Scenario::Failover,
+            "scale" => Scenario::Scale,
             _ => return None,
         })
     }
@@ -89,6 +94,7 @@ impl Scenario {
             Scenario::MixedSlo => "mixed-slo",
             Scenario::MultiModel => "multi-model",
             Scenario::Failover => "failover",
+            Scenario::Scale => "scale",
         }
     }
 
@@ -110,6 +116,9 @@ impl Scenario {
             Scenario::Failover => {
                 "mixed traffic with one instance killed mid-run (S4 fault tolerance)"
             }
+            Scenario::Scale => {
+                "100k+ requests, mixed SLO classes, multi-model (Fig. 20 scale)"
+            }
         }
     }
 
@@ -127,7 +136,7 @@ impl Scenario {
         match self {
             // Vicuna-13B (mixed-slo) and the W_B variant set are far
             // heavier per token than Mistral-7B; give them more devices.
-            Scenario::MixedSlo | Scenario::MultiModel => 8,
+            Scenario::MixedSlo | Scenario::MultiModel | Scenario::Scale => 8,
             _ => 4,
         }
     }
@@ -142,8 +151,16 @@ impl Scenario {
             Scenario::Burst | Scenario::Diurnal => 1.5 * rate,
             // W_B: the half-rate Batch-2 stream is the long pole.
             Scenario::MultiModel => rate,
+            // Arrivals stop at ~85% of the horizon so the tail drains
+            // and the run *completes* inside it (Fig. 20 regime).
+            Scenario::Scale => 1.7 * rate,
         };
-        ((per_second * horizon_s) as usize).clamp(200, 400_000)
+        let lo = if matches!(self, Scenario::Scale) {
+            100_000
+        } else {
+            200
+        };
+        ((per_second * horizon_s) as usize).clamp(lo, 400_000)
     }
 
     /// Expand the scenario into a concrete run description.
@@ -198,6 +215,11 @@ impl Scenario {
                 fleet: fleet_mixed(k.fleet.max(2), 0.25),
                 ..base
             },
+            Scenario::Scale => ScenarioRun {
+                catalog: ModelCatalog::paper_multi_model(),
+                spec: scale_spec(k),
+                ..base
+            },
             Scenario::Failover => {
                 let fleet = fleet_a100(k.fleet.max(2));
                 // Kill the last instance a tenth into the nominal run:
@@ -212,6 +234,45 @@ impl Scenario {
                 }
             }
         }
+    }
+}
+
+/// The `scale` workload: interactive traffic on the base Mistral-7B
+/// plus two batch classes on fine-tuned variants, sized so the queue
+/// holds 100K+ requests at the default knobs — the live-run analogue of
+/// the paper's Fig. 20 overhead study. Multiple models and SLO classes
+/// keep the group table heterogeneous (many clusters per queue), which
+/// is the hard case for the incremental scheduler.
+fn scale_spec(k: &ScenarioKnobs) -> WorkloadSpec {
+    let n_i = k.requests / 2;
+    let n_b1 = k.requests / 4;
+    let n_b2 = k.requests - n_i - n_b1;
+    WorkloadSpec {
+        name: format!("scale(rate={})", k.rate),
+        streams: vec![
+            RequestClassSpec {
+                class: SloClass::Interactive,
+                models: vec![ModelId(0)],
+                arrivals: ArrivalProcess::Poisson { rate: k.rate },
+                count: n_i,
+                mega_fraction: 0.0,
+            },
+            RequestClassSpec {
+                class: SloClass::Batch1,
+                models: vec![ModelId(3)],
+                arrivals: ArrivalProcess::Poisson { rate: k.rate * 0.5 },
+                count: n_b1,
+                mega_fraction: 0.0,
+            },
+            RequestClassSpec {
+                class: SloClass::Batch2,
+                models: vec![ModelId(5)],
+                arrivals: ArrivalProcess::Poisson { rate: k.rate * 0.5 },
+                count: n_b2,
+                mega_fraction: 0.0,
+            },
+        ],
+        sampler: ShareGptSampler::default(),
     }
 }
 
@@ -289,5 +350,44 @@ mod tests {
     fn multi_model_uses_variant_catalog() {
         let run = Scenario::MultiModel.build(&ScenarioKnobs::default());
         assert!(run.catalog.models.len() >= 7);
+    }
+
+    #[test]
+    fn scale_scenario_sizes_to_100k_requests() {
+        let s = Scenario::Scale;
+        let n = s.requests_for(s.default_rate(), 7200.0);
+        assert!(n >= 100_000, "{n}");
+        // Arrivals stop well before the horizon so the tail can drain.
+        let rate = s.default_rate();
+        let span = (n as f64 / 2.0) / rate;
+        assert!(span <= 0.9 * 7200.0, "arrival span {span}");
+    }
+
+    #[test]
+    fn scale_scenario_is_mixed_slo_and_multi_model() {
+        let run = Scenario::Scale.build(&ScenarioKnobs::default());
+        let classes: std::collections::HashSet<_> =
+            run.spec.streams.iter().map(|s| s.class).collect();
+        assert!(classes.len() >= 3, "mixed SLO classes required");
+        let models: std::collections::HashSet<_> = run
+            .spec
+            .streams
+            .iter()
+            .flat_map(|s| s.models.iter().copied())
+            .collect();
+        assert!(models.len() >= 3, "multi-model required");
+        assert!(run.catalog.models.len() >= 7);
+        // Every model in the mix fits the A100 fleet.
+        for m in &models {
+            assert!(
+                crate::backend::PerfModel::try_profile(
+                    run.catalog.get(*m),
+                    crate::backend::GpuKind::A100,
+                    161.0
+                )
+                .is_some(),
+                "model {m:?} must be servable"
+            );
+        }
     }
 }
