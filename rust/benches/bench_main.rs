@@ -20,6 +20,7 @@ use qlm::backend::{
     RunningSeq,
 };
 use qlm::baselines::Policy;
+use qlm::capacity::{CapacityPlanner, PlannerConfig, TierSpec};
 use qlm::coordinator::request::Request;
 use qlm::coordinator::request_group::{GroupId, RequestGroup};
 use qlm::coordinator::rwt::{ProfileTable, RwtEstimator};
@@ -70,12 +71,13 @@ fn grp(id: u64, model: u32, n: usize, slo: f64) -> RequestGroup {
 }
 
 fn views(n: u32, catalog: &ModelCatalog) -> Vec<InstanceView> {
+    let prompt = qlm::backend::perf::PROFILE_MEAN_PROMPT_TOKENS;
     (0..n)
         .map(|i| {
             let mut perf_for = std::collections::HashMap::new();
             let mut swap_time = std::collections::HashMap::new();
             for m in catalog.ids() {
-                if let Some(p) = PerfModel::try_profile(catalog.get(m), GpuKind::A100, 161.0) {
+                if let Some(p) = PerfModel::try_profile(catalog.get(m), GpuKind::A100, prompt) {
                     swap_time.insert(m, p.swap_cpu_gpu_s);
                     perf_for.insert(m, p);
                 }
@@ -383,6 +385,107 @@ fn bench_sched_incremental() {
     );
 }
 
+/// The capacity planner's what-if search: minimal heterogeneous fleet
+/// for the paper's W_A at moderate rate — binary search over two tiers
+/// with RWT-estimator pricing per candidate.
+fn bench_capacity_plan() {
+    let spec = WorkloadSpec::w_a(ModelId(1), 20.0, 2000);
+    let planner = CapacityPlanner::from_spec(
+        &spec,
+        ModelCatalog::paper(),
+        PlannerConfig {
+            tiers: vec![
+                TierSpec {
+                    gpu: GpuKind::A100,
+                    max: 64,
+                },
+                TierSpec {
+                    gpu: GpuKind::A10,
+                    max: 32,
+                },
+            ],
+            ..Default::default()
+        },
+        21,
+    );
+    // Θ profiling happens once, outside the timed loop (as at runtime).
+    let warm = planner.plan();
+    assert!(warm.feasible, "W_A at 20 req/s must be plannable: {warm:?}");
+    assert!(warm.total_devices() >= 1);
+    bench("capacity_plan/w_a what-if (64+32 tier max)", 10, || {
+        planner.plan().total_devices() as u64
+    });
+}
+
+/// Sweep the incremental-scheduler fallback threshold: delta-pass cost
+/// vs dirty fraction against the full re-solve of the same state — the
+/// data behind `SchedulerConfig::incremental_dirty_frac`'s default.
+/// Self-validating: asserts the delta pass is still no slower than the
+/// full solve at the default threshold, so a wrong crossover fails the
+/// bench (and CI) instead of silently regressing the hot path.
+fn bench_dirty_frac_sweep() {
+    let catalog = ModelCatalog::paper_multi_model();
+    let est = RwtEstimator::new(ProfileTable::default());
+    let vs = views(10, &catalog);
+    const N_GROUPS: usize = 1562;
+    let groups: Vec<RequestGroup> = (0..N_GROUPS as u64)
+        .map(|g| grp(g, (g % 4) as u32, 256, 60.0 + (g % 7) as f64 * 300.0))
+        .collect();
+    let refs: Vec<&RequestGroup> = groups.iter().collect();
+    let full = GlobalScheduler::new(
+        SchedulerConfig {
+            solver: SolverKind::Greedy,
+            ..Default::default()
+        },
+        est.clone(),
+    );
+    let full_ms = bench("dirty_frac/full re-solve (1562 grp)", 10, || {
+        full.schedule(&refs, &vs, 0.0).stats.groups as u64
+    });
+    for frac in [0.05, 0.1, 0.25, 0.5, 0.75] {
+        let inc = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                incremental_dirty_frac: 1.0, // measure, don't fall back
+                ..Default::default()
+            },
+            est.clone(),
+        );
+        inc.schedule(&refs, &vs, 0.0);
+        let n_dirty = ((N_GROUPS as f64 * frac) as usize).max(1);
+        let mut cursor = 0usize;
+        let inc_ms = bench(
+            &format!("dirty_frac/delta at {:>2.0}% dirty", frac * 100.0),
+            10,
+            || {
+                let dirty: Vec<&RequestGroup> = (0..n_dirty)
+                    .map(|k| &groups[(cursor + k) % N_GROUPS])
+                    .collect();
+                cursor = (cursor + n_dirty) % N_GROUPS;
+                let d = SchedDelta {
+                    dirty,
+                    removed: vec![],
+                    total_groups: N_GROUPS,
+                };
+                let a = inc.try_schedule_delta(&d, &vs, 0.0).expect("delta path");
+                a.stats.dirty as u64
+            },
+        );
+        let ratio = inc_ms / full_ms.max(1e-9);
+        println!(
+            "dirty_frac {:>4.0}%: delta/full = {ratio:.2} ({n_dirty} dirty)",
+            frac * 100.0,
+        );
+        if frac <= SchedulerConfig::default().incremental_dirty_frac {
+            assert!(
+                ratio <= 1.1,
+                "delta pass slower than a full solve at {frac} dirty — \
+                 SchedulerConfig::incremental_dirty_frac's default is past the crossover"
+            );
+        }
+    }
+}
+
 fn bench_kv() {
     bench("kv_cache/alloc+append+free (1000 seqs)", 20, || {
         let mut kv = KvCache::new(500_000, 1_000_000);
@@ -513,6 +616,12 @@ fn main() {
     }
     if runs("sched_incremental") {
         bench_sched_incremental();
+    }
+    if runs("dirty_frac") {
+        bench_dirty_frac_sweep();
+    }
+    if runs("capacity_plan") {
+        bench_capacity_plan();
     }
     if runs("kv") {
         bench_kv();

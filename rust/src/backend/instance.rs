@@ -37,7 +37,7 @@ impl InstanceConfig {
             gpu,
             cpu_model_mem_gib: 320.0,
             cpu_kv_tokens: 2_000_000,
-            mean_prompt_tokens: 161.0,
+            mean_prompt_tokens: crate::backend::perf::PROFILE_MEAN_PROMPT_TOKENS,
         }
     }
 }

@@ -20,6 +20,13 @@ use crate::backend::{GpuKind, ModelSpec};
 /// (vLLM's gpu_memory_utilization default is 0.9).
 pub const GPU_MEM_UTIL: f64 = 0.9;
 
+/// Mean prompt length (tokens) the offline profiling step (§6) runs
+/// with. Every consumer of a profiled [`PerfModel`] — the engine's
+/// scheduler views, provisioning cold-start pricing, and the capacity
+/// planner's what-if pricing — must profile at the same prompt length
+/// or their Θ estimates silently diverge.
+pub const PROFILE_MEAN_PROMPT_TOKENS: f64 = 161.0;
+
 /// Achievable fraction of peak bf16 FLOPs during prefill.
 const PREFILL_EFF: f64 = 0.45;
 

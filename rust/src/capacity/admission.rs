@@ -1,0 +1,170 @@
+//! Admission control — the last resort when even the maximal fleet
+//! cannot meet a class's SLO (§9: beyond this point the paper's answer
+//! is "add GPUs"; when there are none to add, the only honest move is
+//! to shed load). Batch-class requests are refused at *submit* time —
+//! they are recorded as shed, never grouped, and never reach the global
+//! scheduler, so a hopeless backlog cannot poison `total_penalty_s` for
+//! the requests that still have a chance. Interactive traffic is never
+//! shed.
+//!
+//! The controller is also the single accounting path for *unservable*
+//! groups (`Assignment::unservable` — no instance can serve the model):
+//! the engine retires their waiting members through the same shed
+//! bookkeeping, so a request is counted exactly once no matter which
+//! path refused it.
+
+use crate::workload::SloClass;
+
+/// Admission-control knobs (wired from `SimConfig`).
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Master switch for submit-time shedding. Unservable-group
+    /// accounting is always on — a group no instance can serve has no
+    /// other exit.
+    pub enabled: bool,
+    /// Start shedding a batch class when its predicted drain time
+    /// exceeds `shed_frac` × its SLO while the fleet cannot grow.
+    pub shed_frac: f64,
+    /// Stop shedding once the drain time falls back below
+    /// `resume_frac` × SLO (hysteresis gap keeps the gate from
+    /// chattering).
+    pub resume_frac: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            enabled: false,
+            shed_frac: 2.0,
+            resume_frac: 1.0,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    pub fn enabled() -> Self {
+        AdmissionConfig {
+            enabled: true,
+            ..Default::default()
+        }
+    }
+}
+
+/// Per-class shed gate + shared shed accounting.
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    pub cfg: AdmissionConfig,
+    /// Gate per SLO class (indexed by [`SloClass::index`]).
+    shedding: [bool; SloClass::ALL.len()],
+    /// Requests refused at submit time.
+    pub shed_submits: u64,
+    /// Requests retired because their group was unservable.
+    pub shed_unservable: u64,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        AdmissionController {
+            cfg,
+            shedding: [false; SloClass::ALL.len()],
+            shed_submits: 0,
+            shed_unservable: 0,
+        }
+    }
+
+    /// Re-evaluate the gates from this pass's per-class drain estimates.
+    /// `fleet_maxed` is true when the fleet cannot grow (no autoscaler,
+    /// or the autoscaler is at `max_instances`) — shedding while
+    /// capacity could still be added would throw work away early.
+    pub fn update(&mut self, drains: &[(SloClass, f64)], fleet_maxed: bool) {
+        if !self.cfg.enabled {
+            return;
+        }
+        for &(class, drain_s) in drains {
+            if class == SloClass::Interactive {
+                continue; // interactive traffic is never shed
+            }
+            let slo = class.slo_s();
+            let gate = &mut self.shedding[class.index()];
+            if fleet_maxed && drain_s > self.cfg.shed_frac * slo {
+                *gate = true;
+            } else if drain_s < self.cfg.resume_frac * slo {
+                *gate = false;
+            }
+        }
+    }
+
+    /// Should a request of `class` be refused right now?
+    pub fn should_shed(&self, class: SloClass) -> bool {
+        self.cfg.enabled && self.shedding[class.index()]
+    }
+
+    pub fn note_shed_submit(&mut self) {
+        self.shed_submits += 1;
+    }
+
+    pub fn note_shed_unservable(&mut self, n: u64) {
+        self.shed_unservable += n;
+    }
+
+    pub fn total_shed(&self) -> u64 {
+        self.shed_submits + self.shed_unservable
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl() -> AdmissionController {
+        AdmissionController::new(AdmissionConfig::enabled())
+    }
+
+    #[test]
+    fn disabled_controller_never_sheds() {
+        let mut c = AdmissionController::new(AdmissionConfig::default());
+        c.update(&[(SloClass::Batch1, 1e9)], true);
+        assert!(!c.should_shed(SloClass::Batch1));
+    }
+
+    #[test]
+    fn sheds_batch_class_only_when_fleet_maxed() {
+        let mut c = ctl();
+        let hopeless = [(SloClass::Batch1, 10_000.0)]; // ≫ 2 × 60 s
+        c.update(&hopeless, false);
+        assert!(!c.should_shed(SloClass::Batch1), "fleet can still grow");
+        c.update(&hopeless, true);
+        assert!(c.should_shed(SloClass::Batch1));
+        assert!(!c.should_shed(SloClass::Batch2), "other classes untouched");
+    }
+
+    #[test]
+    fn interactive_is_never_shed() {
+        let mut c = ctl();
+        c.update(&[(SloClass::Interactive, 1e9)], true);
+        assert!(!c.should_shed(SloClass::Interactive));
+    }
+
+    #[test]
+    fn hysteresis_gap_between_shed_and_resume() {
+        let mut c = ctl();
+        c.update(&[(SloClass::Batch2, 3.0 * 3600.0)], true);
+        assert!(c.should_shed(SloClass::Batch2));
+        // Between resume (1×) and shed (2×) thresholds: gate holds.
+        c.update(&[(SloClass::Batch2, 1.5 * 3600.0)], true);
+        assert!(c.should_shed(SloClass::Batch2));
+        // Below the resume threshold: gate opens again.
+        c.update(&[(SloClass::Batch2, 0.5 * 3600.0)], true);
+        assert!(!c.should_shed(SloClass::Batch2));
+    }
+
+    #[test]
+    fn shed_accounting_sums() {
+        let mut c = ctl();
+        c.note_shed_submit();
+        c.note_shed_submit();
+        c.note_shed_unservable(3);
+        assert_eq!(c.total_shed(), 5);
+        assert_eq!((c.shed_submits, c.shed_unservable), (2, 3));
+    }
+}

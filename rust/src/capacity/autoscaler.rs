@@ -1,0 +1,352 @@
+//! Runtime autoscaler — a local serving operation that turns the RWT
+//! estimator's pressure signal into fleet-size actions. The engine
+//! evaluates it once per global-scheduler pass: per-class backlog is
+//! converted to a predicted drain time (pending output tokens over the
+//! fleet's aggregate Θ, classes served in deadline order), and the
+//! autoscaler decides — with hysteresis on both edges plus a cooldown —
+//! whether to provision a new instance or drain one.
+//!
+//! Scale-up pays a realistic cold start (weight staging priced by the
+//! perf model; the engine wires the delay), so the breach streak keeps
+//! one transient spike from over-provisioning. Scale-down only ever
+//! *drains*: the victim stops receiving work and leaves once its
+//! running batch completes — no mid-flight kills, no lost requests.
+
+use crate::backend::{GpuKind, ModelId};
+use crate::workload::SloClass;
+
+/// Autoscaler knobs (hysteresis lives here, wired from `SimConfig`).
+#[derive(Debug, Clone, Copy)]
+pub struct AutoscaleConfig {
+    /// Never drain below this many active instances.
+    pub min_instances: u32,
+    /// Never provision beyond this many (active + warming).
+    pub max_instances: u32,
+    /// Device tier provisioned instances use.
+    pub gpu: GpuKind,
+    /// Scale up when some class's predicted drain time exceeds
+    /// `up_frac` × its SLO for `breach_passes` consecutive evaluations.
+    pub up_frac: f64,
+    /// Scale down when *every* class's drain time sits below
+    /// `down_frac` × its SLO for `calm_passes` evaluations and an
+    /// instance is idle.
+    pub down_frac: f64,
+    pub breach_passes: u32,
+    pub calm_passes: u32,
+    /// Minimum simulated seconds between any two scale actions.
+    pub cooldown_s: f64,
+    /// Instances provisioned per scale-up action.
+    pub step: u32,
+}
+
+impl AutoscaleConfig {
+    pub fn bounded(min_instances: u32, max_instances: u32, gpu: GpuKind) -> Self {
+        AutoscaleConfig {
+            min_instances: min_instances.max(1),
+            max_instances: max_instances.max(min_instances.max(1)),
+            gpu,
+            up_frac: 0.5,
+            down_frac: 0.1,
+            breach_passes: 3,
+            calm_passes: 40,
+            cooldown_s: 30.0,
+            step: 1,
+        }
+    }
+}
+
+/// One SLO class's backlog pressure, computed by the engine each pass.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassPressure {
+    pub class: SloClass,
+    /// Waiting (+ evicted) requests of this class.
+    pub waiting: usize,
+    /// Predicted seconds to drain this class's pending output tokens —
+    /// including every tighter-deadline class served ahead of it — at
+    /// the fleet's aggregate Θ.
+    pub drain_s: f64,
+    /// The class's most-backlogged model (scale-up warms this one).
+    pub hottest_model: Option<ModelId>,
+}
+
+/// What the engine should do this pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScaleDecision {
+    /// Provision `count` instances, pre-staging `model`'s weights.
+    Up { count: u32, model: ModelId },
+    /// Drain one instance (no mid-flight kills).
+    Down,
+    Hold,
+}
+
+/// The autoscaler state machine.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    pub cfg: AutoscaleConfig,
+    breach_streak: u32,
+    calm_streak: u32,
+    last_action_t: f64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        Autoscaler {
+            cfg,
+            breach_streak: 0,
+            calm_streak: 0,
+            last_action_t: f64::NEG_INFINITY,
+            scale_ups: 0,
+            scale_downs: 0,
+        }
+    }
+
+    /// Evaluate one scheduler pass. `active` counts alive non-draining
+    /// instances; `warming` counts provisioned-but-not-ready ones (they
+    /// gate further scale-ups so a cold-start window isn't treated as
+    /// persistent under-capacity); `draining` counts still-powered
+    /// instances finishing their last batch — they occupy the
+    /// `max_instances` budget until they actually leave, so the
+    /// powered-on fleet never exceeds the configured cap.
+    pub fn decide(
+        &mut self,
+        now: f64,
+        pressures: &[ClassPressure],
+        active: u32,
+        warming: u32,
+        draining: u32,
+        any_idle: bool,
+    ) -> ScaleDecision {
+        let breached = pressures
+            .iter()
+            .any(|p| p.waiting > 0 && p.drain_s > p.class.slo_s() * self.cfg.up_frac);
+        let calm = pressures.iter().all(|p| p.drain_s < p.class.slo_s() * self.cfg.down_frac);
+        if breached {
+            self.breach_streak += 1;
+            self.calm_streak = 0;
+        } else {
+            self.breach_streak = 0;
+            if calm {
+                self.calm_streak += 1;
+            } else {
+                self.calm_streak = 0;
+            }
+        }
+        if now - self.last_action_t < self.cfg.cooldown_s {
+            return ScaleDecision::Hold;
+        }
+        let powered = active + warming + draining;
+        if self.breach_streak >= self.cfg.breach_passes
+            && warming == 0
+            && powered < self.cfg.max_instances
+        {
+            // Warm the model of the tightest breaching class *with a
+            // tier-hostable backlog* — `drain_s` is cumulative down the
+            // deadline order, so a max-by-drain pick would always name
+            // the loosest class; and a class whose backlog cannot fit
+            // the provisioned tier (hottest_model == None) must not
+            // block relief for one that can. Only when *no* backlogged
+            // class has a hostable model does provisioning hold —
+            // capacity cannot help, and admission control takes over.
+            let model = pressures
+                .iter()
+                .filter(|p| p.waiting > 0 && p.hottest_model.is_some())
+                .find(|p| p.drain_s > p.class.slo_s() * self.cfg.up_frac)
+                .or_else(|| {
+                    pressures
+                        .iter()
+                        .find(|p| p.waiting > 0 && p.hottest_model.is_some())
+                })
+                .and_then(|p| p.hottest_model);
+            if let Some(model) = model {
+                let count = self.cfg.step.min(self.cfg.max_instances - powered);
+                self.breach_streak = 0;
+                self.last_action_t = now;
+                self.scale_ups += count as u64;
+                return ScaleDecision::Up { count, model };
+            }
+        }
+        if self.calm_streak >= self.cfg.calm_passes
+            && any_idle
+            && warming == 0
+            && draining == 0
+            && active > self.cfg.min_instances
+        {
+            self.calm_streak = 0;
+            self.last_action_t = now;
+            self.scale_downs += 1;
+            return ScaleDecision::Down;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pressure(class: SloClass, waiting: usize, drain_s: f64) -> ClassPressure {
+        ClassPressure {
+            class,
+            waiting,
+            drain_s,
+            hottest_model: Some(ModelId(3)),
+        }
+    }
+
+    fn hot() -> Vec<ClassPressure> {
+        vec![pressure(SloClass::Interactive, 50, 15.0)] // 15 > 0.5 × 20
+    }
+
+    fn cold() -> Vec<ClassPressure> {
+        vec![pressure(SloClass::Interactive, 0, 0.0)]
+    }
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            breach_passes: 3,
+            calm_passes: 2,
+            cooldown_s: 10.0,
+            ..AutoscaleConfig::bounded(1, 4, GpuKind::A100)
+        }
+    }
+
+    #[test]
+    fn scale_up_needs_consecutive_breaches() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.decide(0.0, &hot(), 1, 0, 0, false), ScaleDecision::Hold);
+        assert_eq!(a.decide(1.0, &hot(), 1, 0, 0, false), ScaleDecision::Hold);
+        match a.decide(2.0, &hot(), 1, 0, 0, false) {
+            ScaleDecision::Up { count: 1, model } => assert_eq!(model, ModelId(3)),
+            other => panic!("expected Up, got {other:?}"),
+        }
+        assert_eq!(a.scale_ups, 1);
+    }
+
+    #[test]
+    fn breach_streak_resets_on_quiet_pass() {
+        let mut a = Autoscaler::new(cfg());
+        a.decide(0.0, &hot(), 1, 0, 0, false);
+        a.decide(1.0, &hot(), 1, 0, 0, false);
+        a.decide(2.0, &cold(), 1, 0, 0, false); // resets the streak
+        assert_eq!(a.decide(3.0, &hot(), 1, 0, 0, false), ScaleDecision::Hold);
+        assert_eq!(a.decide(4.0, &hot(), 1, 0, 0, false), ScaleDecision::Hold);
+        assert!(matches!(a.decide(5.0, &hot(), 1, 0, 0, false), ScaleDecision::Up { .. }));
+    }
+
+    #[test]
+    fn cooldown_blocks_back_to_back_actions() {
+        let mut a = Autoscaler::new(cfg());
+        for t in 0..3 {
+            a.decide(t as f64, &hot(), 1, 0, 0, false);
+        }
+        assert_eq!(a.scale_ups, 1);
+        // Immediately hot again: cooldown (10 s) holds the line.
+        for t in 3..10 {
+            assert_eq!(a.decide(t as f64, &hot(), 2, 0, 0, false), ScaleDecision::Hold);
+        }
+        // Past the cooldown the accumulated streak may fire again.
+        assert!(matches!(a.decide(13.0, &hot(), 2, 0, 0, false), ScaleDecision::Up { .. }));
+    }
+
+    #[test]
+    fn warming_instances_gate_scale_up() {
+        let mut a = Autoscaler::new(cfg());
+        for t in 0..10 {
+            assert_eq!(
+                a.decide(t as f64, &hot(), 1, 1, 0, false),
+                ScaleDecision::Hold,
+                "a warming instance must absorb the breach first"
+            );
+        }
+    }
+
+    #[test]
+    fn max_instances_caps_growth() {
+        let mut a = Autoscaler::new(cfg());
+        for t in 0..10 {
+            assert_eq!(a.decide(t as f64, &hot(), 4, 0, 0, false), ScaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn scale_up_warms_the_tightest_breaching_class() {
+        // drain_s is cumulative, so Batch2 always carries the largest
+        // drain; the pick must still follow the class actually past its
+        // own threshold (interactive here: 15 > 0.5×20; batch-2's 500 is
+        // well under 0.5×3600).
+        let mut a = Autoscaler::new(cfg());
+        let p = vec![
+            ClassPressure {
+                class: SloClass::Interactive,
+                waiting: 50,
+                drain_s: 15.0,
+                hottest_model: Some(ModelId(0)),
+            },
+            ClassPressure {
+                class: SloClass::Batch2,
+                waiting: 10,
+                drain_s: 500.0,
+                hottest_model: Some(ModelId(5)),
+            },
+        ];
+        a.decide(0.0, &p, 1, 0, 0, false);
+        a.decide(1.0, &p, 1, 0, 0, false);
+        match a.decide(2.0, &p, 1, 0, 0, false) {
+            ScaleDecision::Up { model, .. } => assert_eq!(model, ModelId(0)),
+            other => panic!("expected Up, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn no_tier_hostable_backlog_means_hold() {
+        // hottest_model is None when nothing backlogged fits the
+        // provisionable tier: capacity cannot relieve the breach, so the
+        // autoscaler must not burn devices on it.
+        let mut a = Autoscaler::new(cfg());
+        let p = vec![ClassPressure {
+            class: SloClass::Interactive,
+            waiting: 50,
+            drain_s: 15.0,
+            hottest_model: None,
+        }];
+        for t in 0..10 {
+            assert_eq!(a.decide(t as f64, &p, 1, 0, 0, false), ScaleDecision::Hold);
+        }
+        assert_eq!(a.scale_ups, 0);
+    }
+
+    #[test]
+    fn draining_instances_occupy_the_cap_and_block_further_drains() {
+        // 3 active + 1 draining = 4 powered: a new breach must not push
+        // the powered-on fleet past max_instances.
+        let mut a = Autoscaler::new(cfg());
+        for t in 0..10 {
+            assert_eq!(a.decide(t as f64, &hot(), 3, 0, 1, false), ScaleDecision::Hold);
+        }
+        // And one drain at a time: calm with a drain in flight holds.
+        let mut b = Autoscaler::new(cfg());
+        for t in 0..10 {
+            assert_eq!(b.decide(t as f64, &cold(), 3, 0, 1, true), ScaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn scale_down_needs_calm_idle_and_floor() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.decide(0.0, &cold(), 2, 0, 0, true), ScaleDecision::Hold);
+        assert_eq!(a.decide(1.0, &cold(), 2, 0, 0, true), ScaleDecision::Down);
+        assert_eq!(a.scale_downs, 1);
+        // At the floor: never drain.
+        let mut b = Autoscaler::new(cfg());
+        for t in 0..10 {
+            assert_eq!(b.decide(t as f64, &cold(), 1, 0, 0, true), ScaleDecision::Hold);
+        }
+        // No idle instance: hold even when calm.
+        let mut c = Autoscaler::new(cfg());
+        for t in 0..10 {
+            assert_eq!(c.decide(t as f64, &cold(), 3, 0, 0, false), ScaleDecision::Hold);
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Capacity planning and runtime autoscaling — the provisioning side of
+//! QLM's RWT estimator (§Estimator; Fig. 1's over/under-provisioning
+//! discussion: "how many devices does this workload need to meet its
+//! SLOs?").
+//!
+//! Three cooperating pieces:
+//!
+//! * [`CapacityPlanner`] — an *offline what-if engine*: given a
+//!   [`crate::workload::WorkloadSpec`] and a heterogeneous device
+//!   catalog, it prices the workload with the RWT estimator against
+//!   candidate fleets (no live instances) and binary-searches the
+//!   minimal per-tier device counts that keep every SLO class's
+//!   predicted waiting under its deadline. Drives the `qlm plan` CLI.
+//! * [`Autoscaler`] — a *runtime* local serving operation: each
+//!   scheduler pass the engine feeds it per-class backlog pressure; it
+//!   decides, with hysteresis, whether to provision a new instance
+//!   (paying a realistic cold-start: weight staging priced by
+//!   [`crate::backend::PerfModel`]) or to drain one (no mid-flight
+//!   kills — the instance finishes its running batch, then leaves).
+//! * [`AdmissionController`] — the last resort: when even the maximal
+//!   fleet cannot meet a class's SLO, batch-class requests are shed at
+//!   submit time instead of poisoning the scheduler's penalty signal,
+//!   and groups no instance can serve are retired through the same
+//!   accounting path.
+
+pub mod admission;
+pub mod autoscaler;
+pub mod planner;
+
+pub use admission::{AdmissionConfig, AdmissionController};
+pub use autoscaler::{AutoscaleConfig, Autoscaler, ClassPressure, ScaleDecision};
+pub use planner::{CapacityPlan, CapacityPlanner, ClassPrediction, PlannerConfig, TierSpec};

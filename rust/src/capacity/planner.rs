@@ -1,0 +1,655 @@
+//! Offline capacity planner: "how many devices does this workload need
+//! to meet its SLOs?" (QLM §Estimator — the RWT estimator is pitched
+//! for exactly this what-if question, not just queue ordering).
+//!
+//! The planner never builds live instances. It prices each (model, SLO
+//! class) demand stream with the same machinery the runtime uses — the
+//! profiled Θ from [`ThetaCache`] and the [`RwtEstimator`]'s service
+//! model — and asks, for a candidate per-tier device count, whether the
+//! fleet can (a) sustain the offered token load and (b) keep each
+//! class's predicted completion inside its SLO. Both conditions are
+//! monotone in every tier count, so the minimal fleet falls out of a
+//! per-tier binary search (coordinate descent, least-preferred tier
+//! shrunk first so the preferred tier absorbs the workload).
+//!
+//! Sizing model, per demand stream `d` on model `m` and tier `t`:
+//!
+//! * service seconds per request: `s_d = P(m,t) + μ_out(d) / Θ(m,t)` —
+//!   prefill is additive per request, decode is the request's share of
+//!   the batched throughput (Appendix A.1);
+//! * device-time load: `L_m(t) = Σ_d rate_eff(d) · s_d`, where
+//!   latency-bound classes (SLO ≤ `peak_slo_cutoff_s`) are sized at
+//!   their peak arrival rate and relaxed classes at their mean;
+//! * a device sustains `utilization` effective device-seconds per
+//!   second (scheduling gaps, swap stalls, batch ramp).
+//!
+//! The per-class check then walks a synthetic per-device virtual queue
+//! (classes in deadline order, one SLO-window of sized-rate arrivals
+//! each) through [`RwtEstimator::estimate_queue`] and compares the mean
+//! completion against each deadline — the same signal the global
+//! scheduler's penalty acts on. (The estimator's *bound* adds a
+//! max-output decode term that is per-request conservative; charging it
+//! to whole planning windows would reject every fleet.)
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+
+use crate::backend::perf::PROFILE_MEAN_PROMPT_TOKENS;
+use crate::backend::{GpuKind, ModelCatalog, ModelId, PerfModel};
+use crate::coordinator::request_group::{GroupId, RequestGroup};
+use crate::coordinator::rwt::{ProfileTable, RwtEstimator, WorkloadProfile};
+use crate::sim::ThetaCache;
+use crate::workload::{SloClass, Trace, WorkloadSpec};
+
+/// One device tier available to the planner.
+#[derive(Debug, Clone, Copy)]
+pub struct TierSpec {
+    pub gpu: GpuKind,
+    /// Maximum devices of this tier the operator can provision.
+    pub max: u32,
+}
+
+/// Planner knobs.
+#[derive(Debug, Clone)]
+pub struct PlannerConfig {
+    /// Device tiers in *preference order* (most preferred first); the
+    /// planner shrinks the least-preferred tier's count first.
+    pub tiers: Vec<TierSpec>,
+    /// Effective fraction of profiled Θ a device sustains end to end.
+    pub utilization: f64,
+    /// Classes with SLO at or below this are sized at peak arrival
+    /// rate; relaxed classes average over the arrival process.
+    pub peak_slo_cutoff_s: f64,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            tiers: vec![TierSpec {
+                gpu: GpuKind::A100,
+                max: 64,
+            }],
+            utilization: 0.85,
+            peak_slo_cutoff_s: 120.0,
+        }
+    }
+}
+
+/// One demand stream: a (model, class, mega) slice of the workload.
+#[derive(Debug, Clone, Copy)]
+struct ClassDemand {
+    model: ModelId,
+    class: SloClass,
+    mega: bool,
+    mean_rate: f64,
+    peak_rate: f64,
+    profile: WorkloadProfile,
+}
+
+impl ClassDemand {
+    /// The rate the planner sizes for: peak for latency-bound classes.
+    fn rate_eff(&self, cutoff_s: f64) -> f64 {
+        if self.class.slo_s() <= cutoff_s {
+            self.peak_rate
+        } else {
+            self.mean_rate
+        }
+    }
+}
+
+/// Devices granted to one model, by tier (parallel to `cfg.tiers`).
+#[derive(Debug, Clone)]
+pub struct ModelAllocation {
+    pub model: ModelId,
+    pub per_tier: Vec<u32>,
+}
+
+impl ModelAllocation {
+    pub fn total(&self) -> u32 {
+        self.per_tier.iter().sum()
+    }
+}
+
+/// Predicted outcome for one (model, class) demand under the plan.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassPrediction {
+    pub model: ModelId,
+    pub class: SloClass,
+    pub mega: bool,
+    /// The sizing rate (req/s) this class was planned at.
+    pub rate: f64,
+    /// Mean predicted completion of one SLO-window of arrivals
+    /// (infinite when the model cannot be placed at all).
+    pub predicted_s: f64,
+    pub slo_s: f64,
+    /// Prediction within the deadline?
+    pub ok: bool,
+}
+
+/// Planner output: per-tier counts + per-model allocation + per-class
+/// predicted attainment.
+#[derive(Debug, Clone)]
+pub struct CapacityPlan {
+    /// (tier, recommended count), parallel to `PlannerConfig::tiers`.
+    pub tiers: Vec<(GpuKind, u32)>,
+    /// Every demand placed and every class predicted inside its SLO.
+    pub feasible: bool,
+    pub allocations: Vec<ModelAllocation>,
+    /// Models no allowed tier can host or absorb (admission control /
+    /// catalog change territory, §9).
+    pub unplaced: Vec<ModelId>,
+    pub classes: Vec<ClassPrediction>,
+}
+
+impl CapacityPlan {
+    pub fn total_devices(&self) -> u32 {
+        self.tiers.iter().map(|&(_, n)| n).sum()
+    }
+
+    pub fn count(&self, gpu: GpuKind) -> u32 {
+        self.tiers
+            .iter()
+            .filter(|&&(g, _)| g == gpu)
+            .map(|&(_, n)| n)
+            .sum()
+    }
+}
+
+/// Greedy placement of per-model loads onto a candidate fleet.
+#[derive(Debug, Clone)]
+struct Placement {
+    allocations: Vec<ModelAllocation>,
+    unplaced: Vec<ModelId>,
+}
+
+/// The offline what-if engine.
+#[derive(Debug)]
+pub struct CapacityPlanner {
+    catalog: ModelCatalog,
+    cfg: PlannerConfig,
+    demands: Vec<ClassDemand>,
+    estimator: RwtEstimator,
+    /// Profiled Θ per (gpu, model) — the same cache the simulator's
+    /// scheduler views use, so plan and run price service identically.
+    thetas: RefCell<ThetaCache>,
+}
+
+impl CapacityPlanner {
+    /// Derive demand streams from a workload spec: arrival moments from
+    /// the process definition, token moments from workload profiling
+    /// over a generated trace (§6 Offline Profiling — the trace stands
+    /// in for the request history dataset).
+    pub fn from_spec(
+        spec: &WorkloadSpec,
+        catalog: ModelCatalog,
+        cfg: PlannerConfig,
+        seed: u64,
+    ) -> Self {
+        let trace = Trace::generate(spec, seed);
+        let estimator = RwtEstimator::new(ProfileTable::from_trace(&trace));
+        let mut demands = Vec::new();
+        for s in &spec.streams {
+            if s.count == 0 {
+                continue;
+            }
+            // `Dump` has no finite rate: size it so the standing queue
+            // of `count` requests drains within the stream's own SLO —
+            // the deadline the dump is judged by.
+            let dump_rate = s.count as f64 / s.class.slo_s().max(1.0);
+            let mean = s.arrivals.mean_rate().unwrap_or(dump_rate);
+            let peak = s.arrivals.peak_rate().unwrap_or(mean).max(mean);
+            let share = 1.0 / s.models.len().max(1) as f64;
+            for &m in &s.models {
+                for (mega, frac) in [(false, 1.0 - s.mega_fraction), (true, s.mega_fraction)] {
+                    if frac <= 1e-12 {
+                        continue;
+                    }
+                    demands.push(ClassDemand {
+                        model: m,
+                        class: s.class,
+                        mega,
+                        mean_rate: mean * share * frac,
+                        peak_rate: peak * share * frac,
+                        profile: estimator.profiles.get(m, s.class, mega),
+                    });
+                }
+            }
+        }
+        CapacityPlanner {
+            catalog,
+            cfg,
+            demands,
+            estimator,
+            thetas: RefCell::new(ThetaCache::new()),
+        }
+    }
+
+    pub fn config(&self) -> &PlannerConfig {
+        &self.cfg
+    }
+
+    /// Profiled perf for (tier, model) with measured Θ attached; `None`
+    /// when the model does not fit the tier.
+    fn perf(&self, gpu: GpuKind, model: ModelId) -> Option<PerfModel> {
+        self.thetas
+            .borrow_mut()
+            .perf(gpu, model, &self.catalog, PROFILE_MEAN_PROMPT_TOKENS)
+    }
+
+    /// Mean service seconds one request of `d` consumes on `perf`.
+    fn service_s(&self, d: &ClassDemand, perf: &PerfModel) -> f64 {
+        perf.prefill_s + d.profile.mu_out / self.estimator.throughput(perf, &d.profile)
+    }
+
+    /// Device-time load (device-seconds per second) model `m` offers if
+    /// served entirely on tier `gpu`; `None` when it can't run there.
+    fn model_load(&self, m: ModelId, gpu: GpuKind) -> Option<f64> {
+        let perf = self.perf(gpu, m)?;
+        Some(
+            self.demands
+                .iter()
+                .filter(|d| d.model == m)
+                .map(|d| d.rate_eff(self.cfg.peak_slo_cutoff_s) * self.service_s(d, &perf))
+                .sum(),
+        )
+    }
+
+    /// Models carrying demand, most-constrained first (fewest compatible
+    /// tiers, then heaviest preferred-tier load) so scarce tiers go to
+    /// the models that have no alternative.
+    fn demand_models(&self) -> Vec<ModelId> {
+        let mut models: Vec<ModelId> = self.demands.iter().map(|d| d.model).collect();
+        models.sort_unstable();
+        models.dedup();
+        let key = |&m: &ModelId| {
+            let compat = self
+                .cfg
+                .tiers
+                .iter()
+                .filter(|t| self.perf(t.gpu, m).is_some())
+                .count();
+            let load = self
+                .cfg
+                .tiers
+                .iter()
+                .find_map(|t| self.model_load(m, t.gpu))
+                .unwrap_or(0.0);
+            (compat, load, m)
+        };
+        models.sort_by(|a, b| {
+            let (ca, la, ia) = key(a);
+            let (cb, lb, ib) = key(b);
+            ca.cmp(&cb)
+                .then(lb.partial_cmp(&la).unwrap())
+                .then(ia.cmp(&ib))
+        });
+        models
+    }
+
+    /// Greedily place every model's load onto `counts` devices per tier
+    /// (tier preference order). A model may straddle tiers; whatever
+    /// fraction cannot be absorbed leaves the model in `unplaced`.
+    fn place(&self, counts: &[u32]) -> Placement {
+        let util = self.cfg.utilization.max(1e-6);
+        let mut free: Vec<u32> = counts.to_vec();
+        let mut allocations = Vec::new();
+        let mut unplaced = Vec::new();
+        for m in self.demand_models() {
+            let mut remaining = 1.0_f64; // fraction of the model's load unserved
+            let mut per_tier = vec![0u32; self.cfg.tiers.len()];
+            for (t, tier) in self.cfg.tiers.iter().enumerate() {
+                if remaining <= 1e-9 {
+                    break;
+                }
+                let Some(load) = self.model_load(m, tier.gpu) else {
+                    continue;
+                };
+                if load <= 1e-12 {
+                    remaining = 0.0;
+                    break;
+                }
+                let want = (remaining * load / util - 1e-9).ceil().max(0.0) as u32;
+                let take = want.min(free[t]);
+                if take == 0 {
+                    continue;
+                }
+                free[t] -= take;
+                per_tier[t] += take;
+                remaining -= take as f64 * util / load;
+            }
+            if remaining > 1e-9 {
+                unplaced.push(m);
+            }
+            if per_tier.iter().any(|&k| k > 0) {
+                allocations.push(ModelAllocation { model: m, per_tier });
+            }
+        }
+        Placement {
+            allocations,
+            unplaced,
+        }
+    }
+
+    /// The tier holding most of an allocation's devices (ties break
+    /// toward the preferred tier) — its perf represents the model.
+    fn representative_tier(&self, alloc: &ModelAllocation) -> GpuKind {
+        let mut best_t = 0usize;
+        let mut best_k = 0u32;
+        for (t, &k) in alloc.per_tier.iter().enumerate() {
+            if k > best_k {
+                best_k = k;
+                best_t = t;
+            }
+        }
+        self.cfg.tiers[best_t].gpu
+    }
+
+    /// Per-class predictions for a placement: a synthetic per-device
+    /// virtual queue (deadline order, one SLO-window of sized-rate
+    /// arrivals per class) priced by the RWT estimator. Returns the
+    /// rows plus whether every placed class meets its deadline.
+    fn predict(&self, placement: &Placement) -> (Vec<ClassPrediction>, bool) {
+        let mut classes = Vec::new();
+        let mut all_ok = true;
+        for alloc in &placement.allocations {
+            let n = alloc.total().max(1);
+            let Some(perf) = self.perf(self.representative_tier(alloc), alloc.model) else {
+                continue;
+            };
+            let mut ds: Vec<&ClassDemand> = self
+                .demands
+                .iter()
+                .filter(|d| d.model == alloc.model)
+                .collect();
+            ds.sort_by(|a, b| a.class.cmp(&b.class).then(a.mega.cmp(&b.mega)));
+            let groups: Vec<RequestGroup> = ds
+                .iter()
+                .enumerate()
+                .map(|(i, d)| {
+                    let rate = d.rate_eff(self.cfg.peak_slo_cutoff_s);
+                    let len = ((rate * d.class.slo_s() / n as f64).ceil() as usize).max(1);
+                    RequestGroup {
+                        id: GroupId(i as u64),
+                        model: d.model,
+                        class: d.class,
+                        slo_s: d.class.slo_s(),
+                        earliest_arrival_s: 0.0,
+                        members: VecDeque::from_iter(0..len as u64),
+                        mega: d.mega,
+                    }
+                })
+                .collect();
+            let refs: Vec<&RequestGroup> = groups.iter().collect();
+            let est = self.estimator.estimate_queue(&refs, &perf, Some(alloc.model), |_| 0.0);
+            for ((d, g), e) in ds.iter().zip(&groups).zip(&est) {
+                let ok = e.completion_mean_s <= g.slo_s;
+                all_ok &= ok;
+                classes.push(ClassPrediction {
+                    model: d.model,
+                    class: d.class,
+                    mega: d.mega,
+                    rate: d.rate_eff(self.cfg.peak_slo_cutoff_s),
+                    predicted_s: e.completion_mean_s,
+                    slo_s: g.slo_s,
+                    ok,
+                });
+            }
+        }
+        for &m in &placement.unplaced {
+            for d in self.demands.iter().filter(|d| d.model == m) {
+                all_ok = false;
+                classes.push(ClassPrediction {
+                    model: d.model,
+                    class: d.class,
+                    mega: d.mega,
+                    rate: d.rate_eff(self.cfg.peak_slo_cutoff_s),
+                    predicted_s: f64::INFINITY,
+                    slo_s: d.class.slo_s(),
+                    ok: false,
+                });
+            }
+        }
+        (classes, all_ok)
+    }
+
+    /// Can `counts` devices per tier absorb the load *and* keep every
+    /// class's predicted completion inside its SLO? Monotone in each
+    /// count: more devices only shrink per-device backlog windows.
+    fn feasible(&self, counts: &[u32]) -> bool {
+        let placement = self.place(counts);
+        if !placement.unplaced.is_empty() {
+            return false;
+        }
+        self.predict(&placement).1
+    }
+
+    /// Minimal count for tier `t` holding every other tier at `counts`
+    /// (feasibility is monotone in each coordinate, so binary search).
+    fn min_count_for_tier(&self, counts: &[u32], t: usize) -> u32 {
+        let feas = |c: u32| {
+            let mut v = counts.to_vec();
+            v[t] = c;
+            self.feasible(&v)
+        };
+        if feas(0) {
+            return 0;
+        }
+        let (mut lo, mut hi) = (0u32, counts[t]);
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            if feas(mid) {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        hi
+    }
+
+    /// Binary-search the minimal fleet (per tier) that absorbs the
+    /// workload, then report predicted per-class attainment on it.
+    pub fn plan(&self) -> CapacityPlan {
+        let max: Vec<u32> = self.cfg.tiers.iter().map(|t| t.max).collect();
+        if !self.feasible(&max) {
+            // Even the maximal fleet cannot meet every SLO: report it
+            // as-is — `qlm plan` points the operator at admission
+            // control (shed batch classes) or a catalog change.
+            return self.render_plan(max);
+        }
+        let mut counts = max;
+        loop {
+            let before = counts.clone();
+            for t in (0..counts.len()).rev() {
+                counts[t] = self.min_count_for_tier(&counts, t);
+            }
+            if counts == before {
+                break;
+            }
+        }
+        self.render_plan(counts)
+    }
+
+    fn render_plan(&self, counts: Vec<u32>) -> CapacityPlan {
+        let placement = self.place(&counts);
+        let (classes, classes_ok) = self.predict(&placement);
+        CapacityPlan {
+            tiers: self
+                .cfg
+                .tiers
+                .iter()
+                .zip(&counts)
+                .map(|(t, &n)| (t.gpu, n))
+                .collect(),
+            feasible: placement.unplaced.is_empty() && classes_ok,
+            allocations: placement.allocations,
+            unplaced: placement.unplaced,
+            classes,
+        }
+    }
+
+    /// Human-readable plan for the `qlm plan` CLI.
+    pub fn render(&self, plan: &CapacityPlan) -> String {
+        let mut out = String::new();
+        let fleet: Vec<String> = plan
+            .tiers
+            .iter()
+            .map(|&(g, n)| format!("{n}x {}", g.name()))
+            .collect();
+        out.push_str(&format!(
+            "recommended fleet: {} ({} devices total)\n",
+            fleet.join(" + "),
+            plan.total_devices()
+        ));
+        for a in &plan.allocations {
+            let per: Vec<String> = a
+                .per_tier
+                .iter()
+                .zip(&self.cfg.tiers)
+                .filter(|(&k, _)| k > 0)
+                .map(|(&k, t)| format!("{k}x {}", t.gpu.name()))
+                .collect();
+            out.push_str(&format!(
+                "  {:<20} {}\n",
+                self.catalog.get(a.model).name,
+                per.join(" + ")
+            ));
+        }
+        out.push_str("predicted attainment (mean completion vs SLO):\n");
+        for c in &plan.classes {
+            out.push_str(&format!(
+                "  {:<20} {:<12} {:6.2} req/s  predicted {:8.2}s / slo {:6.0}s  {}\n",
+                self.catalog.get(c.model).name,
+                c.class.name(),
+                c.rate,
+                c.predicted_s,
+                c.slo_s,
+                if c.ok { "ok" } else { "VIOLATED" },
+            ));
+        }
+        for &m in &plan.unplaced {
+            out.push_str(&format!(
+                "  {}: no allowed tier can absorb this model — enable admission \
+                 control (shed batch classes) or extend the device catalog\n",
+                self.catalog.get(m).name
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::ModelCatalog;
+    use crate::workload::WorkloadSpec;
+
+    fn planner_for(rate: f64, tiers: Vec<TierSpec>) -> CapacityPlanner {
+        let spec = WorkloadSpec::w_a(ModelId(1), rate, 2000);
+        CapacityPlanner::from_spec(
+            &spec,
+            ModelCatalog::paper(),
+            PlannerConfig {
+                tiers,
+                ..Default::default()
+            },
+            7,
+        )
+    }
+
+    fn a100(max: u32) -> TierSpec {
+        TierSpec {
+            gpu: GpuKind::A100,
+            max,
+        }
+    }
+
+    fn a10(max: u32) -> TierSpec {
+        TierSpec {
+            gpu: GpuKind::A10,
+            max,
+        }
+    }
+
+    #[test]
+    fn plan_feasible_and_minimal_shape() {
+        let p = planner_for(10.0, vec![a100(16)]);
+        let plan = p.plan();
+        assert!(plan.feasible, "{plan:?}");
+        let n = plan.total_devices();
+        assert!(n >= 1 && n < 16, "n={n}");
+        // Minimality: one device fewer must be infeasible.
+        assert!(n == 1 || !p.feasible(&[n - 1]));
+        assert!(plan.unplaced.is_empty());
+        assert!(plan.classes.iter().all(|c| c.ok), "{:?}", plan.classes);
+    }
+
+    #[test]
+    fn plan_monotone_in_rate() {
+        let mut last = 0;
+        for rate in [2.0, 6.0, 12.0, 24.0, 48.0] {
+            let n = planner_for(rate, vec![a100(64)]).plan().total_devices();
+            assert!(n >= last, "rate {rate}: {n} < {last}");
+            last = n;
+        }
+        assert!(last >= 2, "48 req/s on Vicuna-13B needs a real fleet");
+    }
+
+    #[test]
+    fn vicuna_cannot_be_planned_on_a10_alone() {
+        // Vicuna-13B (24.2 GiB) exceeds an A10's usable 21.6 GiB.
+        let p = planner_for(5.0, vec![a10(32)]);
+        let plan = p.plan();
+        assert!(!plan.feasible);
+        assert_eq!(plan.unplaced, vec![ModelId(1)]);
+        assert!(plan.classes.iter().all(|c| !c.ok && c.predicted_s.is_infinite()));
+    }
+
+    #[test]
+    fn scarce_preferred_tier_spills_to_secondary() {
+        // Mistral-7B fits both tiers; capping A100s at 1 under heavy
+        // load must spill onto A10s rather than fail.
+        let spec = WorkloadSpec::w_a(ModelId(0), 60.0, 2000);
+        let p = CapacityPlanner::from_spec(
+            &spec,
+            ModelCatalog::paper(),
+            PlannerConfig {
+                tiers: vec![a100(1), a10(64)],
+                ..Default::default()
+            },
+            9,
+        );
+        let plan = p.plan();
+        assert!(plan.feasible, "{plan:?}");
+        assert!(plan.count(GpuKind::A10) >= 1, "{plan:?}");
+        let alloc = &plan.allocations[0];
+        assert_eq!(alloc.model, ModelId(0));
+        assert_eq!(alloc.total(), plan.total_devices());
+    }
+
+    #[test]
+    fn multi_model_demand_partitions_devices() {
+        let spec = WorkloadSpec::w_b(vec![ModelId(3)], vec![ModelId(5)], 8.0, 2000);
+        let p = CapacityPlanner::from_spec(
+            &spec,
+            ModelCatalog::paper_multi_model(),
+            PlannerConfig {
+                tiers: vec![a100(32)],
+                ..Default::default()
+            },
+            11,
+        );
+        let plan = p.plan();
+        assert!(plan.feasible, "{plan:?}");
+        assert_eq!(plan.allocations.len(), 2);
+        let total: u32 = plan.allocations.iter().map(|a| a.total()).sum();
+        assert_eq!(total, plan.total_devices());
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let a = planner_for(12.0, vec![a100(32), a10(32)]).plan();
+        let b = planner_for(12.0, vec![a100(32), a10(32)]).plan();
+        assert_eq!(a.tiers, b.tiers);
+        assert_eq!(a.total_devices(), b.total_devices());
+    }
+}

@@ -33,6 +33,10 @@ pub struct GlobalQueue {
     /// set's natural ordering *is* arrival order (FCFS base ordering).
     waiting: BTreeSet<u64>,
     pub completed: Vec<Request>,
+    /// Ids refused by admission control (state `Shed`). The requests
+    /// stay in the slab (they must appear in the final records as
+    /// violations) but leave the waiting set for good.
+    shed: Vec<u64>,
 }
 
 impl GlobalQueue {
@@ -121,6 +125,32 @@ impl GlobalQueue {
             }
         }
         self.waiting.remove(&id);
+    }
+
+    /// Shed a request (admission control / unservable-group retirement):
+    /// it leaves the waiting set permanently but stays in the broker so
+    /// the final records count it exactly once, as a violation. Only
+    /// unserved requests can be shed; returns whether the state changed.
+    pub fn shed(&mut self, id: u64) -> bool {
+        let Some(r) = self.get_mut(id) else {
+            return false;
+        };
+        if !matches!(r.state, RequestState::Waiting | RequestState::Evicted) {
+            return false;
+        }
+        r.state = RequestState::Shed;
+        self.waiting.remove(&id);
+        self.shed.push(id);
+        true
+    }
+
+    /// Ids shed so far (submit-time refusals + unservable retirements).
+    pub fn shed_ids(&self) -> &[u64] {
+        &self.shed
+    }
+
+    pub fn len_shed(&self) -> usize {
+        self.shed.len()
     }
 
     /// Record a first-token event.
@@ -277,6 +307,24 @@ mod tests {
         assert!(b > a, "tombstoned slot must not be recycled");
         assert!(q.get(a).is_none());
         assert_eq!(q.len_total(), 1);
+    }
+
+    #[test]
+    fn shed_leaves_waiting_but_stays_recorded() {
+        let mut q = GlobalQueue::new();
+        let a = submit_one(&mut q, 0.0);
+        let b = submit_one(&mut q, 1.0);
+        assert!(q.shed(a));
+        assert!(!q.shed(a), "double shed is a no-op");
+        assert_eq!(q.get(a).unwrap().state, RequestState::Shed);
+        assert_eq!(waiting_vec(&q), vec![b]);
+        assert_eq!(q.shed_ids(), &[a]);
+        assert_eq!(q.len_shed(), 1);
+        // Running requests cannot be shed (no mid-flight kills).
+        q.mark_running(b);
+        assert!(!q.shed(b));
+        // The shed request still lives in the broker for the records.
+        assert_eq!(q.len_total(), 2);
     }
 
     #[test]

@@ -19,6 +19,9 @@ pub enum RequestState {
     Evicted,
     /// Final token emitted.
     Completed,
+    /// Refused by admission control (or retired as unservable) — never
+    /// served; counts as an SLO violation in metrics.
+    Shed,
 }
 
 /// A queued LLM request.

@@ -27,6 +27,7 @@ pub mod backend;
 pub mod coordinator;
 pub mod solver;
 pub mod sim;
+pub mod capacity;
 pub mod baselines;
 pub mod metrics;
 #[cfg(feature = "pjrt")]

@@ -7,6 +7,8 @@
 //! ```text
 //! qlm sim [--scenario S] [--list] [--policy P] [--rate R] [--requests N]
 //!         [--fleet N] [--seed S] [--horizon SECS]
+//! qlm plan [--scenario S] [--rate R] [--requests N] [--horizon SECS]
+//!          [--max-a100 N] [--max-a10 N] [--util F]    capacity planner
 //! qlm figures [--fig N] [--full]         regenerate paper figures
 //! qlm simulate [--policy P] [--rate R] [--requests N] [--fleet N]
 //!              [--multi-model] [--seed S]
@@ -16,8 +18,9 @@
 
 use std::process::ExitCode;
 
-use qlm::backend::{ModelCatalog, ModelId};
+use qlm::backend::{GpuKind, ModelCatalog, ModelId};
 use qlm::baselines::Policy;
+use qlm::capacity::{AdmissionConfig, CapacityPlanner, PlannerConfig, TierSpec};
 use qlm::coordinator::lso::LsoConfig;
 use qlm::figures::{run_figure, Scale, ALL_FIGURES};
 use qlm::sim::{fleet_a100, SimConfig, Simulation};
@@ -82,9 +85,11 @@ fn usage() -> ExitCode {
         "qlm — Queue Management for SLO-Oriented LLM Serving (SoCC '24 reproduction)
 
 USAGE:
-  qlm sim [--scenario burst|diurnal|mixed-slo|multi-model|failover|scale] [--list]
-          [--policy P] [--rate R] [--requests N] [--fleet N] [--seed S]
+  qlm sim [--scenario burst|diurnal|mixed-slo|multi-model|failover|scale|autoscale]
+          [--list] [--policy P] [--rate R] [--requests N] [--fleet N] [--seed S]
           [--horizon SECS] [--full-solve]
+  qlm plan [--scenario S] [--rate R] [--requests N] [--horizon SECS]
+           [--max-a100 N] [--max-a10 N] [--util F] [--seed S]
   qlm figures [--fig N] [--full]
   qlm simulate [--policy qlm|edf|vllm|shepherd|qlm-noevict|qlm-noswap|qlm-nolb]
                [--rate R] [--requests N] [--fleet N] [--multi-model] [--seed S]
@@ -149,7 +154,7 @@ fn cmd_sim(args: &Args) -> ExitCode {
     let Some(scenario) = Scenario::from_name(name) else {
         eprintln!(
             "unknown scenario {name} \
-             (known: burst, diurnal, mixed-slo, multi-model, failover, scale)"
+             (known: burst, diurnal, mixed-slo, multi-model, failover, scale, autoscale)"
         );
         return ExitCode::from(2);
     };
@@ -182,10 +187,31 @@ fn cmd_sim(args: &Args) -> ExitCode {
     for (t, inst) in &run.failures {
         println!("  failure injected: instance {} dies at t={t:.0}s", inst.0);
     }
+    if let Some(auto) = run.autoscale {
+        // The engine only autoscales group-based policies; don't tell
+        // the operator a baseline run was autoscaled when it wasn't.
+        if policy.uses_groups() {
+            println!(
+                "  autoscaler: {}..{} x {} (trough fleet starts the run)",
+                auto.min_instances,
+                auto.max_instances,
+                auto.gpu.name(),
+            );
+        } else {
+            println!(
+                "  autoscaler: disabled ({} is not a group-based policy; fixed fleet)",
+                policy.name(),
+            );
+        }
+    }
     let mut cfg = SimConfig::new(run.fleet, run.catalog, policy);
     cfg.seed = knobs.seed;
     cfg.horizon_s = horizon_s;
     cfg.failures = run.failures.clone();
+    cfg.autoscale = run.autoscale;
+    if run.admission {
+        cfg.admission = AdmissionConfig::enabled();
+    }
     // `--full-solve` disables the incremental scheduler (the Fig. 20
     // overhead baseline; see `cargo bench -- sched_incremental`).
     cfg.sched_incremental = !args.has("full-solve");
@@ -213,6 +239,73 @@ fn cmd_sim(args: &Args) -> ExitCode {
         1000.0 * m.scheduler_wall_s,
         1000.0 * m.scheduler_wall_s / m.scheduler_invocations.max(1) as f64,
     );
+    if m.scale_ups + m.scale_downs > 0 || m.shed_count() > 0 {
+        println!(
+            "  capacity: {} scale-ups, {} scale-downs, {:.1} device-hours, {} shed",
+            m.scale_ups,
+            m.scale_downs,
+            m.device_hours(),
+            m.shed_count(),
+        );
+    }
+    ExitCode::SUCCESS
+}
+
+/// Offline capacity planning: what fleet does this workload need?
+fn cmd_plan(args: &Args) -> ExitCode {
+    let name = args.get("scenario").unwrap_or("mixed-slo");
+    let Some(scenario) = Scenario::from_name(name) else {
+        eprintln!(
+            "unknown scenario {name} \
+             (known: burst, diurnal, mixed-slo, multi-model, failover, scale, autoscale)"
+        );
+        return ExitCode::from(2);
+    };
+    let horizon_s = args.get_f64("horizon", 7200.0);
+    let rate = args.get_f64("rate", scenario.default_rate());
+    let knobs = ScenarioKnobs {
+        rate,
+        requests: args.get_usize("requests", scenario.requests_for(rate, horizon_s)),
+        fleet: scenario.default_fleet(),
+        seed: args.get_usize("seed", 42) as u64,
+    };
+    let run = scenario.build(&knobs);
+    let mut tiers = vec![TierSpec {
+        gpu: GpuKind::A100,
+        max: args.get_usize("max-a100", 64) as u32,
+    }];
+    let a10_max = args.get_usize("max-a10", 0) as u32;
+    if a10_max > 0 {
+        tiers.push(TierSpec {
+            gpu: GpuKind::A10,
+            max: a10_max,
+        });
+    }
+    let cfg = PlannerConfig {
+        tiers,
+        utilization: args.get_f64("util", PlannerConfig::default().utilization),
+        ..Default::default()
+    };
+    println!(
+        "capacity plan for scenario {} (rate {:.1} req/s, {} requests, horizon {:.0}s)",
+        run.name,
+        knobs.rate,
+        knobs.requests,
+        horizon_s,
+    );
+    let planner = CapacityPlanner::from_spec(&run.spec, run.catalog, cfg, knobs.seed);
+    let plan = planner.plan();
+    print!("{}", planner.render(&plan));
+    if !plan.feasible {
+        println!(
+            "NOT FEASIBLE at the allowed maximum — raise --max-a100/--max-a10, or \
+             run with admission control (`qlm sim --scenario autoscale` sheds \
+             hopeless batch traffic at submit time)"
+        );
+        // Nonzero so scripts (and the CI smoke step) can detect an
+        // unplannable workload, as with bad input.
+        return ExitCode::FAILURE;
+    }
     ExitCode::SUCCESS
 }
 
@@ -353,6 +446,7 @@ fn main() -> ExitCode {
     let args = Args::parse(&argv);
     match args.positional.first().map(String::as_str) {
         Some("sim") => cmd_sim(&args),
+        Some("plan") => cmd_plan(&args),
         Some("figures") => cmd_figures(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),

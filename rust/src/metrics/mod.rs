@@ -4,7 +4,7 @@
 use std::collections::HashMap;
 
 use crate::backend::ModelId;
-use crate::coordinator::request::Request;
+use crate::coordinator::request::{Request, RequestState};
 use crate::workload::SloClass;
 
 /// Final record for one request.
@@ -18,6 +18,9 @@ pub struct RequestRecord {
     pub first_token_s: Option<f64>,
     pub completed_s: Option<f64>,
     pub mega: bool,
+    /// Refused by admission control (or retired as unservable): never
+    /// served, counted as an SLO violation like any unserved request.
+    pub shed: bool,
 }
 
 impl RequestRecord {
@@ -31,6 +34,7 @@ impl RequestRecord {
             first_token_s: r.first_token_s,
             completed_s: r.completed_s,
             mega: r.mega,
+            shed: r.state == RequestState::Shed,
         }
     }
 
@@ -70,6 +74,13 @@ pub struct RunMetrics {
     /// Wall-clock spent inside the global scheduler (overhead, Fig. 20).
     pub scheduler_wall_s: f64,
     pub scheduler_invocations: u64,
+    /// Σ over instances of (decommission − commission) simulated time —
+    /// the provisioning cost an autoscaled run is judged by. For a
+    /// static fleet this is `fleet size × duration`.
+    pub device_seconds: f64,
+    /// Autoscaler actions taken during the run.
+    pub scale_ups: u64,
+    pub scale_downs: u64,
 }
 
 impl RunMetrics {
@@ -161,6 +172,16 @@ impl RunMetrics {
             .count()
     }
 
+    /// Requests refused by admission control / unservable retirement.
+    pub fn shed_count(&self) -> usize {
+        self.records.iter().filter(|r| r.shed).count()
+    }
+
+    /// Device-hours consumed (provisioning cost, Fig. 1's axis).
+    pub fn device_hours(&self) -> f64 {
+        self.device_seconds / 3600.0
+    }
+
     /// Mean TTFT per model — used by heterogeneity analyses.
     pub fn ttft_by_model(&self) -> HashMap<ModelId, f64> {
         let mut acc: HashMap<ModelId, Vec<f64>> = HashMap::new();
@@ -220,6 +241,7 @@ mod tests {
             first_token_s: first,
             completed_s: first.map(|f| f + 1.0),
             mega: false,
+            shed: false,
         }
     }
 

@@ -21,13 +21,17 @@
 //! queued requests through the paper's Fig. 20 regime.
 
 use std::cmp::Reverse;
-use std::collections::{BTreeSet, BinaryHeap, HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap, VecDeque};
 use std::time::Instant as WallInstant;
 
 use crate::backend::{
     Instance, InstanceConfig, InstanceId, ModelCatalog, ModelId, PerfModel, RunningSeq,
 };
 use crate::baselines::Policy;
+use crate::capacity::{
+    AdmissionConfig, AdmissionController, AutoscaleConfig, Autoscaler, ClassPressure,
+    ScaleDecision,
+};
 use crate::coordinator::agent::{InstanceObservation, QlmAgent};
 use crate::coordinator::lso::LsoAction;
 use crate::coordinator::request::{Request, RequestState};
@@ -40,7 +44,7 @@ use crate::coordinator::virtual_queue::VirtualQueue;
 use crate::coordinator::GlobalQueue;
 use crate::metrics::{instance_metrics, RequestRecord, RunMetrics};
 use crate::sim::profiler::ThetaCache;
-use crate::workload::Trace;
+use crate::workload::{SloClass, Trace};
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
@@ -66,6 +70,15 @@ pub struct SimConfig {
     /// default). Off forces a full re-solve every pass — the Fig. 20
     /// overhead baseline and the `sched_incremental` bench comparator.
     pub sched_incremental: bool,
+    /// Runtime autoscaling (capacity subsystem): provision instances
+    /// under sustained predicted violations, drain them when calm.
+    /// `fleet` is the starting fleet; the autoscaler grows/shrinks it
+    /// between `min_instances` and `max_instances`. Only meaningful for
+    /// group-based policies (QLM / SHEPHERD).
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Submit-time admission control (shed batch classes when even the
+    /// maximal fleet cannot meet their SLO). Disabled by default.
+    pub admission: AdmissionConfig,
 }
 
 impl SimConfig {
@@ -81,6 +94,8 @@ impl SimConfig {
             sched_interval_s: 0.25,
             failures: Vec::new(),
             sched_incremental: true,
+            autoscale: None,
+            admission: AdmissionConfig::default(),
         }
     }
 }
@@ -90,6 +105,9 @@ enum EventKind {
     Arrival(usize),
     Wake(InstanceId),
     Fail(InstanceId),
+    /// A provisioned instance finishes its cold start and joins the
+    /// fleet (autoscaler scale-up).
+    Provision(InstanceId),
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -188,6 +206,33 @@ pub struct Simulation {
     /// Scheduler views, built once and refreshed in place per pass
     /// (dead instances are dropped on failure).
     views_cache: Vec<InstanceView>,
+    /// Scale-down in progress: the instance receives no new work and
+    /// leaves the fleet once its running batch drains (no mid-flight
+    /// kills). Dense, indexed by `InstanceId.0` like `alive`.
+    draining: Vec<bool>,
+    /// When each instance joined the fleet (0 for the starting fleet,
+    /// cold-start completion for provisioned ones) / left it — the
+    /// device-seconds ledger.
+    commissioned_at: Vec<f64>,
+    decommissioned_at: Vec<Option<f64>>,
+    /// Provisioned instances still in their cold-start window.
+    warming: u32,
+    autoscaler: Option<Autoscaler>,
+    admission: AdmissionController,
+    /// Waiting (+ evicted) request counts per (class, model, mega),
+    /// maintained incrementally at every state transition — the
+    /// autoscaler's and admission controller's backlog signal without
+    /// any per-pass walk. Mega is in the key because the profile table
+    /// is: mega output moments are several times larger, and pricing a
+    /// mega backlog with the regular profile would underestimate drain
+    /// times exactly when the pressure signal matters most.
+    /// `BTreeMap` so pressure sums fold in a deterministic order.
+    waiting_by: BTreeMap<(SloClass, ModelId, bool), i64>,
+    /// Open-group index: groups with spare capacity per
+    /// (model, class, mega). Makes `classify_in_place` O(1) per arrival
+    /// instead of a scan of the live group table; `BTreeSet` keeps the
+    /// lowest-id-wins rule of the scan it replaces.
+    open_groups: HashMap<(ModelId, SloClass, bool), BTreeSet<GroupId>>,
 }
 
 impl Simulation {
@@ -233,6 +278,13 @@ impl Simulation {
             .collect();
         let grouper = Grouper::new(cfg.delta, cfg.avg_batch, cfg.seed ^ 0x9E37);
         let n_instances = instances.len();
+        // Autoscaling needs the group/virtual-queue machinery; baseline
+        // per-request policies keep their fixed fleet.
+        let autoscaler = cfg
+            .autoscale
+            .filter(|_| cfg.policy.uses_groups())
+            .map(Autoscaler::new);
+        let admission = AdmissionController::new(cfg.admission);
         let mut sim = Simulation {
             now: 0.0,
             seq: 0,
@@ -260,6 +312,14 @@ impl Simulation {
             thetas: ThetaCache::new(),
             next_free: vec![0.0; n_instances],
             views_cache: Vec::new(),
+            draining: vec![false; n_instances],
+            commissioned_at: vec![0.0; n_instances],
+            decommissioned_at: vec![None; n_instances],
+            warming: 0,
+            autoscaler,
+            admission,
+            waiting_by: BTreeMap::new(),
+            open_groups: HashMap::new(),
             cfg,
         };
         sim.init_pinning(trace);
@@ -401,38 +461,45 @@ impl Simulation {
         }
     }
 
-    /// Build the scheduler views once: `perf_for` is static per
+    /// Build one instance's scheduler view: `perf_for` is static per
     /// (instance, model); only swap times, active model, and the
     /// executing group change between passes.
-    fn build_views(&mut self) {
+    fn build_view_for(&mut self, idx: usize) -> InstanceView {
         let catalog = self.cfg.catalog.clone();
-        let model_ids = catalog.ids();
-        let mut views = Vec::with_capacity(self.instances.len());
-        for inst in &self.instances {
-            let id = inst.config.id;
-            let gpu = inst.config.gpu;
-            let mut perf_for = HashMap::new();
-            let mut swap_time = HashMap::new();
-            for &m in &model_ids {
-                // Pinned instances only serve their pinned model.
-                if let Some(&pm) = self.pinned_model.get(&id) {
-                    if pm != m {
-                        continue;
-                    }
-                }
-                if let Some(p) = self.thetas.perf(gpu, m, &catalog, 161.0) {
-                    swap_time.insert(m, inst.registry().swap_in_time_s(m, &p));
-                    perf_for.insert(m, p);
+        let inst = &self.instances[idx];
+        let id = inst.config.id;
+        let gpu = inst.config.gpu;
+        let mut perf_for = HashMap::new();
+        let mut swap_time = HashMap::new();
+        for m in catalog.ids() {
+            // Pinned instances only serve their pinned model.
+            if let Some(&pm) = self.pinned_model.get(&id) {
+                if pm != m {
+                    continue;
                 }
             }
-            views.push(InstanceView {
-                id,
-                active_model: inst.active_model(),
-                perf_for,
-                swap_time,
-                executing: None,
-            });
+            let prompt = crate::backend::perf::PROFILE_MEAN_PROMPT_TOKENS;
+            if let Some(p) = self.thetas.perf(gpu, m, &catalog, prompt) {
+                let inst = &self.instances[idx];
+                swap_time.insert(m, inst.registry().swap_in_time_s(m, &p));
+                perf_for.insert(m, p);
+            }
         }
+        let inst = &self.instances[idx];
+        InstanceView {
+            id,
+            active_model: inst.active_model(),
+            perf_for,
+            swap_time,
+            executing: None,
+        }
+    }
+
+    /// Build the scheduler views once at startup.
+    fn build_views(&mut self) {
+        let views: Vec<InstanceView> = (0..self.instances.len())
+            .map(|idx| self.build_view_for(idx))
+            .collect();
         self.views_cache = views;
     }
 
@@ -490,23 +557,47 @@ impl Simulation {
                     }
                 }
                 EventKind::Fail(id) => self.on_fail(id),
+                EventKind::Provision(id) => self.on_provision(id),
             }
             self.maybe_schedule();
-            if self.queue.completed.len() == total {
+            if self.queue.completed.len() + self.queue.len_shed() == total {
                 break;
             }
         }
         self.finish()
     }
 
+    /// Adjust the per-(class, model) waiting counter for request `rid`.
+    /// The request must still be resident in the broker.
+    fn note_waiting(&mut self, rid: u64, delta: i64) {
+        if let Some(r) = self.queue.get(rid) {
+            *self
+                .waiting_by
+                .entry((r.class, r.model, r.mega))
+                .or_default() += delta;
+        }
+    }
+
     fn on_arrival(&mut self, tr: &crate::workload::TraceRequest) {
         let req = Request::from_trace(0, tr);
         let id = self.queue.submit(req);
+        // Admission control: a hopeless batch class is refused at the
+        // door — recorded as shed, never grouped, never scheduled — so
+        // its backlog cannot poison the penalty signal for requests
+        // that still have a chance.
+        if self.admission.should_shed(tr.class) {
+            self.queue.shed(id);
+            self.admission.note_shed_submit();
+            return;
+        }
         let req = self.queue.get(id).unwrap().clone();
+        self.note_waiting(id, 1);
         // Group formation (§4).
         let gid = if self.cfg.policy.uses_groups() {
-            // §Perf: classify in place (cloning every live group per
-            // arrival was O(groups × members) per request).
+            // §Perf: classify in place against the open-group index
+            // (cloning every live group per arrival was
+            // O(groups × members); scanning the live table was
+            // O(groups) — both cap queue scale).
             self.classify_in_place(&req)
         } else {
             // Per-request singleton groups (EDF / vLLM): id = request id,
@@ -533,31 +624,37 @@ impl Simulation {
     }
 
     /// Incremental request-group classification (§4, Handling New
-    /// Incoming Requests) against the live group table, no copies. The
-    /// lowest-id compatible group wins so placement is independent of
-    /// hash-map iteration order.
+    /// Incoming Requests) through the open-group index: O(1) per
+    /// arrival. The index holds, per (model, class, mega), exactly the
+    /// live groups with spare capacity; taking the `BTreeSet` minimum
+    /// reproduces the lowest-id-wins rule of the table scan this
+    /// replaces, so placement stays independent of hash-map iteration
+    /// order — and no longer scales with the live group count (the
+    /// autoscale scenario's churn regime, ROADMAP open item).
     fn classify_in_place(&mut self, req: &Request) -> GroupId {
         let cap = self.grouper.max_group_size();
-        let target = self
-            .groups
-            .values_mut()
-            .filter(|g| {
-                g.model == req.model
-                    && g.class == req.class
-                    && g.mega == req.mega
-                    && g.len() < cap
-            })
-            .min_by_key(|g| g.id);
-        if let Some(g) = target {
-            g.members.push_back(req.id);
-            g.slo_s = g.slo_s.min(req.slo_s);
-            g.earliest_arrival_s = g.earliest_arrival_s.min(req.arrival_s);
-            return g.id;
+        let key = (req.model, req.class, req.mega);
+        if let Some(set) = self.open_groups.get_mut(&key) {
+            if let Some(&gid) = set.iter().next() {
+                let g = self.groups.get_mut(&gid).expect("open-group index is live");
+                debug_assert!(g.len() < cap, "index must only hold open groups");
+                g.members.push_back(req.id);
+                g.slo_s = g.slo_s.min(req.slo_s);
+                g.earliest_arrival_s = g.earliest_arrival_s.min(req.arrival_s);
+                if g.len() >= cap {
+                    set.remove(&gid);
+                }
+                return gid;
+            }
         }
         let mut list = Vec::new();
         let gid = self.grouper.classify(req, &mut list);
         let g = list.pop().unwrap();
+        let open = g.len() < cap;
         self.groups.insert(gid, g);
+        if open {
+            self.open_groups.entry(key).or_default().insert(gid);
+        }
         gid
     }
 
@@ -614,6 +711,13 @@ impl Simulation {
         if !self.alive[idx] {
             return;
         }
+        // Draining (scale-down): once the remaining batch completes, the
+        // instance leaves the fleet. Until then it keeps stepping but
+        // admits nothing new.
+        if self.draining[idx] && self.inst(id).is_idle() {
+            self.decommission(id);
+            return;
+        }
         // Mid-swap: try again when the swap completes.
         let busy_until = self.inst(id).busy_until();
         if self.now < busy_until {
@@ -629,7 +733,7 @@ impl Simulation {
 
         // SHEPHERD fixed batches: only admit when the batch fully drained.
         let fixed = self.cfg.policy.fixed_batches();
-        let can_admit = !fixed || self.inst(id).running_len() == 0;
+        let can_admit = !self.draining[idx] && (!fixed || self.inst(id).running_len() == 0);
 
         if can_admit {
             // §Perf: the agent reads the live virtual queue and group
@@ -694,6 +798,7 @@ impl Simulation {
                     let (ready, displaced) = self.inst_mut(id).swap_model(model, now);
                     for seq in displaced {
                         self.queue.requeue_evicted(seq.req_id, seq.generated, id);
+                        self.note_waiting(seq.req_id, 1);
                         if let Some(&g) = self.group_of.get(&seq.req_id) {
                             self.dirty_groups.insert(g);
                         }
@@ -712,6 +817,7 @@ impl Simulation {
                     let evicted = self.inst_mut(id).evict(&requests, now);
                     for seq in evicted {
                         self.queue.requeue_evicted(seq.req_id, seq.generated, id);
+                        self.note_waiting(seq.req_id, 1);
                         if let Some(&g) = self.group_of.get(&seq.req_id) {
                             self.dirty_groups.insert(g);
                         }
@@ -738,6 +844,7 @@ impl Simulation {
                         self.inst_mut(id).try_admit(seq, now)
                     };
                     if res.is_ok() {
+                        self.note_waiting(request, -1);
                         self.queue.mark_running(request);
                         // The group's earliest *unserved* member may have
                         // changed — re-anchor it at the next pass.
@@ -761,6 +868,9 @@ impl Simulation {
         }
         self.alive[idx] = false;
         self.wake_pending[idx] = None;
+        if self.decommissioned_at[idx].is_none() {
+            self.decommissioned_at[idx] = Some(self.now);
+        }
         let lost = self.inst_mut(id).fail();
         let lost_ids: Vec<u64> = lost.iter().map(|s| s.req_id).collect();
         for rid in &lost_ids {
@@ -769,6 +879,9 @@ impl Simulation {
             }
         }
         self.queue.fail_instance(id, &lost_ids);
+        for rid in &lost_ids {
+            self.note_waiting(*rid, 1);
+        }
         self.vqs[idx].set_order(Vec::new());
         self.views_cache.retain(|v| v.id != id);
         // Reschedule immediately, down the full-solve path: the view set
@@ -778,21 +891,319 @@ impl Simulation {
         self.last_schedule = -1e9;
     }
 
+    /// Provision one instance (autoscaler scale-up). The cold start is
+    /// the weight-staging time of the model the scale-up is for
+    /// (storage → CPU, priced by the perf model); the instance joins
+    /// the fleet with those weights warm in host memory, so its first
+    /// SwapModel LSO pays only the CPU → GPU hop.
+    fn provision_instance(&mut self, model: ModelId) {
+        let gpu = self.cfg.autoscale.expect("autoscaler requires config").gpu;
+        // A tier that can host nothing in the catalog would add a device
+        // that serves no model at all — refuse rather than burn
+        // device-hours on it (misconfigured AutoscaleConfig::gpu).
+        let serves_any = self
+            .cfg
+            .catalog
+            .ids()
+            .into_iter()
+            .any(|m| PerfModel::fits(self.cfg.catalog.get(m), gpu));
+        if !serves_any {
+            return;
+        }
+        let id = InstanceId(self.instances.len() as u32);
+        let mut inst = Instance::new(InstanceConfig::new(id.0, gpu), self.cfg.catalog.clone());
+        let prompt = crate::backend::perf::PROFILE_MEAN_PROMPT_TOKENS;
+        let delay = PerfModel::try_profile(self.cfg.catalog.get(model), gpu, prompt)
+            .map(|p| p.swap_storage_cpu_s)
+            .unwrap_or(30.0);
+        inst.registry_mut().set_warm_set(&[model]);
+        let ready = self.now + delay;
+        self.instances.push(inst);
+        self.vqs.push(VirtualQueue::new(id));
+        self.agents.push(QlmAgent::new(id, self.cfg.policy.lso()));
+        self.alive.push(false);
+        self.draining.push(false);
+        self.wake_pending.push(None);
+        self.next_free.push(0.0);
+        self.commissioned_at.push(ready);
+        self.decommissioned_at.push(None);
+        self.warming += 1;
+        self.push_event(ready, EventKind::Provision(id));
+    }
+
+    /// Cold start finished: the instance joins the scheduler's view set
+    /// (a view-set change — the incremental cache is unusable, exactly
+    /// as on failure, so the next pass full-solves).
+    fn on_provision(&mut self, id: InstanceId) {
+        let idx = id.0 as usize;
+        self.warming = self.warming.saturating_sub(1);
+        self.alive[idx] = true;
+        let view = self.build_view_for(idx);
+        self.views_cache.push(view);
+        self.sched_force_full = true;
+        self.needs_schedule = true;
+        self.last_schedule = -1e9;
+        self.wake(id, self.now);
+    }
+
+    /// Scale down by draining: the victim leaves the scheduler's view
+    /// set immediately (view-set change ⇒ full solve reassigns its
+    /// queued groups), keeps stepping its running batch to completion,
+    /// and is decommissioned when idle. No request is killed mid-flight.
+    fn begin_drain(&mut self) {
+        let victim = (0..self.instances.len())
+            .filter(|&i| self.alive[i] && !self.draining[i])
+            .max_by_key(|&i| (self.instances[i].is_idle(), i))
+            .map(|i| InstanceId(i as u32));
+        let Some(id) = victim else { return };
+        let idx = id.0 as usize;
+        self.draining[idx] = true;
+        self.views_cache.retain(|v| v.id != id);
+        // Its queued groups must be reassigned; mark them dirty (the
+        // forced full solve re-places everything anyway, but the dirt
+        // keeps delta-path bookkeeping consistent).
+        let held: Vec<GroupId> = self.vqs[idx].groups.iter().copied().collect();
+        for g in held {
+            if self.groups.contains_key(&g) {
+                self.dirty_groups.insert(g);
+            }
+        }
+        self.vqs[idx].set_order(Vec::new());
+        self.sched_force_full = true;
+        self.needs_schedule = true;
+        if self.inst(id).is_idle() {
+            self.decommission(id);
+        }
+    }
+
+    /// A drained instance leaves the fleet for good.
+    fn decommission(&mut self, id: InstanceId) {
+        let idx = id.0 as usize;
+        if !self.alive[idx] {
+            return;
+        }
+        debug_assert!(self.inst(id).is_idle(), "decommission requires a drained batch");
+        self.alive[idx] = false;
+        self.wake_pending[idx] = None;
+        self.decommissioned_at[idx] = Some(self.now);
+        // KV this instance parked for previously evicted requests is
+        // gone with it; those requests are still Waiting in the broker
+        // (single replica, §4) and restart from their prompt elsewhere.
+        self.queue.fail_instance(id, &[]);
+    }
+
+    /// Per-class backlog pressure from the incremental waiting counters:
+    /// predicted drain time = pending output tokens of this class and
+    /// every tighter class over the fleet's aggregate Θ — the
+    /// RWT-estimator waiting model (Eq. 2) applied fleet-wide.
+    ///
+    /// `fit_gpu` restricts each class's `hottest_model` to models that
+    /// fit that tier, so a scale-up never warms (or is sized for) a
+    /// model the provisioned device cannot host.
+    fn class_pressures(&self, fit_gpu: Option<crate::backend::GpuKind>) -> Vec<ClassPressure> {
+        // Aggregate Θ over active (non-draining) instances: each runs
+        // its most capable model at the profile-mean footprint.
+        let profiles = &self.scheduler.estimator.profiles;
+        let mut fleet_theta = 0.0;
+        for v in &self.views_cache {
+            let best = v
+                .perf_for
+                .iter()
+                .map(|(m, p)| {
+                    let prof = profiles.get(*m, SloClass::Interactive, false);
+                    p.steady_throughput(prof.mean_tokens_per_req())
+                })
+                .fold(0.0_f64, f64::max);
+            fleet_theta += best;
+        }
+        let mut out = Vec::with_capacity(SloClass::ALL.len());
+        let mut cum_tokens = 0.0;
+        for class in SloClass::ALL {
+            let mut waiting = 0usize;
+            let mut tokens = 0.0;
+            // Per-model totals (mega + non-mega summed) over hostable
+            // models — a model's backlog must not lose the hottest pick
+            // because it was split across mega variants.
+            let mut per_model: BTreeMap<ModelId, i64> = BTreeMap::new();
+            for (&(c, m, mega), &n) in &self.waiting_by {
+                if c != class || n <= 0 {
+                    continue;
+                }
+                waiting += n as usize;
+                tokens += n as f64 * profiles.get(m, c, mega).mu_out;
+                let hostable = fit_gpu
+                    .map(|g| PerfModel::fits(self.cfg.catalog.get(m), g))
+                    .unwrap_or(true);
+                if hostable {
+                    *per_model.entry(m).or_default() += n;
+                }
+            }
+            // Ascending iteration + strict `>` keeps the lowest model
+            // id on ties.
+            let mut hottest: Option<(ModelId, i64)> = None;
+            for (&m, &n) in &per_model {
+                if hottest.map(|(_, hn)| n > hn).unwrap_or(true) {
+                    hottest = Some((m, n));
+                }
+            }
+            cum_tokens += tokens;
+            let drain_s = if cum_tokens <= 0.0 {
+                0.0
+            } else if fleet_theta > 0.0 {
+                cum_tokens / fleet_theta
+            } else {
+                f64::INFINITY
+            };
+            out.push(ClassPressure {
+                class,
+                waiting,
+                drain_s,
+                hottest_model: hottest.map(|(m, _)| m),
+            });
+        }
+        out
+    }
+
+    /// One capacity-subsystem evaluation, run after every scheduler
+    /// pass: update the admission gates and let the autoscaler act.
+    /// Free when the whole subsystem is off — the pressure walk must
+    /// not tax runs (or Fig. 20 overhead numbers) that never asked for
+    /// capacity management.
+    fn capacity_tick(&mut self) {
+        if self.autoscaler.is_none() && !self.admission.cfg.enabled {
+            return;
+        }
+        let tier = self.autoscaler.as_ref().map(|a| a.cfg.gpu);
+        let pressures = self.class_pressures(tier);
+        let active = (0..self.instances.len())
+            .filter(|&i| self.alive[i] && !self.draining[i])
+            .count() as u32;
+        let draining = (0..self.instances.len())
+            .filter(|&i| self.alive[i] && self.draining[i])
+            .count() as u32;
+        // "Maxed" for admission purposes means growth cannot help: the
+        // instance budget is exhausted, or nothing backlogged fits the
+        // provisionable tier (hottest_model is tier-filtered) — in
+        // either case waiting for more capacity would be waiting for
+        // capacity that can never serve the backlog.
+        let fleet_maxed = match &self.autoscaler {
+            Some(a) => {
+                let at_max = active + self.warming + draining >= a.cfg.max_instances;
+                let growth_helps = pressures
+                    .iter()
+                    .any(|p| p.waiting > 0 && p.hottest_model.is_some());
+                at_max || !growth_helps
+            }
+            None => true, // a fixed fleet cannot grow
+        };
+        let drains: Vec<(SloClass, f64)> = pressures.iter().map(|p| (p.class, p.drain_s)).collect();
+        self.admission.update(&drains, fleet_maxed);
+        let any_idle = (0..self.instances.len())
+            .any(|i| self.alive[i] && !self.draining[i] && self.instances[i].is_idle());
+        let warming = self.warming;
+        let decision = match self.autoscaler.as_mut() {
+            Some(a) => a.decide(self.now, &pressures, active, warming, draining, any_idle),
+            None => ScaleDecision::Hold,
+        };
+        match decision {
+            ScaleDecision::Up { count, model } => {
+                for _ in 0..count {
+                    self.provision_instance(model);
+                }
+            }
+            ScaleDecision::Down => self.begin_drain(),
+            ScaleDecision::Hold => {}
+        }
+    }
+
+    /// Retire groups the scheduler reported as unservable (no instance
+    /// can serve their model) through the admission controller, so shed
+    /// and unservable requests share one accounting path. Their waiting
+    /// members are shed in the broker (recorded once, as violations)
+    /// and the group dissolves; next pass's delta sees a removal.
+    ///
+    /// A group is only retired when no fleet growth could rescue it: if
+    /// the autoscaler can still provision a tier that hosts the model,
+    /// the group is left queued — its backlog pressure drives the
+    /// scale-up that makes it servable again (shedding recoverable work
+    /// early would throw requests away, the same rule the admission
+    /// controller applies at submit time).
+    fn shed_unservable_groups(&mut self, unservable: Vec<GroupId>) {
+        let rescue_tier = match &self.autoscaler {
+            Some(a) => {
+                let powered = (0..self.instances.len())
+                    .filter(|&i| self.alive[i])
+                    .count() as u32
+                    + self.warming;
+                if powered < a.cfg.max_instances {
+                    Some(a.cfg.gpu)
+                } else {
+                    None
+                }
+            }
+            None => None,
+        };
+        for gid in unservable {
+            let Some(g) = self.groups.get(&gid) else { continue };
+            if let Some(gpu) = rescue_tier {
+                if PerfModel::fits(self.cfg.catalog.get(g.model), gpu) {
+                    continue; // a future scale-up can serve this group
+                }
+            }
+            let key = (g.model, g.class, g.mega);
+            let members: Vec<u64> = g.members.iter().copied().collect();
+            let mut shed = 0u64;
+            for rid in members {
+                if self.queue.shed(rid) {
+                    self.note_waiting(rid, -1);
+                    self.group_of.remove(&rid);
+                    shed += 1;
+                }
+            }
+            self.admission.note_shed_unservable(shed);
+            let empty = {
+                let g = self.groups.get_mut(&gid).unwrap();
+                let group_of = &self.group_of;
+                g.members.retain(|rid| group_of.contains_key(rid));
+                g.is_empty()
+            };
+            if empty {
+                self.groups.remove(&gid);
+                if let Some(set) = self.open_groups.get_mut(&key) {
+                    set.remove(&gid);
+                }
+                for vq in self.vqs.iter_mut() {
+                    vq.remove(gid);
+                }
+                self.dirty_groups.remove(&gid);
+                self.removed_groups.push(gid);
+                self.scheduler.estimator.forget_group(gid);
+            }
+        }
+    }
+
     /// Request finished: drop from its group; empty groups leave their
     /// virtual queue (§4: groups dequeue when all requests complete).
     fn on_request_done(&mut self, rid: u64, _inst: InstanceId) {
         let Some(gid) = self.group_of.remove(&rid) else {
             return;
         };
-        let empty = {
+        let grouped = self.cfg.policy.uses_groups();
+        let cap = self.grouper.max_group_size();
+        let (empty, key) = {
             let Some(g) = self.groups.get_mut(&gid) else {
                 return;
             };
             g.members.retain(|&m| m != rid);
-            g.is_empty()
+            (g.is_empty(), (g.model, g.class, g.mega))
         };
         if empty {
             self.groups.remove(&gid);
+            if grouped {
+                if let Some(set) = self.open_groups.get_mut(&key) {
+                    set.remove(&gid);
+                }
+            }
             for vq in self.vqs.iter_mut() {
                 vq.remove(gid);
             }
@@ -803,7 +1214,11 @@ impl Simulation {
             self.scheduler.estimator.forget_group(gid);
             self.needs_schedule = true;
         } else {
-            // Shrunk group: re-price and re-anchor at the next pass.
+            // Shrunk group: it has room again (open-group index), and it
+            // must be re-priced and re-anchored at the next pass.
+            if grouped && self.groups[&gid].len() < cap {
+                self.open_groups.entry(key).or_default().insert(gid);
+            }
             self.dirty_groups.insert(gid);
         }
     }
@@ -862,23 +1277,40 @@ impl Simulation {
         let wall = WallInstant::now();
 
         let views = self.refresh_views();
-        match self.cfg.policy {
-            Policy::VllmFcfs => self.schedule_fcfs(&views),
-            Policy::Edf => self.schedule_edf(&views),
+        let unservable = match self.cfg.policy {
+            Policy::VllmFcfs => {
+                self.schedule_fcfs(&views);
+                Vec::new()
+            }
+            Policy::Edf => {
+                self.schedule_edf(&views);
+                Vec::new()
+            }
             Policy::Qlm { lso, .. } if !lso.load_balancing => {
-                self.schedule_round_robin(&views)
+                self.schedule_round_robin(&views);
+                Vec::new()
             }
             _ => self.schedule_qlm(&views),
-        }
+        };
         self.views_cache = views;
         // Every policy consumes (or rebuilds from scratch over) the full
         // group table per pass, so the dirt is spent either way.
         self.dirty_groups.clear();
         self.removed_groups.clear();
         self.sched_force_full = false;
-
         self.scheduler_wall_s += wall.elapsed().as_secs_f64();
         self.scheduler_invocations += 1;
+        // Capacity subsystem, after the wall capture so the Fig. 20
+        // scheduler-overhead metric stays a pure scheduling
+        // measurement. Unservable groups retire *after* the dirt
+        // clears: their removal must land in `removed_groups` for the
+        // NEXT pass, or a delta pass would keep charging their penalty
+        // forever. Shedding precedes the tick so the pressure signal
+        // sees the post-retirement backlog.
+        if !unservable.is_empty() {
+            self.shed_unservable_groups(unservable);
+        }
+        self.capacity_tick();
         // New orders may unblock idle instances.
         let ids: Vec<InstanceId> = self
             .instances
@@ -900,7 +1332,10 @@ impl Simulation {
     /// are a patch covering only changed instances). Cold caches,
     /// instance failures, and dirtiness above the configured threshold
     /// fall back to the full solve, which refreshes the cache.
-    fn schedule_qlm(&mut self, views: &[InstanceView]) {
+    ///
+    /// Returns the groups the scheduler reported unservable, for the
+    /// admission controller to retire.
+    fn schedule_qlm(&mut self, views: &[InstanceView]) -> Vec<GroupId> {
         let assignment = {
             let delta_try = if self.sched_force_full || !self.cfg.sched_incremental {
                 None
@@ -943,6 +1378,7 @@ impl Simulation {
                 self.instances[idx].registry_mut().set_warm_set(&order);
             }
         }
+        assignment.unservable
     }
 
     /// Load-balancing ablation (Fig. 15's round-robin comparator, and
@@ -1102,6 +1538,13 @@ impl Simulation {
                 }
             }
         }
+        // Shed requests (admission control / unservable retirement) left
+        // the waiting set for good but must be recorded exactly once.
+        for &id in self.queue.shed_ids() {
+            if let Some(r) = self.queue.get(id) {
+                records.push(RequestRecord::from_request(r));
+            }
+        }
         records.sort_by_key(|r| r.id);
         records.dedup_by_key(|r| r.id);
         let duration = records
@@ -1109,6 +1552,24 @@ impl Simulation {
             .filter_map(|r| r.completed_s)
             .fold(0.0_f64, f64::max)
             .max(self.now);
+        // Device-seconds ledger: each instance is billed from commission
+        // (cold-start completion for provisioned ones) to decommission /
+        // failure / end of run. An instance that never joined — its
+        // Provision event was still pending when the run ended (not
+        // alive, never decommissioned) — is not billed.
+        let device_seconds: f64 = (0..self.instances.len())
+            .filter(|&i| self.alive[i] || self.decommissioned_at[i].is_some())
+            .map(|i| {
+                let start = self.commissioned_at[i].min(duration);
+                let end = self.decommissioned_at[i].unwrap_or(duration).min(duration);
+                (end - start).max(0.0)
+            })
+            .sum();
+        let (scale_ups, scale_downs) = self
+            .autoscaler
+            .as_ref()
+            .map(|a| (a.scale_ups, a.scale_downs))
+            .unwrap_or((0, 0));
         RunMetrics {
             policy: self.cfg.policy.name(),
             records,
@@ -1116,6 +1577,9 @@ impl Simulation {
             duration_s: duration,
             scheduler_wall_s: self.scheduler_wall_s,
             scheduler_invocations: self.scheduler_invocations,
+            device_seconds,
+            scale_ups,
+            scale_downs,
         }
     }
 }
@@ -1370,6 +1834,143 @@ mod tests {
             };
             assert_eq!(run_with(false), run_with(true), "{}", policy.name());
         }
+    }
+
+    #[test]
+    fn open_group_index_matches_scan_semantics() {
+        use crate::workload::TraceRequest;
+        let trace = small_trace(5.0, 1);
+        let mut cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
+        cfg.delta = 1.0;
+        cfg.avg_batch = 2; // group cap = 2
+        let mut sim = Simulation::new(cfg, &trace);
+        let tr = |i: usize| TraceRequest {
+            arrival_s: i as f64,
+            model: ModelId(0),
+            class: crate::workload::SloClass::Interactive,
+            slo_s: 20.0,
+            input_tokens: 50,
+            output_tokens: 10,
+            mega: false,
+        };
+        for i in 0..5 {
+            sim.on_arrival(&tr(i));
+        }
+        // Cap 2 ⇒ requests 0/1, 2/3, 4 land in three groups.
+        assert_eq!(sim.groups.len(), 3);
+        let g0 = sim.group_of[&0];
+        assert_eq!(sim.group_of[&1], g0);
+        assert_ne!(sim.group_of[&2], g0);
+        // Completing a member reopens the group; the next compatible
+        // arrival must join the *lowest-id* open group (the rule the
+        // replaced table scan enforced).
+        sim.queue.mark_running(0);
+        sim.queue.complete(0, Some(1.0), 1.0);
+        sim.on_request_done(0, InstanceId(0));
+        sim.on_arrival(&tr(5));
+        assert_eq!(sim.group_of[&5], g0, "reopened lowest-id group wins");
+        // Full groups never sit in the index.
+        for (key, set) in &sim.open_groups {
+            for gid in set {
+                assert!(sim.groups[gid].len() < 2, "{key:?} holds a full group");
+            }
+        }
+    }
+
+    /// Vicuna-13B W_A trace: heavy enough per token that overload forms
+    /// a real *waiting* backlog (Mistral's KV capacity absorbs small
+    /// bursts straight into the running batch, which never pressures
+    /// the autoscaler).
+    fn vicuna_trace(rate: f64, n: usize) -> Trace {
+        Trace::generate(&WorkloadSpec::w_a(ModelId(1), rate, n), 42)
+    }
+
+    #[test]
+    fn autoscaler_grows_fleet_under_pressure_and_completes() {
+        use crate::backend::GpuKind;
+        let trace = vicuna_trace(40.0, 600);
+        let mut cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
+        let mut auto = AutoscaleConfig::bounded(1, 4, GpuKind::A100);
+        auto.breach_passes = 2;
+        auto.cooldown_s = 5.0;
+        // Short bench-scale trace: trip on a couple of seconds of
+        // predicted backlog rather than the production half-SLO.
+        auto.up_frac = 0.1;
+        cfg.autoscale = Some(auto);
+        let m = Simulation::new(cfg, &trace).run(&trace);
+        assert_eq!(m.completed_count(), 600, "{}", m.summary());
+        assert!(m.scale_ups >= 1, "overload must trigger provisioning");
+        // The ledger bills provisioned capacity only from commission on.
+        assert!(
+            m.device_seconds <= 4.0 * m.duration_s + 1e-6,
+            "{} vs {}",
+            m.device_seconds,
+            m.duration_s
+        );
+        // Extra capacity must not slow the run down vs the fixed fleet.
+        let fixed = {
+            let cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
+            Simulation::new(cfg, &trace).run(&trace)
+        };
+        assert!(
+            m.duration_s <= fixed.duration_s * 1.05,
+            "auto {} vs fixed {}",
+            m.duration_s,
+            fixed.duration_s
+        );
+    }
+
+    #[test]
+    fn autoscaling_is_deterministic() {
+        use crate::backend::GpuKind;
+        let trace = vicuna_trace(40.0, 300);
+        let run = || {
+            let mut cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
+            let mut auto = AutoscaleConfig::bounded(1, 3, GpuKind::A100);
+            auto.breach_passes = 2;
+            auto.cooldown_s = 5.0;
+            auto.up_frac = 0.1;
+            cfg.autoscale = Some(auto);
+            Simulation::new(cfg, &trace).run(&trace)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.completed_count(), b.completed_count());
+        assert_eq!(a.scale_ups, b.scale_ups);
+        assert_eq!(a.scale_downs, b.scale_downs);
+        assert!((a.device_seconds - b.device_seconds).abs() < 1e-9);
+        assert!((a.mean_ttft() - b.mean_ttft()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn admission_sheds_hopeless_batch_classes_only() {
+        use crate::capacity::AdmissionConfig;
+        // One instance under a crushing W_A overload with an aggressive
+        // shed gate: batch classes are refused at the door once their
+        // predicted drain blows through the gate; interactive never is.
+        let trace = small_trace(60.0, 600);
+        let mut cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
+        cfg.admission = AdmissionConfig {
+            enabled: true,
+            shed_frac: 0.05,
+            resume_frac: 0.01,
+        };
+        let m = Simulation::new(cfg, &trace).run(&trace);
+        assert_eq!(m.records.len(), 600, "every request recorded exactly once");
+        let shed = m.shed_count();
+        assert!(shed > 0, "hopeless batch backlog must shed: {}", m.summary());
+        assert!(
+            m.records
+                .iter()
+                .filter(|r| r.shed)
+                .all(|r| r.class != crate::workload::SloClass::Interactive),
+            "interactive traffic must never be shed"
+        );
+        assert_eq!(
+            m.completed_count() + shed,
+            600,
+            "shed + completed must conserve the trace"
+        );
     }
 
     #[test]

@@ -39,6 +39,27 @@ pub fn fleet_a100(n: u32) -> Vec<InstanceConfig> {
     FleetSpec { a100: n, a10: 0 }.build()
 }
 
+/// `n` homogeneous instances of an arbitrary tier (the autoscaler's
+/// starting fleets are built this way).
+pub fn fleet_of(gpu: GpuKind, n: u32) -> Vec<InstanceConfig> {
+    (0..n).map(|id| InstanceConfig::new(id, gpu)).collect()
+}
+
+/// Materialize a capacity plan's per-tier counts (e.g.
+/// [`crate::capacity::CapacityPlan::tiers`]) into a dense-id fleet —
+/// the bridge from `qlm plan` output to a runnable simulation.
+pub fn fleet_from_tiers(tiers: &[(GpuKind, u32)]) -> Vec<InstanceConfig> {
+    let mut out = Vec::new();
+    let mut id = 0;
+    for &(gpu, n) in tiers {
+        for _ in 0..n {
+            out.push(InstanceConfig::new(id, gpu));
+            id += 1;
+        }
+    }
+    out
+}
+
 /// Mixed fleet with `a10_fraction` of `total` instances as A10s
 /// (Fig. 15's heterogeneity sweep).
 pub fn fleet_mixed(total: u32, a10_fraction: f64) -> Vec<InstanceConfig> {
@@ -79,5 +100,18 @@ mod tests {
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), 10);
+    }
+
+    #[test]
+    fn fleet_from_tiers_is_dense_and_ordered() {
+        let f = fleet_from_tiers(&[(GpuKind::A100, 3), (GpuKind::A10, 2)]);
+        assert_eq!(f.len(), 5);
+        for (i, c) in f.iter().enumerate() {
+            assert_eq!(c.id.0 as usize, i, "ids must be dense for the engine");
+        }
+        assert!(f[..3].iter().all(|c| c.gpu == GpuKind::A100));
+        assert!(f[3..].iter().all(|c| c.gpu == GpuKind::A10));
+        assert_eq!(fleet_of(GpuKind::A10, 4).len(), 4);
+        assert!(fleet_of(GpuKind::A10, 4).iter().all(|c| c.gpu == GpuKind::A10));
     }
 }

@@ -8,5 +8,5 @@ pub mod fleet;
 pub mod profiler;
 
 pub use engine::{SimConfig, Simulation};
-pub use fleet::{fleet_a100, fleet_mixed, FleetSpec};
+pub use fleet::{fleet_a100, fleet_from_tiers, fleet_mixed, fleet_of, FleetSpec};
 pub use profiler::{profile_theta, ThetaCache};

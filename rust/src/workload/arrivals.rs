@@ -31,6 +31,36 @@ pub enum ArrivalProcess {
     },
 }
 
+impl ArrivalProcess {
+    /// Long-run mean arrival rate (req/s); `None` for `Dump`, whose
+    /// instantaneous rate is unbounded. Consumed by the capacity
+    /// planner's throughput sizing.
+    pub fn mean_rate(&self) -> Option<f64> {
+        Some(match self {
+            ArrivalProcess::Poisson { rate } | ArrivalProcess::Uniform { rate } => *rate,
+            ArrivalProcess::Bursty { rate, burstiness, .. } => {
+                // Phases alternate evenly: average the burst-phase rate
+                // with the residual quiet-phase rate (see `next`).
+                let quiet = (rate * (2.0 - burstiness)).max(rate * 0.05);
+                0.5 * (rate * burstiness + quiet)
+            }
+            ArrivalProcess::Diurnal { base_rate, peak_rate, .. } => 0.5 * (base_rate + peak_rate),
+            ArrivalProcess::Dump => return None,
+        })
+    }
+
+    /// Peak sustained arrival rate (req/s); `None` for `Dump`. Consumed
+    /// by the capacity planner's latency-bound-class sizing.
+    pub fn peak_rate(&self) -> Option<f64> {
+        Some(match self {
+            ArrivalProcess::Poisson { rate } | ArrivalProcess::Uniform { rate } => *rate,
+            ArrivalProcess::Bursty { rate, burstiness, .. } => rate * burstiness.max(1.0),
+            ArrivalProcess::Diurnal { peak_rate, .. } => *peak_rate,
+            ArrivalProcess::Dump => return None,
+        })
+    }
+}
+
 /// Stateful arrival-time generator.
 #[derive(Debug, Clone)]
 pub struct Arrivals {
@@ -213,6 +243,35 @@ mod tests {
         let mut rng = Rng::new(7);
         let ts = a.take(2_000, &mut rng);
         assert!(ts.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn rate_moments_match_process() {
+        assert_eq!(
+            ArrivalProcess::Poisson { rate: 8.0 }.mean_rate(),
+            Some(8.0)
+        );
+        assert_eq!(
+            ArrivalProcess::Poisson { rate: 8.0 }.peak_rate(),
+            Some(8.0)
+        );
+        let d = ArrivalProcess::Diurnal {
+            base_rate: 4.0,
+            peak_rate: 16.0,
+            period_s: 100.0,
+        };
+        assert_eq!(d.mean_rate(), Some(10.0));
+        assert_eq!(d.peak_rate(), Some(16.0));
+        let b = ArrivalProcess::Bursty {
+            rate: 10.0,
+            burstiness: 6.0,
+            phase_len_s: 1.0,
+        };
+        assert_eq!(b.peak_rate(), Some(60.0));
+        // Mean stays near the headline rate (quiet floor pulls it up a bit).
+        assert!(b.mean_rate().unwrap() >= 10.0);
+        assert!(ArrivalProcess::Dump.mean_rate().is_none());
+        assert!(ArrivalProcess::Dump.peak_rate().is_none());
     }
 
     #[test]

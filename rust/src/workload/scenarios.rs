@@ -8,8 +8,9 @@
 //! size, seed) into everything a simulation run needs: model catalog,
 //! workload spec, fleet, and any injected failures.
 
-use crate::backend::{InstanceConfig, InstanceId, ModelCatalog, ModelId};
-use crate::sim::{fleet_a100, fleet_mixed};
+use crate::backend::{GpuKind, InstanceConfig, InstanceId, ModelCatalog, ModelId};
+use crate::capacity::AutoscaleConfig;
+use crate::sim::{fleet_a100, fleet_mixed, fleet_of};
 use crate::workload::{ArrivalProcess, RequestClassSpec, ShareGptSampler, SloClass, WorkloadSpec};
 
 /// Named workload scenario.
@@ -29,6 +30,11 @@ pub enum Scenario {
     /// Fig. 20's overhead regime as a live run: 100K+ queued requests,
     /// mixed SLO classes across multiple models, incremental scheduler.
     Scale,
+    /// Capacity-subsystem showcase: diurnal arrivals over a 4× peak-to-
+    /// trough swing, mixed SLO classes on multiple models, a trough-
+    /// sized starting fleet, and the runtime autoscaler + admission
+    /// control riding the wave.
+    Autoscale,
 }
 
 /// Tunable knobs shared by every scenario.
@@ -63,6 +69,11 @@ pub struct ScenarioRun {
     pub fleet: Vec<InstanceConfig>,
     /// (time, instance) failure injections.
     pub failures: Vec<(f64, InstanceId)>,
+    /// Runtime autoscaling bounds (the `autoscale` scenario); `fleet`
+    /// is the trough-sized starting fleet.
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Enable submit-time admission control for the run.
+    pub admission: bool,
 }
 
 impl Scenario {
@@ -73,6 +84,7 @@ impl Scenario {
         Scenario::MultiModel,
         Scenario::Failover,
         Scenario::Scale,
+        Scenario::Autoscale,
     ];
 
     pub fn from_name(name: &str) -> Option<Scenario> {
@@ -83,6 +95,7 @@ impl Scenario {
             "multi-model" => Scenario::MultiModel,
             "failover" => Scenario::Failover,
             "scale" => Scenario::Scale,
+            "autoscale" => Scenario::Autoscale,
             _ => return None,
         })
     }
@@ -95,6 +108,7 @@ impl Scenario {
             Scenario::MultiModel => "multi-model",
             Scenario::Failover => "failover",
             Scenario::Scale => "scale",
+            Scenario::Autoscale => "autoscale",
         }
     }
 
@@ -119,6 +133,9 @@ impl Scenario {
             Scenario::Scale => {
                 "100k+ requests, mixed SLO classes, multi-model (Fig. 20 scale)"
             }
+            Scenario::Autoscale => {
+                "diurnal 4x swing, multi-model, trough fleet + runtime autoscaler"
+            }
         }
     }
 
@@ -137,6 +154,9 @@ impl Scenario {
             // Vicuna-13B (mixed-slo) and the W_B variant set are far
             // heavier per token than Mistral-7B; give them more devices.
             Scenario::MixedSlo | Scenario::MultiModel | Scenario::Scale => 8,
+            // The autoscale fleet knob is the *trough* size; the
+            // autoscaler may grow it 4× (matching the arrival swing).
+            Scenario::Autoscale => 4,
             _ => 4,
         }
     }
@@ -153,9 +173,9 @@ impl Scenario {
             Scenario::MultiModel => rate,
             // Arrivals stop at ~85% of the horizon so the tail drains
             // and the run *completes* inside it (Fig. 20 regime).
-            Scenario::Scale => 1.7 * rate,
+            Scenario::Scale | Scenario::Autoscale => 1.7 * rate,
         };
-        let lo = if matches!(self, Scenario::Scale) {
+        let lo = if matches!(self, Scenario::Scale | Scenario::Autoscale) {
             100_000
         } else {
             200
@@ -171,6 +191,8 @@ impl Scenario {
             spec: WorkloadSpec::w_a(ModelId(0), k.rate, k.requests),
             fleet: fleet_a100(k.fleet),
             failures: Vec::new(),
+            autoscale: None,
+            admission: false,
         };
         match self {
             Scenario::MixedSlo => ScenarioRun {
@@ -220,6 +242,17 @@ impl Scenario {
                 spec: scale_spec(k),
                 ..base
             },
+            Scenario::Autoscale => {
+                let trough = k.fleet.max(2);
+                ScenarioRun {
+                    catalog: ModelCatalog::paper_multi_model(),
+                    spec: autoscale_spec(k),
+                    fleet: fleet_of(GpuKind::A100, trough),
+                    autoscale: Some(AutoscaleConfig::bounded(trough, trough * 4, GpuKind::A100)),
+                    admission: true,
+                    ..base
+                }
+            }
             Scenario::Failover => {
                 let fleet = fleet_a100(k.fleet.max(2));
                 // Kill the last instance a tenth into the nominal run:
@@ -268,6 +301,51 @@ fn scale_spec(k: &ScenarioKnobs) -> WorkloadSpec {
                 class: SloClass::Batch2,
                 models: vec![ModelId(5)],
                 arrivals: ArrivalProcess::Poisson { rate: k.rate * 0.5 },
+                count: n_b2,
+                mega_fraction: 0.0,
+            },
+        ],
+        sampler: ShareGptSampler::default(),
+    }
+}
+
+/// The `autoscale` workload: interactive traffic riding a diurnal wave
+/// with a 4× peak-to-trough swing (base ½×rate, peak 2×rate) on the
+/// base Mistral-7B, plus two batch classes on fine-tuned variants — the
+/// regime where a fixed fleet is either over-provisioned at the trough
+/// or under-provisioned at the peak (Fig. 1), i.e. exactly what the
+/// runtime autoscaler exists for. Batch streams run at 0.7×rate so
+/// arrivals stop at ~70% of the horizon and the tail (and any final
+/// drain) completes inside it.
+fn autoscale_spec(k: &ScenarioKnobs) -> WorkloadSpec {
+    let n_i = k.requests / 2;
+    let n_b1 = k.requests / 4;
+    let n_b2 = k.requests - n_i - n_b1;
+    WorkloadSpec {
+        name: format!("autoscale(rate={})", k.rate),
+        streams: vec![
+            RequestClassSpec {
+                class: SloClass::Interactive,
+                models: vec![ModelId(0)],
+                arrivals: ArrivalProcess::Diurnal {
+                    base_rate: k.rate * 0.5,
+                    peak_rate: k.rate * 2.0,
+                    period_s: 1800.0,
+                },
+                count: n_i,
+                mega_fraction: 0.0,
+            },
+            RequestClassSpec {
+                class: SloClass::Batch1,
+                models: vec![ModelId(3)],
+                arrivals: ArrivalProcess::Poisson { rate: k.rate * 0.7 },
+                count: n_b1,
+                mega_fraction: 0.0,
+            },
+            RequestClassSpec {
+                class: SloClass::Batch2,
+                models: vec![ModelId(5)],
+                arrivals: ArrivalProcess::Poisson { rate: k.rate * 0.7 },
                 count: n_b2,
                 mega_fraction: 0.0,
             },
@@ -361,6 +439,44 @@ mod tests {
         let rate = s.default_rate();
         let span = (n as f64 / 2.0) / rate;
         assert!(span <= 0.9 * 7200.0, "arrival span {span}");
+    }
+
+    #[test]
+    fn autoscale_scenario_shape() {
+        let k = ScenarioKnobs::default();
+        let run = Scenario::Autoscale.build(&k);
+        let auto = run.autoscale.expect("autoscaler must be configured");
+        assert_eq!(auto.min_instances as usize, run.fleet.len());
+        assert_eq!(auto.max_instances, auto.min_instances * 4);
+        assert!(run.admission, "admission control rides along");
+        // 4× peak-to-trough swing on the interactive stream.
+        let inter = &run.spec.streams[0];
+        match inter.arrivals {
+            ArrivalProcess::Diurnal { base_rate, peak_rate, .. } => {
+                assert!((peak_rate / base_rate - 4.0).abs() < 1e-9);
+            }
+            ref other => panic!("expected diurnal arrivals, got {other:?}"),
+        }
+        // Mixed SLO classes over multiple models.
+        let classes: std::collections::HashSet<_> =
+            run.spec.streams.iter().map(|s| s.class).collect();
+        assert_eq!(classes.len(), 3);
+        let models: std::collections::HashSet<_> = run
+            .spec
+            .streams
+            .iter()
+            .flat_map(|s| s.models.iter().copied())
+            .collect();
+        assert!(models.len() >= 3);
+        // CLI-default sizing reaches the 100k-request floor with the
+        // arrival span ending well inside the horizon.
+        let rate = Scenario::Autoscale.default_rate();
+        let n = Scenario::Autoscale.requests_for(rate, 7200.0);
+        assert!(n >= 100_000, "{n}");
+        let batch_span = (n as f64 / 4.0) / (rate * 0.7);
+        assert!(batch_span <= 0.85 * 7200.0, "batch span {batch_span}");
+        let inter_span = (n as f64 / 2.0) / (rate * 1.25); // diurnal mean
+        assert!(inter_span <= 0.85 * 7200.0, "interactive span {inter_span}");
     }
 
     #[test]

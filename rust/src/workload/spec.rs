@@ -17,6 +17,18 @@ pub enum SloClass {
 }
 
 impl SloClass {
+    /// Every class, tightest SLO first (deadline priority order).
+    pub const ALL: [SloClass; 3] = [SloClass::Interactive, SloClass::Batch1, SloClass::Batch2];
+
+    /// Dense index (position in [`Self::ALL`]) for per-class tables.
+    pub fn index(&self) -> usize {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Batch1 => 1,
+            SloClass::Batch2 => 2,
+        }
+    }
+
     /// SLO value in seconds (p99 TTFT bound).
     pub fn slo_s(&self) -> f64 {
         match self {

@@ -1,0 +1,205 @@
+//! Capacity-subsystem integration tests: planner-vs-simulator agreement,
+//! planner monotonicity, autoscale end-to-end economics, and
+//! drain-correctness (no request lost during scale-down).
+
+use qlm::backend::{GpuKind, ModelCatalog, ModelId};
+use qlm::baselines::Policy;
+use qlm::capacity::{AutoscaleConfig, CapacityPlanner, PlannerConfig, TierSpec};
+use qlm::sim::{fleet_a100, SimConfig, Simulation};
+use qlm::workload::{
+    ArrivalProcess, RequestClassSpec, Scenario, ScenarioKnobs, ShareGptSampler, SloClass, Trace,
+    WorkloadSpec,
+};
+
+fn a100_tier(max: u32) -> PlannerConfig {
+    PlannerConfig {
+        tiers: vec![TierSpec {
+            gpu: GpuKind::A100,
+            max,
+        }],
+        ..Default::default()
+    }
+}
+
+/// Property (satellite): more load ⇒ never fewer devices. Swept over
+/// the mixed-slo scenario's own spec so the planner sees exactly what
+/// `qlm plan --scenario mixed-slo` sees.
+#[test]
+fn planner_monotone_more_load_never_fewer_devices() {
+    let mut last = 0;
+    for rate in [3.0, 5.0, 8.0, 12.0, 20.0, 30.0] {
+        let k = ScenarioKnobs {
+            rate,
+            requests: 2000,
+            fleet: 4,
+            seed: 5,
+        };
+        let run = Scenario::MixedSlo.build(&k);
+        let planner =
+            CapacityPlanner::from_spec(&run.spec, run.catalog, a100_tier(64), k.seed);
+        let n = planner.plan().total_devices();
+        assert!(n >= last, "rate {rate}: planned {n} < {last} at lower load");
+        last = n;
+    }
+    assert!(last >= 3, "30 req/s of W_A must need several devices");
+}
+
+/// Acceptance: `qlm plan` on the mixed-slo scenario recommends a fleet
+/// within 1 device of the simulation-validated minimum — the smallest
+/// static fleet whose *every* SLO class attains ≥ 95% in a full run of
+/// the same spec.
+#[test]
+fn planner_matches_simulated_minimum_within_one_device() {
+    let k = ScenarioKnobs {
+        rate: 10.0,
+        // Long enough (≈300 s of arrivals) that an under-provisioned
+        // fleet's backlog visibly blows through the 60 s batch-1 SLO —
+        // short traces make any fleet look sufficient.
+        requests: 6000,
+        fleet: 4,
+        seed: 42,
+    };
+    let run = Scenario::MixedSlo.build(&k);
+    let trace = Trace::generate(&run.spec, k.seed);
+    let attained = |n: u32| -> bool {
+        let cfg = SimConfig::new(fleet_a100(n), run.catalog.clone(), Policy::qlm());
+        let m = Simulation::new(cfg, &trace).run(&trace);
+        SloClass::ALL
+            .iter()
+            .all(|&c| m.slo_attainment_class(c) >= 0.95)
+    };
+    let mut sim_min = None;
+    for n in 1..=8u32 {
+        if attained(n) {
+            sim_min = Some(n);
+            break;
+        }
+    }
+    let sim_min = sim_min.expect("8 A100s must suffice for 10 req/s of W_A");
+    let planner = CapacityPlanner::from_spec(&run.spec, run.catalog.clone(), a100_tier(8), k.seed);
+    let plan = planner.plan();
+    assert!(plan.feasible, "{plan:?}");
+    let planned = plan.count(GpuKind::A100);
+    assert!(
+        (planned as i64 - sim_min as i64).abs() <= 1,
+        "planner recommends {planned}, simulation-validated minimum is {sim_min}"
+    );
+}
+
+/// Burst-then-trickle workload: scale up for the burst, drain back down
+/// for the tail. The shape that makes a fixed fleet either too small
+/// (trough-sized) or wasteful (peak-sized) — Fig. 1's dichotomy.
+/// Vicuna-13B so the burst forms a real *waiting* backlog (Mistral's KV
+/// headroom would swallow it into the running batch).
+fn burst_then_trickle(seed: u64) -> Trace {
+    let spec = WorkloadSpec {
+        name: "burst-then-trickle".into(),
+        streams: vec![
+            RequestClassSpec {
+                class: SloClass::Interactive,
+                models: vec![ModelId(1)],
+                arrivals: ArrivalProcess::Poisson { rate: 40.0 },
+                count: 1000,
+                mega_fraction: 0.0,
+            },
+            RequestClassSpec {
+                class: SloClass::Batch1,
+                models: vec![ModelId(1)],
+                arrivals: ArrivalProcess::Poisson { rate: 0.5 },
+                count: 150,
+                mega_fraction: 0.0,
+            },
+        ],
+        sampler: ShareGptSampler::default(),
+    };
+    Trace::generate(&spec, seed)
+}
+
+fn autoscale_cfg() -> AutoscaleConfig {
+    let mut a = AutoscaleConfig::bounded(1, 4, GpuKind::A100);
+    // Test-scale hysteresis: seconds, not production SLO fractions.
+    a.up_frac = 0.1;
+    a.breach_passes = 2;
+    a.cooldown_s = 5.0;
+    a.calm_passes = 10;
+    a
+}
+
+/// Acceptance (satellite e2e): the autoscaled run attains at least the
+/// trough-sized static fleet's SLO rate while consuming fewer
+/// device-hours than the peak-sized static fleet.
+#[test]
+fn autoscale_beats_trough_attainment_with_fewer_device_hours_than_peak() {
+    let trace = burst_then_trickle(3);
+    let total = trace.len();
+    let run_static = |n: u32| {
+        let cfg = SimConfig::new(fleet_a100(n), ModelCatalog::paper(), Policy::qlm());
+        Simulation::new(cfg, &trace).run(&trace)
+    };
+    let trough = run_static(1);
+    let peak = run_static(4);
+    let auto = {
+        let mut cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
+        cfg.autoscale = Some(autoscale_cfg());
+        Simulation::new(cfg, &trace).run(&trace)
+    };
+    assert_eq!(auto.records.len(), total);
+    assert_eq!(auto.completed_count(), total, "{}", auto.summary());
+    assert!(auto.scale_ups >= 1, "the burst must provision capacity");
+    assert!(
+        auto.slo_attainment() >= trough.slo_attainment() - 1e-9,
+        "auto {} vs trough-static {}",
+        auto.slo_attainment(),
+        trough.slo_attainment()
+    );
+    assert!(
+        auto.device_seconds < peak.device_seconds,
+        "auto {:.0} device-seconds vs peak-static {:.0}",
+        auto.device_seconds,
+        peak.device_seconds
+    );
+}
+
+/// Acceptance (satellite): drain correctness — scale-down happens while
+/// the trickle is still arriving, and not a single request is lost.
+#[test]
+fn scale_down_drains_without_losing_requests() {
+    let trace = burst_then_trickle(11);
+    let total = trace.len();
+    let mut cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
+    cfg.autoscale = Some(autoscale_cfg());
+    let m = Simulation::new(cfg, &trace).run(&trace);
+    assert_eq!(m.completed_count(), total, "{}", m.summary());
+    assert!(m.scale_ups >= 1, "burst must scale up first");
+    assert!(
+        m.scale_downs >= 1,
+        "the 300 s trickle tail must drain the burst capacity \
+         (ups {}, downs {})",
+        m.scale_ups,
+        m.scale_downs
+    );
+    // Conservation: every request recorded exactly once, none shed.
+    let mut ids: Vec<u64> = m.records.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), total);
+    assert_eq!(m.shed_count(), 0);
+}
+
+/// Scale-down determinism: the drain path must not introduce ordering
+/// nondeterminism (same trace, same fleet history, same metrics).
+#[test]
+fn autoscaled_run_is_reproducible() {
+    let trace = burst_then_trickle(17);
+    let run = || {
+        let mut cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
+        cfg.autoscale = Some(autoscale_cfg());
+        Simulation::new(cfg, &trace).run(&trace)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.completed_count(), b.completed_count());
+    assert_eq!((a.scale_ups, a.scale_downs), (b.scale_ups, b.scale_downs));
+    assert!((a.device_seconds - b.device_seconds).abs() < 1e-9);
+    assert!((a.slo_attainment() - b.slo_attainment()).abs() < 1e-12);
+}
