@@ -486,6 +486,112 @@ fn bench_dirty_frac_sweep() {
     }
 }
 
+/// The parallel view/pricing pass (engine decomposition PR): per-
+/// instance view refresh fans out over `std::thread::scope`. Measured
+/// at a fleet large enough that per-view work dominates thread spawn
+/// cost; the speedup floor is asserted only when the host actually has
+/// ≥4 cores (CI runners vary). Correctness is asserted always: the
+/// threaded refresh digest and the threaded scheduler pricing must be
+/// bit-identical to serial.
+fn bench_par_views() {
+    const FLEET: usize = 2048;
+    let trace = Trace::generate(&WorkloadSpec::w_a(ModelId(0), 20.0, 64), 7);
+    let build = |threads: usize| {
+        let mut cfg = SimConfig::new(
+            fleet_a100(FLEET as u32),
+            ModelCatalog::paper(),
+            Policy::qlm(),
+        );
+        cfg.threads = threads;
+        Simulation::new(cfg, &trace)
+    };
+    let mut serial = build(1);
+    let mut par = build(4);
+    assert_eq!(
+        serial.refresh_views_for_bench(),
+        par.refresh_views_for_bench(),
+        "threaded view refresh must be bit-identical to serial"
+    );
+    let serial_ms = bench(
+        &format!("par_views/refresh {FLEET} views (threads=1)"),
+        30,
+        || {
+            serial.refresh_views_for_bench();
+            FLEET as u64
+        },
+    );
+    let par_ms = bench(
+        &format!("par_views/refresh {FLEET} views (threads=4)"),
+        30,
+        || {
+            par.refresh_views_for_bench();
+            FLEET as u64
+        },
+    );
+    let speedup = serial_ms / par_ms.max(1e-9);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!(
+        "par_views speedup: {speedup:.2}x threaded vs serial refresh \
+         ({serial_ms:.3} ms -> {par_ms:.3} ms, {cores} cores; floor 1.05x at >=4 cores)"
+    );
+    // The floor asserts a *wall-clock* property, so it is deliberately
+    // modest (the digest equality above is the hard correctness gate):
+    // 1.05x tolerates oversubscribed CI runners while still failing if
+    // the fan-out stops engaging entirely. It only arms when the serial
+    // pass is slow enough (>= 0.5 ms) for the measurement to dominate
+    // the ~20-50 µs/thread scoped-spawn overhead — below that, spawn
+    // cost swamps the signal and a "speedup" number is noise.
+    // QLM_SKIP_PAR_FLOOR opts a known-noisy host out entirely.
+    let meaningful = serial_ms >= 0.5;
+    if cores >= 4 && meaningful && std::env::var_os("QLM_SKIP_PAR_FLOOR").is_none() {
+        assert!(
+            speedup >= 1.05,
+            "parallel view refresh must beat serial on a multicore host, got {speedup:.2}x"
+        );
+    }
+
+    // The pricing half: the scheduler's per-queue repricing walk at the
+    // paper's 64-instance testbed scale. The full solve's assignment
+    // loop dominates wall time, so no speedup is asserted end to end —
+    // the walk's thread-safety contract (bit-identical plan + penalty)
+    // is what's enforced here.
+    let catalog = ModelCatalog::paper_multi_model();
+    let est = RwtEstimator::new(ProfileTable::default());
+    let vs = views(64, &catalog);
+    let groups: Vec<RequestGroup> = (0..1562u64)
+        .map(|g| grp(g, (g % 4) as u32, 256, 60.0 + (g % 7) as f64 * 300.0))
+        .collect();
+    let refs: Vec<&RequestGroup> = groups.iter().collect();
+    let mk = |threads: usize| {
+        GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                threads,
+                ..Default::default()
+            },
+            est.clone(),
+        )
+    };
+    let s1 = mk(1);
+    let s4 = mk(4);
+    let a = s1.schedule(&refs, &vs, 0.0);
+    let b = s4.schedule(&refs, &vs, 0.0);
+    assert_eq!(a.orders, b.orders, "threaded pricing changed the plan");
+    assert_eq!(
+        a.total_penalty_s.to_bits(),
+        b.total_penalty_s.to_bits(),
+        "threaded pricing changed the penalty"
+    );
+    bench("par_views/solve+reprice 64 q (threads=1)", 5, || {
+        s1.schedule(&refs, &vs, 0.0).stats.groups as u64
+    });
+    bench("par_views/solve+reprice 64 q (threads=4)", 5, || {
+        s4.schedule(&refs, &vs, 0.0).stats.groups as u64
+    });
+}
+
 fn bench_kv() {
     bench("kv_cache/alloc+append+free (1000 seqs)", 20, || {
         let mut kv = KvCache::new(500_000, 1_000_000);
@@ -622,6 +728,9 @@ fn main() {
     }
     if runs("capacity_plan") {
         bench_capacity_plan();
+    }
+    if runs("par_views") {
+        bench_par_views();
     }
     if runs("kv") {
         bench_kv();

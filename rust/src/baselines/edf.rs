@@ -1,0 +1,31 @@
+//! EDF baseline (§8, Experiment Setup): deadline-sorted singleton
+//! groups onto the least-loaded compatible instance. Swaps whenever the
+//! head model differs — Insight #3's thrashing case.
+
+use std::collections::HashMap;
+
+use crate::baselines::policy::{
+    pin_executing, place_least_loaded, sorted_groups, PolicyCtx, PolicyPlan, SchedulingPolicy,
+};
+
+pub struct EdfPolicy;
+
+impl SchedulingPolicy for EdfPolicy {
+    fn plan(&mut self, ctx: &PolicyCtx<'_>) -> PolicyPlan {
+        let groups = sorted_groups(ctx, |g| g.deadline());
+        let mut orders = HashMap::new();
+        let pinned = pin_executing(ctx, &mut orders);
+        place_least_loaded(
+            ctx,
+            &groups,
+            &pinned,
+            &mut orders,
+            |v, g| v.can_serve(g.model),
+            |g| g.len() as f64,
+        );
+        PolicyPlan {
+            orders,
+            unservable: Vec::new(),
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! vLLM baseline (§8, Experiment Setup): FCFS continuous batching onto
+//! the statically pinned instance with least load — no reordering,
+//! eviction, or swapping.
+
+use std::collections::HashMap;
+
+use crate::baselines::policy::{
+    pin_executing, place_least_loaded, sorted_groups, PolicyCtx, PolicyPlan, SchedulingPolicy,
+};
+
+pub struct FcfsPolicy;
+
+impl SchedulingPolicy for FcfsPolicy {
+    fn plan(&mut self, ctx: &PolicyCtx<'_>) -> PolicyPlan {
+        // FCFS = earliest arrival first (group id breaks Dump-trace ties).
+        let groups = sorted_groups(ctx, |g| g.earliest_arrival_s);
+        let mut orders = HashMap::new();
+        let pinned = pin_executing(ctx, &mut orders);
+        let pinned_model = ctx.pinned_model;
+        place_least_loaded(
+            ctx,
+            &groups,
+            &pinned,
+            &mut orders,
+            |v, g| pinned_model.get(&v.id) == Some(&g.model),
+            |g| g.len() as f64,
+        );
+        PolicyPlan {
+            orders,
+            unservable: Vec::new(),
+        }
+    }
+}

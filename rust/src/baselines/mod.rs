@@ -1,19 +1,41 @@
-//! Scheduling policies: QLM and the paper's three baselines (§8,
-//! Experiment Setup).
+//! Scheduling policies: QLM and the paper's baselines (§8, Experiment
+//! Setup), each behind the [`SchedulingPolicy`] seam the engine
+//! dispatches through.
 //!
 //! * **EDF** — requests sorted by SLO deadline; swaps whenever the head
 //!   model differs (Insight #3's thrashing); no eviction.
 //! * **vLLM** — default FCFS continuous batching; instances statically
 //!   pinned to models; no reordering, eviction, or swapping.
+//! * **SJF** — shortest-predicted-output-first (the SSJF /
+//!   length-prediction family): minimizes mean wait, SLO-blind.
 //! * **SHEPHERD** — request groups with an ILP-style placement, but built
 //!   on the DNN-serving assumptions the paper critiques: fixed-size
 //!   batches with deterministic (worst-case) execution-time estimates and
 //!   no continuous batching, which overestimates waiting time (Fig. 1).
 //! * **QLM** — request groups + RWT estimator + global scheduler + all
 //!   four LSOs.
+//!
+//! [`Policy`] is the cheap, copyable *name* of a strategy (CLI flags,
+//! metrics labels, LSO flag derivation); [`build_policy`] turns it into
+//! the stateful [`SchedulingPolicy`] implementation the engine drives.
+
+pub mod edf;
+pub mod fcfs;
+pub mod policy;
+pub mod qlm;
+pub mod round_robin;
+pub mod sjf;
+
+pub use edf::EdfPolicy;
+pub use fcfs::FcfsPolicy;
+pub use policy::{PolicyCtx, PolicyPlan, SchedulingPolicy};
+pub use qlm::QlmPolicy;
+pub use round_robin::RoundRobinPolicy;
+pub use sjf::SjfPolicy;
 
 use crate::coordinator::lso::LsoConfig;
-use crate::coordinator::scheduler::SolverKind;
+use crate::coordinator::rwt::RwtEstimator;
+use crate::coordinator::scheduler::{GlobalScheduler, SchedulerConfig, SolverKind};
 
 /// Which serving policy a simulation runs.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -27,6 +49,8 @@ pub enum Policy {
     Edf,
     /// Vanilla vLLM: FCFS, static model placement.
     VllmFcfs,
+    /// Shortest-predicted-output-first over individual requests.
+    Sjf,
     /// SHEPHERD-style: groups + placement, deterministic worst-case
     /// estimates, fixed batches, no eviction.
     Shepherd,
@@ -67,6 +91,7 @@ impl Policy {
             }
             Policy::Edf => "edf".into(),
             Policy::VllmFcfs => "vllm".into(),
+            Policy::Sjf => "sjf".into(),
             Policy::Shepherd => "shepherd".into(),
         }
     }
@@ -80,6 +105,12 @@ impl Policy {
                 eviction: false,
                 load_balancing: true,
                 model_swapping: true, // EDF swaps eagerly — the thrash case
+            },
+            Policy::Sjf => LsoConfig {
+                ordered_pulling: true,
+                eviction: false,
+                load_balancing: true,
+                model_swapping: true,
             },
             Policy::VllmFcfs => LsoConfig {
                 ordered_pulling: false,
@@ -115,6 +146,30 @@ impl Policy {
     }
 }
 
+/// Turn a policy name into the stateful [`SchedulingPolicy`] the engine
+/// dispatches through. `sched_cfg` and `estimator` configure the QLM
+/// global scheduler; per-request baselines take what they need from the
+/// estimator (SJF reads its profile table) and drop the rest.
+pub fn build_policy(
+    policy: Policy,
+    sched_cfg: SchedulerConfig,
+    estimator: RwtEstimator,
+) -> Box<dyn SchedulingPolicy> {
+    match policy {
+        Policy::VllmFcfs => Box::new(FcfsPolicy),
+        Policy::Edf => Box::new(EdfPolicy),
+        Policy::Sjf => Box::new(SjfPolicy::new(estimator.profiles.clone())),
+        // Load-balancing ablation: groups exist but placement is blind.
+        Policy::Qlm { lso, .. } if !lso.load_balancing => Box::new(RoundRobinPolicy),
+        // QLM proper and SHEPHERD (whose conservatism lives in the
+        // estimator profiles and the fixed-batch agent, not the solver).
+        _ => Box::new(QlmPolicy::new(
+            GlobalScheduler::new(sched_cfg, estimator),
+            policy.lso().model_swapping,
+        )),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,6 +180,7 @@ mod tests {
             Policy::qlm(),
             Policy::Edf,
             Policy::VllmFcfs,
+            Policy::Sjf,
             Policy::Shepherd,
         ]
         .iter()
@@ -159,5 +215,13 @@ mod tests {
         assert!(Policy::Shepherd.conservative_estimator());
         assert!(Policy::Shepherd.fixed_batches());
         assert!(!Policy::qlm().fixed_batches());
+    }
+
+    #[test]
+    fn sjf_is_a_per_request_policy() {
+        assert!(!Policy::Sjf.uses_groups());
+        assert!(!Policy::Sjf.conservative_estimator());
+        assert!(!Policy::Sjf.fixed_batches());
+        assert_eq!(Policy::Sjf.name(), "sjf");
     }
 }

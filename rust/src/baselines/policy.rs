@@ -1,0 +1,130 @@
+//! The `SchedulingPolicy` seam: one trait between the simulation engine
+//! and every queue-ordering strategy.
+//!
+//! The paper's architecture is explicitly layered — the global scheduler
+//! produces virtual-queue orderings, LSOs are "merely action actuators"
+//! (§5) — so the engine dispatches each scheduling pass through this
+//! trait and applies the returned orders verbatim. Adding a baseline or
+//! ablation is a new `impl SchedulingPolicy` file (see `sjf.rs` for the
+//! template), not an engine edit.
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::backend::{InstanceId, ModelId};
+use crate::coordinator::request_group::{GroupId, RequestGroup};
+use crate::coordinator::scheduler::InstanceView;
+
+/// Everything a policy may read when planning one pass. The engine owns
+/// all of it; the context borrows, so a pass never clones the group
+/// table (§Perf — the seed deep-cloned every group per invocation).
+pub struct PolicyCtx<'a> {
+    /// Live request groups (singleton groups for per-request policies).
+    pub groups: &'a HashMap<GroupId, RequestGroup>,
+    /// Scheduler views of the live, non-draining instances.
+    pub views: &'a [InstanceView],
+    /// Static model pinning for no-swap policies (vLLM baseline).
+    pub pinned_model: &'a HashMap<InstanceId, ModelId>,
+    /// Simulated time of this pass.
+    pub now: f64,
+    /// Groups whose membership, deadline anchor, or member states
+    /// changed since the last pass (engine dirty tracking). Baselines
+    /// that rebuild every queue per pass may ignore it.
+    pub dirty: &'a BTreeSet<GroupId>,
+    /// Groups that drained or dissolved since the last pass.
+    pub removed: &'a [GroupId],
+    /// The view set changed (failure / provision / drain): any cached
+    /// plan is unusable and incremental paths must full-solve.
+    pub force_full: bool,
+}
+
+/// One pass's plan. `orders` is a *patch*: instances present get their
+/// virtual queue replaced, instances absent keep their current order
+/// (full rebuilds simply emit every instance). `unservable` lists
+/// groups no instance can serve, for the engine's admission path.
+#[derive(Debug, Default)]
+pub struct PolicyPlan {
+    pub orders: HashMap<InstanceId, Vec<GroupId>>,
+    pub unservable: Vec<GroupId>,
+}
+
+/// A queue-ordering strategy, dispatched from the engine's
+/// `maybe_schedule`. Implementations may keep cross-pass state (the QLM
+/// policy caches its incremental plan); the engine tells them about
+/// group removals so caches never leak.
+pub trait SchedulingPolicy {
+    /// Plan one scheduler pass.
+    fn plan(&mut self, ctx: &PolicyCtx<'_>) -> PolicyPlan;
+
+    /// A group drained or dissolved; drop any cached per-group state.
+    fn group_removed(&mut self, _gid: GroupId) {}
+
+    /// Whether the engine should refresh instance warm sets from the
+    /// queues this plan touched (QLM's model-swapping path).
+    fn refreshes_warm_sets(&self) -> bool {
+        false
+    }
+}
+
+/// Shared helper: pin each view's executing group at the head of its
+/// order (no preemptive migration, §5) and return the pinned set.
+pub(crate) fn pin_executing(
+    ctx: &PolicyCtx<'_>,
+    orders: &mut HashMap<InstanceId, Vec<GroupId>>,
+) -> Vec<GroupId> {
+    for v in ctx.views {
+        let order = orders.entry(v.id).or_default();
+        if let Some(g) = v.executing {
+            if ctx.groups.contains_key(&g) {
+                order.push(g);
+            }
+        }
+    }
+    ctx.views.iter().filter_map(|v| v.executing).collect()
+}
+
+/// Shared helper: place `groups` (already sorted by the policy's
+/// priority) onto the least-loaded view accepted by `serves`, skipping
+/// `pinned` executing groups; `load_of` prices a group's contribution
+/// to its queue's load. One implementation behind the EDF/FCFS/SJF
+/// baselines so placement semantics (including the `min_by` tie-break
+/// and the silently-dropped-when-unserveable rule) cannot diverge.
+pub(crate) fn place_least_loaded<S, L>(
+    ctx: &PolicyCtx<'_>,
+    groups: &[&RequestGroup],
+    pinned: &[GroupId],
+    orders: &mut HashMap<InstanceId, Vec<GroupId>>,
+    serves: S,
+    load_of: L,
+) where
+    S: Fn(&InstanceView, &RequestGroup) -> bool,
+    L: Fn(&RequestGroup) -> f64,
+{
+    let mut load: HashMap<InstanceId, f64> = ctx.views.iter().map(|v| (v.id, 0.0)).collect();
+    for g in groups {
+        if pinned.contains(&g.id) {
+            continue;
+        }
+        let best = ctx
+            .views
+            .iter()
+            .filter(|v| serves(v, g))
+            .min_by(|a, b| load[&a.id].partial_cmp(&load[&b.id]).unwrap());
+        if let Some(v) = best {
+            orders.get_mut(&v.id).unwrap().push(g.id);
+            *load.get_mut(&v.id).unwrap() += load_of(g);
+        }
+    }
+}
+
+/// Shared helper: live groups sorted by `key` (ascending), group id as
+/// the final tie-break so plans are functions of the group *set*, not
+/// of `HashMap` iteration order.
+pub(crate) fn sorted_groups<'a, K, F>(ctx: &PolicyCtx<'a>, key: F) -> Vec<&'a RequestGroup>
+where
+    K: PartialOrd,
+    F: Fn(&RequestGroup) -> K,
+{
+    let mut groups: Vec<&RequestGroup> = ctx.groups.values().collect();
+    groups.sort_by(|a, b| key(a).partial_cmp(&key(b)).unwrap().then(a.id.cmp(&b.id)));
+    groups
+}

@@ -1,0 +1,73 @@
+//! QLM / SHEPHERD behind the policy seam: the full global scheduler
+//! (RWT estimation + greedy/MILP assignment + the incremental delta
+//! path) wrapped as a [`SchedulingPolicy`].
+
+use crate::baselines::policy::{PolicyCtx, PolicyPlan, SchedulingPolicy};
+use crate::coordinator::request_group::{GroupId, RequestGroup};
+use crate::coordinator::scheduler::{GlobalScheduler, SchedDelta};
+
+/// Global scheduling over request groups (§7), incremental in steady
+/// state.
+///
+/// §Perf: a pass with a small dirty set goes down the cached delta path
+/// — only dirty groups are re-priced and re-inserted against the cached
+/// plan, clean queues keep their position, and the returned orders are
+/// a patch covering only changed instances. Cold caches, view-set
+/// changes (`force_full`), and dirtiness above the configured threshold
+/// fall back to the full solve, which refreshes the cache.
+pub struct QlmPolicy {
+    scheduler: GlobalScheduler,
+    /// Refresh instance warm sets after a pass (model-swapping LSO on).
+    warm_sets: bool,
+}
+
+impl QlmPolicy {
+    pub fn new(scheduler: GlobalScheduler, warm_sets: bool) -> Self {
+        QlmPolicy {
+            scheduler,
+            warm_sets,
+        }
+    }
+}
+
+impl SchedulingPolicy for QlmPolicy {
+    fn plan(&mut self, ctx: &PolicyCtx<'_>) -> PolicyPlan {
+        let delta_try = if ctx.force_full || !self.scheduler.cfg.incremental {
+            None
+        } else {
+            let dirty: Vec<&RequestGroup> = ctx
+                .dirty
+                .iter()
+                .filter_map(|g| ctx.groups.get(g))
+                .collect();
+            let delta = SchedDelta {
+                dirty,
+                removed: ctx.removed.to_vec(),
+                total_groups: ctx.groups.len(),
+            };
+            self.scheduler.try_schedule_delta(&delta, ctx.views, ctx.now)
+        };
+        let assignment = match delta_try {
+            Some(a) => a,
+            None => {
+                // Full solve. Pass references — the seed cloned every
+                // group (and every member list) per invocation.
+                let group_refs: Vec<&RequestGroup> = ctx.groups.values().collect();
+                self.scheduler.schedule(&group_refs, ctx.views, ctx.now)
+            }
+        };
+        PolicyPlan {
+            orders: assignment.orders,
+            unservable: assignment.unservable,
+        }
+    }
+
+    fn group_removed(&mut self, gid: GroupId) {
+        // The group is gone: its memoized service prices go with it.
+        self.scheduler.estimator.forget_group(gid);
+    }
+
+    fn refreshes_warm_sets(&self) -> bool {
+        self.warm_sets
+    }
+}

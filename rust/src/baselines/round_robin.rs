@@ -1,0 +1,49 @@
+//! Load-balancing ablation (Fig. 15's round-robin comparator, and the
+//! `-nolb` rows of Figs. 11/14): groups are dealt round-robin to
+//! compatible instances with no RWT-informed placement; per-queue
+//! ordering keeps deadline order.
+
+use std::collections::HashMap;
+
+use crate::backend::InstanceId;
+use crate::baselines::policy::{
+    pin_executing, sorted_groups, PolicyCtx, PolicyPlan, SchedulingPolicy,
+};
+use crate::coordinator::request_group::GroupId;
+
+pub struct RoundRobinPolicy;
+
+impl SchedulingPolicy for RoundRobinPolicy {
+    fn plan(&mut self, ctx: &PolicyCtx<'_>) -> PolicyPlan {
+        let groups = sorted_groups(ctx, |g| g.deadline());
+        let mut orders: HashMap<InstanceId, Vec<GroupId>> = HashMap::new();
+        let pinned = pin_executing(ctx, &mut orders);
+        let views = ctx.views;
+        let mut rr = 0usize;
+        for g in groups {
+            if pinned.contains(&g.id) {
+                continue;
+            }
+            // Next compatible instance in rotation, blind to load.
+            let mut placed = false;
+            for k in 0..views.len() {
+                let v = &views[(rr + k) % views.len()];
+                if v.can_serve(g.model) {
+                    orders.get_mut(&v.id).unwrap().push(g.id);
+                    rr = (rr + k + 1) % views.len();
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                if let Some(v) = views.first() {
+                    orders.get_mut(&v.id).unwrap().push(g.id);
+                }
+            }
+        }
+        PolicyPlan {
+            orders,
+            unservable: Vec::new(),
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! SJF baseline: shortest-predicted-output-first.
+//!
+//! The length-prediction family of schedulers (SSJF / slice-level
+//! scheduling, arXiv 2406.13511): requests whose *predicted* decode
+//! length is shortest run first, which minimizes mean waiting time but
+//! is SLO-blind — a long interactive request queues behind every short
+//! batch job. Predictions come from the same per-(model, class, mega)
+//! output moments the RWT estimator profiles offline (§6), i.e. a
+//! class-granular proxy predictor. Placement is least predicted pending
+//! tokens over compatible instances.
+//!
+//! Also the proof that the [`SchedulingPolicy`] seam is cheap: this
+//! whole baseline is one self-contained file.
+
+use std::collections::HashMap;
+
+use crate::baselines::policy::{
+    pin_executing, place_least_loaded, sorted_groups, PolicyCtx, PolicyPlan, SchedulingPolicy,
+};
+use crate::coordinator::rwt::ProfileTable;
+
+pub struct SjfPolicy {
+    profiles: ProfileTable,
+}
+
+impl SjfPolicy {
+    pub fn new(profiles: ProfileTable) -> Self {
+        SjfPolicy { profiles }
+    }
+}
+
+impl SchedulingPolicy for SjfPolicy {
+    fn plan(&mut self, ctx: &PolicyCtx<'_>) -> PolicyPlan {
+        let profiles = &self.profiles;
+        // Shortest predicted output first; arrival breaks prediction
+        // ties so equal-length requests stay FCFS.
+        let groups = sorted_groups(ctx, |g| {
+            (
+                profiles.get(g.model, g.class, g.mega).mu_out,
+                g.earliest_arrival_s,
+            )
+        });
+        let mut orders = HashMap::new();
+        let pinned = pin_executing(ctx, &mut orders);
+        place_least_loaded(
+            ctx,
+            &groups,
+            &pinned,
+            &mut orders,
+            |v, g| v.can_serve(g.model),
+            |g| profiles.get(g.model, g.class, g.mega).mu_out * g.len() as f64,
+        );
+        PolicyPlan {
+            orders,
+            unservable: Vec::new(),
+        }
+    }
+}

@@ -105,6 +105,11 @@ pub struct SchedulerConfig {
     /// always bails and full solves never store a plan cache (they
     /// still price plans with the same shared walk).
     pub incremental: bool,
+    /// Worker threads for the per-queue repricing walk of a full solve
+    /// (each queue's walk is independent; results are merged in index
+    /// order, so the plan and the summed penalty are bit-identical to
+    /// the serial pass). 1 = serial; wired from `SimConfig::threads`.
+    pub threads: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -115,6 +120,7 @@ impl Default for SchedulerConfig {
             node_limit: 20_000,
             incremental_dirty_frac: 0.5,
             incremental: true,
+            threads: 1,
         }
     }
 }
@@ -201,6 +207,12 @@ struct CachedQueue {
     order: Vec<GroupId>,
     tail: QTail,
     penalty: f64,
+    /// The `now` the penalty was last priced at (full walk), advanced
+    /// by the constant-time re-anchor on untouched delta passes.
+    priced_at: f64,
+    /// Groups violating at the last walk — the penalty's d/dt slope
+    /// (each violating group's penalty grows one second per second).
+    viol_groups: u32,
     active_model: Option<ModelId>,
     executing: Option<GroupId>,
 }
@@ -555,15 +567,26 @@ impl GlobalScheduler {
                 order,
                 tail: QTail::default(),
                 penalty: 0.0,
+                priced_at: now,
+                viol_groups: 0,
                 active_model: v.active_model,
                 executing: v.executing,
             });
         }
-        let mut total = 0.0;
-        for (cq, v) in queues.iter_mut().zip(instances) {
-            reprice_queue(cq, &pricing, v, now);
-            total += cq.penalty;
-        }
+        // §Perf: each queue's repricing walk is independent of every
+        // other's (it reads only the shared pricing table), so the
+        // walks fan out over the shared scoped-thread primitive
+        // (`util::par_chunks_mut`, same gate and chunking as the
+        // engine's view refresh). Queues stay in instance order and the
+        // penalty is summed sequentially afterwards, so the result is
+        // bit-identical to the serial pass whatever the thread count.
+        let view_of: HashMap<InstanceId, &InstanceView> =
+            instances.iter().map(|v| (v.id, v)).collect();
+        let pricing_ref = &pricing;
+        crate::util::par_chunks_mut(&mut queues, self.cfg.threads, |cq| {
+            reprice_queue(cq, pricing_ref, view_of[&cq.id], now);
+        });
+        let total: f64 = queues.iter().map(|q| q.penalty).sum();
         // With the delta path disabled there is no consumer for the
         // plan cache — the walk above still ran (it *is* the penalty
         // computation), but keep no state a disabled path could read.
@@ -586,11 +609,16 @@ impl GlobalScheduler {
     /// runs [`Self::schedule`], which refreshes the cache.
     ///
     /// Cost is O(dirty × instances + touched queue lengths); clean
-    /// queues keep their order, tail state, and last-priced penalty (an
-    /// amortized approximation: their penalties are not re-anchored to
-    /// `now` until something touches them). Per-queue ordering on
-    /// touched queues is greedy affinity-EDF only; `Auto`-mode MILP
-    /// refinement re-applies at the next full solve.
+    /// queues keep their order and tail state, and their last-priced
+    /// penalty is *re-anchored* to `now` in constant time: each
+    /// violating group's penalty grows exactly one second per second,
+    /// so the queue's penalty advances by `(now − priced_at) ×
+    /// viol_groups` without a walk. (Groups that newly *cross into*
+    /// violation between walks are still picked up only when the queue
+    /// is touched — the remaining, second-order amortization.)
+    /// Per-queue ordering on touched queues is greedy affinity-EDF
+    /// only; `Auto`-mode MILP refinement re-applies at the next full
+    /// solve.
     pub fn try_schedule_delta(
         &self,
         delta: &SchedDelta,
@@ -748,14 +776,23 @@ impl GlobalScheduler {
             }
         }
 
-        // 4. Reorder + re-price touched queues from cached pricing.
+        // 4. Reorder + re-price touched queues from cached pricing;
+        //    re-anchor untouched queues' penalties to `now` via the
+        //    constant-time epoch offset (violating groups accrue one
+        //    second of penalty per second — no walk needed).
         for (k, v) in instances.iter().enumerate() {
-            if !touched[k] {
-                continue;
+            if touched[k] {
+                let cq = &mut queues[k];
+                reorder_cached(cq, pricing);
+                reprice_queue(cq, pricing, v, now);
+            } else {
+                let cq = &mut queues[k];
+                let dt = now - cq.priced_at;
+                if dt > 0.0 {
+                    cq.penalty += dt * cq.viol_groups as f64;
+                    cq.priced_at = now;
+                }
             }
-            let cq = &mut queues[k];
-            reorder_cached(cq, pricing);
-            reprice_queue(cq, pricing, v, now);
         }
 
         // 5. Assemble the patch: orders only for queues that changed.
@@ -997,7 +1034,9 @@ fn reorder_cached(cq: &mut CachedQueue, pricing: &HashMap<GroupId, GroupPricing>
 
 /// Walk a cached order front-to-back, recomputing the queue's tail
 /// state (what a greedy append sees) and its penalty from the pricing
-/// table alone.
+/// table alone. Also records the pricing epoch (`priced_at`) and the
+/// violating-group count — the slope the delta path uses to re-anchor
+/// this queue's penalty to a later `now` in constant time.
 fn reprice_queue(
     cq: &mut CachedQueue,
     pricing: &HashMap<GroupId, GroupPricing>,
@@ -1010,18 +1049,25 @@ fn reprice_queue(
         load: 0.0,
     };
     let mut penalty = 0.0;
+    let mut viol = 0u32;
     for gid in &cq.order {
         let Some(p) = pricing.get(gid) else { continue };
         if tail.tail_model != Some(p.model) {
             tail.wait += v.swap_s(p.model);
         }
         tail.tail_model = Some(p.model);
-        penalty += (tail.wait + p.svc_s - (p.deadline - now)).max(0.0);
+        let pen = (tail.wait + p.svc_s - (p.deadline - now)).max(0.0);
+        if pen > 0.0 {
+            viol += 1;
+        }
+        penalty += pen;
         tail.wait += p.svc_s;
         tail.load += p.len as f64;
     }
     cq.tail = tail;
     cq.penalty = penalty;
+    cq.priced_at = now;
+    cq.viol_groups = viol;
 }
 
 /// Split a queue into (pinned executing head, reorderable rest).
@@ -1499,6 +1545,75 @@ mod tests {
         assert!(
             sched.try_schedule_delta(&d, &views, 0.0).is_none(),
             "4/8 dirty exceeds the 25% threshold"
+        );
+    }
+
+    #[test]
+    fn delta_reanchors_untouched_queue_penalties() {
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        // Every group violating at t=0: 256-member groups, 5 s SLOs —
+        // each violating group's penalty grows one second per second.
+        let groups: Vec<RequestGroup> = (0..8).map(|i| grp(i, 0, 256, 0.0, 5.0)).collect();
+        let refs: Vec<&RequestGroup> = groups.iter().collect();
+        let views = vec![view(0, &[0], Some(0)), view(1, &[0], Some(0))];
+        let full = sched.schedule(&refs, &views, 0.0);
+        assert!(full.total_penalty_s > 0.0);
+        let d = SchedDelta {
+            total_groups: groups.len(),
+            ..Default::default()
+        };
+        // An empty delta 10 s later must re-anchor the untouched queues:
+        // 8 violating groups × 10 s of extra lateness.
+        let a = sched.try_schedule_delta(&d, &views, 10.0).expect("warm");
+        assert!(
+            (a.total_penalty_s - (full.total_penalty_s + 80.0)).abs() < 1e-6,
+            "expected {} + 80, got {}",
+            full.total_penalty_s,
+            a.total_penalty_s
+        );
+        // A second pass advances from the new anchor, not from t=0.
+        let b = sched.try_schedule_delta(&d, &views, 15.0).expect("warm");
+        assert!(
+            (b.total_penalty_s - (a.total_penalty_s + 40.0)).abs() < 1e-6,
+            "expected {} + 40, got {}",
+            a.total_penalty_s,
+            b.total_penalty_s
+        );
+    }
+
+    #[test]
+    fn parallel_repricing_is_bit_identical_to_serial() {
+        let mk = |threads: usize| {
+            GlobalScheduler::new(
+                SchedulerConfig {
+                    solver: SolverKind::Greedy,
+                    threads,
+                    ..Default::default()
+                },
+                estimator(),
+            )
+        };
+        let groups: Vec<RequestGroup> = (0..48)
+            .map(|i| {
+                let slo = 30.0 + (i % 7) as f64 * 150.0;
+                grp(i, (i % 2) as u32 * 3, 16 + (i % 5) as usize, i as f64 * 0.1, slo)
+            })
+            .collect();
+        let refs: Vec<&RequestGroup> = groups.iter().collect();
+        let views: Vec<InstanceView> = (0..8).map(|i| view(i, &[0, 3], Some(0))).collect();
+        let serial = mk(1).schedule(&refs, &views, 3.0);
+        let par = mk(4).schedule(&refs, &views, 3.0);
+        assert_eq!(serial.orders, par.orders, "plan must not depend on threads");
+        assert_eq!(
+            serial.total_penalty_s.to_bits(),
+            par.total_penalty_s.to_bits(),
+            "penalty must be bit-identical across thread counts"
         );
     }
 

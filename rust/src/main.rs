@@ -6,7 +6,9 @@
 //!
 //! ```text
 //! qlm sim [--scenario S] [--list] [--policy P] [--rate R] [--requests N]
-//!         [--fleet N] [--seed S] [--horizon SECS]
+//!         [--fleet N] [--seed S] [--horizon SECS] [--threads N]
+//! qlm compare [--scenario S] [--rate R] [--requests N] [--fleet N]
+//!             [--seed S] [--threads N]       Fig. 11/14 policy table
 //! qlm plan [--scenario S] [--rate R] [--requests N] [--horizon SECS]
 //!          [--max-a100 N] [--max-a10 N] [--util F]    capacity planner
 //! qlm figures [--fig N] [--full]         regenerate paper figures
@@ -20,11 +22,11 @@ use std::process::ExitCode;
 
 use qlm::backend::{GpuKind, ModelCatalog, ModelId};
 use qlm::baselines::Policy;
-use qlm::capacity::{AdmissionConfig, CapacityPlanner, PlannerConfig, TierSpec};
+use qlm::capacity::{CapacityPlanner, PlannerConfig, TierSpec};
 use qlm::coordinator::lso::LsoConfig;
 use qlm::figures::{run_figure, Scale, ALL_FIGURES};
 use qlm::sim::{fleet_a100, SimConfig, Simulation};
-use qlm::workload::{Scenario, ScenarioKnobs, SloClass, Trace, WorkloadSpec};
+use qlm::workload::{Scenario, ScenarioKnobs, ScenarioRun, SloClass, Trace, WorkloadSpec};
 
 /// Minimal flag parser: --key value / --switch.
 struct Args {
@@ -87,11 +89,14 @@ fn usage() -> ExitCode {
 USAGE:
   qlm sim [--scenario burst|diurnal|mixed-slo|multi-model|failover|scale|autoscale]
           [--list] [--policy P] [--rate R] [--requests N] [--fleet N] [--seed S]
-          [--horizon SECS] [--full-solve]
+          [--horizon SECS] [--full-solve] [--threads N]
+  qlm compare [--scenario S] [--rate R] [--requests N] [--fleet N] [--seed S]
+              [--horizon SECS] [--threads N]    every policy + LSO ablation,
+              one shared trace (Fig. 11/14 table)
   qlm plan [--scenario S] [--rate R] [--requests N] [--horizon SECS]
            [--max-a100 N] [--max-a10 N] [--util F] [--seed S]
   qlm figures [--fig N] [--full]
-  qlm simulate [--policy qlm|edf|vllm|shepherd|qlm-noevict|qlm-noswap|qlm-nolb]
+  qlm simulate [--policy qlm|edf|vllm|sjf|shepherd|qlm-noevict|qlm-noswap|qlm-nolb]
                [--rate R] [--requests N] [--fleet N] [--multi-model] [--seed S]
   qlm serve [--artifacts DIR] [--requests N] [--fcfs] [--max-new N]
   qlm bench-scheduler"
@@ -99,11 +104,48 @@ USAGE:
     ExitCode::from(2)
 }
 
+/// Resolve `--scenario`, printing the canonical unknown-scenario error.
+fn parse_scenario(args: &Args) -> Option<Scenario> {
+    let name = args.get("scenario").unwrap_or("mixed-slo");
+    let scenario = Scenario::from_name(name);
+    if scenario.is_none() {
+        eprintln!(
+            "unknown scenario {name} \
+             (known: burst, diurnal, mixed-slo, multi-model, failover, scale, autoscale)"
+        );
+    }
+    scenario
+}
+
+/// Assemble the simulation config shared by `qlm sim` and `qlm compare`:
+/// the scenario's fleet/catalog/failures/capacity settings plus the
+/// shared CLI switches. `--full-solve` disables the incremental
+/// scheduler (the Fig. 20 overhead baseline; see `cargo bench --
+/// sched_incremental`); `--threads N` fans the view/pricing pass out
+/// over N workers (identical metrics to serial; `cargo bench --
+/// par_views`). Keeping this in one place is what guarantees the
+/// compare table runs under exactly the config `qlm sim` would use.
+fn scenario_sim_config(
+    run: &ScenarioRun,
+    policy: Policy,
+    seed: u64,
+    horizon_s: f64,
+    args: &Args,
+) -> SimConfig {
+    let mut cfg = run.sim_config(policy);
+    cfg.seed = seed;
+    cfg.horizon_s = horizon_s;
+    cfg.sched_incremental = !args.has("full-solve");
+    cfg.threads = args.get_usize("threads", 1);
+    cfg
+}
+
 fn parse_policy(name: &str) -> Option<Policy> {
     Some(match name {
         "qlm" => Policy::qlm(),
         "edf" => Policy::Edf,
         "vllm" => Policy::VllmFcfs,
+        "sjf" => Policy::Sjf,
         "shepherd" => Policy::Shepherd,
         "qlm-noevict" => Policy::qlm_with(LsoConfig::without_eviction()),
         "qlm-noswap" => Policy::qlm_with(LsoConfig::without_swapping()),
@@ -150,12 +192,7 @@ fn cmd_sim(args: &Args) -> ExitCode {
         }
         return ExitCode::SUCCESS;
     }
-    let name = args.get("scenario").unwrap_or("mixed-slo");
-    let Some(scenario) = Scenario::from_name(name) else {
-        eprintln!(
-            "unknown scenario {name} \
-             (known: burst, diurnal, mixed-slo, multi-model, failover, scale, autoscale)"
-        );
+    let Some(scenario) = parse_scenario(args) else {
         return ExitCode::from(2);
     };
     let policy = match parse_policy(args.get("policy").unwrap_or("qlm")) {
@@ -204,17 +241,7 @@ fn cmd_sim(args: &Args) -> ExitCode {
             );
         }
     }
-    let mut cfg = SimConfig::new(run.fleet, run.catalog, policy);
-    cfg.seed = knobs.seed;
-    cfg.horizon_s = horizon_s;
-    cfg.failures = run.failures.clone();
-    cfg.autoscale = run.autoscale;
-    if run.admission {
-        cfg.admission = AdmissionConfig::enabled();
-    }
-    // `--full-solve` disables the incremental scheduler (the Fig. 20
-    // overhead baseline; see `cargo bench -- sched_incremental`).
-    cfg.sched_incremental = !args.has("full-solve");
+    let cfg = scenario_sim_config(&run, policy, knobs.seed, horizon_s, args);
     let wall = std::time::Instant::now();
     let m = Simulation::new(cfg, &trace).run(&trace);
     let wall_s = wall.elapsed().as_secs_f64();
@@ -251,14 +278,73 @@ fn cmd_sim(args: &Args) -> ExitCode {
     ExitCode::SUCCESS
 }
 
+/// Multi-SLO policy shoot-out (the Fig. 11/14 reproduction): run every
+/// policy plus the four LSO ablations over ONE shared trace and print
+/// an SLO-attainment / throughput / preemption table. The first
+/// consumer of the `SchedulingPolicy` seam — adding a policy here is
+/// one line once it exists in `baselines/`.
+fn cmd_compare(args: &Args) -> ExitCode {
+    let Some(scenario) = parse_scenario(args) else {
+        return ExitCode::from(2);
+    };
+    let horizon_s = args.get_f64("horizon", 7200.0);
+    let rate = args.get_f64("rate", scenario.default_rate());
+    // Compare runs many simulations, so the default size is a table-
+    // scale sample, not the scenario's horizon-filling request count.
+    let knobs = ScenarioKnobs {
+        rate,
+        requests: args.get_usize("requests", 2000),
+        fleet: args.get_usize("fleet", scenario.default_fleet() as usize) as u32,
+        seed: args.get_usize("seed", 42) as u64,
+    };
+    let run = scenario.build(&knobs);
+    let trace = Trace::generate(&run.spec, knobs.seed);
+    let policies: Vec<Policy> = vec![
+        Policy::qlm(),
+        Policy::qlm_with(LsoConfig::without_eviction()),
+        Policy::qlm_with(LsoConfig::without_swapping()),
+        Policy::qlm_with(LsoConfig::without_load_balancing()),
+        Policy::qlm_with(LsoConfig::without_ordered_pulling()),
+        Policy::Shepherd,
+        Policy::Edf,
+        Policy::Sjf,
+        Policy::VllmFcfs,
+    ];
+    println!(
+        "compare on scenario {} — {} requests, {} instances, rate {:.1} req/s, seed {}",
+        run.name,
+        trace.len(),
+        run.fleet.len(),
+        knobs.rate,
+        knobs.seed,
+    );
+    println!(
+        "{:<12} {:>6} {:>6} {:>6} {:>6} {:>9} {:>9} {:>8} {:>7} {:>6}",
+        "policy", "slo%", "int%", "b1%", "b2%", "thr r/s", "p99ttft", "preempt", "evict", "swaps"
+    );
+    for policy in policies {
+        let cfg = scenario_sim_config(&run, policy, knobs.seed, horizon_s, args);
+        let m = Simulation::new(cfg, &trace).run(&trace);
+        println!(
+            "{:<12} {:>6.1} {:>6.1} {:>6.1} {:>6.1} {:>9.2} {:>8.2}s {:>8} {:>7} {:>6}",
+            m.policy,
+            100.0 * m.slo_attainment(),
+            100.0 * m.slo_attainment_class(SloClass::Interactive),
+            100.0 * m.slo_attainment_class(SloClass::Batch1),
+            100.0 * m.slo_attainment_class(SloClass::Batch2),
+            m.throughput_rps(),
+            m.ttft_percentile(99.0),
+            m.total_internal_preemptions(),
+            m.total_evictions(),
+            m.total_model_swaps(),
+        );
+    }
+    ExitCode::SUCCESS
+}
+
 /// Offline capacity planning: what fleet does this workload need?
 fn cmd_plan(args: &Args) -> ExitCode {
-    let name = args.get("scenario").unwrap_or("mixed-slo");
-    let Some(scenario) = Scenario::from_name(name) else {
-        eprintln!(
-            "unknown scenario {name} \
-             (known: burst, diurnal, mixed-slo, multi-model, failover, scale, autoscale)"
-        );
+    let Some(scenario) = parse_scenario(args) else {
         return ExitCode::from(2);
     };
     let horizon_s = args.get_f64("horizon", 7200.0);
@@ -446,6 +532,7 @@ fn main() -> ExitCode {
     let args = Args::parse(&argv);
     match args.positional.first().map(String::as_str) {
         Some("sim") => cmd_sim(&args),
+        Some("compare") => cmd_compare(&args),
         Some("plan") => cmd_plan(&args),
         Some("figures") => cmd_figures(&args),
         Some("simulate") => cmd_simulate(&args),

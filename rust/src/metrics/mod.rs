@@ -3,8 +3,9 @@
 
 use std::collections::HashMap;
 
-use crate::backend::ModelId;
+use crate::backend::{Instance, ModelId};
 use crate::coordinator::request::{Request, RequestState};
+use crate::coordinator::GlobalQueue;
 use crate::workload::SloClass;
 
 /// Final record for one request.
@@ -165,6 +166,12 @@ impl RunMetrics {
         self.instances.iter().map(|i| i.lso_evictions).sum()
     }
 
+    /// KV-overflow preemptions inside instances (vLLM-internal recompute
+    /// /swap events) — the preemption column of the `qlm compare` table.
+    pub fn total_internal_preemptions(&self) -> u64 {
+        self.instances.iter().map(|i| i.internal_preemptions).sum()
+    }
+
     pub fn completed_count(&self) -> usize {
         self.records
             .iter()
@@ -209,6 +216,41 @@ impl RunMetrics {
             self.total_evictions(),
         )
     }
+}
+
+/// Close the books on a run: one [`RequestRecord`] per request, exactly
+/// once, sorted by id — completed requests, still-waiting requests
+/// (violations), running-but-unfinished sequences *including* internally
+/// preempted ones parked in CPU swap (Running in the broker but absent
+/// from both `waiting_ids()` and `running()`, which used to vanish from
+/// the records entirely, undercounting violations), and shed requests
+/// (admission control / unservable retirement).
+pub fn collect_records(queue: &GlobalQueue, instances: &[Instance]) -> Vec<RequestRecord> {
+    let mut records: Vec<RequestRecord> = queue
+        .completed
+        .iter()
+        .map(RequestRecord::from_request)
+        .collect();
+    for id in queue.waiting_ids() {
+        if let Some(r) = queue.get(id) {
+            records.push(RequestRecord::from_request(r));
+        }
+    }
+    for inst in instances {
+        for s in inst.running().iter().chain(inst.swapped()) {
+            if let Some(r) = queue.get(s.req_id) {
+                records.push(RequestRecord::from_request(r));
+            }
+        }
+    }
+    for &id in queue.shed_ids() {
+        if let Some(r) = queue.get(id) {
+            records.push(RequestRecord::from_request(r));
+        }
+    }
+    records.sort_by_key(|r| r.id);
+    records.dedup_by_key(|r| r.id);
+    records
 }
 
 /// Convert a finished instance into metrics.

@@ -1,49 +1,57 @@
 //! The discrete-event simulation engine.
 //!
-//! Events are (time, seq, kind) in a min-heap; instances wake to run one
-//! continuous-batching iteration, QLM agents actuate LSOs at wake time,
-//! and the global scheduler reorders virtual queues when the RWT
-//! estimator flags trouble (§3.1 lifecycle).
+//! The engine is deliberately thin — the paper's architecture is
+//! layered (§5: the global scheduler produces queue orderings, LSOs are
+//! "merely action actuators"), and the engine mirrors that as four
+//! seams:
 //!
-//! §Perf: the event loop is allocation-light in steady state. Per-instance
-//! state (virtual queues, agents, wake dedup, liveness) lives in dense
-//! `Vec`s indexed by `InstanceId` rather than `HashMap`s; instance views
-//! are built once and refreshed in place per scheduler pass; and the
-//! global scheduler receives group *references* instead of a deep clone
-//! of every live group. The seed implementation cloned the virtual queue
-//! and agent on every wake and the entire group table on every schedule.
+//! * [`EventCore`](super::event) — clock, event heap, wake dedup. All
+//!   time-ordering logic lives there.
+//! * [`SchedulingPolicy`](crate::baselines::SchedulingPolicy) — every
+//!   queue-ordering strategy (QLM's incremental global scheduler, the
+//!   EDF/FCFS/round-robin/SJF baselines) behind one trait, dispatched
+//!   from [`Simulation::maybe_schedule`]. A new policy is a new file in
+//!   `baselines/`, not an engine edit.
+//! * [`FleetController`](super::fleet_controller) — instance lifecycle
+//!   (provision / drain / decommission / fail, the device-seconds
+//!   ledger) and the only bridge to the capacity subsystem.
+//! * A parallel view/pricing pass — per-instance view refresh fans out
+//!   over `std::thread::scope` (`SimConfig::threads`), merged in index
+//!   order so results are bit-identical to the serial pass.
 //!
-//! On top of that, scheduling itself is *incremental*: the engine tracks
-//! which groups went dirty since the last pass (arrivals, pulls,
-//! evictions, drains, failures) and hands the global scheduler just that
-//! delta; the scheduler patches its cached plan instead of re-solving
-//! the whole table, which is what lets `--scenario scale` push 100K+
-//! queued requests through the paper's Fig. 20 regime.
+//! §Perf: the event loop is allocation-light in steady state. Per-
+//! instance state lives in dense `Vec`s indexed by `InstanceId`;
+//! instance views are built once and refreshed in place per scheduler
+//! pass; the policy receives group *references* (never a clone of the
+//! table); and scheduling is *incremental* — the engine tracks which
+//! groups went dirty since the last pass (arrivals, pulls, evictions,
+//! drains, failures) and hands the policy just that delta, which is
+//! what lets `--scenario scale` push 100K+ queued requests through the
+//! paper's Fig. 20 regime.
 
-use std::cmp::Reverse;
-use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap, VecDeque};
+use std::collections::{BTreeSet, HashMap, VecDeque};
 use std::time::Instant as WallInstant;
 
 use crate::backend::{
     Instance, InstanceConfig, InstanceId, ModelCatalog, ModelId, PerfModel, RunningSeq,
 };
-use crate::baselines::Policy;
+use crate::baselines::{build_policy, Policy, PolicyCtx, SchedulingPolicy};
 use crate::capacity::{
-    AdmissionConfig, AdmissionController, AutoscaleConfig, Autoscaler, ClassPressure,
-    ScaleDecision,
+    AdmissionConfig, AdmissionController, AutoscaleConfig, Autoscaler, ScaleDecision,
 };
 use crate::coordinator::agent::{InstanceObservation, QlmAgent};
 use crate::coordinator::lso::LsoAction;
 use crate::coordinator::request::{Request, RequestState};
 use crate::coordinator::request_group::{GroupId, Grouper, RequestGroup};
 use crate::coordinator::rwt::{ProfileTable, RwtEstimator};
-use crate::coordinator::scheduler::{
-    GlobalScheduler, InstanceView, SchedDelta, SchedulerConfig, SolverKind,
-};
+use crate::coordinator::scheduler::{InstanceView, SchedulerConfig, SolverKind};
 use crate::coordinator::virtual_queue::VirtualQueue;
 use crate::coordinator::GlobalQueue;
-use crate::metrics::{instance_metrics, RequestRecord, RunMetrics};
-use crate::sim::profiler::ThetaCache;
+use crate::metrics::{collect_records, instance_metrics, RunMetrics};
+use crate::sim::event::{EventCore, EventKind};
+use crate::sim::fleet_controller::{static_pinning, FleetController};
+use crate::sim::profiler::{conservative_profiles, ThetaCache};
+use crate::sim::views;
 use crate::workload::{SloClass, Trace};
 
 /// Simulation parameters.
@@ -70,6 +78,12 @@ pub struct SimConfig {
     /// default). Off forces a full re-solve every pass — the Fig. 20
     /// overhead baseline and the `sched_incremental` bench comparator.
     pub sched_incremental: bool,
+    /// Worker threads for the parallel view/pricing pass (`qlm sim
+    /// --threads N`). The per-instance view refresh and the scheduler's
+    /// per-queue repricing walk fan out over `std::thread::scope` with
+    /// an index-ordered merge, so any thread count produces the same
+    /// `RunMetrics` bit for bit. 1 (default) = fully serial.
+    pub threads: usize,
     /// Runtime autoscaling (capacity subsystem): provision instances
     /// under sustained predicted violations, drain them when calm.
     /// `fleet` is the starting fleet; the autoscaler grows/shrinks it
@@ -94,46 +108,10 @@ impl SimConfig {
             sched_interval_s: 0.25,
             failures: Vec::new(),
             sched_incremental: true,
+            threads: 1,
             autoscale: None,
             admission: AdmissionConfig::default(),
         }
-    }
-}
-
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum EventKind {
-    Arrival(usize),
-    Wake(InstanceId),
-    Fail(InstanceId),
-    /// A provisioned instance finishes its cold start and joins the
-    /// fleet (autoscaler scale-up).
-    Provision(InstanceId),
-}
-
-#[derive(Debug, Clone, Copy)]
-struct Event {
-    t: f64,
-    seq: u64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.t
-            .partial_cmp(&other.t)
-            .unwrap()
-            .then(self.seq.cmp(&other.seq))
     }
 }
 
@@ -161,73 +139,43 @@ fn waiting_members(
 /// The simulator.
 pub struct Simulation {
     cfg: SimConfig,
-    now: f64,
-    seq: u64,
-    events: BinaryHeap<Reverse<Event>>,
-    instances: Vec<Instance>,
-    /// Dense per-instance state, indexed by `InstanceId.0`.
+    /// Clock + event heap + wake dedup (the time-ordering seam).
+    clock: EventCore,
+    /// Instances + lifecycle + the capacity bridge (the fleet seam).
+    fleet: FleetController,
+    /// The queue-ordering strategy (the policy seam).
+    policy: Box<dyn SchedulingPolicy>,
+    /// Dense per-instance scheduling state, indexed by `InstanceId.0`.
     vqs: Vec<VirtualQueue>,
     agents: Vec<QlmAgent>,
-    alive: Vec<bool>,
     queue: GlobalQueue,
     groups: HashMap<GroupId, RequestGroup>,
     group_of: HashMap<u64, GroupId>,
     grouper: Grouper,
-    scheduler: GlobalScheduler,
+    /// Workload moments (§6 Offline Profiling) — conservative for
+    /// SHEPHERD. Shared by observation sizing and pressure pricing; the
+    /// policy's estimator holds its own copy.
+    profiles: ProfileTable,
     /// Static model pinning for no-swap policies (vLLM baseline).
     pinned_model: HashMap<InstanceId, ModelId>,
     needs_schedule: bool,
     last_schedule: f64,
     scheduler_wall_s: f64,
     scheduler_invocations: u64,
-    /// Per-instance wake deduplication: at most one pending Wake per
-    /// instance (avoids event-storm blowup). An earlier wake supersedes
-    /// a later pending one; the superseded heap entry cannot be removed
-    /// from the `BinaryHeap` and is dropped at pop time instead (see
-    /// `take_due_wake`).
-    wake_pending: Vec<Option<f64>>,
-    /// Wake bookkeeping: honored pops vs superseded (stale) pops.
-    wakes_executed: u64,
-    wakes_stale_dropped: u64,
     /// Incremental-scheduler dirty tracking: groups whose membership,
     /// deadline anchor, or member states changed since the last pass.
     /// `BTreeSet` for deterministic iteration order.
     dirty_groups: BTreeSet<GroupId>,
     /// Groups that drained (all members complete) since the last pass.
     removed_groups: Vec<GroupId>,
-    /// Force the next pass down the full-solve path (instance failures
-    /// change the view set; the cached plan is unusable).
+    /// Force the next pass down the full-solve path (view-set changes:
+    /// failures, provisions, drains make any cached plan unusable).
     sched_force_full: bool,
     /// Hardware-profiled Θ per (gpu, model) — §6 Offline Profiling.
     thetas: ThetaCache,
-    /// End time of each instance's in-flight iteration: a step is an
-    /// atomic unit of GPU work; wakes landing inside it are deferred.
-    next_free: Vec<f64>,
     /// Scheduler views, built once and refreshed in place per pass
     /// (dead instances are dropped on failure).
     views_cache: Vec<InstanceView>,
-    /// Scale-down in progress: the instance receives no new work and
-    /// leaves the fleet once its running batch drains (no mid-flight
-    /// kills). Dense, indexed by `InstanceId.0` like `alive`.
-    draining: Vec<bool>,
-    /// When each instance joined the fleet (0 for the starting fleet,
-    /// cold-start completion for provisioned ones) / left it — the
-    /// device-seconds ledger.
-    commissioned_at: Vec<f64>,
-    decommissioned_at: Vec<Option<f64>>,
-    /// Provisioned instances still in their cold-start window.
-    warming: u32,
-    autoscaler: Option<Autoscaler>,
-    admission: AdmissionController,
-    /// Waiting (+ evicted) request counts per (class, model, mega),
-    /// maintained incrementally at every state transition — the
-    /// autoscaler's and admission controller's backlog signal without
-    /// any per-pass walk. Mega is in the key because the profile table
-    /// is: mega output moments are several times larger, and pricing a
-    /// mega backlog with the regular profile would underestimate drain
-    /// times exactly when the pressure signal matters most.
-    /// `BTreeMap` so pressure sums fold in a deterministic order.
-    waiting_by: BTreeMap<(SloClass, ModelId, bool), i64>,
     /// Open-group index: groups with spare capacity per
     /// (model, class, mega). Makes `classify_in_place` O(1) per arrival
     /// instead of a scan of the live group table; `BTreeSet` keeps the
@@ -243,22 +191,21 @@ impl Simulation {
         if cfg.policy.conservative_estimator() {
             // SHEPHERD-style deterministic worst-case estimates: every
             // request is assumed to run to the max output length.
-            profiles = conservative(&profiles, trace);
+            profiles = conservative_profiles(&profiles, trace);
         }
-        let estimator = RwtEstimator::new(profiles);
+        let estimator = RwtEstimator::new(profiles.clone());
         let solver = match cfg.policy {
             Policy::Qlm { solver, .. } => solver,
             _ => SolverKind::Greedy,
         };
-        let scheduler = GlobalScheduler::new(
-            SchedulerConfig {
-                solver,
-                incremental: cfg.sched_incremental,
-                ..Default::default()
-            },
-            estimator,
-        );
-        let instances: Vec<Instance> = cfg
+        let sched_cfg = SchedulerConfig {
+            solver,
+            incremental: cfg.sched_incremental,
+            threads: cfg.threads,
+            ..Default::default()
+        };
+        let policy = build_policy(cfg.policy, sched_cfg, estimator);
+        let mut instances: Vec<Instance> = cfg
             .fleet
             .iter()
             .map(|c| Instance::new(c.clone(), cfg.catalog.clone()))
@@ -267,6 +214,7 @@ impl Simulation {
         for (idx, inst) in instances.iter().enumerate() {
             debug_assert_eq!(inst.config.id.0 as usize, idx, "fleet ids must be dense");
         }
+        let pinned_model = static_pinning(&mut instances, &cfg.catalog, &cfg.policy, trace);
         let vqs = instances
             .iter()
             .map(|i| VirtualQueue::new(i.config.id))
@@ -285,250 +233,101 @@ impl Simulation {
             .filter(|_| cfg.policy.uses_groups())
             .map(Autoscaler::new);
         let admission = AdmissionController::new(cfg.admission);
+        let fleet = FleetController::new(instances, cfg.catalog.clone(), autoscaler, admission);
         let mut sim = Simulation {
-            now: 0.0,
-            seq: 0,
-            events: BinaryHeap::new(),
-            instances,
+            clock: EventCore::new(n_instances),
+            fleet,
+            policy,
             vqs,
             agents,
-            alive: vec![true; n_instances],
             queue: GlobalQueue::new(),
             groups: HashMap::new(),
             group_of: HashMap::new(),
             grouper,
-            scheduler,
-            pinned_model: HashMap::new(),
+            profiles,
+            pinned_model,
             needs_schedule: false,
             last_schedule: -1e9,
             scheduler_wall_s: 0.0,
             scheduler_invocations: 0,
-            wake_pending: vec![None; n_instances],
-            wakes_executed: 0,
-            wakes_stale_dropped: 0,
             dirty_groups: BTreeSet::new(),
             removed_groups: Vec::new(),
             sched_force_full: false,
             thetas: ThetaCache::new(),
-            next_free: vec![0.0; n_instances],
             views_cache: Vec::new(),
-            draining: vec![false; n_instances],
-            commissioned_at: vec![0.0; n_instances],
-            decommissioned_at: vec![None; n_instances],
-            warming: 0,
-            autoscaler,
-            admission,
-            waiting_by: BTreeMap::new(),
             open_groups: HashMap::new(),
             cfg,
         };
-        sim.init_pinning(trace);
         sim.build_views();
         for (i, r) in trace.requests.iter().enumerate() {
-            sim.push_event(r.arrival_s, EventKind::Arrival(i));
+            sim.clock.push(r.arrival_s, EventKind::Arrival(i));
         }
         let failures = sim.cfg.failures.clone();
         for (t, inst) in failures {
-            sim.push_event(t, EventKind::Fail(inst));
+            sim.clock.push(t, EventKind::Fail(inst));
         }
         sim
     }
 
-    fn push_event(&mut self, t: f64, kind: EventKind) {
-        self.seq += 1;
-        self.events.push(Reverse(Event {
-            t,
-            seq: self.seq,
-            kind,
-        }));
-    }
-
+    /// Request a wake for a live instance (EventCore owns the dedup).
     fn wake(&mut self, id: InstanceId, t: f64) {
-        let idx = id.0 as usize;
-        if !self.alive[idx] {
+        if !self.fleet.alive(id) {
             return;
         }
-        // Coalesce: skip if an earlier-or-equal wake is already pending.
-        // When an *earlier* wake supersedes a pending later one, the
-        // later heap entry stays behind and is discarded at pop time by
-        // `take_due_wake`.
-        if let Some(pending) = self.wake_pending[idx] {
-            if pending <= t + 1e-12 {
-                return;
-            }
-        }
-        self.wake_pending[idx] = Some(t);
-        self.push_event(t, EventKind::Wake(id));
-    }
-
-    /// Pop-side half of the wake dedup: honor a popped Wake only if it
-    /// *is* the currently pending wake for the instance. Superseded
-    /// entries used to clear `wake_pending` and fire a spurious
-    /// `on_wake` anyway, breaking the at-most-one-pending-Wake
-    /// invariant (a stale pop would also cancel a legitimately pending
-    /// newer wake, duplicating iterations at the old time).
-    fn take_due_wake(&mut self, id: InstanceId, t: f64) -> bool {
-        let idx = id.0 as usize;
-        match self.wake_pending[idx] {
-            Some(pending) if (pending - t).abs() <= 1e-12 => {
-                self.wake_pending[idx] = None;
-                self.wakes_executed += 1;
-                true
-            }
-            _ => {
-                self.wakes_stale_dropped += 1;
-                false
-            }
-        }
+        self.clock.wake(id, t);
     }
 
     /// (honored, stale-dropped) wake pops — observability for the
     /// at-most-one-pending-Wake invariant.
     pub fn wake_stats(&self) -> (u64, u64) {
-        (self.wakes_executed, self.wakes_stale_dropped)
+        self.clock.wake_stats()
     }
 
-    /// Static model placement for policies without model swapping:
-    /// distribute instances over models proportionally to request share
-    /// (what an operator running vanilla vLLM would provision).
-    fn init_pinning(&mut self, trace: &Trace) {
-        if self.cfg.policy.lso().model_swapping {
-            return;
-        }
-        let mut counts: HashMap<ModelId, usize> = HashMap::new();
-        for r in &trace.requests {
-            *counts.entry(r.model).or_default() += 1;
-        }
-        let mut models: Vec<(ModelId, usize)> = counts.into_iter().collect();
-        models.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
-        let total: usize = models.iter().map(|(_, c)| c).sum();
-        let n_inst = self.instances.len();
-        // Quota per model (≥1), largest first.
-        let mut quota: Vec<(ModelId, usize)> = models
-            .iter()
-            .map(|&(m, c)| {
-                let q = (c as f64 / total as f64) * n_inst as f64;
-                (m, q.round().max(1.0) as usize)
-            })
-            .collect();
-        // Trim/extend to exactly n_inst.
-        let mut assigned: usize = quota.iter().map(|(_, q)| q).sum();
-        let mut i = 0;
-        let nq = quota.len();
-        while assigned > n_inst && nq > 0 {
-            // Prefer shrinking an over-provisioned model; if every quota
-            // is already 1 (more models than instances), drop the least
-            // popular model entirely — static provisioning cannot serve
-            // more models than it has instances.
-            if let Some(k) = (0..nq).filter(|&k| quota[k].1 > 1).max_by_key(|&k| quota[k].1)
-            {
-                quota[k].1 -= 1;
-            } else if let Some(k) = (0..nq).rev().find(|&k| quota[k].1 == 1) {
-                quota[k].1 = 0;
-            } else {
-                break;
-            }
-            assigned -= 1;
-        }
-        while assigned < n_inst && nq > 0 {
-            quota[i % nq].1 += 1;
-            assigned += 1;
-            i += 1;
-        }
-        // Pin: each instance gets the next model with remaining quota it
-        // can actually serve.
-        let catalog = self.cfg.catalog.clone();
-        for inst in &mut self.instances {
-            let gpu = inst.config.gpu;
-            let pick = quota
-                .iter_mut()
-                .find(|(m, q)| *q > 0 && PerfModel::fits(catalog.get(*m), gpu))
-                .map(|e| {
-                    e.1 -= 1;
-                    e.0
-                })
-                .or_else(|| {
-                    quota
-                        .iter()
-                        .map(|&(m, _)| m)
-                        .find(|&m| PerfModel::fits(catalog.get(m), gpu))
-                });
-            if let Some(m) = pick {
-                self.pinned_model.insert(inst.config.id, m);
-                let (_ready, displaced) = inst.swap_model(m, 0.0);
-                debug_assert!(displaced.is_empty());
-            }
-        }
-    }
-
-    /// Build one instance's scheduler view: `perf_for` is static per
-    /// (instance, model); only swap times, active model, and the
-    /// executing group change between passes.
+    /// Build one instance's scheduler view from profiled perf.
     fn build_view_for(&mut self, idx: usize) -> InstanceView {
-        let catalog = self.cfg.catalog.clone();
-        let inst = &self.instances[idx];
-        let id = inst.config.id;
-        let gpu = inst.config.gpu;
-        let mut perf_for = HashMap::new();
-        let mut swap_time = HashMap::new();
-        for m in catalog.ids() {
-            // Pinned instances only serve their pinned model.
-            if let Some(&pm) = self.pinned_model.get(&id) {
-                if pm != m {
-                    continue;
-                }
-            }
-            let prompt = crate::backend::perf::PROFILE_MEAN_PROMPT_TOKENS;
-            if let Some(p) = self.thetas.perf(gpu, m, &catalog, prompt) {
-                let inst = &self.instances[idx];
-                swap_time.insert(m, inst.registry().swap_in_time_s(m, &p));
-                perf_for.insert(m, p);
-            }
-        }
-        let inst = &self.instances[idx];
-        InstanceView {
-            id,
-            active_model: inst.active_model(),
-            perf_for,
-            swap_time,
-            executing: None,
-        }
+        views::build_view(
+            idx,
+            self.fleet.instances(),
+            &self.cfg.catalog,
+            &self.pinned_model,
+            &mut self.thetas,
+        )
     }
 
     /// Build the scheduler views once at startup.
     fn build_views(&mut self) {
-        let views: Vec<InstanceView> = (0..self.instances.len())
+        let views: Vec<InstanceView> = (0..self.fleet.instance_count())
             .map(|idx| self.build_view_for(idx))
             .collect();
         self.views_cache = views;
     }
 
-    /// Refresh the cached views in place for one scheduler pass. Returns
-    /// the views by value (callers put them back via `views_cache`) so
-    /// the scheduling methods can borrow `self` mutably alongside them.
+    /// Refresh the cached views in place for one scheduler pass (the
+    /// parallel fan-out lives in [`views::refresh_all`]). Returns the
+    /// views by value (callers put them back via `views_cache`) so the
+    /// policy can borrow `self` fields alongside them.
     fn refresh_views(&mut self) -> Vec<InstanceView> {
         let mut views = std::mem::take(&mut self.views_cache);
-        views.retain(|v| self.alive[v.id.0 as usize]);
-        for v in views.iter_mut() {
-            let inst = &self.instances[v.id.0 as usize];
-            v.active_model = inst.active_model();
-            v.executing = inst
-                .running()
-                .first()
-                .and_then(|s| self.group_of.get(&s.req_id).copied());
-            // Swap-in times depend on each model's current tier.
-            for (m, t) in v.swap_time.iter_mut() {
-                let p = v.perf_for[m];
-                *t = inst.registry().swap_in_time_s(*m, &p);
-            }
-        }
+        let fleet = &self.fleet;
+        views.retain(|v| fleet.alive(v.id));
+        views::refresh_all(&mut views, fleet.instances(), &self.group_of, self.cfg.threads);
         views
+    }
+
+    /// Bench/test hook for the parallel view-refresh pass: run one
+    /// refresh and fold the result into an order-stable digest.
+    #[doc(hidden)]
+    pub fn refresh_views_for_bench(&mut self) -> u64 {
+        let views = self.refresh_views();
+        let digest = views::digest(&views);
+        self.views_cache = views;
+        digest
     }
 
     /// Run to completion (all requests served) or the horizon.
     pub fn run(mut self, trace: &Trace) -> RunMetrics {
         let total = trace.len();
-        while let Some(Reverse(ev)) = self.events.pop() {
+        while let Some(ev) = self.clock.pop() {
             if ev.t > self.cfg.horizon_s {
                 // Horizon hit: still register any not-yet-arrived requests
                 // so metrics count them (as violations if unserved).
@@ -536,7 +335,7 @@ impl Simulation {
                     let req = Request::from_trace(0, &trace.requests[i]);
                     self.queue.submit(req);
                 }
-                while let Some(Reverse(e2)) = self.events.pop() {
+                while let Some(e2) = self.clock.pop() {
                     if let EventKind::Arrival(i) = e2.kind {
                         let req = Request::from_trace(0, &trace.requests[i]);
                         self.queue.submit(req);
@@ -544,7 +343,7 @@ impl Simulation {
                 }
                 break;
             }
-            self.now = ev.t;
+            self.clock.now = ev.t;
             match ev.kind {
                 EventKind::Arrival(i) => self.on_arrival(&trace.requests[i]),
                 EventKind::Wake(id) => {
@@ -552,7 +351,7 @@ impl Simulation {
                     // still falls through to maybe_schedule below — an
                     // interval-deferred pending schedule must not be
                     // dropped along with the event.
-                    if self.take_due_wake(id, ev.t) {
+                    if self.clock.take_due_wake(id, ev.t) {
                         self.on_wake(id);
                     }
                 }
@@ -571,10 +370,7 @@ impl Simulation {
     /// The request must still be resident in the broker.
     fn note_waiting(&mut self, rid: u64, delta: i64) {
         if let Some(r) = self.queue.get(rid) {
-            *self
-                .waiting_by
-                .entry((r.class, r.model, r.mega))
-                .or_default() += delta;
+            self.fleet.note_waiting((r.class, r.model, r.mega), delta);
         }
     }
 
@@ -585,9 +381,9 @@ impl Simulation {
         // door — recorded as shed, never grouped, never scheduled — so
         // its backlog cannot poison the penalty signal for requests
         // that still have a chance.
-        if self.admission.should_shed(tr.class) {
+        if self.fleet.admission.should_shed(tr.class) {
             self.queue.shed(id);
-            self.admission.note_shed_submit();
+            self.fleet.admission.note_shed_submit();
             return;
         }
         let req = self.queue.get(id).unwrap().clone();
@@ -600,8 +396,8 @@ impl Simulation {
             // O(groups) — both cap queue scale).
             self.classify_in_place(&req)
         } else {
-            // Per-request singleton groups (EDF / vLLM): id = request id,
-            // which preserves FCFS order across groups.
+            // Per-request singleton groups (EDF / SJF / vLLM): id =
+            // request id, which preserves FCFS order across groups.
             let gid = GroupId(id);
             self.groups.insert(
                 gid,
@@ -659,28 +455,21 @@ impl Simulation {
     }
 
     fn wake_idle(&mut self) {
-        let ids: Vec<InstanceId> = self
-            .instances
+        let now = self.clock.now;
+        let ids: Vec<(InstanceId, f64)> = self
+            .fleet
+            .instances()
             .iter()
-            .filter(|i| self.alive[i.config.id.0 as usize] && i.is_idle())
-            .map(|i| i.config.id)
+            .filter(|i| self.fleet.alive(i.config.id) && i.is_idle())
+            .map(|i| (i.config.id, now.max(i.busy_until())))
             .collect();
-        for id in ids {
-            let t = self.now.max(self.inst(id).busy_until());
+        for (id, t) in ids {
             self.wake(id, t);
         }
     }
 
-    fn inst(&self, id: InstanceId) -> &Instance {
-        &self.instances[id.0 as usize]
-    }
-
-    fn inst_mut(&mut self, id: InstanceId) -> &mut Instance {
-        &mut self.instances[id.0 as usize]
-    }
-
     fn observation(&self, id: InstanceId) -> InstanceObservation {
-        let inst = self.inst(id);
+        let inst = self.fleet.inst(id);
         let running = inst
             .running()
             .iter()
@@ -699,7 +488,7 @@ impl Simulation {
         InstanceObservation {
             id,
             active_model: inst.active_model(),
-            swapping: inst.is_swapping(self.now),
+            swapping: inst.is_swapping(self.clock.now),
             running,
             spare_capacity_tokens: spare,
             batch_slots_free: inst.batch_slots_free(),
@@ -708,32 +497,33 @@ impl Simulation {
 
     fn on_wake(&mut self, id: InstanceId) {
         let idx = id.0 as usize;
-        if !self.alive[idx] {
+        if !self.fleet.alive(id) {
             return;
         }
         // Draining (scale-down): once the remaining batch completes, the
         // instance leaves the fleet. Until then it keeps stepping but
         // admits nothing new.
-        if self.draining[idx] && self.inst(id).is_idle() {
+        if self.fleet.is_draining(id) && self.fleet.inst(id).is_idle() {
             self.decommission(id);
             return;
         }
         // Mid-swap: try again when the swap completes.
-        let busy_until = self.inst(id).busy_until();
-        if self.now < busy_until {
+        let busy_until = self.fleet.inst(id).busy_until();
+        if self.clock.now < busy_until {
             self.wake(id, busy_until);
             return;
         }
         // Mid-iteration: a decode step is atomic GPU work; defer.
-        let free_at = self.next_free[idx];
-        if self.now < free_at - 1e-12 {
+        let free_at = self.clock.next_free(id);
+        if self.clock.now < free_at - 1e-12 {
             self.wake(id, free_at);
             return;
         }
 
         // SHEPHERD fixed batches: only admit when the batch fully drained.
         let fixed = self.cfg.policy.fixed_batches();
-        let can_admit = !self.draining[idx] && (!fixed || self.inst(id).running_len() == 0);
+        let can_admit =
+            !self.fleet.is_draining(id) && (!fixed || self.fleet.inst(id).running_len() == 0);
 
         if can_admit {
             // §Perf: the agent reads the live virtual queue and group
@@ -743,7 +533,7 @@ impl Simulation {
             let agent = &self.agents[idx];
             let queue_ref = &self.queue;
             let groups_ref = &self.groups;
-            let profiles_ref = &self.scheduler.estimator.profiles;
+            let profiles_ref = &self.profiles;
             let actions = agent.decide(
                 vq,
                 groups_ref,
@@ -771,22 +561,22 @@ impl Simulation {
         }
 
         // One continuous-batching iteration.
-        let now = self.now;
-        let out = self.inst_mut(id).step(now);
+        let now = self.clock.now;
+        let out = self.fleet.inst_mut(id).step(now);
         for (rid, t) in &out.first_tokens {
             self.queue.record_first_token(*rid, *t);
         }
-        let t_done = self.now + out.dt;
+        let t_done = self.clock.now + out.dt;
         for seq in out.completed {
             self.queue.complete(seq.req_id, seq.first_token_at, t_done);
             self.on_request_done(seq.req_id, id);
         }
         if out.dt > 0.0 {
-            self.next_free[idx] = t_done;
+            self.clock.set_next_free(id, t_done);
             self.wake(id, t_done);
-        } else if !self.inst(id).is_idle() {
+        } else if !self.fleet.inst(id).is_idle() {
             // Has swapped-out work but no progress possible; re-check soon.
-            self.wake(id, self.now + 0.05);
+            self.wake(id, self.clock.now + 0.05);
         }
     }
 
@@ -794,8 +584,8 @@ impl Simulation {
         for a in actions {
             match a {
                 LsoAction::SwapModel { model, .. } => {
-                    let now = self.now;
-                    let (ready, displaced) = self.inst_mut(id).swap_model(model, now);
+                    let now = self.clock.now;
+                    let (ready, displaced) = self.fleet.inst_mut(id).swap_model(model, now);
                     for seq in displaced {
                         self.queue.requeue_evicted(seq.req_id, seq.generated, id);
                         self.note_waiting(seq.req_id, 1);
@@ -809,12 +599,12 @@ impl Simulation {
                         let groups = &self.groups;
                         vq.model_order(|g| groups.get(&g))
                     };
-                    self.inst_mut(id).registry_mut().set_warm_set(&order);
+                    self.fleet.inst_mut(id).registry_mut().set_warm_set(&order);
                     self.wake(id, ready);
                 }
                 LsoAction::Evict { requests, .. } => {
-                    let now = self.now;
-                    let evicted = self.inst_mut(id).evict(&requests, now);
+                    let now = self.clock.now;
+                    let evicted = self.fleet.inst_mut(id).evict(&requests, now);
                     for seq in evicted {
                         self.queue.requeue_evicted(seq.req_id, seq.generated, id);
                         self.note_waiting(seq.req_id, 1);
@@ -837,11 +627,11 @@ impl Simulation {
                         first_token_at: r.first_token_s,
                         arrival_s: r.arrival_s,
                     };
-                    let now = self.now;
+                    let now = self.clock.now;
                     let res = if r.evicted_from == Some(id) {
-                        self.inst_mut(id).try_restore(seq, now)
+                        self.fleet.inst_mut(id).try_restore(seq, now)
                     } else {
-                        self.inst_mut(id).try_admit(seq, now)
+                        self.fleet.inst_mut(id).try_admit(seq, now)
                     };
                     if res.is_ok() {
                         self.note_waiting(request, -1);
@@ -862,16 +652,10 @@ impl Simulation {
     /// global queue alone — and every request that was on the instance
     /// reverts to Waiting with progress discarded.
     fn on_fail(&mut self, id: InstanceId) {
-        let idx = id.0 as usize;
-        if !self.alive[idx] {
+        let Some(lost) = self.fleet.fail(id, self.clock.now) else {
             return;
-        }
-        self.alive[idx] = false;
-        self.wake_pending[idx] = None;
-        if self.decommissioned_at[idx].is_none() {
-            self.decommissioned_at[idx] = Some(self.now);
-        }
-        let lost = self.inst_mut(id).fail();
+        };
+        self.clock.clear_pending(id);
         let lost_ids: Vec<u64> = lost.iter().map(|s| s.req_id).collect();
         for rid in &lost_ids {
             if let Some(&g) = self.group_of.get(rid) {
@@ -882,7 +666,7 @@ impl Simulation {
         for rid in &lost_ids {
             self.note_waiting(*rid, 1);
         }
-        self.vqs[idx].set_order(Vec::new());
+        self.vqs[id.0 as usize].set_order(Vec::new());
         self.views_cache.retain(|v| v.id != id);
         // Reschedule immediately, down the full-solve path: the view set
         // shrank, so the incremental cache is unusable.
@@ -891,59 +675,30 @@ impl Simulation {
         self.last_schedule = -1e9;
     }
 
-    /// Provision one instance (autoscaler scale-up). The cold start is
-    /// the weight-staging time of the model the scale-up is for
-    /// (storage → CPU, priced by the perf model); the instance joins
-    /// the fleet with those weights warm in host memory, so its first
-    /// SwapModel LSO pays only the CPU → GPU hop.
+    /// Autoscaler scale-up: the controller creates the instance and its
+    /// cold-start window; the engine grows its per-instance state and
+    /// schedules the Provision event.
     fn provision_instance(&mut self, model: ModelId) {
-        let gpu = self.cfg.autoscale.expect("autoscaler requires config").gpu;
-        // A tier that can host nothing in the catalog would add a device
-        // that serves no model at all — refuse rather than burn
-        // device-hours on it (misconfigured AutoscaleConfig::gpu).
-        let serves_any = self
-            .cfg
-            .catalog
-            .ids()
-            .into_iter()
-            .any(|m| PerfModel::fits(self.cfg.catalog.get(m), gpu));
-        if !serves_any {
+        let Some((id, ready)) = self.fleet.provision(model, self.clock.now) else {
             return;
-        }
-        let id = InstanceId(self.instances.len() as u32);
-        let mut inst = Instance::new(InstanceConfig::new(id.0, gpu), self.cfg.catalog.clone());
-        let prompt = crate::backend::perf::PROFILE_MEAN_PROMPT_TOKENS;
-        let delay = PerfModel::try_profile(self.cfg.catalog.get(model), gpu, prompt)
-            .map(|p| p.swap_storage_cpu_s)
-            .unwrap_or(30.0);
-        inst.registry_mut().set_warm_set(&[model]);
-        let ready = self.now + delay;
-        self.instances.push(inst);
+        };
         self.vqs.push(VirtualQueue::new(id));
         self.agents.push(QlmAgent::new(id, self.cfg.policy.lso()));
-        self.alive.push(false);
-        self.draining.push(false);
-        self.wake_pending.push(None);
-        self.next_free.push(0.0);
-        self.commissioned_at.push(ready);
-        self.decommissioned_at.push(None);
-        self.warming += 1;
-        self.push_event(ready, EventKind::Provision(id));
+        self.clock.add_instance();
+        self.clock.push(ready, EventKind::Provision(id));
     }
 
     /// Cold start finished: the instance joins the scheduler's view set
     /// (a view-set change — the incremental cache is unusable, exactly
     /// as on failure, so the next pass full-solves).
     fn on_provision(&mut self, id: InstanceId) {
-        let idx = id.0 as usize;
-        self.warming = self.warming.saturating_sub(1);
-        self.alive[idx] = true;
-        let view = self.build_view_for(idx);
+        self.fleet.commission(id);
+        let view = self.build_view_for(id.0 as usize);
         self.views_cache.push(view);
         self.sched_force_full = true;
         self.needs_schedule = true;
         self.last_schedule = -1e9;
-        self.wake(id, self.now);
+        self.wake(id, self.clock.now);
     }
 
     /// Scale down by draining: the victim leaves the scheduler's view
@@ -951,13 +706,10 @@ impl Simulation {
     /// queued groups), keeps stepping its running batch to completion,
     /// and is decommissioned when idle. No request is killed mid-flight.
     fn begin_drain(&mut self) {
-        let victim = (0..self.instances.len())
-            .filter(|&i| self.alive[i] && !self.draining[i])
-            .max_by_key(|&i| (self.instances[i].is_idle(), i))
-            .map(|i| InstanceId(i as u32));
-        let Some(id) = victim else { return };
+        let Some(id) = self.fleet.begin_drain() else {
+            return;
+        };
         let idx = id.0 as usize;
-        self.draining[idx] = true;
         self.views_cache.retain(|v| v.id != id);
         // Its queued groups must be reassigned; mark them dirty (the
         // forced full solve re-places everything anyway, but the dirt
@@ -971,140 +723,29 @@ impl Simulation {
         self.vqs[idx].set_order(Vec::new());
         self.sched_force_full = true;
         self.needs_schedule = true;
-        if self.inst(id).is_idle() {
+        if self.fleet.inst(id).is_idle() {
             self.decommission(id);
         }
     }
 
     /// A drained instance leaves the fleet for good.
     fn decommission(&mut self, id: InstanceId) {
-        let idx = id.0 as usize;
-        if !self.alive[idx] {
+        if !self.fleet.decommission(id, self.clock.now) {
             return;
         }
-        debug_assert!(self.inst(id).is_idle(), "decommission requires a drained batch");
-        self.alive[idx] = false;
-        self.wake_pending[idx] = None;
-        self.decommissioned_at[idx] = Some(self.now);
+        self.clock.clear_pending(id);
         // KV this instance parked for previously evicted requests is
         // gone with it; those requests are still Waiting in the broker
         // (single replica, §4) and restart from their prompt elsewhere.
         self.queue.fail_instance(id, &[]);
     }
 
-    /// Per-class backlog pressure from the incremental waiting counters:
-    /// predicted drain time = pending output tokens of this class and
-    /// every tighter class over the fleet's aggregate Θ — the
-    /// RWT-estimator waiting model (Eq. 2) applied fleet-wide.
-    ///
-    /// `fit_gpu` restricts each class's `hottest_model` to models that
-    /// fit that tier, so a scale-up never warms (or is sized for) a
-    /// model the provisioned device cannot host.
-    fn class_pressures(&self, fit_gpu: Option<crate::backend::GpuKind>) -> Vec<ClassPressure> {
-        // Aggregate Θ over active (non-draining) instances: each runs
-        // its most capable model at the profile-mean footprint.
-        let profiles = &self.scheduler.estimator.profiles;
-        let mut fleet_theta = 0.0;
-        for v in &self.views_cache {
-            let best = v
-                .perf_for
-                .iter()
-                .map(|(m, p)| {
-                    let prof = profiles.get(*m, SloClass::Interactive, false);
-                    p.steady_throughput(prof.mean_tokens_per_req())
-                })
-                .fold(0.0_f64, f64::max);
-            fleet_theta += best;
-        }
-        let mut out = Vec::with_capacity(SloClass::ALL.len());
-        let mut cum_tokens = 0.0;
-        for class in SloClass::ALL {
-            let mut waiting = 0usize;
-            let mut tokens = 0.0;
-            // Per-model totals (mega + non-mega summed) over hostable
-            // models — a model's backlog must not lose the hottest pick
-            // because it was split across mega variants.
-            let mut per_model: BTreeMap<ModelId, i64> = BTreeMap::new();
-            for (&(c, m, mega), &n) in &self.waiting_by {
-                if c != class || n <= 0 {
-                    continue;
-                }
-                waiting += n as usize;
-                tokens += n as f64 * profiles.get(m, c, mega).mu_out;
-                let hostable = fit_gpu
-                    .map(|g| PerfModel::fits(self.cfg.catalog.get(m), g))
-                    .unwrap_or(true);
-                if hostable {
-                    *per_model.entry(m).or_default() += n;
-                }
-            }
-            // Ascending iteration + strict `>` keeps the lowest model
-            // id on ties.
-            let mut hottest: Option<(ModelId, i64)> = None;
-            for (&m, &n) in &per_model {
-                if hottest.map(|(_, hn)| n > hn).unwrap_or(true) {
-                    hottest = Some((m, n));
-                }
-            }
-            cum_tokens += tokens;
-            let drain_s = if cum_tokens <= 0.0 {
-                0.0
-            } else if fleet_theta > 0.0 {
-                cum_tokens / fleet_theta
-            } else {
-                f64::INFINITY
-            };
-            out.push(ClassPressure {
-                class,
-                waiting,
-                drain_s,
-                hottest_model: hottest.map(|(m, _)| m),
-            });
-        }
-        out
-    }
-
     /// One capacity-subsystem evaluation, run after every scheduler
-    /// pass: update the admission gates and let the autoscaler act.
-    /// Free when the whole subsystem is off — the pressure walk must
-    /// not tax runs (or Fig. 20 overhead numbers) that never asked for
-    /// capacity management.
+    /// pass: the controller updates the admission gates and decides;
+    /// the engine applies (provisioning / draining touch the event
+    /// loop).
     fn capacity_tick(&mut self) {
-        if self.autoscaler.is_none() && !self.admission.cfg.enabled {
-            return;
-        }
-        let tier = self.autoscaler.as_ref().map(|a| a.cfg.gpu);
-        let pressures = self.class_pressures(tier);
-        let active = (0..self.instances.len())
-            .filter(|&i| self.alive[i] && !self.draining[i])
-            .count() as u32;
-        let draining = (0..self.instances.len())
-            .filter(|&i| self.alive[i] && self.draining[i])
-            .count() as u32;
-        // "Maxed" for admission purposes means growth cannot help: the
-        // instance budget is exhausted, or nothing backlogged fits the
-        // provisionable tier (hottest_model is tier-filtered) — in
-        // either case waiting for more capacity would be waiting for
-        // capacity that can never serve the backlog.
-        let fleet_maxed = match &self.autoscaler {
-            Some(a) => {
-                let at_max = active + self.warming + draining >= a.cfg.max_instances;
-                let growth_helps = pressures
-                    .iter()
-                    .any(|p| p.waiting > 0 && p.hottest_model.is_some());
-                at_max || !growth_helps
-            }
-            None => true, // a fixed fleet cannot grow
-        };
-        let drains: Vec<(SloClass, f64)> = pressures.iter().map(|p| (p.class, p.drain_s)).collect();
-        self.admission.update(&drains, fleet_maxed);
-        let any_idle = (0..self.instances.len())
-            .any(|i| self.alive[i] && !self.draining[i] && self.instances[i].is_idle());
-        let warming = self.warming;
-        let decision = match self.autoscaler.as_mut() {
-            Some(a) => a.decide(self.now, &pressures, active, warming, draining, any_idle),
-            None => ScaleDecision::Hold,
-        };
+        let decision = self.fleet.capacity_tick(self.clock.now, &self.views_cache, &self.profiles);
         match decision {
             ScaleDecision::Up { count, model } => {
                 for _ in 0..count {
@@ -1116,7 +757,7 @@ impl Simulation {
         }
     }
 
-    /// Retire groups the scheduler reported as unservable (no instance
+    /// Retire groups the policy reported as unservable (no instance
     /// can serve their model) through the admission controller, so shed
     /// and unservable requests share one accounting path. Their waiting
     /// members are shed in the broker (recorded once, as violations)
@@ -1129,20 +770,7 @@ impl Simulation {
     /// early would throw requests away, the same rule the admission
     /// controller applies at submit time).
     fn shed_unservable_groups(&mut self, unservable: Vec<GroupId>) {
-        let rescue_tier = match &self.autoscaler {
-            Some(a) => {
-                let powered = (0..self.instances.len())
-                    .filter(|&i| self.alive[i])
-                    .count() as u32
-                    + self.warming;
-                if powered < a.cfg.max_instances {
-                    Some(a.cfg.gpu)
-                } else {
-                    None
-                }
-            }
-            None => None,
-        };
+        let rescue_tier = self.fleet.rescue_tier();
         for gid in unservable {
             let Some(g) = self.groups.get(&gid) else { continue };
             if let Some(gpu) = rescue_tier {
@@ -1160,7 +788,7 @@ impl Simulation {
                     shed += 1;
                 }
             }
-            self.admission.note_shed_unservable(shed);
+            self.fleet.admission.note_shed_unservable(shed);
             let empty = {
                 let g = self.groups.get_mut(&gid).unwrap();
                 let group_of = &self.group_of;
@@ -1177,7 +805,7 @@ impl Simulation {
                 }
                 self.dirty_groups.remove(&gid);
                 self.removed_groups.push(gid);
-                self.scheduler.estimator.forget_group(gid);
+                self.policy.group_removed(gid);
             }
         }
     }
@@ -1211,7 +839,7 @@ impl Simulation {
             // service prices go with it.
             self.dirty_groups.remove(&gid);
             self.removed_groups.push(gid);
-            self.scheduler.estimator.forget_group(gid);
+            self.policy.group_removed(gid);
             self.needs_schedule = true;
         } else {
             // Shrunk group: it has room again (open-group index), and it
@@ -1225,12 +853,12 @@ impl Simulation {
 
     fn maybe_schedule(&mut self) {
         if !self.needs_schedule
-            || self.now - self.last_schedule < self.cfg.sched_interval_s
+            || self.clock.now - self.last_schedule < self.cfg.sched_interval_s
         {
             return;
         }
         self.needs_schedule = false;
-        self.last_schedule = self.now;
+        self.last_schedule = self.clock.now;
         // Re-anchor each group's deadline to its earliest *unserved*
         // member: served members have their TTFT already, so a group's
         // binding constraint is the oldest request still waiting. Without
@@ -1276,22 +904,38 @@ impl Simulation {
         }
         let wall = WallInstant::now();
 
+        // One policy pass through the trait seam: the policy sees the
+        // group table, the refreshed views, and the engine's dirty
+        // tracking, and returns a per-instance order patch.
         let views = self.refresh_views();
-        let unservable = match self.cfg.policy {
-            Policy::VllmFcfs => {
-                self.schedule_fcfs(&views);
-                Vec::new()
-            }
-            Policy::Edf => {
-                self.schedule_edf(&views);
-                Vec::new()
-            }
-            Policy::Qlm { lso, .. } if !lso.load_balancing => {
-                self.schedule_round_robin(&views);
-                Vec::new()
-            }
-            _ => self.schedule_qlm(&views),
+        let plan = {
+            let ctx = PolicyCtx {
+                groups: &self.groups,
+                views: &views,
+                pinned_model: &self.pinned_model,
+                now: self.clock.now,
+                dirty: &self.dirty_groups,
+                removed: &self.removed_groups,
+                force_full: self.sched_force_full,
+            };
+            self.policy.plan(&ctx)
         };
+        let touched: Vec<InstanceId> = plan.orders.keys().copied().collect();
+        for (id, order) in plan.orders {
+            self.vqs[id.0 as usize].set_order(order);
+        }
+        // Refresh warm sets for the queues that changed (§5 swapping).
+        if self.policy.refreshes_warm_sets() {
+            for id in touched {
+                let idx = id.0 as usize;
+                let order: Vec<ModelId> = {
+                    let vq = &self.vqs[idx];
+                    let groups = &self.groups;
+                    vq.model_order(|g| groups.get(&g))
+                };
+                self.fleet.inst_mut(id).registry_mut().set_warm_set(&order);
+            }
+        }
         self.views_cache = views;
         // Every policy consumes (or rebuilds from scratch over) the full
         // group table per pass, so the dirt is spent either way.
@@ -1307,273 +951,37 @@ impl Simulation {
         // NEXT pass, or a delta pass would keep charging their penalty
         // forever. Shedding precedes the tick so the pressure signal
         // sees the post-retirement backlog.
-        if !unservable.is_empty() {
-            self.shed_unservable_groups(unservable);
+        if !plan.unservable.is_empty() {
+            self.shed_unservable_groups(plan.unservable);
         }
         self.capacity_tick();
         // New orders may unblock idle instances.
-        let ids: Vec<InstanceId> = self
-            .instances
+        let now = self.clock.now;
+        let ids: Vec<(InstanceId, f64)> = self
+            .fleet
+            .instances()
             .iter()
-            .filter(|i| self.alive[i.config.id.0 as usize])
-            .map(|i| i.config.id)
+            .filter(|i| self.fleet.alive(i.config.id))
+            .map(|i| (i.config.id, now.max(i.busy_until())))
             .collect();
-        for id in ids {
-            let t = self.now.max(self.inst(id).busy_until());
+        for (id, t) in ids {
             self.wake(id, t);
         }
     }
 
-    /// QLM / SHEPHERD: global scheduler over request groups.
-    ///
-    /// §Perf: steady state goes down the incremental delta path — only
-    /// dirty groups are re-priced and re-inserted against the cached
-    /// plan, and clean queues keep their position (the returned orders
-    /// are a patch covering only changed instances). Cold caches,
-    /// instance failures, and dirtiness above the configured threshold
-    /// fall back to the full solve, which refreshes the cache.
-    ///
-    /// Returns the groups the scheduler reported unservable, for the
-    /// admission controller to retire.
-    fn schedule_qlm(&mut self, views: &[InstanceView]) -> Vec<GroupId> {
-        let assignment = {
-            let delta_try = if self.sched_force_full || !self.cfg.sched_incremental {
-                None
-            } else {
-                let dirty: Vec<&RequestGroup> = self
-                    .dirty_groups
-                    .iter()
-                    .filter_map(|g| self.groups.get(g))
-                    .collect();
-                let delta = SchedDelta {
-                    dirty,
-                    removed: self.removed_groups.clone(),
-                    total_groups: self.groups.len(),
-                };
-                self.scheduler.try_schedule_delta(&delta, views, self.now)
-            };
-            match delta_try {
-                Some(a) => a,
-                None => {
-                    // Full solve. Pass references — the seed cloned every
-                    // group (and every member list) per invocation.
-                    let group_refs: Vec<&RequestGroup> = self.groups.values().collect();
-                    self.scheduler.schedule(&group_refs, views, self.now)
-                }
-            }
-        };
-        let touched: Vec<InstanceId> = assignment.orders.keys().copied().collect();
-        for (id, order) in assignment.orders {
-            self.vqs[id.0 as usize].set_order(order);
-        }
-        // Refresh warm sets for the queues that changed (§5 swapping).
-        if self.cfg.policy.lso().model_swapping {
-            for id in touched {
-                let idx = id.0 as usize;
-                let order: Vec<ModelId> = {
-                    let vq = &self.vqs[idx];
-                    let groups = &self.groups;
-                    vq.model_order(|g| groups.get(&g))
-                };
-                self.instances[idx].registry_mut().set_warm_set(&order);
-            }
-        }
-        assignment.unservable
-    }
-
-    /// Load-balancing ablation (Fig. 15's round-robin comparator, and
-    /// the `-nolb` rows of Figs. 11/14): groups are dealt round-robin to
-    /// compatible instances with no RWT-informed placement; per-queue
-    /// ordering keeps arrival order.
-    fn schedule_round_robin(&mut self, views: &[InstanceView]) {
-        let mut groups: Vec<&RequestGroup> = self.groups.values().collect();
-        groups.sort_by(|a, b| {
-            a.deadline()
-                .partial_cmp(&b.deadline())
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
-        let mut orders: HashMap<InstanceId, Vec<GroupId>> =
-            views.iter().map(|v| (v.id, Vec::new())).collect();
-        for v in views {
-            if let Some(g) = v.executing {
-                if self.groups.contains_key(&g) {
-                    orders.get_mut(&v.id).unwrap().push(g);
-                }
-            }
-        }
-        let pinned: Vec<GroupId> = views.iter().filter_map(|v| v.executing).collect();
-        let mut rr = 0usize;
-        for g in groups {
-            if pinned.contains(&g.id) {
-                continue;
-            }
-            // Next compatible instance in rotation, blind to load.
-            let mut placed = false;
-            for k in 0..views.len() {
-                let v = &views[(rr + k) % views.len()];
-                if v.can_serve(g.model) {
-                    orders.get_mut(&v.id).unwrap().push(g.id);
-                    rr = (rr + k + 1) % views.len();
-                    placed = true;
-                    break;
-                }
-            }
-            if !placed {
-                if let Some(v) = views.first() {
-                    orders.get_mut(&v.id).unwrap().push(g.id);
-                }
-            }
-        }
-        for (id, order) in orders {
-            self.vqs[id.0 as usize].set_order(order);
-        }
-    }
-
-    /// EDF baseline: deadline-sorted singleton groups, least-loaded
-    /// compatible instance.
-    fn schedule_edf(&mut self, views: &[InstanceView]) {
-        let mut groups: Vec<&RequestGroup> = self.groups.values().collect();
-        groups.sort_by(|a, b| {
-            a.deadline()
-                .partial_cmp(&b.deadline())
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
-        // Load = total waiting tokens per instance.
-        let mut load: HashMap<InstanceId, f64> =
-            views.iter().map(|v| (v.id, 0.0)).collect();
-        let mut orders: HashMap<InstanceId, Vec<GroupId>> =
-            views.iter().map(|v| (v.id, Vec::new())).collect();
-        // Keep executing groups pinned at the head.
-        for v in views {
-            if let Some(g) = v.executing {
-                if self.groups.contains_key(&g) {
-                    orders.get_mut(&v.id).unwrap().push(g);
-                }
-            }
-        }
-        let pinned: Vec<GroupId> = views.iter().filter_map(|v| v.executing).collect();
-        for g in groups {
-            if pinned.contains(&g.id) {
-                continue;
-            }
-            let best = views
-                .iter()
-                .filter(|v| v.can_serve(g.model))
-                .min_by(|a, b| load[&a.id].partial_cmp(&load[&b.id]).unwrap());
-            if let Some(v) = best {
-                orders.get_mut(&v.id).unwrap().push(g.id);
-                *load.get_mut(&v.id).unwrap() += g.len() as f64;
-            }
-        }
-        for (id, order) in orders {
-            self.vqs[id.0 as usize].set_order(order);
-        }
-    }
-
-    /// vLLM baseline: FCFS onto the pinned instance with least load.
-    fn schedule_fcfs(&mut self, views: &[InstanceView]) {
-        let mut groups: Vec<&RequestGroup> = self.groups.values().collect();
-        // FCFS = earliest arrival first (group id breaks Dump-trace ties).
-        groups.sort_by(|a, b| {
-            a.earliest_arrival_s
-                .partial_cmp(&b.earliest_arrival_s)
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
-        let mut load: HashMap<InstanceId, f64> =
-            views.iter().map(|v| (v.id, 0.0)).collect();
-        let mut orders: HashMap<InstanceId, Vec<GroupId>> =
-            views.iter().map(|v| (v.id, Vec::new())).collect();
-        for v in views {
-            if let Some(g) = v.executing {
-                if self.groups.contains_key(&g) {
-                    orders.get_mut(&v.id).unwrap().push(g);
-                }
-            }
-        }
-        let pinned: Vec<GroupId> = views.iter().filter_map(|v| v.executing).collect();
-        for g in groups {
-            if pinned.contains(&g.id) {
-                continue;
-            }
-            let best = views
-                .iter()
-                .filter(|v| self.pinned_model.get(&v.id) == Some(&g.model))
-                .min_by(|a, b| load[&a.id].partial_cmp(&load[&b.id]).unwrap());
-            if let Some(v) = best {
-                orders.get_mut(&v.id).unwrap().push(g.id);
-                *load.get_mut(&v.id).unwrap() += g.len() as f64;
-            }
-        }
-        for (id, order) in orders {
-            self.vqs[id.0 as usize].set_order(order);
-        }
-    }
-
     fn finish(self) -> RunMetrics {
-        // Archive unfinished requests too (they count as violations).
-        let remaining: Vec<u64> = self.queue.waiting_ids().collect();
-        let mut records: Vec<RequestRecord> = self
-            .queue
-            .completed
-            .iter()
-            .map(RequestRecord::from_request)
-            .collect();
-        for id in remaining {
-            if let Some(r) = self.queue.get(id) {
-                records.push(RequestRecord::from_request(r));
-            }
-        }
-        // Running-but-unfinished at horizon — including internally
-        // preempted sequences parked in CPU swap: those are Running in
-        // the broker but absent from both `waiting_ids()` and
-        // `running()`, and used to vanish from the records entirely
-        // (undercounting violations).
-        for inst in &self.instances {
-            for s in inst.running().iter().chain(inst.swapped()) {
-                if let Some(r) = self.queue.get(s.req_id) {
-                    records.push(RequestRecord::from_request(r));
-                }
-            }
-        }
-        // Shed requests (admission control / unservable retirement) left
-        // the waiting set for good but must be recorded exactly once.
-        for &id in self.queue.shed_ids() {
-            if let Some(r) = self.queue.get(id) {
-                records.push(RequestRecord::from_request(r));
-            }
-        }
-        records.sort_by_key(|r| r.id);
-        records.dedup_by_key(|r| r.id);
+        let records = collect_records(&self.queue, self.fleet.instances());
         let duration = records
             .iter()
             .filter_map(|r| r.completed_s)
             .fold(0.0_f64, f64::max)
-            .max(self.now);
-        // Device-seconds ledger: each instance is billed from commission
-        // (cold-start completion for provisioned ones) to decommission /
-        // failure / end of run. An instance that never joined — its
-        // Provision event was still pending when the run ended (not
-        // alive, never decommissioned) — is not billed.
-        let device_seconds: f64 = (0..self.instances.len())
-            .filter(|&i| self.alive[i] || self.decommissioned_at[i].is_some())
-            .map(|i| {
-                let start = self.commissioned_at[i].min(duration);
-                let end = self.decommissioned_at[i].unwrap_or(duration).min(duration);
-                (end - start).max(0.0)
-            })
-            .sum();
-        let (scale_ups, scale_downs) = self
-            .autoscaler
-            .as_ref()
-            .map(|a| (a.scale_ups, a.scale_downs))
-            .unwrap_or((0, 0));
+            .max(self.clock.now);
+        let device_seconds = self.fleet.device_seconds(duration);
+        let (scale_ups, scale_downs) = self.fleet.scale_stats();
         RunMetrics {
             policy: self.cfg.policy.name(),
             records,
-            instances: self.instances.iter().map(instance_metrics).collect(),
+            instances: self.fleet.instances().iter().map(instance_metrics).collect(),
             duration_s: duration,
             scheduler_wall_s: self.scheduler_wall_s,
             scheduler_invocations: self.scheduler_invocations,
@@ -1584,28 +992,10 @@ impl Simulation {
     }
 }
 
-/// SHEPHERD's deterministic worst-case profile: μ_out := max_out, σ := 0.
-fn conservative(profiles: &ProfileTable, trace: &Trace) -> ProfileTable {
-    let mut out = ProfileTable::default();
-    let mut keys: Vec<(ModelId, crate::workload::SloClass, bool)> = trace
-        .requests
-        .iter()
-        .map(|r| (r.model, r.class, r.mega))
-        .collect();
-    keys.sort();
-    keys.dedup();
-    for (m, c, mg) in keys {
-        let mut p = profiles.get(m, c, mg);
-        p.mu_out = p.max_out;
-        p.sigma_out = 0.0;
-        out.insert(m, c, mg, p);
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::baselines::{EdfPolicy, FcfsPolicy, RoundRobinPolicy};
     use crate::sim::fleet_a100;
     use crate::workload::WorkloadSpec;
 
@@ -1614,133 +1004,19 @@ mod tests {
         Trace::generate(&spec, 42)
     }
 
-    fn run_policy(policy: Policy, rate: f64, n: usize, fleet: u32) -> RunMetrics {
-        let trace = small_trace(rate, n);
-        let cfg = SimConfig::new(fleet_a100(fleet), ModelCatalog::paper(), policy);
-        Simulation::new(cfg, &trace).run(&trace)
-    }
-
     #[test]
-    fn qlm_completes_all_requests_light_load() {
-        let m = run_policy(Policy::qlm(), 5.0, 200, 2);
-        assert_eq!(m.completed_count(), 200, "{}", m.summary());
-        assert!(m.slo_attainment() > 0.9, "{}", m.summary());
-    }
-
-    #[test]
-    fn vllm_completes_all_requests_light_load() {
-        let m = run_policy(Policy::VllmFcfs, 5.0, 200, 2);
-        assert_eq!(m.completed_count(), 200, "{}", m.summary());
-    }
-
-    #[test]
-    fn edf_completes_all_requests_light_load() {
-        let m = run_policy(Policy::Edf, 5.0, 200, 2);
-        assert_eq!(m.completed_count(), 200, "{}", m.summary());
-    }
-
-    #[test]
-    fn shepherd_completes_all_requests_light_load() {
-        let m = run_policy(Policy::Shepherd, 5.0, 200, 2);
-        assert_eq!(m.completed_count(), 200, "{}", m.summary());
-    }
-
-    #[test]
-    fn deterministic_across_runs() {
-        let a = run_policy(Policy::qlm(), 10.0, 150, 2);
-        let b = run_policy(Policy::qlm(), 10.0, 150, 2);
-        assert_eq!(a.completed_count(), b.completed_count());
-        assert!((a.slo_attainment() - b.slo_attainment()).abs() < 1e-12);
-        assert!((a.mean_ttft() - b.mean_ttft()).abs() < 1e-9);
-    }
-
-    #[test]
-    fn qlm_beats_vllm_under_pressure() {
-        // Overloaded single instance: QLM should prioritize interactive
-        // requests and win on SLO attainment.
-        let qlm = run_policy(Policy::qlm(), 40.0, 400, 1);
-        let vllm = run_policy(Policy::VllmFcfs, 40.0, 400, 1);
-        assert!(
-            qlm.slo_attainment() >= vllm.slo_attainment(),
-            "qlm {} vs vllm {}",
-            qlm.summary(),
-            vllm.summary()
-        );
-    }
-
-    #[test]
-    fn multi_model_swapping_occurs() {
-        let b1 = vec![ModelId(0), ModelId(1)];
-        let b2 = vec![ModelId(2), ModelId(1)];
-        let spec = WorkloadSpec::w_b(b1, b2, 20.0, 300);
-        let trace = Trace::generate(&spec, 7);
-        let cfg = SimConfig::new(fleet_a100(2), ModelCatalog::paper(), Policy::qlm());
-        let m = Simulation::new(cfg, &trace).run(&trace);
-        assert!(m.total_model_swaps() >= 2, "{}", m.summary());
-        assert!(m.completed_count() > 250, "{}", m.summary());
-    }
-
-    #[test]
-    fn horizon_caps_runtime() {
-        let trace = small_trace(50.0, 500);
-        let mut cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
-        cfg.horizon_s = 5.0;
-        let m = Simulation::new(cfg, &trace).run(&trace);
-        // Not all done, but the run terminates and records everyone.
-        assert_eq!(m.records.len(), 500);
-    }
-
-    #[test]
-    fn instance_failure_loses_no_requests() {
-        // §4 fault tolerance, end to end: kill one of two instances
-        // mid-run; every request still completes on the survivor.
-        let trace = small_trace(8.0, 200);
-        let mut cfg = SimConfig::new(fleet_a100(2), ModelCatalog::paper(), Policy::qlm());
-        cfg.failures = vec![(5.0, InstanceId(1))];
-        let m = Simulation::new(cfg, &trace).run(&trace);
-        assert_eq!(m.completed_count(), 200, "{}", m.summary());
-        // The dead instance did no work after t=5.
-        let healthy = run_policy(Policy::qlm(), 8.0, 200, 2);
-        assert!(
-            m.duration_s >= healthy.duration_s,
-            "losing capacity cannot speed the run up"
-        );
-    }
-
-    #[test]
-    fn failover_is_deterministic() {
-        let trace = small_trace(10.0, 150);
-        let run = || {
-            let mut cfg = SimConfig::new(fleet_a100(2), ModelCatalog::paper(), Policy::qlm());
-            cfg.failures = vec![(3.0, InstanceId(0))];
-            Simulation::new(cfg, &trace).run(&trace)
+    fn threaded_view_refresh_matches_serial() {
+        // The parallel fan-out must be invisible: identical view state
+        // whatever the thread count (index-ordered merge).
+        let trace = small_trace(5.0, 50);
+        let mk = |threads: usize| {
+            let mut cfg = SimConfig::new(fleet_a100(8), ModelCatalog::paper(), Policy::qlm());
+            cfg.threads = threads;
+            Simulation::new(cfg, &trace)
         };
-        let a = run();
-        let b = run();
-        assert_eq!(a.completed_count(), b.completed_count());
-        assert!((a.mean_ttft() - b.mean_ttft()).abs() < 1e-9);
-    }
-
-    #[test]
-    fn stale_superseded_wake_is_dropped() {
-        let trace = small_trace(5.0, 3);
-        let cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
-        let mut sim = Simulation::new(cfg, &trace);
-        // Out-of-order wake requests: the earlier wake supersedes the
-        // pending later one, whose heap entry cannot be cancelled.
-        sim.wake(InstanceId(0), 10.0);
-        sim.wake(InstanceId(0), 5.0);
-        let mut honored = 0;
-        while let Some(Reverse(ev)) = sim.events.pop() {
-            if let EventKind::Wake(id) = ev.kind {
-                if sim.take_due_wake(id, ev.t) {
-                    honored += 1;
-                }
-            }
-        }
-        assert_eq!(honored, 1, "only the superseding wake may fire");
-        assert_eq!(sim.wake_stats(), (1, 1), "the stale t=10 pop is dropped");
-        assert_eq!(sim.wake_pending[0], None);
+        let mut serial = mk(1);
+        let mut par = mk(4);
+        assert_eq!(serial.refresh_views_for_bench(), par.refresh_views_for_bench());
     }
 
     #[test]
@@ -1752,9 +1028,10 @@ mod tests {
         let trace = small_trace(5.0, 4);
         let cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
         let mut sim = Simulation::new(cfg, &trace);
-        sim.instances[0].swap_model(ModelId(0), 0.0);
-        let t0 = sim.instances[0].busy_until();
-        let perf = sim.instances[0].perf(ModelId(0));
+        let inst0 = InstanceId(0);
+        sim.fleet.inst_mut(inst0).swap_model(ModelId(0), 0.0);
+        let t0 = sim.fleet.inst(inst0).busy_until();
+        let perf = sim.fleet.inst(inst0).perf(ModelId(0));
         let per = (perf.token_capacity / 4).saturating_sub(64) as u32;
         for i in 0..4usize {
             let id = sim.queue.submit(Request::from_trace(0, &trace.requests[i]));
@@ -1768,12 +1045,12 @@ mod tests {
                 first_token_at: None,
                 arrival_s: 0.0,
             };
-            sim.instances[0].try_admit(seq, t0).unwrap();
+            sim.fleet.inst_mut(inst0).try_admit(seq, t0).unwrap();
         }
         let mut now = t0;
         let mut preempted = 0;
         for _ in 0..300 {
-            let out = sim.instances[0].step(now);
+            let out = sim.fleet.inst_mut(inst0).step(now);
             now += out.dt;
             preempted += out.preempted;
             if preempted > 0 {
@@ -1781,7 +1058,7 @@ mod tests {
             }
         }
         assert!(preempted > 0, "expected KV-overflow preemption");
-        assert!(sim.instances[0].swapped_len() > 0);
+        assert!(sim.fleet.inst(inst0).swapped_len() > 0);
         let m = sim.finish();
         assert_eq!(m.records.len(), 4, "swapped sequences must be recorded");
     }
@@ -1791,15 +1068,17 @@ mod tests {
         use crate::coordinator::lso::LsoConfig;
         use crate::workload::SloClass;
         // EDF / FCFS / round-robin plans must be functions of the group
-        // *set*, not of HashMap iteration order.
+        // *set*, not of HashMap iteration order — exercised straight
+        // through the policy seam.
         let trace = small_trace(5.0, 20);
-        for policy in [
-            Policy::Edf,
-            Policy::VllmFcfs,
-            Policy::qlm_with(LsoConfig::without_load_balancing()),
-        ] {
-            let run_with = |rev: bool| -> Vec<Vec<GroupId>> {
-                let cfg = SimConfig::new(fleet_a100(2), ModelCatalog::paper(), policy);
+        for which in 0..3 {
+            let sim_policy = match which {
+                0 => Policy::Edf,
+                1 => Policy::VllmFcfs,
+                _ => Policy::qlm_with(LsoConfig::without_load_balancing()),
+            };
+            let run_with = |rev: bool| -> Vec<(u32, Vec<GroupId>)> {
+                let cfg = SimConfig::new(fleet_a100(2), ModelCatalog::paper(), sim_policy);
                 let mut sim = Simulation::new(cfg, &trace);
                 let mut ids: Vec<u64> = (0..20).collect();
                 if rev {
@@ -1821,18 +1100,30 @@ mod tests {
                     );
                 }
                 let views = sim.refresh_views();
-                match policy {
-                    Policy::Edf => sim.schedule_edf(&views),
-                    Policy::VllmFcfs => sim.schedule_fcfs(&views),
-                    _ => sim.schedule_round_robin(&views),
-                }
-                sim.views_cache = views;
-                sim.vqs
-                    .iter()
-                    .map(|vq| vq.groups.iter().copied().collect())
-                    .collect()
+                let ctx = PolicyCtx {
+                    groups: &sim.groups,
+                    views: &views,
+                    pinned_model: &sim.pinned_model,
+                    now: 0.0,
+                    dirty: &sim.dirty_groups,
+                    removed: &sim.removed_groups,
+                    force_full: true,
+                };
+                let mut policy: Box<dyn SchedulingPolicy> = match which {
+                    0 => Box::new(EdfPolicy),
+                    1 => Box::new(FcfsPolicy),
+                    _ => Box::new(RoundRobinPolicy),
+                };
+                let plan = policy.plan(&ctx);
+                let mut orders: Vec<(u32, Vec<GroupId>)> = plan
+                    .orders
+                    .into_iter()
+                    .map(|(id, o)| (id.0, o))
+                    .collect();
+                orders.sort_by_key(|(id, _)| *id);
+                orders
             };
-            assert_eq!(run_with(false), run_with(true), "{}", policy.name());
+            assert_eq!(run_with(false), run_with(true), "{}", sim_policy.name());
         }
     }
 
@@ -1875,117 +1166,5 @@ mod tests {
                 assert!(sim.groups[gid].len() < 2, "{key:?} holds a full group");
             }
         }
-    }
-
-    /// Vicuna-13B W_A trace: heavy enough per token that overload forms
-    /// a real *waiting* backlog (Mistral's KV capacity absorbs small
-    /// bursts straight into the running batch, which never pressures
-    /// the autoscaler).
-    fn vicuna_trace(rate: f64, n: usize) -> Trace {
-        Trace::generate(&WorkloadSpec::w_a(ModelId(1), rate, n), 42)
-    }
-
-    #[test]
-    fn autoscaler_grows_fleet_under_pressure_and_completes() {
-        use crate::backend::GpuKind;
-        let trace = vicuna_trace(40.0, 600);
-        let mut cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
-        let mut auto = AutoscaleConfig::bounded(1, 4, GpuKind::A100);
-        auto.breach_passes = 2;
-        auto.cooldown_s = 5.0;
-        // Short bench-scale trace: trip on a couple of seconds of
-        // predicted backlog rather than the production half-SLO.
-        auto.up_frac = 0.1;
-        cfg.autoscale = Some(auto);
-        let m = Simulation::new(cfg, &trace).run(&trace);
-        assert_eq!(m.completed_count(), 600, "{}", m.summary());
-        assert!(m.scale_ups >= 1, "overload must trigger provisioning");
-        // The ledger bills provisioned capacity only from commission on.
-        assert!(
-            m.device_seconds <= 4.0 * m.duration_s + 1e-6,
-            "{} vs {}",
-            m.device_seconds,
-            m.duration_s
-        );
-        // Extra capacity must not slow the run down vs the fixed fleet.
-        let fixed = {
-            let cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
-            Simulation::new(cfg, &trace).run(&trace)
-        };
-        assert!(
-            m.duration_s <= fixed.duration_s * 1.05,
-            "auto {} vs fixed {}",
-            m.duration_s,
-            fixed.duration_s
-        );
-    }
-
-    #[test]
-    fn autoscaling_is_deterministic() {
-        use crate::backend::GpuKind;
-        let trace = vicuna_trace(40.0, 300);
-        let run = || {
-            let mut cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
-            let mut auto = AutoscaleConfig::bounded(1, 3, GpuKind::A100);
-            auto.breach_passes = 2;
-            auto.cooldown_s = 5.0;
-            auto.up_frac = 0.1;
-            cfg.autoscale = Some(auto);
-            Simulation::new(cfg, &trace).run(&trace)
-        };
-        let a = run();
-        let b = run();
-        assert_eq!(a.completed_count(), b.completed_count());
-        assert_eq!(a.scale_ups, b.scale_ups);
-        assert_eq!(a.scale_downs, b.scale_downs);
-        assert!((a.device_seconds - b.device_seconds).abs() < 1e-9);
-        assert!((a.mean_ttft() - b.mean_ttft()).abs() < 1e-9);
-    }
-
-    #[test]
-    fn admission_sheds_hopeless_batch_classes_only() {
-        use crate::capacity::AdmissionConfig;
-        // One instance under a crushing W_A overload with an aggressive
-        // shed gate: batch classes are refused at the door once their
-        // predicted drain blows through the gate; interactive never is.
-        let trace = small_trace(60.0, 600);
-        let mut cfg = SimConfig::new(fleet_a100(1), ModelCatalog::paper(), Policy::qlm());
-        cfg.admission = AdmissionConfig {
-            enabled: true,
-            shed_frac: 0.05,
-            resume_frac: 0.01,
-        };
-        let m = Simulation::new(cfg, &trace).run(&trace);
-        assert_eq!(m.records.len(), 600, "every request recorded exactly once");
-        let shed = m.shed_count();
-        assert!(shed > 0, "hopeless batch backlog must shed: {}", m.summary());
-        assert!(
-            m.records
-                .iter()
-                .filter(|r| r.shed)
-                .all(|r| r.class != crate::workload::SloClass::Interactive),
-            "interactive traffic must never be shed"
-        );
-        assert_eq!(
-            m.completed_count() + shed,
-            600,
-            "shed + completed must conserve the trace"
-        );
-    }
-
-    #[test]
-    fn incremental_and_full_sched_paths_both_serve_everything() {
-        let trace = small_trace(5.0, 200);
-        let run_mode = |inc: bool| {
-            let mut cfg = SimConfig::new(fleet_a100(2), ModelCatalog::paper(), Policy::qlm());
-            cfg.sched_incremental = inc;
-            Simulation::new(cfg, &trace).run(&trace)
-        };
-        let a = run_mode(true);
-        let b = run_mode(false);
-        assert_eq!(a.completed_count(), 200, "{}", a.summary());
-        assert_eq!(b.completed_count(), 200, "{}", b.summary());
-        assert!(a.slo_attainment() > 0.9, "{}", a.summary());
-        assert!(b.slo_attainment() > 0.9, "{}", b.summary());
     }
 }

@@ -1,0 +1,222 @@
+//! EventCore: the simulation's time-ordering layer.
+//!
+//! Owns the clock, the (time, seq)-ordered event heap, the per-instance
+//! wake-deduplication state, and the per-instance iteration-end times.
+//! The serving engine reacts to events; EventCore decides *when* they
+//! fire — splitting the two keeps heap/dedup invariants in one place
+//! and lets every policy / fleet change land without touching the
+//! time-ordering logic (the §5 layering: LSO actuation and scheduling
+//! sit above a dumb, correct clock).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::backend::InstanceId;
+
+/// What happens when an event fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum EventKind {
+    /// Trace request `i` arrives at the global queue.
+    Arrival(usize),
+    /// An instance runs one continuous-batching iteration.
+    Wake(InstanceId),
+    /// Injected instance failure (§4 Fault Tolerance).
+    Fail(InstanceId),
+    /// A provisioned instance finishes its cold start and joins the
+    /// fleet (autoscaler scale-up).
+    Provision(InstanceId),
+}
+
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Event {
+    pub t: f64,
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .partial_cmp(&other.t)
+            .unwrap()
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Clock + event heap + wake dedup. Instances are identified by dense
+/// indices (`InstanceId.0`), matching the engine's per-instance `Vec`s.
+pub(crate) struct EventCore {
+    /// Simulated time of the event being processed.
+    pub now: f64,
+    seq: u64,
+    heap: BinaryHeap<Reverse<Event>>,
+    /// Per-instance wake deduplication: at most one pending Wake per
+    /// instance (avoids event-storm blowup). An earlier wake supersedes
+    /// a later pending one; the superseded heap entry cannot be removed
+    /// from the `BinaryHeap` and is dropped at pop time instead (see
+    /// [`EventCore::take_due_wake`]).
+    wake_pending: Vec<Option<f64>>,
+    /// End time of each instance's in-flight iteration: a step is an
+    /// atomic unit of GPU work; wakes landing inside it are deferred.
+    next_free: Vec<f64>,
+    /// Wake bookkeeping: honored pops vs superseded (stale) pops.
+    wakes_executed: u64,
+    wakes_stale_dropped: u64,
+}
+
+impl EventCore {
+    pub fn new(n_instances: usize) -> Self {
+        EventCore {
+            now: 0.0,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            wake_pending: vec![None; n_instances],
+            next_free: vec![0.0; n_instances],
+            wakes_executed: 0,
+            wakes_stale_dropped: 0,
+        }
+    }
+
+    /// Grow the per-instance state for a newly provisioned instance.
+    pub fn add_instance(&mut self) {
+        self.wake_pending.push(None);
+        self.next_free.push(0.0);
+    }
+
+    pub fn push(&mut self, t: f64, kind: EventKind) {
+        self.seq += 1;
+        self.heap.push(Reverse(Event {
+            t,
+            seq: self.seq,
+            kind,
+        }));
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|Reverse(ev)| ev)
+    }
+
+    /// Request a wake for `id` at `t`. Callers are responsible for the
+    /// liveness check — EventCore only owns the dedup. Coalesces: a
+    /// pending earlier-or-equal wake absorbs this one; an *earlier*
+    /// wake supersedes a pending later one, whose heap entry stays
+    /// behind and is discarded at pop time by [`Self::take_due_wake`].
+    pub fn wake(&mut self, id: InstanceId, t: f64) {
+        let idx = id.0 as usize;
+        if let Some(pending) = self.wake_pending[idx] {
+            if pending <= t + 1e-12 {
+                return;
+            }
+        }
+        self.wake_pending[idx] = Some(t);
+        self.push(t, EventKind::Wake(id));
+    }
+
+    /// Pop-side half of the wake dedup: honor a popped Wake only if it
+    /// *is* the currently pending wake for the instance. Superseded
+    /// entries used to clear `wake_pending` and fire a spurious
+    /// iteration anyway, breaking the at-most-one-pending-Wake
+    /// invariant (a stale pop would also cancel a legitimately pending
+    /// newer wake, duplicating iterations at the old time).
+    pub fn take_due_wake(&mut self, id: InstanceId, t: f64) -> bool {
+        let idx = id.0 as usize;
+        match self.wake_pending[idx] {
+            Some(pending) if (pending - t).abs() <= 1e-12 => {
+                self.wake_pending[idx] = None;
+                self.wakes_executed += 1;
+                true
+            }
+            _ => {
+                self.wakes_stale_dropped += 1;
+                false
+            }
+        }
+    }
+
+    /// Drop any pending wake for a dead/decommissioned instance.
+    pub fn clear_pending(&mut self, id: InstanceId) {
+        self.wake_pending[id.0 as usize] = None;
+    }
+
+    #[cfg(test)]
+    pub fn pending_wake(&self, id: InstanceId) -> Option<f64> {
+        self.wake_pending[id.0 as usize]
+    }
+
+    /// (honored, stale-dropped) wake pops — observability for the
+    /// at-most-one-pending-Wake invariant.
+    pub fn wake_stats(&self) -> (u64, u64) {
+        (self.wakes_executed, self.wakes_stale_dropped)
+    }
+
+    pub fn next_free(&self, id: InstanceId) -> f64 {
+        self.next_free[id.0 as usize]
+    }
+
+    pub fn set_next_free(&mut self, id: InstanceId, t: f64) {
+        self.next_free[id.0 as usize] = t;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_then_seq_order() {
+        let mut core = EventCore::new(1);
+        core.push(5.0, EventKind::Arrival(0));
+        core.push(1.0, EventKind::Arrival(1));
+        core.push(5.0, EventKind::Arrival(2));
+        let order: Vec<usize> = std::iter::from_fn(|| core.pop())
+            .map(|e| match e.kind {
+                EventKind::Arrival(i) => i,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![1, 0, 2], "ties break by insertion seq");
+    }
+
+    #[test]
+    fn stale_superseded_wake_is_dropped() {
+        // Out-of-order wake requests: the earlier wake supersedes the
+        // pending later one, whose heap entry cannot be cancelled.
+        let mut core = EventCore::new(1);
+        core.wake(InstanceId(0), 10.0);
+        core.wake(InstanceId(0), 5.0);
+        let mut honored = 0;
+        while let Some(ev) = core.pop() {
+            if let EventKind::Wake(id) = ev.kind {
+                if core.take_due_wake(id, ev.t) {
+                    honored += 1;
+                }
+            }
+        }
+        assert_eq!(honored, 1, "only the superseding wake may fire");
+        assert_eq!(core.wake_stats(), (1, 1), "the stale t=10 pop is dropped");
+        assert_eq!(core.pending_wake(InstanceId(0)), None);
+    }
+
+    #[test]
+    fn later_wake_coalesces_into_pending_earlier_one() {
+        let mut core = EventCore::new(1);
+        core.wake(InstanceId(0), 2.0);
+        core.wake(InstanceId(0), 7.0); // absorbed
+        let mut pops = 0;
+        while core.pop().is_some() {
+            pops += 1;
+        }
+        assert_eq!(pops, 1, "the later wake must not enqueue an event");
+    }
+}

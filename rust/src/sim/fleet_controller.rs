@@ -1,0 +1,433 @@
+//! FleetController: instance lifecycle and the capacity bridge.
+//!
+//! Owns the serving instances plus everything about their *lifecycle* —
+//! liveness, draining, the commission/decommission device-seconds
+//! ledger, cold-start provisioning — and is the single point where the
+//! engine talks to the capacity subsystem (`capacity::Autoscaler`,
+//! `capacity::AdmissionController`). The engine asks it for scale
+//! decisions and applies the event-loop side effects (virtual queues,
+//! agents, wake events); the controller never touches scheduling state.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::backend::{
+    GpuKind, Instance, InstanceConfig, InstanceId, ModelCatalog, ModelId, PerfModel, RunningSeq,
+};
+use crate::baselines::Policy;
+use crate::capacity::{AdmissionController, Autoscaler, ClassPressure, ScaleDecision};
+use crate::coordinator::rwt::ProfileTable;
+use crate::coordinator::scheduler::InstanceView;
+use crate::workload::{SloClass, Trace};
+
+/// Static model placement for policies without model swapping:
+/// distribute instances over models proportionally to request share
+/// (what an operator running vanilla vLLM would provision). Runs over
+/// the bare instance slice before the controller takes ownership.
+pub(crate) fn static_pinning(
+    instances: &mut [Instance],
+    catalog: &ModelCatalog,
+    policy: &Policy,
+    trace: &Trace,
+) -> HashMap<InstanceId, ModelId> {
+    let mut pinned = HashMap::new();
+    if policy.lso().model_swapping {
+        return pinned;
+    }
+    let mut counts: HashMap<ModelId, usize> = HashMap::new();
+    for r in &trace.requests {
+        *counts.entry(r.model).or_default() += 1;
+    }
+    let mut models: Vec<(ModelId, usize)> = counts.into_iter().collect();
+    models.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    let total: usize = models.iter().map(|(_, c)| c).sum();
+    let n_inst = instances.len();
+    // Quota per model (≥1), largest first.
+    let mut quota: Vec<(ModelId, usize)> = models
+        .iter()
+        .map(|&(m, c)| {
+            let q = (c as f64 / total as f64) * n_inst as f64;
+            (m, q.round().max(1.0) as usize)
+        })
+        .collect();
+    // Trim/extend to exactly n_inst.
+    let mut assigned: usize = quota.iter().map(|(_, q)| q).sum();
+    let mut i = 0;
+    let nq = quota.len();
+    while assigned > n_inst && nq > 0 {
+        // Prefer shrinking an over-provisioned model; if every quota
+        // is already 1 (more models than instances), drop the least
+        // popular model entirely — static provisioning cannot serve
+        // more models than it has instances.
+        if let Some(k) = (0..nq).filter(|&k| quota[k].1 > 1).max_by_key(|&k| quota[k].1) {
+            quota[k].1 -= 1;
+        } else if let Some(k) = (0..nq).rev().find(|&k| quota[k].1 == 1) {
+            quota[k].1 = 0;
+        } else {
+            break;
+        }
+        assigned -= 1;
+    }
+    while assigned < n_inst && nq > 0 {
+        quota[i % nq].1 += 1;
+        assigned += 1;
+        i += 1;
+    }
+    // Pin: each instance gets the next model with remaining quota it
+    // can actually serve.
+    for inst in instances.iter_mut() {
+        let gpu = inst.config.gpu;
+        let pick = quota
+            .iter_mut()
+            .find(|(m, q)| *q > 0 && PerfModel::fits(catalog.get(*m), gpu))
+            .map(|e| {
+                e.1 -= 1;
+                e.0
+            })
+            .or_else(|| {
+                quota
+                    .iter()
+                    .map(|&(m, _)| m)
+                    .find(|&m| PerfModel::fits(catalog.get(m), gpu))
+            });
+        if let Some(m) = pick {
+            pinned.insert(inst.config.id, m);
+            let (_ready, displaced) = inst.swap_model(m, 0.0);
+            debug_assert!(displaced.is_empty());
+        }
+    }
+    pinned
+}
+
+pub(crate) struct FleetController {
+    instances: Vec<Instance>,
+    /// Dense per-instance liveness, indexed by `InstanceId.0`.
+    alive: Vec<bool>,
+    /// Scale-down in progress: the instance receives no new work and
+    /// leaves the fleet once its running batch drains (no mid-flight
+    /// kills).
+    draining: Vec<bool>,
+    /// When each instance joined the fleet (0 for the starting fleet,
+    /// cold-start completion for provisioned ones) / left it — the
+    /// device-seconds ledger.
+    commissioned_at: Vec<f64>,
+    decommissioned_at: Vec<Option<f64>>,
+    /// Provisioned instances still in their cold-start window.
+    warming: u32,
+    autoscaler: Option<Autoscaler>,
+    pub admission: AdmissionController,
+    /// Waiting (+ evicted) request counts per (class, model, mega),
+    /// maintained incrementally at every state transition — the
+    /// autoscaler's and admission controller's backlog signal without
+    /// any per-pass walk. Mega is in the key because the profile table
+    /// is: mega output moments are several times larger, and pricing a
+    /// mega backlog with the regular profile would underestimate drain
+    /// times exactly when the pressure signal matters most.
+    /// `BTreeMap` so pressure sums fold in a deterministic order.
+    waiting_by: BTreeMap<(SloClass, ModelId, bool), i64>,
+    catalog: ModelCatalog,
+}
+
+impl FleetController {
+    pub fn new(
+        instances: Vec<Instance>,
+        catalog: ModelCatalog,
+        autoscaler: Option<Autoscaler>,
+        admission: AdmissionController,
+    ) -> Self {
+        let n = instances.len();
+        FleetController {
+            instances,
+            alive: vec![true; n],
+            draining: vec![false; n],
+            commissioned_at: vec![0.0; n],
+            decommissioned_at: vec![None; n],
+            warming: 0,
+            autoscaler,
+            admission,
+            waiting_by: BTreeMap::new(),
+            catalog,
+        }
+    }
+
+    /// Total instances ever registered (alive or not) — the dense
+    /// per-instance index space.
+    pub fn instance_count(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn instances(&self) -> &[Instance] {
+        &self.instances
+    }
+
+    pub fn inst(&self, id: InstanceId) -> &Instance {
+        &self.instances[id.0 as usize]
+    }
+
+    pub fn inst_mut(&mut self, id: InstanceId) -> &mut Instance {
+        &mut self.instances[id.0 as usize]
+    }
+
+    pub fn alive(&self, id: InstanceId) -> bool {
+        self.alive[id.0 as usize]
+    }
+
+    pub fn is_draining(&self, id: InstanceId) -> bool {
+        self.draining[id.0 as usize]
+    }
+
+    /// Adjust the incremental waiting counter for one backlog key.
+    pub fn note_waiting(&mut self, key: (SloClass, ModelId, bool), delta: i64) {
+        *self.waiting_by.entry(key).or_default() += delta;
+    }
+
+    /// Per-class backlog pressure from the incremental waiting counters:
+    /// predicted drain time = pending output tokens of this class and
+    /// every tighter class over the fleet's aggregate Θ — the
+    /// RWT-estimator waiting model (Eq. 2) applied fleet-wide.
+    ///
+    /// `fit_gpu` restricts each class's `hottest_model` to models that
+    /// fit that tier, so a scale-up never warms (or is sized for) a
+    /// model the provisioned device cannot host.
+    pub fn class_pressures(
+        &self,
+        views: &[InstanceView],
+        profiles: &ProfileTable,
+        fit_gpu: Option<GpuKind>,
+    ) -> Vec<ClassPressure> {
+        // Aggregate Θ over active (non-draining) instances: each runs
+        // its most capable model at the profile-mean footprint.
+        let mut fleet_theta = 0.0;
+        for v in views {
+            let best = v
+                .perf_for
+                .iter()
+                .map(|(m, p)| {
+                    let prof = profiles.get(*m, SloClass::Interactive, false);
+                    p.steady_throughput(prof.mean_tokens_per_req())
+                })
+                .fold(0.0_f64, f64::max);
+            fleet_theta += best;
+        }
+        let mut out = Vec::with_capacity(SloClass::ALL.len());
+        let mut cum_tokens = 0.0;
+        for class in SloClass::ALL {
+            let mut waiting = 0usize;
+            let mut tokens = 0.0;
+            // Per-model totals (mega + non-mega summed) over hostable
+            // models — a model's backlog must not lose the hottest pick
+            // because it was split across mega variants.
+            let mut per_model: BTreeMap<ModelId, i64> = BTreeMap::new();
+            for (&(c, m, mega), &n) in &self.waiting_by {
+                if c != class || n <= 0 {
+                    continue;
+                }
+                waiting += n as usize;
+                tokens += n as f64 * profiles.get(m, c, mega).mu_out;
+                let hostable = fit_gpu
+                    .map(|g| PerfModel::fits(self.catalog.get(m), g))
+                    .unwrap_or(true);
+                if hostable {
+                    *per_model.entry(m).or_default() += n;
+                }
+            }
+            // Ascending iteration + strict `>` keeps the lowest model
+            // id on ties.
+            let mut hottest: Option<(ModelId, i64)> = None;
+            for (&m, &n) in &per_model {
+                if hottest.map(|(_, hn)| n > hn).unwrap_or(true) {
+                    hottest = Some((m, n));
+                }
+            }
+            cum_tokens += tokens;
+            let drain_s = if cum_tokens <= 0.0 {
+                0.0
+            } else if fleet_theta > 0.0 {
+                cum_tokens / fleet_theta
+            } else {
+                f64::INFINITY
+            };
+            out.push(ClassPressure {
+                class,
+                waiting,
+                drain_s,
+                hottest_model: hottest.map(|(m, _)| m),
+            });
+        }
+        out
+    }
+
+    /// One capacity-subsystem evaluation, run after every scheduler
+    /// pass: update the admission gates and ask the autoscaler for a
+    /// decision (the engine applies it — provisioning and draining have
+    /// event-loop side effects). Free when the whole subsystem is off —
+    /// the pressure walk must not tax runs (or Fig. 20 overhead
+    /// numbers) that never asked for capacity management.
+    pub fn capacity_tick(
+        &mut self,
+        now: f64,
+        views: &[InstanceView],
+        profiles: &ProfileTable,
+    ) -> ScaleDecision {
+        if self.autoscaler.is_none() && !self.admission.cfg.enabled {
+            return ScaleDecision::Hold;
+        }
+        let tier = self.autoscaler.as_ref().map(|a| a.cfg.gpu);
+        let pressures = self.class_pressures(views, profiles, tier);
+        let active = (0..self.instances.len())
+            .filter(|&i| self.alive[i] && !self.draining[i])
+            .count() as u32;
+        let draining = (0..self.instances.len())
+            .filter(|&i| self.alive[i] && self.draining[i])
+            .count() as u32;
+        // "Maxed" for admission purposes means growth cannot help: the
+        // instance budget is exhausted, or nothing backlogged fits the
+        // provisionable tier (hottest_model is tier-filtered) — in
+        // either case waiting for more capacity would be waiting for
+        // capacity that can never serve the backlog.
+        let fleet_maxed = match &self.autoscaler {
+            Some(a) => {
+                let at_max = active + self.warming + draining >= a.cfg.max_instances;
+                let growth_helps = pressures
+                    .iter()
+                    .any(|p| p.waiting > 0 && p.hottest_model.is_some());
+                at_max || !growth_helps
+            }
+            None => true, // a fixed fleet cannot grow
+        };
+        let drains: Vec<(SloClass, f64)> = pressures.iter().map(|p| (p.class, p.drain_s)).collect();
+        self.admission.update(&drains, fleet_maxed);
+        let any_idle = (0..self.instances.len())
+            .any(|i| self.alive[i] && !self.draining[i] && self.instances[i].is_idle());
+        let warming = self.warming;
+        match self.autoscaler.as_mut() {
+            Some(a) => a.decide(now, &pressures, active, warming, draining, any_idle),
+            None => ScaleDecision::Hold,
+        }
+    }
+
+    /// Provision one instance (autoscaler scale-up). The cold start is
+    /// the weight-staging time of the model the scale-up is for
+    /// (storage → CPU, priced by the perf model); the instance joins
+    /// the fleet with those weights warm in host memory, so its first
+    /// SwapModel LSO pays only the CPU → GPU hop. Returns the new id
+    /// and its ready time; the engine grows its own per-instance state
+    /// and schedules the Provision event.
+    pub fn provision(&mut self, model: ModelId, now: f64) -> Option<(InstanceId, f64)> {
+        let gpu = self.autoscaler.as_ref()?.cfg.gpu;
+        // A tier that can host nothing in the catalog would add a device
+        // that serves no model at all — refuse rather than burn
+        // device-hours on it (misconfigured AutoscaleConfig::gpu).
+        let serves_any = self
+            .catalog
+            .ids()
+            .into_iter()
+            .any(|m| PerfModel::fits(self.catalog.get(m), gpu));
+        if !serves_any {
+            return None;
+        }
+        let id = InstanceId(self.instances.len() as u32);
+        let mut inst = Instance::new(InstanceConfig::new(id.0, gpu), self.catalog.clone());
+        let prompt = crate::backend::perf::PROFILE_MEAN_PROMPT_TOKENS;
+        let delay = PerfModel::try_profile(self.catalog.get(model), gpu, prompt)
+            .map(|p| p.swap_storage_cpu_s)
+            .unwrap_or(30.0);
+        inst.registry_mut().set_warm_set(&[model]);
+        let ready = now + delay;
+        self.instances.push(inst);
+        self.alive.push(false);
+        self.draining.push(false);
+        self.commissioned_at.push(ready);
+        self.decommissioned_at.push(None);
+        self.warming += 1;
+        Some((id, ready))
+    }
+
+    /// Cold start finished: the instance goes live.
+    pub fn commission(&mut self, id: InstanceId) {
+        self.warming = self.warming.saturating_sub(1);
+        self.alive[id.0 as usize] = true;
+    }
+
+    /// Pick a scale-down victim (idle preferred, then highest id) and
+    /// mark it draining: it leaves the scheduler's view set immediately,
+    /// keeps stepping its running batch to completion, and is
+    /// decommissioned when idle. No request is killed mid-flight.
+    pub fn begin_drain(&mut self) -> Option<InstanceId> {
+        let victim = (0..self.instances.len())
+            .filter(|&i| self.alive[i] && !self.draining[i])
+            .max_by_key(|&i| (self.instances[i].is_idle(), i))
+            .map(|i| InstanceId(i as u32))?;
+        self.draining[victim.0 as usize] = true;
+        Some(victim)
+    }
+
+    /// A drained instance leaves the fleet for good. Returns false if it
+    /// was already gone; the engine handles the broker-side cleanup.
+    pub fn decommission(&mut self, id: InstanceId, now: f64) -> bool {
+        let idx = id.0 as usize;
+        if !self.alive[idx] {
+            return false;
+        }
+        debug_assert!(
+            self.instances[idx].is_idle(),
+            "decommission requires a drained batch"
+        );
+        self.alive[idx] = false;
+        self.decommissioned_at[idx] = Some(now);
+        true
+    }
+
+    /// Instance failure (§4 Fault Isolation): the device is gone.
+    /// Returns the sequences lost with it (None if it was already
+    /// dead); the engine reverts them to Waiting and rebuilds state.
+    pub fn fail(&mut self, id: InstanceId, now: f64) -> Option<Vec<RunningSeq>> {
+        let idx = id.0 as usize;
+        if !self.alive[idx] {
+            return None;
+        }
+        self.alive[idx] = false;
+        if self.decommissioned_at[idx].is_none() {
+            self.decommissioned_at[idx] = Some(now);
+        }
+        Some(self.instances[idx].fail())
+    }
+
+    /// The tier a future scale-up could still provision, if any — the
+    /// rescuability gate for unservable-group retirement (shedding
+    /// recoverable work early would throw requests away, the same rule
+    /// the admission controller applies at submit time).
+    pub fn rescue_tier(&self) -> Option<GpuKind> {
+        let a = self.autoscaler.as_ref()?;
+        let powered =
+            (0..self.instances.len()).filter(|&i| self.alive[i]).count() as u32 + self.warming;
+        if powered < a.cfg.max_instances {
+            Some(a.cfg.gpu)
+        } else {
+            None
+        }
+    }
+
+    /// Device-seconds ledger: each instance is billed from commission
+    /// (cold-start completion for provisioned ones) to decommission /
+    /// failure / end of run. An instance that never joined — its
+    /// Provision event was still pending when the run ended (not
+    /// alive, never decommissioned) — is not billed.
+    pub fn device_seconds(&self, duration: f64) -> f64 {
+        (0..self.instances.len())
+            .filter(|&i| self.alive[i] || self.decommissioned_at[i].is_some())
+            .map(|i| {
+                let start = self.commissioned_at[i].min(duration);
+                let end = self.decommissioned_at[i].unwrap_or(duration).min(duration);
+                (end - start).max(0.0)
+            })
+            .sum()
+    }
+
+    /// (scale_ups, scale_downs) taken by the autoscaler this run.
+    pub fn scale_stats(&self) -> (u64, u64) {
+        self.autoscaler
+            .as_ref()
+            .map(|a| (a.scale_ups, a.scale_downs))
+            .unwrap_or((0, 0))
+    }
+}

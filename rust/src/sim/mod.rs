@@ -4,8 +4,11 @@
 //! control path exactly as in Fig. 6.
 
 pub mod engine;
+mod event;
 pub mod fleet;
+mod fleet_controller;
 pub mod profiler;
+mod views;
 
 pub use engine::{SimConfig, Simulation};
 pub use fleet::{fleet_a100, fleet_from_tiers, fleet_mixed, fleet_of, FleetSpec};

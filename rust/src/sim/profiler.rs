@@ -14,8 +14,29 @@ use std::collections::HashMap;
 use crate::backend::{
     GpuKind, Instance, InstanceConfig, ModelCatalog, ModelId, PerfModel, RunningSeq,
 };
+use crate::coordinator::rwt::ProfileTable;
 use crate::util::Rng;
-use crate::workload::ShareGptSampler;
+use crate::workload::{ShareGptSampler, Trace};
+
+/// SHEPHERD's deterministic worst-case profile: μ_out := max_out, σ := 0
+/// — the DNN-serving estimation assumption Fig. 1 critiques.
+pub(crate) fn conservative_profiles(profiles: &ProfileTable, trace: &Trace) -> ProfileTable {
+    let mut out = ProfileTable::default();
+    let mut keys: Vec<(ModelId, crate::workload::SloClass, bool)> = trace
+        .requests
+        .iter()
+        .map(|r| (r.model, r.class, r.mega))
+        .collect();
+    keys.sort();
+    keys.dedup();
+    for (m, c, mg) in keys {
+        let mut p = profiles.get(m, c, mg);
+        p.mu_out = p.max_out;
+        p.sigma_out = 0.0;
+        out.insert(m, c, mg, p);
+    }
+    out
+}
 
 /// Cache of profiled Θ per (gpu, model).
 #[derive(Debug, Default, Clone)]

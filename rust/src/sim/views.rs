@@ -1,0 +1,110 @@
+//! The view pass: building and refreshing the scheduler's per-instance
+//! [`InstanceView`]s.
+//!
+//! Refreshing is the per-pass hot loop and is embarrassingly parallel —
+//! each view reads only its own instance — so [`refresh_all`] fans out
+//! over `std::thread::scope` (zero-dep, stable since Rust 1.63) when
+//! the engine is configured with worker threads. Chunks are split and
+//! merged in index order, so the refreshed views are bit-identical to
+//! the serial pass whatever the thread count (`cargo bench --
+//! par_views` measures it; the golden suite asserts it end to end).
+
+use std::collections::HashMap;
+
+use crate::backend::{Instance, ModelCatalog, ModelId};
+use crate::coordinator::request_group::GroupId;
+use crate::coordinator::scheduler::InstanceView;
+use crate::sim::profiler::ThetaCache;
+
+/// Build one instance's scheduler view: `perf_for` is static per
+/// (instance, model); only swap times, active model, and the executing
+/// group change between passes (see [`refresh_all`]).
+pub(crate) fn build_view(
+    idx: usize,
+    instances: &[Instance],
+    catalog: &ModelCatalog,
+    pinned_model: &HashMap<crate::backend::InstanceId, ModelId>,
+    thetas: &mut ThetaCache,
+) -> InstanceView {
+    let inst = &instances[idx];
+    let id = inst.config.id;
+    let gpu = inst.config.gpu;
+    let mut perf_for = HashMap::new();
+    let mut swap_time = HashMap::new();
+    for m in catalog.ids() {
+        // Pinned instances only serve their pinned model.
+        if let Some(&pm) = pinned_model.get(&id) {
+            if pm != m {
+                continue;
+            }
+        }
+        let prompt = crate::backend::perf::PROFILE_MEAN_PROMPT_TOKENS;
+        if let Some(p) = thetas.perf(gpu, m, catalog, prompt) {
+            swap_time.insert(m, inst.registry().swap_in_time_s(m, &p));
+            perf_for.insert(m, p);
+        }
+    }
+    InstanceView {
+        id,
+        active_model: inst.active_model(),
+        perf_for,
+        swap_time,
+        executing: None,
+    }
+}
+
+/// Refresh one view in place from its live instance.
+fn refresh_one(v: &mut InstanceView, instances: &[Instance], group_of: &HashMap<u64, GroupId>) {
+    let inst = &instances[v.id.0 as usize];
+    v.active_model = inst.active_model();
+    v.executing = inst
+        .running()
+        .first()
+        .and_then(|s| group_of.get(&s.req_id).copied());
+    // Swap-in times depend on each model's current tier.
+    for (m, t) in v.swap_time.iter_mut() {
+        let p = v.perf_for[m];
+        *t = inst.registry().swap_in_time_s(*m, &p);
+    }
+}
+
+/// Refresh every view for one scheduler pass, fanning out over
+/// `threads` scoped workers when there are enough views to split
+/// (the gate and chunking live in [`crate::util::par_chunks_mut`],
+/// shared with the scheduler's repricing walk). Serial and parallel
+/// paths produce identical views: the work per view is independent and
+/// chunks stay in index order.
+pub(crate) fn refresh_all(
+    views: &mut [InstanceView],
+    instances: &[Instance],
+    group_of: &HashMap<u64, GroupId>,
+    threads: usize,
+) {
+    crate::util::par_chunks_mut(views, threads, |v| refresh_one(v, instances, group_of));
+}
+
+/// Order-stable digest of the refreshed view state (bench/test
+/// observability: serial and threaded refreshes must collide).
+pub(crate) fn digest(views: &[InstanceView]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |h: &mut u64, x: u64| {
+        *h ^= x;
+        *h = h.wrapping_mul(0x100000001b3);
+    };
+    for v in views {
+        mix(&mut h, v.id.0 as u64);
+        mix(&mut h, v.active_model.map(|m| m.0 as u64 + 1).unwrap_or(0));
+        mix(&mut h, v.executing.map(|g| g.0 + 1).unwrap_or(0));
+        let mut swaps: Vec<(u32, u64)> = v
+            .swap_time
+            .iter()
+            .map(|(m, t)| (m.0, t.to_bits()))
+            .collect();
+        swaps.sort_unstable();
+        for (m, t) in swaps {
+            mix(&mut h, m as u64);
+            mix(&mut h, t);
+        }
+    }
+    h
+}

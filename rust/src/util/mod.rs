@@ -9,7 +9,9 @@ pub mod rng;
 pub mod stats;
 pub mod histogram;
 pub mod kmeans;
+pub mod par;
 
+pub use par::par_chunks_mut;
 pub use rng::Rng;
 pub use stats::{linear_fit, mean, percentile, r_squared, stddev, variance, OnlineStats};
 pub use histogram::Histogram;

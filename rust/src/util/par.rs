@@ -1,0 +1,61 @@
+//! The one scoped-thread fan-out primitive behind every parallel pass
+//! (engine view refresh, scheduler queue repricing).
+//!
+//! Semantics are deliberately rigid so "threaded ≡ serial bit-for-bit"
+//! holds at every call site: items are split into at most `threads`
+//! index-ordered chunks, each worker mutates only its own chunk, and
+//! nothing is reduced across workers (callers fold results serially
+//! afterwards). The engagement gate (`len ≥ 2 × threads`) lives here
+//! and only here — below it, thread-spawn cost dominates the work and
+//! the pass runs serially.
+
+/// Apply `f` to every item, fanning out over `threads` scoped workers
+/// when there are enough items to split. `threads ≤ 1` (or too few
+/// items) runs serially; either way `f` sees each item exactly once,
+/// in a deterministic per-chunk order.
+pub fn par_chunks_mut<T, F>(items: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(&mut T) + Sync,
+{
+    let threads = threads.max(1);
+    if threads <= 1 || items.len() < 2 * threads {
+        for t in items.iter_mut() {
+            f(t);
+        }
+        return;
+    }
+    let chunk = items.len().div_ceil(threads);
+    let f = &f;
+    std::thread::scope(|s| {
+        for slice in items.chunks_mut(chunk) {
+            s.spawn(move || {
+                for t in slice {
+                    f(t);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_and_threaded_visit_every_item_once() {
+        for threads in [1, 2, 4, 7] {
+            let mut items: Vec<u64> = (0..97).collect();
+            par_chunks_mut(&mut items, threads, |x| *x += 1000);
+            let want: Vec<u64> = (1000..1097).collect();
+            assert_eq!(items, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn small_inputs_stay_serial_but_complete() {
+        let mut items = vec![1u64, 2, 3];
+        par_chunks_mut(&mut items, 8, |x| *x *= 2);
+        assert_eq!(items, vec![2, 4, 6]);
+    }
+}

@@ -9,8 +9,9 @@
 //! workload spec, fleet, and any injected failures.
 
 use crate::backend::{GpuKind, InstanceConfig, InstanceId, ModelCatalog, ModelId};
-use crate::capacity::AutoscaleConfig;
-use crate::sim::{fleet_a100, fleet_mixed, fleet_of};
+use crate::baselines::Policy;
+use crate::capacity::{AdmissionConfig, AutoscaleConfig};
+use crate::sim::{fleet_a100, fleet_mixed, fleet_of, SimConfig};
 use crate::workload::{ArrivalProcess, RequestClassSpec, ShareGptSampler, SloClass, WorkloadSpec};
 
 /// Named workload scenario.
@@ -74,6 +75,25 @@ pub struct ScenarioRun {
     pub autoscale: Option<AutoscaleConfig>,
     /// Enable submit-time admission control for the run.
     pub admission: bool,
+}
+
+impl ScenarioRun {
+    /// The simulation config this run prescribes: fleet, catalog,
+    /// failure injections, and capacity settings (autoscale bounds +
+    /// admission control). Callers layer run-specific knobs on top
+    /// (seed, horizon, `--full-solve`, `--threads`). Keeping the
+    /// assembly here — and only here — is what guarantees `qlm sim`,
+    /// `qlm compare`, and the golden-equivalence suite all run a
+    /// scenario under the identical configuration.
+    pub fn sim_config(&self, policy: Policy) -> SimConfig {
+        let mut cfg = SimConfig::new(self.fleet.clone(), self.catalog.clone(), policy);
+        cfg.failures = self.failures.clone();
+        cfg.autoscale = self.autoscale;
+        if self.admission {
+            cfg.admission = AdmissionConfig::enabled();
+        }
+        cfg
+    }
 }
 
 impl Scenario {
@@ -457,6 +477,11 @@ mod tests {
             }
             ref other => panic!("expected diurnal arrivals, got {other:?}"),
         }
+        // The prescribed sim config carries the capacity settings.
+        let cfg = run.sim_config(Policy::qlm());
+        assert!(cfg.admission.enabled, "admission must reach the config");
+        assert!(cfg.autoscale.is_some(), "autoscaler must reach the config");
+        assert_eq!(cfg.fleet.len(), run.fleet.len());
         // Mixed SLO classes over multiple models.
         let classes: std::collections::HashSet<_> =
             run.spec.streams.iter().map(|s| s.class).collect();
