@@ -1,0 +1,106 @@
+//! The paper's EDF + swap-penalty oracle (the Fig. 5 "Oracle" line).
+//!
+//! Plain EDF thrashes: deadline order interleaves models, and every
+//! transition pays a swap (Insight #3). The oracle keeps EDF's deadline
+//! order but *charges the swap before placing*: a candidate instance's
+//! predicted finish is its accumulated device time, **plus the model
+//! swap-in cost whenever the group's model differs from the queue's
+//! tail model**, plus the group's predicted device time — so
+//! deadline-adjacent groups of the same model gravitate to the same
+//! instance and swap chains collapse, without the full affinity-cluster
+//! machinery of QLM's global scheduler. Swap costs come from the
+//! instance views' per-model swap-in times (profiled through the
+//! engine's `ThetaCache` → perf pipeline — each model's *current
+//! storage tier* prices its swap, exactly what the LSO actuator will
+//! pay); device time comes from the scheduling core's pricing layer
+//! ([`crate::coordinator::sched::pricing::device_time`]).
+
+use std::collections::HashMap;
+
+use crate::backend::ModelId;
+use crate::baselines::policy::{
+    pin_executing, sorted_groups, PolicyCtx, PolicyPlan, SchedulingPolicy,
+};
+use crate::coordinator::request_group::GroupId;
+use crate::coordinator::rwt::RwtEstimator;
+use crate::coordinator::sched::pricing::device_time;
+
+pub struct EdfSwapPolicy {
+    estimator: RwtEstimator,
+}
+
+impl EdfSwapPolicy {
+    pub fn new(estimator: RwtEstimator) -> Self {
+        EdfSwapPolicy { estimator }
+    }
+}
+
+impl SchedulingPolicy for EdfSwapPolicy {
+    fn plan(&mut self, ctx: &PolicyCtx<'_>) -> PolicyPlan {
+        // One pass = one pricing epoch, as in the global scheduler.
+        self.estimator.begin_epoch();
+        let mut orders = HashMap::new();
+        let pinned = pin_executing(ctx, &mut orders);
+        let groups = sorted_groups(ctx, |g| g.deadline());
+
+        // Per-instance tail: (accumulated device time, tail model),
+        // seeded from the live model and the pinned executing group —
+        // the same seeding the global scheduler's assignment uses.
+        let mut tails: Vec<(f64, Option<ModelId>)> = ctx
+            .views
+            .iter()
+            .map(|v| (0.0, v.active_model))
+            .collect();
+        for (k, v) in ctx.views.iter().enumerate() {
+            if let Some(gid) = v.executing {
+                if let Some(g) = ctx.groups.get(&gid) {
+                    if let Some(perf) = v.perf_for.get(&g.model) {
+                        tails[k].0 += device_time(&self.estimator, g, perf);
+                        tails[k].1 = Some(g.model);
+                    }
+                }
+            }
+        }
+
+        for g in groups {
+            if pinned.contains(&g.id) {
+                continue;
+            }
+            // EDF chooses *where*, not *whether*: earliest predicted
+            // finish including the swap charge; ties keep the lowest
+            // instance index (strict `<`), so plans are deterministic.
+            let mut best: Option<(usize, f64)> = None;
+            for (k, v) in ctx.views.iter().enumerate() {
+                let Some(perf) = v.perf_for.get(&g.model) else {
+                    continue;
+                };
+                let (t, tail_model) = tails[k];
+                let swap = if tail_model != Some(g.model) {
+                    v.swap_s(g.model)
+                } else {
+                    0.0
+                };
+                let finish = t + swap + device_time(&self.estimator, g, perf);
+                let better = match best {
+                    None => true,
+                    Some((_, bf)) => finish < bf,
+                };
+                if better {
+                    best = Some((k, finish));
+                }
+            }
+            if let Some((k, finish)) = best {
+                orders.get_mut(&ctx.views[k].id).unwrap().push(g.id);
+                tails[k] = (finish, Some(g.model));
+            }
+        }
+        PolicyPlan {
+            orders,
+            unservable: Vec::new(),
+        }
+    }
+
+    fn group_removed(&mut self, gid: GroupId) {
+        self.estimator.forget_group(gid);
+    }
+}

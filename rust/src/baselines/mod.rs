@@ -8,6 +8,12 @@
 //!   pinned to models; no reordering, eviction, or swapping.
 //! * **SJF** — shortest-predicted-output-first (the SSJF /
 //!   length-prediction family): minimizes mean wait, SLO-blind.
+//! * **WFQ** — priority-class weighted fair queuing: per-SLO-class
+//!   weighted deficit over predicted device time (the multi-SLO
+//!   share-allocation family — SLO-aware only through class weights).
+//! * **EDF+swap** — the paper's Fig. 5 oracle: EDF order, but the model
+//!   swap cost is charged before placement so deadline-adjacent
+//!   same-model groups co-locate instead of thrashing.
 //! * **SHEPHERD** — request groups with an ILP-style placement, but built
 //!   on the DNN-serving assumptions the paper critiques: fixed-size
 //!   batches with deterministic (worst-case) execution-time estimates and
@@ -20,22 +26,29 @@
 //! the stateful [`SchedulingPolicy`] implementation the engine drives.
 
 pub mod edf;
+pub mod edf_swap;
 pub mod fcfs;
 pub mod policy;
 pub mod qlm;
 pub mod round_robin;
 pub mod sjf;
+pub mod wfq;
 
 pub use edf::EdfPolicy;
+pub use edf_swap::EdfSwapPolicy;
 pub use fcfs::FcfsPolicy;
 pub use policy::{PolicyCtx, PolicyPlan, SchedulingPolicy};
 pub use qlm::QlmPolicy;
 pub use round_robin::RoundRobinPolicy;
 pub use sjf::SjfPolicy;
+pub use wfq::WfqPolicy;
+
+use std::sync::Arc;
 
 use crate::coordinator::lso::LsoConfig;
 use crate::coordinator::rwt::RwtEstimator;
 use crate::coordinator::scheduler::{GlobalScheduler, SchedulerConfig, SolverKind};
+use crate::util::WorkerPool;
 
 /// Which serving policy a simulation runs.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -47,10 +60,15 @@ pub enum Policy {
     },
     /// Earliest-deadline-first over individual requests.
     Edf,
+    /// EDF ordering that charges the model-swap cost before placement
+    /// (the paper's Fig. 5 oracle).
+    EdfSwap,
     /// Vanilla vLLM: FCFS, static model placement.
     VllmFcfs,
     /// Shortest-predicted-output-first over individual requests.
     Sjf,
+    /// Priority-class weighted fair queuing over predicted device time.
+    Wfq,
     /// SHEPHERD-style: groups + placement, deterministic worst-case
     /// estimates, fixed batches, no eviction.
     Shepherd,
@@ -90,8 +108,10 @@ impl Policy {
                 n
             }
             Policy::Edf => "edf".into(),
+            Policy::EdfSwap => "edf-swap".into(),
             Policy::VllmFcfs => "vllm".into(),
             Policy::Sjf => "sjf".into(),
+            Policy::Wfq => "wfq".into(),
             Policy::Shepherd => "shepherd".into(),
         }
     }
@@ -107,6 +127,15 @@ impl Policy {
                 model_swapping: true, // EDF swaps eagerly — the thrash case
             },
             Policy::Sjf => LsoConfig {
+                ordered_pulling: true,
+                eviction: false,
+                load_balancing: true,
+                model_swapping: true,
+            },
+            // WFQ and the EDF+swap oracle swap (their whole point is
+            // pricing the swap), balance load, and pull in order; no
+            // eviction — they are ordering baselines, not full QLM.
+            Policy::Wfq | Policy::EdfSwap => LsoConfig {
                 ordered_pulling: true,
                 eviction: false,
                 load_balancing: true,
@@ -149,22 +178,28 @@ impl Policy {
 /// Turn a policy name into the stateful [`SchedulingPolicy`] the engine
 /// dispatches through. `sched_cfg` and `estimator` configure the QLM
 /// global scheduler; per-request baselines take what they need from the
-/// estimator (SJF reads its profile table) and drop the rest.
+/// estimator (SJF reads its profile table, WFQ and the EDF+swap oracle
+/// price device time through it) and drop the rest. `pool` is the
+/// engine's persistent worker pool — handed to the global scheduler so
+/// the repricing walk shares the view refresh's parked workers.
 pub fn build_policy(
     policy: Policy,
     sched_cfg: SchedulerConfig,
     estimator: RwtEstimator,
+    pool: Arc<WorkerPool>,
 ) -> Box<dyn SchedulingPolicy> {
     match policy {
         Policy::VllmFcfs => Box::new(FcfsPolicy),
         Policy::Edf => Box::new(EdfPolicy),
+        Policy::EdfSwap => Box::new(EdfSwapPolicy::new(estimator)),
         Policy::Sjf => Box::new(SjfPolicy::new(estimator.profiles.clone())),
+        Policy::Wfq => Box::new(WfqPolicy::new(estimator)),
         // Load-balancing ablation: groups exist but placement is blind.
         Policy::Qlm { lso, .. } if !lso.load_balancing => Box::new(RoundRobinPolicy),
         // QLM proper and SHEPHERD (whose conservatism lives in the
         // estimator profiles and the fixed-batch agent, not the solver).
         _ => Box::new(QlmPolicy::new(
-            GlobalScheduler::new(sched_cfg, estimator),
+            GlobalScheduler::with_pool(sched_cfg, estimator, pool),
             policy.lso().model_swapping,
         )),
     }
@@ -179,8 +214,10 @@ mod tests {
         let names: Vec<String> = [
             Policy::qlm(),
             Policy::Edf,
+            Policy::EdfSwap,
             Policy::VllmFcfs,
             Policy::Sjf,
+            Policy::Wfq,
             Policy::Shepherd,
         ]
         .iter()
@@ -189,6 +226,20 @@ mod tests {
         let mut dedup = names.clone();
         dedup.dedup();
         assert_eq!(names.len(), dedup.len());
+    }
+
+    #[test]
+    fn wfq_and_edf_swap_are_per_request_swap_aware_policies() {
+        for p in [Policy::Wfq, Policy::EdfSwap] {
+            assert!(!p.uses_groups(), "{}", p.name());
+            assert!(!p.conservative_estimator(), "{}", p.name());
+            assert!(!p.fixed_batches(), "{}", p.name());
+            let l = p.lso();
+            assert!(l.model_swapping, "{} must be able to swap", p.name());
+            assert!(!l.eviction, "{} is an ordering baseline", p.name());
+        }
+        assert_eq!(Policy::Wfq.name(), "wfq");
+        assert_eq!(Policy::EdfSwap.name(), "edf-swap");
     }
 
     #[test]

@@ -1,0 +1,124 @@
+//! Priority-class weighted fair queuing (WFQ) baseline.
+//!
+//! The multi-SLO schedulers in the related work (SLOs-Serve, slice-level
+//! load balancing) allocate *device time* across service classes rather
+//! than ordering by deadline; this baseline is that family's simplest
+//! member. Each SLO class carries a weight (interactive ≫ batch-1 >
+//! batch-2) and a **deficit of predicted device time**: within a pass,
+//! the global order repeatedly takes the head of the class whose
+//! (served + next cost) / weight is smallest — so interactive traffic
+//! gets an 8× share of predicted device seconds without starving batch
+//! (pure priority would), and batch classes split the rest 2:1. Device
+//! time comes from the scheduling core's pricing layer
+//! ([`crate::coordinator::sched::pricing::device_time`]): the same mean
+//! service + prefill scalar QLM's `GroupPricing` caches. Placement is
+//! least-predicted-device-time over compatible instances, and the
+//! per-instance order is the WFQ interleave restricted to that
+//! instance.
+//!
+//! SLO-*aware* only through the class weights: unlike QLM it never
+//! looks at deadlines, so a long-queued interactive request can still
+//! miss while the class as a whole gets its share — which is exactly
+//! the ablation the compare table is for.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::baselines::policy::{
+    pin_executing, place_least_loaded, sorted_groups, PolicyCtx, PolicyPlan, SchedulingPolicy,
+};
+use crate::coordinator::request_group::{GroupId, RequestGroup};
+use crate::coordinator::rwt::RwtEstimator;
+use crate::coordinator::sched::pricing::device_time;
+use crate::workload::SloClass;
+
+/// Device-time share per class: interactive 8, batch-1 2, batch-2 1.
+pub const CLASS_WEIGHTS: [f64; 3] = [8.0, 2.0, 1.0];
+
+fn class_index(c: SloClass) -> usize {
+    match c {
+        SloClass::Interactive => 0,
+        SloClass::Batch1 => 1,
+        SloClass::Batch2 => 2,
+    }
+}
+
+pub struct WfqPolicy {
+    estimator: RwtEstimator,
+}
+
+impl WfqPolicy {
+    pub fn new(estimator: RwtEstimator) -> Self {
+        WfqPolicy { estimator }
+    }
+}
+
+impl SchedulingPolicy for WfqPolicy {
+    fn plan(&mut self, ctx: &PolicyCtx<'_>) -> PolicyPlan {
+        // One pass = one pricing epoch, as in the global scheduler.
+        self.estimator.begin_epoch();
+        let mut orders = HashMap::new();
+        let pinned = pin_executing(ctx, &mut orders);
+
+        // Predicted device time per group, priced on the first
+        // compatible view (the interleave needs one placement-free
+        // scalar per group; placement re-ranks instances below).
+        // Groups no view can serve are dropped, matching the
+        // least-loaded placement rule shared by every baseline.
+        let fifo = sorted_groups(ctx, |g| g.earliest_arrival_s);
+        let mut cost: HashMap<GroupId, f64> = HashMap::new();
+        let mut classes: [VecDeque<&RequestGroup>; 3] =
+            [VecDeque::new(), VecDeque::new(), VecDeque::new()];
+        for g in fifo {
+            let Some(perf) = ctx.views.iter().find_map(|v| v.perf_for.get(&g.model)) else {
+                continue;
+            };
+            cost.insert(g.id, device_time(&self.estimator, g, perf));
+            classes[class_index(g.class)].push_back(g);
+        }
+
+        // Weighted-deficit interleave: always take the class whose
+        // normalized finish (served device time + head cost, over its
+        // weight) is smallest; ties go to the tighter class (lower
+        // index). Deterministic: inputs are id-tiebroken FIFO queues.
+        let mut served = [0.0f64; 3];
+        let mut order: Vec<&RequestGroup> = Vec::new();
+        loop {
+            let mut best: Option<(usize, f64)> = None;
+            for (c, q) in classes.iter().enumerate() {
+                if let Some(g) = q.front() {
+                    let key = (served[c] + cost[&g.id]) / CLASS_WEIGHTS[c];
+                    let better = match best {
+                        None => true,
+                        Some((_, bk)) => key < bk,
+                    };
+                    if better {
+                        best = Some((c, key));
+                    }
+                }
+            }
+            let Some((c, _)) = best else { break };
+            let g = classes[c].pop_front().unwrap();
+            served[c] += cost[&g.id];
+            order.push(g);
+        }
+
+        // Least-predicted-device-time placement in interleave order.
+        place_least_loaded(
+            ctx,
+            &order,
+            &pinned,
+            &mut orders,
+            |v, g| v.can_serve(g.model),
+            |g| cost.get(&g.id).copied().unwrap_or(0.0),
+        );
+        PolicyPlan {
+            orders,
+            unservable: Vec::new(),
+        }
+    }
+
+    fn group_removed(&mut self, gid: GroupId) {
+        // Drop the group's memoized device-time prices with it.
+        self.estimator.forget_group(gid);
+    }
+}

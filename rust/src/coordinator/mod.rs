@@ -13,6 +13,7 @@ pub mod global_queue;
 pub mod request_group;
 pub mod virtual_queue;
 pub mod rwt;
+pub mod sched;
 pub mod scheduler;
 pub mod lso;
 pub mod agent;

@@ -1,0 +1,221 @@
+//! Cache layer: the scheduler's memory between passes.
+//!
+//! [`SchedCache`] holds the last plan (per-instance [`CachedQueue`]s)
+//! plus the per-group [`GroupPricing`] table; the delta path patches it
+//! in place and untouched queues advance their penalties through
+//! [`CachedQueue::reanchor`] without a walk. The cache is a *mirror* of
+//! the last pass, never an oracle: a view-set mismatch
+//! ([`SchedCache::matches_views`]), a cold start, or an exactness
+//! demand invalidates it and the next full solve rebuilds it.
+
+use std::collections::HashMap;
+
+use crate::backend::{InstanceId, ModelId};
+use crate::coordinator::request_group::GroupId;
+use crate::coordinator::sched::pricing::{GroupPricing, QTail};
+use crate::coordinator::sched::InstanceView;
+
+#[derive(Debug, Clone)]
+pub(crate) struct CachedQueue {
+    pub(crate) id: InstanceId,
+    pub(crate) order: Vec<GroupId>,
+    pub(crate) tail: QTail,
+    pub(crate) penalty: f64,
+    /// The `now` the penalty was last priced at (full walk), advanced
+    /// by the constant-time re-anchor on untouched delta passes.
+    pub(crate) priced_at: f64,
+    /// Groups violating at the last walk — the penalty's d/dt slope
+    /// (each violating group's penalty grows one second per second).
+    pub(crate) viol_groups: u32,
+    /// Future violation-crossing times of the groups still inside their
+    /// budgets at the last walk, ascending. Recorded by the repricing
+    /// walk; drained by [`Self::reanchor`]'s crossing scan.
+    pub(crate) crossings: Vec<f64>,
+    /// Crossings already consumed by the scan (a cursor, so draining is
+    /// amortized O(1) per pass instead of a front-removal shuffle).
+    pub(crate) crossed: usize,
+    pub(crate) active_model: Option<ModelId>,
+    pub(crate) executing: Option<GroupId>,
+}
+
+impl CachedQueue {
+    /// A fresh cache entry for `v`'s queue, to be filled by the
+    /// repricing walk.
+    pub(crate) fn new(v: &InstanceView, order: Vec<GroupId>, now: f64) -> Self {
+        CachedQueue {
+            id: v.id,
+            order,
+            tail: QTail::default(),
+            penalty: 0.0,
+            priced_at: now,
+            viol_groups: 0,
+            crossings: Vec::new(),
+            crossed: 0,
+            active_model: v.active_model,
+            executing: v.executing,
+        }
+    }
+
+    /// Advance this queue's penalty from `priced_at` to `now` in O(1)
+    /// amortized, without re-walking the order:
+    ///
+    /// * every group violating at the last anchor accrues one second of
+    ///   penalty per second, so the bulk term is `dt × viol_groups`;
+    /// * the **crossing scan**: groups whose recorded crossing time
+    ///   expired inside `(priced_at, now]` start accruing from their
+    ///   own crossing — each contributes `now − t_c` this pass and
+    ///   joins the slope for the next one. Before this scan, freshly
+    ///   violating groups on clean queues went unpriced until the queue
+    ///   was next touched (the PR-4 second-order amortization gap).
+    ///
+    /// Exactness: with the queue order and prices unchanged (the only
+    /// regime in which a queue stays untouched), each group's penalty
+    /// is `max(0, now − t_c)` — the slope term plus the crossing scan
+    /// reproduce the full walk's value in real arithmetic (floats may
+    /// differ in final ulps from a fresh walk, as with the original
+    /// slope-only re-anchor).
+    pub(crate) fn reanchor(&mut self, now: f64) {
+        let dt = now - self.priced_at;
+        if dt <= 0.0 {
+            return;
+        }
+        self.penalty += dt * self.viol_groups as f64;
+        while self.crossed < self.crossings.len() && self.crossings[self.crossed] <= now {
+            let t_c = self.crossings[self.crossed];
+            self.crossed += 1;
+            self.penalty += now - t_c;
+            self.viol_groups += 1;
+        }
+        self.priced_at = now;
+    }
+}
+
+/// The scheduler's memory between passes: last plan + pricing.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct SchedCache {
+    pub(crate) queues: Vec<CachedQueue>,
+    pub(crate) pricing: HashMap<GroupId, GroupPricing>,
+    /// (group, member count) pairs currently unservable.
+    pub(crate) unservable: Vec<(GroupId, u32)>,
+}
+
+impl SchedCache {
+    /// Is this cache a mirror of `instances`? A mismatch (failure,
+    /// autoscaler join/drain) means every cached order may reference a
+    /// dead queue — the delta path must bail to a full solve.
+    pub(crate) fn matches_views(&self, instances: &[InstanceView]) -> bool {
+        self.queues.len() == instances.len()
+            && self.queues.iter().zip(instances).all(|(c, v)| c.id == v.id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::InstanceId;
+
+    fn queue_with(penalty: f64, viol: u32, crossings: Vec<f64>) -> CachedQueue {
+        CachedQueue {
+            id: InstanceId(0),
+            order: Vec::new(),
+            tail: QTail::default(),
+            penalty,
+            priced_at: 0.0,
+            viol_groups: viol,
+            crossings,
+            crossed: 0,
+            active_model: None,
+            executing: None,
+        }
+    }
+
+    #[test]
+    fn reanchor_advances_slope_only_without_crossings() {
+        let mut q = queue_with(7.0, 3, vec![]);
+        q.reanchor(10.0);
+        assert!((q.penalty - 37.0).abs() < 1e-12, "7 + 3×10 = {}", q.penalty);
+        assert_eq!(q.viol_groups, 3);
+        assert_eq!(q.priced_at, 10.0);
+    }
+
+    #[test]
+    fn crossing_inside_the_window_accrues_from_its_own_time() {
+        // Two clean groups cross at t=4 and t=25; a re-anchor to t=10
+        // picks up only the first: penalty grows by dt×slope (2×10)
+        // plus the crossed group's own accrual (10 − 4 = 6), and the
+        // slope gains the crossed group for the *next* pass.
+        let mut q = queue_with(5.0, 2, vec![4.0, 25.0]);
+        q.reanchor(10.0);
+        assert!(
+            (q.penalty - (5.0 + 20.0 + 6.0)).abs() < 1e-12,
+            "got {}",
+            q.penalty
+        );
+        assert_eq!(q.viol_groups, 3, "crossed group joins the slope");
+        assert_eq!(q.crossed, 1, "future crossing stays queued");
+        // Second re-anchor: the new slope (3) applies over +5 s and the
+        // remaining crossing is still in the future — exactly the +dt
+        // arithmetic a chain of delta passes performs.
+        q.reanchor(15.0);
+        assert!((q.penalty - (31.0 + 15.0)).abs() < 1e-12, "got {}", q.penalty);
+        assert_eq!(q.viol_groups, 3);
+        // Third pass crosses the last group at t=25 on the way to t=30.
+        q.reanchor(30.0);
+        assert!(
+            (q.penalty - (46.0 + 45.0 + 5.0)).abs() < 1e-12,
+            "got {}",
+            q.penalty
+        );
+        assert_eq!(q.viol_groups, 4);
+        assert_eq!(q.crossed, 2);
+    }
+
+    #[test]
+    fn reanchor_matches_exact_per_group_accrual() {
+        // Exactness against first principles: penalty(t) =
+        // Σ_g max(0, t − t_c(g)). Start with every group clean.
+        let crossings = vec![3.0, 8.0, 8.0, 21.0];
+        let exact = |t: f64| -> f64 {
+            crossings.iter().map(|c| (t - c).max(0.0)).sum()
+        };
+        let mut q = queue_with(0.0, 0, crossings.clone());
+        for t in [1.0, 5.0, 8.0, 9.0, 20.0, 21.5, 40.0] {
+            q.reanchor(t);
+            assert!(
+                (q.penalty - exact(t)).abs() < 1e-9,
+                "t={t}: got {} want {}",
+                q.penalty,
+                exact(t)
+            );
+        }
+        assert_eq!(q.viol_groups, 4);
+    }
+
+    #[test]
+    fn reanchor_is_a_noop_for_non_positive_dt() {
+        let mut q = queue_with(5.0, 2, vec![1.0]);
+        q.priced_at = 10.0;
+        q.reanchor(10.0);
+        assert_eq!(q.penalty, 5.0);
+        q.reanchor(9.0);
+        assert_eq!(q.penalty, 5.0, "time never runs backwards mid-run");
+    }
+
+    #[test]
+    fn matches_views_detects_set_changes() {
+        use crate::coordinator::sched::testutil::view;
+        let cache = SchedCache {
+            queues: vec![
+                CachedQueue::new(&view(0, &[0], None), Vec::new(), 0.0),
+                CachedQueue::new(&view(1, &[0], None), Vec::new(), 0.0),
+            ],
+            ..Default::default()
+        };
+        let same = vec![view(0, &[0], None), view(1, &[0], None)];
+        assert!(cache.matches_views(&same));
+        let shrunk = vec![view(0, &[0], None)];
+        assert!(!cache.matches_views(&shrunk));
+        let renamed = vec![view(0, &[0], None), view(2, &[0], None)];
+        assert!(!cache.matches_views(&renamed));
+    }
+}

@@ -1,0 +1,228 @@
+//! The layered scheduling core behind [`crate::coordinator::scheduler`]
+//! (the thin façade every call site imports through).
+//!
+//! The paper's global scheduler is itself layered — RWT pricing feeds an
+//! affinity ordering which feeds the LSO plan — and the module split
+//! mirrors that, so a new policy or amortization edits one layer instead
+//! of a fused hot core:
+//!
+//! ```text
+//!             ┌──────────────────────────────────────────────┐
+//!             │ solve.rs — orchestration                     │
+//!             │  full solve · delta patch · MILP refinement  │
+//!             │  fallback triggers (cold cache, view-set     │
+//!             │  change, ExactMilp, dirtiness threshold)     │
+//!             └───────┬───────────────┬──────────────┬───────┘
+//!                     │ prices via    │ orders via   │ remembers via
+//!             ┌───────▼──────┐ ┌──────▼───────┐ ┌────▼─────────────┐
+//!             │ pricing.rs   │ │ plan.rs      │ │ cache.rs         │
+//!             │ GroupPricing │ │ Assignment   │ │ SchedCache       │
+//!             │ price_group  │ │ AffinityKey  │ │ CachedQueue      │
+//!             │ append_score │ │ affinity     │ │ epoch re-anchor  │
+//!             │ reprice walk │ │ ordering,    │ │ + crossing scan  │
+//!             │ + violation  │ │ order        │ │ view-set         │
+//!             │ slopes       │ │ patches      │ │ invalidation     │
+//!             └──────────────┘ └──────────────┘ └──────────────────┘
+//! ```
+//!
+//! Invariants the layers hold jointly (the golden suite enforces them
+//! end to end):
+//!
+//! * **One price, one comparator.** `pricing::price_group` /
+//!   `pricing::append_score` are the only scoring paths and
+//!   `plan::affinity_cmp` the only ordering comparator, shared by the
+//!   full solve and the delta patch — the two paths must not drift.
+//! * **The cache is a mirror, never an oracle.** `cache::SchedCache`
+//!   holds exactly what the last pass computed; any doubt (view-set
+//!   change, cold start, exactness) invalidates it and the full solve
+//!   rebuilds it from scratch.
+//! * **Threading is invisible.** The repricing walk fans out over the
+//!   shared [`crate::util::WorkerPool`] in index-ordered chunks with a
+//!   sequential penalty fold, so any lane count is bit-identical to
+//!   serial.
+
+pub mod cache;
+pub mod plan;
+pub mod pricing;
+pub mod solve;
+
+use std::collections::HashMap;
+
+use crate::backend::{InstanceId, ModelId, PerfModel};
+use crate::coordinator::request_group::{GroupId, RequestGroup};
+
+/// Scheduler's view of one serving instance.
+#[derive(Debug, Clone)]
+pub struct InstanceView {
+    pub id: InstanceId,
+    pub active_model: Option<ModelId>,
+    /// Profiled perf per servable model (absent ⇒ model can't run here,
+    /// e.g. Llama-70B on an A10 — hardware heterogeneity, §8.3).
+    pub perf_for: HashMap<ModelId, PerfModel>,
+    /// Swap-in latency per model from its current tier.
+    pub swap_time: HashMap<ModelId, f64>,
+    /// Group currently executing — pinned (no preemptive migration, §5).
+    pub executing: Option<GroupId>,
+}
+
+impl InstanceView {
+    pub fn can_serve(&self, m: ModelId) -> bool {
+        self.perf_for.contains_key(&m)
+    }
+
+    /// Swap-in cost charged when the queue transitions onto model `m`.
+    pub fn swap_s(&self, m: ModelId) -> f64 {
+        self.swap_time.get(&m).copied().unwrap_or(0.0)
+    }
+}
+
+/// Which solver the global scheduler uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    Greedy,
+    /// Exact per-queue MILP refinement after greedy assignment.
+    ExactMilp,
+    /// Greedy, with MILP refinement only for queues small enough.
+    Auto,
+}
+
+/// Hard safety cap on the exact-MILP queue size. The dense tableau is
+/// O(n²) variables with O(n) rows of that width, so honoring
+/// `ExactMilp` *unbounded* would allocate gigabytes at Fig. 20 queue
+/// sizes; beyond this cap the heuristic ordering stands in even under
+/// `ExactMilp`. 64 groups ⇒ ~4k binaries, ~10 MB of tableau — the
+/// practical ceiling of the branch-and-bound anyway.
+pub const MILP_HARD_CAP: usize = 64;
+
+/// Penalty charged per member of a group no instance can serve
+/// (misconfigured fleet). Large but *finite*: the old behavior parked
+/// such groups at a queue head, where `queue_penalty` returned
+/// `f64::INFINITY` and poisoned `total_penalty_s` for every comparison.
+pub const UNSERVABLE_PENALTY_S: f64 = 1e6;
+
+/// Scheduler configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerConfig {
+    pub solver: SolverKind,
+    /// Max groups per queue for the `Auto` MILP refinement path
+    /// (`ExactMilp` refines regardless, up to [`MILP_HARD_CAP`]).
+    pub milp_max_groups: usize,
+    pub node_limit: usize,
+    /// Incremental passes fall back to a full solve when
+    /// (dirty + removed) exceeds this fraction of the live group table —
+    /// past that point re-walking everything is cheaper than patching.
+    ///
+    /// Default tuned with `cargo bench -- dirty_frac` against the
+    /// `scale`-scenario shape (1562 groups, 10 instances): the delta
+    /// pass skips the global deadline sort and the re-insertion of
+    /// every *clean* group even when most queues end up touched, so it
+    /// stays ahead of the full solve well past the old 0.25 threshold;
+    /// the crossover sits near half the table dirty.
+    pub incremental_dirty_frac: f64,
+    /// Master switch for the delta path. Off ⇒ `try_schedule_delta`
+    /// always bails and full solves never store a plan cache (they
+    /// still price plans with the same shared walk).
+    pub incremental: bool,
+    /// Worker lanes for the per-queue repricing walk of a full solve
+    /// (each queue's walk is independent; results are merged in index
+    /// order, so the plan and the summed penalty are bit-identical to
+    /// the serial pass). 1 = serial; wired from `SimConfig::threads`.
+    /// The lanes come from a persistent [`crate::util::WorkerPool`] —
+    /// shared with the engine's view refresh when the scheduler is
+    /// built through the simulator.
+    pub threads: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            solver: SolverKind::Auto,
+            milp_max_groups: 6,
+            node_limit: 20_000,
+            incremental_dirty_frac: 0.5,
+            incremental: true,
+            threads: 1,
+        }
+    }
+}
+
+/// Solve statistics for overhead studies (Fig. 20).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SolveStats {
+    pub groups: usize,
+    pub milp_nodes: usize,
+    pub used_milp: bool,
+    /// This pass went down the cached delta path.
+    pub incremental: bool,
+    /// Dirty groups re-inserted by the delta path.
+    pub dirty: usize,
+    /// Instances whose queue changed this pass.
+    pub touched_instances: usize,
+}
+
+/// One scheduler pass's worth of group-table changes, produced by the
+/// engine's dirty tracking and consumed by the incremental path.
+#[derive(Debug, Clone, Default)]
+pub struct SchedDelta<'a> {
+    /// Groups whose membership, deadline anchor, or member states
+    /// changed since the last pass — re-priced and re-inserted.
+    pub dirty: Vec<&'a RequestGroup>,
+    /// Groups that drained or were dissolved since the last pass.
+    pub removed: Vec<GroupId>,
+    /// Live group count (for the full-solve dirtiness threshold).
+    pub total_groups: usize,
+}
+
+/// Shared fixtures for the layer tests (estimator / views / groups built
+/// the same way across `plan`, `cache`, and `solve` suites).
+#[cfg(test)]
+pub(crate) mod testutil {
+    use std::collections::{HashMap, VecDeque};
+
+    use crate::backend::{GpuKind, InstanceId, ModelCatalog, ModelId, PerfModel};
+    use crate::coordinator::request_group::{GroupId, RequestGroup};
+    use crate::coordinator::rwt::{ProfileTable, RwtEstimator};
+    use crate::workload::{SloClass, Trace, WorkloadSpec};
+
+    use super::InstanceView;
+
+    pub fn estimator() -> RwtEstimator {
+        let spec = WorkloadSpec::w_a(ModelId(0), 100.0, 2000);
+        let trace = Trace::generate(&spec, 11);
+        RwtEstimator::new(ProfileTable::from_trace(&trace))
+    }
+
+    pub fn view(id: u32, models: &[u32], active: Option<u32>) -> InstanceView {
+        let catalog = ModelCatalog::paper_multi_model();
+        let mut perf_for = HashMap::new();
+        let mut swap_time = HashMap::new();
+        for &m in models {
+            let p = PerfModel::profile(catalog.get(ModelId(m)), GpuKind::A100, 161.0);
+            perf_for.insert(ModelId(m), p);
+            swap_time.insert(ModelId(m), p.swap_cpu_gpu_s);
+        }
+        InstanceView {
+            id: InstanceId(id),
+            active_model: active.map(ModelId),
+            perf_for,
+            swap_time,
+            executing: None,
+        }
+    }
+
+    pub fn grp(id: u64, model: u32, n: usize, arrival: f64, slo: f64) -> RequestGroup {
+        RequestGroup {
+            id: GroupId(id),
+            model: ModelId(model),
+            class: if slo <= 20.0 {
+                SloClass::Interactive
+            } else {
+                SloClass::Batch1
+            },
+            slo_s: slo,
+            earliest_arrival_s: arrival,
+            members: VecDeque::from_iter(0..n as u64),
+            mega: false,
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Plan layer: queue orderings and the assignment the scheduler emits.
+//!
+//! [`Assignment`] is the scheduler's output contract (order *patches* —
+//! instances absent from `orders` keep their current queue). The
+//! affinity-EDF comparator lives here once ([`affinity_cmp`] over
+//! [`AffinityKey`]) and drives both ordering paths: [`affinity_order`]
+//! over live groups (full solve) and [`reorder_cached`] over the
+//! pricing table (delta path) — one comparator is what guarantees the
+//! two paths produce the same plan for the same state. Unservable
+//! groups retire through [`finish_unservable`] instead of being parked
+//! on an arbitrary queue.
+
+use std::collections::HashMap;
+
+use crate::backend::{InstanceId, ModelId};
+use crate::coordinator::request_group::{GroupId, RequestGroup};
+use crate::coordinator::sched::cache::CachedQueue;
+use crate::coordinator::sched::pricing::GroupPricing;
+use crate::coordinator::sched::{SolveStats, UNSERVABLE_PENALTY_S};
+
+/// Scheduler output: per-instance virtual-queue orderings.
+///
+/// A full solve emits an order for every instance; an incremental pass
+/// emits orders only for instances whose queue actually changed, so
+/// callers apply `orders` as a patch (clean queues keep their position).
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    pub orders: HashMap<InstanceId, Vec<GroupId>>,
+    /// True iff every group's estimated completion meets its SLO.
+    pub feasible: bool,
+    /// Σ max(0, estimated completion − budget) across groups, seconds,
+    /// plus [`UNSERVABLE_PENALTY_S`] per member of each unservable group.
+    pub total_penalty_s: f64,
+    /// Groups no instance can serve, reported separately instead of
+    /// being parked on an arbitrary queue.
+    pub unservable: Vec<GroupId>,
+    pub stats: SolveStats,
+}
+
+/// The affinity-EDF sort key: (cluster deadline, non-active-model flag,
+/// model id, deadline, group id).
+pub(crate) type AffinityKey = (f64, bool, ModelId, f64, GroupId);
+
+/// The one comparator behind both ordering paths — [`affinity_order`]
+/// (full solve, over groups) and [`reorder_cached`] (delta path, over
+/// the pricing table).
+pub(crate) fn affinity_cmp(a: &AffinityKey, b: &AffinityKey) -> std::cmp::Ordering {
+    a.0.partial_cmp(&b.0)
+        .unwrap()
+        .then(a.1.cmp(&b.1))
+        .then(a.2.cmp(&b.2))
+        .then(a.3.partial_cmp(&b.3).unwrap())
+        .then(a.4.cmp(&b.4))
+}
+
+/// Model-affinity EDF ordering of one queue's groups: cluster by
+/// model, order clusters by earliest deadline, EDF within cluster —
+/// the Fig. 5 "Oracle" structure that avoids swap thrashing.
+pub fn affinity_order(groups: &mut [&RequestGroup], active: Option<ModelId>) {
+    // Cluster key: model; cluster deadline: min member deadline.
+    let mut cluster_deadline: HashMap<ModelId, f64> = HashMap::new();
+    for g in groups.iter() {
+        let e = cluster_deadline.entry(g.model).or_insert(f64::INFINITY);
+        *e = e.min(g.deadline());
+    }
+    // Active-model cluster first on deadline ties (swap-free). The
+    // active-model flag must compare *before* the raw model-id
+    // tie-break: with the old order, equal models made the flags
+    // trivially equal and the preference was unreachable.
+    let key = |g: &RequestGroup| -> AffinityKey {
+        (
+            cluster_deadline[&g.model],
+            Some(g.model) != active,
+            g.model,
+            g.deadline(),
+            g.id,
+        )
+    };
+    groups.sort_by(|a, b| affinity_cmp(&key(a), &key(b)));
+}
+
+/// Affinity-EDF over cached pricing — driven by the pricing table so
+/// the delta path never touches the group table. The pinned executing
+/// head, if present, is left in place.
+pub(crate) fn reorder_cached(cq: &mut CachedQueue, pricing: &HashMap<GroupId, GroupPricing>) {
+    let start =
+        usize::from(cq.executing.is_some() && cq.order.first() == cq.executing.as_ref());
+    let active = cq.active_model;
+    let rest = &mut cq.order[start..];
+    let mut cluster_deadline: HashMap<ModelId, f64> = HashMap::new();
+    for gid in rest.iter() {
+        if let Some(p) = pricing.get(gid) {
+            let e = cluster_deadline.entry(p.model).or_insert(f64::INFINITY);
+            *e = e.min(p.deadline);
+        }
+    }
+    let key = |gid: &GroupId| -> AffinityKey {
+        match pricing.get(gid) {
+            Some(p) => (
+                cluster_deadline
+                    .get(&p.model)
+                    .copied()
+                    .unwrap_or(f64::INFINITY),
+                Some(p.model) != active,
+                p.model,
+                p.deadline,
+                *gid,
+            ),
+            // Unpriced ids (shouldn't happen) sink to the back, stably.
+            None => (f64::INFINITY, true, ModelId(u32::MAX), f64::INFINITY, *gid),
+        }
+    };
+    rest.sort_by(|a, b| affinity_cmp(&key(a), &key(b)));
+}
+
+/// The better-candidate predicate shared by both greedy assignment
+/// loops: lower penalty, then earlier completion, then lighter load
+/// (1e-9 epsilons throughout). `best` carries (pen, completion, load).
+pub(crate) fn candidate_improves(
+    best: Option<(f64, f64, f64)>,
+    pen: f64,
+    completion: f64,
+    load: f64,
+) -> bool {
+    match best {
+        None => true,
+        Some((bp, bc, bl)) => {
+            pen < bp - 1e-9
+                || ((pen - bp).abs() < 1e-9
+                    && (completion < bc - 1e-9
+                        || ((completion - bc).abs() < 1e-9 && load < bl)))
+        }
+    }
+}
+
+/// Split a queue into (pinned executing head, reorderable rest).
+pub(crate) fn split_pinned<'a>(
+    all: &[&'a RequestGroup],
+    executing: Option<GroupId>,
+) -> (Vec<&'a RequestGroup>, Vec<&'a RequestGroup>) {
+    let mut head = Vec::new();
+    let mut rest = Vec::new();
+    for &g in all {
+        if Some(g.id) == executing {
+            head.push(g);
+        } else {
+            rest.push(g);
+        }
+    }
+    (head, rest)
+}
+
+/// Retire the pass's unservable set into the assignment contract: a
+/// sorted id list for the engine's shed path plus the finite penalty
+/// surcharge ([`UNSERVABLE_PENALTY_S`] per member) that keeps the
+/// signal comparable instead of infinite.
+pub(crate) fn finish_unservable(unservable: &[(GroupId, u32)]) -> (Vec<GroupId>, f64) {
+    let penalty = unservable
+        .iter()
+        .map(|&(_, n)| UNSERVABLE_PENALTY_S * n as f64)
+        .sum::<f64>();
+    let mut ids: Vec<GroupId> = unservable.iter().map(|&(g, _)| g).collect();
+    ids.sort_unstable();
+    (ids, penalty)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sched::testutil::grp;
+
+    #[test]
+    fn affinity_order_groups_same_model_together() {
+        let g1 = grp(1, 0, 8, 0.0, 60.0);
+        let g2 = grp(2, 1, 8, 1.0, 61.0);
+        let g3 = grp(3, 0, 8, 2.0, 62.0);
+        let g4 = grp(4, 1, 8, 3.0, 63.0);
+        let mut v = vec![&g4, &g3, &g2, &g1];
+        affinity_order(&mut v, None);
+        let models: Vec<u32> = v.iter().map(|g| g.model.0).collect();
+        // Same-model groups contiguous ⇒ exactly one transition.
+        let transitions = models.windows(2).filter(|w| w[0] != w[1]).count();
+        assert_eq!(transitions, 1, "order {models:?}");
+    }
+
+    #[test]
+    fn affinity_order_active_model_cluster_leads_on_deadline_tie() {
+        // Regression: the active-model preference used to sit *after*
+        // the raw model-id tie-break, making it unreachable — deadline-
+        // tied clusters ordered by model id and swapped needlessly.
+        let g1 = grp(1, 0, 8, 0.0, 60.0);
+        let g2 = grp(2, 1, 8, 0.0, 60.0); // same cluster deadline as model 0
+        let g3 = grp(3, 0, 8, 0.0, 60.0);
+        let g4 = grp(4, 1, 8, 0.0, 60.0);
+        let mut v = vec![&g1, &g2, &g3, &g4];
+        affinity_order(&mut v, Some(ModelId(1)));
+        let models: Vec<u32> = v.iter().map(|g| g.model.0).collect();
+        assert_eq!(
+            models,
+            vec![1, 1, 0, 0],
+            "active model-1 cluster must lead on a deadline tie"
+        );
+    }
+
+    #[test]
+    fn finish_unservable_sorts_and_prices() {
+        let (ids, pen) = finish_unservable(&[(GroupId(9), 2), (GroupId(3), 1)]);
+        assert_eq!(ids, vec![GroupId(3), GroupId(9)]);
+        assert!((pen - 3.0 * UNSERVABLE_PENALTY_S).abs() < 1e-6);
+        let (ids, pen) = finish_unservable(&[]);
+        assert!(ids.is_empty());
+        assert_eq!(pen, 0.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Pricing layer: everything that turns a request group into seconds.
+//!
+//! [`GroupPricing`] is the cached per-group price; [`price_group`] is
+//! its single constructor (full-solve cache rebuild and both delta-path
+//! insertion sites must price identically or the paths drift);
+//! [`append_score`] scores a candidate append behind a queue tail (the
+//! one implementation shared by the full-solve assignment loop and the
+//! delta insertion loop); and [`reprice_queue`] is the front-to-back
+//! walk that recomputes a cached queue's tail state, penalty, and the
+//! violation-slope data ([`crate::coordinator::sched::cache`] re-anchors
+//! from it in constant time).
+
+use std::collections::HashMap;
+
+use crate::backend::{InstanceId, ModelId, PerfModel};
+use crate::coordinator::request_group::{GroupId, RequestGroup};
+use crate::coordinator::rwt::RwtEstimator;
+use crate::coordinator::sched::cache::CachedQueue;
+use crate::coordinator::sched::InstanceView;
+
+/// Cached per-group pricing from the pass that last (re)assigned it —
+/// everything the delta path needs to reorder and re-price a queue
+/// without touching the group table.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct GroupPricing {
+    pub(crate) model: ModelId,
+    pub(crate) deadline: f64,
+    /// Mean service time including prefill, on the assigned instance.
+    pub(crate) svc_s: f64,
+    pub(crate) len: u32,
+    /// Instance whose cached order holds this group — lets a removal
+    /// touch only the owning queue instead of scanning every order, so
+    /// a delta pass stays O(dirty), independent of total queue size.
+    pub(crate) owner: InstanceId,
+}
+
+/// Aggregate tail state of one cached queue (what a greedy append sees).
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct QTail {
+    pub(crate) wait: f64,
+    pub(crate) tail_model: Option<ModelId>,
+    pub(crate) load: f64,
+}
+
+/// Predicted device time to drain `g` on `perf`: mean service including
+/// prefill. The scalar behind [`GroupPricing::svc_s`], also consumed
+/// directly by the device-time-aware baselines (WFQ's weighted deficit,
+/// the EDF+swap-penalty oracle).
+pub(crate) fn device_time(est: &RwtEstimator, g: &RequestGroup, perf: &PerfModel) -> f64 {
+    let (svc, _) = est.group_service(g, perf);
+    svc + perf.prefill_s
+}
+
+/// Price one group on `perf` for the cache: mean service including
+/// prefill, deadline, size, and the queue that will hold it. The single
+/// constructor for [`GroupPricing`].
+pub(crate) fn price_group(
+    est: &RwtEstimator,
+    g: &RequestGroup,
+    perf: &PerfModel,
+    owner: InstanceId,
+) -> GroupPricing {
+    GroupPricing {
+        model: g.model,
+        deadline: g.deadline(),
+        svc_s: device_time(est, g, perf),
+        len: g.len() as u32,
+        owner,
+    }
+}
+
+/// Score appending `g` behind tail `t` of `v`'s queue: returns
+/// (penalty, completion). Shared by the full-solve assignment loop and
+/// the delta insertion loop — the two must score identically or their
+/// plans drift.
+pub(crate) fn append_score(
+    est: &RwtEstimator,
+    t: &QTail,
+    g: &RequestGroup,
+    v: &InstanceView,
+    perf: &PerfModel,
+    now: f64,
+) -> (f64, f64) {
+    let swap = if t.tail_model != Some(g.model) {
+        v.swap_s(g.model)
+    } else {
+        0.0
+    };
+    let (svc, _) = est.group_service(g, perf);
+    let completion = t.wait + swap + perf.prefill_s + svc;
+    let pen = (completion - (g.deadline() - now)).max(0.0);
+    (pen, completion)
+}
+
+/// Walk a cached order front-to-back, recomputing the queue's tail
+/// state (what a greedy append sees) and its penalty from the pricing
+/// table alone. Also records the violation-slope data the constant-time
+/// re-anchor runs on:
+///
+/// * `viol_groups` — groups violating *now* (each accrues one second of
+///   penalty per second, so the count is the penalty's d/dt slope);
+/// * `crossings` — for every group still inside its budget, the future
+///   time its slack runs out and it starts accruing too. A delta pass
+///   that leaves this queue untouched drains expired crossings instead
+///   of re-walking ([`CachedQueue::reanchor`]) — the "crossing scan"
+///   that closes the second-order amortization gap where freshly
+///   violating groups on clean queues went unpriced until the queue was
+///   next touched.
+pub(crate) fn reprice_queue(
+    cq: &mut CachedQueue,
+    pricing: &HashMap<GroupId, GroupPricing>,
+    v: &InstanceView,
+    now: f64,
+) {
+    let mut tail = QTail {
+        wait: 0.0,
+        tail_model: v.active_model,
+        load: 0.0,
+    };
+    let mut penalty = 0.0;
+    let mut viol = 0u32;
+    cq.crossings.clear();
+    cq.crossed = 0;
+    for gid in &cq.order {
+        let Some(p) = pricing.get(gid) else { continue };
+        if tail.tail_model != Some(p.model) {
+            tail.wait += v.swap_s(p.model);
+        }
+        tail.tail_model = Some(p.model);
+        // Signed lateness: positive ⇒ violating now; non-positive ⇒
+        // the group crosses into violation at `now - raw` (assuming
+        // its queue position and price hold, which is exactly the
+        // regime the re-anchor covers — anything else re-walks).
+        let raw = tail.wait + p.svc_s - (p.deadline - now);
+        if raw > 0.0 {
+            viol += 1;
+            penalty += raw;
+        } else {
+            cq.crossings.push(now - raw);
+        }
+        tail.wait += p.svc_s;
+        tail.load += p.len as f64;
+    }
+    // Walk order is queue order; the re-anchor drains crossings in
+    // *time* order, so sort ascending (ties are equivalent: each
+    // crossing contributes `now - t_c` independent of drain order).
+    cq.crossings.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    cq.tail = tail;
+    cq.penalty = penalty;
+    cq.priced_at = now;
+    cq.viol_groups = viol;
+}

@@ -1,0 +1,1191 @@
+//! Solve layer: orchestration of the full solve, the incremental delta
+//! patch, and the exact-MILP refinement — plus every fallback trigger
+//! between them (cold cache, view-set change, `ExactMilp`, dirtiness
+//! above `SchedulerConfig::incremental_dirty_frac`).
+//!
+//! This file owns *when* things happen; *how* a group is priced lives
+//! in [`super::pricing`], *how* a queue is ordered in [`super::plan`],
+//! and *what* survives between passes in [`super::cache`].
+
+use std::collections::{HashMap, HashSet};
+
+use crate::backend::InstanceId;
+use crate::coordinator::request_group::{GroupId, RequestGroup};
+use crate::coordinator::sched::cache::{CachedQueue, SchedCache};
+use crate::coordinator::sched::plan::Assignment;
+use crate::coordinator::sched::plan::{
+    affinity_order, candidate_improves, finish_unservable, reorder_cached, split_pinned,
+};
+use crate::coordinator::sched::pricing::{self, QTail};
+use crate::coordinator::sched::{InstanceView, MILP_HARD_CAP, SchedDelta, SolveStats, SolverKind};
+use crate::coordinator::scheduler::GlobalScheduler;
+use crate::solver::{Cmp, Lp, Milp, MilpResult};
+
+impl GlobalScheduler {
+    /// Penalty of an ordering on one instance: Σ max(0, completion − budget).
+    pub fn queue_penalty(&self, order: &[&RequestGroup], view: &InstanceView, now: f64) -> f64 {
+        if order.is_empty() {
+            return 0.0;
+        }
+        // Perf is per-model; use the head group's model for Θ (groups on
+        // one queue in one walk segment share the instance's device).
+        let Some(perf) = view.perf_for.get(&order[0].model) else {
+            return f64::INFINITY;
+        };
+        let est = self.estimator.estimate_queue(
+            order,
+            perf,
+            view.active_model,
+            |m| view.swap_s(m),
+        );
+        order
+            .iter()
+            .zip(&est)
+            .map(|(g, e)| (e.completion_mean_s - (g.deadline() - now)).max(0.0))
+            .sum()
+    }
+
+    /// Main entry: assign + order all schedulable groups.
+    ///
+    /// Takes group *references* so callers holding groups in a table
+    /// (the simulator's live group map) schedule without deep-cloning
+    /// every member list per invocation (§Perf).
+    pub fn schedule(
+        &self,
+        groups: &[&RequestGroup],
+        instances: &[InstanceView],
+        now: f64,
+    ) -> Assignment {
+        // One scheduler invocation = one memo epoch for service pricing.
+        self.estimator.begin_epoch();
+        let by_id: HashMap<GroupId, &RequestGroup> =
+            groups.iter().map(|g| (g.id, *g)).collect();
+        let mut orders: HashMap<InstanceId, Vec<GroupId>> = HashMap::new();
+        let mut unservable: Vec<(GroupId, u32)> = Vec::new();
+        let mut stats = SolveStats {
+            groups: groups.len(),
+            ..Default::default()
+        };
+
+        // 1. Pin executing groups to their instances' heads.
+        let mut pinned: HashMap<GroupId, InstanceId> = HashMap::new();
+        for v in instances {
+            let order = orders.entry(v.id).or_default();
+            if let Some(g) = v.executing {
+                if by_id.contains_key(&g) {
+                    order.push(g);
+                    pinned.insert(g, v.id);
+                }
+            }
+        }
+
+        // 2. Deadline-ordered greedy assignment of the rest.
+        let mut todo: Vec<&RequestGroup> = groups
+            .iter()
+            .copied()
+            .filter(|g| !pinned.contains_key(&g.id))
+            .collect();
+        todo.sort_by(|a, b| {
+            a.deadline()
+                .partial_cmp(&b.deadline())
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+
+        // §Perf: incremental O(G·V) assignment — each candidate append is
+        // priced from cached per-queue state (accumulated wait, tail
+        // model) instead of re-walking the whole queue (which made the
+        // assignment quadratic in groups; see EXPERIMENTS.md §Perf).
+        let mut qstate: HashMap<InstanceId, QTail> = instances
+            .iter()
+            .map(|v| {
+                let mut st = QTail {
+                    wait: 0.0,
+                    tail_model: v.active_model,
+                    load: 0.0,
+                };
+                // Seed with the pinned executing group, if any.
+                if let Some(gid) = v.executing {
+                    if let Some(g) = by_id.get(&gid) {
+                        if let Some(perf) = v.perf_for.get(&g.model) {
+                            let (svc, _) = self.estimator.group_service(g, perf);
+                            st.wait += svc + perf.prefill_s;
+                            st.tail_model = Some(g.model);
+                            st.load += g.len() as f64;
+                        }
+                    }
+                }
+                (v.id, st)
+            })
+            .collect();
+
+        for g in todo {
+            let mut best: Option<(InstanceId, f64, f64, f64)> = None; // (id, pen, completion, load)
+            for v in instances {
+                let Some(perf) = v.perf_for.get(&g.model) else {
+                    continue;
+                };
+                let st = qstate[&v.id];
+                let (pen, completion) =
+                    pricing::append_score(&self.estimator, &st, g, v, perf, now);
+                if candidate_improves(
+                    best.map(|(_, p, c, l)| (p, c, l)),
+                    pen,
+                    completion,
+                    st.load,
+                ) {
+                    best = Some((v.id, pen, completion, st.load));
+                }
+            }
+            match best {
+                Some((id, _, completion, _)) => {
+                    orders.get_mut(&id).unwrap().push(g.id);
+                    let st = qstate.get_mut(&id).unwrap();
+                    st.wait = completion;
+                    st.tail_model = Some(g.model);
+                    st.load += g.len() as f64;
+                }
+                None => {
+                    // No instance can serve this model (misconfigured
+                    // fleet): report separately with a large finite
+                    // penalty. Parking it on an arbitrary queue made
+                    // `queue_penalty` go infinite at the queue head,
+                    // rendering the penalty signal useless.
+                    unservable.push((g.id, g.len() as u32));
+                }
+            }
+        }
+
+        // 3. Per-queue ordering: affinity-EDF, optionally MILP-refined.
+        for v in instances {
+            let ids = orders.get_mut(&v.id).unwrap();
+            let all: Vec<&RequestGroup> =
+                ids.iter().filter_map(|id| by_id.get(id).copied()).collect();
+            let (head, mut rest) = split_pinned(&all, v.executing);
+            affinity_order(&mut rest, v.active_model);
+
+            // `ExactMilp` is honored past `milp_max_groups` (the old
+            // code silently fell back to the heuristic there), bounded
+            // only by [`MILP_HARD_CAP`] — the node limit bounds the
+            // search but not tableau construction, and the heuristic-
+            // regression guard below keeps truncated searches harmless.
+            let use_milp = rest.len() >= 2
+                && match self.cfg.solver {
+                    SolverKind::Greedy => false,
+                    SolverKind::ExactMilp => rest.len() <= MILP_HARD_CAP,
+                    SolverKind::Auto => {
+                        rest.len() <= self.cfg.milp_max_groups.min(MILP_HARD_CAP)
+                    }
+                };
+
+            if use_milp {
+                if let Some((order, nodes)) = self.milp_order(&rest, v, now) {
+                    stats.milp_nodes += nodes;
+                    stats.used_milp = true;
+                    // Accept MILP order only if it doesn't regress the
+                    // heuristic (node-limit exhaustion can truncate search).
+                    let full_h: Vec<&RequestGroup> =
+                        head.iter().copied().chain(rest.iter().copied()).collect();
+                    let full_m: Vec<&RequestGroup> = head
+                        .iter()
+                        .copied()
+                        .chain(order.iter().map(|&i| rest[i]))
+                        .collect();
+                    if self.queue_penalty(&full_m, v, now)
+                        <= self.queue_penalty(&full_h, v, now) + 1e-9
+                    {
+                        rest = full_m[head.len()..].to_vec();
+                    }
+                }
+            }
+
+            let full: Vec<&RequestGroup> =
+                head.into_iter().chain(rest.into_iter()).collect();
+            *ids = full.iter().map(|g| g.id).collect();
+        }
+
+        // Penalty: per-group pricing via the same `reprice_queue` walk
+        // the delta path uses, so full and delta passes report one
+        // consistent signal (head-perf `queue_penalty` stays as the
+        // MILP acceptance metric above). The walk doubles as the cache
+        // rebuild; ExactMilp never feeds the delta path (it always
+        // bails to preserve exactness), so it skips the cache and
+        // prices with `queue_penalty` instead.
+        let mut total_penalty = if self.cfg.solver != SolverKind::ExactMilp {
+            self.store_cache(&orders, &by_id, instances, now, unservable.clone())
+        } else {
+            instances
+                .iter()
+                .map(|v| {
+                    let refs: Vec<&RequestGroup> = orders[&v.id]
+                        .iter()
+                        .filter_map(|id| by_id.get(id).copied())
+                        .collect();
+                    self.queue_penalty(&refs, v, now)
+                })
+                .sum()
+        };
+        let (unservable, unservable_pen) = finish_unservable(&unservable);
+        total_penalty += unservable_pen;
+
+        Assignment {
+            feasible: total_penalty <= 1e-9,
+            total_penalty_s: total_penalty,
+            orders,
+            unservable,
+            stats,
+        }
+    }
+
+    /// Rebuild the incremental cache from a just-computed full plan:
+    /// price every queued group (cheap — the services were just
+    /// memoized), then run the shared repricing walk per queue for tail
+    /// state, penalty, and violation-slope data. Returns the summed
+    /// queue penalty so full solves report the exact signal delta
+    /// passes will maintain.
+    fn store_cache(
+        &self,
+        orders: &HashMap<InstanceId, Vec<GroupId>>,
+        by_id: &HashMap<GroupId, &RequestGroup>,
+        instances: &[InstanceView],
+        now: f64,
+        unservable: Vec<(GroupId, u32)>,
+    ) -> f64 {
+        let mut group_pricing = HashMap::with_capacity(by_id.len());
+        let mut queues = Vec::with_capacity(instances.len());
+        for v in instances {
+            let order = orders.get(&v.id).cloned().unwrap_or_default();
+            for gid in &order {
+                let Some(g) = by_id.get(gid) else { continue };
+                let Some(perf) = v.perf_for.get(&g.model) else {
+                    continue;
+                };
+                group_pricing.insert(g.id, pricing::price_group(&self.estimator, g, perf, v.id));
+            }
+            queues.push(CachedQueue::new(v, order, now));
+        }
+        // §Perf: each queue's repricing walk is independent of every
+        // other's (it reads only the shared pricing table), so the
+        // walks fan out over the persistent worker pool — spawned once
+        // and shared with the engine's view refresh, so a pass costs
+        // one dispatch instead of a scoped spawn per thread. Queues
+        // stay in instance order and the penalty is summed sequentially
+        // afterwards, so the result is bit-identical to the serial pass
+        // whatever the lane count.
+        let view_of: HashMap<InstanceId, &InstanceView> =
+            instances.iter().map(|v| (v.id, v)).collect();
+        let pricing_ref = &group_pricing;
+        self.pool.run_chunks_mut(&mut queues, |cq| {
+            pricing::reprice_queue(cq, pricing_ref, view_of[&cq.id], now);
+        });
+        let total: f64 = queues.iter().map(|q| q.penalty).sum();
+        // With the delta path disabled there is no consumer for the
+        // plan cache — the walk above still ran (it *is* the penalty
+        // computation), but keep no state a disabled path could read.
+        if self.cfg.incremental {
+            *self.cache.borrow_mut() = Some(SchedCache {
+                queues,
+                pricing: group_pricing,
+                unservable,
+            });
+        }
+        total
+    }
+
+    /// Incremental pass: patch the cached plan with one pass's dirty
+    /// set instead of re-solving the whole group table.
+    ///
+    /// Returns `None` when a full solve is required — no cache yet, the
+    /// instance set changed (failures), the solver demands exactness, or
+    /// dirtiness exceeds `incremental_dirty_frac` — and the caller then
+    /// runs [`Self::schedule`], which refreshes the cache.
+    ///
+    /// Cost is O(dirty × instances + touched queue lengths); clean
+    /// queues keep their order and tail state, and their last-priced
+    /// penalty is *re-anchored* to `now` in amortized constant time:
+    /// each violating group's penalty grows exactly one second per
+    /// second (the slope term), and groups whose budget ran out since
+    /// the last walk are picked up by the crossing scan over the
+    /// violation-slope data recorded per queue — see
+    /// [`CachedQueue::reanchor`]. Per-queue ordering on touched queues
+    /// is greedy affinity-EDF only; `Auto`-mode MILP refinement
+    /// re-applies at the next full solve.
+    pub fn try_schedule_delta(
+        &self,
+        delta: &SchedDelta,
+        instances: &[InstanceView],
+        now: f64,
+    ) -> Option<Assignment> {
+        if !self.cfg.incremental || self.cfg.solver == SolverKind::ExactMilp {
+            return None;
+        }
+        let mut guard = self.cache.borrow_mut();
+        let cache = guard.as_mut()?;
+        if !cache.matches_views(instances) {
+            return None;
+        }
+        let changed = delta.dirty.len() + delta.removed.len();
+        if changed as f64 > self.cfg.incremental_dirty_frac * delta.total_groups.max(1) as f64 {
+            return None;
+        }
+        let SchedCache {
+            queues,
+            pricing: group_pricing,
+            unservable,
+        } = cache;
+
+        // Executing groups stay pinned at their heads even when dirty.
+        let pinned: HashMap<GroupId, usize> = instances
+            .iter()
+            .enumerate()
+            .filter_map(|(k, v)| v.executing.map(|g| (g, k)))
+            .collect();
+
+        // Everything leaving its current queue position.
+        let mut gone: HashSet<GroupId> = delta.removed.iter().copied().collect();
+        for g in &delta.dirty {
+            if !pinned.contains_key(&g.id) {
+                gone.insert(g.id);
+            }
+        }
+        unservable.retain(|(g, _)| !gone.contains(g));
+
+        let mut touched = vec![false; instances.len()];
+        let idx_of: HashMap<InstanceId, usize> = instances
+            .iter()
+            .enumerate()
+            .map(|(k, v)| (v.id, k))
+            .collect();
+
+        // Only queues that actually hold a departing group need their
+        // order rewritten — the owner index keeps this O(dirty) instead
+        // of O(total groups) (see `GroupPricing::owner`).
+        for gid in &gone {
+            if let Some(p) = group_pricing.get(gid) {
+                if let Some(&k) = idx_of.get(&p.owner) {
+                    touched[k] = true;
+                }
+            }
+        }
+        for gid in &delta.removed {
+            group_pricing.remove(gid);
+        }
+
+        // 1. Drop departing groups; sync pinning and active-model state.
+        for (k, v) in instances.iter().enumerate() {
+            let cq = &mut queues[k];
+            if touched[k] {
+                cq.order.retain(|g| !gone.contains(g));
+            }
+            if cq.executing != v.executing {
+                cq.executing = v.executing;
+                touched[k] = true;
+            }
+            if let Some(e) = v.executing {
+                if cq.order.first() != Some(&e) && cq.order.contains(&e) {
+                    cq.order.retain(|&g| g != e);
+                    cq.order.insert(0, e);
+                    touched[k] = true;
+                }
+            }
+            if cq.active_model != v.active_model {
+                cq.active_model = v.active_model;
+                touched[k] = true; // head-swap pricing changed
+            }
+        }
+
+        // 2. Re-price pinned dirty groups in place.
+        for g in &delta.dirty {
+            let Some(&k) = pinned.get(&g.id) else { continue };
+            touched[k] = true;
+            if let Some(perf) = instances[k].perf_for.get(&g.model) {
+                group_pricing.insert(
+                    g.id,
+                    pricing::price_group(&self.estimator, g, perf, instances[k].id),
+                );
+            }
+            if !queues[k].order.contains(&g.id) {
+                queues[k].order.insert(0, g.id);
+            }
+        }
+
+        // 2.5 Refresh tail state of every queue touched so far, *before*
+        //     scoring insertions: without this, step 3 would price
+        //     candidates against tails that still include the groups
+        //     just removed above, steering arrivals away from queues
+        //     that freed capacity this very pass.
+        for (k, v) in instances.iter().enumerate() {
+            if touched[k] {
+                pricing::reprice_queue(&mut queues[k], group_pricing, v, now);
+            }
+        }
+
+        // 3. Greedy re-insertion of dirty groups in deadline order —
+        //    identical candidate scoring to the full solve, priced
+        //    against cached queue tails.
+        let mut todo: Vec<&RequestGroup> = delta
+            .dirty
+            .iter()
+            .copied()
+            .filter(|g| !pinned.contains_key(&g.id))
+            .collect();
+        todo.sort_by(|a, b| {
+            a.deadline()
+                .partial_cmp(&b.deadline())
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        for g in todo {
+            let mut best: Option<(usize, f64, f64, f64)> = None;
+            for (k, v) in instances.iter().enumerate() {
+                let Some(perf) = v.perf_for.get(&g.model) else {
+                    continue;
+                };
+                let t = queues[k].tail;
+                let (pen, completion) =
+                    pricing::append_score(&self.estimator, &t, g, v, perf, now);
+                if candidate_improves(
+                    best.map(|(_, p, c, l)| (p, c, l)),
+                    pen,
+                    completion,
+                    t.load,
+                ) {
+                    best = Some((k, pen, completion, t.load));
+                }
+            }
+            match best {
+                Some((k, _, completion, _)) => {
+                    let v = &instances[k];
+                    let perf = v.perf_for[&g.model];
+                    group_pricing
+                        .insert(g.id, pricing::price_group(&self.estimator, g, &perf, v.id));
+                    let cq = &mut queues[k];
+                    cq.order.push(g.id);
+                    cq.tail.wait = completion;
+                    cq.tail.tail_model = Some(g.model);
+                    cq.tail.load += g.len() as f64;
+                    touched[k] = true;
+                }
+                None => unservable.push((g.id, g.len() as u32)),
+            }
+        }
+
+        // 4. Reorder + re-price touched queues from cached pricing;
+        //    re-anchor untouched queues' penalties to `now` via the
+        //    amortized-constant-time epoch offset (slope term plus the
+        //    crossing scan — no walk needed).
+        for (k, v) in instances.iter().enumerate() {
+            if touched[k] {
+                let cq = &mut queues[k];
+                reorder_cached(cq, group_pricing);
+                pricing::reprice_queue(cq, group_pricing, v, now);
+            } else {
+                queues[k].reanchor(now);
+            }
+        }
+
+        // 5. Assemble the patch: orders only for queues that changed.
+        let mut orders = HashMap::new();
+        for (k, cq) in queues.iter().enumerate() {
+            if touched[k] {
+                orders.insert(cq.id, cq.order.clone());
+            }
+        }
+        let mut total_penalty: f64 = queues.iter().map(|q| q.penalty).sum();
+        let (unservable_ids, unservable_pen) = finish_unservable(unservable);
+        total_penalty += unservable_pen;
+        let touched_instances = touched.iter().filter(|&&t| t).count();
+        Some(Assignment {
+            feasible: total_penalty <= 1e-9,
+            total_penalty_s: total_penalty,
+            orders,
+            unservable: unservable_ids,
+            stats: SolveStats {
+                groups: delta.total_groups,
+                incremental: true,
+                dirty: delta.dirty.len(),
+                touched_instances,
+                ..Default::default()
+            },
+        })
+    }
+
+    /// Exact ordering of `groups` on instance `v` via the §7 MILP.
+    /// Returns the permutation (indices into `groups`) and node count.
+    pub fn milp_order(
+        &self,
+        groups: &[&RequestGroup],
+        v: &InstanceView,
+        now: f64,
+    ) -> Option<(Vec<usize>, usize)> {
+        let n = groups.len();
+        if n == 0 {
+            return Some((Vec::new(), 0));
+        }
+        let perf = v.perf_for.get(&groups[0].model)?;
+        // Per-group constants.
+        let svc: Vec<f64> = groups
+            .iter()
+            .map(|g| {
+                let (m, _) = self.estimator.group_service(g, perf);
+                m + perf.prefill_s
+            })
+            .collect();
+        let budget: Vec<f64> = groups.iter().map(|g| g.deadline() - now).collect();
+        let model_val: Vec<f64> = groups.iter().map(|g| g.model.0 as f64 + 1.0).collect();
+        let active_val = v.active_model.map(|m| m.0 as f64 + 1.0).unwrap_or(0.0);
+        let swap_s = groups
+            .iter()
+            .map(|g| v.swap_s(g.model))
+            .fold(0.0_f64, f64::max); // uniformized S (see module docs)
+        let big_m = model_val.iter().fold(active_val, |a, &b| a.max(b)) + 2.0;
+
+        // Variable layout.
+        let x = |i: usize, j: usize| i * n + j;
+        let m_of = |j: usize| n * n + j;
+        let t_of = |j: usize| n * n + n + j;
+        let w_of = |j: usize| n * n + 2 * n + j;
+        let v_of = |j: usize| n * n + 3 * n + j;
+        let nv = n * n + 4 * n;
+
+        let mut lp = Lp::new(nv);
+        // Objective (Eq. 13): minimize Σ v_j + tiny swap regularizer.
+        let mut obj = vec![0.0; nv];
+        for j in 0..n {
+            obj[v_of(j)] = -1.0;
+            obj[t_of(j)] = -0.001 * swap_s.max(1e-3);
+        }
+        // Tie-break: when several orderings are penalty-free, prefer
+        // placing larger-budget groups later (EDF within feasibility).
+        let max_budget = budget.iter().cloned().fold(1.0_f64, f64::max).max(1.0);
+        for i in 0..n {
+            for j in 0..n {
+                obj[x(i, j)] = 1e-5 * (budget[i] / max_budget) * j as f64 / n as f64;
+            }
+        }
+        lp.set_objective(obj);
+
+        // Eq. 6: assignment bijection.
+        for i in 0..n {
+            let mut row = vec![0.0; nv];
+            for j in 0..n {
+                row[x(i, j)] = 1.0;
+            }
+            lp.add(row, Cmp::Eq, 1.0);
+        }
+        for j in 0..n {
+            let mut row = vec![0.0; nv];
+            for i in 0..n {
+                row[x(i, j)] = 1.0;
+            }
+            lp.add(row, Cmp::Eq, 1.0);
+        }
+        // Eq. 7: m_j = Σ_i model_i x_{i,j}.
+        for j in 0..n {
+            let mut row = vec![0.0; nv];
+            for i in 0..n {
+                row[x(i, j)] = model_val[i];
+            }
+            row[m_of(j)] = -1.0;
+            lp.add(row, Cmp::Eq, 0.0);
+        }
+        // Eq. 9 via big-M: |m_j − m_{j−1}| ≤ M t_j (m_{-1} = active).
+        for j in 0..n {
+            let mut r1 = vec![0.0; nv];
+            let mut r2 = vec![0.0; nv];
+            r1[m_of(j)] = 1.0;
+            r2[m_of(j)] = -1.0;
+            let rhs = if j == 0 { active_val } else { 0.0 };
+            if j > 0 {
+                r1[m_of(j - 1)] = -1.0;
+                r2[m_of(j - 1)] = 1.0;
+            }
+            r1[t_of(j)] = -big_m;
+            r2[t_of(j)] = -big_m;
+            lp.add(r1, Cmp::Le, rhs);
+            lp.add(r2, Cmp::Le, -rhs);
+        }
+        // Eq. 10: w_0 = S·t_0; w_j = w_{j−1} + Σ_i svc_i x_{i,j−1} + S·t_j.
+        for j in 0..n {
+            let mut row = vec![0.0; nv];
+            row[w_of(j)] = 1.0;
+            row[t_of(j)] = -swap_s;
+            if j > 0 {
+                row[w_of(j - 1)] = -1.0;
+                for i in 0..n {
+                    row[x(i, j - 1)] = -svc[i];
+                }
+            }
+            lp.add(row, Cmp::Eq, 0.0);
+        }
+        // Eq. 11/12 softened: w_j + Σ_i (svc_i − budget_i) x_{i,j} − v_j ≤ 0.
+        for j in 0..n {
+            let mut row = vec![0.0; nv];
+            row[w_of(j)] = 1.0;
+            for i in 0..n {
+                row[x(i, j)] = svc[i] - budget[i];
+            }
+            row[v_of(j)] = -1.0;
+            lp.add(row, Cmp::Le, 0.0);
+        }
+
+        let mut binaries: Vec<usize> = (0..n * n).collect();
+        binaries.extend((0..n).map(t_of));
+        let mut milp = Milp::new(lp, binaries);
+        milp.node_limit = self.cfg.node_limit;
+        match milp.solve() {
+            MilpResult::Optimal { x: sol, nodes, .. } => {
+                let mut perm = vec![0usize; n];
+                for j in 0..n {
+                    for i in 0..n {
+                        if sol[x(i, j)] > 0.5 {
+                            perm[j] = i;
+                        }
+                    }
+                }
+                Some((perm, nodes))
+            }
+            MilpResult::Infeasible => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::InstanceId;
+    use crate::coordinator::sched::testutil::{estimator, grp, view};
+    use crate::coordinator::scheduler::{GlobalScheduler, SchedulerConfig, UNSERVABLE_PENALTY_S};
+
+    #[test]
+    fn tight_slo_scheduled_ahead() {
+        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
+        let big = grp(1, 0, 200, 0.0, 3600.0);
+        let tight = grp(2, 0, 4, 0.0, 20.0);
+        let views = vec![view(0, &[0], Some(0))];
+        let a = sched.schedule(&[&big, &tight], &views, 0.0);
+        let order = &a.orders[&InstanceId(0)];
+        assert_eq!(order[0], crate::coordinator::request_group::GroupId(2));
+    }
+
+    #[test]
+    fn multi_instance_load_balances() {
+        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
+        let groups: Vec<_> = (0..8).map(|i| grp(i, 0, 64, 0.0, 60.0)).collect();
+        let refs: Vec<_> = groups.iter().collect();
+        let views = vec![view(0, &[0], Some(0)), view(1, &[0], Some(0))];
+        let a = sched.schedule(&refs, &views, 0.0);
+        let l0 = a.orders[&InstanceId(0)].len();
+        let l1 = a.orders[&InstanceId(1)].len();
+        assert_eq!(l0 + l1, 8);
+        assert!(l0 >= 2 && l1 >= 2, "unbalanced {l0}/{l1}");
+    }
+
+    #[test]
+    fn respects_model_servability() {
+        // Llama-70B (model 2) can only run on instance 1.
+        use crate::coordinator::request_group::GroupId;
+        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
+        let groups = vec![grp(1, 2, 8, 0.0, 3600.0), grp(2, 0, 8, 0.0, 3600.0)];
+        let refs: Vec<_> = groups.iter().collect();
+        let views = vec![view(0, &[0], Some(0)), view(1, &[0, 2], None)];
+        let a = sched.schedule(&refs, &views, 0.0);
+        assert!(a.orders[&InstanceId(1)].contains(&GroupId(1)));
+        assert!(!a.orders[&InstanceId(0)].contains(&GroupId(1)));
+    }
+
+    #[test]
+    fn pinned_group_stays_at_head() {
+        use crate::coordinator::request_group::GroupId;
+        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
+        let executing = grp(7, 0, 32, 0.0, 3600.0);
+        let urgent = grp(8, 0, 4, 0.0, 10.0);
+        let mut v = view(0, &[0], Some(0));
+        v.executing = Some(GroupId(7));
+        let a = sched.schedule(&[&executing, &urgent], &[v], 0.0);
+        let order = &a.orders[&InstanceId(0)];
+        assert_eq!(order[0], GroupId(7), "executing group pinned");
+        assert_eq!(order[1], GroupId(8));
+    }
+
+    #[test]
+    fn repeated_schedules_reuse_service_memo() {
+        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
+        // 8 groups: enough to stay on the greedy path (no MILP) while
+        // still exercising the assignment + penalty pricing.
+        let groups: Vec<_> = (0..8).map(|i| grp(i, 0, 32, 0.0, 600.0)).collect();
+        let refs: Vec<_> = groups.iter().collect();
+        let views = vec![view(0, &[0], Some(0))];
+        let a = sched.schedule(&refs, &views, 0.0);
+        let b = sched.schedule(&refs, &views, 0.0);
+        assert_eq!(a.orders, b.orders, "identical inputs, identical plan");
+        let (hits, misses) = sched.estimator.memo_stats();
+        assert!(hits > 0, "second invocation must hit the memo");
+        assert!(
+            hits >= misses,
+            "unchanged groups should mostly hit: {hits} hits / {misses} misses"
+        );
+    }
+
+    #[test]
+    fn milp_orders_by_deadline_single_model() {
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::ExactMilp,
+                milp_max_groups: 4,
+                node_limit: 50_000,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        let g1 = grp(1, 0, 16, 0.0, 3600.0);
+        let g2 = grp(2, 0, 16, 0.0, 30.0);
+        let g3 = grp(3, 0, 16, 0.0, 600.0);
+        let v = view(0, &[0], Some(0));
+        let refs = vec![&g1, &g2, &g3];
+        let (perm, _) = sched.milp_order(&refs, &v, 0.0).unwrap();
+        // Tightest (g2) first.
+        assert_eq!(perm[0], 1, "perm {perm:?}");
+    }
+
+    #[test]
+    fn milp_avoids_needless_swaps() {
+        // Two models, relaxed SLOs: optimal order clusters by model
+        // (1 swap), not interleaved (3 swaps).
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::ExactMilp,
+                milp_max_groups: 4,
+                node_limit: 50_000,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        let g1 = grp(1, 0, 16, 0.0, 7200.0);
+        let g2 = grp(2, 3, 16, 0.0, 7200.0);
+        let g3 = grp(3, 0, 16, 0.0, 7200.0);
+        let g4 = grp(4, 3, 16, 0.0, 7200.0);
+        let v = view(0, &[0, 3], Some(0));
+        let refs = vec![&g1, &g2, &g3, &g4];
+        let (perm, _) = sched.milp_order(&refs, &v, 0.0).unwrap();
+        let models: Vec<u32> = perm.iter().map(|&i| refs[i].model.0).collect();
+        let transitions = models.windows(2).filter(|w| w[0] != w[1]).count();
+        assert_eq!(transitions, 1, "models {models:?}");
+    }
+
+    #[test]
+    fn infeasible_flagged_when_capacity_exceeded() {
+        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
+        // Enormous backlog with tiny SLOs.
+        let groups: Vec<_> = (0..20).map(|i| grp(i, 0, 256, 0.0, 5.0)).collect();
+        let refs: Vec<_> = groups.iter().collect();
+        let views = vec![view(0, &[0], Some(0))];
+        let a = sched.schedule(&refs, &views, 0.0);
+        assert!(!a.feasible);
+        assert!(a.total_penalty_s > 0.0);
+    }
+
+    #[test]
+    fn unservable_group_reported_with_finite_penalty() {
+        use crate::coordinator::request_group::GroupId;
+        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
+        // Model 2 (Llama-70B) is not servable by the only instance.
+        let lost = grp(1, 2, 8, 0.0, 60.0);
+        let ok = grp(2, 0, 8, 0.0, 3600.0);
+        let views = vec![view(0, &[0], Some(0))];
+        let a = sched.schedule(&[&lost, &ok], &views, 0.0);
+        assert!(
+            a.total_penalty_s.is_finite(),
+            "unservable group must not poison the penalty signal"
+        );
+        assert!(a.total_penalty_s >= UNSERVABLE_PENALTY_S);
+        assert!(!a.feasible);
+        assert_eq!(a.unservable, vec![GroupId(1)]);
+        assert!(
+            !a.orders[&InstanceId(0)].contains(&GroupId(1)),
+            "unservable group must not be parked on a queue"
+        );
+        assert!(a.orders[&InstanceId(0)].contains(&GroupId(2)));
+    }
+
+    #[test]
+    fn exact_milp_honored_beyond_milp_max_groups() {
+        // Regression: ExactMilp used to silently fall back to the
+        // heuristic when a queue exceeded `milp_max_groups`.
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::ExactMilp,
+                milp_max_groups: 2,
+                node_limit: 50_000,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        let groups: Vec<_> =
+            (0..4).map(|i| grp(i, 0, 16, 0.0, 600.0 + i as f64)).collect();
+        let refs: Vec<_> = groups.iter().collect();
+        let views = vec![view(0, &[0], Some(0))];
+        let a = sched.schedule(&refs, &views, 0.0);
+        assert!(
+            a.stats.used_milp,
+            "ExactMilp must refine queues larger than milp_max_groups"
+        );
+    }
+
+    /// Deterministic Fisher–Yates driven by a splitmix-style LCG.
+    fn lcg_shuffle<T>(v: &mut [T], seed: &mut u64) {
+        for i in (1..v.len()).rev() {
+            *seed = seed
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let j = ((*seed >> 33) as usize) % (i + 1);
+            v.swap(i, j);
+        }
+    }
+
+    #[test]
+    fn schedule_invariant_to_group_slice_order() {
+        // Property: the plan is a function of the group *set*, not the
+        // iteration order of the slice handed in (which comes from a
+        // HashMap in the engine).
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        let groups: Vec<_> = (0..24)
+            .map(|i| {
+                let slo = 30.0 + (i % 7) as f64 * 200.0;
+                grp(i, (i % 2) as u32 * 3, 16 + (i % 5) as usize, i as f64, slo)
+            })
+            .collect();
+        let views = vec![
+            view(0, &[0, 3], Some(0)),
+            view(1, &[0, 3], Some(3)),
+            view(2, &[0], None),
+        ];
+        let base_refs: Vec<_> = groups.iter().collect();
+        let base = sched.schedule(&base_refs, &views, 0.0);
+        let mut seed = 0xC0FFEE_u64;
+        for _ in 0..5 {
+            let mut refs = base_refs.clone();
+            lcg_shuffle(&mut refs, &mut seed);
+            let a = sched.schedule(&refs, &views, 0.0);
+            assert_eq!(a.orders, base.orders, "plan depends on slice order");
+            assert!((a.total_penalty_s - base.total_penalty_s).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn delta_without_cache_falls_back_to_full() {
+        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
+        let views = vec![view(0, &[0], Some(0))];
+        let d = SchedDelta::default();
+        assert!(sched.try_schedule_delta(&d, &views, 0.0).is_none());
+    }
+
+    #[test]
+    fn delta_with_empty_dirty_set_changes_nothing() {
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        let groups: Vec<_> =
+            (0..8).map(|i| grp(i, 0, 32, 0.0, 60.0 + i as f64)).collect();
+        let refs: Vec<_> = groups.iter().collect();
+        let views = vec![view(0, &[0], Some(0)), view(1, &[0], Some(0))];
+        let full = sched.schedule(&refs, &views, 0.0);
+        let d = SchedDelta {
+            total_groups: groups.len(),
+            ..Default::default()
+        };
+        let a = sched
+            .try_schedule_delta(&d, &views, 0.0)
+            .expect("cache is warm");
+        assert!(a.stats.incremental);
+        assert!(
+            a.orders.is_empty(),
+            "identical inputs must produce an empty patch"
+        );
+        assert_eq!(
+            sched.cached_orders().unwrap(),
+            full.orders,
+            "cached plan must still equal the full solve"
+        );
+    }
+
+    #[test]
+    fn delta_inserts_new_group_like_a_full_solve() {
+        let mk_sched = || {
+            GlobalScheduler::new(
+                SchedulerConfig {
+                    solver: SolverKind::Greedy,
+                    ..Default::default()
+                },
+                estimator(),
+            )
+        };
+        let mut groups: Vec<_> =
+            (0..6).map(|i| grp(i, 0, 32, 0.0, 100.0 + 50.0 * i as f64)).collect();
+        let views = vec![view(0, &[0], Some(0))];
+        // Warm the incremental scheduler on the first 6 groups, then
+        // deliver group 6 via the delta path.
+        let inc = mk_sched();
+        let refs: Vec<_> = groups.iter().collect();
+        inc.schedule(&refs, &views, 0.0);
+        groups.push(grp(6, 0, 32, 0.0, 900.0));
+        let d = SchedDelta {
+            dirty: vec![groups.last().unwrap()],
+            removed: vec![],
+            total_groups: groups.len(),
+        };
+        let a = inc.try_schedule_delta(&d, &views, 0.0).expect("warm cache");
+        assert!(a.stats.incremental);
+        assert_eq!(a.stats.dirty, 1);
+        // A fresh full solve over all 7 groups lands on the same plan.
+        let full = mk_sched();
+        let refs: Vec<_> = groups.iter().collect();
+        let b = full.schedule(&refs, &views, 0.0);
+        assert_eq!(inc.cached_orders().unwrap(), b.orders);
+    }
+
+    #[test]
+    fn delta_invariant_to_dirty_iteration_order() {
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                incremental_dirty_frac: 1.0,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        let base: Vec<_> =
+            (0..10).map(|i| grp(i, 0, 32, 0.0, 60.0 + 10.0 * i as f64)).collect();
+        let views = vec![view(0, &[0], Some(0)), view(1, &[0], Some(0))];
+        let fresh: Vec<_> = (10..14)
+            .map(|i| grp(i, 0, 32, 0.0, 45.0 + 5.0 * i as f64))
+            .collect();
+        let run = |dirty: Vec<&RequestGroup>| {
+            let refs: Vec<_> = base.iter().collect();
+            sched.schedule(&refs, &views, 0.0);
+            let d = SchedDelta {
+                dirty,
+                removed: vec![],
+                total_groups: base.len() + fresh.len(),
+            };
+            sched.try_schedule_delta(&d, &views, 0.0).expect("warm");
+            sched.cached_orders().unwrap()
+        };
+        let fwd = run(fresh.iter().collect());
+        let rev = run(fresh.iter().rev().collect());
+        assert_eq!(fwd, rev, "delta plan depends on dirty iteration order");
+    }
+
+    #[test]
+    fn delta_removed_group_leaves_its_queue() {
+        use crate::coordinator::request_group::GroupId;
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        let groups: Vec<_> =
+            (0..6).map(|i| grp(i, 0, 32, 0.0, 60.0 + i as f64)).collect();
+        let refs: Vec<_> = groups.iter().collect();
+        let views = vec![view(0, &[0], Some(0))];
+        sched.schedule(&refs, &views, 0.0);
+        let d = SchedDelta {
+            dirty: vec![],
+            removed: vec![GroupId(3)],
+            total_groups: 5,
+        };
+        let a = sched.try_schedule_delta(&d, &views, 0.0).expect("warm");
+        let order = &a.orders[&InstanceId(0)];
+        assert!(!order.contains(&GroupId(3)));
+        assert_eq!(order.len(), 5);
+    }
+
+    #[test]
+    fn delta_dirtiness_beyond_threshold_forces_full_solve() {
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                incremental_dirty_frac: 0.25,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        let groups: Vec<_> =
+            (0..8).map(|i| grp(i, 0, 32, 0.0, 60.0 + i as f64)).collect();
+        let refs: Vec<_> = groups.iter().collect();
+        let views = vec![view(0, &[0], Some(0))];
+        sched.schedule(&refs, &views, 0.0);
+        let d = SchedDelta {
+            dirty: groups.iter().take(4).collect(),
+            removed: vec![],
+            total_groups: groups.len(),
+        };
+        assert!(
+            sched.try_schedule_delta(&d, &views, 0.0).is_none(),
+            "4/8 dirty exceeds the 25% threshold"
+        );
+    }
+
+    #[test]
+    fn delta_reanchors_untouched_queue_penalties() {
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        // Every group violating at t=0: 256-member groups, 5 s SLOs —
+        // each violating group's penalty grows one second per second.
+        let groups: Vec<_> = (0..8).map(|i| grp(i, 0, 256, 0.0, 5.0)).collect();
+        let refs: Vec<_> = groups.iter().collect();
+        let views = vec![view(0, &[0], Some(0)), view(1, &[0], Some(0))];
+        let full = sched.schedule(&refs, &views, 0.0);
+        assert!(full.total_penalty_s > 0.0);
+        let d = SchedDelta {
+            total_groups: groups.len(),
+            ..Default::default()
+        };
+        // An empty delta 10 s later must re-anchor the untouched queues:
+        // 8 violating groups × 10 s of extra lateness.
+        let a = sched.try_schedule_delta(&d, &views, 10.0).expect("warm");
+        assert!(
+            (a.total_penalty_s - (full.total_penalty_s + 80.0)).abs() < 1e-6,
+            "expected {} + 80, got {}",
+            full.total_penalty_s,
+            a.total_penalty_s
+        );
+        // A second pass advances from the new anchor, not from t=0.
+        let b = sched.try_schedule_delta(&d, &views, 15.0).expect("warm");
+        assert!(
+            (b.total_penalty_s - (a.total_penalty_s + 40.0)).abs() < 1e-6,
+            "expected {} + 40, got {}",
+            a.total_penalty_s,
+            b.total_penalty_s
+        );
+    }
+
+    #[test]
+    fn delta_crossing_scan_prices_freshly_violating_groups() {
+        // The second-order amortization gap the crossing scan closes:
+        // a group whose budget is healthy at the full solve but runs
+        // out *between* passes must start accruing penalty on an
+        // untouched queue — and the re-anchored signal must match a
+        // fresh full solve of the identical state.
+        let mk = || {
+            GlobalScheduler::new(
+                SchedulerConfig {
+                    solver: SolverKind::Greedy,
+                    ..Default::default()
+                },
+                estimator(),
+            )
+        };
+        // One modest group per queue, with an SLO calibrated from the
+        // estimator itself so the groups start comfortably inside their
+        // budgets (feasible at t=0) whatever the profiled throughput.
+        let views = vec![view(0, &[0], Some(0)), view(1, &[0], Some(0))];
+        let probe = grp(0, 0, 16, 0.0, 1e9);
+        let perf = views[0].perf_for[&probe.model];
+        let est = estimator();
+        let (svc, _) = est.group_service(&probe, &perf);
+        // Floor of 25 s keeps the groups in the probe's SLO class
+        // (Batch1, > 20 s) so they price with the probed profile.
+        let budget = ((svc + perf.prefill_s) * 1.5 + 5.0).max(25.0);
+        let groups: Vec<_> = (0..2).map(|i| grp(i, 0, 16, 0.0, budget)).collect();
+        let refs: Vec<_> = groups.iter().collect();
+        let inc = mk();
+        let full0 = inc.schedule(&refs, &views, 0.0);
+        assert!(
+            full0.feasible,
+            "groups must start inside their budgets: {}",
+            full0.total_penalty_s
+        );
+        let d = SchedDelta {
+            total_groups: groups.len(),
+            ..Default::default()
+        };
+        // Long after every budget has run out, an *empty* delta pass
+        // must price the crossings; compare against a cold full solve
+        // of the same state at the same time.
+        let late = budget + 100.0;
+        let a = inc.try_schedule_delta(&d, &views, late).expect("warm");
+        assert!(a.orders.is_empty(), "no queue was touched");
+        assert!(
+            a.total_penalty_s > 0.0,
+            "crossing scan must surface the new violations"
+        );
+        let fresh = mk().schedule(&refs, &views, late);
+        assert!(
+            (a.total_penalty_s - fresh.total_penalty_s).abs() < 1e-6,
+            "re-anchored {} vs fresh {}",
+            a.total_penalty_s,
+            fresh.total_penalty_s
+        );
+        assert!(!a.feasible);
+    }
+
+    #[test]
+    fn parallel_repricing_is_bit_identical_to_serial() {
+        let mk = |threads: usize| {
+            GlobalScheduler::new(
+                SchedulerConfig {
+                    solver: SolverKind::Greedy,
+                    threads,
+                    ..Default::default()
+                },
+                estimator(),
+            )
+        };
+        let groups: Vec<_> = (0..48)
+            .map(|i| {
+                let slo = 30.0 + (i % 7) as f64 * 150.0;
+                grp(i, (i % 2) as u32 * 3, 16 + (i % 5) as usize, i as f64 * 0.1, slo)
+            })
+            .collect();
+        let refs: Vec<_> = groups.iter().collect();
+        let views: Vec<InstanceView> = (0..8).map(|i| view(i, &[0, 3], Some(0))).collect();
+        let serial = mk(1).schedule(&refs, &views, 3.0);
+        let par = mk(4).schedule(&refs, &views, 3.0);
+        assert_eq!(serial.orders, par.orders, "plan must not depend on threads");
+        assert_eq!(
+            serial.total_penalty_s.to_bits(),
+            par.total_penalty_s.to_bits(),
+            "penalty must be bit-identical across thread counts"
+        );
+    }
+
+    #[test]
+    fn delta_instance_set_change_forces_full_solve() {
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        let groups: Vec<_> = (0..4).map(|i| grp(i, 0, 32, 0.0, 60.0)).collect();
+        let refs: Vec<_> = groups.iter().collect();
+        let views = vec![view(0, &[0], Some(0)), view(1, &[0], Some(0))];
+        sched.schedule(&refs, &views, 0.0);
+        // Instance 1 failed: the survivor-only view set must not patch.
+        let survivors = vec![view(0, &[0], Some(0))];
+        let d = SchedDelta {
+            total_groups: groups.len(),
+            ..Default::default()
+        };
+        assert!(sched.try_schedule_delta(&d, &survivors, 0.0).is_none());
+    }
+}

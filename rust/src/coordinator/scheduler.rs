@@ -1,230 +1,50 @@
 //! The Global Scheduler (§7): assigns request groups to virtual queues
 //! and orders them to maximize SLO attainment, given RWT estimates.
 //!
-//! Two solver paths:
+//! This file is the thin façade every call site imports through; the
+//! implementation is the layered core under [`crate::coordinator::sched`]
+//! (see its module docs for the layer diagram and invariants):
 //!
-//! * **Exact MILP** — the paper's formulation (Eqs. 6–13): binary
-//!   assignment x_{i,j} of groups to queue positions, model values m_j
-//!   (Eq. 7), big-M switch indicators t_j (Eq. 9), accumulated waiting
-//!   times wt_j (Eq. 10), and penalties p_j = wt_j − slo_j (Eq. 11),
-//!   minimizing total violation (Eq. 13). SLO satisfaction (Eq. 12) is
-//!   soft-constrained through violation variables v_j ≥ p_j so the solver
-//!   still returns the least-bad ordering when demand exceeds capacity
-//!   (the paper falls back to EDF/scale-up in that regime, §9).
-//!   The model-dependent swap time in Eq. 10's product term is
-//!   conservatively uniformized to max_i S_i to stay linear (the exact
-//!   product would need n² extra binaries).
+//! * [`sched::pricing`] — [`GroupPricing`](sched::pricing), the single
+//!   `price_group`/`append_score` scoring path, and the `reprice_queue`
+//!   walk that records violation slopes + crossing times;
+//! * [`sched::cache`] — the plan cache (`SchedCache`/`CachedQueue`),
+//!   the constant-time penalty re-anchor with its crossing scan, and
+//!   view-set invalidation;
+//! * [`sched::plan`] — [`Assignment`], the affinity-EDF comparator and
+//!   both ordering paths, order patches, unservable retirement;
+//! * [`sched::solve`] — orchestration: the greedy full solve, the
+//!   incremental delta patch, exact-MILP refinement (Eqs. 6–13), and
+//!   every fallback trigger between them.
 //!
-//! * **Greedy heuristic** — deadline-ordered assignment with model
-//!   affinity, linear in groups; this is what scales to the 400K-request
-//!   queues of Fig. 20 and is the default for large instances (Design
-//!   Principle #1).
-//!
-//! On top of both, an **incremental delta path**
-//! ([`GlobalScheduler::try_schedule_delta`]): the steady-state regime of
-//! a 100K-request queue is "one group arrived / one group drained", and
-//! re-solving the whole table for that is O(groups × instances) per
-//! pass. The scheduler caches its last plan (per-instance orders, tail
-//! queue state, and per-group service prices) and a pass that only
-//! carries a small dirty set re-prices and re-inserts just the dirty
-//! groups; clean groups keep their queue position. Failure events,
-//! instance-set changes, the exact-MILP solver, and dirtiness above
-//! `SchedulerConfig::incremental_dirty_frac` fall back to a full solve,
-//! which refreshes the cache.
+//! Two solver paths (see [`SolverKind`]): the **exact MILP** — the
+//! paper's formulation, binary assignment of groups to queue positions
+//! minimizing total SLO violation — and the **greedy heuristic** —
+//! deadline-ordered assignment with model affinity, linear in groups,
+//! which is what scales to the 400K-request queues of Fig. 20. On top
+//! of both, the **incremental delta path**
+//! ([`GlobalScheduler::try_schedule_delta`]) patches the cached plan
+//! with one pass's dirty set instead of re-solving the table; failure
+//! events, instance-set changes, the exact-MILP solver, and dirtiness
+//! above [`SchedulerConfig::incremental_dirty_frac`] fall back to a
+//! full solve, which refreshes the cache.
 
 use std::cell::RefCell;
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
+use std::sync::Arc;
 
-use crate::backend::{InstanceId, ModelId, PerfModel};
+use crate::backend::{InstanceId, ModelId};
 use crate::coordinator::request_group::{GroupId, RequestGroup};
 use crate::coordinator::rwt::RwtEstimator;
-use crate::solver::{Cmp, Lp, Milp, MilpResult};
+use crate::coordinator::sched;
+use crate::coordinator::sched::cache::SchedCache;
+use crate::util::WorkerPool;
 
-/// Scheduler's view of one serving instance.
-#[derive(Debug, Clone)]
-pub struct InstanceView {
-    pub id: InstanceId,
-    pub active_model: Option<ModelId>,
-    /// Profiled perf per servable model (absent ⇒ model can't run here,
-    /// e.g. Llama-70B on an A10 — hardware heterogeneity, §8.3).
-    pub perf_for: HashMap<ModelId, PerfModel>,
-    /// Swap-in latency per model from its current tier.
-    pub swap_time: HashMap<ModelId, f64>,
-    /// Group currently executing — pinned (no preemptive migration, §5).
-    pub executing: Option<GroupId>,
-}
-
-impl InstanceView {
-    pub fn can_serve(&self, m: ModelId) -> bool {
-        self.perf_for.contains_key(&m)
-    }
-
-    fn swap_s(&self, m: ModelId) -> f64 {
-        self.swap_time.get(&m).copied().unwrap_or(0.0)
-    }
-}
-
-/// Which solver the global scheduler uses.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SolverKind {
-    Greedy,
-    /// Exact per-queue MILP refinement after greedy assignment.
-    ExactMilp,
-    /// Greedy, with MILP refinement only for queues small enough.
-    Auto,
-}
-
-/// Hard safety cap on the exact-MILP queue size. The dense tableau is
-/// O(n²) variables with O(n) rows of that width, so honoring
-/// `ExactMilp` *unbounded* would allocate gigabytes at Fig. 20 queue
-/// sizes; beyond this cap the heuristic ordering stands in even under
-/// `ExactMilp`. 64 groups ⇒ ~4k binaries, ~10 MB of tableau — the
-/// practical ceiling of the branch-and-bound anyway.
-pub const MILP_HARD_CAP: usize = 64;
-
-/// Scheduler configuration.
-#[derive(Debug, Clone, Copy)]
-pub struct SchedulerConfig {
-    pub solver: SolverKind,
-    /// Max groups per queue for the `Auto` MILP refinement path
-    /// (`ExactMilp` refines regardless, up to [`MILP_HARD_CAP`]).
-    pub milp_max_groups: usize,
-    pub node_limit: usize,
-    /// Incremental passes fall back to a full solve when
-    /// (dirty + removed) exceeds this fraction of the live group table —
-    /// past that point re-walking everything is cheaper than patching.
-    ///
-    /// Default tuned with `cargo bench -- dirty_frac` against the
-    /// `scale`-scenario shape (1562 groups, 10 instances): the delta
-    /// pass skips the global deadline sort and the re-insertion of
-    /// every *clean* group even when most queues end up touched, so it
-    /// stays ahead of the full solve well past the old 0.25 threshold;
-    /// the crossover sits near half the table dirty.
-    pub incremental_dirty_frac: f64,
-    /// Master switch for the delta path. Off ⇒ `try_schedule_delta`
-    /// always bails and full solves never store a plan cache (they
-    /// still price plans with the same shared walk).
-    pub incremental: bool,
-    /// Worker threads for the per-queue repricing walk of a full solve
-    /// (each queue's walk is independent; results are merged in index
-    /// order, so the plan and the summed penalty are bit-identical to
-    /// the serial pass). 1 = serial; wired from `SimConfig::threads`.
-    pub threads: usize,
-}
-
-impl Default for SchedulerConfig {
-    fn default() -> Self {
-        SchedulerConfig {
-            solver: SolverKind::Auto,
-            milp_max_groups: 6,
-            node_limit: 20_000,
-            incremental_dirty_frac: 0.5,
-            incremental: true,
-            threads: 1,
-        }
-    }
-}
-
-/// Penalty charged per member of a group no instance can serve
-/// (misconfigured fleet). Large but *finite*: the old behavior parked
-/// such groups at a queue head, where `queue_penalty` returned
-/// `f64::INFINITY` and poisoned `total_penalty_s` for every comparison.
-pub const UNSERVABLE_PENALTY_S: f64 = 1e6;
-
-/// Solve statistics for overhead studies (Fig. 20).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct SolveStats {
-    pub groups: usize,
-    pub milp_nodes: usize,
-    pub used_milp: bool,
-    /// This pass went down the cached delta path.
-    pub incremental: bool,
-    /// Dirty groups re-inserted by the delta path.
-    pub dirty: usize,
-    /// Instances whose queue changed this pass.
-    pub touched_instances: usize,
-}
-
-/// Scheduler output: per-instance virtual-queue orderings.
-///
-/// A full solve emits an order for every instance; an incremental pass
-/// emits orders only for instances whose queue actually changed, so
-/// callers apply `orders` as a patch (clean queues keep their position).
-#[derive(Debug, Clone)]
-pub struct Assignment {
-    pub orders: HashMap<InstanceId, Vec<GroupId>>,
-    /// True iff every group's estimated completion meets its SLO.
-    pub feasible: bool,
-    /// Σ max(0, estimated completion − budget) across groups, seconds,
-    /// plus [`UNSERVABLE_PENALTY_S`] per member of each unservable group.
-    pub total_penalty_s: f64,
-    /// Groups no instance can serve, reported separately instead of
-    /// being parked on an arbitrary queue.
-    pub unservable: Vec<GroupId>,
-    pub stats: SolveStats,
-}
-
-/// One scheduler pass's worth of group-table changes, produced by the
-/// engine's dirty tracking and consumed by the incremental path.
-#[derive(Debug, Clone, Default)]
-pub struct SchedDelta<'a> {
-    /// Groups whose membership, deadline anchor, or member states
-    /// changed since the last pass — re-priced and re-inserted.
-    pub dirty: Vec<&'a RequestGroup>,
-    /// Groups that drained or were dissolved since the last pass.
-    pub removed: Vec<GroupId>,
-    /// Live group count (for the full-solve dirtiness threshold).
-    pub total_groups: usize,
-}
-
-/// Cached per-group pricing from the pass that last (re)assigned it —
-/// everything the delta path needs to reorder and re-price a queue
-/// without touching the group table.
-#[derive(Debug, Clone, Copy)]
-struct GroupPricing {
-    model: ModelId,
-    deadline: f64,
-    /// Mean service time including prefill, on the assigned instance.
-    svc_s: f64,
-    len: u32,
-    /// Instance whose cached order holds this group — lets a removal
-    /// touch only the owning queue instead of scanning every order, so
-    /// a delta pass stays O(dirty), independent of total queue size.
-    owner: InstanceId,
-}
-
-/// Aggregate tail state of one cached queue (what a greedy append sees).
-#[derive(Debug, Clone, Copy, Default)]
-struct QTail {
-    wait: f64,
-    tail_model: Option<ModelId>,
-    load: f64,
-}
-
-#[derive(Debug, Clone)]
-struct CachedQueue {
-    id: InstanceId,
-    order: Vec<GroupId>,
-    tail: QTail,
-    penalty: f64,
-    /// The `now` the penalty was last priced at (full walk), advanced
-    /// by the constant-time re-anchor on untouched delta passes.
-    priced_at: f64,
-    /// Groups violating at the last walk — the penalty's d/dt slope
-    /// (each violating group's penalty grows one second per second).
-    viol_groups: u32,
-    active_model: Option<ModelId>,
-    executing: Option<GroupId>,
-}
-
-/// The scheduler's memory between passes: last plan + pricing.
-#[derive(Debug, Clone, Default)]
-struct SchedCache {
-    queues: Vec<CachedQueue>,
-    pricing: HashMap<GroupId, GroupPricing>,
-    /// (group, member count) pairs currently unservable.
-    unservable: Vec<(GroupId, u32)>,
-}
+pub use crate::coordinator::sched::plan::Assignment;
+pub use crate::coordinator::sched::{
+    InstanceView, MILP_HARD_CAP, SchedDelta, SchedulerConfig, SolveStats, SolverKind,
+    UNSERVABLE_PENALTY_S,
+};
 
 /// The global scheduler.
 #[derive(Debug, Clone)]
@@ -233,54 +53,28 @@ pub struct GlobalScheduler {
     pub estimator: RwtEstimator,
     /// Last plan, for the incremental delta path. Interior mutability so
     /// `schedule` (&self, shared by benches and the engine) can refresh it.
-    cache: RefCell<Option<SchedCache>>,
+    pub(crate) cache: RefCell<Option<SchedCache>>,
+    /// Lanes for the parallel repricing walk. Built through the
+    /// simulator this is the *shared* per-`Simulation` pool (one set of
+    /// workers serves both the view refresh and the repricing walk);
+    /// standalone construction spawns its own from `cfg.threads`.
+    pub(crate) pool: Arc<WorkerPool>,
 }
 
 impl GlobalScheduler {
     pub fn new(cfg: SchedulerConfig, estimator: RwtEstimator) -> Self {
+        let pool = Arc::new(WorkerPool::new(cfg.threads));
+        Self::with_pool(cfg, estimator, pool)
+    }
+
+    /// Construct over an existing worker pool — the simulator path,
+    /// where one pool per `Simulation` serves every parallel pass.
+    pub fn with_pool(cfg: SchedulerConfig, estimator: RwtEstimator, pool: Arc<WorkerPool>) -> Self {
         GlobalScheduler {
             cfg,
             estimator,
             cache: RefCell::new(None),
-        }
-    }
-
-    /// Score appending `g` behind tail `t` of `v`'s queue: returns
-    /// (penalty, completion). The one implementation shared by the
-    /// full-solve assignment loop and the delta insertion loop — the
-    /// two must score identically or their plans drift.
-    fn append_score(
-        &self,
-        t: &QTail,
-        g: &RequestGroup,
-        v: &InstanceView,
-        perf: &PerfModel,
-        now: f64,
-    ) -> (f64, f64) {
-        let swap = if t.tail_model != Some(g.model) {
-            v.swap_s(g.model)
-        } else {
-            0.0
-        };
-        let (svc, _) = self.estimator.group_service(g, perf);
-        let completion = t.wait + swap + perf.prefill_s + svc;
-        let pen = (completion - (g.deadline() - now)).max(0.0);
-        (pen, completion)
-    }
-
-    /// Price one group on `perf` for the cache: mean service including
-    /// prefill, deadline, size, and the queue that will hold it. The
-    /// single constructor for [`GroupPricing`] — the full-solve cache
-    /// rebuild and both delta-path insertion sites must price
-    /// identically or the two paths drift.
-    fn price_group(&self, g: &RequestGroup, perf: &PerfModel, owner: InstanceId) -> GroupPricing {
-        let (svc, _) = self.estimator.group_service(g, perf);
-        GroupPricing {
-            model: g.model,
-            deadline: g.deadline(),
-            svc_s: svc + perf.prefill_s,
-            len: g.len() as u32,
-            owner,
+            pool,
         }
     }
 
@@ -293,1350 +87,12 @@ impl GlobalScheduler {
             .map(|c| c.queues.iter().map(|q| (q.id, q.order.clone())).collect())
     }
 
-    /// Penalty of an ordering on one instance: Σ max(0, completion − budget).
-    pub fn queue_penalty(&self, order: &[&RequestGroup], view: &InstanceView, now: f64) -> f64 {
-        if order.is_empty() {
-            return 0.0;
-        }
-        // Perf is per-model; use the head group's model for Θ (groups on
-        // one queue in one walk segment share the instance's device).
-        let Some(perf) = view.perf_for.get(&order[0].model) else {
-            return f64::INFINITY;
-        };
-        let est = self.estimator.estimate_queue(
-            order,
-            perf,
-            view.active_model,
-            |m| view.swap_s(m),
-        );
-        order
-            .iter()
-            .zip(&est)
-            .map(|(g, e)| (e.completion_mean_s - (g.deadline() - now)).max(0.0))
-            .sum()
-    }
-
     /// Model-affinity EDF ordering of one queue's groups: cluster by
     /// model, order clusters by earliest deadline, EDF within cluster —
     /// the Fig. 5 "Oracle" structure that avoids swap thrashing.
+    /// (Delegates to [`sched::plan::affinity_order`], the one
+    /// comparator both ordering paths share.)
     pub fn affinity_order(groups: &mut [&RequestGroup], active: Option<ModelId>) {
-        // Cluster key: model; cluster deadline: min member deadline.
-        let mut cluster_deadline: HashMap<ModelId, f64> = HashMap::new();
-        for g in groups.iter() {
-            let e = cluster_deadline.entry(g.model).or_insert(f64::INFINITY);
-            *e = e.min(g.deadline());
-        }
-        // Active-model cluster first on deadline ties (swap-free). The
-        // active-model flag must compare *before* the raw model-id
-        // tie-break: with the old order, equal models made the flags
-        // trivially equal and the preference was unreachable.
-        let key = |g: &RequestGroup| -> AffinityKey {
-            (
-                cluster_deadline[&g.model],
-                Some(g.model) != active,
-                g.model,
-                g.deadline(),
-                g.id,
-            )
-        };
-        groups.sort_by(|a, b| affinity_cmp(&key(a), &key(b)));
-    }
-
-    /// Main entry: assign + order all schedulable groups.
-    ///
-    /// Takes group *references* so callers holding groups in a table
-    /// (the simulator's live group map) schedule without deep-cloning
-    /// every member list per invocation (§Perf).
-    pub fn schedule(
-        &self,
-        groups: &[&RequestGroup],
-        instances: &[InstanceView],
-        now: f64,
-    ) -> Assignment {
-        // One scheduler invocation = one memo epoch for service pricing.
-        self.estimator.begin_epoch();
-        let by_id: HashMap<GroupId, &RequestGroup> =
-            groups.iter().map(|g| (g.id, *g)).collect();
-        let mut orders: HashMap<InstanceId, Vec<GroupId>> = HashMap::new();
-        let mut unservable: Vec<(GroupId, u32)> = Vec::new();
-        let mut stats = SolveStats {
-            groups: groups.len(),
-            ..Default::default()
-        };
-
-        // 1. Pin executing groups to their instances' heads.
-        let mut pinned: HashMap<GroupId, InstanceId> = HashMap::new();
-        for v in instances {
-            let order = orders.entry(v.id).or_default();
-            if let Some(g) = v.executing {
-                if by_id.contains_key(&g) {
-                    order.push(g);
-                    pinned.insert(g, v.id);
-                }
-            }
-        }
-
-        // 2. Deadline-ordered greedy assignment of the rest.
-        let mut todo: Vec<&RequestGroup> = groups
-            .iter()
-            .copied()
-            .filter(|g| !pinned.contains_key(&g.id))
-            .collect();
-        todo.sort_by(|a, b| {
-            a.deadline()
-                .partial_cmp(&b.deadline())
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
-
-        // §Perf: incremental O(G·V) assignment — each candidate append is
-        // priced from cached per-queue state (accumulated wait, tail
-        // model) instead of re-walking the whole queue (which made the
-        // assignment quadratic in groups; see EXPERIMENTS.md §Perf).
-        let mut qstate: HashMap<InstanceId, QTail> = instances
-            .iter()
-            .map(|v| {
-                let mut st = QTail {
-                    wait: 0.0,
-                    tail_model: v.active_model,
-                    load: 0.0,
-                };
-                // Seed with the pinned executing group, if any.
-                if let Some(gid) = v.executing {
-                    if let Some(g) = by_id.get(&gid) {
-                        if let Some(perf) = v.perf_for.get(&g.model) {
-                            let (svc, _) = self.estimator.group_service(g, perf);
-                            st.wait += svc + perf.prefill_s;
-                            st.tail_model = Some(g.model);
-                            st.load += g.len() as f64;
-                        }
-                    }
-                }
-                (v.id, st)
-            })
-            .collect();
-
-        for g in todo {
-            let mut best: Option<(InstanceId, f64, f64, f64)> = None; // (id, pen, completion, load)
-            for v in instances {
-                let Some(perf) = v.perf_for.get(&g.model) else {
-                    continue;
-                };
-                let st = qstate[&v.id];
-                let (pen, completion) = self.append_score(&st, g, v, perf, now);
-                if candidate_improves(
-                    best.map(|(_, p, c, l)| (p, c, l)),
-                    pen,
-                    completion,
-                    st.load,
-                ) {
-                    best = Some((v.id, pen, completion, st.load));
-                }
-            }
-            match best {
-                Some((id, _, completion, _)) => {
-                    orders.get_mut(&id).unwrap().push(g.id);
-                    let st = qstate.get_mut(&id).unwrap();
-                    st.wait = completion;
-                    st.tail_model = Some(g.model);
-                    st.load += g.len() as f64;
-                }
-                None => {
-                    // No instance can serve this model (misconfigured
-                    // fleet): report separately with a large finite
-                    // penalty. Parking it on an arbitrary queue made
-                    // `queue_penalty` go infinite at the queue head,
-                    // rendering the penalty signal useless.
-                    unservable.push((g.id, g.len() as u32));
-                }
-            }
-        }
-
-        // 3. Per-queue ordering: affinity-EDF, optionally MILP-refined.
-        for v in instances {
-            let ids = orders.get_mut(&v.id).unwrap();
-            let all: Vec<&RequestGroup> =
-                ids.iter().filter_map(|id| by_id.get(id).copied()).collect();
-            let (head, mut rest) = split_pinned(&all, v.executing);
-            Self::affinity_order(&mut rest, v.active_model);
-
-            // `ExactMilp` is honored past `milp_max_groups` (the old
-            // code silently fell back to the heuristic there), bounded
-            // only by [`MILP_HARD_CAP`] — the node limit bounds the
-            // search but not tableau construction, and the heuristic-
-            // regression guard below keeps truncated searches harmless.
-            let use_milp = rest.len() >= 2
-                && match self.cfg.solver {
-                    SolverKind::Greedy => false,
-                    SolverKind::ExactMilp => rest.len() <= MILP_HARD_CAP,
-                    SolverKind::Auto => {
-                        rest.len() <= self.cfg.milp_max_groups.min(MILP_HARD_CAP)
-                    }
-                };
-
-            if use_milp {
-                if let Some((order, nodes)) = self.milp_order(&rest, v, now) {
-                    stats.milp_nodes += nodes;
-                    stats.used_milp = true;
-                    // Accept MILP order only if it doesn't regress the
-                    // heuristic (node-limit exhaustion can truncate search).
-                    let full_h: Vec<&RequestGroup> =
-                        head.iter().copied().chain(rest.iter().copied()).collect();
-                    let full_m: Vec<&RequestGroup> = head
-                        .iter()
-                        .copied()
-                        .chain(order.iter().map(|&i| rest[i]))
-                        .collect();
-                    if self.queue_penalty(&full_m, v, now)
-                        <= self.queue_penalty(&full_h, v, now) + 1e-9
-                    {
-                        rest = full_m[head.len()..].to_vec();
-                    }
-                }
-            }
-
-            let full: Vec<&RequestGroup> =
-                head.into_iter().chain(rest.into_iter()).collect();
-            *ids = full.iter().map(|g| g.id).collect();
-        }
-
-        // Penalty: per-group pricing via the same `reprice_queue` walk
-        // the delta path uses, so full and delta passes report one
-        // consistent signal (head-perf `queue_penalty` stays as the
-        // MILP acceptance metric above). The walk doubles as the cache
-        // rebuild; ExactMilp never feeds the delta path (it always
-        // bails to preserve exactness), so it skips the cache and
-        // prices with `queue_penalty` instead.
-        let mut total_penalty = if self.cfg.solver != SolverKind::ExactMilp {
-            self.store_cache(&orders, &by_id, instances, now, unservable.clone())
-        } else {
-            instances
-                .iter()
-                .map(|v| {
-                    let refs: Vec<&RequestGroup> = orders[&v.id]
-                        .iter()
-                        .filter_map(|id| by_id.get(id).copied())
-                        .collect();
-                    self.queue_penalty(&refs, v, now)
-                })
-                .sum()
-        };
-        total_penalty += unservable
-            .iter()
-            .map(|&(_, n)| UNSERVABLE_PENALTY_S * n as f64)
-            .sum::<f64>();
-
-        let mut unservable: Vec<GroupId> = unservable.into_iter().map(|(g, _)| g).collect();
-        unservable.sort_unstable();
-
-        Assignment {
-            feasible: total_penalty <= 1e-9,
-            total_penalty_s: total_penalty,
-            orders,
-            unservable,
-            stats,
-        }
-    }
-
-    /// Rebuild the incremental cache from a just-computed full plan:
-    /// price every queued group (cheap — the services were just
-    /// memoized), then run the shared [`reprice_queue`] walk per queue
-    /// for tail state and penalty. Returns the summed queue penalty so
-    /// full solves report the exact signal delta passes will maintain.
-    fn store_cache(
-        &self,
-        orders: &HashMap<InstanceId, Vec<GroupId>>,
-        by_id: &HashMap<GroupId, &RequestGroup>,
-        instances: &[InstanceView],
-        now: f64,
-        unservable: Vec<(GroupId, u32)>,
-    ) -> f64 {
-        let mut pricing = HashMap::with_capacity(by_id.len());
-        let mut queues = Vec::with_capacity(instances.len());
-        for v in instances {
-            let order = orders.get(&v.id).cloned().unwrap_or_default();
-            for gid in &order {
-                let Some(g) = by_id.get(gid) else { continue };
-                let Some(perf) = v.perf_for.get(&g.model) else {
-                    continue;
-                };
-                pricing.insert(g.id, self.price_group(g, perf, v.id));
-            }
-            queues.push(CachedQueue {
-                id: v.id,
-                order,
-                tail: QTail::default(),
-                penalty: 0.0,
-                priced_at: now,
-                viol_groups: 0,
-                active_model: v.active_model,
-                executing: v.executing,
-            });
-        }
-        // §Perf: each queue's repricing walk is independent of every
-        // other's (it reads only the shared pricing table), so the
-        // walks fan out over the shared scoped-thread primitive
-        // (`util::par_chunks_mut`, same gate and chunking as the
-        // engine's view refresh). Queues stay in instance order and the
-        // penalty is summed sequentially afterwards, so the result is
-        // bit-identical to the serial pass whatever the thread count.
-        let view_of: HashMap<InstanceId, &InstanceView> =
-            instances.iter().map(|v| (v.id, v)).collect();
-        let pricing_ref = &pricing;
-        crate::util::par_chunks_mut(&mut queues, self.cfg.threads, |cq| {
-            reprice_queue(cq, pricing_ref, view_of[&cq.id], now);
-        });
-        let total: f64 = queues.iter().map(|q| q.penalty).sum();
-        // With the delta path disabled there is no consumer for the
-        // plan cache — the walk above still ran (it *is* the penalty
-        // computation), but keep no state a disabled path could read.
-        if self.cfg.incremental {
-            *self.cache.borrow_mut() = Some(SchedCache {
-                queues,
-                pricing,
-                unservable,
-            });
-        }
-        total
-    }
-
-    /// Incremental pass: patch the cached plan with one pass's dirty
-    /// set instead of re-solving the whole group table.
-    ///
-    /// Returns `None` when a full solve is required — no cache yet, the
-    /// instance set changed (failures), the solver demands exactness, or
-    /// dirtiness exceeds `incremental_dirty_frac` — and the caller then
-    /// runs [`Self::schedule`], which refreshes the cache.
-    ///
-    /// Cost is O(dirty × instances + touched queue lengths); clean
-    /// queues keep their order and tail state, and their last-priced
-    /// penalty is *re-anchored* to `now` in constant time: each
-    /// violating group's penalty grows exactly one second per second,
-    /// so the queue's penalty advances by `(now − priced_at) ×
-    /// viol_groups` without a walk. (Groups that newly *cross into*
-    /// violation between walks are still picked up only when the queue
-    /// is touched — the remaining, second-order amortization.)
-    /// Per-queue ordering on touched queues is greedy affinity-EDF
-    /// only; `Auto`-mode MILP refinement re-applies at the next full
-    /// solve.
-    pub fn try_schedule_delta(
-        &self,
-        delta: &SchedDelta,
-        instances: &[InstanceView],
-        now: f64,
-    ) -> Option<Assignment> {
-        if !self.cfg.incremental || self.cfg.solver == SolverKind::ExactMilp {
-            return None;
-        }
-        let mut guard = self.cache.borrow_mut();
-        let cache = guard.as_mut()?;
-        if cache.queues.len() != instances.len()
-            || cache.queues.iter().zip(instances).any(|(c, v)| c.id != v.id)
-        {
-            return None;
-        }
-        let changed = delta.dirty.len() + delta.removed.len();
-        if changed as f64 > self.cfg.incremental_dirty_frac * delta.total_groups.max(1) as f64 {
-            return None;
-        }
-        let SchedCache {
-            queues,
-            pricing,
-            unservable,
-        } = cache;
-
-        // Executing groups stay pinned at their heads even when dirty.
-        let pinned: HashMap<GroupId, usize> = instances
-            .iter()
-            .enumerate()
-            .filter_map(|(k, v)| v.executing.map(|g| (g, k)))
-            .collect();
-
-        // Everything leaving its current queue position.
-        let mut gone: HashSet<GroupId> = delta.removed.iter().copied().collect();
-        for g in &delta.dirty {
-            if !pinned.contains_key(&g.id) {
-                gone.insert(g.id);
-            }
-        }
-        unservable.retain(|(g, _)| !gone.contains(g));
-
-        let mut touched = vec![false; instances.len()];
-        let idx_of: HashMap<InstanceId, usize> = instances
-            .iter()
-            .enumerate()
-            .map(|(k, v)| (v.id, k))
-            .collect();
-
-        // Only queues that actually hold a departing group need their
-        // order rewritten — the owner index keeps this O(dirty) instead
-        // of O(total groups) (see `GroupPricing::owner`).
-        for gid in &gone {
-            if let Some(p) = pricing.get(gid) {
-                if let Some(&k) = idx_of.get(&p.owner) {
-                    touched[k] = true;
-                }
-            }
-        }
-        for gid in &delta.removed {
-            pricing.remove(gid);
-        }
-
-        // 1. Drop departing groups; sync pinning and active-model state.
-        for (k, v) in instances.iter().enumerate() {
-            let cq = &mut queues[k];
-            if touched[k] {
-                cq.order.retain(|g| !gone.contains(g));
-            }
-            if cq.executing != v.executing {
-                cq.executing = v.executing;
-                touched[k] = true;
-            }
-            if let Some(e) = v.executing {
-                if cq.order.first() != Some(&e) && cq.order.contains(&e) {
-                    cq.order.retain(|&g| g != e);
-                    cq.order.insert(0, e);
-                    touched[k] = true;
-                }
-            }
-            if cq.active_model != v.active_model {
-                cq.active_model = v.active_model;
-                touched[k] = true; // head-swap pricing changed
-            }
-        }
-
-        // 2. Re-price pinned dirty groups in place.
-        for g in &delta.dirty {
-            let Some(&k) = pinned.get(&g.id) else { continue };
-            touched[k] = true;
-            if let Some(perf) = instances[k].perf_for.get(&g.model) {
-                pricing.insert(g.id, self.price_group(g, perf, instances[k].id));
-            }
-            if !queues[k].order.contains(&g.id) {
-                queues[k].order.insert(0, g.id);
-            }
-        }
-
-        // 2.5 Refresh tail state of every queue touched so far, *before*
-        //     scoring insertions: without this, step 3 would price
-        //     candidates against tails that still include the groups
-        //     just removed above, steering arrivals away from queues
-        //     that freed capacity this very pass.
-        for (k, v) in instances.iter().enumerate() {
-            if touched[k] {
-                reprice_queue(&mut queues[k], pricing, v, now);
-            }
-        }
-
-        // 3. Greedy re-insertion of dirty groups in deadline order —
-        //    identical candidate scoring to the full solve, priced
-        //    against cached queue tails.
-        let mut todo: Vec<&RequestGroup> = delta
-            .dirty
-            .iter()
-            .copied()
-            .filter(|g| !pinned.contains_key(&g.id))
-            .collect();
-        todo.sort_by(|a, b| {
-            a.deadline()
-                .partial_cmp(&b.deadline())
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
-        for g in todo {
-            let mut best: Option<(usize, f64, f64, f64)> = None;
-            for (k, v) in instances.iter().enumerate() {
-                let Some(perf) = v.perf_for.get(&g.model) else {
-                    continue;
-                };
-                let t = queues[k].tail;
-                let (pen, completion) = self.append_score(&t, g, v, perf, now);
-                if candidate_improves(
-                    best.map(|(_, p, c, l)| (p, c, l)),
-                    pen,
-                    completion,
-                    t.load,
-                ) {
-                    best = Some((k, pen, completion, t.load));
-                }
-            }
-            match best {
-                Some((k, _, completion, _)) => {
-                    let v = &instances[k];
-                    let perf = v.perf_for[&g.model];
-                    pricing.insert(g.id, self.price_group(g, &perf, v.id));
-                    let cq = &mut queues[k];
-                    cq.order.push(g.id);
-                    cq.tail.wait = completion;
-                    cq.tail.tail_model = Some(g.model);
-                    cq.tail.load += g.len() as f64;
-                    touched[k] = true;
-                }
-                None => unservable.push((g.id, g.len() as u32)),
-            }
-        }
-
-        // 4. Reorder + re-price touched queues from cached pricing;
-        //    re-anchor untouched queues' penalties to `now` via the
-        //    constant-time epoch offset (violating groups accrue one
-        //    second of penalty per second — no walk needed).
-        for (k, v) in instances.iter().enumerate() {
-            if touched[k] {
-                let cq = &mut queues[k];
-                reorder_cached(cq, pricing);
-                reprice_queue(cq, pricing, v, now);
-            } else {
-                let cq = &mut queues[k];
-                let dt = now - cq.priced_at;
-                if dt > 0.0 {
-                    cq.penalty += dt * cq.viol_groups as f64;
-                    cq.priced_at = now;
-                }
-            }
-        }
-
-        // 5. Assemble the patch: orders only for queues that changed.
-        let mut orders = HashMap::new();
-        for (k, cq) in queues.iter().enumerate() {
-            if touched[k] {
-                orders.insert(cq.id, cq.order.clone());
-            }
-        }
-        let mut total_penalty: f64 = queues.iter().map(|q| q.penalty).sum();
-        total_penalty += unservable
-            .iter()
-            .map(|&(_, n)| UNSERVABLE_PENALTY_S * n as f64)
-            .sum::<f64>();
-        let mut unservable_ids: Vec<GroupId> =
-            unservable.iter().map(|&(g, _)| g).collect();
-        unservable_ids.sort_unstable();
-        let touched_instances = touched.iter().filter(|&&t| t).count();
-        Some(Assignment {
-            feasible: total_penalty <= 1e-9,
-            total_penalty_s: total_penalty,
-            orders,
-            unservable: unservable_ids,
-            stats: SolveStats {
-                groups: delta.total_groups,
-                incremental: true,
-                dirty: delta.dirty.len(),
-                touched_instances,
-                ..Default::default()
-            },
-        })
-    }
-
-    /// Exact ordering of `groups` on instance `v` via the §7 MILP.
-    /// Returns the permutation (indices into `groups`) and node count.
-    pub fn milp_order(
-        &self,
-        groups: &[&RequestGroup],
-        v: &InstanceView,
-        now: f64,
-    ) -> Option<(Vec<usize>, usize)> {
-        let n = groups.len();
-        if n == 0 {
-            return Some((Vec::new(), 0));
-        }
-        let perf = v.perf_for.get(&groups[0].model)?;
-        // Per-group constants.
-        let svc: Vec<f64> = groups
-            .iter()
-            .map(|g| {
-                let (m, _) = self.estimator.group_service(g, perf);
-                m + perf.prefill_s
-            })
-            .collect();
-        let budget: Vec<f64> = groups.iter().map(|g| g.deadline() - now).collect();
-        let model_val: Vec<f64> = groups.iter().map(|g| g.model.0 as f64 + 1.0).collect();
-        let active_val = v.active_model.map(|m| m.0 as f64 + 1.0).unwrap_or(0.0);
-        let swap_s = groups
-            .iter()
-            .map(|g| v.swap_s(g.model))
-            .fold(0.0_f64, f64::max); // uniformized S (see module docs)
-        let big_m = model_val.iter().fold(active_val, |a, &b| a.max(b)) + 2.0;
-
-        // Variable layout.
-        let x = |i: usize, j: usize| i * n + j;
-        let m_of = |j: usize| n * n + j;
-        let t_of = |j: usize| n * n + n + j;
-        let w_of = |j: usize| n * n + 2 * n + j;
-        let v_of = |j: usize| n * n + 3 * n + j;
-        let nv = n * n + 4 * n;
-
-        let mut lp = Lp::new(nv);
-        // Objective (Eq. 13): minimize Σ v_j + tiny swap regularizer.
-        let mut obj = vec![0.0; nv];
-        for j in 0..n {
-            obj[v_of(j)] = -1.0;
-            obj[t_of(j)] = -0.001 * swap_s.max(1e-3);
-        }
-        // Tie-break: when several orderings are penalty-free, prefer
-        // placing larger-budget groups later (EDF within feasibility).
-        let max_budget = budget.iter().cloned().fold(1.0_f64, f64::max).max(1.0);
-        for i in 0..n {
-            for j in 0..n {
-                obj[x(i, j)] = 1e-5 * (budget[i] / max_budget) * j as f64 / n as f64;
-            }
-        }
-        lp.set_objective(obj);
-
-        // Eq. 6: assignment bijection.
-        for i in 0..n {
-            let mut row = vec![0.0; nv];
-            for j in 0..n {
-                row[x(i, j)] = 1.0;
-            }
-            lp.add(row, Cmp::Eq, 1.0);
-        }
-        for j in 0..n {
-            let mut row = vec![0.0; nv];
-            for i in 0..n {
-                row[x(i, j)] = 1.0;
-            }
-            lp.add(row, Cmp::Eq, 1.0);
-        }
-        // Eq. 7: m_j = Σ_i model_i x_{i,j}.
-        for j in 0..n {
-            let mut row = vec![0.0; nv];
-            for i in 0..n {
-                row[x(i, j)] = model_val[i];
-            }
-            row[m_of(j)] = -1.0;
-            lp.add(row, Cmp::Eq, 0.0);
-        }
-        // Eq. 9 via big-M: |m_j − m_{j−1}| ≤ M t_j (m_{-1} = active).
-        for j in 0..n {
-            let mut r1 = vec![0.0; nv];
-            let mut r2 = vec![0.0; nv];
-            r1[m_of(j)] = 1.0;
-            r2[m_of(j)] = -1.0;
-            let rhs = if j == 0 { active_val } else { 0.0 };
-            if j > 0 {
-                r1[m_of(j - 1)] = -1.0;
-                r2[m_of(j - 1)] = 1.0;
-            }
-            r1[t_of(j)] = -big_m;
-            r2[t_of(j)] = -big_m;
-            lp.add(r1, Cmp::Le, rhs);
-            lp.add(r2, Cmp::Le, -rhs);
-        }
-        // Eq. 10: w_0 = S·t_0; w_j = w_{j−1} + Σ_i svc_i x_{i,j−1} + S·t_j.
-        for j in 0..n {
-            let mut row = vec![0.0; nv];
-            row[w_of(j)] = 1.0;
-            row[t_of(j)] = -swap_s;
-            if j > 0 {
-                row[w_of(j - 1)] = -1.0;
-                for i in 0..n {
-                    row[x(i, j - 1)] = -svc[i];
-                }
-            }
-            lp.add(row, Cmp::Eq, 0.0);
-        }
-        // Eq. 11/12 softened: w_j + Σ_i (svc_i − budget_i) x_{i,j} − v_j ≤ 0.
-        for j in 0..n {
-            let mut row = vec![0.0; nv];
-            row[w_of(j)] = 1.0;
-            for i in 0..n {
-                row[x(i, j)] = svc[i] - budget[i];
-            }
-            row[v_of(j)] = -1.0;
-            lp.add(row, Cmp::Le, 0.0);
-        }
-
-        let mut binaries: Vec<usize> = (0..n * n).collect();
-        binaries.extend((0..n).map(t_of));
-        let mut milp = Milp::new(lp, binaries);
-        milp.node_limit = self.cfg.node_limit;
-        match milp.solve() {
-            MilpResult::Optimal { x: sol, nodes, .. } => {
-                let mut perm = vec![0usize; n];
-                for j in 0..n {
-                    for i in 0..n {
-                        if sol[x(i, j)] > 0.5 {
-                            perm[j] = i;
-                        }
-                    }
-                }
-                Some((perm, nodes))
-            }
-            MilpResult::Infeasible => None,
-        }
-    }
-}
-
-/// The better-candidate predicate shared by both greedy assignment
-/// loops: lower penalty, then earlier completion, then lighter load
-/// (1e-9 epsilons throughout). `best` carries (pen, completion, load).
-fn candidate_improves(best: Option<(f64, f64, f64)>, pen: f64, completion: f64, load: f64) -> bool {
-    match best {
-        None => true,
-        Some((bp, bc, bl)) => {
-            pen < bp - 1e-9
-                || ((pen - bp).abs() < 1e-9
-                    && (completion < bc - 1e-9
-                        || ((completion - bc).abs() < 1e-9 && load < bl)))
-        }
-    }
-}
-
-/// The affinity-EDF sort key: (cluster deadline, non-active-model flag,
-/// model id, deadline, group id).
-type AffinityKey = (f64, bool, ModelId, f64, GroupId);
-
-/// The one comparator behind both ordering paths — `affinity_order`
-/// (full solve, over groups) and `reorder_cached` (delta path, over the
-/// pricing table). Keeping it in one place is what guarantees the two
-/// paths produce the same plan for the same state.
-fn affinity_cmp(a: &AffinityKey, b: &AffinityKey) -> std::cmp::Ordering {
-    a.0.partial_cmp(&b.0)
-        .unwrap()
-        .then(a.1.cmp(&b.1))
-        .then(a.2.cmp(&b.2))
-        .then(a.3.partial_cmp(&b.3).unwrap())
-        .then(a.4.cmp(&b.4))
-}
-
-/// Affinity-EDF over cached pricing — driven by the pricing table so
-/// the delta path never touches the group table. The pinned executing
-/// head, if present, is left in place.
-fn reorder_cached(cq: &mut CachedQueue, pricing: &HashMap<GroupId, GroupPricing>) {
-    let start =
-        usize::from(cq.executing.is_some() && cq.order.first() == cq.executing.as_ref());
-    let active = cq.active_model;
-    let rest = &mut cq.order[start..];
-    let mut cluster_deadline: HashMap<ModelId, f64> = HashMap::new();
-    for gid in rest.iter() {
-        if let Some(p) = pricing.get(gid) {
-            let e = cluster_deadline.entry(p.model).or_insert(f64::INFINITY);
-            *e = e.min(p.deadline);
-        }
-    }
-    let key = |gid: &GroupId| -> AffinityKey {
-        match pricing.get(gid) {
-            Some(p) => (
-                cluster_deadline
-                    .get(&p.model)
-                    .copied()
-                    .unwrap_or(f64::INFINITY),
-                Some(p.model) != active,
-                p.model,
-                p.deadline,
-                *gid,
-            ),
-            // Unpriced ids (shouldn't happen) sink to the back, stably.
-            None => (f64::INFINITY, true, ModelId(u32::MAX), f64::INFINITY, *gid),
-        }
-    };
-    rest.sort_by(|a, b| affinity_cmp(&key(a), &key(b)));
-}
-
-/// Walk a cached order front-to-back, recomputing the queue's tail
-/// state (what a greedy append sees) and its penalty from the pricing
-/// table alone. Also records the pricing epoch (`priced_at`) and the
-/// violating-group count — the slope the delta path uses to re-anchor
-/// this queue's penalty to a later `now` in constant time.
-fn reprice_queue(
-    cq: &mut CachedQueue,
-    pricing: &HashMap<GroupId, GroupPricing>,
-    v: &InstanceView,
-    now: f64,
-) {
-    let mut tail = QTail {
-        wait: 0.0,
-        tail_model: v.active_model,
-        load: 0.0,
-    };
-    let mut penalty = 0.0;
-    let mut viol = 0u32;
-    for gid in &cq.order {
-        let Some(p) = pricing.get(gid) else { continue };
-        if tail.tail_model != Some(p.model) {
-            tail.wait += v.swap_s(p.model);
-        }
-        tail.tail_model = Some(p.model);
-        let pen = (tail.wait + p.svc_s - (p.deadline - now)).max(0.0);
-        if pen > 0.0 {
-            viol += 1;
-        }
-        penalty += pen;
-        tail.wait += p.svc_s;
-        tail.load += p.len as f64;
-    }
-    cq.tail = tail;
-    cq.penalty = penalty;
-    cq.priced_at = now;
-    cq.viol_groups = viol;
-}
-
-/// Split a queue into (pinned executing head, reorderable rest).
-fn split_pinned<'a>(
-    all: &[&'a RequestGroup],
-    executing: Option<GroupId>,
-) -> (Vec<&'a RequestGroup>, Vec<&'a RequestGroup>) {
-    let mut head = Vec::new();
-    let mut rest = Vec::new();
-    for &g in all {
-        if Some(g.id) == executing {
-            head.push(g);
-        } else {
-            rest.push(g);
-        }
-    }
-    (head, rest)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::backend::{GpuKind, ModelCatalog};
-    use crate::coordinator::rwt::ProfileTable;
-    use crate::workload::{SloClass, Trace, WorkloadSpec};
-    use std::collections::VecDeque;
-
-    fn estimator() -> RwtEstimator {
-        let spec = WorkloadSpec::w_a(ModelId(0), 100.0, 2000);
-        let trace = Trace::generate(&spec, 11);
-        RwtEstimator::new(ProfileTable::from_trace(&trace))
-    }
-
-    fn view(id: u32, models: &[u32], active: Option<u32>) -> InstanceView {
-        let catalog = ModelCatalog::paper_multi_model();
-        let mut perf_for = HashMap::new();
-        let mut swap_time = HashMap::new();
-        for &m in models {
-            let p = PerfModel::profile(catalog.get(ModelId(m)), GpuKind::A100, 161.0);
-            perf_for.insert(ModelId(m), p);
-            swap_time.insert(ModelId(m), p.swap_cpu_gpu_s);
-        }
-        InstanceView {
-            id: InstanceId(id),
-            active_model: active.map(ModelId),
-            perf_for,
-            swap_time,
-            executing: None,
-        }
-    }
-
-    fn grp(id: u64, model: u32, n: usize, arrival: f64, slo: f64) -> RequestGroup {
-        RequestGroup {
-            id: GroupId(id),
-            model: ModelId(model),
-            class: if slo <= 20.0 {
-                SloClass::Interactive
-            } else {
-                SloClass::Batch1
-            },
-            slo_s: slo,
-            earliest_arrival_s: arrival,
-            members: VecDeque::from_iter(0..n as u64),
-            mega: false,
-        }
-    }
-
-    #[test]
-    fn affinity_order_groups_same_model_together() {
-        let g1 = grp(1, 0, 8, 0.0, 60.0);
-        let g2 = grp(2, 1, 8, 1.0, 61.0);
-        let g3 = grp(3, 0, 8, 2.0, 62.0);
-        let g4 = grp(4, 1, 8, 3.0, 63.0);
-        let mut v = vec![&g4, &g3, &g2, &g1];
-        GlobalScheduler::affinity_order(&mut v, None);
-        let models: Vec<u32> = v.iter().map(|g| g.model.0).collect();
-        // Same-model groups contiguous ⇒ exactly one transition.
-        let transitions = models.windows(2).filter(|w| w[0] != w[1]).count();
-        assert_eq!(transitions, 1, "order {models:?}");
-    }
-
-    #[test]
-    fn tight_slo_scheduled_ahead() {
-        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
-        let big = grp(1, 0, 200, 0.0, 3600.0);
-        let tight = grp(2, 0, 4, 0.0, 20.0);
-        let views = vec![view(0, &[0], Some(0))];
-        let a = sched.schedule(&[&big, &tight], &views, 0.0);
-        let order = &a.orders[&InstanceId(0)];
-        assert_eq!(order[0], GroupId(2), "interactive group must lead");
-    }
-
-    #[test]
-    fn multi_instance_load_balances() {
-        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
-        let groups: Vec<RequestGroup> =
-            (0..8).map(|i| grp(i, 0, 64, 0.0, 60.0)).collect();
-        let refs: Vec<&RequestGroup> = groups.iter().collect();
-        let views = vec![view(0, &[0], Some(0)), view(1, &[0], Some(0))];
-        let a = sched.schedule(&refs, &views, 0.0);
-        let l0 = a.orders[&InstanceId(0)].len();
-        let l1 = a.orders[&InstanceId(1)].len();
-        assert_eq!(l0 + l1, 8);
-        assert!(l0 >= 2 && l1 >= 2, "unbalanced {l0}/{l1}");
-    }
-
-    #[test]
-    fn respects_model_servability() {
-        // Llama-70B (model 2) can only run on instance 1.
-        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
-        let groups = vec![grp(1, 2, 8, 0.0, 3600.0), grp(2, 0, 8, 0.0, 3600.0)];
-        let refs: Vec<&RequestGroup> = groups.iter().collect();
-        let views = vec![view(0, &[0], Some(0)), view(1, &[0, 2], None)];
-        let a = sched.schedule(&refs, &views, 0.0);
-        assert!(a.orders[&InstanceId(1)].contains(&GroupId(1)));
-        assert!(!a.orders[&InstanceId(0)].contains(&GroupId(1)));
-    }
-
-    #[test]
-    fn pinned_group_stays_at_head() {
-        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
-        let executing = grp(7, 0, 32, 0.0, 3600.0);
-        let urgent = grp(8, 0, 4, 0.0, 10.0);
-        let mut v = view(0, &[0], Some(0));
-        v.executing = Some(GroupId(7));
-        let a = sched.schedule(&[&executing, &urgent], &[v], 0.0);
-        let order = &a.orders[&InstanceId(0)];
-        assert_eq!(order[0], GroupId(7), "executing group pinned");
-        assert_eq!(order[1], GroupId(8));
-    }
-
-    #[test]
-    fn repeated_schedules_reuse_service_memo() {
-        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
-        // 8 groups: enough to stay on the greedy path (no MILP) while
-        // still exercising the assignment + penalty pricing.
-        let groups: Vec<RequestGroup> =
-            (0..8).map(|i| grp(i, 0, 32, 0.0, 600.0)).collect();
-        let refs: Vec<&RequestGroup> = groups.iter().collect();
-        let views = vec![view(0, &[0], Some(0))];
-        let a = sched.schedule(&refs, &views, 0.0);
-        let b = sched.schedule(&refs, &views, 0.0);
-        assert_eq!(a.orders, b.orders, "identical inputs, identical plan");
-        let (hits, misses) = sched.estimator.memo_stats();
-        assert!(hits > 0, "second invocation must hit the memo");
-        assert!(
-            hits >= misses,
-            "unchanged groups should mostly hit: {hits} hits / {misses} misses"
-        );
-    }
-
-    #[test]
-    fn milp_orders_by_deadline_single_model() {
-        let sched = GlobalScheduler::new(
-            SchedulerConfig {
-                solver: SolverKind::ExactMilp,
-                milp_max_groups: 4,
-                node_limit: 50_000,
-                ..Default::default()
-            },
-            estimator(),
-        );
-        let g1 = grp(1, 0, 16, 0.0, 3600.0);
-        let g2 = grp(2, 0, 16, 0.0, 30.0);
-        let g3 = grp(3, 0, 16, 0.0, 600.0);
-        let v = view(0, &[0], Some(0));
-        let refs = vec![&g1, &g2, &g3];
-        let (perm, _) = sched.milp_order(&refs, &v, 0.0).unwrap();
-        // Tightest (g2) first.
-        assert_eq!(perm[0], 1, "perm {perm:?}");
-    }
-
-    #[test]
-    fn milp_avoids_needless_swaps() {
-        // Two models, relaxed SLOs: optimal order clusters by model
-        // (1 swap), not interleaved (3 swaps).
-        let sched = GlobalScheduler::new(
-            SchedulerConfig {
-                solver: SolverKind::ExactMilp,
-                milp_max_groups: 4,
-                node_limit: 50_000,
-                ..Default::default()
-            },
-            estimator(),
-        );
-        let g1 = grp(1, 0, 16, 0.0, 7200.0);
-        let g2 = grp(2, 3, 16, 0.0, 7200.0);
-        let g3 = grp(3, 0, 16, 0.0, 7200.0);
-        let g4 = grp(4, 3, 16, 0.0, 7200.0);
-        let v = view(0, &[0, 3], Some(0));
-        let refs = vec![&g1, &g2, &g3, &g4];
-        let (perm, _) = sched.milp_order(&refs, &v, 0.0).unwrap();
-        let models: Vec<u32> = perm.iter().map(|&i| refs[i].model.0).collect();
-        let transitions = models.windows(2).filter(|w| w[0] != w[1]).count();
-        assert_eq!(transitions, 1, "models {models:?}");
-    }
-
-    #[test]
-    fn infeasible_flagged_when_capacity_exceeded() {
-        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
-        // Enormous backlog with tiny SLOs.
-        let groups: Vec<RequestGroup> =
-            (0..20).map(|i| grp(i, 0, 256, 0.0, 5.0)).collect();
-        let refs: Vec<&RequestGroup> = groups.iter().collect();
-        let views = vec![view(0, &[0], Some(0))];
-        let a = sched.schedule(&refs, &views, 0.0);
-        assert!(!a.feasible);
-        assert!(a.total_penalty_s > 0.0);
-    }
-
-    #[test]
-    fn affinity_order_active_model_cluster_leads_on_deadline_tie() {
-        // Regression: the active-model preference used to sit *after*
-        // the raw model-id tie-break, making it unreachable — deadline-
-        // tied clusters ordered by model id and swapped needlessly.
-        let g1 = grp(1, 0, 8, 0.0, 60.0);
-        let g2 = grp(2, 1, 8, 0.0, 60.0); // same cluster deadline as model 0
-        let g3 = grp(3, 0, 8, 0.0, 60.0);
-        let g4 = grp(4, 1, 8, 0.0, 60.0);
-        let mut v = vec![&g1, &g2, &g3, &g4];
-        GlobalScheduler::affinity_order(&mut v, Some(ModelId(1)));
-        let models: Vec<u32> = v.iter().map(|g| g.model.0).collect();
-        assert_eq!(
-            models,
-            vec![1, 1, 0, 0],
-            "active model-1 cluster must lead on a deadline tie"
-        );
-    }
-
-    #[test]
-    fn unservable_group_reported_with_finite_penalty() {
-        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
-        // Model 2 (Llama-70B) is not servable by the only instance.
-        let lost = grp(1, 2, 8, 0.0, 60.0);
-        let ok = grp(2, 0, 8, 0.0, 3600.0);
-        let views = vec![view(0, &[0], Some(0))];
-        let a = sched.schedule(&[&lost, &ok], &views, 0.0);
-        assert!(
-            a.total_penalty_s.is_finite(),
-            "unservable group must not poison the penalty signal"
-        );
-        assert!(a.total_penalty_s >= UNSERVABLE_PENALTY_S);
-        assert!(!a.feasible);
-        assert_eq!(a.unservable, vec![GroupId(1)]);
-        assert!(
-            !a.orders[&InstanceId(0)].contains(&GroupId(1)),
-            "unservable group must not be parked on a queue"
-        );
-        assert!(a.orders[&InstanceId(0)].contains(&GroupId(2)));
-    }
-
-    #[test]
-    fn exact_milp_honored_beyond_milp_max_groups() {
-        // Regression: ExactMilp used to silently fall back to the
-        // heuristic when a queue exceeded `milp_max_groups`.
-        let sched = GlobalScheduler::new(
-            SchedulerConfig {
-                solver: SolverKind::ExactMilp,
-                milp_max_groups: 2,
-                node_limit: 50_000,
-                ..Default::default()
-            },
-            estimator(),
-        );
-        let groups: Vec<RequestGroup> =
-            (0..4).map(|i| grp(i, 0, 16, 0.0, 600.0 + i as f64)).collect();
-        let refs: Vec<&RequestGroup> = groups.iter().collect();
-        let views = vec![view(0, &[0], Some(0))];
-        let a = sched.schedule(&refs, &views, 0.0);
-        assert!(
-            a.stats.used_milp,
-            "ExactMilp must refine queues larger than milp_max_groups"
-        );
-    }
-
-    /// Deterministic Fisher–Yates driven by a splitmix-style LCG.
-    fn lcg_shuffle<T>(v: &mut [T], seed: &mut u64) {
-        for i in (1..v.len()).rev() {
-            *seed = seed
-                .wrapping_mul(6364136223846793005)
-                .wrapping_add(1442695040888963407);
-            let j = ((*seed >> 33) as usize) % (i + 1);
-            v.swap(i, j);
-        }
-    }
-
-    #[test]
-    fn schedule_invariant_to_group_slice_order() {
-        // Property: the plan is a function of the group *set*, not the
-        // iteration order of the slice handed in (which comes from a
-        // HashMap in the engine).
-        let sched = GlobalScheduler::new(
-            SchedulerConfig {
-                solver: SolverKind::Greedy,
-                ..Default::default()
-            },
-            estimator(),
-        );
-        let groups: Vec<RequestGroup> = (0..24)
-            .map(|i| {
-                let slo = 30.0 + (i % 7) as f64 * 200.0;
-                grp(i, (i % 2) as u32 * 3, 16 + (i % 5) as usize, i as f64, slo)
-            })
-            .collect();
-        let views = vec![
-            view(0, &[0, 3], Some(0)),
-            view(1, &[0, 3], Some(3)),
-            view(2, &[0], None),
-        ];
-        let base_refs: Vec<&RequestGroup> = groups.iter().collect();
-        let base = sched.schedule(&base_refs, &views, 0.0);
-        let mut seed = 0xC0FFEE_u64;
-        for _ in 0..5 {
-            let mut refs = base_refs.clone();
-            lcg_shuffle(&mut refs, &mut seed);
-            let a = sched.schedule(&refs, &views, 0.0);
-            assert_eq!(a.orders, base.orders, "plan depends on slice order");
-            assert!((a.total_penalty_s - base.total_penalty_s).abs() < 1e-9);
-        }
-    }
-
-    #[test]
-    fn delta_without_cache_falls_back_to_full() {
-        let sched = GlobalScheduler::new(SchedulerConfig::default(), estimator());
-        let views = vec![view(0, &[0], Some(0))];
-        let d = SchedDelta::default();
-        assert!(sched.try_schedule_delta(&d, &views, 0.0).is_none());
-    }
-
-    #[test]
-    fn delta_with_empty_dirty_set_changes_nothing() {
-        let sched = GlobalScheduler::new(
-            SchedulerConfig {
-                solver: SolverKind::Greedy,
-                ..Default::default()
-            },
-            estimator(),
-        );
-        let groups: Vec<RequestGroup> =
-            (0..8).map(|i| grp(i, 0, 32, 0.0, 60.0 + i as f64)).collect();
-        let refs: Vec<&RequestGroup> = groups.iter().collect();
-        let views = vec![view(0, &[0], Some(0)), view(1, &[0], Some(0))];
-        let full = sched.schedule(&refs, &views, 0.0);
-        let d = SchedDelta {
-            total_groups: groups.len(),
-            ..Default::default()
-        };
-        let a = sched
-            .try_schedule_delta(&d, &views, 0.0)
-            .expect("cache is warm");
-        assert!(a.stats.incremental);
-        assert!(
-            a.orders.is_empty(),
-            "identical inputs must produce an empty patch"
-        );
-        assert_eq!(
-            sched.cached_orders().unwrap(),
-            full.orders,
-            "cached plan must still equal the full solve"
-        );
-    }
-
-    #[test]
-    fn delta_inserts_new_group_like_a_full_solve() {
-        let mk_sched = || {
-            GlobalScheduler::new(
-                SchedulerConfig {
-                    solver: SolverKind::Greedy,
-                    ..Default::default()
-                },
-                estimator(),
-            )
-        };
-        let mut groups: Vec<RequestGroup> =
-            (0..6).map(|i| grp(i, 0, 32, 0.0, 100.0 + 50.0 * i as f64)).collect();
-        let views = vec![view(0, &[0], Some(0))];
-        // Warm the incremental scheduler on the first 6 groups, then
-        // deliver group 6 via the delta path.
-        let inc = mk_sched();
-        let refs: Vec<&RequestGroup> = groups.iter().collect();
-        inc.schedule(&refs, &views, 0.0);
-        groups.push(grp(6, 0, 32, 0.0, 900.0));
-        let d = SchedDelta {
-            dirty: vec![groups.last().unwrap()],
-            removed: vec![],
-            total_groups: groups.len(),
-        };
-        let a = inc.try_schedule_delta(&d, &views, 0.0).expect("warm cache");
-        assert!(a.stats.incremental);
-        assert_eq!(a.stats.dirty, 1);
-        // A fresh full solve over all 7 groups lands on the same plan.
-        let full = mk_sched();
-        let refs: Vec<&RequestGroup> = groups.iter().collect();
-        let b = full.schedule(&refs, &views, 0.0);
-        assert_eq!(inc.cached_orders().unwrap(), b.orders);
-    }
-
-    #[test]
-    fn delta_invariant_to_dirty_iteration_order() {
-        let sched = GlobalScheduler::new(
-            SchedulerConfig {
-                solver: SolverKind::Greedy,
-                incremental_dirty_frac: 1.0,
-                ..Default::default()
-            },
-            estimator(),
-        );
-        let base: Vec<RequestGroup> =
-            (0..10).map(|i| grp(i, 0, 32, 0.0, 60.0 + 10.0 * i as f64)).collect();
-        let views = vec![view(0, &[0], Some(0)), view(1, &[0], Some(0))];
-        let fresh: Vec<RequestGroup> = (10..14)
-            .map(|i| grp(i, 0, 32, 0.0, 45.0 + 5.0 * i as f64))
-            .collect();
-        let run = |dirty: Vec<&RequestGroup>| {
-            let refs: Vec<&RequestGroup> = base.iter().collect();
-            sched.schedule(&refs, &views, 0.0);
-            let d = SchedDelta {
-                dirty,
-                removed: vec![],
-                total_groups: base.len() + fresh.len(),
-            };
-            sched.try_schedule_delta(&d, &views, 0.0).expect("warm");
-            sched.cached_orders().unwrap()
-        };
-        let fwd = run(fresh.iter().collect());
-        let rev = run(fresh.iter().rev().collect());
-        assert_eq!(fwd, rev, "delta plan depends on dirty iteration order");
-    }
-
-    #[test]
-    fn delta_removed_group_leaves_its_queue() {
-        let sched = GlobalScheduler::new(
-            SchedulerConfig {
-                solver: SolverKind::Greedy,
-                ..Default::default()
-            },
-            estimator(),
-        );
-        let groups: Vec<RequestGroup> =
-            (0..6).map(|i| grp(i, 0, 32, 0.0, 60.0 + i as f64)).collect();
-        let refs: Vec<&RequestGroup> = groups.iter().collect();
-        let views = vec![view(0, &[0], Some(0))];
-        sched.schedule(&refs, &views, 0.0);
-        let d = SchedDelta {
-            dirty: vec![],
-            removed: vec![GroupId(3)],
-            total_groups: 5,
-        };
-        let a = sched.try_schedule_delta(&d, &views, 0.0).expect("warm");
-        let order = &a.orders[&InstanceId(0)];
-        assert!(!order.contains(&GroupId(3)));
-        assert_eq!(order.len(), 5);
-    }
-
-    #[test]
-    fn delta_dirtiness_beyond_threshold_forces_full_solve() {
-        let sched = GlobalScheduler::new(
-            SchedulerConfig {
-                solver: SolverKind::Greedy,
-                incremental_dirty_frac: 0.25,
-                ..Default::default()
-            },
-            estimator(),
-        );
-        let groups: Vec<RequestGroup> =
-            (0..8).map(|i| grp(i, 0, 32, 0.0, 60.0 + i as f64)).collect();
-        let refs: Vec<&RequestGroup> = groups.iter().collect();
-        let views = vec![view(0, &[0], Some(0))];
-        sched.schedule(&refs, &views, 0.0);
-        let d = SchedDelta {
-            dirty: groups.iter().take(4).collect(),
-            removed: vec![],
-            total_groups: groups.len(),
-        };
-        assert!(
-            sched.try_schedule_delta(&d, &views, 0.0).is_none(),
-            "4/8 dirty exceeds the 25% threshold"
-        );
-    }
-
-    #[test]
-    fn delta_reanchors_untouched_queue_penalties() {
-        let sched = GlobalScheduler::new(
-            SchedulerConfig {
-                solver: SolverKind::Greedy,
-                ..Default::default()
-            },
-            estimator(),
-        );
-        // Every group violating at t=0: 256-member groups, 5 s SLOs —
-        // each violating group's penalty grows one second per second.
-        let groups: Vec<RequestGroup> = (0..8).map(|i| grp(i, 0, 256, 0.0, 5.0)).collect();
-        let refs: Vec<&RequestGroup> = groups.iter().collect();
-        let views = vec![view(0, &[0], Some(0)), view(1, &[0], Some(0))];
-        let full = sched.schedule(&refs, &views, 0.0);
-        assert!(full.total_penalty_s > 0.0);
-        let d = SchedDelta {
-            total_groups: groups.len(),
-            ..Default::default()
-        };
-        // An empty delta 10 s later must re-anchor the untouched queues:
-        // 8 violating groups × 10 s of extra lateness.
-        let a = sched.try_schedule_delta(&d, &views, 10.0).expect("warm");
-        assert!(
-            (a.total_penalty_s - (full.total_penalty_s + 80.0)).abs() < 1e-6,
-            "expected {} + 80, got {}",
-            full.total_penalty_s,
-            a.total_penalty_s
-        );
-        // A second pass advances from the new anchor, not from t=0.
-        let b = sched.try_schedule_delta(&d, &views, 15.0).expect("warm");
-        assert!(
-            (b.total_penalty_s - (a.total_penalty_s + 40.0)).abs() < 1e-6,
-            "expected {} + 40, got {}",
-            a.total_penalty_s,
-            b.total_penalty_s
-        );
-    }
-
-    #[test]
-    fn parallel_repricing_is_bit_identical_to_serial() {
-        let mk = |threads: usize| {
-            GlobalScheduler::new(
-                SchedulerConfig {
-                    solver: SolverKind::Greedy,
-                    threads,
-                    ..Default::default()
-                },
-                estimator(),
-            )
-        };
-        let groups: Vec<RequestGroup> = (0..48)
-            .map(|i| {
-                let slo = 30.0 + (i % 7) as f64 * 150.0;
-                grp(i, (i % 2) as u32 * 3, 16 + (i % 5) as usize, i as f64 * 0.1, slo)
-            })
-            .collect();
-        let refs: Vec<&RequestGroup> = groups.iter().collect();
-        let views: Vec<InstanceView> = (0..8).map(|i| view(i, &[0, 3], Some(0))).collect();
-        let serial = mk(1).schedule(&refs, &views, 3.0);
-        let par = mk(4).schedule(&refs, &views, 3.0);
-        assert_eq!(serial.orders, par.orders, "plan must not depend on threads");
-        assert_eq!(
-            serial.total_penalty_s.to_bits(),
-            par.total_penalty_s.to_bits(),
-            "penalty must be bit-identical across thread counts"
-        );
-    }
-
-    #[test]
-    fn delta_instance_set_change_forces_full_solve() {
-        let sched = GlobalScheduler::new(
-            SchedulerConfig {
-                solver: SolverKind::Greedy,
-                ..Default::default()
-            },
-            estimator(),
-        );
-        let groups: Vec<RequestGroup> =
-            (0..4).map(|i| grp(i, 0, 32, 0.0, 60.0)).collect();
-        let refs: Vec<&RequestGroup> = groups.iter().collect();
-        let views = vec![view(0, &[0], Some(0)), view(1, &[0], Some(0))];
-        sched.schedule(&refs, &views, 0.0);
-        // Instance 1 failed: the survivor-only view set must not patch.
-        let survivors = vec![view(0, &[0], Some(0))];
-        let d = SchedDelta {
-            total_groups: groups.len(),
-            ..Default::default()
-        };
-        assert!(sched.try_schedule_delta(&d, &survivors, 0.0).is_none());
+        sched::plan::affinity_order(groups, active);
     }
 }

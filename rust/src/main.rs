@@ -9,6 +9,9 @@
 //!         [--fleet N] [--seed S] [--horizon SECS] [--threads N]
 //! qlm compare [--scenario S] [--rate R] [--requests N] [--fleet N]
 //!             [--seed S] [--threads N]       Fig. 11/14 policy table
+//! qlm compare --threads-sweep 1,2,4 [--scenario scale]   Fig. 20-scale
+//!             worker-pool sweep (one trace, QLM at each lane count,
+//!             digest equality enforced)
 //! qlm plan [--scenario S] [--rate R] [--requests N] [--horizon SECS]
 //!          [--max-a100 N] [--max-a10 N] [--util F]    capacity planner
 //! qlm figures [--fig N] [--full]         regenerate paper figures
@@ -93,11 +96,15 @@ USAGE:
   qlm compare [--scenario S] [--rate R] [--requests N] [--fleet N] [--seed S]
               [--horizon SECS] [--threads N]    every policy + LSO ablation,
               one shared trace (Fig. 11/14 table)
+  qlm compare --threads-sweep 1,2,4 [--scenario scale]   QLM over one shared
+              trace at each worker-lane count (defaults to the scenario's
+              full Fig. 20-scale request count; digests must collide)
   qlm plan [--scenario S] [--rate R] [--requests N] [--horizon SECS]
            [--max-a100 N] [--max-a10 N] [--util F] [--seed S]
   qlm figures [--fig N] [--full]
-  qlm simulate [--policy qlm|edf|vllm|sjf|shepherd|qlm-noevict|qlm-noswap|qlm-nolb]
-               [--rate R] [--requests N] [--fleet N] [--multi-model] [--seed S]
+  qlm simulate [--policy qlm|edf|edf-swap|vllm|sjf|wfq|shepherd|qlm-noevict
+               |qlm-noswap|qlm-nolb] [--rate R] [--requests N] [--fleet N]
+               [--multi-model] [--seed S]
   qlm serve [--artifacts DIR] [--requests N] [--fcfs] [--max-new N]
   qlm bench-scheduler"
     );
@@ -144,8 +151,10 @@ fn parse_policy(name: &str) -> Option<Policy> {
     Some(match name {
         "qlm" => Policy::qlm(),
         "edf" => Policy::Edf,
+        "edf-swap" => Policy::EdfSwap,
         "vllm" => Policy::VllmFcfs,
         "sjf" => Policy::Sjf,
+        "wfq" => Policy::Wfq,
         "shepherd" => Policy::Shepherd,
         "qlm-noevict" => Policy::qlm_with(LsoConfig::without_eviction()),
         "qlm-noswap" => Policy::qlm_with(LsoConfig::without_swapping()),
@@ -287,6 +296,9 @@ fn cmd_compare(args: &Args) -> ExitCode {
     let Some(scenario) = parse_scenario(args) else {
         return ExitCode::from(2);
     };
+    if args.has("threads-sweep") {
+        return cmd_compare_threads_sweep(args, scenario);
+    }
     let horizon_s = args.get_f64("horizon", 7200.0);
     let rate = args.get_f64("rate", scenario.default_rate());
     // Compare runs many simulations, so the default size is a table-
@@ -307,6 +319,8 @@ fn cmd_compare(args: &Args) -> ExitCode {
         Policy::qlm_with(LsoConfig::without_ordered_pulling()),
         Policy::Shepherd,
         Policy::Edf,
+        Policy::EdfSwap,
+        Policy::Wfq,
         Policy::Sjf,
         Policy::VllmFcfs,
     ];
@@ -339,6 +353,88 @@ fn cmd_compare(args: &Args) -> ExitCode {
             m.total_model_swaps(),
         );
     }
+    ExitCode::SUCCESS
+}
+
+/// `qlm compare --threads-sweep 1,2,4`: the persistent worker pool at
+/// Fig. 20 scale from the CLI, not just benches. One shared trace —
+/// sized, when `--requests` is absent, to the scenario's full
+/// horizon-filling count (the 100k-request floor for `scale` /
+/// `autoscale`) — run under QLM once per lane count, reporting SLO,
+/// scheduler overhead, and wall time per row. The runs must be
+/// bit-identical: any digest divergence across lane counts exits
+/// nonzero (the golden suite's threads ≡ serial contract, enforced at
+/// full scale).
+fn cmd_compare_threads_sweep(args: &Args, scenario: Scenario) -> ExitCode {
+    // Strict parsing: a malformed token must not silently shrink the
+    // sweep, or the digest-equality verdict would cover fewer lane
+    // counts than the operator asked for.
+    let mut sweep: Vec<usize> = Vec::new();
+    for tok in args.get("threads-sweep").unwrap_or("1,2,4").split(',') {
+        match tok.trim().parse::<usize>() {
+            Ok(t) if t >= 1 => sweep.push(t),
+            _ => {
+                eprintln!(
+                    "bad --threads-sweep token {tok:?}: want positive lane counts, e.g. 1,2,4"
+                );
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if sweep.is_empty() {
+        eprintln!("--threads-sweep wants a comma-separated lane list, e.g. 1,2,4");
+        return ExitCode::from(2);
+    }
+    let horizon_s = args.get_f64("horizon", 7200.0);
+    let rate = args.get_f64("rate", scenario.default_rate());
+    let knobs = ScenarioKnobs {
+        rate,
+        requests: args.get_usize("requests", scenario.requests_for(rate, horizon_s)),
+        fleet: args.get_usize("fleet", scenario.default_fleet() as usize) as u32,
+        seed: args.get_usize("seed", 42) as u64,
+    };
+    let run = scenario.build(&knobs);
+    let trace = Trace::generate(&run.spec, knobs.seed);
+    println!(
+        "threads sweep on scenario {} — {} requests, {} instances, rate {:.1} req/s, seed {}",
+        run.name,
+        trace.len(),
+        run.fleet.len(),
+        knobs.rate,
+        knobs.seed,
+    );
+    println!(
+        "{:>7} {:>6} {:>9} {:>9} {:>12} {:>8} {:>18}",
+        "threads", "slo%", "thr r/s", "sched ms", "ms/invocation", "wall s", "digest"
+    );
+    let mut digests: Vec<(usize, u64)> = Vec::new();
+    for &threads in &sweep {
+        let mut cfg = scenario_sim_config(&run, Policy::qlm(), knobs.seed, horizon_s, args);
+        cfg.threads = threads;
+        let wall = std::time::Instant::now();
+        let m = Simulation::new(cfg, &trace).run(&trace);
+        let wall_s = wall.elapsed().as_secs_f64();
+        let d = m.digest();
+        let digest_hex = format!("{d:016x}");
+        println!(
+            "{:>7} {:>6.1} {:>9.2} {:>9.1} {:>12.3} {:>8.1} {digest_hex:>18}",
+            threads,
+            100.0 * m.slo_attainment(),
+            m.throughput_rps(),
+            1000.0 * m.scheduler_wall_s,
+            1000.0 * m.scheduler_wall_s / m.scheduler_invocations.max(1) as f64,
+            wall_s,
+        );
+        digests.push((threads, d));
+    }
+    let (_, first) = digests[0];
+    if digests.iter().any(|&(_, d)| d != first) {
+        eprintln!(
+            "digest divergence across lane counts: {digests:?} — threads must be invisible"
+        );
+        return ExitCode::FAILURE;
+    }
+    println!("digest equality across lane counts: OK");
     ExitCode::SUCCESS
 }
 

@@ -202,6 +202,38 @@ impl RunMetrics {
             .collect()
     }
 
+    /// FNV-1a over every deterministic field of the run: per-request
+    /// outcomes (records are sorted by id in the engine's `finish`),
+    /// autoscaler actions, the device-seconds ledger, and the scheduler
+    /// invocation count. Wall-clock fields (`scheduler_wall_s`) are
+    /// excluded; everything the paper's figures are computed from is
+    /// included. The one digest behind the golden-equivalence suite and
+    /// the `qlm compare --threads-sweep` equality check — two runs with
+    /// equal digests served identical traffic identically.
+    pub fn digest(&self) -> u64 {
+        const PRIME: u64 = 0x100000001b3;
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(PRIME);
+        };
+        for r in &self.records {
+            mix(r.id);
+            mix(r.model.0 as u64);
+            mix(r.arrival_s.to_bits());
+            mix(r.first_token_s.map(f64::to_bits).unwrap_or(u64::MAX));
+            mix(r.completed_s.map(f64::to_bits).unwrap_or(u64::MAX));
+            mix(r.shed as u64);
+        }
+        mix(self.records.len() as u64);
+        mix(self.duration_s.to_bits());
+        mix(self.device_seconds.to_bits());
+        mix(self.scale_ups);
+        mix(self.scale_downs);
+        mix(self.scheduler_invocations);
+        h
+    }
+
     /// One-line summary for CLI output.
     pub fn summary(&self) -> String {
         format!(

@@ -16,8 +16,10 @@
 //!   (provision / drain / decommission / fail, the device-seconds
 //!   ledger) and the only bridge to the capacity subsystem.
 //! * A parallel view/pricing pass — per-instance view refresh fans out
-//!   over `std::thread::scope` (`SimConfig::threads`), merged in index
-//!   order so results are bit-identical to the serial pass.
+//!   over a persistent [`WorkerPool`] (`SimConfig::threads`; spawned
+//!   once per `Simulation` and shared with the scheduler's repricing
+//!   walk), merged in index order so results are bit-identical to the
+//!   serial pass.
 //!
 //! §Perf: the event loop is allocation-light in steady state. Per-
 //! instance state lives in dense `Vec`s indexed by `InstanceId`;
@@ -30,6 +32,7 @@
 //! paper's Fig. 20 regime.
 
 use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::sync::Arc;
 use std::time::Instant as WallInstant;
 
 use crate::backend::{
@@ -52,6 +55,7 @@ use crate::sim::event::{EventCore, EventKind};
 use crate::sim::fleet_controller::{static_pinning, FleetController};
 use crate::sim::profiler::{conservative_profiles, ThetaCache};
 use crate::sim::views;
+use crate::util::WorkerPool;
 use crate::workload::{SloClass, Trace};
 
 /// Simulation parameters.
@@ -80,9 +84,11 @@ pub struct SimConfig {
     pub sched_incremental: bool,
     /// Worker threads for the parallel view/pricing pass (`qlm sim
     /// --threads N`). The per-instance view refresh and the scheduler's
-    /// per-queue repricing walk fan out over `std::thread::scope` with
-    /// an index-ordered merge, so any thread count produces the same
-    /// `RunMetrics` bit for bit. 1 (default) = fully serial.
+    /// per-queue repricing walk fan out over one persistent
+    /// [`WorkerPool`] (spawned once per `Simulation`, workers parked
+    /// between passes) with an index-ordered merge, so any thread count
+    /// produces the same `RunMetrics` bit for bit. 1 (default) = fully
+    /// serial (no workers spawned).
     pub threads: usize,
     /// Runtime autoscaling (capacity subsystem): provision instances
     /// under sustained predicted violations, drain them when calm.
@@ -176,6 +182,10 @@ pub struct Simulation {
     /// Scheduler views, built once and refreshed in place per pass
     /// (dead instances are dropped on failure).
     views_cache: Vec<InstanceView>,
+    /// The persistent worker pool behind every parallel pass — spawned
+    /// once here, shared with the policy's global scheduler (one set of
+    /// parked workers serves the view refresh *and* the repricing walk).
+    pool: Arc<WorkerPool>,
     /// Open-group index: groups with spare capacity per
     /// (model, class, mega). Makes `classify_in_place` O(1) per arrival
     /// instead of a scan of the live group table; `BTreeSet` keeps the
@@ -204,7 +214,10 @@ impl Simulation {
             threads: cfg.threads,
             ..Default::default()
         };
-        let policy = build_policy(cfg.policy, sched_cfg, estimator);
+        // One pool per simulation: the view refresh and the scheduler's
+        // repricing walk share its parked workers for the whole run.
+        let pool = Arc::new(WorkerPool::new(cfg.threads));
+        let policy = build_policy(cfg.policy, sched_cfg, estimator, Arc::clone(&pool));
         let mut instances: Vec<Instance> = cfg
             .fleet
             .iter()
@@ -255,6 +268,7 @@ impl Simulation {
             sched_force_full: false,
             thetas: ThetaCache::new(),
             views_cache: Vec::new(),
+            pool,
             open_groups: HashMap::new(),
             cfg,
         };
@@ -310,7 +324,7 @@ impl Simulation {
         let mut views = std::mem::take(&mut self.views_cache);
         let fleet = &self.fleet;
         views.retain(|v| fleet.alive(v.id));
-        views::refresh_all(&mut views, fleet.instances(), &self.group_of, self.cfg.threads);
+        views::refresh_all(&mut views, fleet.instances(), &self.group_of, &self.pool);
         views
     }
 
@@ -322,6 +336,33 @@ impl Simulation {
         let digest = views::digest(&views);
         self.views_cache = views;
         digest
+    }
+
+    /// Bench hook for the pool-vs-scoped comparison: the same refresh
+    /// through the scoped-spawn baseline (`util::par_chunks_mut`), so
+    /// `cargo bench -- par_views` can gate the persistent pool against
+    /// the spawn-per-pass implementation it replaced on identical work.
+    #[doc(hidden)]
+    pub fn refresh_views_scoped_for_bench(&mut self) -> u64 {
+        let mut views = std::mem::take(&mut self.views_cache);
+        let fleet = &self.fleet;
+        views.retain(|v| fleet.alive(v.id));
+        views::refresh_all_scoped(
+            &mut views,
+            fleet.instances(),
+            &self.group_of,
+            self.cfg.threads,
+        );
+        let digest = views::digest(&views);
+        self.views_cache = views;
+        digest
+    }
+
+    /// The engine's persistent worker pool (observability: the pool
+    /// reuse tests assert one spawn serves the whole run).
+    #[doc(hidden)]
+    pub fn worker_pool(&self) -> &WorkerPool {
+        &self.pool
     }
 
     /// Run to completion (all requests served) or the horizon.
@@ -1017,6 +1058,34 @@ mod tests {
         let mut serial = mk(1);
         let mut par = mk(4);
         assert_eq!(serial.refresh_views_for_bench(), par.refresh_views_for_bench());
+    }
+
+    #[test]
+    fn worker_pool_is_spawned_once_and_reused() {
+        // The persistent pool: one spawn per Simulation, every parallel
+        // pass (view refresh + repricing walk) dispatches to the same
+        // parked workers. threads=2 over an 8-wide fleet keeps the
+        // fan-out gate (len ≥ 2×threads) engaged on every refresh.
+        let trace = small_trace(10.0, 300);
+        let mut cfg = SimConfig::new(fleet_a100(8), ModelCatalog::paper(), Policy::qlm());
+        cfg.threads = 2;
+        let sim = Simulation::new(cfg, &trace);
+        let pool = Arc::clone(&sim.pool);
+        assert_eq!(pool.workers(), 1, "threads=2 ⇒ one spawned worker + the caller");
+        let m = sim.run(&trace);
+        assert!(m.scheduler_invocations > 1, "{}", m.summary());
+        assert!(
+            pool.jobs_run() >= m.scheduler_invocations,
+            "every pass must dispatch through the pool: {} jobs over {} passes",
+            pool.jobs_run(),
+            m.scheduler_invocations
+        );
+        assert_eq!(
+            pool.workers(),
+            1,
+            "the worker set never respawns across {} passes",
+            m.scheduler_invocations
+        );
     }
 
     #[test]

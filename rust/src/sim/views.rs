@@ -3,11 +3,13 @@
 //!
 //! Refreshing is the per-pass hot loop and is embarrassingly parallel —
 //! each view reads only its own instance — so [`refresh_all`] fans out
-//! over `std::thread::scope` (zero-dep, stable since Rust 1.63) when
-//! the engine is configured with worker threads. Chunks are split and
-//! merged in index order, so the refreshed views are bit-identical to
-//! the serial pass whatever the thread count (`cargo bench --
-//! par_views` measures it; the golden suite asserts it end to end).
+//! over the engine's persistent [`WorkerPool`] (spawned once per
+//! `Simulation`, shared with the scheduler's repricing walk — a pass
+//! costs one dispatch instead of a scoped spawn per thread). Chunks are
+//! split and merged in index order, so the refreshed views are
+//! bit-identical to the serial pass whatever the lane count (`cargo
+//! bench -- par_views` measures it against the scoped-spawn baseline;
+//! the golden suite asserts it end to end).
 
 use std::collections::HashMap;
 
@@ -15,6 +17,7 @@ use crate::backend::{Instance, ModelCatalog, ModelId};
 use crate::coordinator::request_group::GroupId;
 use crate::coordinator::scheduler::InstanceView;
 use crate::sim::profiler::ThetaCache;
+use crate::util::WorkerPool;
 
 /// Build one instance's scheduler view: `perf_for` is static per
 /// (instance, model); only swap times, active model, and the executing
@@ -68,13 +71,25 @@ fn refresh_one(v: &mut InstanceView, instances: &[Instance], group_of: &HashMap<
     }
 }
 
-/// Refresh every view for one scheduler pass, fanning out over
-/// `threads` scoped workers when there are enough views to split
-/// (the gate and chunking live in [`crate::util::par_chunks_mut`],
-/// shared with the scheduler's repricing walk). Serial and parallel
-/// paths produce identical views: the work per view is independent and
-/// chunks stay in index order.
+/// Refresh every view for one scheduler pass, fanning out over the
+/// persistent pool's lanes when there are enough views to split (the
+/// gate and chunking match [`crate::util::par_chunks_mut`], the
+/// scoped-spawn baseline the bench compares against). Serial and
+/// parallel paths produce identical views: the work per view is
+/// independent and chunks stay in index order.
 pub(crate) fn refresh_all(
+    views: &mut [InstanceView],
+    instances: &[Instance],
+    group_of: &HashMap<u64, GroupId>,
+    pool: &WorkerPool,
+) {
+    pool.run_chunks_mut(views, |v| refresh_one(v, instances, group_of));
+}
+
+/// The scoped-spawn refresh, kept only as the bench baseline for the
+/// pool-vs-scoped comparison (`cargo bench -- par_views`); production
+/// passes go through [`refresh_all`].
+pub(crate) fn refresh_all_scoped(
     views: &mut [InstanceView],
     instances: &[Instance],
     group_of: &HashMap<u64, GroupId>,

@@ -10,8 +10,10 @@ pub mod stats;
 pub mod histogram;
 pub mod kmeans;
 pub mod par;
+pub mod pool;
 
 pub use par::par_chunks_mut;
+pub use pool::WorkerPool;
 pub use rng::Rng;
 pub use stats::{linear_fit, mean, percentile, r_squared, stddev, variance, OnlineStats};
 pub use histogram::Histogram;

@@ -1,13 +1,18 @@
-//! The one scoped-thread fan-out primitive behind every parallel pass
-//! (engine view refresh, scheduler queue repricing).
+//! Scoped-thread fan-out: the spawn-per-pass baseline the persistent
+//! [`crate::util::WorkerPool`] is measured against.
 //!
-//! Semantics are deliberately rigid so "threaded ≡ serial bit-for-bit"
-//! holds at every call site: items are split into at most `threads`
-//! index-ordered chunks, each worker mutates only its own chunk, and
-//! nothing is reduced across workers (callers fold results serially
-//! afterwards). The engagement gate (`len ≥ 2 × threads`) lives here
-//! and only here — below it, thread-spawn cost dominates the work and
-//! the pass runs serially.
+//! The production parallel passes (engine view refresh, scheduler queue
+//! repricing) moved to the pool — scoped spawn pays ~20–50 µs per
+//! thread on *every* pass, which caps the threading win at small
+//! fleets. This primitive stays as the comparison baseline for `cargo
+//! bench -- par_views` (pool-vs-scoped no-regression gate, digests
+//! hard-gated equal)
+//! and as the reference semantics both implementations share: items are
+//! split into at most `threads` index-ordered chunks, each worker
+//! mutates only its own chunk, and nothing is reduced across workers
+//! (callers fold results serially afterwards). The engagement gate
+//! (`len ≥ 2 × threads`) is identical in both — below it, dispatch cost
+//! dominates the work and the pass runs serially.
 
 /// Apply `f` to every item, fanning out over `threads` scoped workers
 /// when there are enough items to split. `threads ≤ 1` (or too few

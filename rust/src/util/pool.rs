@@ -1,0 +1,391 @@
+//! The persistent worker pool behind every parallel pass (engine view
+//! refresh, scheduler queue repricing).
+//!
+//! [`super::par_chunks_mut`] fans out over `std::thread::scope`, which
+//! spawns (and joins) an OS thread per chunk on *every* pass — ~20–50 µs
+//! per thread, paid thousands of times over a run, which caps the
+//! threading win at small fleets (the ROADMAP note this module closes).
+//! [`WorkerPool`] spawns its workers **once** (per [`crate::sim::Simulation`]);
+//! between jobs they park on a condvar, and a pass costs one lock +
+//! notify instead of N spawns. `cargo bench -- par_views` measures the
+//! pool against the scoped-spawn baseline and gates the comparison.
+//!
+//! Semantics are identical to the scoped primitive, deliberately rigid
+//! so "threaded ≡ serial bit-for-bit" holds at every call site: the same
+//! engagement gate (`len ≥ 2 × threads`, below it the pass runs serially
+//! on the caller), the same index-ordered `div_ceil` chunking, each lane
+//! mutates only its own chunk, and nothing is reduced across lanes
+//! (callers fold results serially afterwards). Which lane runs which
+//! chunk cannot affect the result: chunks are disjoint `&mut` slices and
+//! the items never move.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One published chunked job, type-erased so the pool is not generic.
+///
+/// `ctx` points at a [`ChunkJob`] on the submitting thread's stack.
+/// Safety: [`WorkerPool::run_chunks_mut`] does not return — by normal
+/// exit *or* by unwind — until `remaining == 0` (every lane runs its
+/// chunk under `catch_unwind` and decrements even when the closure
+/// panics; the submitter re-raises the first captured payload only
+/// after the job is fully drained and cleared). So the pointee outlives
+/// every dereference, and the chunks handed out are disjoint `&mut`
+/// slices of the caller's buffer.
+struct Job {
+    ctx: *const (),
+    call: unsafe fn(*const (), usize),
+    /// Next chunk index to claim (caller and workers race under the lock).
+    next: usize,
+    /// Chunks published but not yet completed.
+    remaining: usize,
+    chunks: usize,
+    /// First panic payload raised by any lane's chunk — re-thrown on
+    /// the submitting thread once the job drains, preserving the
+    /// panic-propagation semantics of the `std::thread::scope`
+    /// primitive this pool replaced (a swallowed worker panic would
+    /// otherwise hang the submitter forever).
+    payload: Option<Box<dyn std::any::Any + Send>>,
+}
+
+// Safety: see `Job` — the raw pointer is only dereferenced while the
+// submitting call blocks, and every dereference targets a disjoint chunk.
+unsafe impl Send for Job {}
+
+struct State {
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between jobs.
+    work: Condvar,
+    /// The submitting thread parks here until the last chunk completes.
+    done: Condvar,
+}
+
+/// The borrowed, typed side of a job: base pointer + chunk geometry +
+/// the per-item closure. Lives on the submitter's stack for the duration
+/// of the call; lanes reconstruct their disjoint `&mut [T]` from it.
+struct ChunkJob<'f, T, F> {
+    base: *mut T,
+    len: usize,
+    chunk: usize,
+    f: &'f F,
+}
+
+/// Run chunk `idx` of the job behind `ctx`. Safety: `ctx` must point at
+/// a live `ChunkJob<T, F>` and `idx` must be claimed by exactly one lane
+/// (the claim counter under the pool lock guarantees both).
+unsafe fn call_chunk<T: Send, F: Fn(&mut T) + Sync>(ctx: *const (), idx: usize) {
+    let job = unsafe { &*(ctx as *const ChunkJob<'_, T, F>) };
+    let start = idx * job.chunk;
+    let end = (start + job.chunk).min(job.len);
+    let slice = unsafe { std::slice::from_raw_parts_mut(job.base.add(start), end - start) };
+    for t in slice {
+        (job.f)(t);
+    }
+}
+
+/// A persistent pool of `threads - 1` parked worker threads; the calling
+/// thread is the remaining lane, so `threads = 1` spawns nothing and
+/// runs fully serial. Spawned once, reused for every pass, shut down and
+/// joined on drop.
+pub struct WorkerPool {
+    shared: std::sync::Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+    /// Jobs dispatched through the parallel path (observability: the
+    /// reuse tests assert many jobs ran on the same fixed worker set).
+    jobs: AtomicU64,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("threads", &self.threads)
+            .field("workers", &self.workers.len())
+            .finish()
+    }
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = std::sync::Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|_| {
+                let shared = std::sync::Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            workers,
+            threads,
+            jobs: AtomicU64::new(0),
+        }
+    }
+
+    /// Configured lane count (workers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// OS threads the pool owns — fixed at construction, never respawned.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Jobs that went down the parallel path since construction.
+    pub fn jobs_run(&self) -> u64 {
+        self.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Apply `f` to every item, fanning out over the pool's lanes when
+    /// there are enough items to split (same gate and chunking as
+    /// [`super::par_chunks_mut`]). Either way `f` sees each item exactly
+    /// once; chunks stay in index order and are disjoint, so the result
+    /// is bit-identical to the serial pass whatever the lane count.
+    pub fn run_chunks_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(&mut T) + Sync,
+    {
+        if self.threads <= 1 || items.len() < 2 * self.threads || self.workers.is_empty() {
+            for t in items.iter_mut() {
+                f(t);
+            }
+            return;
+        }
+        let chunk = items.len().div_ceil(self.threads);
+        let chunks = items.len().div_ceil(chunk);
+        let job = ChunkJob {
+            base: items.as_mut_ptr(),
+            len: items.len(),
+            chunk,
+            f: &f,
+        };
+        let ctx = &job as *const ChunkJob<'_, T, F> as *const ();
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+
+        let mut guard = self.shared.state.lock().unwrap();
+        // The engine and the scheduler share one pool on one thread, so
+        // the slot is normally free; if another thread is mid-job, queue
+        // behind it rather than clobbering its in-flight state.
+        while guard.job.is_some() {
+            guard = self.shared.done.wait(guard).unwrap();
+        }
+        guard.job = Some(Job {
+            ctx,
+            call: call_chunk::<T, F>,
+            next: 0,
+            remaining: chunks,
+            chunks,
+            payload: None,
+        });
+        self.shared.work.notify_all();
+        // The caller is a lane too: claim chunks alongside the workers,
+        // then park on `done` until the last chunk (wherever it ran)
+        // completes. Not returning before `remaining == 0` — even when a
+        // chunk panics (caught below, re-raised after the drain) — is
+        // what makes the borrow-erasing `ctx` pointer sound.
+        loop {
+            let claimed = guard.job.as_mut().and_then(|j| {
+                (j.next < j.chunks).then(|| {
+                    let i = j.next;
+                    j.next += 1;
+                    i
+                })
+            });
+            match claimed {
+                Some(i) => {
+                    drop(guard);
+                    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                        call_chunk::<T, F>(ctx, i)
+                    }));
+                    guard = self.shared.state.lock().unwrap();
+                    let j = guard.job.as_mut().expect("job lives until the submitter clears it");
+                    if let Err(p) = res {
+                        j.payload.get_or_insert(p);
+                    }
+                    j.remaining -= 1;
+                    if j.remaining == 0 {
+                        break;
+                    }
+                }
+                None => {
+                    if guard.job.as_ref().map(|j| j.remaining) == Some(0) {
+                        break;
+                    }
+                    guard = self.shared.done.wait(guard).unwrap();
+                }
+            }
+        }
+        let payload = guard.job.as_mut().and_then(|j| j.payload.take());
+        guard.job = None;
+        // Free the slot for any submitter queued behind this job.
+        self.shared.done.notify_all();
+        drop(guard);
+        if let Some(p) = payload {
+            // A lane's closure panicked: the job has fully drained (no
+            // worker still holds `ctx`), so propagate on the submitting
+            // thread exactly as the scoped-spawn primitive did.
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut guard = shared.state.lock().unwrap();
+    loop {
+        if guard.shutdown {
+            return;
+        }
+        let claimed = guard.job.as_mut().and_then(|j| {
+            (j.next < j.chunks).then(|| {
+                let i = j.next;
+                j.next += 1;
+                (j.ctx, j.call, i)
+            })
+        });
+        match claimed {
+            Some((ctx, call, i)) => {
+                drop(guard);
+                // Safety: the chunk index was claimed under the lock, so
+                // this lane is its only visitor; the submitter blocks
+                // until `remaining == 0`, keeping `ctx` alive. The catch
+                // keeps a panicking closure from killing the worker (or
+                // leaking an undecremented chunk, which would hang the
+                // submitter); the payload is re-thrown submitter-side.
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                    call(ctx, i)
+                }));
+                guard = shared.state.lock().unwrap();
+                if let Some(j) = guard.job.as_mut() {
+                    if let Err(p) = res {
+                        j.payload.get_or_insert(p);
+                    }
+                    j.remaining -= 1;
+                    if j.remaining == 0 {
+                        shared.done.notify_all();
+                    }
+                }
+            }
+            None => {
+                guard = shared.work.wait(guard).unwrap();
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut guard = self.shared.state.lock().unwrap();
+            guard.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_matches_serial_for_every_lane_count() {
+        for threads in [1, 2, 4, 7] {
+            let pool = WorkerPool::new(threads);
+            let mut items: Vec<u64> = (0..97).collect();
+            pool.run_chunks_mut(&mut items, |x| *x += 1000);
+            let want: Vec<u64> = (1000..1097).collect();
+            assert_eq!(items, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn small_inputs_stay_serial_but_complete() {
+        let pool = WorkerPool::new(8);
+        let mut items = vec![1u64, 2, 3];
+        pool.run_chunks_mut(&mut items, |x| *x *= 2);
+        assert_eq!(items, vec![2, 4, 6]);
+        assert_eq!(pool.jobs_run(), 0, "below the gate the pool is bypassed");
+    }
+
+    #[test]
+    fn workers_are_reused_across_many_passes() {
+        // The whole point of the pool: one spawn, many jobs. The worker
+        // set is fixed at construction; 200 passes dispatch 200 jobs
+        // through the same 3 parked workers, with no respawn path in
+        // between (`workers()` is the owned-thread count, constant by
+        // construction — a scoped-spawn implementation would have paid
+        // 600 spawns here).
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.workers(), 3);
+        let mut items: Vec<u64> = (0..64).collect();
+        for _ in 0..200 {
+            pool.run_chunks_mut(&mut items, |x| *x = x.wrapping_add(1));
+        }
+        assert_eq!(pool.jobs_run(), 200);
+        assert_eq!(pool.workers(), 3);
+        let want: Vec<u64> = (0..64u64).map(|x| x + 200).collect();
+        assert_eq!(items, want);
+    }
+
+    #[test]
+    fn pool_agrees_with_scoped_baseline() {
+        // The pool and the scoped-spawn primitive share gate + chunking,
+        // so they must transform any buffer identically.
+        for threads in [2, 3, 4] {
+            let pool = WorkerPool::new(threads);
+            let mut a: Vec<u64> = (0..131).map(|x| x * 7).collect();
+            let mut b = a.clone();
+            pool.run_chunks_mut(&mut a, |x| *x = x.wrapping_mul(31) ^ 5);
+            super::super::par_chunks_mut(&mut b, threads, |x| *x = x.wrapping_mul(31) ^ 5);
+            assert_eq!(a, b, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn panicking_task_propagates_and_pool_survives() {
+        // A panicking chunk closure must behave like the scoped-spawn
+        // primitive it replaced: the panic reaches the submitter (no
+        // silent hang, no use-after-free of the job context), and the
+        // pool — workers included — stays serviceable afterwards.
+        let pool = WorkerPool::new(4);
+        let mut items: Vec<u64> = (0..64).collect();
+        let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_chunks_mut(&mut items, |x| {
+                assert!(*x != 13, "boom");
+            });
+        }));
+        assert!(hit.is_err(), "the chunk panic must propagate");
+        let mut again: Vec<u64> = (0..64).collect();
+        pool.run_chunks_mut(&mut again, |x| *x += 1);
+        let want: Vec<u64> = (1..=64).collect();
+        assert_eq!(again, want, "pool must survive a panicked job");
+        assert_eq!(pool.workers(), 3);
+    }
+
+    #[test]
+    fn single_thread_pool_spawns_nothing() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.workers(), 0);
+        let mut items: Vec<u64> = (0..32).collect();
+        pool.run_chunks_mut(&mut items, |x| *x += 1);
+        assert_eq!(items[31], 32);
+    }
+}

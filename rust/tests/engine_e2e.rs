@@ -48,6 +48,18 @@ fn sjf_completes_all_requests_light_load() {
 }
 
 #[test]
+fn wfq_completes_all_requests_light_load() {
+    let m = run_policy(Policy::Wfq, 5.0, 200, 2);
+    assert_eq!(m.completed_count(), 200, "{}", m.summary());
+}
+
+#[test]
+fn edf_swap_completes_all_requests_light_load() {
+    let m = run_policy(Policy::EdfSwap, 5.0, 200, 2);
+    assert_eq!(m.completed_count(), 200, "{}", m.summary());
+}
+
+#[test]
 fn shepherd_completes_all_requests_light_load() {
     let m = run_policy(Policy::Shepherd, 5.0, 200, 2);
     assert_eq!(m.completed_count(), 200, "{}", m.summary());

@@ -1,16 +1,17 @@
-//! Golden-equivalence suite for the decomposed engine.
+//! Golden-equivalence suite for the decomposed engine + scheduler.
 //!
-//! The engine refactor (EventCore / SchedulingPolicy / FleetController /
-//! parallel view pass) is required to preserve behavior bit for bit, so
-//! every test here pins a seed and asserts *exact* `RunMetrics`
-//! equality via an order-stable digest:
+//! The layered refactors (EventCore / SchedulingPolicy / FleetController
+//! / the `coordinator/sched` scheduling core / the persistent worker
+//! pool) are required to preserve behavior bit for bit, so every test
+//! here pins a seed and asserts *exact* `RunMetrics` equality via the
+//! order-stable [`RunMetrics::digest`]:
 //!
 //! * run-to-run: the same (policy, scenario, seed) always produces the
-//!   identical digest — any nondeterminism in the new seams (HashMap
-//!   iteration, thread scheduling) breaks it;
-//! * threads: `--threads 4` ≡ `--threads 1` on the scale and autoscale
-//!   scenario shapes — the parallel view/pricing pass must be
-//!   invisible in the metrics.
+//!   identical digest — any nondeterminism in the seams (HashMap
+//!   iteration, pool lane scheduling) breaks it;
+//! * threads: every lane count in {2, 4} ≡ serial on the scale and
+//!   autoscale scenario shapes — the persistent pool behind the view
+//!   refresh and the repricing walk must be invisible in the metrics.
 //!
 //! Wall-clock fields (`scheduler_wall_s`) are excluded from the digest;
 //! everything the paper's figures are computed from is included.
@@ -30,33 +31,6 @@ use qlm::coordinator::lso::LsoConfig;
 use qlm::metrics::RunMetrics;
 use qlm::sim::Simulation;
 use qlm::workload::{Scenario, ScenarioKnobs, Trace};
-
-/// FNV-1a over every deterministic field of the run: per-request
-/// outcomes (records are sorted by id in `finish`), autoscaler actions,
-/// the device-seconds ledger, and the scheduler invocation count.
-fn digest(m: &RunMetrics) -> u64 {
-    const PRIME: u64 = 0x100000001b3;
-    let mut h: u64 = 0xcbf29ce484222325;
-    let mut mix = |x: u64| {
-        h ^= x;
-        h = h.wrapping_mul(PRIME);
-    };
-    for r in &m.records {
-        mix(r.id);
-        mix(r.model.0 as u64);
-        mix(r.arrival_s.to_bits());
-        mix(r.first_token_s.map(f64::to_bits).unwrap_or(u64::MAX));
-        mix(r.completed_s.map(f64::to_bits).unwrap_or(u64::MAX));
-        mix(r.shed as u64);
-    }
-    mix(m.records.len() as u64);
-    mix(m.duration_s.to_bits());
-    mix(m.device_seconds.to_bits());
-    mix(m.scale_ups);
-    mix(m.scale_downs);
-    mix(m.scheduler_invocations);
-    h
-}
 
 /// Run one scenario at reduced size with the given policy/thread count.
 fn run_scenario(scenario: Scenario, policy: Policy, requests: usize, threads: usize) -> RunMetrics {
@@ -81,24 +55,38 @@ fn run_scenario(scenario: Scenario, policy: Policy, requests: usize, threads: us
 #[test]
 fn threaded_equals_serial_on_scale_scenario() {
     // The scale shape (mixed SLO classes, multiple models, incremental
-    // scheduler in steady state) at test size: 4 worker threads must
-    // produce the identical digest to the serial run.
+    // scheduler in steady state) at test size: every pooled lane count
+    // must produce the identical digest to the serial run.
     let serial = run_scenario(Scenario::Scale, Policy::qlm(), 2500, 1);
-    let par = run_scenario(Scenario::Scale, Policy::qlm(), 2500, 4);
-    assert_eq!(serial.completed_count(), par.completed_count());
-    assert_eq!(digest(&serial), digest(&par), "threads changed the metrics");
+    for threads in [2, 4] {
+        let par = run_scenario(Scenario::Scale, Policy::qlm(), 2500, threads);
+        assert_eq!(serial.completed_count(), par.completed_count());
+        assert_eq!(
+            serial.digest(),
+            par.digest(),
+            "threads={threads} changed the metrics"
+        );
+    }
 }
 
 #[test]
 fn threaded_equals_serial_on_autoscale_scenario() {
     // Autoscale adds view-set churn (provision + drain) on top of the
-    // parallel pass — the hardest case for threads ≡ serial. Two
-    // workers so the trough fleet (4 views) already fans out.
+    // parallel pass — the hardest case for threads ≡ serial. The trough
+    // fleet (4 views) already fans out at two lanes; four lanes stays
+    // gated until the autoscaler grows the fleet, exercising both sides
+    // of the engagement gate in one run.
     let serial = run_scenario(Scenario::Autoscale, Policy::qlm(), 2000, 1);
-    let par = run_scenario(Scenario::Autoscale, Policy::qlm(), 2000, 2);
-    assert_eq!(serial.scale_ups, par.scale_ups);
-    assert_eq!(serial.scale_downs, par.scale_downs);
-    assert_eq!(digest(&serial), digest(&par), "threads changed the metrics");
+    for threads in [2, 4] {
+        let par = run_scenario(Scenario::Autoscale, Policy::qlm(), 2000, threads);
+        assert_eq!(serial.scale_ups, par.scale_ups, "threads={threads}");
+        assert_eq!(serial.scale_downs, par.scale_downs, "threads={threads}");
+        assert_eq!(
+            serial.digest(),
+            par.digest(),
+            "threads={threads} changed the metrics"
+        );
+    }
 }
 
 /// The pinned-digest ledger: one `scenario/policy digest` line per
@@ -117,10 +105,11 @@ fn ledger_path() -> std::path::PathBuf {
 
 #[test]
 fn golden_digests_reproducible_per_policy_and_scenario() {
-    // Every policy behind the trait seam, on the paper's two headline
-    // workload shapes: the same pinned seed must reproduce the same
-    // metrics digest run over run (and the digest must be non-trivial —
-    // the run actually served traffic), and must match the committed
+    // Every policy behind the trait seam — including the PR's WFQ and
+    // EDF+swap-penalty baselines — on the paper's two headline workload
+    // shapes: the same pinned seed must reproduce the same metrics
+    // digest run over run (and the digest must be non-trivial — the run
+    // actually served traffic), and must match the committed
     // pinned-digest ledger when one exists.
     let policies = [
         Policy::qlm(),
@@ -129,6 +118,8 @@ fn golden_digests_reproducible_per_policy_and_scenario() {
         Policy::qlm_with(LsoConfig::without_load_balancing()),
         Policy::Shepherd,
         Policy::Edf,
+        Policy::EdfSwap,
+        Policy::Wfq,
         Policy::Sjf,
         Policy::VllmFcfs,
     ];
@@ -155,8 +146,8 @@ fn golden_digests_reproducible_per_policy_and_scenario() {
                 a.summary()
             );
             assert_eq!(
-                digest(&a),
-                digest(&b),
+                a.digest(),
+                b.digest(),
                 "{} on {} is not reproducible",
                 policy.name(),
                 scenario.name()
@@ -164,13 +155,13 @@ fn golden_digests_reproducible_per_policy_and_scenario() {
             let key = format!("{}/{}", scenario.name(), policy.name());
             if let Some(&want) = pinned.get(&key) {
                 assert_eq!(
-                    digest(&a),
+                    a.digest(),
                     want,
                     "{key}: metrics drifted from the committed golden ledger \
                      (intentional? re-bless with QLM_BLESS_GOLDEN=1)"
                 );
             }
-            ledger.push_str(&format!("{key} {}\n", digest(&a)));
+            ledger.push_str(&format!("{key} {}\n", a.digest()));
         }
     }
     if std::env::var_os("QLM_BLESS_GOLDEN").is_some() {
@@ -182,13 +173,21 @@ fn golden_digests_reproducible_per_policy_and_scenario() {
 fn threaded_equals_serial_across_policies() {
     // The parallel pass must be invisible for every policy family, not
     // just QLM (baselines share the view-refresh fan-out; the 8-wide
-    // mixed-slo fleet fans out at 4 workers).
-    for policy in [Policy::qlm(), Policy::Edf, Policy::Sjf, Policy::Shepherd] {
+    // mixed-slo fleet fans out at 4 lanes). WFQ and EDF+swap ride the
+    // same pool-backed refresh as the rest.
+    for policy in [
+        Policy::qlm(),
+        Policy::Edf,
+        Policy::EdfSwap,
+        Policy::Wfq,
+        Policy::Sjf,
+        Policy::Shepherd,
+    ] {
         let serial = run_scenario(Scenario::MixedSlo, policy, 300, 1);
         let par = run_scenario(Scenario::MixedSlo, policy, 300, 4);
         assert_eq!(
-            digest(&serial),
-            digest(&par),
+            serial.digest(),
+            par.digest(),
             "threads changed {} metrics",
             policy.name()
         );
