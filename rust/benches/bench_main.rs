@@ -30,7 +30,7 @@ use qlm::coordinator::scheduler::{
 use qlm::coordinator::GlobalQueue;
 use qlm::sim::{fleet_a100, SimConfig, Simulation};
 use qlm::util::{mean, stddev};
-use qlm::workload::{SloClass, Trace, TraceRequest, WorkloadSpec};
+use qlm::workload::{SloClass, SloTarget, Trace, TraceRequest, WorkloadSpec};
 
 /// Run `f` for `iters` timed iterations (after 1 warmup); report stats
 /// and return the mean wall time in milliseconds.
@@ -58,12 +58,73 @@ fn bench<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) -> f64 {
     m
 }
 
+/// Perf-trajectory artifact: headline bench numbers accumulated during
+/// the run and merged into `BENCH_qlm.json` (flat `"key": number`
+/// object). A filtered run (`cargo bench -- queue`) rewrites only the
+/// keys it measured, so CI jobs build up one artifact across runs and
+/// successive commits can be diffed key-by-key.
+mod perf_log {
+    use std::collections::BTreeMap;
+    use std::sync::{Mutex, OnceLock};
+
+    static RECORDS: OnceLock<Mutex<BTreeMap<String, f64>>> = OnceLock::new();
+
+    fn records() -> &'static Mutex<BTreeMap<String, f64>> {
+        RECORDS.get_or_init(|| Mutex::new(BTreeMap::new()))
+    }
+
+    pub fn record(key: &str, value: f64) {
+        records().lock().unwrap().insert(key.to_string(), value);
+    }
+
+    /// Best-effort parse of a previously written flat object: one
+    /// `"key": number` pair per line. Anything unrecognized is dropped
+    /// (this file is ours; nothing else writes it).
+    fn read_existing(path: &str) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        let Ok(text) = std::fs::read_to_string(path) else {
+            return out;
+        };
+        for line in text.lines() {
+            let line = line.trim().trim_end_matches(',');
+            let Some((key, val)) = line.split_once(':') else {
+                continue;
+            };
+            let key = key.trim().trim_matches('"');
+            if key.is_empty() {
+                continue;
+            }
+            if let Ok(v) = val.trim().parse::<f64>() {
+                out.insert(key.to_string(), v);
+            }
+        }
+        out
+    }
+
+    pub fn write(path: &str) {
+        let mut all = read_existing(path);
+        all.extend(records().lock().unwrap().iter().map(|(k, v)| (k.clone(), *v)));
+        if all.is_empty() {
+            return;
+        }
+        let body: Vec<String> = all
+            .iter()
+            .map(|(k, v)| format!("  \"{k}\": {v:.6}"))
+            .collect();
+        let json = format!("{{\n{}\n}}\n", body.join(",\n"));
+        match std::fs::write(path, json) {
+            Ok(()) => println!("perf trajectory written to {path} ({} keys)", all.len()),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}
+
 fn grp(id: u64, model: u32, n: usize, slo: f64) -> RequestGroup {
     RequestGroup {
         id: GroupId(id),
         model: ModelId(model),
         class: SloClass::Batch1,
-        slo_s: slo,
+        slo: SloTarget::new(slo, 1.0),
         earliest_arrival_s: 0.0,
         members: VecDeque::from_iter(0..n as u64),
         mega: false,
@@ -168,7 +229,7 @@ fn hot_path_request(arrival: f64) -> Request {
             arrival_s: arrival,
             model: ModelId(0),
             class: SloClass::Interactive,
-            slo_s: 20.0,
+            slo: SloClass::Interactive.target(),
             input_tokens: 161,
             output_tokens: 338,
             mega: false,
@@ -197,7 +258,7 @@ fn drive_slab(n: usize) -> u64 {
             if j % 4 == 0 {
                 q.requeue_evicted(id, 3, InstanceId(0));
             } else {
-                q.complete(id, Some(1.0), 2.0);
+                q.complete(id, Some(1.0), 2.0, 338);
                 acked += 1;
             }
         }
@@ -206,7 +267,7 @@ fn drive_slab(n: usize) -> u64 {
     let rest: Vec<u64> = q.waiting_ids().collect();
     for id in rest {
         q.mark_running(id);
-        q.complete(id, Some(1.0), 2.0);
+        q.complete(id, Some(1.0), 2.0, 338);
         acked += 1;
     }
     acked
@@ -261,6 +322,9 @@ fn bench_queue_hot_path() {
         "queue/hot-path speedup: {speedup:.1}x over pre-refactor baseline \
          ({legacy_ms:.2} ms -> {slab_ms:.2} ms, target >= 2x)"
     );
+    perf_log::record("queue_slab_ms", slab_ms);
+    perf_log::record("queue_legacy_ms", legacy_ms);
+    perf_log::record("queue_speedup_x", speedup);
 }
 
 fn bench_rwt() {
@@ -379,6 +443,9 @@ fn bench_sched_incremental() {
         "sched_incremental speedup: {speedup:.1}x delta vs full re-solve \
          ({full_ms:.3} ms -> {inc_ms:.3} ms, target >= 5x)"
     );
+    perf_log::record("sched_incremental_full_ms", full_ms);
+    perf_log::record("sched_incremental_delta_ms", inc_ms);
+    perf_log::record("sched_incremental_speedup_x", speedup);
     assert!(
         speedup >= 5.0,
         "incremental scheduler must be >=5x cheaper in steady state, got {speedup:.1}x"
@@ -539,6 +606,9 @@ fn bench_par_views() {
         "par_views speedup: {speedup:.2}x threaded vs serial refresh \
          ({serial_ms:.3} ms -> {par_ms:.3} ms, {cores} cores; floor 1.05x at >=4 cores)"
     );
+    perf_log::record("par_views_serial_ms", serial_ms);
+    perf_log::record("par_views_par_ms", par_ms);
+    perf_log::record("par_views_speedup_x", speedup);
     // The floor asserts a *wall-clock* property, so it is deliberately
     // modest (the digest equality above is the hard correctness gate):
     // 1.05x tolerates oversubscribed CI runners while still failing if
@@ -589,6 +659,7 @@ fn bench_par_views() {
         "par_views pool-vs-scoped: {pool_vs_scoped:.2}x persistent pool vs scoped spawn \
          ({scoped_ms:.3} ms -> {pool_ms:.3} ms, no-regression floor at >=4 cores)"
     );
+    perf_log::record("par_views_pool_vs_scoped_x", pool_vs_scoped);
     // Nominally the pool must be >= 1.0x the baseline it replaced (its
     // whole point is shedding ~20-50 µs of spawn cost per thread per
     // pass). The enforced floor leaves a 5% jitter allowance — two
@@ -678,6 +749,8 @@ fn bench_instance_step() {
                     generated: 0,
                     first_token_at: None,
                     arrival_s: 0.0,
+                    prefilled: 0,
+                    slice_left: 0,
                 },
                 t0,
             );
@@ -797,5 +870,6 @@ fn main() {
     if runs("runtime") {
         bench_runtime_decode();
     }
+    perf_log::write("BENCH_qlm.json");
     println!("\nfigure regeneration: `qlm figures [--fig N] [--full]` (see DESIGN.md index)");
 }

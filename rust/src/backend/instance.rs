@@ -4,6 +4,15 @@
 //! swapping. Timing comes from [`PerfModel`] — the simulated analogue of a
 //! profiled real instance (DESIGN.md §Substitutions).
 //!
+//! The iteration model is token-granular: prefill advances in *chunks*
+//! (bounded per iteration by `chunk_tokens`, so a mega prompt no longer
+//! stalls the whole batch for its full prefill — the sliding-window
+//! chunking of arXiv 2606.05933), and decode is accounted in fixed-length
+//! *slices* (`slice_tokens`; slice boundaries are the preemption points
+//! slice-level scheduling, arXiv 2406.13511, migrates requests at). With
+//! both knobs unset the step degenerates to whole-prompt prefill plus
+//! one-token decode — the classic continuous-batching iteration.
+//!
 //! All methods take `now` explicitly: the discrete-event simulator owns
 //! the clock, and the real PJRT-backed engine (`runtime::engine`) reuses
 //! the same batching logic with wall-clock timing.
@@ -53,11 +62,22 @@ pub struct RunningSeq {
     pub generated: u32,
     pub first_token_at: Option<f64>,
     pub arrival_s: f64,
+    /// Prompt tokens prefilled so far (chunked-prefill progress). Decode
+    /// is gated on `prefilled >= prompt_tokens`.
+    pub prefilled: u32,
+    /// Decode tokens left in the current slice; 0 when slicing is off.
+    pub slice_left: u32,
 }
 
 impl RunningSeq {
     pub fn remaining(&self) -> u32 {
         self.target_output.saturating_sub(self.generated)
+    }
+
+    /// True once the whole prompt has been prefilled (or recomputed) and
+    /// the sequence is in its decode phase.
+    pub fn prefill_done(&self) -> bool {
+        self.generated > 0 || self.prefilled >= self.prompt_tokens
     }
 }
 
@@ -72,6 +92,12 @@ pub struct StepOutcome {
     pub first_tokens: Vec<(u64, f64)>,
     /// Sequences internally preempted to CPU swap this iteration.
     pub preempted: u64,
+    /// Decode tokens produced this iteration, per sequence. Sequences
+    /// that only advanced prefill are not listed.
+    pub produced: Vec<(u64, u32)>,
+    /// Sequences whose decode slice expired this iteration — the
+    /// migration points the load balancer may move a request at.
+    pub slice_expired: Vec<u64>,
 }
 
 /// Why an admission attempt was refused.
@@ -117,6 +143,11 @@ pub struct Instance {
     busy_until: f64,
     pub stats: InstanceStats,
     last_step_end: f64,
+    /// Per-iteration prefill token budget shared by the batch; `None`
+    /// means whole prompts prefill in one iteration.
+    chunk_tokens: Option<u32>,
+    /// Decode slice length; slice boundaries are migration points.
+    slice_tokens: Option<u32>,
 }
 
 impl Instance {
@@ -132,7 +163,31 @@ impl Instance {
             busy_until: 0.0,
             stats: InstanceStats::default(),
             last_step_end: 0.0,
+            chunk_tokens: None,
+            slice_tokens: None,
         }
+    }
+
+    /// Configure the token-granular knobs: per-iteration prefill chunk
+    /// budget and decode slice length. `None` disables the respective
+    /// behavior. Applies to subsequent admissions/iterations.
+    pub fn set_token_knobs(&mut self, chunk_tokens: Option<u32>, slice_tokens: Option<u32>) {
+        self.chunk_tokens = chunk_tokens;
+        self.slice_tokens = slice_tokens;
+    }
+
+    /// Override just the prefill chunk budget (the sliding-window chunk
+    /// controller adjusts this between iterations).
+    pub fn set_chunk_tokens(&mut self, chunk_tokens: Option<u32>) {
+        self.chunk_tokens = chunk_tokens;
+    }
+
+    pub fn chunk_tokens(&self) -> Option<u32> {
+        self.chunk_tokens
+    }
+
+    pub fn slice_tokens(&self) -> Option<u32> {
+        self.slice_tokens
     }
 
     /// Profiled constants for `model` on this instance's GPU (cached —
@@ -240,7 +295,11 @@ impl Instance {
     /// KV for the prompt is allocated; prefill is charged in the next
     /// `step`. `kv_restore_tokens` > 0 marks a previously evicted request
     /// whose KV is being restored instead of recomputed.
-    pub fn try_admit(&mut self, seq: RunningSeq, now: f64) -> Result<(), (RunningSeq, AdmitError)> {
+    pub fn try_admit(
+        &mut self,
+        mut seq: RunningSeq,
+        now: f64,
+    ) -> Result<(), (RunningSeq, AdmitError)> {
         if self.is_swapping(now) {
             return Err((seq, AdmitError::Busy));
         }
@@ -257,6 +316,15 @@ impl Instance {
         let tokens = seq.prompt_tokens as u64 + seq.generated as u64;
         match self.kv.alloc_seq(seq.req_id, tokens) {
             Ok(()) => {
+                if seq.generated > 0 || seq.first_token_at.is_some() {
+                    // Previously evicted sequence: its prompt KV is
+                    // recomputed off the inference path (§5), so it
+                    // re-enters fully prefilled.
+                    seq.prefilled = seq.prompt_tokens;
+                }
+                if let Some(s) = self.slice_tokens {
+                    seq.slice_left = s.max(1);
+                }
                 self.running.push(seq);
                 Ok(())
             }
@@ -316,7 +384,7 @@ impl Instance {
     /// CPU swap (cheap re-admission after eviction).
     pub fn try_restore(
         &mut self,
-        seq: RunningSeq,
+        mut seq: RunningSeq,
         now: f64,
     ) -> Result<(), (RunningSeq, AdmitError)> {
         if self.kv.cpu_resident(seq.req_id).is_some() {
@@ -325,6 +393,11 @@ impl Instance {
             }
             match self.kv.restore_from_cpu(seq.req_id) {
                 Ok(_) => {
+                    // Parked KV covers the full prompt — no re-prefill.
+                    seq.prefilled = seq.prompt_tokens;
+                    if let Some(s) = self.slice_tokens {
+                        seq.slice_left = s.max(1);
+                    }
                     self.running.push(seq);
                     Ok(())
                 }
@@ -336,9 +409,10 @@ impl Instance {
     }
 
     /// One continuous-batching iteration: resume preempted sequences if
-    /// space allows, prefill newly admitted sequences, generate one token
-    /// for every running sequence, preempt on KV overflow, and retire
-    /// finished sequences.
+    /// space allows, advance prefill chunks under the shared per-iteration
+    /// token budget (shortest remaining prefill first), generate one token
+    /// for every fully-prefilled sequence, preempt on KV overflow, account
+    /// decode slices, and retire finished sequences.
     pub fn step(&mut self, now: f64) -> StepOutcome {
         let mut out = StepOutcome::default();
         if self.is_swapping(now) {
@@ -367,24 +441,56 @@ impl Instance {
             return out;
         }
 
-        // 2. Prefill any sequence that hasn't produced its first token.
-        //    Prefills batch together in one iteration; compute-bound, so
-        //    cost is additive per prompt.
+        // 2. Chunked prefill: advance un-prefilled sequences under the
+        //    shared per-iteration token budget, shortest remaining prefill
+        //    first (ties by admission order) — a mega prompt mid-prefill
+        //    must not starve a short urgent prompt of the budget; letting
+        //    short prefills overtake long ones is the point of chunking.
+        //    Prefill is compute-bound, so cost is additive per chunk (each
+        //    chunk pays the per-iteration overhead once).
+        let mut budget = self.chunk_tokens.unwrap_or(u32::MAX).max(1);
         let mut prefill_s = 0.0;
-        for seq in self.running.iter_mut() {
-            if seq.first_token_at.is_none() && seq.generated == 0 {
-                prefill_s += perf.prefill_s;
+        let mut chunk_cost: HashMap<u64, f64> = HashMap::new();
+        let mut needy: Vec<usize> = (0..self.running.len())
+            .filter(|&i| !self.running[i].prefill_done())
+            .collect();
+        needy.sort_by_key(|&i| {
+            let s = &self.running[i];
+            (s.prompt_tokens - s.prefilled, i)
+        });
+        for i in needy {
+            if budget == 0 {
+                break;
             }
+            let seq = &mut self.running[i];
+            let adv = budget.min(seq.prompt_tokens - seq.prefilled);
+            seq.prefilled += adv;
+            budget -= adv;
+            let cost = perf.prefill_cost(adv);
+            prefill_s += cost;
+            chunk_cost.insert(seq.req_id, cost);
         }
-        let decode_s = perf.step_time(self.kv.gpu_tokens());
+
+        // Decode time is charged only when at least one sequence is past
+        // its prefill (a batch of pure mid-prefill chunks emits no token).
+        let decode_s = if self.running.iter().any(|s| s.prefill_done()) {
+            perf.step_time(self.kv.gpu_tokens())
+        } else {
+            0.0
+        };
         let dt = prefill_s + decode_s;
         let t_end = now + dt;
 
-        // 3. Decode one token per running sequence; allocate KV growth,
-        //    preempting the most recently admitted sequences on overflow
-        //    (vLLM preempts the newest to guarantee progress of the oldest).
+        // 3. Decode one token per fully-prefilled sequence; allocate KV
+        //    growth, preempting the most recently admitted sequences on
+        //    overflow (vLLM preempts the newest to guarantee progress of
+        //    the oldest).
         let mut idx = 0;
         while idx < self.running.len() {
+            if !self.running[idx].prefill_done() {
+                idx += 1;
+                continue;
+            }
             let req_id = self.running[idx].req_id;
             match self.kv.append_token(req_id) {
                 Ok(()) => idx += 1,
@@ -421,20 +527,37 @@ impl Instance {
             }
         }
 
-        // 4. Account generation and completions. Prefills within one
-        // iteration are staggered: the i-th new prompt's first token lands
-        // after the cumulative prefill time of the prompts before it.
+        // 4. Account generation, slices, and completions. Prefill chunks
+        // within one iteration are staggered: a prompt finishing its
+        // prefill gets its first token after the cumulative chunk time of
+        // the prompts before it.
         let mut i = 0;
         let mut cum_prefill = 0.0;
         while i < self.running.len() {
             let seq = &mut self.running[i];
+            if let Some(&c) = chunk_cost.get(&seq.req_id) {
+                cum_prefill += c;
+            }
+            if !seq.prefill_done() {
+                i += 1;
+                continue;
+            }
             seq.generated += 1;
             self.stats.tokens_generated += 1;
+            out.produced.push((seq.req_id, 1));
             if seq.first_token_at.is_none() {
-                cum_prefill += perf.prefill_s;
                 let t = now + cum_prefill;
                 seq.first_token_at = Some(t);
                 out.first_tokens.push((seq.req_id, t));
+            }
+            if let Some(s) = self.slice_tokens {
+                if seq.slice_left > 0 {
+                    seq.slice_left -= 1;
+                }
+                if seq.slice_left == 0 && seq.generated < seq.target_output {
+                    out.slice_expired.push(seq.req_id);
+                    seq.slice_left = s.max(1);
+                }
             }
             if seq.generated >= seq.target_output {
                 let done = self.running.swap_remove(i);
@@ -515,6 +638,8 @@ mod tests {
             generated: 0,
             first_token_at: None,
             arrival_s: 0.0,
+            prefilled: 0,
+            slice_left: 0,
         }
     }
 
@@ -564,8 +689,8 @@ mod tests {
         assert_eq!(completed.len(), 1);
         assert_eq!(completed[0].generated, 5);
         let perf = *inst.perf_cached(ModelId(0));
-        // First token lands after one prefill.
-        assert!((first.unwrap() - (t0 + perf.prefill_s)).abs() < 1e-9);
+        // First token lands after one token-accurate prefill.
+        assert!((first.unwrap() - (t0 + perf.prefill_cost(100))).abs() < 1e-9);
         assert_eq!(inst.stats.requests_completed, 1);
         assert_eq!(inst.resident_tokens(), 0, "KV freed at completion");
     }
@@ -584,7 +709,95 @@ mod tests {
         let out2 = inst.step(now);
         // Step with one new prefill costs prefill + decode (incl. KV read).
         let perf = *inst.perf_cached(ModelId(0));
-        assert!((out2.dt - (perf.prefill_s + perf.step_time(resident))).abs() < 1e-9);
+        assert!((out2.dt - (perf.prefill_cost(50) + perf.step_time(resident))).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chunked_prefill_spreads_over_iterations() {
+        let mut inst = mk_instance();
+        inst.set_token_knobs(Some(256), None);
+        let t0 = inst.busy_until();
+        inst.try_admit(mk_seq(1, 600, 5), t0).unwrap();
+        let perf = *inst.perf_cached(ModelId(0));
+
+        // Iteration 1: chunk of 256, no token emitted yet.
+        let o1 = inst.step(t0);
+        assert!(o1.first_tokens.is_empty());
+        assert!(o1.produced.is_empty());
+        assert!((o1.dt - perf.prefill_cost(256)).abs() < 1e-9);
+        // Iteration 2: second chunk of 256.
+        let o2 = inst.step(t0 + o1.dt);
+        assert!(o2.first_tokens.is_empty());
+        // Iteration 3: final 88-token chunk plus the first decode token.
+        let now3 = t0 + o1.dt + o2.dt;
+        let o3 = inst.step(now3);
+        assert_eq!(o3.produced, vec![(1, 1)]);
+        let (_, first) = o3.first_tokens[0];
+        assert!((first - (now3 + perf.prefill_cost(88))).abs() < 1e-9);
+        assert!((o3.dt - (perf.prefill_cost(88) + perf.step_time(600))).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chunk_budget_ties_break_by_admission_order() {
+        let mut inst = mk_instance();
+        inst.set_token_knobs(Some(100), None);
+        let t0 = inst.busy_until();
+        inst.try_admit(mk_seq(1, 80, 5), t0).unwrap();
+        inst.try_admit(mk_seq(2, 80, 5), t0).unwrap();
+        // Equal remaining prefill → admission order: seq 1 prefills all
+        // 80 of the 100-token budget, seq 2 only 20.
+        let o1 = inst.step(t0);
+        assert_eq!(o1.first_tokens.len(), 1);
+        assert_eq!(o1.first_tokens[0].0, 1);
+        // Next iteration finishes seq 2's prefill.
+        let o2 = inst.step(t0 + o1.dt);
+        assert!(o2.first_tokens.iter().any(|&(id, _)| id == 2));
+    }
+
+    #[test]
+    fn short_prefill_overtakes_resident_mega_within_budget() {
+        let mut inst = mk_instance();
+        inst.set_token_knobs(Some(256), None);
+        let t0 = inst.busy_until();
+        // A mega prompt is admitted first and starts chunking.
+        inst.try_admit(mk_seq(1, 600, 5), t0).unwrap();
+        let o1 = inst.step(t0);
+        let now = t0 + o1.dt;
+        // A short prompt joins mid-prefill. Shortest-remaining-first
+        // budget order means it prefills fully THIS iteration and emits
+        // its first token while the mega is still chunking — the mega
+        // cannot starve it of the shared budget.
+        inst.try_admit(mk_seq(2, 100, 5), now).unwrap();
+        let o2 = inst.step(now);
+        assert!(o2.first_tokens.iter().any(|&(id, _)| id == 2));
+        assert!(o2.produced.contains(&(2, 1)));
+        assert!(o2.first_tokens.iter().all(|&(id, _)| id != 1));
+    }
+
+    #[test]
+    fn decode_slices_expire_and_reset() {
+        let mut inst = mk_instance();
+        inst.set_token_knobs(None, Some(2));
+        let t0 = inst.busy_until();
+        inst.try_admit(mk_seq(1, 10, 10), t0).unwrap();
+        let mut now = t0;
+        let mut expiries = 0;
+        let mut completed = false;
+        for _ in 0..20 {
+            let out = inst.step(now);
+            now += out.dt;
+            expiries += out.slice_expired.len();
+            if !out.completed.is_empty() {
+                // The final token must not also report a slice expiry.
+                assert!(out.slice_expired.is_empty());
+                completed = true;
+                break;
+            }
+        }
+        assert!(completed);
+        // 10 decode tokens at slice length 2: boundaries after tokens
+        // 2, 4, 6, 8 (the 10th is completion, not a migration point).
+        assert_eq!(expiries, 4);
     }
 
     #[test]

@@ -59,9 +59,15 @@ pub struct PerfModel {
     /// Profiling) — when set, the RWT estimator uses this instead of the
     /// analytic model.
     pub measured_theta: Option<f64>,
-    /// Constant prefill time per request, seconds (`P`). §6: prefill is
-    /// near-constant per model for in-distribution prompt lengths.
+    /// Prefill time for a *mean-length* prompt, seconds (`P`). §6:
+    /// prefill is near-constant per model for in-distribution prompt
+    /// lengths, so the RWT estimator prices with this constant; the
+    /// execution backend charges the token-accurate [`Self::prefill_cost`]
+    /// so mega prompts actually block the batch they run in.
     pub prefill_s: f64,
+    /// Compute-bound prefill slope, seconds per prompt token — the
+    /// per-token cost a prefill chunk of any size is billed at.
+    pub prefill_s_per_token: f64,
     /// Continuous-batching inefficiency factor (`ε` ≥ 1).
     pub epsilon: f64,
     /// Max tokens resident in the KV cache across the running batch.
@@ -120,10 +126,10 @@ impl PerfModel {
         let kv_read_s_per_token =
             model.kv_bytes_per_token as f64 / (bw * 1024.0 * 1024.0 * 1024.0);
 
-        // Prefill: compute-bound on the mean prompt.
-        let flops = 2.0 * model.params_b * 1e9 * mean_prompt_tokens;
-        let prefill_s = flops / (spec.bf16_tflops * 1e12 * tp as f64 * PREFILL_EFF)
-            + STEP_OVERHEAD_S;
+        // Prefill: compute-bound, linear in prompt tokens.
+        let prefill_s_per_token =
+            2.0 * model.params_b * 1e9 / (spec.bf16_tflops * 1e12 * tp as f64 * PREFILL_EFF);
+        let prefill_s = prefill_s_per_token * mean_prompt_tokens + STEP_OVERHEAD_S;
 
         // KV capacity from leftover memory.
         let kv_mem_bytes = ((total_mem_gib - model.weight_gib) * 1024.0 * 1024.0 * 1024.0)
@@ -142,6 +148,7 @@ impl PerfModel {
             kv_read_s_per_token,
             measured_theta: None,
             prefill_s,
+            prefill_s_per_token,
             epsilon: 1.15,
             token_capacity,
             max_batch: 256,
@@ -155,6 +162,15 @@ impl PerfModel {
     pub fn step_time(&self, resident_tokens: u64) -> f64 {
         (self.decode_s_per_token + resident_tokens as f64 * self.kv_read_s_per_token)
             * self.epsilon
+    }
+
+    /// Token-accurate prefill cost for `tokens` prompt tokens processed
+    /// as one contiguous chunk (chunked-prefill step cost): the
+    /// compute-bound slope plus the per-iteration admission overhead.
+    /// `prefill_cost(mean_prompt)` ≡ `prefill_s`, so the whole-request
+    /// path is the single-chunk special case.
+    pub fn prefill_cost(&self, tokens: u32) -> f64 {
+        self.prefill_s_per_token * tokens as f64 + STEP_OVERHEAD_S
     }
 
     /// Token generation throughput Θ (tokens/s) at running batch size `b`
@@ -260,6 +276,21 @@ mod tests {
         assert!(a10.decode_s_per_token > a100.decode_s_per_token);
         assert!(a10.token_capacity < a100.token_capacity);
         assert!(a10.steady_throughput(500.0) < a100.steady_throughput(500.0));
+    }
+
+    #[test]
+    fn prefill_cost_linear_and_consistent_with_profile_constant() {
+        let p = &profiles()[1]; // Vicuna-13B
+        // The profiled constant is the mean-prompt single-chunk cost.
+        assert!((p.prefill_cost(161) - p.prefill_s).abs() < 1e-9);
+        // Each chunk pays the per-iteration overhead, so two chunks cost
+        // exactly one extra overhead over the contiguous prefill.
+        let whole = p.prefill_cost(3200);
+        let halves = p.prefill_cost(1600) * 2.0;
+        assert!(halves > whole);
+        assert!(halves - whole < 0.005, "only the fixed overhead doubles");
+        // A mega prompt costs ~20x the mean prompt, not the same constant.
+        assert!(p.prefill_cost(3200) > 10.0 * p.prefill_cost(161));
     }
 
     #[test]

@@ -26,6 +26,7 @@ impl SchedulingPolicy for EdfPolicy {
         PolicyPlan {
             orders,
             unservable: Vec::new(),
+            chunk_tokens: HashMap::new(),
         }
     }
 }

@@ -97,6 +97,7 @@ impl SchedulingPolicy for EdfSwapPolicy {
         PolicyPlan {
             orders,
             unservable: Vec::new(),
+            chunk_tokens: HashMap::new(),
         }
     }
 

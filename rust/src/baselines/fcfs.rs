@@ -28,6 +28,7 @@ impl SchedulingPolicy for FcfsPolicy {
         PolicyPlan {
             orders,
             unservable: Vec::new(),
+            chunk_tokens: HashMap::new(),
         }
     }
 }

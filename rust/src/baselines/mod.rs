@@ -25,6 +25,7 @@
 //! metrics labels, LSO flag derivation); [`build_policy`] turns it into
 //! the stateful [`SchedulingPolicy`] implementation the engine drives.
 
+pub mod chunked;
 pub mod edf;
 pub mod edf_swap;
 pub mod fcfs;
@@ -34,6 +35,7 @@ pub mod round_robin;
 pub mod sjf;
 pub mod wfq;
 
+pub use chunked::ChunkedPolicy;
 pub use edf::EdfPolicy;
 pub use edf_swap::EdfSwapPolicy;
 pub use fcfs::FcfsPolicy;
@@ -72,6 +74,9 @@ pub enum Policy {
     /// SHEPHERD-style: groups + placement, deterministic worst-case
     /// estimates, fixed batches, no eviction.
     Shepherd,
+    /// EDF ordering + SLO-aware sliding-window chunked prefill and
+    /// decode slices (token-granular iteration scheduling).
+    Chunked,
 }
 
 impl Policy {
@@ -113,6 +118,7 @@ impl Policy {
             Policy::Sjf => "sjf".into(),
             Policy::Wfq => "wfq".into(),
             Policy::Shepherd => "shepherd".into(),
+            Policy::Chunked => "chunked".into(),
         }
     }
 
@@ -153,6 +159,16 @@ impl Policy {
                 load_balancing: true,
                 model_swapping: true,
             },
+            // Chunked migrates at slice boundaries through the evict /
+            // restore KV path, so eviction stays on for the engine's
+            // slice-migration machinery (not for QLM's head-of-queue
+            // eviction LSO — the policy never orders evictions itself).
+            Policy::Chunked => LsoConfig {
+                ordered_pulling: true,
+                eviction: true,
+                load_balancing: true,
+                model_swapping: true,
+            },
         }
     }
 
@@ -182,15 +198,21 @@ impl Policy {
 /// price device time through it) and drop the rest. `pool` is the
 /// engine's persistent worker pool — handed to the global scheduler so
 /// the repricing walk shares the view refresh's parked workers.
+/// `chunk_tokens` seeds the chunked policy's base prefill budget
+/// (ignored by every other policy).
 pub fn build_policy(
     policy: Policy,
     sched_cfg: SchedulerConfig,
     estimator: RwtEstimator,
     pool: Arc<WorkerPool>,
+    chunk_tokens: Option<u32>,
 ) -> Box<dyn SchedulingPolicy> {
     match policy {
         Policy::VllmFcfs => Box::new(FcfsPolicy),
         Policy::Edf => Box::new(EdfPolicy),
+        Policy::Chunked => Box::new(ChunkedPolicy::new(
+            chunk_tokens.unwrap_or(chunked::DEFAULT_CHUNK_TOKENS),
+        )),
         Policy::EdfSwap => Box::new(EdfSwapPolicy::new(estimator)),
         Policy::Sjf => Box::new(SjfPolicy::new(estimator.profiles.clone())),
         Policy::Wfq => Box::new(WfqPolicy::new(estimator)),
@@ -219,6 +241,7 @@ mod tests {
             Policy::Sjf,
             Policy::Wfq,
             Policy::Shepherd,
+            Policy::Chunked,
         ]
         .iter()
         .map(|p| p.name())
@@ -274,5 +297,16 @@ mod tests {
         assert!(!Policy::Sjf.conservative_estimator());
         assert!(!Policy::Sjf.fixed_batches());
         assert_eq!(Policy::Sjf.name(), "sjf");
+    }
+
+    #[test]
+    fn chunked_is_a_per_request_slice_migrating_policy() {
+        assert!(!Policy::Chunked.uses_groups());
+        assert!(!Policy::Chunked.conservative_estimator());
+        assert!(!Policy::Chunked.fixed_batches());
+        assert_eq!(Policy::Chunked.name(), "chunked");
+        let l = Policy::Chunked.lso();
+        assert!(l.eviction, "slice migration rides the evict/restore path");
+        assert!(l.load_balancing);
     }
 }

@@ -41,10 +41,14 @@ pub struct PolicyCtx<'a> {
 /// virtual queue replaced, instances absent keep their current order
 /// (full rebuilds simply emit every instance). `unservable` lists
 /// groups no instance can serve, for the engine's admission path.
+/// `chunk_tokens` overrides an instance's per-iteration prefill budget
+/// (sliding-window chunk control); instances absent keep their current
+/// budget — only chunk-aware policies populate it.
 #[derive(Debug, Default)]
 pub struct PolicyPlan {
     pub orders: HashMap<InstanceId, Vec<GroupId>>,
     pub unservable: Vec<GroupId>,
+    pub chunk_tokens: HashMap<InstanceId, u32>,
 }
 
 /// A queue-ordering strategy, dispatched from the engine's

@@ -59,6 +59,7 @@ impl SchedulingPolicy for QlmPolicy {
         PolicyPlan {
             orders: assignment.orders,
             unservable: assignment.unservable,
+            chunk_tokens: Default::default(),
         }
     }
 

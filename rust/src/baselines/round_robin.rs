@@ -44,6 +44,7 @@ impl SchedulingPolicy for RoundRobinPolicy {
         PolicyPlan {
             orders,
             unservable: Vec::new(),
+            chunk_tokens: HashMap::new(),
         }
     }
 }

@@ -53,6 +53,7 @@ impl SchedulingPolicy for SjfPolicy {
         PolicyPlan {
             orders,
             unservable: Vec::new(),
+            chunk_tokens: HashMap::new(),
         }
     }
 }

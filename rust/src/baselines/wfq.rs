@@ -114,6 +114,7 @@ impl SchedulingPolicy for WfqPolicy {
         PolicyPlan {
             orders,
             unservable: Vec::new(),
+            chunk_tokens: HashMap::new(),
         }
     }
 

@@ -84,7 +84,7 @@ impl AdmissionController {
             if class == SloClass::Interactive {
                 continue; // interactive traffic is never shed
             }
-            let slo = class.slo_s();
+            let slo = class.target().ttft_s;
             let gate = &mut self.shedding[class.index()];
             if fleet_maxed && drain_s > self.cfg.shed_frac * slo {
                 *gate = true;

@@ -120,8 +120,10 @@ impl Autoscaler {
     ) -> ScaleDecision {
         let breached = pressures
             .iter()
-            .any(|p| p.waiting > 0 && p.drain_s > p.class.slo_s() * self.cfg.up_frac);
-        let calm = pressures.iter().all(|p| p.drain_s < p.class.slo_s() * self.cfg.down_frac);
+            .any(|p| p.waiting > 0 && p.drain_s > p.class.target().ttft_s * self.cfg.up_frac);
+        let calm = pressures
+            .iter()
+            .all(|p| p.drain_s < p.class.target().ttft_s * self.cfg.down_frac);
         if breached {
             self.breach_streak += 1;
             self.calm_streak = 0;
@@ -152,7 +154,7 @@ impl Autoscaler {
             let model = pressures
                 .iter()
                 .filter(|p| p.waiting > 0 && p.hottest_model.is_some())
-                .find(|p| p.drain_s > p.class.slo_s() * self.cfg.up_frac)
+                .find(|p| p.drain_s > p.class.target().ttft_s * self.cfg.up_frac)
                 .or_else(|| {
                     pressures
                         .iter()

@@ -89,7 +89,7 @@ struct ClassDemand {
 impl ClassDemand {
     /// The rate the planner sizes for: peak for latency-bound classes.
     fn rate_eff(&self, cutoff_s: f64) -> f64 {
-        if self.class.slo_s() <= cutoff_s {
+        if self.class.target().ttft_s <= cutoff_s {
             self.peak_rate
         } else {
             self.mean_rate
@@ -121,6 +121,8 @@ pub struct ClassPrediction {
     /// Mean predicted completion of one SLO-window of arrivals
     /// (infinite when the model cannot be placed at all).
     pub predicted_s: f64,
+    /// The class's TTFT bound (the deadline the drain prediction is
+    /// judged against; TPOT is a runtime property the planner can't see).
     pub slo_s: f64,
     /// Prediction within the deadline?
     pub ok: bool,
@@ -195,7 +197,7 @@ impl CapacityPlanner {
             // `Dump` has no finite rate: size it so the standing queue
             // of `count` requests drains within the stream's own SLO —
             // the deadline the dump is judged by.
-            let dump_rate = s.count as f64 / s.class.slo_s().max(1.0);
+            let dump_rate = s.count as f64 / s.class.target().ttft_s.max(1.0);
             let mean = s.arrivals.mean_rate().unwrap_or(dump_rate);
             let peak = s.arrivals.peak_rate().unwrap_or(mean).max(mean);
             let share = 1.0 / s.models.len().max(1) as f64;
@@ -367,12 +369,13 @@ impl CapacityPlanner {
                 .enumerate()
                 .map(|(i, d)| {
                     let rate = d.rate_eff(self.cfg.peak_slo_cutoff_s);
-                    let len = ((rate * d.class.slo_s() / n as f64).ceil() as usize).max(1);
+                    let len =
+                        ((rate * d.class.target().ttft_s / n as f64).ceil() as usize).max(1);
                     RequestGroup {
                         id: GroupId(i as u64),
                         model: d.model,
                         class: d.class,
-                        slo_s: d.class.slo_s(),
+                        slo: d.class.target(),
                         earliest_arrival_s: 0.0,
                         members: VecDeque::from_iter(0..len as u64),
                         mega: d.mega,
@@ -382,7 +385,7 @@ impl CapacityPlanner {
             let refs: Vec<&RequestGroup> = groups.iter().collect();
             let est = self.estimator.estimate_queue(&refs, &perf, Some(alloc.model), |_| 0.0);
             for ((d, g), e) in ds.iter().zip(&groups).zip(&est) {
-                let ok = e.completion_mean_s <= g.slo_s;
+                let ok = e.completion_mean_s <= g.slo.ttft_s;
                 all_ok &= ok;
                 classes.push(ClassPrediction {
                     model: d.model,
@@ -390,7 +393,7 @@ impl CapacityPlanner {
                     mega: d.mega,
                     rate: d.rate_eff(self.cfg.peak_slo_cutoff_s),
                     predicted_s: e.completion_mean_s,
-                    slo_s: g.slo_s,
+                    slo_s: g.slo.ttft_s,
                     ok,
                 });
             }
@@ -404,7 +407,7 @@ impl CapacityPlanner {
                     mega: d.mega,
                     rate: d.rate_eff(self.cfg.peak_slo_cutoff_s),
                     predicted_s: f64::INFINITY,
-                    slo_s: d.class.slo_s(),
+                    slo_s: d.class.target().ttft_s,
                     ok: false,
                 });
             }

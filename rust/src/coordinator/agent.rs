@@ -182,7 +182,7 @@ impl QlmAgent {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::SloClass;
+    use crate::workload::{SloClass, SloTarget};
     use std::collections::VecDeque;
 
     fn grp(id: u64, model: u32, members: &[u64]) -> RequestGroup {
@@ -190,7 +190,7 @@ mod tests {
             id: GroupId(id),
             model: ModelId(model),
             class: SloClass::Batch1,
-            slo_s: 60.0,
+            slo: SloTarget::new(60.0, 1.0),
             earliest_arrival_s: 0.0,
             members: VecDeque::from(members.to_vec()),
             mega: false,

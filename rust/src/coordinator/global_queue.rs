@@ -111,8 +111,9 @@ impl GlobalQueue {
     }
 
     /// Ack a completed request: removed from the broker, archived for
-    /// metrics.
-    pub fn complete(&mut self, id: u64, first_token_s: Option<f64>, completed_s: f64) {
+    /// metrics. `generated` is the final decode-token count — TPOT
+    /// accounting needs it alongside the first-token timestamp.
+    pub fn complete(&mut self, id: u64, first_token_s: Option<f64>, completed_s: f64, generated: u32) {
         if let Some(slot) = self.slots.get_mut(id as usize) {
             if let Some(mut r) = slot.take() {
                 self.live -= 1;
@@ -121,6 +122,7 @@ impl GlobalQueue {
                     r.first_token_s = first_token_s;
                 }
                 r.completed_s = Some(completed_s);
+                r.generated = generated;
                 self.completed.push(r);
             }
         }
@@ -196,14 +198,14 @@ impl GlobalQueue {
 mod tests {
     use super::*;
     use crate::backend::{InstanceId, ModelId};
-    use crate::workload::{SloClass, TraceRequest};
+    use crate::workload::{SloClass, SloTarget, TraceRequest};
 
     fn trace_req(arrival: f64) -> TraceRequest {
         TraceRequest {
             arrival_s: arrival,
             model: ModelId(0),
             class: SloClass::Interactive,
-            slo_s: 20.0,
+            slo: SloTarget::new(20.0, 0.25),
             input_tokens: 100,
             output_tokens: 50,
             mega: false,
@@ -236,7 +238,7 @@ mod tests {
         assert_eq!(q.len_waiting(), 0);
         assert_eq!(q.get(id).unwrap().state, RequestState::Running);
         q.record_first_token(id, 3.0);
-        q.complete(id, None, 10.0);
+        q.complete(id, None, 10.0, 50);
         assert!(q.get(id).is_none());
         assert_eq!(q.completed.len(), 1);
         assert_eq!(q.completed[0].ttft(), Some(3.0));
@@ -302,7 +304,7 @@ mod tests {
         let mut q = GlobalQueue::new();
         let a = submit_one(&mut q, 0.0);
         q.mark_running(a);
-        q.complete(a, Some(1.0), 2.0);
+        q.complete(a, Some(1.0), 2.0, 50);
         let b = submit_one(&mut q, 3.0);
         assert!(b > a, "tombstoned slot must not be recycled");
         assert!(q.get(a).is_none());
@@ -332,8 +334,8 @@ mod tests {
         let mut q = GlobalQueue::new();
         let a = submit_one(&mut q, 0.0);
         q.mark_running(a);
-        q.complete(a, Some(1.0), 2.0);
-        q.complete(a, Some(5.0), 6.0);
+        q.complete(a, Some(1.0), 2.0, 50);
+        q.complete(a, Some(5.0), 6.0, 50);
         assert_eq!(q.completed.len(), 1);
         assert_eq!(q.len_total(), 0);
     }

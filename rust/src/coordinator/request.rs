@@ -1,11 +1,12 @@
 //! Request model (Def. 2.1/2.2): prompt token count plus metadata — model
-//! type and SLO value (p99 TTFT bound). The ground-truth output length is
-//! carried for the execution backend only; the coordinator's estimator
-//! never reads it (the paper's premise: output lengths are unknown a
-//! priori and must be modeled as a distribution).
+//! type and SLO target (p99 TTFT bound + per-token TPOT bound). The
+//! ground-truth output length is carried for the execution backend only;
+//! the coordinator's estimator never reads it (the paper's premise:
+//! output lengths are unknown a priori and must be modeled as a
+//! distribution).
 
 use crate::backend::ModelId;
-use crate::workload::{SloClass, TraceRequest};
+use crate::workload::{SloClass, SloTarget, TraceRequest};
 
 /// Lifecycle state of a request in QLM (§3.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,8 +31,8 @@ pub struct Request {
     pub id: u64,
     pub model: ModelId,
     pub class: SloClass,
-    /// TTFT SLO in seconds relative to arrival.
-    pub slo_s: f64,
+    /// TTFT + TPOT bounds relative to arrival / first token.
+    pub slo: SloTarget,
     pub input_tokens: u32,
     /// Ground truth output length — execution backend only.
     pub output_tokens_hidden: u32,
@@ -54,7 +55,7 @@ impl Request {
             id,
             model: t.model,
             class: t.class,
-            slo_s: t.slo_s,
+            slo: t.slo,
             input_tokens: t.input_tokens,
             output_tokens_hidden: t.output_tokens,
             arrival_s: t.arrival_s,
@@ -67,9 +68,10 @@ impl Request {
         }
     }
 
-    /// Absolute deadline for the first token.
+    /// Absolute deadline for the first token (the TTFT dimension drives
+    /// queue ordering; TPOT is policed at decode time).
     pub fn deadline(&self) -> f64 {
-        self.arrival_s + self.slo_s
+        self.arrival_s + self.slo.ttft_s
     }
 
     /// TTFT if the first token has been produced.
@@ -81,7 +83,7 @@ impl Request {
     /// violations once `now` passes the deadline.
     pub fn slo_met(&self, now: f64) -> Option<bool> {
         match self.ttft() {
-            Some(t) => Some(t <= self.slo_s),
+            Some(t) => Some(t <= self.slo.ttft_s),
             None if now > self.deadline() => Some(false),
             None => None,
         }
@@ -92,14 +94,14 @@ impl Request {
 mod tests {
     use super::*;
 
-    fn mk(arrival: f64, slo: f64) -> Request {
+    fn mk(arrival: f64, ttft_slo: f64) -> Request {
         Request::from_trace(
             1,
             &TraceRequest {
                 arrival_s: arrival,
                 model: ModelId(0),
                 class: SloClass::Interactive,
-                slo_s: slo,
+                slo: SloTarget::new(ttft_slo, 0.25),
                 input_tokens: 100,
                 output_tokens: 50,
                 mega: false,
@@ -108,7 +110,7 @@ mod tests {
     }
 
     #[test]
-    fn deadline_is_arrival_plus_slo() {
+    fn deadline_is_arrival_plus_ttft_slo() {
         let r = mk(10.0, 20.0);
         assert_eq!(r.deadline(), 30.0);
     }
@@ -133,5 +135,6 @@ mod tests {
         assert_eq!(r.input_tokens, 100);
         assert_eq!(r.output_tokens_hidden, 50);
         assert_eq!(r.generated, 0);
+        assert_eq!(r.slo.tpot_s, 0.25);
     }
 }

@@ -11,7 +11,7 @@ use std::collections::VecDeque;
 use crate::backend::ModelId;
 use crate::coordinator::request::Request;
 use crate::util::{kmeans::kmeans, Rng};
-use crate::workload::SloClass;
+use crate::workload::{SloClass, SloTarget};
 
 /// Identifier of a request group.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -23,8 +23,9 @@ pub struct RequestGroup {
     pub id: GroupId,
     pub model: ModelId,
     pub class: SloClass,
-    /// Tightest SLO among members (the group's binding constraint).
-    pub slo_s: f64,
+    /// Tightest SLO among members, per dimension (the group's binding
+    /// constraint). The TTFT bound anchors the group deadline.
+    pub slo: SloTarget,
     /// Earliest member arrival (deadline anchor for the group).
     pub earliest_arrival_s: f64,
     /// Member request ids in FCFS order.
@@ -43,9 +44,9 @@ impl RequestGroup {
         self.members.is_empty()
     }
 
-    /// Group deadline: earliest member arrival + group SLO.
+    /// Group deadline: earliest member arrival + group TTFT SLO.
     pub fn deadline(&self) -> f64 {
-        self.earliest_arrival_s + self.slo_s
+        self.earliest_arrival_s + self.slo.ttft_s
     }
 }
 
@@ -111,7 +112,7 @@ impl Grouper {
             .iter()
             .map(|r| {
                 vec![
-                    r.slo_s.ln() * 3.0,
+                    r.slo.ttft_s.ln() * 3.0,
                     (r.input_tokens as f64 / 100.0).min(20.0),
                     if r.mega { 30.0 } else { 0.0 },
                 ]
@@ -160,7 +161,10 @@ impl Grouper {
     }
 
     fn build_group(&mut self, model: ModelId, members: &[&Request]) -> RequestGroup {
-        let slo_s = members.iter().map(|r| r.slo_s).fold(f64::INFINITY, f64::min);
+        let slo = members
+            .iter()
+            .map(|r| r.slo)
+            .fold(SloTarget::new(f64::INFINITY, f64::INFINITY), SloTarget::min);
         let earliest = members
             .iter()
             .map(|r| r.arrival_s)
@@ -171,7 +175,7 @@ impl Grouper {
             id: self.fresh_id(),
             model,
             class,
-            slo_s,
+            slo,
             earliest_arrival_s: earliest,
             members: members.iter().map(|r| r.id).collect(),
             mega,
@@ -190,7 +194,7 @@ impl Grouper {
                 && g.len() < cap
         }) {
             g.members.push_back(req.id);
-            g.slo_s = g.slo_s.min(req.slo_s);
+            g.slo = g.slo.min(req.slo);
             g.earliest_arrival_s = g.earliest_arrival_s.min(req.arrival_s);
             return g.id;
         }
@@ -198,7 +202,7 @@ impl Grouper {
             id: self.fresh_id(),
             model: req.model,
             class: req.class,
-            slo_s: req.slo_s,
+            slo: req.slo,
             earliest_arrival_s: req.arrival_s,
             members: VecDeque::from([req.id]),
             mega: req.mega,
@@ -221,7 +225,7 @@ mod tests {
                 arrival_s: arrival,
                 model: ModelId(model),
                 class,
-                slo_s: class.slo_s(),
+                slo: class.target(),
                 input_tokens: if mega { 2000 } else { 150 },
                 output_tokens: 100,
                 mega,

@@ -219,7 +219,7 @@ pub(crate) mod testutil {
             } else {
                 SloClass::Batch1
             },
-            slo_s: slo,
+            slo: crate::workload::SloTarget::new(slo, 1.0),
             earliest_arrival_s: arrival,
             members: VecDeque::from_iter(0..n as u64),
             mega: false,

@@ -100,7 +100,7 @@ impl VirtualQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::SloClass;
+    use crate::workload::{SloClass, SloTarget};
     use std::collections::HashMap;
 
     fn grp(id: u64, model: u32) -> RequestGroup {
@@ -108,7 +108,7 @@ mod tests {
             id: GroupId(id),
             model: ModelId(model),
             class: SloClass::Batch1,
-            slo_s: 60.0,
+            slo: SloTarget::new(60.0, 1.0),
             earliest_arrival_s: 0.0,
             members: Default::default(),
             mega: false,

@@ -132,7 +132,7 @@ pub fn fig20(scale: Scale) -> Figure {
                 id: GroupId(g as u64),
                 model: ModelId((g % 4) as u32),
                 class: SloClass::Batch1,
-                slo_s: 60.0 + (g % 7) as f64 * 300.0,
+                slo: crate::workload::SloTarget::new(60.0 + (g % 7) as f64 * 300.0, 1.0),
                 earliest_arrival_s: 0.0,
                 members: VecDeque::from_iter(0..group_sz as u64),
                 mega: false,
@@ -163,7 +163,7 @@ pub fn fig20(scale: Scale) -> Figure {
             id: GroupId(g as u64),
             model: ModelId((g % 2) as u32),
             class: SloClass::Batch1,
-            slo_s: 60.0,
+            slo: crate::workload::SloTarget::new(60.0, 1.0),
             earliest_arrival_s: 0.0,
             members: VecDeque::from_iter(0..group_sz as u64),
             mega: false,

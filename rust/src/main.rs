@@ -7,6 +7,7 @@
 //! ```text
 //! qlm sim [--scenario S] [--list] [--policy P] [--rate R] [--requests N]
 //!         [--fleet N] [--seed S] [--horizon SECS] [--threads N]
+//!         [--chunk-tokens N] [--slice-tokens N]
 //! qlm compare [--scenario S] [--rate R] [--requests N] [--fleet N]
 //!             [--seed S] [--threads N]       Fig. 11/14 policy table
 //! qlm compare --threads-sweep 1,2,4 [--scenario scale]   Fig. 20-scale
@@ -20,6 +21,10 @@
 //! qlm serve [--artifacts DIR] [--requests N] [--fcfs]   (feature "pjrt")
 //! qlm bench-scheduler [--requests N]     Fig. 20-style overhead probe
 //! ```
+//!
+//! Every simulation-driving subcommand shares one knob parser
+//! ([`CliArgs`]), so `--chunk-tokens` / `--slice-tokens` (the
+//! token-granular iteration overrides) mean the same thing everywhere.
 
 use std::process::ExitCode;
 
@@ -90,11 +95,13 @@ fn usage() -> ExitCode {
         "qlm — Queue Management for SLO-Oriented LLM Serving (SoCC '24 reproduction)
 
 USAGE:
-  qlm sim [--scenario burst|diurnal|mixed-slo|multi-model|failover|scale|autoscale]
-          [--list] [--policy P] [--rate R] [--requests N] [--fleet N] [--seed S]
-          [--horizon SECS] [--full-solve] [--threads N]
+  qlm sim [--scenario burst|diurnal|mixed-slo|multi-model|failover|scale
+          |autoscale|mega] [--list] [--policy P] [--rate R] [--requests N]
+          [--fleet N] [--seed S] [--horizon SECS] [--full-solve] [--threads N]
+          [--chunk-tokens N] [--slice-tokens N]
   qlm compare [--scenario S] [--rate R] [--requests N] [--fleet N] [--seed S]
-              [--horizon SECS] [--threads N]    every policy + LSO ablation,
+              [--horizon SECS] [--threads N] [--chunk-tokens N]
+              [--slice-tokens N]    every policy + LSO ablation,
               one shared trace (Fig. 11/14 table)
   qlm compare --threads-sweep 1,2,4 [--scenario scale]   QLM over one shared
               trace at each worker-lane count (defaults to the scenario's
@@ -102,9 +109,10 @@ USAGE:
   qlm plan [--scenario S] [--rate R] [--requests N] [--horizon SECS]
            [--max-a100 N] [--max-a10 N] [--util F] [--seed S]
   qlm figures [--fig N] [--full]
-  qlm simulate [--policy qlm|edf|edf-swap|vllm|sjf|wfq|shepherd|qlm-noevict
-               |qlm-noswap|qlm-nolb] [--rate R] [--requests N] [--fleet N]
-               [--multi-model] [--seed S]
+  qlm simulate [--policy qlm|edf|edf-swap|vllm|sjf|wfq|shepherd|chunked
+               |qlm-noevict|qlm-noswap|qlm-nolb] [--rate R] [--requests N]
+               [--fleet N] [--multi-model] [--seed S] [--chunk-tokens N]
+               [--slice-tokens N]
   qlm serve [--artifacts DIR] [--requests N] [--fcfs] [--max-new N]
   qlm bench-scheduler"
     );
@@ -118,33 +126,82 @@ fn parse_scenario(args: &Args) -> Option<Scenario> {
     if scenario.is_none() {
         eprintln!(
             "unknown scenario {name} \
-             (known: burst, diurnal, mixed-slo, multi-model, failover, scale, autoscale)"
+             (known: burst, diurnal, mixed-slo, multi-model, failover, scale, \
+             autoscale, mega)"
         );
     }
     scenario
 }
 
-/// Assemble the simulation config shared by `qlm sim` and `qlm compare`:
-/// the scenario's fleet/catalog/failures/capacity settings plus the
-/// shared CLI switches. `--full-solve` disables the incremental
+/// `--chunk-tokens` / `--slice-tokens`: the token-granular iteration
+/// overrides. Absent flags leave the engine defaults (policy-dependent;
+/// the chunked policy brings its own, everything else runs whole-request
+/// iterations).
+fn parse_token_knobs(args: &Args) -> (Option<u32>, Option<u32>) {
+    let knob = |name: &str| args.get(name).and_then(|v| v.parse::<u32>().ok());
+    (knob("chunk-tokens"), knob("slice-tokens"))
+}
+
+/// The knobs every simulation-driving subcommand shares (`sim`,
+/// `compare`, the threads sweep, `plan`), parsed in ONE place so each
+/// flag means the same thing everywhere. The only per-command freedom is
+/// the default `--requests` count (`compare` runs a table-scale sample;
+/// the rest fill the horizon). `--full-solve` disables the incremental
 /// scheduler (the Fig. 20 overhead baseline; see `cargo bench --
 /// sched_incremental`); `--threads N` fans the view/pricing pass out
 /// over N workers (identical metrics to serial; `cargo bench --
-/// par_views`). Keeping this in one place is what guarantees the
+/// par_views`). Keeping this in one struct is what guarantees the
 /// compare table runs under exactly the config `qlm sim` would use.
-fn scenario_sim_config(
-    run: &ScenarioRun,
-    policy: Policy,
-    seed: u64,
+struct CliArgs {
+    scenario: Scenario,
     horizon_s: f64,
-    args: &Args,
-) -> SimConfig {
-    let mut cfg = run.sim_config(policy);
-    cfg.seed = seed;
-    cfg.horizon_s = horizon_s;
-    cfg.sched_incremental = !args.has("full-solve");
-    cfg.threads = args.get_usize("threads", 1);
-    cfg
+    knobs: ScenarioKnobs,
+    full_solve: bool,
+    threads: usize,
+    chunk_tokens: Option<u32>,
+    slice_tokens: Option<u32>,
+}
+
+impl CliArgs {
+    /// Parse the shared knobs; `default_requests` supplies the
+    /// per-command `--requests` fallback from (scenario, rate, horizon).
+    fn parse(
+        args: &Args,
+        default_requests: impl FnOnce(Scenario, f64, f64) -> usize,
+    ) -> Option<CliArgs> {
+        let scenario = parse_scenario(args)?;
+        let horizon_s = args.get_f64("horizon", 7200.0);
+        let rate = args.get_f64("rate", scenario.default_rate());
+        let knobs = ScenarioKnobs {
+            rate,
+            requests: args.get_usize("requests", default_requests(scenario, rate, horizon_s)),
+            fleet: args.get_usize("fleet", scenario.default_fleet() as usize) as u32,
+            seed: args.get_usize("seed", 42) as u64,
+        };
+        let (chunk_tokens, slice_tokens) = parse_token_knobs(args);
+        Some(CliArgs {
+            scenario,
+            horizon_s,
+            knobs,
+            full_solve: args.has("full-solve"),
+            threads: args.get_usize("threads", 1),
+            chunk_tokens,
+            slice_tokens,
+        })
+    }
+
+    /// Assemble the simulation config for one policy run: the scenario's
+    /// fleet/catalog/failures/capacity settings plus the shared switches.
+    fn sim_config(&self, run: &ScenarioRun, policy: Policy) -> SimConfig {
+        let mut cfg = run.sim_config(policy);
+        cfg.seed = self.knobs.seed;
+        cfg.horizon_s = self.horizon_s;
+        cfg.sched_incremental = !self.full_solve;
+        cfg.threads = self.threads;
+        cfg.chunk_tokens = self.chunk_tokens;
+        cfg.slice_tokens = self.slice_tokens;
+        cfg
+    }
 }
 
 fn parse_policy(name: &str) -> Option<Policy> {
@@ -156,6 +213,7 @@ fn parse_policy(name: &str) -> Option<Policy> {
         "sjf" => Policy::Sjf,
         "wfq" => Policy::Wfq,
         "shepherd" => Policy::Shepherd,
+        "chunked" => Policy::Chunked,
         "qlm-noevict" => Policy::qlm_with(LsoConfig::without_eviction()),
         "qlm-noswap" => Policy::qlm_with(LsoConfig::without_swapping()),
         "qlm-nolb" => Policy::qlm_with(LsoConfig::without_load_balancing()),
@@ -201,7 +259,7 @@ fn cmd_sim(args: &Args) -> ExitCode {
         }
         return ExitCode::SUCCESS;
     }
-    let Some(scenario) = parse_scenario(args) else {
+    let Some(cli) = CliArgs::parse(args, |s, rate, horizon| s.requests_for(rate, horizon)) else {
         return ExitCode::from(2);
     };
     let policy = match parse_policy(args.get("policy").unwrap_or("qlm")) {
@@ -211,24 +269,17 @@ fn cmd_sim(args: &Args) -> ExitCode {
             return ExitCode::from(2);
         }
     };
-    let horizon_s = args.get_f64("horizon", 7200.0);
-    let rate = args.get_f64("rate", scenario.default_rate());
-    let knobs = ScenarioKnobs {
-        rate,
-        requests: args.get_usize("requests", scenario.requests_for(rate, horizon_s)),
-        fleet: args.get_usize("fleet", scenario.default_fleet() as usize) as u32,
-        seed: args.get_usize("seed", 42) as u64,
-    };
-    let run = scenario.build(&knobs);
-    let trace = Trace::generate(&run.spec, knobs.seed);
+    let scenario = cli.scenario;
+    let run = scenario.build(&cli.knobs);
+    let trace = Trace::generate(&run.spec, cli.knobs.seed);
     println!(
         "scenario {}: {}\n  {} requests, {} instances, rate {:.1} req/s, horizon {:.0}s",
         run.name,
         scenario.description(),
         trace.len(),
         run.fleet.len(),
-        knobs.rate,
-        horizon_s,
+        cli.knobs.rate,
+        cli.horizon_s,
     );
     for (t, inst) in &run.failures {
         println!("  failure injected: instance {} dies at t={t:.0}s", inst.0);
@@ -250,16 +301,18 @@ fn cmd_sim(args: &Args) -> ExitCode {
             );
         }
     }
-    let cfg = scenario_sim_config(&run, policy, knobs.seed, horizon_s, args);
+    let cfg = cli.sim_config(&run, policy);
     let wall = std::time::Instant::now();
     let m = Simulation::new(cfg, &trace).run(&trace);
     let wall_s = wall.elapsed().as_secs_f64();
     println!("{}", m.summary());
     for class in [SloClass::Interactive, SloClass::Batch1, SloClass::Batch2] {
         println!(
-            "  {:<12} SLO attainment {:5.1}%",
+            "  {:<12} SLO attainment {:5.1}%  (TTFT {:5.1}%, TPOT {:5.1}%)",
             class.name(),
-            100.0 * m.slo_attainment_class(class)
+            100.0 * m.slo_attainment_class(class),
+            100.0 * m.ttft_attainment_class(class),
+            100.0 * m.tpot_attainment_class(class),
         );
     }
     println!(
@@ -293,24 +346,16 @@ fn cmd_sim(args: &Args) -> ExitCode {
 /// consumer of the `SchedulingPolicy` seam — adding a policy here is
 /// one line once it exists in `baselines/`.
 fn cmd_compare(args: &Args) -> ExitCode {
-    let Some(scenario) = parse_scenario(args) else {
-        return ExitCode::from(2);
-    };
     if args.has("threads-sweep") {
-        return cmd_compare_threads_sweep(args, scenario);
+        return cmd_compare_threads_sweep(args);
     }
-    let horizon_s = args.get_f64("horizon", 7200.0);
-    let rate = args.get_f64("rate", scenario.default_rate());
     // Compare runs many simulations, so the default size is a table-
     // scale sample, not the scenario's horizon-filling request count.
-    let knobs = ScenarioKnobs {
-        rate,
-        requests: args.get_usize("requests", 2000),
-        fleet: args.get_usize("fleet", scenario.default_fleet() as usize) as u32,
-        seed: args.get_usize("seed", 42) as u64,
+    let Some(cli) = CliArgs::parse(args, |_, _, _| 2000) else {
+        return ExitCode::from(2);
     };
-    let run = scenario.build(&knobs);
-    let trace = Trace::generate(&run.spec, knobs.seed);
+    let run = cli.scenario.build(&cli.knobs);
+    let trace = Trace::generate(&run.spec, cli.knobs.seed);
     let policies: Vec<Policy> = vec![
         Policy::qlm(),
         Policy::qlm_with(LsoConfig::without_eviction()),
@@ -323,26 +368,40 @@ fn cmd_compare(args: &Args) -> ExitCode {
         Policy::Wfq,
         Policy::Sjf,
         Policy::VllmFcfs,
+        Policy::Chunked,
     ];
     println!(
         "compare on scenario {} — {} requests, {} instances, rate {:.1} req/s, seed {}",
         run.name,
         trace.len(),
         run.fleet.len(),
-        knobs.rate,
-        knobs.seed,
+        cli.knobs.rate,
+        cli.knobs.seed,
     );
     println!(
-        "{:<12} {:>6} {:>6} {:>6} {:>6} {:>9} {:>9} {:>8} {:>7} {:>6}",
-        "policy", "slo%", "int%", "b1%", "b2%", "thr r/s", "p99ttft", "preempt", "evict", "swaps"
+        "{:<12} {:>6} {:>6} {:>6} {:>6} {:>6} {:>6} {:>9} {:>9} {:>8} {:>7} {:>6}",
+        "policy",
+        "slo%",
+        "ttft%",
+        "tpot%",
+        "int%",
+        "b1%",
+        "b2%",
+        "thr r/s",
+        "p99ttft",
+        "preempt",
+        "evict",
+        "swaps"
     );
     for policy in policies {
-        let cfg = scenario_sim_config(&run, policy, knobs.seed, horizon_s, args);
+        let cfg = cli.sim_config(&run, policy);
         let m = Simulation::new(cfg, &trace).run(&trace);
         println!(
-            "{:<12} {:>6.1} {:>6.1} {:>6.1} {:>6.1} {:>9.2} {:>8.2}s {:>8} {:>7} {:>6}",
+            "{:<12} {:>6.1} {:>6.1} {:>6.1} {:>6.1} {:>6.1} {:>6.1} {:>9.2} {:>8.2}s {:>8} {:>7} {:>6}",
             m.policy,
             100.0 * m.slo_attainment(),
+            100.0 * m.ttft_attainment(),
+            100.0 * m.tpot_attainment(),
             100.0 * m.slo_attainment_class(SloClass::Interactive),
             100.0 * m.slo_attainment_class(SloClass::Batch1),
             100.0 * m.slo_attainment_class(SloClass::Batch2),
@@ -365,7 +424,7 @@ fn cmd_compare(args: &Args) -> ExitCode {
 /// bit-identical: any digest divergence across lane counts exits
 /// nonzero (the golden suite's threads ≡ serial contract, enforced at
 /// full scale).
-fn cmd_compare_threads_sweep(args: &Args, scenario: Scenario) -> ExitCode {
+fn cmd_compare_threads_sweep(args: &Args) -> ExitCode {
     // Strict parsing: a malformed token must not silently shrink the
     // sweep, or the digest-equality verdict would cover fewer lane
     // counts than the operator asked for.
@@ -385,23 +444,18 @@ fn cmd_compare_threads_sweep(args: &Args, scenario: Scenario) -> ExitCode {
         eprintln!("--threads-sweep wants a comma-separated lane list, e.g. 1,2,4");
         return ExitCode::from(2);
     }
-    let horizon_s = args.get_f64("horizon", 7200.0);
-    let rate = args.get_f64("rate", scenario.default_rate());
-    let knobs = ScenarioKnobs {
-        rate,
-        requests: args.get_usize("requests", scenario.requests_for(rate, horizon_s)),
-        fleet: args.get_usize("fleet", scenario.default_fleet() as usize) as u32,
-        seed: args.get_usize("seed", 42) as u64,
+    let Some(cli) = CliArgs::parse(args, |s, rate, horizon| s.requests_for(rate, horizon)) else {
+        return ExitCode::from(2);
     };
-    let run = scenario.build(&knobs);
-    let trace = Trace::generate(&run.spec, knobs.seed);
+    let run = cli.scenario.build(&cli.knobs);
+    let trace = Trace::generate(&run.spec, cli.knobs.seed);
     println!(
         "threads sweep on scenario {} — {} requests, {} instances, rate {:.1} req/s, seed {}",
         run.name,
         trace.len(),
         run.fleet.len(),
-        knobs.rate,
-        knobs.seed,
+        cli.knobs.rate,
+        cli.knobs.seed,
     );
     println!(
         "{:>7} {:>6} {:>9} {:>9} {:>12} {:>8} {:>18}",
@@ -409,7 +463,7 @@ fn cmd_compare_threads_sweep(args: &Args, scenario: Scenario) -> ExitCode {
     );
     let mut digests: Vec<(usize, u64)> = Vec::new();
     for &threads in &sweep {
-        let mut cfg = scenario_sim_config(&run, Policy::qlm(), knobs.seed, horizon_s, args);
+        let mut cfg = cli.sim_config(&run, Policy::qlm());
         cfg.threads = threads;
         let wall = std::time::Instant::now();
         let m = Simulation::new(cfg, &trace).run(&trace);
@@ -440,18 +494,10 @@ fn cmd_compare_threads_sweep(args: &Args, scenario: Scenario) -> ExitCode {
 
 /// Offline capacity planning: what fleet does this workload need?
 fn cmd_plan(args: &Args) -> ExitCode {
-    let Some(scenario) = parse_scenario(args) else {
+    let Some(cli) = CliArgs::parse(args, |s, rate, horizon| s.requests_for(rate, horizon)) else {
         return ExitCode::from(2);
     };
-    let horizon_s = args.get_f64("horizon", 7200.0);
-    let rate = args.get_f64("rate", scenario.default_rate());
-    let knobs = ScenarioKnobs {
-        rate,
-        requests: args.get_usize("requests", scenario.requests_for(rate, horizon_s)),
-        fleet: scenario.default_fleet(),
-        seed: args.get_usize("seed", 42) as u64,
-    };
-    let run = scenario.build(&knobs);
+    let run = cli.scenario.build(&cli.knobs);
     let mut tiers = vec![TierSpec {
         gpu: GpuKind::A100,
         max: args.get_usize("max-a100", 64) as u32,
@@ -471,11 +517,11 @@ fn cmd_plan(args: &Args) -> ExitCode {
     println!(
         "capacity plan for scenario {} (rate {:.1} req/s, {} requests, horizon {:.0}s)",
         run.name,
-        knobs.rate,
-        knobs.requests,
-        horizon_s,
+        cli.knobs.rate,
+        cli.knobs.requests,
+        cli.horizon_s,
     );
-    let planner = CapacityPlanner::from_spec(&run.spec, run.catalog, cfg, knobs.seed);
+    let planner = CapacityPlanner::from_spec(&run.spec, run.catalog, cfg, cli.knobs.seed);
     let plan = planner.plan();
     print!("{}", planner.render(&plan));
     if !plan.feasible {
@@ -522,6 +568,7 @@ fn cmd_simulate(args: &Args) -> ExitCode {
     let trace = Trace::generate(&spec, seed);
     let mut cfg = SimConfig::new(fleet_a100(fleet_n), catalog, policy);
     cfg.seed = seed;
+    (cfg.chunk_tokens, cfg.slice_tokens) = parse_token_knobs(args);
     let m = Simulation::new(cfg, &trace).run(&trace);
     println!("{}", m.summary());
     println!(

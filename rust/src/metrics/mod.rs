@@ -1,12 +1,24 @@
-//! Run metrics: SLO attainment, request throughput, TTFT percentiles,
-//! device utilization — the quantities every evaluation figure reports.
+//! Run metrics: SLO attainment (TTFT ∧ TPOT), request throughput,
+//! latency percentiles, device utilization — the quantities every
+//! evaluation figure reports.
 
 use std::collections::HashMap;
 
 use crate::backend::{Instance, ModelId};
 use crate::coordinator::request::{Request, RequestState};
 use crate::coordinator::GlobalQueue;
-use crate::workload::SloClass;
+use crate::workload::{SloClass, SloTarget};
+
+/// A per-request latency dimension the run can be summarized over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// Time to first token (queueing + prefill).
+    Ttft,
+    /// Time per output token after the first (decode cadence).
+    Tpot,
+    /// End-to-end latency, arrival to completion.
+    E2e,
+}
 
 /// Final record for one request.
 #[derive(Debug, Clone)]
@@ -14,10 +26,12 @@ pub struct RequestRecord {
     pub id: u64,
     pub model: ModelId,
     pub class: SloClass,
-    pub slo_s: f64,
+    pub slo: SloTarget,
     pub arrival_s: f64,
     pub first_token_s: Option<f64>,
     pub completed_s: Option<f64>,
+    /// Output tokens actually produced.
+    pub generated: u32,
     pub mega: bool,
     /// Refused by admission control (or retired as unservable): never
     /// served, counted as an SLO violation like any unserved request.
@@ -30,10 +44,11 @@ impl RequestRecord {
             id: r.id,
             model: r.model,
             class: r.class,
-            slo_s: r.slo_s,
+            slo: r.slo,
             arrival_s: r.arrival_s,
             first_token_s: r.first_token_s,
             completed_s: r.completed_s,
+            generated: r.generated,
             mega: r.mega,
             shed: r.state == RequestState::Shed,
         }
@@ -43,10 +58,45 @@ impl RequestRecord {
         self.first_token_s.map(|t| t - self.arrival_s)
     }
 
-    /// SLO met ⇔ first token within the TTFT bound. Requests that never
-    /// produced a first token are violations.
+    /// Mean time per output token after the first; defined only for
+    /// completed requests.
+    pub fn tpot(&self) -> Option<f64> {
+        match (self.first_token_s, self.completed_s) {
+            (Some(first), Some(done)) => {
+                Some((done - first) / self.generated.saturating_sub(1).max(1) as f64)
+            }
+            _ => None,
+        }
+    }
+
+    /// End-to-end latency; defined only for completed requests.
+    pub fn e2e(&self) -> Option<f64> {
+        self.completed_s.map(|t| t - self.arrival_s)
+    }
+
+    pub fn metric(&self, m: Metric) -> Option<f64> {
+        match m {
+            Metric::Ttft => self.ttft(),
+            Metric::Tpot => self.tpot(),
+            Metric::E2e => self.e2e(),
+        }
+    }
+
+    /// First token within the TTFT bound. Requests that never produced a
+    /// first token are violations.
+    pub fn ttft_met(&self) -> bool {
+        self.ttft().map(|t| t <= self.slo.ttft_s).unwrap_or(false)
+    }
+
+    /// Decode cadence within the TPOT bound. Requests that never
+    /// completed are violations.
+    pub fn tpot_met(&self) -> bool {
+        self.tpot().map(|t| t <= self.slo.tpot_s).unwrap_or(false)
+    }
+
+    /// SLO met ⇔ both latency dimensions within bound (TTFT ∧ TPOT).
     pub fn slo_met(&self) -> bool {
-        self.ttft().map(|t| t <= self.slo_s).unwrap_or(false)
+        self.ttft_met() && self.tpot_met()
     }
 }
 
@@ -85,22 +135,52 @@ pub struct RunMetrics {
 }
 
 impl RunMetrics {
-    /// Fraction of requests whose TTFT met the SLO, over all requests.
+    /// Fraction of requests meeting both SLO dimensions, over all
+    /// requests.
     pub fn slo_attainment(&self) -> f64 {
-        if self.records.is_empty() {
-            return 1.0;
-        }
-        self.records.iter().filter(|r| r.slo_met()).count() as f64
-            / self.records.len() as f64
+        self.attainment_where(|r| r.slo_met(), |_| true)
     }
 
     /// SLO attainment restricted to one class.
     pub fn slo_attainment_class(&self, class: SloClass) -> f64 {
-        let rs: Vec<_> = self.records.iter().filter(|r| r.class == class).collect();
-        if rs.is_empty() {
+        self.attainment_where(|r| r.slo_met(), |r| r.class == class)
+    }
+
+    /// Fraction of requests whose first token met the TTFT bound.
+    pub fn ttft_attainment(&self) -> f64 {
+        self.attainment_where(|r| r.ttft_met(), |_| true)
+    }
+
+    pub fn ttft_attainment_class(&self, class: SloClass) -> f64 {
+        self.attainment_where(|r| r.ttft_met(), |r| r.class == class)
+    }
+
+    /// Fraction of requests whose decode cadence met the TPOT bound.
+    pub fn tpot_attainment(&self) -> f64 {
+        self.attainment_where(|r| r.tpot_met(), |_| true)
+    }
+
+    pub fn tpot_attainment_class(&self, class: SloClass) -> f64 {
+        self.attainment_where(|r| r.tpot_met(), |r| r.class == class)
+    }
+
+    fn attainment_where(
+        &self,
+        met: impl Fn(&RequestRecord) -> bool,
+        scope: impl Fn(&RequestRecord) -> bool,
+    ) -> f64 {
+        let mut total = 0usize;
+        let mut ok = 0usize;
+        for r in self.records.iter().filter(|r| scope(r)) {
+            total += 1;
+            if met(r) {
+                ok += 1;
+            }
+        }
+        if total == 0 {
             return 1.0;
         }
-        rs.iter().filter(|r| r.slo_met()).count() as f64 / rs.len() as f64
+        ok as f64 / total as f64
     }
 
     /// Completed requests per second over the run.
@@ -127,15 +207,37 @@ impl RunMetrics {
             / self.duration_s
     }
 
-    /// TTFT percentile over requests that produced a first token.
-    pub fn ttft_percentile(&self, p: f64) -> f64 {
-        let ts: Vec<f64> = self.records.iter().filter_map(|r| r.ttft()).collect();
+    /// Percentile of a latency dimension over requests where it is
+    /// defined (TTFT: first token produced; TPOT/E2E: completed).
+    pub fn percentile(&self, m: Metric, p: f64) -> f64 {
+        let ts: Vec<f64> = self.records.iter().filter_map(|r| r.metric(m)).collect();
         crate::util::percentile(&ts, p)
     }
 
-    pub fn mean_ttft(&self) -> f64 {
-        let ts: Vec<f64> = self.records.iter().filter_map(|r| r.ttft()).collect();
+    /// Percentile of a latency dimension restricted to one class.
+    pub fn percentile_class(&self, m: Metric, p: f64, class: SloClass) -> f64 {
+        let ts: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.class == class)
+            .filter_map(|r| r.metric(m))
+            .collect();
+        crate::util::percentile(&ts, p)
+    }
+
+    /// Mean of a latency dimension over requests where it is defined.
+    pub fn mean(&self, m: Metric) -> f64 {
+        let ts: Vec<f64> = self.records.iter().filter_map(|r| r.metric(m)).collect();
         crate::util::mean(&ts)
+    }
+
+    /// TTFT percentile over requests that produced a first token.
+    pub fn ttft_percentile(&self, p: f64) -> f64 {
+        self.percentile(Metric::Ttft, p)
+    }
+
+    pub fn mean_ttft(&self) -> f64 {
+        self.mean(Metric::Ttft)
     }
 
     /// Mean device utilization (busy / wall) across instances.
@@ -223,6 +325,7 @@ impl RunMetrics {
             mix(r.arrival_s.to_bits());
             mix(r.first_token_s.map(f64::to_bits).unwrap_or(u64::MAX));
             mix(r.completed_s.map(f64::to_bits).unwrap_or(u64::MAX));
+            mix(r.generated as u64);
             mix(r.shed as u64);
         }
         mix(self.records.len() as u64);
@@ -305,15 +408,16 @@ pub fn instance_metrics(inst: &crate::backend::Instance) -> InstanceMetrics {
 mod tests {
     use super::*;
 
-    fn rec(arrival: f64, first: Option<f64>, slo: f64, class: SloClass) -> RequestRecord {
+    fn rec(arrival: f64, first: Option<f64>, ttft_slo: f64, class: SloClass) -> RequestRecord {
         RequestRecord {
             id: 0,
             model: ModelId(0),
             class,
-            slo_s: slo,
+            slo: SloTarget::new(ttft_slo, 0.25),
             arrival_s: arrival,
             first_token_s: first,
             completed_s: first.map(|f| f + 1.0),
+            generated: 50,
             mega: false,
             shed: false,
         }
@@ -401,5 +505,57 @@ mod tests {
             ..Default::default()
         };
         assert!(m.summary().starts_with("qlm:"));
+    }
+
+    #[test]
+    fn tpot_is_per_token_after_the_first() {
+        let mut r = rec(0.0, Some(2.0), 20.0, SloClass::Interactive);
+        r.completed_s = Some(2.0 + 49.0 * 0.1); // 49 decode gaps at 100 ms
+        r.generated = 50;
+        assert!((r.tpot().unwrap() - 0.1).abs() < 1e-12);
+        assert!((r.e2e().unwrap() - 6.9).abs() < 1e-12);
+        // Single-token output: no decode gap, TPOT 0 by convention.
+        r.generated = 1;
+        r.completed_s = Some(2.0);
+        assert_eq!(r.tpot().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn slo_met_requires_both_dimensions() {
+        // Fast first token, slow decode: TTFT met, TPOT violated.
+        let mut r = rec(0.0, Some(1.0), 20.0, SloClass::Interactive);
+        r.generated = 11;
+        r.completed_s = Some(1.0 + 10.0 * 0.5); // 500 ms/token > 250 ms
+        assert!(r.ttft_met());
+        assert!(!r.tpot_met());
+        assert!(!r.slo_met());
+        // Unfinished request: first token in time but never completed.
+        let mut u = rec(0.0, Some(1.0), 20.0, SloClass::Interactive);
+        u.completed_s = None;
+        assert!(u.ttft_met());
+        assert!(!u.tpot_met());
+        assert!(!u.slo_met());
+    }
+
+    #[test]
+    fn per_dimension_attainment_and_percentiles() {
+        let mut slow_decode = rec(0.0, Some(1.0), 20.0, SloClass::Interactive);
+        slow_decode.generated = 11;
+        slow_decode.completed_s = Some(1.0 + 10.0 * 0.5);
+        let m = RunMetrics {
+            records: vec![
+                rec(0.0, Some(5.0), 20.0, SloClass::Interactive), // both met
+                slow_decode,                                      // ttft only
+                rec(0.0, None, 20.0, SloClass::Interactive),      // neither
+            ],
+            ..Default::default()
+        };
+        assert!((m.ttft_attainment() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((m.tpot_attainment() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((m.slo_attainment() - 1.0 / 3.0).abs() < 1e-12);
+        // Percentiles are computed over defined values only.
+        assert!(m.percentile(Metric::Tpot, 99.0) > 0.0);
+        assert!(m.mean(Metric::E2e) > 0.0);
+        assert_eq!(m.ttft_percentile(50.0), m.percentile(Metric::Ttft, 50.0));
     }
 }

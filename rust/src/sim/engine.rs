@@ -99,6 +99,14 @@ pub struct SimConfig {
     /// Submit-time admission control (shed batch classes when even the
     /// maximal fleet cannot meet their SLO). Disabled by default.
     pub admission: AdmissionConfig,
+    /// Per-iteration prefill chunk budget (tokens) applied to every
+    /// instance. `None` = whole-prompt prefill, except under the
+    /// `chunked` policy which defaults to its base budget.
+    pub chunk_tokens: Option<u32>,
+    /// Decode slice length (tokens): slice boundaries are the points
+    /// the engine may migrate a request at. `None` = no slicing, except
+    /// under the `chunked` policy which defaults to its slice length.
+    pub slice_tokens: Option<u32>,
 }
 
 impl SimConfig {
@@ -117,7 +125,27 @@ impl SimConfig {
             threads: 1,
             autoscale: None,
             admission: AdmissionConfig::default(),
+            chunk_tokens: None,
+            slice_tokens: None,
         }
+    }
+
+    /// Effective chunk budget: explicit setting, else the chunked
+    /// policy's default, else off.
+    pub fn effective_chunk_tokens(&self) -> Option<u32> {
+        self.chunk_tokens.or(match self.policy {
+            Policy::Chunked => Some(crate::baselines::chunked::DEFAULT_CHUNK_TOKENS),
+            _ => None,
+        })
+    }
+
+    /// Effective slice length: explicit setting, else the chunked
+    /// policy's default, else off.
+    pub fn effective_slice_tokens(&self) -> Option<u32> {
+        self.slice_tokens.or(match self.policy {
+            Policy::Chunked => Some(crate::baselines::chunked::DEFAULT_SLICE_TOKENS),
+            _ => None,
+        })
     }
 }
 
@@ -217,11 +245,23 @@ impl Simulation {
         // One pool per simulation: the view refresh and the scheduler's
         // repricing walk share its parked workers for the whole run.
         let pool = Arc::new(WorkerPool::new(cfg.threads));
-        let policy = build_policy(cfg.policy, sched_cfg, estimator, Arc::clone(&pool));
+        let chunk_tokens = cfg.effective_chunk_tokens();
+        let slice_tokens = cfg.effective_slice_tokens();
+        let policy = build_policy(
+            cfg.policy,
+            sched_cfg,
+            estimator,
+            Arc::clone(&pool),
+            chunk_tokens,
+        );
         let mut instances: Vec<Instance> = cfg
             .fleet
             .iter()
-            .map(|c| Instance::new(c.clone(), cfg.catalog.clone()))
+            .map(|c| {
+                let mut inst = Instance::new(c.clone(), cfg.catalog.clone());
+                inst.set_token_knobs(chunk_tokens, slice_tokens);
+                inst
+            })
             .collect();
         // Dense indexing requires the fleet builders' sequential ids.
         for (idx, inst) in instances.iter().enumerate() {
@@ -446,7 +486,7 @@ impl Simulation {
                     id: gid,
                     model: req.model,
                     class: req.class,
-                    slo_s: req.slo_s,
+                    slo: req.slo,
                     earliest_arrival_s: req.arrival_s,
                     members: VecDeque::from([id]),
                     mega: req.mega,
@@ -476,7 +516,7 @@ impl Simulation {
                 let g = self.groups.get_mut(&gid).expect("open-group index is live");
                 debug_assert!(g.len() < cap, "index must only hold open groups");
                 g.members.push_back(req.id);
-                g.slo_s = g.slo_s.min(req.slo_s);
+                g.slo = g.slo.min(req.slo);
                 g.earliest_arrival_s = g.earliest_arrival_s.min(req.arrival_s);
                 if g.len() >= cap {
                     set.remove(&gid);
@@ -609,8 +649,16 @@ impl Simulation {
         }
         let t_done = self.clock.now + out.dt;
         for seq in out.completed {
-            self.queue.complete(seq.req_id, seq.first_token_at, t_done);
+            self.queue
+                .complete(seq.req_id, seq.first_token_at, t_done, seq.generated);
             self.on_request_done(seq.req_id, id);
+        }
+        // Slice boundaries are the migration points: a sequence whose
+        // decode slice just expired may be displaced — through the same
+        // evict/restore KV path the eviction LSO uses — when queued work
+        // is starved for admission space on this instance.
+        if !out.slice_expired.is_empty() {
+            self.migrate_expired_slices(id, &out.slice_expired);
         }
         if out.dt > 0.0 {
             self.clock.set_next_free(id, t_done);
@@ -667,6 +715,10 @@ impl Simulation {
                         generated: r.generated,
                         first_token_at: r.first_token_s,
                         arrival_s: r.arrival_s,
+                        // try_admit / try_restore normalize prefill and
+                        // slice state for evicted re-admissions.
+                        prefilled: 0,
+                        slice_left: 0,
                     };
                     let now = self.clock.now;
                     let res = if r.evicted_from == Some(id) {
@@ -685,6 +737,50 @@ impl Simulation {
                     }
                 }
             }
+        }
+    }
+
+    /// Slice-granular migration: displace sequences whose decode slice
+    /// expired this iteration, but only while this instance's waiting
+    /// work cannot be admitted (no batch slot, or spare KV below a mean
+    /// prompt). Evicted sequences revert to the global queue with their
+    /// KV parked in CPU swap; the next scheduling pass may pull them
+    /// back here (cheap restore) or onto another instance (recompute).
+    /// Each sequence decodes a full slice between boundaries, so every
+    /// migration cycle makes progress — no livelock.
+    fn migrate_expired_slices(&mut self, id: InstanceId, expired: &[u64]) {
+        let idx = id.0 as usize;
+        let has_waiting = {
+            let vq = &self.vqs[idx];
+            let groups = &self.groups;
+            let queue = &self.queue;
+            vq.groups
+                .iter()
+                .any(|&g| !waiting_members(groups, queue, g).is_empty())
+        };
+        if !has_waiting {
+            return;
+        }
+        let now = self.clock.now;
+        for &rid in expired {
+            let inst = self.fleet.inst(id);
+            let admit_prompt = inst.config.mean_prompt_tokens as u64;
+            if inst.batch_slots_free() > 0 && inst.spare_tokens() >= admit_prompt {
+                break; // waiting work fits without displacing anyone
+            }
+            // Completion or preemption may have retired it this step.
+            if !inst.running().iter().any(|s| s.req_id == rid) {
+                continue;
+            }
+            let evicted = self.fleet.inst_mut(id).evict(&[rid], now);
+            for seq in evicted {
+                self.queue.requeue_evicted(seq.req_id, seq.generated, id);
+                self.note_waiting(seq.req_id, 1);
+                if let Some(&g) = self.group_of.get(&seq.req_id) {
+                    self.dirty_groups.insert(g);
+                }
+            }
+            self.needs_schedule = true;
         }
     }
 
@@ -723,6 +819,11 @@ impl Simulation {
         let Some((id, ready)) = self.fleet.provision(model, self.clock.now) else {
             return;
         };
+        let (chunk, slice) = (
+            self.cfg.effective_chunk_tokens(),
+            self.cfg.effective_slice_tokens(),
+        );
+        self.fleet.inst_mut(id).set_token_knobs(chunk, slice);
         self.vqs.push(VirtualQueue::new(id));
         self.agents.push(QlmAgent::new(id, self.cfg.policy.lso()));
         self.clock.add_instance();
@@ -965,6 +1066,13 @@ impl Simulation {
         for (id, order) in plan.orders {
             self.vqs[id.0 as usize].set_order(order);
         }
+        // Sliding-window chunk control: apply per-instance prefill-budget
+        // overrides from chunk-aware policies.
+        for (&id, &chunk) in &plan.chunk_tokens {
+            if self.fleet.alive(id) {
+                self.fleet.inst_mut(id).set_chunk_tokens(Some(chunk));
+            }
+        }
         // Refresh warm sets for the queues that changed (§5 swapping).
         if self.policy.refreshes_warm_sets() {
             for id in touched {
@@ -1113,6 +1221,8 @@ mod tests {
                 generated: 0,
                 first_token_at: None,
                 arrival_s: 0.0,
+                prefilled: 0,
+                slice_left: 0,
             };
             sim.fleet.inst_mut(inst0).try_admit(seq, t0).unwrap();
         }
@@ -1161,7 +1271,7 @@ mod tests {
                             id: gid,
                             model: ModelId(0),
                             class: SloClass::Interactive,
-                            slo_s: 20.0,
+                            slo: crate::workload::SloTarget::new(20.0, 0.25),
                             earliest_arrival_s: (i % 7) as f64,
                             members: VecDeque::from([i]),
                             mega: false,
@@ -1208,7 +1318,7 @@ mod tests {
             arrival_s: i as f64,
             model: ModelId(0),
             class: crate::workload::SloClass::Interactive,
-            slo_s: 20.0,
+            slo: crate::workload::SloTarget::new(20.0, 0.25),
             input_tokens: 50,
             output_tokens: 10,
             mega: false,
@@ -1225,7 +1335,7 @@ mod tests {
         // arrival must join the *lowest-id* open group (the rule the
         // replaced table scan enforced).
         sim.queue.mark_running(0);
-        sim.queue.complete(0, Some(1.0), 1.0);
+        sim.queue.complete(0, Some(1.0), 1.0, 10);
         sim.on_request_done(0, InstanceId(0));
         sim.on_arrival(&tr(5));
         assert_eq!(sim.group_of[&5], g0, "reopened lowest-id group wins");

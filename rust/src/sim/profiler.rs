@@ -97,6 +97,8 @@ pub fn profile_theta(model: ModelId, gpu: GpuKind, catalog: &ModelCatalog, seed:
                 generated: 0,
                 first_token_at: None,
                 arrival_s: now,
+                prefilled: 0,
+                slice_left: 0,
             };
             if inst.try_admit(seq, now).is_err() {
                 break;

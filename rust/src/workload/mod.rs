@@ -11,5 +11,5 @@ pub mod scenarios;
 pub use sharegpt::ShareGptSampler;
 pub use arrivals::{ArrivalProcess, Arrivals};
 pub use scenarios::{Scenario, ScenarioKnobs, ScenarioRun};
-pub use spec::{RequestClassSpec, SloClass, WorkloadSpec};
+pub use spec::{RequestClassSpec, SloClass, SloTarget, WorkloadSpec};
 pub use trace::{Trace, TraceRequest};

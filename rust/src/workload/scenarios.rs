@@ -36,6 +36,12 @@ pub enum Scenario {
     /// sized starting fleet, and the runtime autoscaler + admission
     /// control riding the wave.
     Autoscale,
+    /// Long-prompt stress: W_A-style mixed-SLO traffic on Vicuna-13B
+    /// with a heavy mega-prompt fraction on the batch streams — the
+    /// regime where whole-request prefill stalls interactive first
+    /// tokens behind multi-thousand-token prompts (the chunked-prefill
+    /// policy's showcase).
+    Mega,
 }
 
 /// Tunable knobs shared by every scenario.
@@ -105,6 +111,7 @@ impl Scenario {
         Scenario::Failover,
         Scenario::Scale,
         Scenario::Autoscale,
+        Scenario::Mega,
     ];
 
     pub fn from_name(name: &str) -> Option<Scenario> {
@@ -116,6 +123,7 @@ impl Scenario {
             "failover" => Scenario::Failover,
             "scale" => Scenario::Scale,
             "autoscale" => Scenario::Autoscale,
+            "mega" => Scenario::Mega,
             _ => return None,
         })
     }
@@ -129,6 +137,7 @@ impl Scenario {
             Scenario::Failover => "failover",
             Scenario::Scale => "scale",
             Scenario::Autoscale => "autoscale",
+            Scenario::Mega => "mega",
         }
     }
 
@@ -156,6 +165,9 @@ impl Scenario {
             Scenario::Autoscale => {
                 "diurnal 4x swing, multi-model, trough fleet + runtime autoscaler"
             }
+            Scenario::Mega => {
+                "W_A with heavy mega-prompt batch traffic (chunked-prefill stress)"
+            }
         }
     }
 
@@ -164,6 +176,10 @@ impl Scenario {
     pub fn default_rate(&self) -> f64 {
         match self {
             Scenario::MultiModel => 8.0,
+            // Mega prompts carry several thousand prefill tokens each;
+            // a lower headline rate keeps the default fleet pressured
+            // rather than hopeless.
+            Scenario::Mega => 10.0,
             _ => 12.0,
         }
     }
@@ -173,7 +189,7 @@ impl Scenario {
         match self {
             // Vicuna-13B (mixed-slo) and the W_B variant set are far
             // heavier per token than Mistral-7B; give them more devices.
-            Scenario::MixedSlo | Scenario::MultiModel | Scenario::Scale => 8,
+            Scenario::MixedSlo | Scenario::MultiModel | Scenario::Scale | Scenario::Mega => 8,
             // The autoscale fleet knob is the *trough* size; the
             // autoscaler may grow it 4× (matching the arrival swing).
             Scenario::Autoscale => 4,
@@ -186,7 +202,7 @@ impl Scenario {
     pub fn requests_for(&self, rate: f64, horizon_s: f64) -> usize {
         let per_second = match self {
             // W_A: interactive at R spans (n/2)/R; batch streams match.
-            Scenario::MixedSlo | Scenario::Failover => 2.0 * rate,
+            Scenario::MixedSlo | Scenario::Failover | Scenario::Mega => 2.0 * rate,
             // Two-stream shape: interactive 2n/3 at R.
             Scenario::Burst | Scenario::Diurnal => 1.5 * rate,
             // W_B: the half-rate Batch-2 stream is the long pole.
@@ -273,6 +289,10 @@ impl Scenario {
                     ..base
                 }
             }
+            Scenario::Mega => ScenarioRun {
+                spec: mega_spec(k),
+                ..base
+            },
             Scenario::Failover => {
                 let fleet = fleet_a100(k.fleet.max(2));
                 // Kill the last instance a tenth into the nominal run:
@@ -372,6 +392,22 @@ fn autoscale_spec(k: &ScenarioKnobs) -> WorkloadSpec {
         ],
         sampler: ShareGptSampler::default(),
     }
+}
+
+/// The `mega` workload: W_A's 50/25/25 class split on Vicuna-13B, but
+/// with a third of each batch stream drawn from the mega-prompt sampler
+/// (3K–4K total tokens, W_C's long-prompt regime). Interactive requests
+/// stay short — the stress is entirely in how long a mega prefill holds
+/// the iteration hostage, which is what chunked prefill dismantles.
+fn mega_spec(k: &ScenarioKnobs) -> WorkloadSpec {
+    let mut w = WorkloadSpec::w_a(ModelId(1), k.rate, k.requests);
+    w.name = format!("mega(rate={})", k.rate);
+    for s in &mut w.streams {
+        if s.class != SloClass::Interactive {
+            s.mega_fraction = 0.35;
+        }
+    }
+    w
 }
 
 /// Interactive stream under `arrivals` + a relaxed batch floor at half
@@ -502,6 +538,31 @@ mod tests {
         assert!(batch_span <= 0.85 * 7200.0, "batch span {batch_span}");
         let inter_span = (n as f64 / 2.0) / (rate * 1.25); // diurnal mean
         assert!(inter_span <= 0.85 * 7200.0, "interactive span {inter_span}");
+    }
+
+    #[test]
+    fn mega_scenario_loads_batch_streams_with_long_prompts() {
+        let run = Scenario::Mega.build(&ScenarioKnobs::default());
+        assert_eq!(run.spec.streams.len(), 3);
+        for s in &run.spec.streams {
+            assert_eq!(s.models, vec![ModelId(1)], "single shared model");
+            if s.class == SloClass::Interactive {
+                assert_eq!(s.mega_fraction, 0.0, "interactive stays short");
+            } else {
+                assert!(s.mega_fraction > 0.0, "batch carries the mega load");
+            }
+        }
+        let trace = Trace::generate(&run.spec, 1);
+        let megas = trace.requests.iter().filter(|r| r.mega).count();
+        assert!(megas > 0, "trace must contain mega prompts");
+        assert!(
+            trace
+                .requests
+                .iter()
+                .filter(|r| r.mega)
+                .all(|r| r.class != SloClass::Interactive),
+            "mega prompts ride the batch classes only"
+        );
     }
 
     #[test]

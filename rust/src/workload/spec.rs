@@ -5,6 +5,34 @@
 use crate::backend::ModelId;
 use crate::workload::{ArrivalProcess, ShareGptSampler};
 
+/// A two-dimensional latency SLO: a time-to-first-token bound plus a
+/// time-per-output-token bound. TTFT is what queue ordering fights for
+/// (the paper's headline metric); TPOT is what decode-time interference
+/// — chunked prefill mixed into the batch, evictions, model swaps —
+/// erodes. Both must hold for a request to count as SLO-met.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTarget {
+    /// p99 TTFT bound, seconds.
+    pub ttft_s: f64,
+    /// Mean inter-token latency bound, seconds per output token.
+    pub tpot_s: f64,
+}
+
+impl SloTarget {
+    pub const fn new(ttft_s: f64, tpot_s: f64) -> Self {
+        SloTarget { ttft_s, tpot_s }
+    }
+
+    /// Component-wise minimum — the binding constraint of a set of
+    /// requests (used when folding members into a group SLO).
+    pub fn min(self, other: SloTarget) -> SloTarget {
+        SloTarget {
+            ttft_s: self.ttft_s.min(other.ttft_s),
+            tpot_s: self.tpot_s.min(other.tpot_s),
+        }
+    }
+}
+
 /// The three request categories of §8, with p99-TTFT SLOs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum SloClass {
@@ -29,12 +57,14 @@ impl SloClass {
         }
     }
 
-    /// SLO value in seconds (p99 TTFT bound).
-    pub fn slo_s(&self) -> f64 {
+    /// The class's SLO target. TTFT bounds are the paper's §8 values;
+    /// TPOT bounds scale with the class's latency tolerance (decode
+    /// stalls from eviction/requeue cycles are what they police).
+    pub fn target(&self) -> SloTarget {
         match self {
-            SloClass::Interactive => 20.0,
-            SloClass::Batch1 => 60.0,
-            SloClass::Batch2 => 3600.0,
+            SloClass::Interactive => SloTarget::new(20.0, 0.25),
+            SloClass::Batch1 => SloTarget::new(60.0, 1.0),
+            SloClass::Batch2 => SloTarget::new(3600.0, 10.0),
         }
     }
 
@@ -169,9 +199,20 @@ mod tests {
 
     #[test]
     fn slo_values_match_paper() {
-        assert_eq!(SloClass::Interactive.slo_s(), 20.0);
-        assert_eq!(SloClass::Batch1.slo_s(), 60.0);
-        assert_eq!(SloClass::Batch2.slo_s(), 3600.0);
+        assert_eq!(SloClass::Interactive.target().ttft_s, 20.0);
+        assert_eq!(SloClass::Batch1.target().ttft_s, 60.0);
+        assert_eq!(SloClass::Batch2.target().ttft_s, 3600.0);
+        // TPOT bounds loosen with the class's latency tolerance.
+        assert!(SloClass::Interactive.target().tpot_s < SloClass::Batch1.target().tpot_s);
+        assert!(SloClass::Batch1.target().tpot_s < SloClass::Batch2.target().tpot_s);
+    }
+
+    #[test]
+    fn slo_target_min_is_componentwise() {
+        let a = SloTarget::new(20.0, 1.0);
+        let b = SloTarget::new(60.0, 0.25);
+        let m = a.min(b);
+        assert_eq!(m, SloTarget::new(20.0, 0.25));
     }
 
     #[test]

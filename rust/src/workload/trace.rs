@@ -6,7 +6,7 @@
 
 use crate::backend::ModelId;
 use crate::util::Rng;
-use crate::workload::{SloClass, WorkloadSpec};
+use crate::workload::{SloClass, SloTarget, WorkloadSpec};
 use crate::workload::arrivals::Arrivals;
 
 /// A single concrete request in a trace.
@@ -15,7 +15,8 @@ pub struct TraceRequest {
     pub arrival_s: f64,
     pub model: ModelId,
     pub class: SloClass,
-    pub slo_s: f64,
+    /// TTFT + TPOT bounds (the class target at generation time).
+    pub slo: SloTarget,
     pub input_tokens: u32,
     /// Ground truth — hidden from the estimator.
     pub output_tokens: u32,
@@ -49,7 +50,7 @@ impl Trace {
                     arrival_s,
                     model,
                     class: stream.class,
-                    slo_s: stream.class.slo_s(),
+                    slo: stream.class.target(),
                     input_tokens,
                     output_tokens,
                     mega,
@@ -153,6 +154,6 @@ mod tests {
     fn slo_matches_class() {
         let spec = WorkloadSpec::w_a(ModelId(0), 10.0, 300);
         let t = Trace::generate(&spec, 5);
-        assert!(t.requests.iter().all(|r| r.slo_s == r.class.slo_s()));
+        assert!(t.requests.iter().all(|r| r.slo == r.class.target()));
     }
 }

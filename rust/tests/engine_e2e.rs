@@ -7,9 +7,9 @@
 use qlm::backend::{GpuKind, InstanceId, ModelCatalog, ModelId};
 use qlm::baselines::Policy;
 use qlm::capacity::{AdmissionConfig, AutoscaleConfig};
-use qlm::metrics::RunMetrics;
+use qlm::metrics::{Metric, RunMetrics};
 use qlm::sim::{fleet_a100, SimConfig, Simulation};
-use qlm::workload::{SloClass, Trace, WorkloadSpec};
+use qlm::workload::{Scenario, ScenarioKnobs, SloClass, Trace, WorkloadSpec};
 
 fn small_trace(rate: f64, n: usize) -> Trace {
     let spec = WorkloadSpec::w_a(ModelId(0), rate, n);
@@ -63,6 +63,64 @@ fn edf_swap_completes_all_requests_light_load() {
 fn shepherd_completes_all_requests_light_load() {
     let m = run_policy(Policy::Shepherd, 5.0, 200, 2);
     assert_eq!(m.completed_count(), 200, "{}", m.summary());
+}
+
+#[test]
+fn chunked_completes_all_requests_light_load() {
+    let m = run_policy(Policy::Chunked, 5.0, 200, 2);
+    assert_eq!(m.completed_count(), 200, "{}", m.summary());
+}
+
+/// Mega-prompt scenario run shared by the chunked-vs-whole-request
+/// comparatives below.
+fn run_mega(policy: Policy) -> RunMetrics {
+    let knobs = ScenarioKnobs {
+        rate: 10.0,
+        requests: 400,
+        fleet: 2,
+        seed: 42,
+    };
+    let run = Scenario::Mega.build(&knobs);
+    let trace = Trace::generate(&run.spec, knobs.seed);
+    let mut cfg = run.sim_config(policy);
+    cfg.seed = knobs.seed;
+    Simulation::new(cfg, &trace).run(&trace)
+}
+
+#[test]
+fn chunked_beats_whole_request_on_interactive_ttft_tail() {
+    // The point of token-granular scheduling: on a mega-prompt-heavy
+    // trace, SLO-aware chunked prefill keeps interactive first tokens
+    // from stalling behind multi-second batch prefills, without giving
+    // up batch decode throughput.
+    let chunked = run_mega(Policy::Chunked);
+    let qlm = run_mega(Policy::qlm());
+    let vllm = run_mega(Policy::VllmFcfs);
+    assert_eq!(chunked.completed_count(), 400, "{}", chunked.summary());
+
+    let p99 = |m: &RunMetrics| m.percentile_class(Metric::Ttft, 99.0, SloClass::Interactive);
+    assert!(
+        p99(&chunked) < p99(&qlm),
+        "chunked interactive p99 TTFT {:.3}s must beat whole-request qlm {:.3}s",
+        p99(&chunked),
+        p99(&qlm)
+    );
+    assert!(
+        p99(&chunked) < p99(&vllm),
+        "chunked interactive p99 TTFT {:.3}s must beat vllm-fcfs {:.3}s",
+        p99(&chunked),
+        p99(&vllm)
+    );
+    // Batch TPOT attainment stays within 5 points of whole-request QLM.
+    for class in [SloClass::Batch1, SloClass::Batch2] {
+        assert!(
+            chunked.tpot_attainment_class(class) >= qlm.tpot_attainment_class(class) - 0.05,
+            "{:?} TPOT attainment: chunked {:.3} vs qlm {:.3}",
+            class,
+            chunked.tpot_attainment_class(class),
+            qlm.tpot_attainment_class(class)
+        );
+    }
 }
 
 #[test]

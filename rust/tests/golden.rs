@@ -122,6 +122,7 @@ fn golden_digests_reproducible_per_policy_and_scenario() {
         Policy::Wfq,
         Policy::Sjf,
         Policy::VllmFcfs,
+        Policy::Chunked,
     ];
     let pinned: std::collections::HashMap<String, u64> = std::fs::read_to_string(ledger_path())
         .map(|s| {
@@ -182,6 +183,7 @@ fn threaded_equals_serial_across_policies() {
         Policy::Wfq,
         Policy::Sjf,
         Policy::Shepherd,
+        Policy::Chunked,
     ] {
         let serial = run_scenario(Scenario::MixedSlo, policy, 300, 1);
         let par = run_scenario(Scenario::MixedSlo, policy, 300, 4);

@@ -173,7 +173,7 @@ fn global_queue_survives_instance_failure() {
                 arrival_s: arrival,
                 model: ModelId(0),
                 class: SloClass::Interactive,
-                slo_s: 20.0,
+                slo: SloClass::Interactive.target(),
                 input_tokens: 64,
                 output_tokens: 16,
                 mega: false,

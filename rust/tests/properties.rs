@@ -18,7 +18,7 @@ use qlm::coordinator::rwt::{ProfileTable, RwtEstimator};
 use qlm::coordinator::scheduler::{GlobalScheduler, InstanceView, SchedulerConfig};
 use qlm::coordinator::GlobalQueue;
 use qlm::util::Rng;
-use qlm::workload::{SloClass, TraceRequest};
+use qlm::workload::{SloClass, SloTarget, TraceRequest};
 
 fn rand_request(rng: &mut Rng, id: u64, n_models: u32) -> Request {
     let class = *rng.choose(&[SloClass::Interactive, SloClass::Batch1, SloClass::Batch2]);
@@ -28,7 +28,7 @@ fn rand_request(rng: &mut Rng, id: u64, n_models: u32) -> Request {
             arrival_s: rng.range(0.0, 100.0),
             model: ModelId(rng.usize(n_models as usize) as u32),
             class,
-            slo_s: class.slo_s(),
+            slo: class.target(),
             input_tokens: 1 + rng.usize(2000) as u32,
             output_tokens: 1 + rng.usize(1500) as u32,
             mega: rng.f64() < 0.1,
@@ -102,7 +102,7 @@ fn prop_scheduler_assignment_is_partition() {
                 id: GroupId(g),
                 model: ModelId(rng.usize(4) as u32),
                 class: SloClass::Batch1,
-                slo_s: 30.0 + rng.f64() * 3600.0,
+                slo: SloTarget::new(30.0 + rng.f64() * 3600.0, 1.0),
                 earliest_arrival_s: rng.f64() * 50.0,
                 members: VecDeque::from_iter(0..(1 + rng.usize(64)) as u64),
                 mega: false,
@@ -244,6 +244,8 @@ fn prop_instance_accounting() {
                     generated: 0,
                     first_token_at: None,
                     arrival_s: now,
+                    prefilled: 0,
+                    slice_left: 0,
                 };
                 if inst.try_admit(seq, now).is_ok() {
                     admitted += 1;
@@ -323,7 +325,7 @@ fn prop_global_queue_state_machine() {
                     running.sort_unstable();
                     if !running.is_empty() {
                         let id = *rng.choose(&running);
-                        q.complete(id, Some(1.0), 2.0);
+                        q.complete(id, Some(1.0), 2.0, 5);
                         live.remove(&id);
                         completed += 1;
                     }
@@ -467,7 +469,7 @@ fn prop_rwt_monotone_in_queue_prefix() {
                 id: GroupId(g),
                 model: ModelId(rng.usize(3) as u32),
                 class: SloClass::Batch1,
-                slo_s: 60.0,
+                slo: SloTarget::new(60.0, 1.0),
                 earliest_arrival_s: 0.0,
                 members: VecDeque::from_iter(0..(1 + rng.usize(128)) as u64),
                 mega: false,
