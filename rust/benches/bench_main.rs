@@ -135,8 +135,8 @@ fn views(n: u32, catalog: &ModelCatalog) -> Vec<InstanceView> {
     let prompt = qlm::backend::perf::PROFILE_MEAN_PROMPT_TOKENS;
     (0..n)
         .map(|i| {
-            let mut perf_for = std::collections::HashMap::new();
-            let mut swap_time = std::collections::HashMap::new();
+            let mut perf_for = std::collections::BTreeMap::new();
+            let mut swap_time = std::collections::BTreeMap::new();
             for m in catalog.ids() {
                 if let Some(p) = PerfModel::try_profile(catalog.get(m), GpuKind::A100, prompt) {
                     swap_time.insert(m, p.swap_cpu_gpu_s);

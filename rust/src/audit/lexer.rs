@@ -1,0 +1,323 @@
+//! A minimal, zero-dependency Rust *line* lexer for the audit pass.
+//!
+//! [`strip`] splits a source file into per-line (code, comment) views:
+//! everything inside `//`/`/* */` comments moves to the comment view,
+//! and the contents of string/char/byte/raw-string literals are blanked
+//! out of the code view (so a doc comment or a log message mentioning
+//! `HashMap` or `unsafe` can never trip a rule). Rules then scan the
+//! code view for tokens and the comment view for `SAFETY:` and
+//! `audit:allow(...)` annotations.
+//!
+//! The lexer is deliberately *not* a full Rust grammar: it only needs
+//! to classify every byte as code / comment / literal-interior. It
+//! handles nested block comments, escapes, raw strings with any `#`
+//! count, byte literals, and the `'a` lifetime-vs-char-literal
+//! ambiguity (a `'` starts a char literal only when it is closed as
+//! one: `'\…'` or `'x'`; otherwise it is a lifetime and stays code).
+
+/// One source line split into its code and comment parts. Both strings
+/// are byte-for-byte as long as the original line: stripped spans are
+/// blanked with spaces so column positions survive.
+#[derive(Debug, Clone)]
+pub struct LineInfo {
+    /// The line with comments and literal interiors blanked out.
+    pub code: String,
+    /// The line with everything *but* comment text blanked out.
+    pub comment: String,
+}
+
+enum State {
+    Normal,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(usize),
+    Char,
+}
+
+/// True when `b` can appear in an identifier (used to keep `br"`/`r#"`
+/// raw-string detection from firing inside identifiers like `for r`).
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Match a raw-string opener (`r"`, `r#"`, `br##"`, …) at `src[i..]`;
+/// returns `(opener_len, hash_count)`.
+fn raw_open(src: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if src.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if src.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while src.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if src.get(j) == Some(&b'"') {
+        Some((j + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+/// Split `source` into per-line code/comment views. Never fails: bytes
+/// that do not fit the grammar are treated as plain code.
+pub fn strip(source: &str) -> Vec<LineInfo> {
+    let src = source.as_bytes();
+    let mut lines = Vec::new();
+    let mut code: Vec<u8> = Vec::new();
+    let mut comment: Vec<u8> = Vec::new();
+    let mut state = State::Normal;
+    let mut i = 0;
+
+    macro_rules! endline {
+        () => {
+            lines.push(LineInfo {
+                code: String::from_utf8_lossy(&code).into_owned(),
+                comment: String::from_utf8_lossy(&comment).into_owned(),
+            });
+            code.clear();
+            comment.clear();
+        };
+    }
+
+    while i < src.len() {
+        let b = src[i];
+        if b == b'\n' {
+            if matches!(state, State::LineComment) {
+                state = State::Normal;
+            }
+            endline!();
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Normal => {
+                let raw = if i == 0 || !is_ident(src[i - 1]) {
+                    raw_open(src, i)
+                } else {
+                    None
+                };
+                if src[i..].starts_with(b"//") {
+                    state = State::LineComment;
+                    code.extend_from_slice(b"  ");
+                    comment.extend_from_slice(b"//");
+                    i += 2;
+                } else if src[i..].starts_with(b"/*") {
+                    state = State::BlockComment(1);
+                    code.extend_from_slice(b"  ");
+                    comment.extend_from_slice(b"/*");
+                    i += 2;
+                } else if b == b'"' {
+                    state = State::Str;
+                    code.push(b'"');
+                    comment.push(b' ');
+                    i += 1;
+                } else if let Some((len, hashes)) = raw {
+                    state = State::RawStr(hashes);
+                    for _ in 0..len {
+                        code.push(b' ');
+                        comment.push(b' ');
+                    }
+                    i += len;
+                } else if src[i..].starts_with(b"b\"") {
+                    state = State::Str;
+                    code.extend_from_slice(b"b\"");
+                    comment.extend_from_slice(b"  ");
+                    i += 2;
+                } else if b == b'\'' {
+                    // Char literal iff it closes as one; else lifetime.
+                    let is_char = match src.get(i + 1) {
+                        Some(b'\\') => true,
+                        Some(_) => src.get(i + 2) == Some(&b'\''),
+                        None => false,
+                    };
+                    if is_char {
+                        state = State::Char;
+                    }
+                    code.push(b'\'');
+                    comment.push(b' ');
+                    i += 1;
+                } else {
+                    code.push(b);
+                    comment.push(b' ');
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                code.push(b' ');
+                comment.push(b);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if src[i..].starts_with(b"/*") {
+                    state = State::BlockComment(depth + 1);
+                    code.extend_from_slice(b"  ");
+                    comment.extend_from_slice(b"/*");
+                    i += 2;
+                } else if src[i..].starts_with(b"*/") {
+                    state = if depth == 1 {
+                        State::Normal
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    code.extend_from_slice(b"  ");
+                    comment.extend_from_slice(b"*/");
+                    i += 2;
+                } else {
+                    code.push(b' ');
+                    comment.push(b);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if b == b'\\' {
+                    code.extend_from_slice(b"  ");
+                    comment.extend_from_slice(b"  ");
+                    i += 2;
+                } else if b == b'"' {
+                    state = State::Normal;
+                    code.push(b'"');
+                    comment.push(b' ');
+                    i += 1;
+                } else {
+                    code.push(b' ');
+                    comment.push(b' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                let close = b == b'"'
+                    && src[i + 1..].len() >= hashes
+                    && src[i + 1..i + 1 + hashes].iter().all(|&h| h == b'#');
+                if close {
+                    state = State::Normal;
+                    for _ in 0..=hashes {
+                        code.push(b' ');
+                        comment.push(b' ');
+                    }
+                    i += 1 + hashes;
+                } else {
+                    code.push(b' ');
+                    comment.push(b' ');
+                    i += 1;
+                }
+            }
+            State::Char => {
+                if b == b'\\' {
+                    code.extend_from_slice(b"  ");
+                    comment.extend_from_slice(b"  ");
+                    i += 2;
+                } else if b == b'\'' {
+                    state = State::Normal;
+                    code.push(b'\'');
+                    comment.push(b' ');
+                    i += 1;
+                } else {
+                    code.push(b' ');
+                    comment.push(b' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    endline!();
+    lines
+}
+
+/// True when `word` occurs in `line` as a standalone token (not as a
+/// substring of a longer identifier).
+pub fn has_token(line: &str, word: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(word) {
+        let start = from + pos;
+        let end = start + word.len();
+        let ok_left = start == 0 || !is_ident(bytes[start - 1]);
+        let ok_right = end >= bytes.len() || !is_ident(bytes[end]);
+        if ok_left && ok_right {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        strip(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comments_move_to_comment_view() {
+        let lines = strip("let x = 1; // HashMap here\n");
+        assert!(!lines[0].code.contains("HashMap"));
+        assert!(lines[0].comment.contains("HashMap"));
+        assert!(lines[0].code.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn block_comments_nest() {
+        let src = "a /* outer /* inner */ still comment */ b\n";
+        let code = code_of(src);
+        assert!(code[0].contains('a') && code[0].contains('b'));
+        assert!(!code[0].contains("inner") && !code[0].contains("still"));
+    }
+
+    #[test]
+    fn string_interiors_are_blanked() {
+        let code = code_of("let s = \"unsafe HashMap // not a comment\"; f();\n");
+        assert!(!code[0].contains("unsafe"));
+        assert!(!code[0].contains("HashMap"));
+        assert!(code[0].contains("f();"));
+        let lines = strip("let s = \"// no\"; g();\n");
+        assert!(lines[0].code.contains("g();"), "quote must close the string");
+    }
+
+    #[test]
+    fn escaped_quotes_stay_inside_the_string() {
+        let code = code_of(r#"let s = "a\"unsafe\"b"; h();"#);
+        assert!(!code[0].contains("unsafe"));
+        assert!(code[0].contains("h();"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let code = code_of("let s = r#\"unsafe \"quoted\" HashMap\"#; k();\n");
+        assert!(!code[0].contains("unsafe"));
+        assert!(!code[0].contains("HashMap"));
+        assert!(code[0].contains("k();"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let code = code_of("let c = '\"'; let l: &'static str = x; fn f<'a>() {}\n");
+        // The '"' char literal must not open a string that swallows the line.
+        assert!(code[0].contains("static"));
+        assert!(code[0].contains("fn f<"));
+    }
+
+    #[test]
+    fn multiline_block_comment_spans_lines() {
+        let code = code_of("a\n/* unsafe\nHashMap */\nb\n");
+        assert!(code[0].contains('a'));
+        assert!(!code[1].contains("unsafe"));
+        assert!(!code[2].contains("HashMap"));
+        assert!(code[3].contains('b'));
+    }
+
+    #[test]
+    fn token_matching_respects_identifier_boundaries() {
+        assert!(has_token("use std::collections::HashMap;", "HashMap"));
+        assert!(!has_token("let my_unsafe_flag = 1;", "unsafe"));
+        assert!(!has_token("HashMapLike", "HashMap"));
+        assert!(has_token("unsafe { x }", "unsafe"));
+    }
+}

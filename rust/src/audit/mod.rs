@@ -1,0 +1,350 @@
+//! `qlm audit` — the in-repo static-analysis pass that machine-enforces
+//! the determinism, concurrency, and architecture invariants the golden
+//! gates depend on.
+//!
+//! QLM's reproducibility claims (run-to-run golden digests, threads ≡
+//! serial, `qlm compare` digest equality) only hold because scheduling
+//! code obeys invariants that used to live in README prose: BTree-only
+//! collections, no wall clock in sim logic, threads and `unsafe`
+//! confined to `util/pool.rs`/`util/par.rs`, one pricing path, one
+//! comparator. This module is a zero-dependency, comment/string/char-
+//! literal-aware lexer ([`lexer`]) plus a rule engine ([`rules`]) that
+//! fails the build when one of those invariants is broken. It runs
+//! three ways:
+//!
+//! * `qlm audit` — the CLI (machine-readable output, nonzero exit);
+//! * `tests/audit.rs` — an integration test over `CARGO_MANIFEST_DIR`,
+//!   so tier-1 `cargo test` itself enforces the invariants;
+//! * a dedicated CI job (`.github/workflows/ci.yml`).
+//!
+//! Violations a human has judged acceptable are waived in place with
+//! `// audit:allow(<rule>): <reason>` — the reason is mandatory (a
+//! waiver without one is itself a violation) and `qlm audit --list`
+//! counts waivers per rule so creep shows up in PR diffs.
+
+pub mod lexer;
+mod rules;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Every invariant the audit enforces. Rule ids (kebab-case) are the
+/// public interface: they appear in waivers, `--explain`, and CI logs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    HashCollections,
+    WallClock,
+    ThreadConfinement,
+    UnsafeConfinement,
+    SafetyComment,
+    HotPathPanic,
+    PricingSeam,
+    WaiverHygiene,
+}
+
+/// Static metadata for one rule: id, invariant group, one-line summary,
+/// and the long `--explain` text.
+pub struct RuleInfo {
+    pub rule: Rule,
+    pub id: &'static str,
+    pub group: &'static str,
+    pub summary: &'static str,
+    pub explain: &'static str,
+}
+
+/// The rule table, in reporting order.
+pub const RULES: [RuleInfo; 8] = [
+    RuleInfo {
+        rule: Rule::HashCollections,
+        id: "hash-collections",
+        group: "determinism",
+        summary: "no HashMap/HashSet in sim/, coordinator/, baselines/, capacity/, workload/",
+        explain: "Scheduling code must use BTreeMap/BTreeSet (or Vec/slab) only. \
+                  HashMap and HashSet iterate in RandomState order, which differs per \
+                  process: any hash iteration that touches a plan, a float accumulation, \
+                  or an event order silently breaks the golden-digest suites, the \
+                  threads==serial gates, and `qlm compare` digest equality. The rule \
+                  flags the *names* HashMap/HashSet anywhere in the restricted \
+                  directories, imports included, so a lookup-only map still needs an \
+                  explicit waiver arguing why its iteration order can never leak.\n\
+                  Fix: switch to BTreeMap/BTreeSet (all QLM key types are Ord), or \
+                  waive with `// audit:allow(hash-collections): <why order cannot leak>`.",
+    },
+    RuleInfo {
+        rule: Rule::WallClock,
+        id: "wall-clock",
+        group: "determinism",
+        summary: "no Instant/SystemTime (or ::now() calls) in deterministic code",
+        explain: "Simulated time comes from the event clock; real time is only a \
+                  measurement. A wall-clock read inside scheduling logic makes plans a \
+                  function of host speed and destroys replay. The rule flags the type \
+                  names Instant/SystemTime and any `::now(` call in sim/, coordinator/, \
+                  baselines/, capacity/, workload/. The sanctioned capture sites — the \
+                  scheduler-overhead stopwatch in sim/engine.rs and the CLI layer in \
+                  main.rs — carry waivers; runtime/ and figures/ measure real hardware \
+                  and are outside the rule's scope entirely.\n\
+                  Fix: thread the event-clock time in as a parameter, or waive with \
+                  `// audit:allow(wall-clock): <why this read cannot affect a plan>`.",
+    },
+    RuleInfo {
+        rule: Rule::ThreadConfinement,
+        id: "thread-confinement",
+        group: "concurrency",
+        summary: "thread::spawn / thread::scope only in util/pool.rs + util/par.rs",
+        explain: "All parallelism flows through the persistent WorkerPool \
+                  (util/pool.rs) or the scoped baseline primitive (util/par.rs), whose \
+                  index-ordered chunking is what makes threaded runs bit-identical to \
+                  serial. A stray thread::spawn elsewhere would create a second, \
+                  unaudited concurrency seam with its own ordering behavior.\n\
+                  Fix: route the parallel pass through WorkerPool::run_chunks_mut (or \
+                  util::par_chunks_mut), or waive with \
+                  `// audit:allow(thread-confinement): <reason>`.",
+    },
+    RuleInfo {
+        rule: Rule::UnsafeConfinement,
+        id: "unsafe-confinement",
+        group: "concurrency",
+        summary: "`unsafe` only in util/pool.rs",
+        explain: "The one unsafe construction in the codebase is the WorkerPool's \
+                  borrow-erasing job pointer, whose soundness argument (the submitter \
+                  blocks until every chunk drains) is documented, tested, and checked \
+                  under Miri/TSan in CI. Keeping `unsafe` confined to that file keeps \
+                  the soundness surface reviewable; the crate root also carries \
+                  #![deny(unsafe_op_in_unsafe_fn)] so unsafe operations are explicit \
+                  even inside unsafe fns.\n\
+                  Fix: express the code safely, or — for a new, argued-for site — waive \
+                  with `// audit:allow(unsafe-confinement): <reason>` plus a SAFETY: \
+                  comment (the safety-comment rule still applies).",
+    },
+    RuleInfo {
+        rule: Rule::SafetyComment,
+        id: "safety-comment",
+        group: "concurrency",
+        summary: "every `unsafe` must carry a `// SAFETY:` comment",
+        explain: "Each unsafe block, fn, impl, or fn-pointer type must state its \
+                  soundness argument in a `// SAFETY:` comment on the same line or in \
+                  the contiguous comment block directly above (the clippy \
+                  undocumented_unsafe_blocks convention). An unargued unsafe is \
+                  unreviewable.\n\
+                  Fix: write the SAFETY: comment; there is rarely a reason to waive \
+                  this one.",
+    },
+    RuleInfo {
+        rule: Rule::HotPathPanic,
+        id: "hot-path-panic",
+        group: "architecture",
+        summary: "no panic!/.unwrap()/.expect( in non-test sim/, coordinator/, baselines/",
+        explain: "A panic in the scheduling hot path kills the whole serving \
+                  coordinator. Production paths must either handle the None/Err arm or \
+                  carry a waiver arguing why the invariant cannot break (slab ids \
+                  handed out by the same map, NaN-free floats, etc.). #[cfg(test)] \
+                  items are exempt — tests should assert loudly.\n\
+                  Fix: handle the failure arm (match/if-let/unwrap_or_else), replace \
+                  float partial_cmp().unwrap() with total_cmp, or waive with \
+                  `// audit:allow(hot-path-panic): <why this cannot fire>`.",
+    },
+    RuleInfo {
+        rule: Rule::PricingSeam,
+        id: "pricing-seam",
+        group: "architecture",
+        summary: "scoring/affinity internals named only inside the sched core",
+        explain: "There is exactly one scoring path (sched/pricing.rs: price_group / \
+                  append_score / reprice_queue, over rwt.rs::group_service) and one \
+                  ordering comparator (sched/plan.rs: affinity_cmp / affinity_order). \
+                  Policies and the engine consume them through the GlobalScheduler \
+                  facade; naming those internals anywhere else (the facade \
+                  coordinator/scheduler.rs excepted) would fork the pricing logic and \
+                  let two call sites drift apart — the exact bug class the PR-5 \
+                  one-price/one-comparator invariant exists to prevent.\n\
+                  Fix: call through GlobalScheduler / pricing's public helpers, or \
+                  waive with `// audit:allow(pricing-seam): <reason>`.",
+    },
+    RuleInfo {
+        rule: Rule::WaiverHygiene,
+        id: "waiver-hygiene",
+        group: "meta",
+        summary: "every audit:allow waiver needs a known rule id and a `: reason`",
+        explain: "`// audit:allow(<rule>): <reason>` is the only escape hatch, so the \
+                  escape hatch itself is checked: the rule id must exist and the \
+                  justification must be non-empty. A malformed waiver is reported and \
+                  suppresses nothing, and this rule cannot itself be waived.\n\
+                  Fix: spell the rule id exactly as in `qlm audit --list` and write the \
+                  reason after `): `.",
+    },
+];
+
+impl Rule {
+    /// The kebab-case id used in waivers, `--explain`, and output.
+    pub fn id(self) -> &'static str {
+        self.info().id
+    }
+
+    /// Look a rule up by its kebab-case id.
+    pub fn from_id(id: &str) -> Option<Rule> {
+        RULES.iter().find(|r| r.id == id).map(|r| r.rule)
+    }
+
+    /// Static metadata for this rule.
+    pub fn info(self) -> &'static RuleInfo {
+        match RULES.iter().find(|r| r.rule == self) {
+            Some(info) => info,
+            // RULES covers every variant by construction (unit-tested).
+            None => &RULES[0],
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One rule violation at one source line.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: Rule,
+    /// Path relative to the audited root, with `/` separators.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// What fired, human-readable.
+    pub note: String,
+    /// The offending source line, trimmed.
+    pub snippet: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}\t{}:{}\t{}\t{}",
+            self.rule, self.file, self.line, self.note, self.snippet
+        )
+    }
+}
+
+/// One well-formed `audit:allow` annotation (tracked so `--list` can
+/// expose waiver creep).
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub rule: Rule,
+    pub file: String,
+    pub line: usize,
+}
+
+/// Everything one audit pass learned about the tree.
+#[derive(Debug, Default)]
+pub struct AuditReport {
+    pub violations: Vec<Violation>,
+    pub waivers: Vec<Waiver>,
+    /// Files scanned (observability: an empty-tree "pass" is a bug).
+    pub files_scanned: usize,
+}
+
+/// Scan a single file's source as if it lived at `rel` (path relative
+/// to the crate root, `/` separators). This is the per-file entry point
+/// `run` uses; the fixture tests call it directly with pretend paths.
+pub fn scan_source(rel: &str, source: &str) -> Vec<Violation> {
+    rules::scan_lines(rel, source).0
+}
+
+/// Like [`scan_source`], but also returns the well-formed waivers.
+pub fn scan_source_report(rel: &str, source: &str) -> (Vec<Violation>, Vec<Waiver>) {
+    rules::scan_lines(rel, source)
+}
+
+/// Audit the crate rooted at `root` (the directory containing `src/`
+/// and `tests/`, i.e. `CARGO_MANIFEST_DIR`). Scans `src/**/*.rs` and
+/// `tests/**/*.rs`, skipping `tests/audit_fixtures/` (those files are
+/// violations on purpose). Deterministic: files are visited in sorted
+/// path order.
+pub fn run_report(root: &Path) -> io::Result<AuditReport> {
+    let mut files = Vec::new();
+    for base in ["src", "tests"] {
+        let dir = root.join(base);
+        if dir.is_dir() {
+            collect_rs_files(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    let mut report = AuditReport::default();
+    for path in files {
+        let rel = match path.strip_prefix(root) {
+            Ok(r) => r.to_string_lossy().replace('\\', "/"),
+            Err(_) => path.to_string_lossy().replace('\\', "/"),
+        };
+        if rel.starts_with("tests/audit_fixtures/") {
+            continue;
+        }
+        let source = fs::read_to_string(&path)?;
+        let (violations, waivers) = rules::scan_lines(&rel, &source);
+        report.violations.extend(violations);
+        report.waivers.extend(waivers);
+        report.files_scanned += 1;
+    }
+    Ok(report)
+}
+
+/// Audit the crate rooted at `root`; returns only the violations.
+pub fn run(root: &Path) -> io::Result<Vec<Violation>> {
+    Ok(run_report(root)?.violations)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_table_covers_every_variant_with_unique_ids() {
+        let all = [
+            Rule::HashCollections,
+            Rule::WallClock,
+            Rule::ThreadConfinement,
+            Rule::UnsafeConfinement,
+            Rule::SafetyComment,
+            Rule::HotPathPanic,
+            Rule::PricingSeam,
+            Rule::WaiverHygiene,
+        ];
+        assert_eq!(RULES.len(), all.len());
+        for rule in all {
+            let info = rule.info();
+            assert_eq!(info.rule, rule, "info() must resolve {rule}");
+            assert_eq!(Rule::from_id(info.id), Some(rule));
+            assert!(!info.summary.is_empty() && !info.explain.is_empty());
+        }
+        let mut ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), RULES.len(), "rule ids must be unique");
+    }
+
+    #[test]
+    fn violation_display_is_machine_readable() {
+        let v = Violation {
+            rule: Rule::WallClock,
+            file: "src/sim/engine.rs".to_string(),
+            line: 7,
+            note: "wall-clock `::now()` call".to_string(),
+            snippet: "let t = Instant::now();".to_string(),
+        };
+        let line = v.to_string();
+        assert!(line.starts_with("wall-clock\tsrc/sim/engine.rs:7\t"));
+        assert_eq!(line.split('\t').count(), 4);
+    }
+}

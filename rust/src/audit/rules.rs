@@ -1,0 +1,379 @@
+//! The audit rule engine: path scoping, `#[cfg(test)]` extent
+//! detection, `audit:allow` waiver parsing, and the per-line token
+//! checks for every [`Rule`].
+//!
+//! All checks run over the lexer's *code* view ([`super::lexer`]), so
+//! comments and string literals can never fire a rule; waivers and
+//! `SAFETY:` annotations are read from the *comment* view.
+
+use super::lexer::{has_token, strip, LineInfo};
+use super::{Rule, Violation, Waiver};
+
+/// Directories whose scheduling logic must stay deterministic
+/// (hash-collections + wall-clock rules).
+const DET_DIRS: [&str; 5] = [
+    "src/sim/",
+    "src/coordinator/",
+    "src/baselines/",
+    "src/capacity/",
+    "src/workload/",
+];
+
+/// The scheduling hot path (hot-path-panic rule).
+const HOT_DIRS: [&str; 3] = ["src/sim/", "src/coordinator/", "src/baselines/"];
+
+/// The only files allowed to spawn or scope OS threads.
+const THREAD_OK: [&str; 2] = ["src/util/pool.rs", "src/util/par.rs"];
+
+/// The only file allowed to contain `unsafe`.
+const UNSAFE_OK: &str = "src/util/pool.rs";
+
+/// The scheduling core: the only place scoring/affinity internals may
+/// be named (`src/coordinator/sched/` is a prefix, the rest are files —
+/// `rwt.rs` hosts the estimator the scoring path is built on and
+/// `scheduler.rs` is the façade that re-exports the seam).
+const SEAM_PREFIX: &str = "src/coordinator/sched/";
+const SEAM_FILES: [&str; 2] = ["src/coordinator/rwt.rs", "src/coordinator/scheduler.rs"];
+
+/// Identifiers that constitute the scoring/affinity seam.
+const SEAM_TOKENS: [&str; 6] = [
+    "price_group",
+    "append_score",
+    "reprice_queue",
+    "group_service",
+    "affinity_cmp",
+    "affinity_order",
+];
+
+fn in_any(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p))
+}
+
+/// Mark every line that belongs to a `#[cfg(test)]` item (the attribute
+/// line through the close of the item's brace block). Operates on the
+/// code view, so braces inside literals or comments cannot desync the
+/// depth count.
+fn test_extents(lines: &[LineInfo]) -> Vec<bool> {
+    let mut test = vec![false; lines.len()];
+    let mut li = 0;
+    while li < lines.len() {
+        let squashed: String = lines[li].code.chars().filter(|c| !c.is_whitespace()).collect();
+        if !squashed.contains("#[cfg(test)]") {
+            li += 1;
+            continue;
+        }
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut lj = li;
+        while lj < lines.len() {
+            for c in lines[lj].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            lj += 1;
+        }
+        let end = lj.min(lines.len() - 1);
+        for t in test.iter_mut().take(end + 1).skip(li) {
+            *t = true;
+        }
+        li = lj + 1;
+    }
+    test
+}
+
+/// A parsed `audit:allow(<rule>): <reason>` annotation (well-formed or
+/// not — hygiene problems are reported as violations by the caller).
+enum ParsedWaiver {
+    Ok(Rule),
+    UnknownRule(String),
+    MissingReason(String),
+}
+
+/// Find an `audit:allow` annotation in one comment line. Only a
+/// kebab-case id between the parens makes the text a waiver at all —
+/// prose quoting the syntax with a `<rule>` placeholder is ignored,
+/// while a waiver naming a misspelled-but-well-formed rule is still
+/// reported by the hygiene rule.
+fn parse_waiver(comment: &str) -> Option<ParsedWaiver> {
+    let start = comment.find("audit:allow(")?;
+    let rest = &comment[start + "audit:allow(".len()..];
+    let close = rest.find(')')?;
+    let rule_id = &rest[..close];
+    let kebab = !rule_id.is_empty()
+        && rule_id
+            .bytes()
+            .all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'-');
+    if !kebab {
+        return None;
+    }
+    let after = &rest[close + 1..];
+    let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+    match Rule::from_id(rule_id) {
+        None => Some(ParsedWaiver::UnknownRule(rule_id.to_string())),
+        Some(_) if reason.is_empty() => Some(ParsedWaiver::MissingReason(rule_id.to_string())),
+        Some(rule) => Some(ParsedWaiver::Ok(rule)),
+    }
+}
+
+/// Scan one file (already split by the lexer) under its repo-relative
+/// path, returning violations plus every well-formed waiver (waiver
+/// counts feed `qlm audit --list`).
+pub(super) fn scan_lines(rel: &str, source: &str) -> (Vec<Violation>, Vec<Waiver>) {
+    let lines = strip(source);
+    let original: Vec<&str> = source.lines().collect();
+    let test = test_extents(&lines);
+    let mut violations = Vec::new();
+    let mut waivers = Vec::new();
+
+    // Pass 1: collect waivers. A waiver on a code-carrying line covers
+    // that line; a waiver on a comment-only line covers the next line
+    // that carries code.
+    let mut covered: Vec<(Rule, usize)> = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let parsed = match parse_waiver(&line.comment) {
+            Some(p) => p,
+            None => continue,
+        };
+        match parsed {
+            ParsedWaiver::UnknownRule(id) => violations.push(Violation {
+                rule: Rule::WaiverHygiene,
+                file: rel.to_string(),
+                line: idx + 1,
+                note: format!("waiver names unknown rule `{id}`"),
+                snippet: snippet(&original, idx),
+            }),
+            ParsedWaiver::MissingReason(id) => violations.push(Violation {
+                rule: Rule::WaiverHygiene,
+                file: rel.to_string(),
+                line: idx + 1,
+                note: format!("waiver for `{id}` has no `: <reason>` justification"),
+                snippet: snippet(&original, idx),
+            }),
+            ParsedWaiver::Ok(rule) => {
+                let mut target = idx;
+                if lines[idx].code.trim().is_empty() {
+                    let mut j = idx + 1;
+                    while j < lines.len() && lines[j].code.trim().is_empty() {
+                        j += 1;
+                    }
+                    target = j;
+                }
+                waivers.push(Waiver {
+                    rule,
+                    file: rel.to_string(),
+                    line: idx + 1,
+                });
+                covered.push((rule, target));
+            }
+        }
+    }
+    let waived = |rule: Rule, idx: usize| covered.iter().any(|&(r, t)| r == rule && t == idx);
+
+    let in_det = in_any(rel, &DET_DIRS);
+    let in_hot = in_any(rel, &HOT_DIRS);
+    let thread_ok = THREAD_OK.contains(&rel);
+    let unsafe_ok = rel == UNSAFE_OK;
+    let seam_ok = rel.starts_with(SEAM_PREFIX) || SEAM_FILES.contains(&rel);
+
+    // Pass 2: token rules over the code view.
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        let mut emit = |rule: Rule, note: String| {
+            if !waived(rule, idx) {
+                violations.push(Violation {
+                    rule,
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    note,
+                    snippet: snippet(&original, idx),
+                });
+            }
+        };
+        if in_det {
+            for word in ["HashMap", "HashSet"] {
+                if has_token(code, word) {
+                    emit(Rule::HashCollections, format!("`{word}` in scheduling code"));
+                }
+            }
+            for word in ["Instant", "SystemTime"] {
+                if has_token(code, word) {
+                    emit(Rule::WallClock, format!("`{word}` in deterministic code"));
+                }
+            }
+            if code.contains("::now(") {
+                emit(Rule::WallClock, "wall-clock `::now()` call".to_string());
+            }
+        }
+        if !thread_ok {
+            for word in ["thread::spawn", "thread::scope"] {
+                if code.contains(word) {
+                    emit(
+                        Rule::ThreadConfinement,
+                        format!("`{word}` outside util/pool.rs + util/par.rs"),
+                    );
+                }
+            }
+        }
+        if has_token(code, "unsafe") {
+            if !unsafe_ok {
+                emit(
+                    Rule::UnsafeConfinement,
+                    "`unsafe` outside util/pool.rs".to_string(),
+                );
+            }
+            let mut documented = lines[idx].comment.contains("SAFETY:");
+            let mut j = idx;
+            while !documented && j > 0 {
+                j -= 1;
+                let above = &lines[j];
+                // Contiguous comment block: comment text, no code.
+                if above.code.trim().is_empty() && !above.comment.trim().is_empty() {
+                    documented = above.comment.contains("SAFETY:");
+                    if documented {
+                        break;
+                    }
+                } else {
+                    break;
+                }
+            }
+            if !documented {
+                emit(
+                    Rule::SafetyComment,
+                    "`unsafe` without a `// SAFETY:` comment".to_string(),
+                );
+            }
+        }
+        if in_hot && !test[idx] {
+            for pat in ["panic!", ".unwrap()", ".expect("] {
+                if code.contains(pat) {
+                    emit(Rule::HotPathPanic, format!("`{pat}` in the scheduling hot path"));
+                }
+            }
+        }
+        if !seam_ok {
+            for word in SEAM_TOKENS {
+                if has_token(code, word) {
+                    emit(
+                        Rule::PricingSeam,
+                        format!("`{word}` named outside the sched core"),
+                    );
+                }
+            }
+        }
+    }
+    (violations, waivers)
+}
+
+fn snippet(original: &[&str], idx: usize) -> String {
+    original.get(idx).map(|s| s.trim().to_string()).unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{scan_source, Rule};
+
+    fn rules_of(rel: &str, src: &str) -> Vec<Rule> {
+        scan_source(rel, src).into_iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_never_fire() {
+        let src = "// HashMap in a comment\nlet s = \"Instant::now()\"; /* unsafe */\n";
+        assert!(rules_of("src/sim/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn det_rules_scope_to_restricted_dirs() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(rules_of("src/sim/x.rs", src), vec![Rule::HashCollections]);
+        assert!(rules_of("src/metrics/x.rs", src).is_empty());
+        assert!(rules_of("src/figures/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_catches_aliased_now_calls() {
+        // The import is caught by name, the aliased call by `::now(`.
+        let src = "use std::time::Instant as W;\nlet t = W::now();\n";
+        let fired = rules_of("src/sim/x.rs", src);
+        assert_eq!(fired, vec![Rule::WallClock, Rule::WallClock]);
+    }
+
+    #[test]
+    fn waiver_suppresses_only_its_rule_on_its_line() {
+        let src = "// audit:allow(hash-collections): lookup-only, never iterated\n\
+                   use std::collections::HashMap;\n\
+                   use std::collections::HashSet;\n";
+        let fired = rules_of("src/sim/x.rs", src);
+        assert_eq!(fired, vec![Rule::HashCollections], "second line is not covered");
+    }
+
+    #[test]
+    fn trailing_waiver_covers_its_own_line() {
+        let src = "use std::collections::HashMap; // audit:allow(hash-collections): ok here\n";
+        assert!(rules_of("src/sim/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_code_is_exempt_from_hot_path_panic() {
+        let src = "fn live() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       #[test]\n\
+                       fn t() { Some(1).unwrap(); }\n\
+                   }\n";
+        assert!(rules_of("src/sim/x.rs", src).is_empty());
+        let bad = "fn live() { Some(1).unwrap(); }\n";
+        assert_eq!(rules_of("src/sim/x.rs", bad), vec![Rule::HotPathPanic]);
+    }
+
+    #[test]
+    fn unsafe_in_pool_needs_safety_comment_only() {
+        let undocumented = "unsafe { work() }\n";
+        assert_eq!(
+            rules_of("src/util/pool.rs", undocumented),
+            vec![Rule::SafetyComment]
+        );
+        let documented = "// SAFETY: chunk claimed under the lock.\nunsafe { work() }\n";
+        assert!(rules_of("src/util/pool.rs", documented).is_empty());
+        // Elsewhere both confinement and (if undocumented) SAFETY fire.
+        assert_eq!(
+            rules_of("src/sim/x.rs", documented),
+            vec![Rule::UnsafeConfinement]
+        );
+    }
+
+    #[test]
+    fn seam_tokens_allowed_only_in_the_sched_core() {
+        let src = "let p = price_group(&est, g, now);\n";
+        assert!(rules_of("src/coordinator/sched/solve.rs", src).is_empty());
+        assert!(rules_of("src/coordinator/rwt.rs", src).is_empty());
+        assert_eq!(rules_of("src/baselines/x.rs", src), vec![Rule::PricingSeam]);
+        assert_eq!(rules_of("src/sim/engine.rs", src), vec![Rule::PricingSeam]);
+    }
+
+    #[test]
+    fn malformed_waivers_are_violations_and_do_not_suppress() {
+        let src = "// audit:allow(hash-collections)\nuse std::collections::HashMap;\n";
+        let fired = rules_of("src/sim/x.rs", src);
+        assert_eq!(fired, vec![Rule::WaiverHygiene, Rule::HashCollections]);
+        let unknown = "// audit:allow(no-such-rule): reason\nlet x = 1;\n";
+        assert_eq!(rules_of("src/sim/x.rs", unknown), vec![Rule::WaiverHygiene]);
+    }
+
+    #[test]
+    fn thread_primitives_confined_to_pool_and_par() {
+        let src = "std::thread::spawn(|| {});\n";
+        assert_eq!(rules_of("src/sim/x.rs", src), vec![Rule::ThreadConfinement]);
+        assert!(rules_of("src/util/pool.rs", src).is_empty());
+        assert!(rules_of("src/util/par.rs", src).is_empty());
+    }
+}

@@ -4,7 +4,7 @@
 //! a device is fully described by this spec.
 
 /// Device model.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum GpuKind {
     A10,
     A100,

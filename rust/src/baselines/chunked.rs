@@ -7,7 +7,7 @@
 //! stalling behind it; relaxed queues get the full budget back for
 //! prefill efficiency.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::baselines::policy::{
     pin_executing, place_least_loaded, sorted_groups, PolicyCtx, PolicyPlan, SchedulingPolicy,
@@ -52,7 +52,7 @@ impl ChunkedPolicy {
 impl SchedulingPolicy for ChunkedPolicy {
     fn plan(&mut self, ctx: &PolicyCtx<'_>) -> PolicyPlan {
         let groups = sorted_groups(ctx, |g| g.deadline());
-        let mut orders = HashMap::new();
+        let mut orders = BTreeMap::new();
         let pinned = pin_executing(ctx, &mut orders);
         place_least_loaded(
             ctx,
@@ -66,7 +66,7 @@ impl SchedulingPolicy for ChunkedPolicy {
         // among the groups queued on it sets the prefill budget. Every
         // view has an entry in `orders` (pin_executing seeds them), so
         // pressure-free instances relax back to the base budget.
-        let mut chunk_tokens = HashMap::new();
+        let mut chunk_tokens = BTreeMap::new();
         for (&inst, order) in &orders {
             let mut min_frac = f64::INFINITY;
             for gid in order {

@@ -2,7 +2,7 @@
 //! groups onto the least-loaded compatible instance. Swaps whenever the
 //! head model differs — Insight #3's thrashing case.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::baselines::policy::{
     pin_executing, place_least_loaded, sorted_groups, PolicyCtx, PolicyPlan, SchedulingPolicy,
@@ -13,7 +13,7 @@ pub struct EdfPolicy;
 impl SchedulingPolicy for EdfPolicy {
     fn plan(&mut self, ctx: &PolicyCtx<'_>) -> PolicyPlan {
         let groups = sorted_groups(ctx, |g| g.deadline());
-        let mut orders = HashMap::new();
+        let mut orders = BTreeMap::new();
         let pinned = pin_executing(ctx, &mut orders);
         place_least_loaded(
             ctx,
@@ -26,7 +26,7 @@ impl SchedulingPolicy for EdfPolicy {
         PolicyPlan {
             orders,
             unservable: Vec::new(),
-            chunk_tokens: HashMap::new(),
+            chunk_tokens: BTreeMap::new(),
         }
     }
 }

@@ -15,7 +15,7 @@
 //! pay); device time comes from the scheduling core's pricing layer
 //! ([`crate::coordinator::sched::pricing::device_time`]).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::backend::ModelId;
 use crate::baselines::policy::{
@@ -39,7 +39,7 @@ impl SchedulingPolicy for EdfSwapPolicy {
     fn plan(&mut self, ctx: &PolicyCtx<'_>) -> PolicyPlan {
         // One pass = one pricing epoch, as in the global scheduler.
         self.estimator.begin_epoch();
-        let mut orders = HashMap::new();
+        let mut orders = BTreeMap::new();
         let pinned = pin_executing(ctx, &mut orders);
         let groups = sorted_groups(ctx, |g| g.deadline());
 
@@ -90,14 +90,14 @@ impl SchedulingPolicy for EdfSwapPolicy {
                 }
             }
             if let Some((k, finish)) = best {
-                orders.get_mut(&ctx.views[k].id).unwrap().push(g.id);
+                orders.entry(ctx.views[k].id).or_default().push(g.id);
                 tails[k] = (finish, Some(g.model));
             }
         }
         PolicyPlan {
             orders,
             unservable: Vec::new(),
-            chunk_tokens: HashMap::new(),
+            chunk_tokens: BTreeMap::new(),
         }
     }
 

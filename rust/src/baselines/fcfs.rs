@@ -2,7 +2,7 @@
 //! the statically pinned instance with least load — no reordering,
 //! eviction, or swapping.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::baselines::policy::{
     pin_executing, place_least_loaded, sorted_groups, PolicyCtx, PolicyPlan, SchedulingPolicy,
@@ -14,7 +14,7 @@ impl SchedulingPolicy for FcfsPolicy {
     fn plan(&mut self, ctx: &PolicyCtx<'_>) -> PolicyPlan {
         // FCFS = earliest arrival first (group id breaks Dump-trace ties).
         let groups = sorted_groups(ctx, |g| g.earliest_arrival_s);
-        let mut orders = HashMap::new();
+        let mut orders = BTreeMap::new();
         let pinned = pin_executing(ctx, &mut orders);
         let pinned_model = ctx.pinned_model;
         place_least_loaded(
@@ -28,7 +28,7 @@ impl SchedulingPolicy for FcfsPolicy {
         PolicyPlan {
             orders,
             unservable: Vec::new(),
-            chunk_tokens: HashMap::new(),
+            chunk_tokens: BTreeMap::new(),
         }
     }
 }

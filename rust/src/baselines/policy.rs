@@ -8,7 +8,7 @@
 //! ablation is a new `impl SchedulingPolicy` file (see `sjf.rs` for the
 //! template), not an engine edit.
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::backend::{InstanceId, ModelId};
 use crate::coordinator::request_group::{GroupId, RequestGroup};
@@ -19,11 +19,11 @@ use crate::coordinator::scheduler::InstanceView;
 /// table (§Perf — the seed deep-cloned every group per invocation).
 pub struct PolicyCtx<'a> {
     /// Live request groups (singleton groups for per-request policies).
-    pub groups: &'a HashMap<GroupId, RequestGroup>,
+    pub groups: &'a BTreeMap<GroupId, RequestGroup>,
     /// Scheduler views of the live, non-draining instances.
     pub views: &'a [InstanceView],
     /// Static model pinning for no-swap policies (vLLM baseline).
-    pub pinned_model: &'a HashMap<InstanceId, ModelId>,
+    pub pinned_model: &'a BTreeMap<InstanceId, ModelId>,
     /// Simulated time of this pass.
     pub now: f64,
     /// Groups whose membership, deadline anchor, or member states
@@ -46,9 +46,9 @@ pub struct PolicyCtx<'a> {
 /// budget — only chunk-aware policies populate it.
 #[derive(Debug, Default)]
 pub struct PolicyPlan {
-    pub orders: HashMap<InstanceId, Vec<GroupId>>,
+    pub orders: BTreeMap<InstanceId, Vec<GroupId>>,
     pub unservable: Vec<GroupId>,
-    pub chunk_tokens: HashMap<InstanceId, u32>,
+    pub chunk_tokens: BTreeMap<InstanceId, u32>,
 }
 
 /// A queue-ordering strategy, dispatched from the engine's
@@ -73,7 +73,7 @@ pub trait SchedulingPolicy {
 /// order (no preemptive migration, §5) and return the pinned set.
 pub(crate) fn pin_executing(
     ctx: &PolicyCtx<'_>,
-    orders: &mut HashMap<InstanceId, Vec<GroupId>>,
+    orders: &mut BTreeMap<InstanceId, Vec<GroupId>>,
 ) -> Vec<GroupId> {
     for v in ctx.views {
         let order = orders.entry(v.id).or_default();
@@ -96,14 +96,14 @@ pub(crate) fn place_least_loaded<S, L>(
     ctx: &PolicyCtx<'_>,
     groups: &[&RequestGroup],
     pinned: &[GroupId],
-    orders: &mut HashMap<InstanceId, Vec<GroupId>>,
+    orders: &mut BTreeMap<InstanceId, Vec<GroupId>>,
     serves: S,
     load_of: L,
 ) where
     S: Fn(&InstanceView, &RequestGroup) -> bool,
     L: Fn(&RequestGroup) -> f64,
 {
-    let mut load: HashMap<InstanceId, f64> = ctx.views.iter().map(|v| (v.id, 0.0)).collect();
+    let mut load: BTreeMap<InstanceId, f64> = ctx.views.iter().map(|v| (v.id, 0.0)).collect();
     for g in groups {
         if pinned.contains(&g.id) {
             continue;
@@ -112,23 +112,25 @@ pub(crate) fn place_least_loaded<S, L>(
             .views
             .iter()
             .filter(|v| serves(v, g))
-            .min_by(|a, b| load[&a.id].partial_cmp(&load[&b.id]).unwrap());
+            .min_by(|a, b| load[&a.id].total_cmp(&load[&b.id]));
         if let Some(v) = best {
-            orders.get_mut(&v.id).unwrap().push(g.id);
-            *load.get_mut(&v.id).unwrap() += load_of(g);
+            orders.entry(v.id).or_default().push(g.id);
+            *load.entry(v.id).or_insert(0.0) += load_of(g);
         }
     }
 }
 
 /// Shared helper: live groups sorted by `key` (ascending), group id as
 /// the final tie-break so plans are functions of the group *set*, not
-/// of `HashMap` iteration order.
+/// of the store's insertion or iteration order.
 pub(crate) fn sorted_groups<'a, K, F>(ctx: &PolicyCtx<'a>, key: F) -> Vec<&'a RequestGroup>
 where
     K: PartialOrd,
     F: Fn(&RequestGroup) -> K,
 {
     let mut groups: Vec<&RequestGroup> = ctx.groups.values().collect();
+    // audit:allow(hot-path-panic): keys are profiled moments and deadlines,
+    // finite by construction; a NaN here is a profiling bug worth crashing on.
     groups.sort_by(|a, b| key(a).partial_cmp(&key(b)).unwrap().then(a.id.cmp(&b.id)));
     groups
 }

@@ -3,7 +3,7 @@
 //! compatible instances with no RWT-informed placement; per-queue
 //! ordering keeps deadline order.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::backend::InstanceId;
 use crate::baselines::policy::{
@@ -16,7 +16,7 @@ pub struct RoundRobinPolicy;
 impl SchedulingPolicy for RoundRobinPolicy {
     fn plan(&mut self, ctx: &PolicyCtx<'_>) -> PolicyPlan {
         let groups = sorted_groups(ctx, |g| g.deadline());
-        let mut orders: HashMap<InstanceId, Vec<GroupId>> = HashMap::new();
+        let mut orders: BTreeMap<InstanceId, Vec<GroupId>> = BTreeMap::new();
         let pinned = pin_executing(ctx, &mut orders);
         let views = ctx.views;
         let mut rr = 0usize;
@@ -29,7 +29,7 @@ impl SchedulingPolicy for RoundRobinPolicy {
             for k in 0..views.len() {
                 let v = &views[(rr + k) % views.len()];
                 if v.can_serve(g.model) {
-                    orders.get_mut(&v.id).unwrap().push(g.id);
+                    orders.entry(v.id).or_default().push(g.id);
                     rr = (rr + k + 1) % views.len();
                     placed = true;
                     break;
@@ -37,14 +37,14 @@ impl SchedulingPolicy for RoundRobinPolicy {
             }
             if !placed {
                 if let Some(v) = views.first() {
-                    orders.get_mut(&v.id).unwrap().push(g.id);
+                    orders.entry(v.id).or_default().push(g.id);
                 }
             }
         }
         PolicyPlan {
             orders,
             unservable: Vec::new(),
-            chunk_tokens: HashMap::new(),
+            chunk_tokens: BTreeMap::new(),
         }
     }
 }

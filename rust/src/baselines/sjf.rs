@@ -12,7 +12,7 @@
 //! Also the proof that the [`SchedulingPolicy`] seam is cheap: this
 //! whole baseline is one self-contained file.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::baselines::policy::{
     pin_executing, place_least_loaded, sorted_groups, PolicyCtx, PolicyPlan, SchedulingPolicy,
@@ -40,7 +40,7 @@ impl SchedulingPolicy for SjfPolicy {
                 g.earliest_arrival_s,
             )
         });
-        let mut orders = HashMap::new();
+        let mut orders = BTreeMap::new();
         let pinned = pin_executing(ctx, &mut orders);
         place_least_loaded(
             ctx,
@@ -53,7 +53,7 @@ impl SchedulingPolicy for SjfPolicy {
         PolicyPlan {
             orders,
             unservable: Vec::new(),
-            chunk_tokens: HashMap::new(),
+            chunk_tokens: BTreeMap::new(),
         }
     }
 }

@@ -21,7 +21,7 @@
 //! miss while the class as a whole gets its share — which is exactly
 //! the ablation the compare table is for.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::baselines::policy::{
     pin_executing, place_least_loaded, sorted_groups, PolicyCtx, PolicyPlan, SchedulingPolicy,
@@ -56,7 +56,7 @@ impl SchedulingPolicy for WfqPolicy {
     fn plan(&mut self, ctx: &PolicyCtx<'_>) -> PolicyPlan {
         // One pass = one pricing epoch, as in the global scheduler.
         self.estimator.begin_epoch();
-        let mut orders = HashMap::new();
+        let mut orders = BTreeMap::new();
         let pinned = pin_executing(ctx, &mut orders);
 
         // Predicted device time per group, priced on the first
@@ -65,7 +65,7 @@ impl SchedulingPolicy for WfqPolicy {
         // Groups no view can serve are dropped, matching the
         // least-loaded placement rule shared by every baseline.
         let fifo = sorted_groups(ctx, |g| g.earliest_arrival_s);
-        let mut cost: HashMap<GroupId, f64> = HashMap::new();
+        let mut cost: BTreeMap<GroupId, f64> = BTreeMap::new();
         let mut classes: [VecDeque<&RequestGroup>; 3] =
             [VecDeque::new(), VecDeque::new(), VecDeque::new()];
         for g in fifo {
@@ -97,6 +97,7 @@ impl SchedulingPolicy for WfqPolicy {
                 }
             }
             let Some((c, _)) = best else { break };
+            // audit:allow(hot-path-panic): `best` selects only non-empty class queues.
             let g = classes[c].pop_front().unwrap();
             served[c] += cost[&g.id];
             order.push(g);
@@ -114,7 +115,7 @@ impl SchedulingPolicy for WfqPolicy {
         PolicyPlan {
             orders,
             unservable: Vec::new(),
-            chunk_tokens: HashMap::new(),
+            chunk_tokens: BTreeMap::new(),
         }
     }
 

@@ -8,7 +8,7 @@
 //! when and which action to set comes from the virtual queue ordering set
 //! by the global scheduler."
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::backend::{InstanceId, ModelId};
 use crate::coordinator::lso::{LsoAction, LsoConfig};
@@ -54,7 +54,7 @@ impl QlmAgent {
     pub fn decide(
         &self,
         vq: &VirtualQueue,
-        groups: &HashMap<GroupId, RequestGroup>,
+        groups: &BTreeMap<GroupId, RequestGroup>,
         waiting_of_group: impl Fn(GroupId) -> Vec<u64>,
         obs: &InstanceObservation,
         prompt_tokens_of: impl Fn(u64) -> u64,
@@ -197,9 +197,9 @@ mod tests {
         }
     }
 
-    fn setup(vq_groups: &[RequestGroup]) -> (VirtualQueue, HashMap<GroupId, RequestGroup>) {
+    fn setup(vq_groups: &[RequestGroup]) -> (VirtualQueue, BTreeMap<GroupId, RequestGroup>) {
         let mut vq = VirtualQueue::new(InstanceId(0));
-        let mut map = HashMap::new();
+        let mut map = BTreeMap::new();
         for g in vq_groups {
             vq.push_back(g.id);
             map.insert(g.id, g.clone());
@@ -219,7 +219,7 @@ mod tests {
     }
 
     /// The waiting-members closure every test hands to `decide`.
-    fn members_of(map: &HashMap<GroupId, RequestGroup>) -> impl Fn(GroupId) -> Vec<u64> + '_ {
+    fn members_of(map: &BTreeMap<GroupId, RequestGroup>) -> impl Fn(GroupId) -> Vec<u64> + '_ {
         |g| map[&g].members.iter().copied().collect()
     }
 

@@ -10,7 +10,7 @@
 //!
 //! §Perf: broker ids are dense and monotonically increasing, so the
 //! store is a slab (`Vec<Option<Request>>` indexed by id) rather than a
-//! `HashMap`, and the waiting set is an ordered `BTreeSet` rather than a
+//! keyed map, and the waiting set is an ordered `BTreeSet` rather than a
 //! linearly-scanned `Vec`. Every per-request operation on the simulator
 //! hot path (submit, mark_running, requeue, ack) is O(1) or O(log n);
 //! the seed implementation paid an O(n) `Vec::retain` per pull and per

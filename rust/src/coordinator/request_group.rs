@@ -136,7 +136,7 @@ impl Grouper {
         for cluster in clusters.into_iter().filter(|c| !c.is_empty()) {
             // FCFS within the group: order members by arrival.
             let mut members: Vec<&Request> = cluster;
-            members.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+            members.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
             // Split-half until under the size cap (Algorithm 1 lines 3-6).
             let mut stack = vec![members];
             while let Some(chunk) = stack.pop() {
@@ -151,12 +151,7 @@ impl Grouper {
             }
         }
         // Deterministic ordering for downstream reproducibility.
-        out.sort_by(|a, b| {
-            a.deadline()
-                .partial_cmp(&b.deadline())
-                .unwrap()
-                .then(a.id.0.cmp(&b.id.0))
-        });
+        out.sort_by(|a, b| a.deadline().total_cmp(&b.deadline()).then(a.id.0.cmp(&b.id.0)));
         out
     }
 
@@ -248,7 +243,7 @@ mod tests {
                 assert_eq!(reqs[m as usize].model, grp.model);
             }
         }
-        let models: std::collections::HashSet<_> = groups.iter().map(|g| g.model).collect();
+        let models: std::collections::BTreeSet<_> = groups.iter().map(|g| g.model).collect();
         assert_eq!(models.len(), 2);
     }
 
@@ -265,7 +260,7 @@ mod tests {
         let refs: Vec<&Request> = reqs.iter().collect();
         let groups = g.regroup(&refs);
         for grp in &groups {
-            let classes: std::collections::HashSet<_> = grp
+            let classes: std::collections::BTreeSet<_> = grp
                 .members
                 .iter()
                 .map(|&m| reqs[m as usize].class)
@@ -318,7 +313,7 @@ mod tests {
         let refs: Vec<&Request> = reqs.iter().collect();
         let groups = g.regroup(&refs);
         for grp in &groups {
-            let megas: std::collections::HashSet<_> = grp
+            let megas: std::collections::BTreeSet<_> = grp
                 .members
                 .iter()
                 .map(|&m| reqs[m as usize].mega)

@@ -14,7 +14,7 @@
 //! queue grows and W dominates (§6, Fig. 18).
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::backend::{GpuKind, ModelId, PerfModel};
 use crate::coordinator::request_group::{GroupId, RequestGroup};
@@ -43,20 +43,20 @@ impl WorkloadProfile {
 /// Profile table keyed by (model, class, mega).
 #[derive(Debug, Clone, Default)]
 pub struct ProfileTable {
-    map: HashMap<(ModelId, SloClass, bool), WorkloadProfile>,
+    map: BTreeMap<(ModelId, SloClass, bool), WorkloadProfile>,
 }
 
 impl ProfileTable {
     /// Workload profiling: sample moments from a trace (the paper samples
     /// the request history dataset per request group).
     pub fn from_trace(trace: &Trace) -> Self {
-        let mut acc: HashMap<(ModelId, SloClass, bool), (Vec<f64>, Vec<f64>)> = HashMap::new();
+        let mut acc: BTreeMap<(ModelId, SloClass, bool), (Vec<f64>, Vec<f64>)> = BTreeMap::new();
         for r in &trace.requests {
             let e = acc.entry((r.model, r.class, r.mega)).or_default();
             e.0.push(r.input_tokens as f64);
             e.1.push(r.output_tokens as f64);
         }
-        let mut map = HashMap::new();
+        let mut map = BTreeMap::new();
         for (k, (ins, outs)) in acc {
             map.insert(
                 k,
@@ -167,7 +167,7 @@ impl PerfKey {
 /// set instead of growing with every group ever created.
 #[derive(Debug, Clone, Default)]
 struct ServiceMemo {
-    map: HashMap<ServiceKey, (f64, f64, u64)>,
+    map: BTreeMap<ServiceKey, (f64, f64, u64)>,
     epoch: u64,
     hits: u64,
     misses: u64,

@@ -8,7 +8,7 @@
 //! ([`SchedCache::matches_views`]), a cold start, or an exactness
 //! demand invalidates it and the next full solve rebuilds it.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::backend::{InstanceId, ModelId};
 use crate::coordinator::request_group::GroupId;
@@ -94,7 +94,7 @@ impl CachedQueue {
 #[derive(Debug, Clone, Default)]
 pub(crate) struct SchedCache {
     pub(crate) queues: Vec<CachedQueue>,
-    pub(crate) pricing: HashMap<GroupId, GroupPricing>,
+    pub(crate) pricing: BTreeMap<GroupId, GroupPricing>,
     /// (group, member count) pairs currently unservable.
     pub(crate) unservable: Vec<(GroupId, u32)>,
 }

@@ -46,7 +46,7 @@ pub mod plan;
 pub mod pricing;
 pub mod solve;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::backend::{InstanceId, ModelId, PerfModel};
 use crate::coordinator::request_group::{GroupId, RequestGroup};
@@ -58,9 +58,9 @@ pub struct InstanceView {
     pub active_model: Option<ModelId>,
     /// Profiled perf per servable model (absent ⇒ model can't run here,
     /// e.g. Llama-70B on an A10 — hardware heterogeneity, §8.3).
-    pub perf_for: HashMap<ModelId, PerfModel>,
+    pub perf_for: BTreeMap<ModelId, PerfModel>,
     /// Swap-in latency per model from its current tier.
-    pub swap_time: HashMap<ModelId, f64>,
+    pub swap_time: BTreeMap<ModelId, f64>,
     /// Group currently executing — pinned (no preemptive migration, §5).
     pub executing: Option<GroupId>,
 }
@@ -177,7 +177,7 @@ pub struct SchedDelta<'a> {
 /// the same way across `plan`, `cache`, and `solve` suites).
 #[cfg(test)]
 pub(crate) mod testutil {
-    use std::collections::{HashMap, VecDeque};
+    use std::collections::{BTreeMap, VecDeque};
 
     use crate::backend::{GpuKind, InstanceId, ModelCatalog, ModelId, PerfModel};
     use crate::coordinator::request_group::{GroupId, RequestGroup};
@@ -194,8 +194,8 @@ pub(crate) mod testutil {
 
     pub fn view(id: u32, models: &[u32], active: Option<u32>) -> InstanceView {
         let catalog = ModelCatalog::paper_multi_model();
-        let mut perf_for = HashMap::new();
-        let mut swap_time = HashMap::new();
+        let mut perf_for = BTreeMap::new();
+        let mut swap_time = BTreeMap::new();
         for &m in models {
             let p = PerfModel::profile(catalog.get(ModelId(m)), GpuKind::A100, 161.0);
             perf_for.insert(ModelId(m), p);

@@ -10,7 +10,7 @@
 //! groups retire through [`finish_unservable`] instead of being parked
 //! on an arbitrary queue.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::backend::{InstanceId, ModelId};
 use crate::coordinator::request_group::{GroupId, RequestGroup};
@@ -25,7 +25,7 @@ use crate::coordinator::sched::{SolveStats, UNSERVABLE_PENALTY_S};
 /// callers apply `orders` as a patch (clean queues keep their position).
 #[derive(Debug, Clone)]
 pub struct Assignment {
-    pub orders: HashMap<InstanceId, Vec<GroupId>>,
+    pub orders: BTreeMap<InstanceId, Vec<GroupId>>,
     /// True iff every group's estimated completion meets its SLO.
     pub feasible: bool,
     /// Σ max(0, estimated completion − budget) across groups, seconds,
@@ -45,11 +45,10 @@ pub(crate) type AffinityKey = (f64, bool, ModelId, f64, GroupId);
 /// (full solve, over groups) and [`reorder_cached`] (delta path, over
 /// the pricing table).
 pub(crate) fn affinity_cmp(a: &AffinityKey, b: &AffinityKey) -> std::cmp::Ordering {
-    a.0.partial_cmp(&b.0)
-        .unwrap()
+    a.0.total_cmp(&b.0)
         .then(a.1.cmp(&b.1))
         .then(a.2.cmp(&b.2))
-        .then(a.3.partial_cmp(&b.3).unwrap())
+        .then(a.3.total_cmp(&b.3))
         .then(a.4.cmp(&b.4))
 }
 
@@ -58,7 +57,7 @@ pub(crate) fn affinity_cmp(a: &AffinityKey, b: &AffinityKey) -> std::cmp::Orderi
 /// the Fig. 5 "Oracle" structure that avoids swap thrashing.
 pub fn affinity_order(groups: &mut [&RequestGroup], active: Option<ModelId>) {
     // Cluster key: model; cluster deadline: min member deadline.
-    let mut cluster_deadline: HashMap<ModelId, f64> = HashMap::new();
+    let mut cluster_deadline: BTreeMap<ModelId, f64> = BTreeMap::new();
     for g in groups.iter() {
         let e = cluster_deadline.entry(g.model).or_insert(f64::INFINITY);
         *e = e.min(g.deadline());
@@ -82,12 +81,12 @@ pub fn affinity_order(groups: &mut [&RequestGroup], active: Option<ModelId>) {
 /// Affinity-EDF over cached pricing — driven by the pricing table so
 /// the delta path never touches the group table. The pinned executing
 /// head, if present, is left in place.
-pub(crate) fn reorder_cached(cq: &mut CachedQueue, pricing: &HashMap<GroupId, GroupPricing>) {
+pub(crate) fn reorder_cached(cq: &mut CachedQueue, pricing: &BTreeMap<GroupId, GroupPricing>) {
     let start =
         usize::from(cq.executing.is_some() && cq.order.first() == cq.executing.as_ref());
     let active = cq.active_model;
     let rest = &mut cq.order[start..];
-    let mut cluster_deadline: HashMap<ModelId, f64> = HashMap::new();
+    let mut cluster_deadline: BTreeMap<ModelId, f64> = BTreeMap::new();
     for gid in rest.iter() {
         if let Some(p) = pricing.get(gid) {
             let e = cluster_deadline.entry(p.model).or_insert(f64::INFINITY);

@@ -10,7 +10,7 @@
 //! violation-slope data ([`crate::coordinator::sched::cache`] re-anchors
 //! from it in constant time).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::backend::{InstanceId, ModelId, PerfModel};
 use crate::coordinator::request_group::{GroupId, RequestGroup};
@@ -108,7 +108,7 @@ pub(crate) fn append_score(
 ///   next touched.
 pub(crate) fn reprice_queue(
     cq: &mut CachedQueue,
-    pricing: &HashMap<GroupId, GroupPricing>,
+    pricing: &BTreeMap<GroupId, GroupPricing>,
     v: &InstanceView,
     now: f64,
 ) {
@@ -144,7 +144,7 @@ pub(crate) fn reprice_queue(
     // Walk order is queue order; the re-anchor drains crossings in
     // *time* order, so sort ascending (ties are equivalent: each
     // crossing contributes `now - t_c` independent of drain order).
-    cq.crossings.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    cq.crossings.sort_by(|a, b| a.total_cmp(b));
     cq.tail = tail;
     cq.penalty = penalty;
     cq.priced_at = now;

@@ -7,7 +7,7 @@
 //! in [`super::pricing`], *how* a queue is ordered in [`super::plan`],
 //! and *what* survives between passes in [`super::cache`].
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::backend::InstanceId;
 use crate::coordinator::request_group::{GroupId, RequestGroup};
@@ -58,9 +58,9 @@ impl GlobalScheduler {
     ) -> Assignment {
         // One scheduler invocation = one memo epoch for service pricing.
         self.estimator.begin_epoch();
-        let by_id: HashMap<GroupId, &RequestGroup> =
+        let by_id: BTreeMap<GroupId, &RequestGroup> =
             groups.iter().map(|g| (g.id, *g)).collect();
-        let mut orders: HashMap<InstanceId, Vec<GroupId>> = HashMap::new();
+        let mut orders: BTreeMap<InstanceId, Vec<GroupId>> = BTreeMap::new();
         let mut unservable: Vec<(GroupId, u32)> = Vec::new();
         let mut stats = SolveStats {
             groups: groups.len(),
@@ -68,7 +68,7 @@ impl GlobalScheduler {
         };
 
         // 1. Pin executing groups to their instances' heads.
-        let mut pinned: HashMap<GroupId, InstanceId> = HashMap::new();
+        let mut pinned: BTreeMap<GroupId, InstanceId> = BTreeMap::new();
         for v in instances {
             let order = orders.entry(v.id).or_default();
             if let Some(g) = v.executing {
@@ -85,18 +85,13 @@ impl GlobalScheduler {
             .copied()
             .filter(|g| !pinned.contains_key(&g.id))
             .collect();
-        todo.sort_by(|a, b| {
-            a.deadline()
-                .partial_cmp(&b.deadline())
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
+        todo.sort_by(|a, b| a.deadline().total_cmp(&b.deadline()).then(a.id.cmp(&b.id)));
 
         // §Perf: incremental O(G·V) assignment — each candidate append is
         // priced from cached per-queue state (accumulated wait, tail
         // model) instead of re-walking the whole queue (which made the
         // assignment quadratic in groups; see EXPERIMENTS.md §Perf).
-        let mut qstate: HashMap<InstanceId, QTail> = instances
+        let mut qstate: BTreeMap<InstanceId, QTail> = instances
             .iter()
             .map(|v| {
                 let mut st = QTail {
@@ -139,7 +134,9 @@ impl GlobalScheduler {
             }
             match best {
                 Some((id, _, completion, _)) => {
-                    orders.get_mut(&id).unwrap().push(g.id);
+                    orders.entry(id).or_default().push(g.id);
+                    // audit:allow(hot-path-panic): `id` comes from the instance loop
+                    // above, and `qstate` was seeded with every instance.
                     let st = qstate.get_mut(&id).unwrap();
                     st.wait = completion;
                     st.tail_model = Some(g.model);
@@ -158,7 +155,7 @@ impl GlobalScheduler {
 
         // 3. Per-queue ordering: affinity-EDF, optionally MILP-refined.
         for v in instances {
-            let ids = orders.get_mut(&v.id).unwrap();
+            let ids = orders.entry(v.id).or_default();
             let all: Vec<&RequestGroup> =
                 ids.iter().filter_map(|id| by_id.get(id).copied()).collect();
             let (head, mut rest) = split_pinned(&all, v.executing);
@@ -245,13 +242,13 @@ impl GlobalScheduler {
     /// passes will maintain.
     fn store_cache(
         &self,
-        orders: &HashMap<InstanceId, Vec<GroupId>>,
-        by_id: &HashMap<GroupId, &RequestGroup>,
+        orders: &BTreeMap<InstanceId, Vec<GroupId>>,
+        by_id: &BTreeMap<GroupId, &RequestGroup>,
         instances: &[InstanceView],
         now: f64,
         unservable: Vec<(GroupId, u32)>,
     ) -> f64 {
-        let mut group_pricing = HashMap::with_capacity(by_id.len());
+        let mut group_pricing = BTreeMap::new();
         let mut queues = Vec::with_capacity(instances.len());
         for v in instances {
             let order = orders.get(&v.id).cloned().unwrap_or_default();
@@ -272,7 +269,7 @@ impl GlobalScheduler {
         // stay in instance order and the penalty is summed sequentially
         // afterwards, so the result is bit-identical to the serial pass
         // whatever the lane count.
-        let view_of: HashMap<InstanceId, &InstanceView> =
+        let view_of: BTreeMap<InstanceId, &InstanceView> =
             instances.iter().map(|v| (v.id, v)).collect();
         let pricing_ref = &group_pricing;
         self.pool.run_chunks_mut(&mut queues, |cq| {
@@ -335,14 +332,14 @@ impl GlobalScheduler {
         } = cache;
 
         // Executing groups stay pinned at their heads even when dirty.
-        let pinned: HashMap<GroupId, usize> = instances
+        let pinned: BTreeMap<GroupId, usize> = instances
             .iter()
             .enumerate()
             .filter_map(|(k, v)| v.executing.map(|g| (g, k)))
             .collect();
 
         // Everything leaving its current queue position.
-        let mut gone: HashSet<GroupId> = delta.removed.iter().copied().collect();
+        let mut gone: BTreeSet<GroupId> = delta.removed.iter().copied().collect();
         for g in &delta.dirty {
             if !pinned.contains_key(&g.id) {
                 gone.insert(g.id);
@@ -351,7 +348,7 @@ impl GlobalScheduler {
         unservable.retain(|(g, _)| !gone.contains(g));
 
         let mut touched = vec![false; instances.len()];
-        let idx_of: HashMap<InstanceId, usize> = instances
+        let idx_of: BTreeMap<InstanceId, usize> = instances
             .iter()
             .enumerate()
             .map(|(k, v)| (v.id, k))
@@ -429,12 +426,7 @@ impl GlobalScheduler {
             .copied()
             .filter(|g| !pinned.contains_key(&g.id))
             .collect();
-        todo.sort_by(|a, b| {
-            a.deadline()
-                .partial_cmp(&b.deadline())
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
+        todo.sort_by(|a, b| a.deadline().total_cmp(&b.deadline()).then(a.id.cmp(&b.id)));
         for g in todo {
             let mut best: Option<(usize, f64, f64, f64)> = None;
             for (k, v) in instances.iter().enumerate() {
@@ -485,7 +477,7 @@ impl GlobalScheduler {
         }
 
         // 5. Assemble the patch: orders only for queues that changed.
-        let mut orders = HashMap::new();
+        let mut orders = BTreeMap::new();
         for (k, cq) in queues.iter().enumerate() {
             if touched[k] {
                 orders.insert(cq.id, cq.order.clone());
@@ -847,7 +839,7 @@ mod tests {
     fn schedule_invariant_to_group_slice_order() {
         // Property: the plan is a function of the group *set*, not the
         // iteration order of the slice handed in (which comes from a
-        // HashMap in the engine).
+        // BTreeMap in the engine).
         let sched = GlobalScheduler::new(
             SchedulerConfig {
                 solver: SolverKind::Greedy,

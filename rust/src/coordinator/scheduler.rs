@@ -30,7 +30,7 @@
 //! full solve, which refreshes the cache.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::backend::{InstanceId, ModelId};
@@ -80,7 +80,7 @@ impl GlobalScheduler {
 
     /// The cached per-instance orders from the last pass (full or
     /// delta), if any — observability for tests and the bench harness.
-    pub fn cached_orders(&self) -> Option<HashMap<InstanceId, Vec<GroupId>>> {
+    pub fn cached_orders(&self) -> Option<BTreeMap<InstanceId, Vec<GroupId>>> {
         self.cache
             .borrow()
             .as_ref()

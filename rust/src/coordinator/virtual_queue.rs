@@ -101,7 +101,7 @@ impl VirtualQueue {
 mod tests {
     use super::*;
     use crate::workload::{SloClass, SloTarget};
-    use std::collections::HashMap;
+    use std::collections::BTreeMap;
 
     fn grp(id: u64, model: u32) -> RequestGroup {
         RequestGroup {
@@ -115,7 +115,7 @@ mod tests {
         }
     }
 
-    fn table(groups: &[RequestGroup]) -> HashMap<GroupId, RequestGroup> {
+    fn table(groups: &[RequestGroup]) -> BTreeMap<GroupId, RequestGroup> {
         groups.iter().map(|g| (g.id, g.clone())).collect()
     }
 

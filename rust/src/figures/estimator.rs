@@ -1,7 +1,7 @@
 //! Figures 18–20 (§8.3): RWT estimator accuracy, request-group size (δ)
 //! trade-off, and global-scheduler overhead.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -107,8 +107,8 @@ pub fn fig20(scale: Scale) -> Figure {
     // A 10-instance view set.
     let views: Vec<InstanceView> = (0..10)
         .map(|i| {
-            let mut perf_for = HashMap::new();
-            let mut swap_time = HashMap::new();
+            let mut perf_for = BTreeMap::new();
+            let mut swap_time = BTreeMap::new();
             for m in catalog.ids() {
                 if let Some(p) = PerfModel::try_profile(catalog.get(m), GpuKind::A100, 161.0) {
                     swap_time.insert(m, p.swap_cpu_gpu_s);

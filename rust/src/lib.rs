@@ -20,7 +20,13 @@
 // signatures are long on purpose (the agent is decoupled from storage),
 // and the hand-rolled subsystems keep explicit argument lists.
 #![allow(clippy::too_many_arguments, clippy::type_complexity)]
+// Unsafe operations stay explicit even inside `unsafe fn` bodies; the
+// only unsafe code in the crate lives in util/pool.rs, and `qlm audit`
+// (src/audit) enforces both that confinement and per-site SAFETY
+// comments.
+#![deny(unsafe_op_in_unsafe_fn)]
 
+pub mod audit;
 pub mod util;
 pub mod workload;
 pub mod backend;

@@ -19,6 +19,9 @@
 //! qlm simulate [--policy P] [--rate R] [--requests N] [--fleet N]
 //!              [--multi-model] [--seed S]
 //! qlm serve [--artifacts DIR] [--requests N] [--fcfs]   (feature "pjrt")
+//! qlm audit [--root DIR] [--list] [--explain RULE]   static-analysis pass
+//!           over src/+tests/ (determinism / concurrency / architecture
+//!           invariants; nonzero exit on any unwaived violation)
 //! qlm bench-scheduler [--requests N]     Fig. 20-style overhead probe
 //! ```
 //!
@@ -114,6 +117,9 @@ USAGE:
                [--fleet N] [--multi-model] [--seed S] [--chunk-tokens N]
                [--slice-tokens N]
   qlm serve [--artifacts DIR] [--requests N] [--fcfs] [--max-new N]
+  qlm audit [--root DIR] [--list] [--explain RULE]   enforce the
+            determinism/concurrency/architecture invariants (exit 1 on
+            any unwaived violation; --list shows per-rule counts)
   qlm bench-scheduler"
     );
     ExitCode::from(2)
@@ -661,6 +667,86 @@ fn cmd_serve(_args: &Args) -> ExitCode {
     ExitCode::FAILURE
 }
 
+/// `qlm audit [--root DIR] [--list] [--explain RULE]` — run the in-repo
+/// static-analysis pass (src/audit) over the crate and fail on any
+/// unwaived invariant violation. Output is machine-readable: one
+/// tab-separated `rule\tfile:line\tnote\tsnippet` row per violation.
+fn cmd_audit(args: &Args) -> ExitCode {
+    if let Some(rule_id) = args.get("explain") {
+        return match qlm::audit::Rule::from_id(rule_id) {
+            Some(rule) => {
+                let info = rule.info();
+                println!("{} [{}]", info.id, info.group);
+                println!("  {}", info.summary);
+                println!();
+                for line in info.explain.split('\n') {
+                    println!("  {}", line.trim());
+                }
+                ExitCode::SUCCESS
+            }
+            None => {
+                eprintln!("unknown rule `{rule_id}`; `qlm audit --list` prints the rule table");
+                ExitCode::from(2)
+            }
+        };
+    }
+    // The audited root defaults to this crate's own source tree, baked
+    // in at compile time (CI and the dev loop both build in-tree).
+    let default_root = env!("CARGO_MANIFEST_DIR");
+    let root = std::path::PathBuf::from(args.get("root").unwrap_or(default_root));
+    let report = match qlm::audit::run_report(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("audit failed to read {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if report.files_scanned == 0 {
+        eprintln!("audit scanned 0 files under {} — wrong --root?", root.display());
+        return ExitCode::from(2);
+    }
+    if args.has("list") {
+        println!("{:<20} {:<12} {:>10} {:>8}  summary", "rule", "group", "violations", "waivers");
+        for info in &qlm::audit::RULES {
+            let violations = report.violations.iter().filter(|v| v.rule == info.rule).count();
+            let waivers = report.waivers.iter().filter(|w| w.rule == info.rule).count();
+            println!(
+                "{:<20} {:<12} {:>10} {:>8}  {}",
+                info.id, info.group, violations, waivers, info.summary
+            );
+        }
+        println!(
+            "{} files scanned, {} violations, {} waivers",
+            report.files_scanned,
+            report.violations.len(),
+            report.waivers.len()
+        );
+        return if report.violations.is_empty() {
+            ExitCode::SUCCESS
+        } else {
+            ExitCode::FAILURE
+        };
+    }
+    for v in &report.violations {
+        println!("{v}");
+    }
+    if report.violations.is_empty() {
+        println!(
+            "audit clean: {} files, 0 violations ({} waivers in force)",
+            report.files_scanned,
+            report.waivers.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "audit: {} violation(s); `qlm audit --explain <rule>` documents each rule, \
+             `// audit:allow(<rule>): <reason>` waives a judged site",
+            report.violations.len()
+        );
+        ExitCode::FAILURE
+    }
+}
+
 fn cmd_bench_scheduler(args: &Args) -> ExitCode {
     let _ = args;
     match run_figure(20, Scale::Quick) {
@@ -680,6 +766,7 @@ fn main() -> ExitCode {
         Some("figures") => cmd_figures(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("audit") => cmd_audit(&args),
         Some("bench-scheduler") => cmd_bench_scheduler(&args),
         _ => usage(),
     }

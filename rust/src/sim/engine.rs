@@ -31,8 +31,10 @@
 //! what lets `--scenario scale` push 100K+ queued requests through the
 //! paper's Fig. 20 regime.
 
-use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::Arc;
+// audit:allow(wall-clock): wall time feeds only the diagnostic pass-duration
+// histogram, never simulated time or any scheduling decision.
 use std::time::Instant as WallInstant;
 
 use crate::backend::{
@@ -151,7 +153,7 @@ impl SimConfig {
 
 /// Waiting (or evicted) members of a group, FCFS.
 fn waiting_members(
-    groups: &HashMap<GroupId, RequestGroup>,
+    groups: &BTreeMap<GroupId, RequestGroup>,
     queue: &GlobalQueue,
     gid: GroupId,
 ) -> Vec<u64> {
@@ -183,15 +185,15 @@ pub struct Simulation {
     vqs: Vec<VirtualQueue>,
     agents: Vec<QlmAgent>,
     queue: GlobalQueue,
-    groups: HashMap<GroupId, RequestGroup>,
-    group_of: HashMap<u64, GroupId>,
+    groups: BTreeMap<GroupId, RequestGroup>,
+    group_of: BTreeMap<u64, GroupId>,
     grouper: Grouper,
     /// Workload moments (§6 Offline Profiling) — conservative for
     /// SHEPHERD. Shared by observation sizing and pressure pricing; the
     /// policy's estimator holds its own copy.
     profiles: ProfileTable,
     /// Static model pinning for no-swap policies (vLLM baseline).
-    pinned_model: HashMap<InstanceId, ModelId>,
+    pinned_model: BTreeMap<InstanceId, ModelId>,
     needs_schedule: bool,
     last_schedule: f64,
     scheduler_wall_s: f64,
@@ -218,7 +220,7 @@ pub struct Simulation {
     /// (model, class, mega). Makes `classify_in_place` O(1) per arrival
     /// instead of a scan of the live group table; `BTreeSet` keeps the
     /// lowest-id-wins rule of the scan it replaces.
-    open_groups: HashMap<(ModelId, SloClass, bool), BTreeSet<GroupId>>,
+    open_groups: BTreeMap<(ModelId, SloClass, bool), BTreeSet<GroupId>>,
 }
 
 impl Simulation {
@@ -294,8 +296,8 @@ impl Simulation {
             vqs,
             agents,
             queue: GlobalQueue::new(),
-            groups: HashMap::new(),
-            group_of: HashMap::new(),
+            groups: BTreeMap::new(),
+            group_of: BTreeMap::new(),
             grouper,
             profiles,
             pinned_model,
@@ -309,7 +311,7 @@ impl Simulation {
             thetas: ThetaCache::new(),
             views_cache: Vec::new(),
             pool,
-            open_groups: HashMap::new(),
+            open_groups: BTreeMap::new(),
             cfg,
         };
         sim.build_views();
@@ -467,6 +469,7 @@ impl Simulation {
             self.fleet.admission.note_shed_submit();
             return;
         }
+        // audit:allow(hot-path-panic): `id` was returned by `submit` just above.
         let req = self.queue.get(id).unwrap().clone();
         self.note_waiting(id, 1);
         // Group formation (§4).
@@ -513,6 +516,8 @@ impl Simulation {
         let key = (req.model, req.class, req.mega);
         if let Some(set) = self.open_groups.get_mut(&key) {
             if let Some(&gid) = set.iter().next() {
+                // audit:allow(hot-path-panic): open-group index entries are removed
+                // before their group leaves the table.
                 let g = self.groups.get_mut(&gid).expect("open-group index is live");
                 debug_assert!(g.len() < cap, "index must only hold open groups");
                 g.members.push_back(req.id);
@@ -526,6 +531,7 @@ impl Simulation {
         }
         let mut list = Vec::new();
         let gid = self.grouper.classify(req, &mut list);
+        // audit:allow(hot-path-panic): `classify` pushed exactly one group above.
         let g = list.pop().unwrap();
         let open = g.len() < cap;
         self.groups.insert(gid, g);
@@ -932,6 +938,8 @@ impl Simulation {
             }
             self.fleet.admission.note_shed_unservable(shed);
             let empty = {
+                // audit:allow(hot-path-panic): gid was collected from the live group
+                // table in this same pass with no intervening removal.
                 let g = self.groups.get_mut(&gid).unwrap();
                 let group_of = &self.group_of;
                 g.members.retain(|rid| group_of.contains_key(rid));
@@ -1044,6 +1052,8 @@ impl Simulation {
                 }
             }
         }
+        // audit:allow(wall-clock): measures real scheduler-pass latency for the
+        // diagnostics report; sim time comes solely from the event clock.
         let wall = WallInstant::now();
 
         // One policy pass through the trait seam: the policy sees the
@@ -1247,7 +1257,7 @@ mod tests {
         use crate::coordinator::lso::LsoConfig;
         use crate::workload::SloClass;
         // EDF / FCFS / round-robin plans must be functions of the group
-        // *set*, not of HashMap iteration order — exercised straight
+        // *set*, not of store insertion order — exercised straight
         // through the policy seam.
         let trace = small_trace(5.0, 20);
         for which in 0..3 {

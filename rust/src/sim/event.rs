@@ -47,10 +47,7 @@ impl PartialOrd for Event {
 }
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.t
-            .partial_cmp(&other.t)
-            .unwrap()
-            .then(self.seq.cmp(&other.seq))
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
     }
 }
 

@@ -8,7 +8,7 @@
 //! decisions and applies the event-loop side effects (virtual queues,
 //! agents, wake events); the controller never touches scheduling state.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 
 use crate::backend::{
     GpuKind, Instance, InstanceConfig, InstanceId, ModelCatalog, ModelId, PerfModel, RunningSeq,
@@ -28,12 +28,12 @@ pub(crate) fn static_pinning(
     catalog: &ModelCatalog,
     policy: &Policy,
     trace: &Trace,
-) -> HashMap<InstanceId, ModelId> {
-    let mut pinned = HashMap::new();
+) -> BTreeMap<InstanceId, ModelId> {
+    let mut pinned = BTreeMap::new();
     if policy.lso().model_swapping {
         return pinned;
     }
-    let mut counts: HashMap<ModelId, usize> = HashMap::new();
+    let mut counts: BTreeMap<ModelId, usize> = BTreeMap::new();
     for r in &trace.requests {
         *counts.entry(r.model).or_default() += 1;
     }

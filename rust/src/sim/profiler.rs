@@ -9,7 +9,7 @@
 //! attached to [`PerfModel::measured_theta`] so the RWT estimator and the
 //! backend share one ground truth — as they do in the real system.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::backend::{
     GpuKind, Instance, InstanceConfig, ModelCatalog, ModelId, PerfModel, RunningSeq,
@@ -41,7 +41,7 @@ pub(crate) fn conservative_profiles(profiles: &ProfileTable, trace: &Trace) -> P
 /// Cache of profiled Θ per (gpu, model).
 #[derive(Debug, Default, Clone)]
 pub struct ThetaCache {
-    map: HashMap<(GpuKind, ModelId), f64>,
+    map: BTreeMap<(GpuKind, ModelId), f64>,
 }
 
 impl ThetaCache {

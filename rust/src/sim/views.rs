@@ -11,7 +11,7 @@
 //! bench -- par_views` measures it against the scoped-spawn baseline;
 //! the golden suite asserts it end to end).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::backend::{Instance, ModelCatalog, ModelId};
 use crate::coordinator::request_group::GroupId;
@@ -26,14 +26,14 @@ pub(crate) fn build_view(
     idx: usize,
     instances: &[Instance],
     catalog: &ModelCatalog,
-    pinned_model: &HashMap<crate::backend::InstanceId, ModelId>,
+    pinned_model: &BTreeMap<crate::backend::InstanceId, ModelId>,
     thetas: &mut ThetaCache,
 ) -> InstanceView {
     let inst = &instances[idx];
     let id = inst.config.id;
     let gpu = inst.config.gpu;
-    let mut perf_for = HashMap::new();
-    let mut swap_time = HashMap::new();
+    let mut perf_for = BTreeMap::new();
+    let mut swap_time = BTreeMap::new();
     for m in catalog.ids() {
         // Pinned instances only serve their pinned model.
         if let Some(&pm) = pinned_model.get(&id) {
@@ -57,7 +57,7 @@ pub(crate) fn build_view(
 }
 
 /// Refresh one view in place from its live instance.
-fn refresh_one(v: &mut InstanceView, instances: &[Instance], group_of: &HashMap<u64, GroupId>) {
+fn refresh_one(v: &mut InstanceView, instances: &[Instance], group_of: &BTreeMap<u64, GroupId>) {
     let inst = &instances[v.id.0 as usize];
     v.active_model = inst.active_model();
     v.executing = inst
@@ -80,7 +80,7 @@ fn refresh_one(v: &mut InstanceView, instances: &[Instance], group_of: &HashMap<
 pub(crate) fn refresh_all(
     views: &mut [InstanceView],
     instances: &[Instance],
-    group_of: &HashMap<u64, GroupId>,
+    group_of: &BTreeMap<u64, GroupId>,
     pool: &WorkerPool,
 ) {
     pool.run_chunks_mut(views, |v| refresh_one(v, instances, group_of));
@@ -92,7 +92,7 @@ pub(crate) fn refresh_all(
 pub(crate) fn refresh_all_scoped(
     views: &mut [InstanceView],
     instances: &[Instance],
-    group_of: &HashMap<u64, GroupId>,
+    group_of: &BTreeMap<u64, GroupId>,
     threads: usize,
 ) {
     crate::util::par_chunks_mut(views, threads, |v| refresh_one(v, instances, group_of));

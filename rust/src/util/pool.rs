@@ -35,6 +35,10 @@ use std::thread::JoinHandle;
 /// slices of the caller's buffer.
 struct Job {
     ctx: *const (),
+    // SAFETY: callers of this fn pointer must pass the `ctx` stored
+    // alongside it and a chunk index claimed under the pool lock; it is
+    // only ever set to `call_chunk::<T, F>` paired with a `ctx` that
+    // points at a live `ChunkJob<T, F>` (see `run_chunks_mut`).
     call: unsafe fn(*const (), usize),
     /// Next chunk index to claim (caller and workers race under the lock).
     next: usize,
@@ -49,7 +53,7 @@ struct Job {
     payload: Option<Box<dyn std::any::Any + Send>>,
 }
 
-// Safety: see `Job` — the raw pointer is only dereferenced while the
+// SAFETY: see `Job` — the raw pointer is only dereferenced while the
 // submitting call blocks, and every dereference targets a disjoint chunk.
 unsafe impl Send for Job {}
 
@@ -76,13 +80,18 @@ struct ChunkJob<'f, T, F> {
     f: &'f F,
 }
 
-/// Run chunk `idx` of the job behind `ctx`. Safety: `ctx` must point at
+/// Run chunk `idx` of the job behind `ctx`. SAFETY: `ctx` must point at
 /// a live `ChunkJob<T, F>` and `idx` must be claimed by exactly one lane
 /// (the claim counter under the pool lock guarantees both).
 unsafe fn call_chunk<T: Send, F: Fn(&mut T) + Sync>(ctx: *const (), idx: usize) {
+    // SAFETY: the fn-level contract — `ctx` points at a live
+    // `ChunkJob<T, F>` kept alive by the blocked submitter.
     let job = unsafe { &*(ctx as *const ChunkJob<'_, T, F>) };
     let start = idx * job.chunk;
     let end = (start + job.chunk).min(job.len);
+    // SAFETY: `idx` was claimed by exactly one lane, chunks are
+    // disjoint index ranges of the caller's buffer, and `end` is
+    // clamped to `len`, so this `&mut` slice aliases nothing.
     let slice = unsafe { std::slice::from_raw_parts_mut(job.base.add(start), end - start) };
     for t in slice {
         (job.f)(t);
@@ -210,6 +219,9 @@ impl WorkerPool {
             match claimed {
                 Some(i) => {
                     drop(guard);
+                    // SAFETY: `ctx` points at `job` on this very stack
+                    // frame (alive until this call returns) and chunk
+                    // `i` was claimed under the lock by this lane only.
                     let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
                         call_chunk::<T, F>(ctx, i)
                     }));
@@ -261,7 +273,7 @@ fn worker_loop(shared: &Shared) {
         match claimed {
             Some((ctx, call, i)) => {
                 drop(guard);
-                // Safety: the chunk index was claimed under the lock, so
+                // SAFETY: the chunk index was claimed under the lock, so
                 // this lane is its only visitor; the submitter blocks
                 // until `remaining == 0`, keeping `ctx` alive. The catch
                 // keeps a panicking closure from killing the worker (or

@@ -519,10 +519,10 @@ mod tests {
         assert!(cfg.autoscale.is_some(), "autoscaler must reach the config");
         assert_eq!(cfg.fleet.len(), run.fleet.len());
         // Mixed SLO classes over multiple models.
-        let classes: std::collections::HashSet<_> =
+        let classes: std::collections::BTreeSet<_> =
             run.spec.streams.iter().map(|s| s.class).collect();
         assert_eq!(classes.len(), 3);
-        let models: std::collections::HashSet<_> = run
+        let models: std::collections::BTreeSet<_> = run
             .spec
             .streams
             .iter()
@@ -568,10 +568,10 @@ mod tests {
     #[test]
     fn scale_scenario_is_mixed_slo_and_multi_model() {
         let run = Scenario::Scale.build(&ScenarioKnobs::default());
-        let classes: std::collections::HashSet<_> =
+        let classes: std::collections::BTreeSet<_> =
             run.spec.streams.iter().map(|s| s.class).collect();
         assert!(classes.len() >= 3, "mixed SLO classes required");
-        let models: std::collections::HashSet<_> = run
+        let models: std::collections::BTreeSet<_> = run
             .spec
             .streams
             .iter()

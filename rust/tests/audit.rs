@@ -1,0 +1,117 @@
+//! Integration surface of `qlm audit` (tier-2).
+//!
+//! Two halves: the shipped tree must be clean (the same check CI runs
+//! via the CLI), and every fixture under `tests/audit_fixtures/` must
+//! fire exactly the rule it demonstrates — bad variants fire only their
+//! own rule, waived variants fire nothing. The fixtures are scanned
+//! with *pretend* paths so path-scoped rules apply; `qlm audit` itself
+//! never walks the fixture directory.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use qlm::audit::{self, Rule, RULES};
+
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/audit_fixtures")
+        .join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+/// (fixture file, pretend path, rule the bad variant fires — `None`
+/// means the snippet must be clean).
+const FIXTURES: &[(&str, &str, Option<Rule>)] = &[
+    ("hash_collections_bad.rs", "src/sim/fixture.rs", Some(Rule::HashCollections)),
+    ("hash_collections_waived.rs", "src/sim/fixture.rs", None),
+    ("wall_clock_bad.rs", "src/sim/fixture.rs", Some(Rule::WallClock)),
+    ("wall_clock_waived.rs", "src/sim/fixture.rs", None),
+    ("thread_confinement_bad.rs", "src/sim/fixture.rs", Some(Rule::ThreadConfinement)),
+    ("thread_confinement_waived.rs", "src/sim/fixture.rs", None),
+    // Carries a SAFETY: comment so only the confinement rule fires.
+    ("unsafe_confinement_bad.rs", "src/sim/fixture.rs", Some(Rule::UnsafeConfinement)),
+    ("unsafe_confinement_waived.rs", "src/sim/fixture.rs", None),
+    // Scanned as util/pool.rs, where unsafe is allowed but must be documented.
+    ("safety_comment_bad.rs", "src/util/pool.rs", Some(Rule::SafetyComment)),
+    ("safety_comment_waived.rs", "src/util/pool.rs", None),
+    ("hot_path_panic_bad.rs", "src/coordinator/fixture.rs", Some(Rule::HotPathPanic)),
+    ("hot_path_panic_waived.rs", "src/coordinator/fixture.rs", None),
+    ("hot_path_panic_test_exempt.rs", "src/coordinator/fixture.rs", None),
+    ("pricing_seam_bad.rs", "src/sim/fixture.rs", Some(Rule::PricingSeam)),
+    ("pricing_seam_waived.rs", "src/sim/fixture.rs", None),
+    ("waiver_hygiene_bad.rs", "src/sim/fixture.rs", Some(Rule::WaiverHygiene)),
+    // The hygiene rule is unwaivable; its clean counterpart is simply a
+    // well-formed waiver.
+    ("waiver_hygiene_waived.rs", "src/coordinator/fixture.rs", None),
+];
+
+#[test]
+fn shipped_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = audit::run_report(root).expect("walk src/ + tests/");
+    assert!(report.files_scanned > 0, "audit walked no files");
+    let rendered: Vec<String> = report.violations.iter().map(|v| v.to_string()).collect();
+    assert!(
+        report.violations.is_empty(),
+        "shipped tree has audit violations:\n{}",
+        rendered.join("\n")
+    );
+}
+
+#[test]
+fn fixtures_fire_exactly_their_rule() {
+    for &(file, pretend, expected) in FIXTURES {
+        let src = fixture(file);
+        let fired: BTreeSet<Rule> =
+            audit::scan_source(pretend, &src).into_iter().map(|v| v.rule).collect();
+        match expected {
+            Some(rule) => assert_eq!(
+                fired,
+                BTreeSet::from([rule]),
+                "{file} (as {pretend}) must fire exactly `{}`",
+                rule.id()
+            ),
+            None => assert!(
+                fired.is_empty(),
+                "{file} (as {pretend}) must be clean, fired: {fired:?}"
+            ),
+        }
+    }
+}
+
+#[test]
+fn every_rule_has_a_bad_fixture() {
+    let covered: BTreeSet<Rule> = FIXTURES.iter().filter_map(|&(_, _, r)| r).collect();
+    for info in &RULES {
+        assert!(covered.contains(&info.rule), "no bad fixture for `{}`", info.id);
+    }
+}
+
+#[test]
+fn waived_fixtures_record_their_waivers() {
+    for &(file, pretend, expected) in FIXTURES {
+        if expected.is_some() || file == "hot_path_panic_test_exempt.rs" {
+            continue;
+        }
+        let (_, waivers) = audit::scan_source_report(pretend, &fixture(file));
+        assert!(!waivers.is_empty(), "{file} should carry at least one waiver");
+    }
+}
+
+#[test]
+fn reasonless_waiver_is_itself_a_violation() {
+    let src = "pub fn f() {} // audit:allow(wall-clock)\n";
+    let fired: Vec<Rule> =
+        audit::scan_source("src/metrics/x.rs", src).into_iter().map(|v| v.rule).collect();
+    assert_eq!(fired, vec![Rule::WaiverHygiene]);
+}
+
+#[test]
+fn malformed_waiver_suppresses_nothing() {
+    // A reasonless waiver over a real violation reports both: the
+    // hygiene failure and the violation it failed to cover.
+    let src = "// audit:allow(hash-collections)\nuse std::collections::HashMap;\n";
+    let fired: BTreeSet<Rule> =
+        audit::scan_source("src/sim/x.rs", src).into_iter().map(|v| v.rule).collect();
+    assert_eq!(fired, BTreeSet::from([Rule::WaiverHygiene, Rule::HashCollections]));
+}

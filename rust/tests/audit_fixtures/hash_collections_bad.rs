@@ -1,0 +1,7 @@
+pub fn histogram(xs: &[u32]) -> std::collections::HashMap<u32, u32> {
+    let mut h = std::collections::HashMap::new();
+    for &x in xs {
+        *h.entry(x).or_insert(0) += 1;
+    }
+    h
+}

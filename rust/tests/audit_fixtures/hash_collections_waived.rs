@@ -1,0 +1,6 @@
+// audit:allow(hash-collections): lookup-only map; iteration order never observed
+use std::collections::HashMap;
+
+pub fn touch(h: &mut std::collections::BTreeMap<u32, u32>) {
+    h.insert(1, 2);
+}

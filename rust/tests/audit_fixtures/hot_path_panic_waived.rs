@@ -1,0 +1,4 @@
+pub fn head(xs: &[u32]) -> u32 {
+    // audit:allow(hot-path-panic): fixture; callers guarantee a non-empty slice
+    xs.first().copied().unwrap()
+}

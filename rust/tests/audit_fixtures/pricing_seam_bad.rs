@@ -1,0 +1,4 @@
+pub fn shortcut(pen: f64) -> f64 {
+    let score = append_score(pen);
+    score
+}

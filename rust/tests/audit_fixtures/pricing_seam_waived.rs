@@ -1,0 +1,5 @@
+pub fn shortcut(pen: f64) -> f64 {
+    // audit:allow(pricing-seam): fixture; real scoring goes through sched::pricing
+    let score = append_score(pen);
+    score
+}

@@ -1,0 +1,4 @@
+pub fn read_first(xs: &[u32]) -> u32 {
+    // audit:allow(safety-comment): fixture demonstrating a waived missing comment
+    unsafe { *xs.as_ptr() }
+}

@@ -1,0 +1,4 @@
+pub fn fan_out() {
+    // audit:allow(thread-confinement): fixture; real code routes through util::pool
+    std::thread::spawn(|| {});
+}

@@ -1,0 +1,4 @@
+pub fn read_first(xs: &[u32]) -> u32 {
+    // SAFETY: fixture; the slice is non-empty by contract.
+    unsafe { *xs.as_ptr() }
+}

@@ -1,0 +1,5 @@
+pub fn read_first(xs: &[u32]) -> u32 {
+    // audit:allow(unsafe-confinement): fixture demonstrating a documented waiver
+    // SAFETY: fixture; the slice is non-empty by contract.
+    unsafe { *xs.as_ptr() }
+}

@@ -1,0 +1,3 @@
+pub fn noop() {} // audit:allow(hash-collections)
+
+pub fn still_noop() {} // audit:allow(made-up-rule): a reason cannot save an unknown id

@@ -1,0 +1,4 @@
+pub fn head(xs: &[u32]) -> u32 {
+    // audit:allow(hot-path-panic): fixture; a well-formed waiver is the only fix
+    xs.first().copied().unwrap()
+}

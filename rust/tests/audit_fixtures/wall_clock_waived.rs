@@ -1,0 +1,8 @@
+// audit:allow(wall-clock): diagnostic pass timing only, never simulated time
+use std::time::Instant;
+
+pub fn stamp_nanos() -> u128 {
+    // audit:allow(wall-clock): diagnostic pass timing only, never simulated time
+    let t = Instant::now();
+    t.elapsed().as_nanos()
+}

@@ -4,7 +4,7 @@
 //! each test runs dozens of randomized trials and asserts invariants on
 //! every one.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::collections::HashSet;
 use std::collections::VecDeque;
 
@@ -111,8 +111,8 @@ fn prop_scheduler_assignment_is_partition() {
         let n_inst = 1 + rng.usize(5) as u32;
         let views: Vec<InstanceView> = (0..n_inst)
             .map(|i| {
-                let mut perf_for = HashMap::new();
-                let mut swap_time = HashMap::new();
+                let mut perf_for = BTreeMap::new();
+                let mut swap_time = BTreeMap::new();
                 for m in catalog.ids() {
                     // Random serve capability, but instance 0 serves all.
                     if i == 0 || rng.f64() < 0.7 {
@@ -281,7 +281,7 @@ fn prop_global_queue_state_machine() {
         let mut rng = Rng::new(seed);
         let mut q = GlobalQueue::new();
         // Shadow model: id → (live, waiting).
-        let mut live: HashMap<u64, bool> = HashMap::new(); // id → waiting?
+        let mut live: BTreeMap<u64, bool> = BTreeMap::new(); // id → waiting?
         let mut submitted = 0u64;
         let mut completed = 0u64;
         for _ in 0..1200 {
@@ -368,8 +368,8 @@ fn prop_global_queue_state_machine() {
 /// A100 view serving every paper-catalog model.
 fn a100_view(i: u32) -> InstanceView {
     let catalog = ModelCatalog::paper();
-    let mut perf_for = HashMap::new();
-    let mut swap_time = HashMap::new();
+    let mut perf_for = BTreeMap::new();
+    let mut swap_time = BTreeMap::new();
     for m in catalog.ids() {
         if let Some(p) = PerfModel::try_profile(catalog.get(m), GpuKind::A100, 161.0) {
             swap_time.insert(m, p.swap_cpu_gpu_s);
