@@ -30,7 +30,8 @@ use qlm::coordinator::scheduler::{
 use qlm::coordinator::GlobalQueue;
 use qlm::sim::{fleet_a100, SimConfig, Simulation};
 use qlm::util::{mean, stddev};
-use qlm::workload::{SloClass, SloTarget, Trace, TraceRequest, WorkloadSpec};
+use qlm::obs::ObsConfig;
+use qlm::workload::{Scenario, ScenarioKnobs, SloClass, SloTarget, Trace, TraceRequest, WorkloadSpec};
 
 /// Run `f` for `iters` timed iterations (after 1 warmup); report stats
 /// and return the mean wall time in milliseconds.
@@ -802,6 +803,68 @@ fn bench_e2e_fig12() {
     }
 }
 
+/// Observability trajectory: run the mixed-SLO scenario once with the
+/// flight recorder + telemetry + RWT ledger on, and log (a) the RWT
+/// estimator's per-class prediction error — the paper's Fig. 3/18
+/// accuracy claim as a tracked number instead of a figure — and (b) the
+/// scheduler pass-mix counters (delta-path share, dirty fraction, memo
+/// hit rate) that tell whether the incremental scheduler is actually
+/// taking its fast path at this workload shape.
+fn bench_obs() {
+    let scenario = Scenario::MixedSlo;
+    let knobs = ScenarioKnobs {
+        rate: scenario.default_rate(),
+        requests: 2000,
+        fleet: scenario.default_fleet(),
+        seed: 42,
+    };
+    let run = scenario.build(&knobs);
+    let trace = Trace::generate(&run.spec, knobs.seed);
+    let mut cfg = run.sim_config(Policy::qlm());
+    cfg.seed = knobs.seed;
+    cfg.obs = ObsConfig {
+        trace: true,
+        telemetry_every_s: Some(10.0),
+    };
+    let t0 = Instant::now();
+    let (m, report) = Simulation::new(cfg, &trace).run_with_obs(&trace);
+    let wall_ms = 1000.0 * t0.elapsed().as_secs_f64();
+    let report = report.expect("observability was enabled");
+    println!(
+        "obs/mixed-slo 2000 reqs (traced)             {wall_ms:>9.3} ms  \
+         ({} events, {} completed)",
+        report.trace_jsonl.lines().count(),
+        m.completed_count(),
+    );
+    for e in &report.rwt_errors {
+        let key = format!("rwt_mae_{}_s", e.class.name().replace('-', "_"));
+        println!("  {:<26} mae={:.3}s p90={:.3}s n={}", key, e.mae_s, e.p90_s, e.n);
+        perf_log::record(&key, e.mae_s);
+        perf_log::record(&format!("rwt_p90_{}_s", e.class.name().replace('-', "_")), e.p90_s);
+    }
+    let s = &report.sched;
+    perf_log::record("sched_mix_passes", s.passes as f64);
+    perf_log::record(
+        "sched_mix_delta_share",
+        s.delta as f64 / (s.passes.max(1)) as f64,
+    );
+    perf_log::record(
+        "sched_mix_dirty_per_delta_pass",
+        s.dirty as f64 / (s.delta.max(1)) as f64,
+    );
+    perf_log::record("sched_mix_crossings_drained", s.crossings_drained as f64);
+    perf_log::record(
+        "sched_mix_memo_hit_rate",
+        s.memo_hits as f64 / ((s.memo_hits + s.memo_misses).max(1)) as f64,
+    );
+    println!(
+        "  sched mix: {} passes, delta share {:.2}, memo hit rate {:.2}",
+        s.passes,
+        s.delta as f64 / (s.passes.max(1)) as f64,
+        s.memo_hits as f64 / ((s.memo_hits + s.memo_misses).max(1)) as f64,
+    );
+}
+
 #[cfg(feature = "pjrt")]
 fn bench_runtime_decode() {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
@@ -866,6 +929,9 @@ fn main() {
     if runs("e2e") {
         bench_e2e_fig09();
         bench_e2e_fig12();
+    }
+    if runs("obs") {
+        bench_obs();
     }
     if runs("runtime") {
         bench_runtime_decode();

@@ -60,14 +60,17 @@ pub const RULES: [RuleInfo; 8] = [
         rule: Rule::HashCollections,
         id: "hash-collections",
         group: "determinism",
-        summary: "no HashMap/HashSet in sim/, coordinator/, baselines/, capacity/, workload/",
+        summary: "no HashMap/HashSet in sim/, coordinator/, baselines/, capacity/, \
+                  workload/, metrics/, figures/, obs/",
         explain: "Scheduling code must use BTreeMap/BTreeSet (or Vec/slab) only. \
                   HashMap and HashSet iterate in RandomState order, which differs per \
                   process: any hash iteration that touches a plan, a float accumulation, \
                   or an event order silently breaks the golden-digest suites, the \
                   threads==serial gates, and `qlm compare` digest equality. The rule \
                   flags the *names* HashMap/HashSet anywhere in the restricted \
-                  directories, imports included, so a lookup-only map still needs an \
+                  directories — which include the reporting layers (metrics/, figures/, \
+                  obs/), whose rendered tables and JSONL exports must also be \
+                  byte-stable — imports included, so a lookup-only map still needs an \
                   explicit waiver arguing why its iteration order can never leak.\n\
                   Fix: switch to BTreeMap/BTreeSet (all QLM key types are Ord), or \
                   waive with `// audit:allow(hash-collections): <why order cannot leak>`.",
@@ -81,10 +84,12 @@ pub const RULES: [RuleInfo; 8] = [
                   measurement. A wall-clock read inside scheduling logic makes plans a \
                   function of host speed and destroys replay. The rule flags the type \
                   names Instant/SystemTime and any `::now(` call in sim/, coordinator/, \
-                  baselines/, capacity/, workload/. The sanctioned capture sites — the \
-                  scheduler-overhead stopwatch in sim/engine.rs and the CLI layer in \
-                  main.rs — carry waivers; runtime/ and figures/ measure real hardware \
-                  and are outside the rule's scope entirely.\n\
+                  baselines/, capacity/, workload/, metrics/, figures/, obs/ (the \
+                  reporting layers stamp simulated time only). The sanctioned capture \
+                  sites — the scheduler-overhead stopwatch in sim/engine.rs, the \
+                  estimator-latency probe in figures/estimator.rs, and the CLI layer in \
+                  main.rs — carry waivers; runtime/ measures real hardware and is \
+                  outside the rule's scope entirely.\n\
                   Fix: thread the event-clock time in as a parameter, or waive with \
                   `// audit:allow(wall-clock): <why this read cannot affect a plan>`.",
     },

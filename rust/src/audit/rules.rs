@@ -11,12 +11,15 @@ use super::{Rule, Violation, Waiver};
 
 /// Directories whose scheduling logic must stay deterministic
 /// (hash-collections + wall-clock rules).
-const DET_DIRS: [&str; 5] = [
+const DET_DIRS: [&str; 8] = [
     "src/sim/",
     "src/coordinator/",
     "src/baselines/",
     "src/capacity/",
     "src/workload/",
+    "src/metrics/",
+    "src/figures/",
+    "src/obs/",
 ];
 
 /// The scheduling hot path (hot-path-panic rule).
@@ -295,8 +298,27 @@ mod tests {
     fn det_rules_scope_to_restricted_dirs() {
         let src = "use std::collections::HashMap;\n";
         assert_eq!(rules_of("src/sim/x.rs", src), vec![Rule::HashCollections]);
-        assert!(rules_of("src/metrics/x.rs", src).is_empty());
-        assert!(rules_of("src/figures/x.rs", src).is_empty());
+        // The reporting layers joined the restricted set alongside the
+        // observability subsystem: their tables and JSONL exports must
+        // iterate deterministically too.
+        assert_eq!(rules_of("src/metrics/x.rs", src), vec![Rule::HashCollections]);
+        assert_eq!(rules_of("src/figures/x.rs", src), vec![Rule::HashCollections]);
+        assert_eq!(rules_of("src/obs/x.rs", src), vec![Rule::HashCollections]);
+        assert!(rules_of("src/util/x.rs", src).is_empty());
+        assert!(rules_of("src/backend/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_scopes_to_reporting_layers_too() {
+        let src = "let t = std::time::Instant::now();\n";
+        for rel in ["src/metrics/x.rs", "src/figures/x.rs", "src/obs/x.rs"] {
+            assert_eq!(
+                rules_of(rel, src),
+                vec![Rule::WallClock, Rule::WallClock],
+                "{rel} must be under the wall-clock rule"
+            );
+        }
+        assert!(rules_of("src/runtime/x.rs", src).is_empty());
     }
 
     #[test]

@@ -98,6 +98,11 @@ pub struct StepOutcome {
     /// Sequences whose decode slice expired this iteration — the
     /// migration points the load balancer may move a request at.
     pub slice_expired: Vec<u64>,
+    /// (req_id, tokens) prefill installments advanced this iteration.
+    /// Populated only when the owner enabled chunk tracing
+    /// ([`Instance::set_trace_chunks`]) — empty, allocation-free
+    /// otherwise.
+    pub prefill_chunks: Vec<(u64, u32)>,
 }
 
 /// Why an admission attempt was refused.
@@ -148,6 +153,10 @@ pub struct Instance {
     chunk_tokens: Option<u32>,
     /// Decode slice length; slice boundaries are migration points.
     slice_tokens: Option<u32>,
+    /// Report per-iteration prefill installments in [`StepOutcome`]
+    /// (flight-recorder support). Off by default: tracing disabled must
+    /// not change what `step` computes or allocates.
+    trace_chunks: bool,
 }
 
 impl Instance {
@@ -165,6 +174,7 @@ impl Instance {
             last_step_end: 0.0,
             chunk_tokens: None,
             slice_tokens: None,
+            trace_chunks: false,
         }
     }
 
@@ -188,6 +198,13 @@ impl Instance {
 
     pub fn slice_tokens(&self) -> Option<u32> {
         self.slice_tokens
+    }
+
+    /// Enable/disable reporting of per-iteration prefill installments
+    /// in [`StepOutcome::prefill_chunks`] (the flight recorder turns
+    /// this on; everything else leaves it off).
+    pub fn set_trace_chunks(&mut self, on: bool) {
+        self.trace_chunks = on;
     }
 
     /// Profiled constants for `model` on this instance's GPU (cached —
@@ -469,6 +486,9 @@ impl Instance {
             let cost = perf.prefill_cost(adv);
             prefill_s += cost;
             chunk_cost.insert(seq.req_id, cost);
+            if self.trace_chunks && adv > 0 {
+                out.prefill_chunks.push((seq.req_id, adv));
+            }
         }
 
         // Decode time is charged only when at least one sequence is past

@@ -88,6 +88,7 @@ impl SchedulingPolicy for ChunkedPolicy {
             orders,
             unservable: Vec::new(),
             chunk_tokens,
+            stats: None,
         }
     }
 }

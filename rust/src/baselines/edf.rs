@@ -27,6 +27,7 @@ impl SchedulingPolicy for EdfPolicy {
             orders,
             unservable: Vec::new(),
             chunk_tokens: BTreeMap::new(),
+            stats: None,
         }
     }
 }

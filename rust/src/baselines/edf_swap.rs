@@ -98,6 +98,7 @@ impl SchedulingPolicy for EdfSwapPolicy {
             orders,
             unservable: Vec::new(),
             chunk_tokens: BTreeMap::new(),
+            stats: None,
         }
     }
 

@@ -29,6 +29,7 @@ impl SchedulingPolicy for FcfsPolicy {
             orders,
             unservable: Vec::new(),
             chunk_tokens: BTreeMap::new(),
+            stats: None,
         }
     }
 }

@@ -39,7 +39,7 @@ pub use chunked::ChunkedPolicy;
 pub use edf::EdfPolicy;
 pub use edf_swap::EdfSwapPolicy;
 pub use fcfs::FcfsPolicy;
-pub use policy::{PolicyCtx, PolicyPlan, SchedulingPolicy};
+pub use policy::{PassStats, PolicyCtx, PolicyPlan, SchedulingPolicy};
 pub use qlm::QlmPolicy;
 pub use round_robin::RoundRobinPolicy;
 pub use sjf::SjfPolicy;

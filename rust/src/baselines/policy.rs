@@ -49,6 +49,34 @@ pub struct PolicyPlan {
     pub orders: BTreeMap<InstanceId, Vec<GroupId>>,
     pub unservable: Vec<GroupId>,
     pub chunk_tokens: BTreeMap<InstanceId, u32>,
+    /// Pass-mix counters for the telemetry sampler (`None` from
+    /// baselines that don't track their solve shape). Observability
+    /// only — the engine never branches on it.
+    pub stats: Option<PassStats>,
+}
+
+/// What one scheduler pass did, for the observability layer. A
+/// policy-seam mirror of [`crate::coordinator::scheduler::SolveStats`]
+/// plus the estimator's memo counters, so the engine can read the pass
+/// mix without knowing which policy produced the plan.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PassStats {
+    /// This pass went down the cached delta path.
+    pub incremental: bool,
+    /// Live groups at plan time.
+    pub groups: usize,
+    /// Dirty groups re-inserted by the delta path.
+    pub dirty: usize,
+    /// Instances whose queue changed this pass.
+    pub touched_instances: usize,
+    /// Branch-and-bound nodes expanded by MILP refinement.
+    pub milp_nodes: usize,
+    /// Violation crossings drained by delta-pass re-anchoring.
+    pub crossings_drained: usize,
+    /// RWT group-service memo hits, cumulative over the run.
+    pub memo_hits: u64,
+    /// RWT group-service memo misses, cumulative over the run.
+    pub memo_misses: u64,
 }
 
 /// A queue-ordering strategy, dispatched from the engine's

@@ -2,7 +2,7 @@
 //! (RWT estimation + greedy/MILP assignment + the incremental delta
 //! path) wrapped as a [`SchedulingPolicy`].
 
-use crate::baselines::policy::{PolicyCtx, PolicyPlan, SchedulingPolicy};
+use crate::baselines::policy::{PassStats, PolicyCtx, PolicyPlan, SchedulingPolicy};
 use crate::coordinator::request_group::{GroupId, RequestGroup};
 use crate::coordinator::scheduler::{GlobalScheduler, SchedDelta};
 
@@ -56,10 +56,21 @@ impl SchedulingPolicy for QlmPolicy {
                 self.scheduler.schedule(&group_refs, ctx.views, ctx.now)
             }
         };
+        let (memo_hits, memo_misses) = self.scheduler.estimator.memo_stats();
         PolicyPlan {
             orders: assignment.orders,
             unservable: assignment.unservable,
             chunk_tokens: Default::default(),
+            stats: Some(PassStats {
+                incremental: assignment.stats.incremental,
+                groups: assignment.stats.groups,
+                dirty: assignment.stats.dirty,
+                touched_instances: assignment.stats.touched_instances,
+                milp_nodes: assignment.stats.milp_nodes,
+                crossings_drained: assignment.stats.crossings_drained,
+                memo_hits,
+                memo_misses,
+            }),
         }
     }
 

@@ -45,6 +45,7 @@ impl SchedulingPolicy for RoundRobinPolicy {
             orders,
             unservable: Vec::new(),
             chunk_tokens: BTreeMap::new(),
+            stats: None,
         }
     }
 }

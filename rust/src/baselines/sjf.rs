@@ -54,6 +54,7 @@ impl SchedulingPolicy for SjfPolicy {
             orders,
             unservable: Vec::new(),
             chunk_tokens: BTreeMap::new(),
+            stats: None,
         }
     }
 }

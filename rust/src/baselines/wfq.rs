@@ -116,6 +116,7 @@ impl SchedulingPolicy for WfqPolicy {
             orders,
             unservable: Vec::new(),
             chunk_tokens: BTreeMap::new(),
+            stats: None,
         }
     }
 

@@ -87,11 +87,20 @@ impl GlobalQueue {
 
     /// Mark a request as pulled into a running batch (Request Pulling LSO).
     /// Removes it from the waiting set; the broker keeps the data until ack.
-    pub fn mark_running(&mut self, id: u64) {
-        if let Some(r) = self.get_mut(id) {
-            r.state = RequestState::Running;
-        }
+    /// Returns the state the request was pulled *from* — `Waiting` means
+    /// this was the first pull (the waiting→running edge the RWT-accuracy
+    /// ledger joins on), `Evicted` a re-pull after eviction.
+    pub fn mark_running(&mut self, id: u64) -> Option<RequestState> {
+        let prior = match self.get_mut(id) {
+            Some(r) => {
+                let prior = r.state;
+                r.state = RequestState::Running;
+                Some(prior)
+            }
+            None => None,
+        };
         self.waiting.remove(&id);
+        prior
     }
 
     /// Re-queue an evicted request (Request Eviction LSO): it returns to

@@ -74,12 +74,17 @@ impl CachedQueue {
     /// reproduce the full walk's value in real arithmetic (floats may
     /// differ in final ulps from a fresh walk, as with the original
     /// slope-only re-anchor).
-    pub(crate) fn reanchor(&mut self, now: f64) {
+    ///
+    /// Returns how many crossings the scan drained this call — summed
+    /// into `SolveStats::crossings_drained` so the telemetry sampler can
+    /// report how much work the amortization is actually absorbing.
+    pub(crate) fn reanchor(&mut self, now: f64) -> usize {
         let dt = now - self.priced_at;
         if dt <= 0.0 {
-            return;
+            return 0;
         }
         self.penalty += dt * self.viol_groups as f64;
+        let before = self.crossed;
         while self.crossed < self.crossings.len() && self.crossings[self.crossed] <= now {
             let t_c = self.crossings[self.crossed];
             self.crossed += 1;
@@ -87,6 +92,7 @@ impl CachedQueue {
             self.viol_groups += 1;
         }
         self.priced_at = now;
+        self.crossed - before
     }
 }
 

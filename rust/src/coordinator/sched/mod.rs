@@ -158,6 +158,9 @@ pub struct SolveStats {
     pub dirty: usize,
     /// Instances whose queue changed this pass.
     pub touched_instances: usize,
+    /// Violation crossings drained by the delta pass's re-anchor scans
+    /// (untouched queues advancing their penalties without a walk).
+    pub crossings_drained: usize,
 }
 
 /// One scheduler pass's worth of group-table changes, produced by the

@@ -466,13 +466,14 @@ impl GlobalScheduler {
         //    re-anchor untouched queues' penalties to `now` via the
         //    amortized-constant-time epoch offset (slope term plus the
         //    crossing scan — no walk needed).
+        let mut crossings_drained = 0usize;
         for (k, v) in instances.iter().enumerate() {
             if touched[k] {
                 let cq = &mut queues[k];
                 reorder_cached(cq, group_pricing);
                 pricing::reprice_queue(cq, group_pricing, v, now);
             } else {
-                queues[k].reanchor(now);
+                crossings_drained += queues[k].reanchor(now);
             }
         }
 
@@ -497,6 +498,7 @@ impl GlobalScheduler {
                 incremental: true,
                 dirty: delta.dirty.len(),
                 touched_instances,
+                crossings_drained,
                 ..Default::default()
             },
         })

@@ -36,6 +36,7 @@ pub mod sim;
 pub mod capacity;
 pub mod baselines;
 pub mod metrics;
+pub mod obs;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod figures;

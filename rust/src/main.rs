@@ -8,6 +8,10 @@
 //! qlm sim [--scenario S] [--list] [--policy P] [--rate R] [--requests N]
 //!         [--fleet N] [--seed S] [--horizon SECS] [--threads N]
 //!         [--chunk-tokens N] [--slice-tokens N]
+//!         [--trace-out FILE] [--telemetry-out FILE] [--telemetry-every SECS]
+//! qlm report <trace.jsonl> [--req ID] [--timelines N]   render a recorded
+//!            flight-recorder trace: event counts, the RWT-accuracy table,
+//!            per-request timelines
 //! qlm compare [--scenario S] [--rate R] [--requests N] [--fleet N]
 //!             [--seed S] [--threads N]       Fig. 11/14 policy table
 //! qlm compare --threads-sweep 1,2,4 [--scenario scale]   Fig. 20-scale
@@ -101,7 +105,11 @@ USAGE:
   qlm sim [--scenario burst|diurnal|mixed-slo|multi-model|failover|scale
           |autoscale|mega] [--list] [--policy P] [--rate R] [--requests N]
           [--fleet N] [--seed S] [--horizon SECS] [--full-solve] [--threads N]
-          [--chunk-tokens N] [--slice-tokens N]
+          [--chunk-tokens N] [--slice-tokens N] [--trace-out FILE]
+          [--telemetry-out FILE] [--telemetry-every SECS]
+  qlm report <trace.jsonl> [--req ID] [--timelines N]   event counts, the
+             per-class RWT prediction-error table, request timelines from a
+             `--trace-out` flight-recorder file
   qlm compare [--scenario S] [--rate R] [--requests N] [--fleet N] [--seed S]
               [--horizon SECS] [--threads N] [--chunk-tokens N]
               [--slice-tokens N]    every policy + LSO ablation,
@@ -307,9 +315,19 @@ fn cmd_sim(args: &Args) -> ExitCode {
             );
         }
     }
-    let cfg = cli.sim_config(&run, policy);
+    let mut cfg = cli.sim_config(&run, policy);
+    // Observability: `--trace-out` turns the flight recorder (and the
+    // RWT-accuracy ledger riding on it) on; `--telemetry-out` the fleet
+    // sampler. Both recorded in sim time — off, the engine allocates no
+    // observer state at all.
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let telemetry_out = args.get("telemetry-out").map(str::to_string);
+    cfg.obs.trace = trace_out.is_some();
+    if telemetry_out.is_some() {
+        cfg.obs.telemetry_every_s = Some(args.get_f64("telemetry-every", 10.0));
+    }
     let wall = std::time::Instant::now();
-    let m = Simulation::new(cfg, &trace).run(&trace);
+    let (m, obs) = Simulation::new(cfg, &trace).run_with_obs(&trace);
     let wall_s = wall.elapsed().as_secs_f64();
     println!("{}", m.summary());
     for class in [SloClass::Interactive, SloClass::Batch1, SloClass::Batch2] {
@@ -343,6 +361,71 @@ fn cmd_sim(args: &Args) -> ExitCode {
             m.shed_count(),
         );
     }
+    if let Some(obs) = obs {
+        if let Some(path) = &trace_out {
+            if let Err(e) = std::fs::write(path, &obs.trace_jsonl) {
+                eprintln!("failed to write {path}: {e}");
+                return ExitCode::FAILURE;
+            }
+            println!(
+                "  trace: {} events -> {path}",
+                obs.trace_jsonl.lines().count()
+            );
+        }
+        if let (Some(path), Some(jsonl)) = (&telemetry_out, &obs.telemetry_jsonl) {
+            if let Err(e) = std::fs::write(path, jsonl) {
+                eprintln!("failed to write {path}: {e}");
+                return ExitCode::FAILURE;
+            }
+            println!("  telemetry: {} samples -> {path}", jsonl.lines().count());
+        }
+        let s = &obs.sched;
+        if s.passes > 0 {
+            println!(
+                "  sched mix: {} passes ({} full, {} delta), {} dirty groups, \
+                 {} crossings drained, memo {}/{} hits",
+                s.passes,
+                s.full,
+                s.delta,
+                s.dirty,
+                s.crossings_drained,
+                s.memo_hits,
+                s.memo_hits + s.memo_misses,
+            );
+        }
+        for e in &obs.rwt_errors {
+            println!(
+                "  rwt error {:<12} n={:<6} mae={:.3}s p90={:.3}s",
+                e.class.name(),
+                e.n,
+                e.mae_s,
+                e.p90_s,
+            );
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+/// `qlm report <trace.jsonl>`: render a flight-recorder trace into
+/// per-request timelines and aggregate tables (event counts, the
+/// per-class RWT prediction-error join).
+fn cmd_report(args: &Args) -> ExitCode {
+    let Some(path) = args.positional.get(1) else {
+        eprintln!("usage: qlm report <trace.jsonl> [--req ID] [--timelines N]");
+        return ExitCode::from(2);
+    };
+    let jsonl = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("failed to read {path}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let opts = qlm::obs::ReportOptions {
+        req: args.get("req").and_then(|v| v.parse().ok()),
+        timelines: args.get_usize("timelines", 3),
+    };
+    print!("{}", qlm::obs::render(&jsonl, &opts));
     ExitCode::SUCCESS
 }
 
@@ -761,6 +844,7 @@ fn main() -> ExitCode {
     let args = Args::parse(&argv);
     match args.positional.first().map(String::as_str) {
         Some("sim") => cmd_sim(&args),
+        Some("report") => cmd_report(&args),
         Some("compare") => cmd_compare(&args),
         Some("plan") => cmd_plan(&args),
         Some("figures") => cmd_figures(&args),

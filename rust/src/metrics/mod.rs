@@ -2,7 +2,7 @@
 //! latency percentiles, device utilization — the quantities every
 //! evaluation figure reports.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::backend::{Instance, ModelId};
 use crate::coordinator::request::{Request, RequestState};
@@ -291,9 +291,10 @@ impl RunMetrics {
         self.device_seconds / 3600.0
     }
 
-    /// Mean TTFT per model — used by heterogeneity analyses.
-    pub fn ttft_by_model(&self) -> HashMap<ModelId, f64> {
-        let mut acc: HashMap<ModelId, Vec<f64>> = HashMap::new();
+    /// Mean TTFT per model — used by heterogeneity analyses. `BTreeMap`
+    /// so callers that iterate (figures, reports) see model-id order.
+    pub fn ttft_by_model(&self) -> BTreeMap<ModelId, f64> {
+        let mut acc: BTreeMap<ModelId, Vec<f64>> = BTreeMap::new();
         for r in &self.records {
             if let Some(t) = r.ttft() {
                 acc.entry(r.model).or_default().push(t);

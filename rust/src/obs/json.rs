@@ -1,0 +1,113 @@
+//! Hand-rolled JSON primitives for the observability subsystem.
+//!
+//! The crate is dependency-free, so trace/telemetry lines are built (and
+//! `qlm report` reads them back) with these helpers instead of serde.
+//! Two invariants matter more than generality:
+//!
+//! * **Byte-stable floats.** Every float is rendered with a fixed
+//!   `{:.6}` width, so identical runs produce identical bytes — the
+//!   trace-determinism suite compares whole files with `==`.
+//! * **Flat objects only.** Trace lines are one-level objects (telemetry
+//!   nests one level, but no string field ever contains `"`, `,`, `}`
+//!   beyond what [`esc`] escapes), so [`field`] can extract values by
+//!   key scan without a full parser.
+
+/// Render a float with fixed six-decimal precision (byte-stable across
+/// runs and platforms for the magnitudes the sim produces).
+pub fn f(x: f64) -> String {
+    format!("{x:.6}")
+}
+
+/// Render an `Option<f64>`: `null` when absent.
+pub fn opt_f(x: Option<f64>) -> String {
+    match x {
+        Some(v) => f(v),
+        None => "null".into(),
+    }
+}
+
+/// Escape a string for inclusion inside JSON quotes. The sim only emits
+/// identifier-like strings, but `qlm report` must never produce a
+/// malformed file even if a scenario name grows odd characters.
+pub fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Extract the raw value of `"key":` from a flat JSON object line.
+///
+/// Returns the value token with surrounding quotes stripped for strings
+/// (`None` when the key is missing). Good enough for the lines this
+/// module writes: keys are unique per line and values are scalars.
+pub fn field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let needle = format!("\"{key}\":");
+    let start = line.find(&needle)? + needle.len();
+    let rest = &line[start..];
+    if let Some(stripped) = rest.strip_prefix('"') {
+        let end = stripped.find('"')?;
+        return Some(&stripped[..end]);
+    }
+    let end = rest.find([',', '}']).unwrap_or(rest.len());
+    Some(rest[..end].trim())
+}
+
+/// [`field`] narrowed to an `f64`; `null` and parse failures map to `None`.
+pub fn field_f64(line: &str, key: &str) -> Option<f64> {
+    let raw = field(line, key)?;
+    if raw == "null" {
+        return None;
+    }
+    raw.parse().ok()
+}
+
+/// [`field`] narrowed to a `u64`.
+pub fn field_u64(line: &str, key: &str) -> Option<u64> {
+    field(line, key)?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floats_are_fixed_width() {
+        assert_eq!(f(0.0), "0.000000");
+        assert_eq!(f(1.5), "1.500000");
+        assert_eq!(f(-2.25), "-2.250000");
+        assert_eq!(opt_f(None), "null");
+        assert_eq!(opt_f(Some(3.0)), "3.000000");
+    }
+
+    #[test]
+    fn escaping_round_trips_identifiers() {
+        assert_eq!(esc("mixed-slo"), "mixed-slo");
+        assert_eq!(esc("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn field_extraction() {
+        let line = r#"{"t":1.500000,"req":7,"ev":"pulled","inst":2,"wait_s":null}"#;
+        assert_eq!(field(line, "ev"), Some("pulled"));
+        assert_eq!(field_u64(line, "req"), Some(7));
+        assert_eq!(field_f64(line, "t"), Some(1.5));
+        assert_eq!(field_f64(line, "wait_s"), None);
+        assert_eq!(field(line, "missing"), None);
+    }
+
+    #[test]
+    fn field_handles_last_value_in_object() {
+        let line = r#"{"a":1,"b":2}"#;
+        assert_eq!(field(line, "b"), Some("2"));
+    }
+}

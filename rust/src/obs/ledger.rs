@@ -1,0 +1,203 @@
+//! The RWT-accuracy ledger: did the estimator's predicted waiting time
+//! match what requests actually waited?
+//!
+//! The paper validates its central premise (Fig. 3 / Fig. 18) by
+//! comparing predicted request waiting time against measured waiting
+//! time. This ledger performs that join online: the engine records the
+//! Eq. 2 forecast when a request is submitted and the measured wait when
+//! the request is first pulled onto an instance, then reports per-class
+//! MAE and p90 absolute error. Strictly record-only — predictions are
+//! computed from the same cached views the scheduler already holds and
+//! never influence a decision, so enabling the ledger cannot perturb
+//! golden digests.
+
+use std::collections::BTreeMap;
+
+use crate::backend::ModelId;
+use crate::coordinator::rwt::ProfileTable;
+use crate::coordinator::scheduler::InstanceView;
+use crate::workload::SloClass;
+
+/// Fleet-level Eq. 2 forecast of a request's waiting time at submit.
+///
+/// Per-queue RWT (Eqs. 2–3) divides the output tokens queued *ahead* by
+/// one instance's token throughput Θ. At submit time the request has no
+/// queue position yet, so the fleet-level analogue aggregates every
+/// alive view that can serve the model: Θ_fleet = ΣΘ_i and the in-flight
+/// batch credit B_fleet = ΣB_i (requests already being served wait ~0).
+/// `q_ahead` is the number of same-model requests waiting when this one
+/// arrives. Returns `None` when no view serves the model — there is
+/// nothing defensible to predict (e.g. before the autoscaler provisions
+/// the first instance).
+pub fn predict_wait(
+    views: &[InstanceView],
+    profiles: &ProfileTable,
+    model: ModelId,
+    class: SloClass,
+    mega: bool,
+    q_ahead: u64,
+) -> Option<f64> {
+    let profile = profiles.get(model, class, mega);
+    let tok_per_req = profile.mean_tokens_per_req();
+    let mut theta = 0.0;
+    let mut batch: u64 = 0;
+    for v in views {
+        if let Some(perf) = v.perf_for.get(&model) {
+            theta += perf.steady_throughput(tok_per_req);
+            batch += perf.steady_batch(tok_per_req) as u64;
+        }
+    }
+    if theta <= 0.0 {
+        return None;
+    }
+    let pending = q_ahead.saturating_sub(batch);
+    Some(pending as f64 * profile.mu_out / theta)
+}
+
+/// Per-class accuracy summary row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassError {
+    pub class: SloClass,
+    /// Joined (predicted, actual) pairs.
+    pub n: usize,
+    /// Mean absolute error |predicted − actual| in seconds.
+    pub mae_s: f64,
+    /// 90th percentile of the absolute error in seconds.
+    pub p90_s: f64,
+}
+
+/// Online predicted-vs-actual join, keyed by request id.
+#[derive(Debug, Default)]
+pub struct RwtLedger {
+    /// Requests predicted at submit, awaiting their first pull.
+    pending: BTreeMap<u64, (SloClass, f64)>,
+    /// Absolute errors per class, in join order.
+    errors: BTreeMap<SloClass, Vec<f64>>,
+}
+
+impl RwtLedger {
+    /// Record the forecast made when `req` entered the queue.
+    pub fn note_predicted(&mut self, req: u64, class: SloClass, predicted_s: f64) {
+        self.pending.insert(req, (class, predicted_s));
+    }
+
+    /// Record the measured wait when `req` was first pulled. Re-pulls
+    /// after eviction don't reach here (the engine joins on the
+    /// waiting→running edge only); unknown ids (no prediction was
+    /// possible at submit) are ignored.
+    pub fn note_actual(&mut self, req: u64, actual_s: f64) {
+        if let Some((class, predicted)) = self.pending.remove(&req) {
+            self.errors.entry(class).or_default().push((predicted - actual_s).abs());
+        }
+    }
+
+    /// Joined pairs so far, across classes.
+    pub fn joined(&self) -> usize {
+        self.errors.values().map(Vec::len).sum()
+    }
+
+    /// Per-class MAE/p90 over every joined pair, classes in SLO order.
+    pub fn per_class_errors(&self) -> Vec<ClassError> {
+        self.errors
+            .iter()
+            .map(|(&class, errs)| ClassError {
+                class,
+                n: errs.len(),
+                mae_s: crate::util::mean(errs),
+                p90_s: crate::util::percentile(errs, 90.0),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{GpuKind, ModelCatalog, PerfModel};
+    use crate::coordinator::rwt::WorkloadProfile;
+
+    fn table() -> ProfileTable {
+        let mut t = ProfileTable::default();
+        t.insert(
+            ModelId(0),
+            SloClass::Interactive,
+            false,
+            WorkloadProfile {
+                mu_in: 100.0,
+                sigma_in: 10.0,
+                mu_out: 200.0,
+                sigma_out: 20.0,
+                max_out: 512.0,
+            },
+        );
+        t
+    }
+
+    fn view(id: u32) -> InstanceView {
+        let catalog = ModelCatalog::paper();
+        let perf = PerfModel::profile(catalog.get(ModelId(0)), GpuKind::A100, 300.0);
+        let mut perf_for = std::collections::BTreeMap::new();
+        perf_for.insert(ModelId(0), perf);
+        InstanceView {
+            id: crate::backend::InstanceId(id),
+            active_model: Some(ModelId(0)),
+            perf_for,
+            swap_time: Default::default(),
+            executing: None,
+        }
+    }
+
+    #[test]
+    fn no_serving_view_means_no_prediction() {
+        let p = predict_wait(&[], &table(), ModelId(0), SloClass::Interactive, false, 10);
+        assert_eq!(p, None);
+    }
+
+    #[test]
+    fn empty_queue_predicts_zero_and_backlog_scales() {
+        let views = [view(0)];
+        let t = table();
+        let empty = predict_wait(&views, &t, ModelId(0), SloClass::Interactive, false, 0).unwrap();
+        assert_eq!(empty, 0.0);
+        let shallow =
+            predict_wait(&views, &t, ModelId(0), SloClass::Interactive, false, 500).unwrap();
+        let deep =
+            predict_wait(&views, &t, ModelId(0), SloClass::Interactive, false, 5000).unwrap();
+        assert!(deep > shallow, "more backlog must predict more wait");
+        // Two instances drain the same backlog about twice as fast.
+        let two = [view(0), view(1)];
+        let halved =
+            predict_wait(&two, &t, ModelId(0), SloClass::Interactive, false, 5000).unwrap();
+        assert!(halved < deep);
+    }
+
+    #[test]
+    fn ledger_joins_and_summarizes() {
+        let mut l = RwtLedger::default();
+        l.note_predicted(1, SloClass::Interactive, 10.0);
+        l.note_predicted(2, SloClass::Interactive, 4.0);
+        l.note_predicted(3, SloClass::Batch1, 7.0);
+        l.note_actual(1, 12.0); // err 2
+        l.note_actual(2, 4.0); // err 0
+        l.note_actual(3, 3.0); // err 4
+        l.note_actual(99, 5.0); // never predicted: ignored
+        assert_eq!(l.joined(), 3);
+        let rows = l.per_class_errors();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].class, SloClass::Interactive);
+        assert_eq!(rows[0].n, 2);
+        assert!((rows[0].mae_s - 1.0).abs() < 1e-12);
+        assert_eq!(rows[1].class, SloClass::Batch1);
+        assert!((rows[1].mae_s - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn repull_does_not_double_count() {
+        let mut l = RwtLedger::default();
+        l.note_predicted(1, SloClass::Interactive, 1.0);
+        l.note_actual(1, 2.0);
+        l.note_actual(1, 50.0); // second pull of the same id: no pending entry
+        assert_eq!(l.joined(), 1);
+        assert!((l.per_class_errors()[0].mae_s - 1.0).abs() < 1e-12);
+    }
+}

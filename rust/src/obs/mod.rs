@@ -1,0 +1,143 @@
+//! Observability: the flight recorder, fleet telemetry sampler, and
+//! RWT-accuracy ledger.
+//!
+//! `RunMetrics` answers *how did the run end*; this module answers
+//! *what happened along the way* — per-request lifecycle events
+//! ([`recorder`]), a fixed-cadence fleet time series ([`telemetry`]),
+//! and an online predicted-vs-actual waiting-time join ([`ledger`],
+//! the paper's Fig. 3 validation). [`report`] renders the recorded
+//! trace back into tables for the `qlm report` subcommand, and
+//! [`json`] is the shared hand-rolled JSONL layer.
+//!
+//! Contract with the engine (enforced by `tests/obs.rs` and the
+//! `qlm audit` determinism rules, which cover this directory):
+//!
+//! * **Off by default, free when off.** The engine holds
+//!   `Option<Box<ObsState>>`; every hook is behind one `if let`. A run
+//!   with observability disabled executes the same instructions it did
+//!   before this module existed.
+//! * **Record, never steer.** Nothing here feeds back into scheduling,
+//!   so golden digests are bit-identical whether tracing is on or off.
+//! * **Deterministic bytes.** Events are recorded on the event-loop
+//!   thread in dispatch order and floats render at fixed width, so the
+//!   JSONL is byte-identical across re-runs and `--threads` lane counts.
+//! * **Simulated time only.** Every stamp is sim-clock time; the audit
+//!   wall-clock rule applies to this directory.
+
+pub mod json;
+pub mod ledger;
+pub mod recorder;
+pub mod report;
+pub mod telemetry;
+
+pub use ledger::{predict_wait, ClassError, RwtLedger};
+pub use recorder::{FlightRecorder, TraceEvent, TraceEventKind};
+pub use report::{render, ReportOptions};
+pub use telemetry::{InstanceSample, SchedMix, TelemetryLog, TelemetrySample};
+
+/// What the engine should observe. Default: nothing.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ObsConfig {
+    /// Record per-request lifecycle events (and the RWT ledger, which
+    /// rides on the same submit/pull hooks).
+    pub trace: bool,
+    /// Sample fleet telemetry every this many simulated seconds.
+    pub telemetry_every_s: Option<f64>,
+}
+
+impl ObsConfig {
+    pub fn enabled(&self) -> bool {
+        self.trace || self.telemetry_every_s.is_some()
+    }
+}
+
+/// Live observer state owned by the engine while a run executes.
+#[derive(Debug)]
+pub struct ObsState {
+    pub recorder: FlightRecorder,
+    /// Present iff a sampling cadence was configured.
+    pub telemetry: Option<TelemetryLog>,
+    pub ledger: RwtLedger,
+    /// Scheduler pass-mix accumulator (also snapshotted per telemetry
+    /// sample).
+    pub sched: SchedMix,
+    /// Whether lifecycle events should be recorded (mirrors
+    /// [`ObsConfig::trace`]; telemetry can run without the recorder).
+    pub trace: bool,
+}
+
+impl ObsState {
+    pub fn new(cfg: &ObsConfig) -> Self {
+        ObsState {
+            recorder: FlightRecorder::default(),
+            telemetry: cfg.telemetry_every_s.map(TelemetryLog::new),
+            ledger: RwtLedger::default(),
+            sched: SchedMix::default(),
+            trace: cfg.trace,
+        }
+    }
+
+    /// Record one lifecycle event (no-op when tracing is off — the
+    /// state may exist for telemetry alone).
+    pub fn record(&mut self, t: f64, req: u64, kind: TraceEventKind) {
+        if self.trace {
+            self.recorder.record(t, req, kind);
+        }
+    }
+
+    pub fn into_report(self) -> ObsReport {
+        ObsReport {
+            trace_jsonl: self.recorder.to_jsonl(),
+            telemetry_jsonl: self.telemetry.as_ref().map(TelemetryLog::to_jsonl),
+            rwt_errors: self.ledger.per_class_errors(),
+            sched: self.sched,
+        }
+    }
+}
+
+/// Everything a finished run observed, ready for export.
+#[derive(Debug)]
+pub struct ObsReport {
+    /// Flight-recorder JSONL (empty string when tracing was off).
+    pub trace_jsonl: String,
+    /// Telemetry JSONL, when a cadence was configured.
+    pub telemetry_jsonl: Option<String>,
+    /// Per-class RWT prediction error (MAE + p90), classes in SLO order.
+    pub rwt_errors: Vec<ClassError>,
+    /// Final scheduler pass-mix counters.
+    pub sched: SchedMix,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_config_is_disabled() {
+        assert!(!ObsConfig::default().enabled());
+        assert!(ObsConfig { trace: true, ..Default::default() }.enabled());
+        assert!(ObsConfig { telemetry_every_s: Some(5.0), ..Default::default() }.enabled());
+    }
+
+    #[test]
+    fn record_respects_trace_flag() {
+        let mut on = ObsState::new(&ObsConfig { trace: true, telemetry_every_s: None });
+        let mut off = ObsState::new(&ObsConfig { trace: false, telemetry_every_s: Some(1.0) });
+        on.record(1.0, 0, TraceEventKind::Shed);
+        off.record(1.0, 0, TraceEventKind::Shed);
+        assert_eq!(on.recorder.len(), 1);
+        assert_eq!(off.recorder.len(), 0);
+        assert!(off.telemetry.is_some());
+    }
+
+    #[test]
+    fn report_carries_trace_and_telemetry() {
+        let mut st = ObsState::new(&ObsConfig { trace: true, telemetry_every_s: Some(2.0) });
+        st.record(0.5, 7, TraceEventKind::Shed);
+        let sample = TelemetrySample { t: 2.0, ..Default::default() };
+        st.telemetry.as_mut().unwrap().record(&sample);
+        let rep = st.into_report();
+        assert!(rep.trace_jsonl.contains(r#""ev":"shed""#));
+        assert!(rep.telemetry_jsonl.unwrap().starts_with(r#"{"t":2.000000"#));
+    }
+}

@@ -1,0 +1,220 @@
+//! The flight recorder: an append-only log of per-request lifecycle
+//! events, stamped with *simulated* time.
+//!
+//! Events are recorded on the engine's single event-loop thread, in
+//! event-dispatch order — the same order regardless of worker-lane
+//! count — so the rendered JSONL is byte-identical across `--threads`
+//! and across re-runs of the same seed. The recorder never feeds back
+//! into scheduling: it observes, it does not steer.
+
+use crate::backend::{InstanceId, ModelId};
+use crate::obs::json;
+use crate::workload::SloClass;
+
+/// What happened to a request at one instant of simulated time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEventKind {
+    /// Entered the global queue (or was shed at the door — see `Shed`).
+    /// `predicted_wait_s` is the RWT estimator's fleet-level Eq. 2
+    /// forecast captured at submit time; `None` when no alive instance
+    /// serves the model yet (nothing to predict against).
+    Submitted { model: ModelId, class: SloClass, mega: bool, predicted_wait_s: Option<f64> },
+    /// First admission onto an instance; `wait_s` is time since submit.
+    Pulled { inst: InstanceId, wait_s: f64 },
+    /// One chunked-prefill installment of `tokens` prompt tokens.
+    PrefillChunk { inst: InstanceId, tokens: u32 },
+    /// Prefill finished; `ttft_s` is time since submit.
+    FirstToken { inst: InstanceId, ttft_s: f64 },
+    /// A decode slice expired at a migration point with `generated`
+    /// output tokens produced so far.
+    DecodeSlice { inst: InstanceId, generated: u32 },
+    /// Evicted to host memory (LSO 2) with `generated` tokens of progress.
+    Evicted { inst: InstanceId, generated: u32 },
+    /// Re-admitted after eviction; `wait_s` is time since submit.
+    Restored { inst: InstanceId, wait_s: f64 },
+    /// Displaced by a model swap (LSO 4): the instance switched to
+    /// `model` and this request went back to the queue.
+    Swapped { inst: InstanceId, model: ModelId },
+    /// Dropped by admission control or as unservable.
+    Shed,
+    /// Finished decoding; `e2e_s` is arrival-to-completion latency.
+    Completed { inst: InstanceId, generated: u32, e2e_s: f64 },
+}
+
+impl TraceEventKind {
+    /// Kebab-case tag written to the `"ev"` field.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            TraceEventKind::Submitted { .. } => "submitted",
+            TraceEventKind::Pulled { .. } => "pulled",
+            TraceEventKind::PrefillChunk { .. } => "prefill-chunk",
+            TraceEventKind::FirstToken { .. } => "first-token",
+            TraceEventKind::DecodeSlice { .. } => "decode-slice",
+            TraceEventKind::Evicted { .. } => "evicted",
+            TraceEventKind::Restored { .. } => "restored",
+            TraceEventKind::Swapped { .. } => "swapped",
+            TraceEventKind::Shed => "shed",
+            TraceEventKind::Completed { .. } => "completed",
+        }
+    }
+}
+
+/// One trace line: time, request, what happened.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub t: f64,
+    pub req: u64,
+    pub kind: TraceEventKind,
+}
+
+impl TraceEvent {
+    /// Render as one flat JSON object (no trailing newline).
+    pub fn to_json_line(&self) -> String {
+        let mut s = format!(
+            r#"{{"t":{},"req":{},"ev":"{}""#,
+            json::f(self.t),
+            self.req,
+            self.kind.tag()
+        );
+        match &self.kind {
+            TraceEventKind::Submitted { model, class, mega, predicted_wait_s } => {
+                s.push_str(&format!(
+                    r#","model":{},"class":"{}","mega":{},"predicted_wait_s":{}"#,
+                    model.0,
+                    class.name(),
+                    mega,
+                    json::opt_f(*predicted_wait_s)
+                ));
+            }
+            TraceEventKind::Pulled { inst, wait_s } => {
+                s.push_str(&format!(r#","inst":{},"wait_s":{}"#, inst.0, json::f(*wait_s)));
+            }
+            TraceEventKind::PrefillChunk { inst, tokens } => {
+                s.push_str(&format!(r#","inst":{},"tokens":{}"#, inst.0, tokens));
+            }
+            TraceEventKind::FirstToken { inst, ttft_s } => {
+                s.push_str(&format!(r#","inst":{},"ttft_s":{}"#, inst.0, json::f(*ttft_s)));
+            }
+            TraceEventKind::DecodeSlice { inst, generated } => {
+                s.push_str(&format!(r#","inst":{},"generated":{}"#, inst.0, generated));
+            }
+            TraceEventKind::Evicted { inst, generated } => {
+                s.push_str(&format!(r#","inst":{},"generated":{}"#, inst.0, generated));
+            }
+            TraceEventKind::Restored { inst, wait_s } => {
+                s.push_str(&format!(r#","inst":{},"wait_s":{}"#, inst.0, json::f(*wait_s)));
+            }
+            TraceEventKind::Swapped { inst, model } => {
+                s.push_str(&format!(r#","inst":{},"model":{}"#, inst.0, model.0));
+            }
+            TraceEventKind::Shed => {}
+            TraceEventKind::Completed { inst, generated, e2e_s } => {
+                s.push_str(&format!(
+                    r#","inst":{},"generated":{},"e2e_s":{}"#,
+                    inst.0,
+                    generated,
+                    json::f(*e2e_s)
+                ));
+            }
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// Append-only event log for one simulation run.
+#[derive(Debug, Default)]
+pub struct FlightRecorder {
+    events: Vec<TraceEvent>,
+}
+
+impl FlightRecorder {
+    pub fn record(&mut self, t: f64, req: u64, kind: TraceEventKind) {
+        self.events.push(TraceEvent { t, req, kind });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// The whole log as JSONL (one event per line, trailing newline).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::with_capacity(self.events.len() * 80);
+        for ev in &self.events {
+            out.push_str(&ev.to_json_line());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lines_are_flat_and_stable() {
+        let mut rec = FlightRecorder::default();
+        rec.record(
+            0.25,
+            3,
+            TraceEventKind::Submitted {
+                model: ModelId(1),
+                class: SloClass::Interactive,
+                mega: false,
+                predicted_wait_s: Some(1.5),
+            },
+        );
+        rec.record(1.0, 3, TraceEventKind::Pulled { inst: InstanceId(0), wait_s: 0.75 });
+        rec.record(9.0, 3, TraceEventKind::Shed);
+        let jsonl = rec.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(
+            lines[0],
+            r#"{"t":0.250000,"req":3,"ev":"submitted","model":1,"class":"interactive","mega":false,"predicted_wait_s":1.500000}"#
+        );
+        assert_eq!(lines[1], r#"{"t":1.000000,"req":3,"ev":"pulled","inst":0,"wait_s":0.750000}"#);
+        assert_eq!(lines[2], r#"{"t":9.000000,"req":3,"ev":"shed"}"#);
+    }
+
+    #[test]
+    fn null_prediction_renders_as_null() {
+        let ev = TraceEvent {
+            t: 0.0,
+            req: 0,
+            kind: TraceEventKind::Submitted {
+                model: ModelId(0),
+                class: SloClass::Batch1,
+                mega: true,
+                predicted_wait_s: None,
+            },
+        };
+        assert!(ev.to_json_line().contains(r#""predicted_wait_s":null"#));
+        assert!(ev.to_json_line().contains(r#""class":"batch-1""#));
+    }
+
+    #[test]
+    fn identical_logs_render_identical_bytes() {
+        let build = || {
+            let mut rec = FlightRecorder::default();
+            for i in 0..100u64 {
+                rec.record(
+                    i as f64 * 0.1,
+                    i,
+                    TraceEventKind::FirstToken { inst: InstanceId(2), ttft_s: 0.3 + i as f64 },
+                );
+            }
+            rec.to_jsonl()
+        };
+        assert_eq!(build(), build());
+    }
+}

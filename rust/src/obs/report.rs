@@ -1,0 +1,225 @@
+//! `qlm report` — render a flight-recorder JSONL file back into
+//! human-readable tables: event-kind counts, the per-class RWT
+//! prediction-error table, and per-request timelines.
+//!
+//! The parser is the flat key-scan from [`crate::obs::json`]; it reads
+//! exactly the lines [`crate::obs::recorder`] writes. The RWT table is
+//! recomputed offline from the trace itself (Submitted carries the
+//! prediction, the first Pulled/Restored carries the measured wait) by
+//! replaying the same [`RwtLedger`] join the engine runs online — one
+//! aggregation code path, two feeding modes.
+
+use std::collections::BTreeMap;
+
+use crate::obs::json;
+use crate::obs::ledger::RwtLedger;
+use crate::workload::SloClass;
+
+fn class_from_name(name: &str) -> Option<SloClass> {
+    SloClass::ALL.into_iter().find(|c| c.name() == name)
+}
+
+/// What to render.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReportOptions {
+    /// Render only this request's timeline (plus the aggregate tables).
+    pub req: Option<u64>,
+    /// How many request timelines to render when `req` is unset.
+    pub timelines: usize,
+}
+
+/// One parsed trace line.
+struct ParsedEvent<'a> {
+    t: f64,
+    req: u64,
+    ev: &'a str,
+    line: &'a str,
+}
+
+fn parse(trace_jsonl: &str) -> Vec<ParsedEvent<'_>> {
+    let mut out = Vec::new();
+    for line in trace_jsonl.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (Some(t), Some(req), Some(ev)) = (
+            json::field_f64(line, "t"),
+            json::field_u64(line, "req"),
+            json::field(line, "ev"),
+        ) else {
+            continue;
+        };
+        out.push(ParsedEvent { t, req, ev, line });
+    }
+    out
+}
+
+/// The event's payload fields, rendered `key=value` for timeline rows.
+fn payload(line: &str, ev: &str) -> String {
+    let marker = format!(r#""ev":"{ev}""#);
+    let Some(pos) = line.find(&marker) else { return String::new() };
+    let rest = &line[pos + marker.len()..];
+    let rest = rest.strip_suffix('}').unwrap_or(rest);
+    rest.trim_start_matches(',')
+        .split(',')
+        .filter(|kv| !kv.is_empty())
+        .map(|kv| kv.replace(&['"', ':'][..], " ").split_whitespace().collect::<Vec<_>>().join("="))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Render the full report for one trace file.
+pub fn render(trace_jsonl: &str, opts: &ReportOptions) -> String {
+    let events = parse(trace_jsonl);
+    let mut out = String::new();
+
+    let mut requests: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        requests.entry(ev.req).or_default().push(i);
+        *counts.entry(ev.ev).or_insert(0) += 1;
+    }
+    out.push_str(&format!("trace: {} events, {} requests\n", events.len(), requests.len()));
+
+    out.push_str("\nevent counts\n");
+    for (ev, n) in &counts {
+        out.push_str(&format!("  {ev:<14} {n}\n"));
+    }
+
+    // Replay the engine's online join: prediction at submit, measured
+    // wait at the first pull (Restored first can't happen, but accept it
+    // so a hand-edited trace still joins).
+    let mut ledger = RwtLedger::default();
+    for ev in &events {
+        match ev.ev {
+            "submitted" => {
+                if let (Some(class), Some(predicted)) = (
+                    json::field(ev.line, "class").and_then(class_from_name),
+                    json::field_f64(ev.line, "predicted_wait_s"),
+                ) {
+                    ledger.note_predicted(ev.req, class, predicted);
+                }
+            }
+            "pulled" | "restored" => {
+                if let Some(wait) = json::field_f64(ev.line, "wait_s") {
+                    ledger.note_actual(ev.req, wait);
+                }
+            }
+            _ => {}
+        }
+    }
+    out.push_str("\nRWT prediction error (predicted vs actual wait at first pull)\n");
+    let rows = ledger.per_class_errors();
+    if rows.is_empty() {
+        out.push_str("  (no joined prediction/actual pairs in this trace)\n");
+    } else {
+        out.push_str(&format!("  {:<13} {:>6} {:>10} {:>10}\n", "class", "n", "mae_s", "p90_s"));
+        for r in rows {
+            out.push_str(&format!(
+                "  {:<13} {:>6} {:>10.3} {:>10.3}\n",
+                r.class.name(),
+                r.n,
+                r.mae_s,
+                r.p90_s
+            ));
+        }
+    }
+
+    // Timelines: an explicit request, or the first few that completed.
+    let picked: Vec<u64> = match opts.req {
+        Some(id) => vec![id],
+        None => requests
+            .iter()
+            .filter(|(_, idxs)| idxs.iter().any(|&i| events[i].ev == "completed"))
+            .map(|(&id, _)| id)
+            .take(opts.timelines)
+            .collect(),
+    };
+    for id in picked {
+        let Some(idxs) = requests.get(&id) else {
+            out.push_str(&format!("\nrequest {id}: not in trace\n"));
+            continue;
+        };
+        out.push_str(&format!("\nrequest {id} timeline\n"));
+        for &i in idxs {
+            let ev = &events[i];
+            out.push_str(&format!("  {:>12.6}  {:<14} {}\n", ev.t, ev.ev, payload(ev.line, ev.ev)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{InstanceId, ModelId};
+    use crate::obs::recorder::{FlightRecorder, TraceEventKind};
+
+    fn sample_trace() -> String {
+        let mut rec = FlightRecorder::default();
+        rec.record(
+            0.0,
+            0,
+            TraceEventKind::Submitted {
+                model: ModelId(0),
+                class: SloClass::Interactive,
+                mega: false,
+                predicted_wait_s: Some(1.0),
+            },
+        );
+        rec.record(1.5, 0, TraceEventKind::Pulled { inst: InstanceId(0), wait_s: 1.5 });
+        rec.record(2.0, 0, TraceEventKind::FirstToken { inst: InstanceId(0), ttft_s: 2.0 });
+        rec.record(
+            4.0,
+            0,
+            TraceEventKind::Completed { inst: InstanceId(0), generated: 64, e2e_s: 4.0 },
+        );
+        rec.record(
+            0.5,
+            1,
+            TraceEventKind::Submitted {
+                model: ModelId(0),
+                class: SloClass::Batch1,
+                mega: false,
+                predicted_wait_s: None,
+            },
+        );
+        rec.record(9.0, 1, TraceEventKind::Shed);
+        rec.to_jsonl()
+    }
+
+    #[test]
+    fn report_has_counts_rwt_table_and_timeline() {
+        let r = render(&sample_trace(), &ReportOptions { req: None, timelines: 3 });
+        assert!(r.contains("trace: 6 events, 2 requests"));
+        assert!(r.contains("submitted      2"));
+        assert!(r.contains("shed           1"));
+        assert!(r.contains("RWT prediction error"));
+        // |1.0 - 1.5| = 0.5 for the one joined interactive pair.
+        assert!(r.contains("interactive"));
+        assert!(r.contains("0.500"));
+        // Request 1 never predicted (null) and never pulled: no batch-1 row.
+        assert!(!r.contains("batch-1  "));
+        // Only request 0 completed, so only its timeline renders.
+        assert!(r.contains("request 0 timeline"));
+        assert!(!r.contains("request 1 timeline"));
+        assert!(r.contains("pulled"));
+        assert!(r.contains("inst=0"));
+    }
+
+    #[test]
+    fn explicit_request_renders_even_without_completion() {
+        let r = render(&sample_trace(), &ReportOptions { req: Some(1), timelines: 0 });
+        assert!(r.contains("request 1 timeline"));
+        assert!(r.contains("shed"));
+        let missing = render(&sample_trace(), &ReportOptions { req: Some(42), timelines: 0 });
+        assert!(missing.contains("request 42: not in trace"));
+    }
+
+    #[test]
+    fn payload_renders_key_value_pairs() {
+        let line = r#"{"t":1.000000,"req":3,"ev":"pulled","inst":2,"wait_s":0.750000}"#;
+        assert_eq!(payload(line, "pulled"), "inst=2 wait_s=0.750000");
+    }
+}

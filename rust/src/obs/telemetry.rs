@@ -1,0 +1,259 @@
+//! Fleet telemetry: a fixed-cadence time series of queue, instance,
+//! autoscaler, admission, and scheduler-pass state.
+//!
+//! The sampler fires on simulated-time boundaries (`t = k · every_s`)
+//! interleaved with the event loop, so the series is as deterministic
+//! as the run itself: same seed ⇒ byte-identical JSONL, any lane count.
+//! Most of what it captures already existed as counters that were
+//! dropped on the floor — `SolveStats`, the estimator memo hit rate,
+//! the event core's wake dedup stats — now kept as a trajectory.
+
+use crate::obs::json;
+use crate::workload::SloClass;
+
+/// Cumulative scheduler pass-mix counters, accumulated per pass from
+/// [`crate::baselines::PassStats`]. `memo_*` are snapshots of the
+/// estimator's cumulative memo counters at the latest pass rather than
+/// sums (the estimator already accumulates across its lifetime).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SchedMix {
+    /// Scheduler passes observed (invocations that produced a plan).
+    pub passes: u64,
+    /// Passes that ran the full solve.
+    pub full: u64,
+    /// Passes that went down the cached delta path.
+    pub delta: u64,
+    /// Dirty groups re-inserted, summed across delta passes.
+    pub dirty: u64,
+    /// Instances whose queue changed, summed across delta passes.
+    pub touched_instances: u64,
+    /// Branch-and-bound nodes expanded by MILP refinement.
+    pub milp_nodes: u64,
+    /// Penalty-table crossings drained by delta-pass re-anchoring.
+    pub crossings_drained: u64,
+    /// RWT estimator group-service memo hits (cumulative snapshot).
+    pub memo_hits: u64,
+    /// RWT estimator group-service memo misses (cumulative snapshot).
+    pub memo_misses: u64,
+}
+
+impl SchedMix {
+    /// Fold one pass's stats in (memo counters replace, others add).
+    pub fn absorb(&mut self, stats: &crate::baselines::PassStats) {
+        self.passes += 1;
+        if stats.incremental {
+            self.delta += 1;
+        } else {
+            self.full += 1;
+        }
+        self.dirty += stats.dirty as u64;
+        self.touched_instances += stats.touched_instances as u64;
+        self.milp_nodes += stats.milp_nodes as u64;
+        self.crossings_drained += stats.crossings_drained as u64;
+        self.memo_hits = stats.memo_hits;
+        self.memo_misses = stats.memo_misses;
+    }
+
+    fn to_json(&self) -> String {
+        format!(
+            r#"{{"passes":{},"full":{},"delta":{},"dirty":{},"touched":{},"milp_nodes":{},"crossings_drained":{},"memo_hits":{},"memo_misses":{}}}"#,
+            self.passes,
+            self.full,
+            self.delta,
+            self.dirty,
+            self.touched_instances,
+            self.milp_nodes,
+            self.crossings_drained,
+            self.memo_hits,
+            self.memo_misses
+        )
+    }
+}
+
+/// One instance's occupancy at a sample instant.
+#[derive(Debug, Clone, Copy)]
+pub struct InstanceSample {
+    pub id: u32,
+    /// Active model, if one is resident.
+    pub model: Option<u32>,
+    /// Sequences in the running batch.
+    pub running: usize,
+    /// Sequences swapped out to host memory.
+    pub swapped: usize,
+    /// KV-cache utilization in [0, 1].
+    pub kv: f64,
+}
+
+/// Everything captured at one sample instant.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetrySample {
+    pub t: f64,
+    /// Waiting requests per class (classes in SLO order).
+    pub waiting: Vec<(SloClass, i64)>,
+    /// Alive instances, id order.
+    pub instances: Vec<InstanceSample>,
+    pub active: usize,
+    pub warming: usize,
+    pub draining: usize,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// Classes admission control is currently shedding.
+    pub shedding: Vec<SloClass>,
+    pub sched: SchedMix,
+    /// Event-core wake dedup counters (honored, stale-dropped).
+    pub wakes_honored: u64,
+    pub wakes_stale: u64,
+}
+
+impl TelemetrySample {
+    /// Render as one JSON line (flat except for the named sub-objects).
+    pub fn to_json_line(&self) -> String {
+        let waiting: Vec<String> = self
+            .waiting
+            .iter()
+            .map(|(c, n)| format!(r#""{}":{}"#, c.name(), n))
+            .collect();
+        let instances: Vec<String> = self
+            .instances
+            .iter()
+            .map(|i| {
+                format!(
+                    r#"{{"id":{},"model":{},"running":{},"swapped":{},"kv":{}}}"#,
+                    i.id,
+                    i.model.map_or("null".into(), |m| m.to_string()),
+                    i.running,
+                    i.swapped,
+                    json::f(i.kv)
+                )
+            })
+            .collect();
+        let shedding: Vec<String> =
+            self.shedding.iter().map(|c| format!(r#""{}""#, c.name())).collect();
+        format!(
+            r#"{{"t":{},"waiting":{{{}}},"instances":[{}],"fleet":{{"active":{},"warming":{},"draining":{},"scale_ups":{},"scale_downs":{}}},"admission":{{"shedding":[{}]}},"sched":{},"wakes":{{"honored":{},"stale":{}}}}}"#,
+            json::f(self.t),
+            waiting.join(","),
+            instances.join(","),
+            self.active,
+            self.warming,
+            self.draining,
+            self.scale_ups,
+            self.scale_downs,
+            shedding.join(","),
+            self.sched.to_json(),
+            self.wakes_honored,
+            self.wakes_stale
+        )
+    }
+}
+
+/// The sampler's accumulated output plus its cadence state.
+#[derive(Debug)]
+pub struct TelemetryLog {
+    /// Sampling period in simulated seconds.
+    pub every_s: f64,
+    /// Next sample boundary (the engine samples every boundary ≤ the
+    /// event about to be processed, so quiet stretches still sample).
+    pub next_s: f64,
+    lines: Vec<String>,
+    samples: usize,
+}
+
+impl TelemetryLog {
+    pub fn new(every_s: f64) -> Self {
+        // First sample at t = every_s: a t = 0 sample would observe the
+        // fleet mid-construction and say nothing.
+        TelemetryLog { every_s, next_s: every_s, lines: Vec::new(), samples: 0 }
+    }
+
+    pub fn record(&mut self, sample: &TelemetrySample) {
+        self.lines.push(sample.to_json_line());
+        self.samples += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples == 0
+    }
+
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::with_capacity(self.lines.len() * 160);
+        for line in &self.lines {
+            out.push_str(line);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_renders_stable_json() {
+        let s = TelemetrySample {
+            t: 10.0,
+            waiting: vec![(SloClass::Interactive, 3), (SloClass::Batch1, 0)],
+            instances: vec![InstanceSample { id: 0, model: Some(1), running: 12, swapped: 2, kv: 0.43 }],
+            active: 1,
+            warming: 0,
+            draining: 0,
+            scale_ups: 2,
+            scale_downs: 1,
+            shedding: vec![SloClass::Batch2],
+            sched: SchedMix { passes: 5, full: 1, delta: 4, ..Default::default() },
+            wakes_honored: 9,
+            wakes_stale: 1,
+        };
+        let line = s.to_json_line();
+        assert!(line.starts_with(r#"{"t":10.000000,"waiting":{"interactive":3,"batch-1":0}"#));
+        assert!(line.contains(r#""instances":[{"id":0,"model":1,"running":12,"swapped":2,"kv":0.430000}]"#));
+        assert!(line.contains(r#""fleet":{"active":1,"warming":0,"draining":0,"scale_ups":2,"scale_downs":1}"#));
+        assert!(line.contains(r#""admission":{"shedding":["batch-2"]}"#));
+        assert!(line.contains(r#""sched":{"passes":5,"full":1,"delta":4"#));
+        assert!(line.ends_with(r#""wakes":{"honored":9,"stale":1}}"#));
+    }
+
+    #[test]
+    fn absorb_classifies_passes_and_snapshots_memo() {
+        let mut mix = SchedMix::default();
+        mix.absorb(&crate::baselines::PassStats {
+            incremental: false,
+            groups: 10,
+            dirty: 0,
+            touched_instances: 0,
+            milp_nodes: 7,
+            crossings_drained: 0,
+            memo_hits: 4,
+            memo_misses: 6,
+        });
+        mix.absorb(&crate::baselines::PassStats {
+            incremental: true,
+            groups: 10,
+            dirty: 3,
+            touched_instances: 2,
+            milp_nodes: 0,
+            crossings_drained: 5,
+            memo_hits: 9,
+            memo_misses: 7,
+        });
+        assert_eq!(mix.passes, 2);
+        assert_eq!(mix.full, 1);
+        assert_eq!(mix.delta, 1);
+        assert_eq!(mix.dirty, 3);
+        assert_eq!(mix.milp_nodes, 7);
+        assert_eq!(mix.crossings_drained, 5);
+        assert_eq!((mix.memo_hits, mix.memo_misses), (9, 7));
+    }
+
+    #[test]
+    fn log_cadence_starts_after_zero() {
+        let log = TelemetryLog::new(5.0);
+        assert_eq!(log.next_s, 5.0);
+        assert!(log.is_empty());
+    }
+}

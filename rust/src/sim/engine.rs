@@ -53,6 +53,7 @@ use crate::coordinator::scheduler::{InstanceView, SchedulerConfig, SolverKind};
 use crate::coordinator::virtual_queue::VirtualQueue;
 use crate::coordinator::GlobalQueue;
 use crate::metrics::{collect_records, instance_metrics, RunMetrics};
+use crate::obs::{InstanceSample, ObsConfig, ObsReport, ObsState, TelemetrySample, TraceEventKind};
 use crate::sim::event::{EventCore, EventKind};
 use crate::sim::fleet_controller::{static_pinning, FleetController};
 use crate::sim::profiler::{conservative_profiles, ThetaCache};
@@ -109,6 +110,10 @@ pub struct SimConfig {
     /// the engine may migrate a request at. `None` = no slicing, except
     /// under the `chunked` policy which defaults to its slice length.
     pub slice_tokens: Option<u32>,
+    /// Observability: flight recorder + telemetry sampler + RWT ledger.
+    /// Default off; when off the engine allocates no observer state and
+    /// every hook is a single skipped `if let`.
+    pub obs: ObsConfig,
 }
 
 impl SimConfig {
@@ -129,6 +134,7 @@ impl SimConfig {
             admission: AdmissionConfig::default(),
             chunk_tokens: None,
             slice_tokens: None,
+            obs: ObsConfig::default(),
         }
     }
 
@@ -221,6 +227,11 @@ pub struct Simulation {
     /// instead of a scan of the live group table; `BTreeSet` keeps the
     /// lowest-id-wins rule of the scan it replaces.
     open_groups: BTreeMap<(ModelId, SloClass, bool), BTreeSet<GroupId>>,
+    /// Observability state (flight recorder + telemetry + RWT ledger).
+    /// `None` when disabled — the hooks are then a skipped `if let`
+    /// each, so the hot path pays nothing. The observer records; it
+    /// never feeds back into scheduling decisions.
+    obs: Option<Box<ObsState>>,
 }
 
 impl Simulation {
@@ -262,6 +273,7 @@ impl Simulation {
             .map(|c| {
                 let mut inst = Instance::new(c.clone(), cfg.catalog.clone());
                 inst.set_token_knobs(chunk_tokens, slice_tokens);
+                inst.set_trace_chunks(cfg.obs.trace);
                 inst
             })
             .collect();
@@ -312,6 +324,7 @@ impl Simulation {
             views_cache: Vec::new(),
             pool,
             open_groups: BTreeMap::new(),
+            obs: cfg.obs.enabled().then(|| Box::new(ObsState::new(&cfg.obs))),
             cfg,
         };
         sim.build_views();
@@ -408,7 +421,14 @@ impl Simulation {
     }
 
     /// Run to completion (all requests served) or the horizon.
-    pub fn run(mut self, trace: &Trace) -> RunMetrics {
+    pub fn run(self, trace: &Trace) -> RunMetrics {
+        self.run_with_obs(trace).0
+    }
+
+    /// [`run`](Self::run), also returning the observability report when
+    /// the config enabled tracing or telemetry (`None` otherwise). The
+    /// observer only records — metrics are bit-identical either way.
+    pub fn run_with_obs(mut self, trace: &Trace) -> (RunMetrics, Option<ObsReport>) {
         let total = trace.len();
         while let Some(ev) = self.clock.pop() {
             if ev.t > self.cfg.horizon_s {
@@ -426,6 +446,7 @@ impl Simulation {
                 }
                 break;
             }
+            self.sample_telemetry_until(ev.t);
             self.clock.now = ev.t;
             match ev.kind {
                 EventKind::Arrival(i) => self.on_arrival(&trace.requests[i]),
@@ -446,7 +467,63 @@ impl Simulation {
                 break;
             }
         }
-        self.finish()
+        let obs = self.obs.take();
+        let metrics = self.finish();
+        (metrics, obs.map(|o| o.into_report()))
+    }
+
+    /// Telemetry sampler: emit one fleet snapshot per elapsed cadence
+    /// tick in `(clock.now, t]`. Driven from the single-threaded event
+    /// loop *before* the clock advances, so samples land at the same
+    /// simulated instants regardless of `--threads` and re-runs.
+    fn sample_telemetry_until(&mut self, t: f64) {
+        let Some(obs) = self.obs.as_deref_mut() else {
+            return;
+        };
+        let Some(tel) = obs.telemetry.as_mut() else {
+            return;
+        };
+        while tel.next_s <= t {
+            let ts = tel.next_s;
+            tel.next_s += tel.every_s;
+            let (active, warming, draining) = self.fleet.occupancy_counts();
+            let (scale_ups, scale_downs) = self.fleet.scale_stats();
+            let (wakes_honored, wakes_stale) = self.clock.wake_stats();
+            let instances = self
+                .fleet
+                .alive_ids()
+                .into_iter()
+                .map(|id| {
+                    let inst = self.fleet.inst(id);
+                    InstanceSample {
+                        id: id.0,
+                        model: inst.active_model().map(|m| m.0),
+                        running: inst.running_len(),
+                        swapped: inst.swapped_len(),
+                        kv: inst.kv_utilization(),
+                    }
+                })
+                .collect();
+            let shedding = SloClass::ALL
+                .iter()
+                .copied()
+                .filter(|&c| self.fleet.admission.should_shed(c))
+                .collect();
+            tel.record(&TelemetrySample {
+                t: ts,
+                waiting: self.fleet.waiting_by_class(),
+                instances,
+                active,
+                warming,
+                draining,
+                scale_ups,
+                scale_downs,
+                shedding,
+                sched: obs.sched,
+                wakes_honored,
+                wakes_stale,
+            });
+        }
     }
 
     /// Adjust the per-(class, model) waiting counter for request `rid`.
@@ -467,10 +544,44 @@ impl Simulation {
         if self.fleet.admission.should_shed(tr.class) {
             self.queue.shed(id);
             self.fleet.admission.note_shed_submit();
+            if let Some(obs) = self.obs.as_deref_mut() {
+                obs.record(self.clock.now, id, TraceEventKind::Shed);
+            }
             return;
         }
         // audit:allow(hot-path-panic): `id` was returned by `submit` just above.
         let req = self.queue.get(id).unwrap().clone();
+        // Flight recorder: stamp the submit, with the RWT the estimator
+        // would quote *now* (before this request joins the waiting
+        // counters) — the ledger joins it against the actual wait at
+        // first pull.
+        if let Some(obs) = self.obs.as_deref_mut() {
+            let predicted = if obs.trace {
+                crate::obs::predict_wait(
+                    &self.views_cache,
+                    &self.profiles,
+                    req.model,
+                    req.class,
+                    req.mega,
+                    self.fleet.waiting_for_model(req.model),
+                )
+            } else {
+                None
+            };
+            if let Some(p) = predicted {
+                obs.ledger.note_predicted(id, req.class, p);
+            }
+            obs.record(
+                self.clock.now,
+                id,
+                TraceEventKind::Submitted {
+                    model: req.model,
+                    class: req.class,
+                    mega: req.mega,
+                    predicted_wait_s: predicted,
+                },
+            );
+        }
         self.note_waiting(id, 1);
         // Group formation (§4).
         let gid = if self.cfg.policy.uses_groups() {
@@ -652,18 +763,58 @@ impl Simulation {
         let out = self.fleet.inst_mut(id).step(now);
         for (rid, t) in &out.first_tokens {
             self.queue.record_first_token(*rid, *t);
+            if let Some(obs) = self.obs.as_deref_mut() {
+                if let Some(r) = self.queue.get(*rid) {
+                    obs.record(
+                        *t,
+                        *rid,
+                        TraceEventKind::FirstToken { inst: id, ttft_s: *t - r.arrival_s },
+                    );
+                }
+            }
+        }
+        // Prefill chunk events only exist when tracing (the instance
+        // collects them behind its own `trace_chunks` flag).
+        if let Some(obs) = self.obs.as_deref_mut() {
+            for &(rid, tokens) in &out.prefill_chunks {
+                obs.record(now, rid, TraceEventKind::PrefillChunk { inst: id, tokens });
+            }
         }
         let t_done = self.clock.now + out.dt;
         for seq in out.completed {
             self.queue
                 .complete(seq.req_id, seq.first_token_at, t_done, seq.generated);
             self.on_request_done(seq.req_id, id);
+            if let Some(obs) = self.obs.as_deref_mut() {
+                obs.record(
+                    t_done,
+                    seq.req_id,
+                    TraceEventKind::Completed {
+                        inst: id,
+                        generated: seq.generated,
+                        e2e_s: t_done - seq.arrival_s,
+                    },
+                );
+            }
         }
         // Slice boundaries are the migration points: a sequence whose
         // decode slice just expired may be displaced — through the same
         // evict/restore KV path the eviction LSO uses — when queued work
         // is starved for admission space on this instance.
         if !out.slice_expired.is_empty() {
+            if let Some(obs) = self.obs.as_deref_mut() {
+                for &rid in &out.slice_expired {
+                    let generated = self
+                        .fleet
+                        .inst(id)
+                        .running()
+                        .iter()
+                        .find(|s| s.req_id == rid)
+                        .map(|s| s.generated)
+                        .unwrap_or(0);
+                    obs.record(t_done, rid, TraceEventKind::DecodeSlice { inst: id, generated });
+                }
+            }
             self.migrate_expired_slices(id, &out.slice_expired);
         }
         if out.dt > 0.0 {
@@ -687,6 +838,9 @@ impl Simulation {
                         if let Some(&g) = self.group_of.get(&seq.req_id) {
                             self.dirty_groups.insert(g);
                         }
+                        if let Some(obs) = self.obs.as_deref_mut() {
+                            obs.record(now, seq.req_id, TraceEventKind::Swapped { inst: id, model });
+                        }
                     }
                     // Warm-set update from the vq's model order (§5).
                     let order: Vec<ModelId> = {
@@ -705,6 +859,13 @@ impl Simulation {
                         self.note_waiting(seq.req_id, 1);
                         if let Some(&g) = self.group_of.get(&seq.req_id) {
                             self.dirty_groups.insert(g);
+                        }
+                        if let Some(obs) = self.obs.as_deref_mut() {
+                            obs.record(
+                                now,
+                                seq.req_id,
+                                TraceEventKind::Evicted { inst: id, generated: seq.generated },
+                            );
                         }
                     }
                     self.needs_schedule = true;
@@ -727,14 +888,34 @@ impl Simulation {
                         slice_left: 0,
                     };
                     let now = self.clock.now;
-                    let res = if r.evicted_from == Some(id) {
+                    let arrival_s = r.arrival_s;
+                    let restore = r.evicted_from == Some(id);
+                    let res = if restore {
                         self.fleet.inst_mut(id).try_restore(seq, now)
                     } else {
                         self.fleet.inst_mut(id).try_admit(seq, now)
                     };
                     if res.is_ok() {
                         self.note_waiting(request, -1);
-                        self.queue.mark_running(request);
+                        let prior = self.queue.mark_running(request);
+                        // Flight recorder: a pull out of `Waiting` is the
+                        // request's *first* service — the edge the RWT
+                        // ledger joins predicted-vs-actual wait on. Pulls
+                        // out of `Evicted` are re-admissions: a cheap
+                        // restore onto the evicting instance, or a
+                        // recompute pull elsewhere.
+                        if let Some(obs) = self.obs.as_deref_mut() {
+                            let wait_s = now - arrival_s;
+                            let kind = if restore {
+                                TraceEventKind::Restored { inst: id, wait_s }
+                            } else {
+                                TraceEventKind::Pulled { inst: id, wait_s }
+                            };
+                            obs.record(now, request, kind);
+                            if prior == Some(RequestState::Waiting) {
+                                obs.ledger.note_actual(request, wait_s);
+                            }
+                        }
                         // The group's earliest *unserved* member may have
                         // changed — re-anchor it at the next pass.
                         if let Some(&g) = self.group_of.get(&request) {
@@ -785,6 +966,13 @@ impl Simulation {
                 if let Some(&g) = self.group_of.get(&seq.req_id) {
                     self.dirty_groups.insert(g);
                 }
+                if let Some(obs) = self.obs.as_deref_mut() {
+                    obs.record(
+                        now,
+                        seq.req_id,
+                        TraceEventKind::Evicted { inst: id, generated: seq.generated },
+                    );
+                }
             }
             self.needs_schedule = true;
         }
@@ -830,6 +1018,7 @@ impl Simulation {
             self.cfg.effective_slice_tokens(),
         );
         self.fleet.inst_mut(id).set_token_knobs(chunk, slice);
+        self.fleet.inst_mut(id).set_trace_chunks(self.cfg.obs.trace);
         self.vqs.push(VirtualQueue::new(id));
         self.agents.push(QlmAgent::new(id, self.cfg.policy.lso()));
         self.clock.add_instance();
@@ -934,6 +1123,9 @@ impl Simulation {
                     self.note_waiting(rid, -1);
                     self.group_of.remove(&rid);
                     shed += 1;
+                    if let Some(obs) = self.obs.as_deref_mut() {
+                        obs.record(self.clock.now, rid, TraceEventKind::Shed);
+                    }
                 }
             }
             self.fleet.admission.note_shed_unservable(shed);
@@ -1072,6 +1264,11 @@ impl Simulation {
             };
             self.policy.plan(&ctx)
         };
+        // Pass-mix telemetry: fold the policy's reported stats into the
+        // cumulative mix (observation only; never feeds back).
+        if let (Some(obs), Some(stats)) = (self.obs.as_deref_mut(), plan.stats.as_ref()) {
+            obs.sched.absorb(stats);
+        }
         let touched: Vec<InstanceId> = plan.orders.keys().copied().collect();
         for (id, order) in plan.orders {
             self.vqs[id.0 as usize].set_order(order);

@@ -430,4 +430,50 @@ impl FleetController {
             .map(|a| (a.scale_ups, a.scale_downs))
             .unwrap_or((0, 0))
     }
+
+    // ---- telemetry accessors (observability layer; read-only) ----
+
+    /// Waiting (+ evicted) requests per class, folded over the
+    /// incremental backlog counters. Every class appears, zero included,
+    /// so telemetry rows have a fixed shape.
+    pub fn waiting_by_class(&self) -> Vec<(SloClass, i64)> {
+        let mut out: Vec<(SloClass, i64)> = SloClass::ALL.iter().map(|&c| (c, 0)).collect();
+        for (&(c, _, _), &n) in &self.waiting_by {
+            if n > 0 {
+                out[c.index()].1 += n;
+            }
+        }
+        out
+    }
+
+    /// Waiting (+ evicted) requests targeting `model`, across classes —
+    /// the fleet-level queue depth the RWT ledger predicts against.
+    pub fn waiting_for_model(&self, model: ModelId) -> u64 {
+        self.waiting_by
+            .iter()
+            .filter(|(&(_, m, _), &n)| m == model && n > 0)
+            .map(|(_, &n)| n as u64)
+            .sum()
+    }
+
+    /// (active, warming, draining) instance counts — the same tallies
+    /// `capacity_tick` computes, exposed for the telemetry sampler.
+    pub fn occupancy_counts(&self) -> (usize, usize, usize) {
+        let active = (0..self.instances.len())
+            .filter(|&i| self.alive[i] && !self.draining[i])
+            .count();
+        let draining = (0..self.instances.len())
+            .filter(|&i| self.alive[i] && self.draining[i])
+            .count();
+        (active, self.warming as usize, draining)
+    }
+
+    /// Ids of alive instances, ascending — the telemetry sampler's
+    /// iteration domain.
+    pub fn alive_ids(&self) -> Vec<InstanceId> {
+        (0..self.instances.len())
+            .filter(|&i| self.alive[i])
+            .map(|i| InstanceId(i as u32))
+            .collect()
+    }
 }

@@ -26,6 +26,12 @@ const FIXTURES: &[(&str, &str, Option<Rule>)] = &[
     ("hash_collections_waived.rs", "src/sim/fixture.rs", None),
     ("wall_clock_bad.rs", "src/sim/fixture.rs", Some(Rule::WallClock)),
     ("wall_clock_waived.rs", "src/sim/fixture.rs", None),
+    // The determinism rules extend to the reporting layers (metrics/,
+    // figures/, obs/) — same fixtures, scanned under the new paths.
+    ("hash_collections_metrics_bad.rs", "src/metrics/fixture.rs", Some(Rule::HashCollections)),
+    ("hash_collections_bad.rs", "src/obs/fixture.rs", Some(Rule::HashCollections)),
+    ("wall_clock_bad.rs", "src/figures/fixture.rs", Some(Rule::WallClock)),
+    ("wall_clock_figures_waived.rs", "src/figures/fixture.rs", None),
     ("thread_confinement_bad.rs", "src/sim/fixture.rs", Some(Rule::ThreadConfinement)),
     ("thread_confinement_waived.rs", "src/sim/fixture.rs", None),
     // Carries a SAFETY: comment so only the confinement rule fires.

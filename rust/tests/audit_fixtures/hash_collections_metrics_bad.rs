@@ -1,0 +1,10 @@
+// Scanned under a pretend src/metrics/ path: the reporting layers are
+// inside the hash-collections scope (their tables must iterate in a
+// stable order), so this fires exactly like sim/ code would.
+pub fn ttft_histogram(xs: &[u32]) -> std::collections::HashMap<u32, u32> {
+    let mut h = std::collections::HashMap::new();
+    for &x in xs {
+        *h.entry(x).or_insert(0) += 1;
+    }
+    h
+}

@@ -1,0 +1,159 @@
+//! Trace-determinism suite for the observability subsystem (tier-2).
+//!
+//! The flight recorder's contract is stronger than "the metrics don't
+//! change": the exported JSONL itself must be *byte-identical* across
+//! re-runs and `--threads` lane counts (events are recorded on the
+//! event-loop thread in dispatch order, floats render at fixed width),
+//! and turning observability on must leave the golden metrics digest
+//! bit-identical to a run with it off (the observer records, it never
+//! steers). Both halves are asserted here on the same scenario shapes
+//! the golden suite pins — scale (steady-state incremental scheduling)
+//! and autoscale (provision/drain churn).
+
+use qlm::baselines::Policy;
+use qlm::metrics::RunMetrics;
+use qlm::obs::{ObsConfig, ObsReport, ReportOptions};
+use qlm::sim::Simulation;
+use qlm::workload::{Scenario, ScenarioKnobs, Trace};
+
+/// One scenario run with the given observability config (mirrors the
+/// golden suite's `run_scenario`, plus the obs knobs).
+fn run_obs(
+    scenario: Scenario,
+    policy: Policy,
+    requests: usize,
+    threads: usize,
+    obs: ObsConfig,
+) -> (RunMetrics, Option<ObsReport>) {
+    let knobs = ScenarioKnobs {
+        rate: scenario.default_rate(),
+        requests,
+        fleet: scenario.default_fleet(),
+        seed: 42,
+    };
+    let run = scenario.build(&knobs);
+    let trace = Trace::generate(&run.spec, knobs.seed);
+    let mut cfg = run.sim_config(policy);
+    cfg.seed = knobs.seed;
+    cfg.threads = threads;
+    cfg.obs = obs;
+    Simulation::new(cfg, &trace).run_with_obs(&trace)
+}
+
+fn full_obs() -> ObsConfig {
+    ObsConfig {
+        trace: true,
+        telemetry_every_s: Some(10.0),
+    }
+}
+
+#[test]
+fn same_seed_produces_byte_identical_jsonl() {
+    let (_, a) = run_obs(Scenario::MixedSlo, Policy::qlm(), 400, 1, full_obs());
+    let (_, b) = run_obs(Scenario::MixedSlo, Policy::qlm(), 400, 1, full_obs());
+    let (a, b) = (a.expect("obs enabled"), b.expect("obs enabled"));
+    assert!(!a.trace_jsonl.is_empty(), "trace recorded nothing");
+    assert_eq!(a.trace_jsonl, b.trace_jsonl, "trace bytes differ run-to-run");
+    assert_eq!(
+        a.telemetry_jsonl, b.telemetry_jsonl,
+        "telemetry bytes differ run-to-run"
+    );
+    // The lifecycle kinds a mixed-SLO run must exercise.
+    for kind in ["submitted", "pulled", "first-token", "completed"] {
+        assert!(
+            a.trace_jsonl.contains(&format!(r#""ev":"{kind}""#)),
+            "no {kind} events in the trace"
+        );
+    }
+}
+
+#[test]
+fn threads_do_not_change_trace_bytes() {
+    // The scale shape at test size: every pooled lane count must export
+    // the identical trace and telemetry bytes to the serial run — the
+    // recorder sits on the single-threaded event loop, so lane count
+    // must be invisible in the JSONL, not merely in the metrics.
+    let (serial_m, serial) = run_obs(Scenario::Scale, Policy::qlm(), 1200, 1, full_obs());
+    let serial = serial.expect("obs enabled");
+    for threads in [2, 4] {
+        let (par_m, par) = run_obs(Scenario::Scale, Policy::qlm(), 1200, threads, full_obs());
+        let par = par.expect("obs enabled");
+        assert_eq!(serial_m.digest(), par_m.digest(), "threads={threads}");
+        assert_eq!(
+            serial.trace_jsonl, par.trace_jsonl,
+            "threads={threads} changed the trace bytes"
+        );
+        assert_eq!(
+            serial.telemetry_jsonl, par.telemetry_jsonl,
+            "threads={threads} changed the telemetry bytes"
+        );
+    }
+}
+
+#[test]
+fn tracing_on_leaves_golden_digests_unchanged() {
+    // Record-never-steer, asserted end to end: a run with the recorder,
+    // sampler, and ledger all on must produce the bit-identical metrics
+    // digest of a run with observability off — on both golden shapes
+    // (scale: steady state; autoscale: provision/drain churn).
+    for (scenario, requests) in [(Scenario::Scale, 1200), (Scenario::Autoscale, 1000)] {
+        let (off, no_report) = run_obs(scenario, Policy::qlm(), requests, 1, ObsConfig::default());
+        assert!(no_report.is_none(), "disabled obs must allocate no state");
+        let (on, report) = run_obs(scenario, Policy::qlm(), requests, 1, full_obs());
+        assert!(report.is_some());
+        assert_eq!(
+            off.digest(),
+            on.digest(),
+            "observability changed {} metrics",
+            scenario.name()
+        );
+    }
+}
+
+#[test]
+fn ledger_joins_and_report_renders_rwt_table() {
+    let (_, report) = run_obs(Scenario::MixedSlo, Policy::qlm(), 400, 1, full_obs());
+    let report = report.expect("obs enabled");
+    assert!(
+        !report.rwt_errors.is_empty(),
+        "no predicted/actual RWT pairs joined"
+    );
+    for e in &report.rwt_errors {
+        assert!(e.n > 0);
+        assert!(e.mae_s.is_finite() && e.mae_s >= 0.0);
+        assert!(e.p90_s.is_finite() && e.p90_s >= 0.0);
+    }
+    // The offline report replays the same join from the trace bytes.
+    let rendered = qlm::obs::render(
+        &report.trace_jsonl,
+        &ReportOptions {
+            req: None,
+            timelines: 2,
+        },
+    );
+    assert!(rendered.contains("RWT prediction error"));
+    assert!(rendered.contains("mae_s"));
+    assert!(rendered.contains("interactive"));
+    assert!(rendered.contains("timeline"));
+    // Pass-mix counters flowed through the policy seam.
+    assert!(report.sched.passes > 0, "no scheduler passes absorbed");
+    assert_eq!(report.sched.passes, report.sched.full + report.sched.delta);
+}
+
+#[test]
+fn telemetry_samples_on_fixed_simulated_cadence() {
+    let (_, report) = run_obs(Scenario::MixedSlo, Policy::qlm(), 400, 1, full_obs());
+    let telemetry = report.expect("obs enabled").telemetry_jsonl.expect("cadence set");
+    assert!(!telemetry.is_empty(), "sampler fired never");
+    let mut prev = 0.0f64;
+    for line in telemetry.lines() {
+        let t = qlm::obs::json::field_f64(line, "t").expect("sample has a timestamp");
+        assert!(t > prev, "samples must advance strictly in sim time");
+        // Boundaries are exact multiples of the 10 s cadence.
+        assert!(
+            (t / 10.0 - (t / 10.0).round()).abs() < 1e-9,
+            "sample at t={t} is off-cadence"
+        );
+        prev = t;
+    }
+}
