@@ -12,7 +12,6 @@
 //! step loop, and the PJRT decode step (feature "pjrt", artifacts
 //! required).
 
-use std::collections::VecDeque;
 use std::time::Instant;
 
 use qlm::backend::{
@@ -28,6 +27,7 @@ use qlm::coordinator::scheduler::{
     GlobalScheduler, InstanceView, SchedDelta, SchedulerConfig, SolverKind,
 };
 use qlm::coordinator::GlobalQueue;
+use qlm::sim::event::{EventCore, EventKind};
 use qlm::sim::{fleet_a100, SimConfig, Simulation};
 use qlm::util::{mean, stddev};
 use qlm::obs::ObsConfig;
@@ -120,6 +120,44 @@ mod perf_log {
     }
 }
 
+/// Counting global allocator: every heap allocation (and growth
+/// realloc) bumps one relaxed counter, so a bench can report
+/// *allocations per pass* for the hot paths the `hot-loop-alloc` audit
+/// rule guards (`cargo bench -- hot_alloc`). Frees are not counted —
+/// the churn signal is how often the path asks the allocator for
+/// memory, not its balance.
+mod alloc_count {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+    pub struct Counting;
+
+    // SAFETY: delegates verbatim to `System`; the only addition is a
+    // relaxed atomic increment, which allocates nothing itself.
+    unsafe impl GlobalAlloc for Counting {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            unsafe { System.alloc(layout) }
+        }
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            unsafe { System.dealloc(ptr, layout) }
+        }
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            unsafe { System.realloc(ptr, layout, new_size) }
+        }
+    }
+
+    pub fn allocs() -> u64 {
+        ALLOCS.load(Ordering::Relaxed)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: alloc_count::Counting = alloc_count::Counting;
+
 fn grp(id: u64, model: u32, n: usize, slo: f64) -> RequestGroup {
     RequestGroup {
         id: GroupId(id),
@@ -127,7 +165,7 @@ fn grp(id: u64, model: u32, n: usize, slo: f64) -> RequestGroup {
         class: SloClass::Batch1,
         slo: SloTarget::new(slo, 1.0),
         earliest_arrival_s: 0.0,
-        members: VecDeque::from_iter(0..n as u64),
+        members: (0..n as u64).collect(),
         mega: false,
     }
 }
@@ -413,6 +451,7 @@ fn bench_sched_incremental() {
         dirty: vec![],
         removed: vec![],
         total_groups: N_GROUPS,
+        groups: None,
     };
     let a = inc.try_schedule_delta(&empty, &vs, 0.0).expect("warm cache");
     assert!(a.orders.is_empty(), "unchanged inputs must change nothing");
@@ -435,6 +474,7 @@ fn bench_sched_incremental() {
             dirty,
             removed: vec![],
             total_groups: N_GROUPS,
+            groups: None,
         };
         let a = inc.try_schedule_delta(&d, &vs, 0.0).expect("delta path");
         a.stats.dirty as u64
@@ -534,6 +574,7 @@ fn bench_dirty_frac_sweep() {
                     dirty,
                     removed: vec![],
                     total_groups: N_GROUPS,
+                    groups: None,
                 };
                 let a = inc.try_schedule_delta(&d, &vs, 0.0).expect("delta path");
                 a.stats.dirty as u64
@@ -865,6 +906,192 @@ fn bench_obs() {
     );
 }
 
+fn xorshift(s: &mut u64) -> u64 {
+    *s ^= *s << 13;
+    *s ^= *s >> 7;
+    *s ^= *s << 17;
+    *s
+}
+
+/// Drive one `EventCore` through the steady-state shape of a serving
+/// run: `n` arrivals spread over a 2 h horizon (millisecond resolution,
+/// so duplicate timestamps occur), then a drain where every fourth pop
+/// pushes a near-future wake — the pop→push interleave the engine's
+/// iteration loop produces. Returns (pops, FNV digest over the popped
+/// `(t, seq)` stream) so wheel and heap runs can be compared exactly.
+fn drive_clock(core: &mut EventCore, n: usize) -> (u64, u64) {
+    let mut seed = 0x517c_c1b7_2722_0a95u64;
+    for i in 0..n {
+        let t = (xorshift(&mut seed) % 7_200_000) as f64 / 1000.0;
+        core.push(t, EventKind::Arrival(i));
+    }
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut pops = 0u64;
+    let mut extra = n / 4;
+    while let Some(e) = core.pop() {
+        h ^= e.t.to_bits();
+        h = h.wrapping_mul(0x100000001b3);
+        h ^= e.seq;
+        h = h.wrapping_mul(0x100000001b3);
+        pops += 1;
+        if extra > 0 && pops % 4 == 0 {
+            extra -= 1;
+            let dt = (xorshift(&mut seed) % 2_000) as f64 / 1000.0;
+            core.push(e.t + dt, EventKind::Wake(InstanceId(0)));
+        }
+    }
+    (pops, h)
+}
+
+/// The tentpole clock claim: the two-level timer wheel vs the
+/// `BinaryHeap` it replaced, at the megascale event count. Digest
+/// equality over the full 1.25M-pop stream is the hard gate; the wall
+/// times feed the CI `event_core speedup` floor (>= 2x).
+fn bench_event_core() {
+    const N: usize = 1_000_000;
+    let mut wheel = EventCore::new(1);
+    let mut heap = EventCore::new_heap_baseline(1);
+    let (wheel_pops, wheel_digest) = drive_clock(&mut wheel, N);
+    let (heap_pops, heap_digest) = drive_clock(&mut heap, N);
+    assert_eq!(wheel_pops, heap_pops, "wheel and heap popped different event counts");
+    assert_eq!(
+        wheel_digest,
+        heap_digest,
+        "wheel pop order diverged from the (t, seq) heap order"
+    );
+    let wheel_ms = bench("event_core/wheel 1M arrivals + wakes", 3, || {
+        let mut c = EventCore::new(1);
+        drive_clock(&mut c, N).0
+    });
+    let heap_ms = bench("event_core/heap  1M arrivals + wakes", 3, || {
+        let mut c = EventCore::new_heap_baseline(1);
+        drive_clock(&mut c, N).0
+    });
+    let speedup = heap_ms / wheel_ms.max(1e-9);
+    let events_per_sec = wheel_pops as f64 / (wheel_ms / 1000.0).max(1e-9);
+    println!(
+        "event_core speedup: {speedup:.1}x wheel vs heap at {wheel_pops} events \
+         ({heap_ms:.1} ms -> {wheel_ms:.1} ms, target >= 2x)"
+    );
+    perf_log::record("event_core_wheel_ms", wheel_ms);
+    perf_log::record("event_core_heap_ms", heap_ms);
+    perf_log::record("event_core_speedup_x", speedup);
+    perf_log::record("events_per_sec", events_per_sec);
+}
+
+/// Allocation census of the steady-state scheduler pass (the paths the
+/// `hot-loop-alloc` audit rule marks): a warm 4-dirty delta pass over
+/// the 1562-group cached plan, and the per-instance view refresh. The
+/// counting global allocator reports how many times each pass asks the
+/// allocator for memory; `alloc_per_pass` lands in `BENCH_qlm.json` so
+/// scratch-buffer regressions show up as a diffable number.
+fn bench_hot_alloc() {
+    let catalog = ModelCatalog::paper_multi_model();
+    let est = RwtEstimator::new(ProfileTable::default());
+    let vs = views(10, &catalog);
+    const N_GROUPS: usize = 1562;
+    let groups: Vec<RequestGroup> = (0..N_GROUPS as u64)
+        .map(|g| grp(g, (g % 4) as u32, 256, 60.0 + (g % 7) as f64 * 300.0))
+        .collect();
+    let refs: Vec<&RequestGroup> = groups.iter().collect();
+    let inc = GlobalScheduler::new(
+        SchedulerConfig {
+            solver: SolverKind::Greedy,
+            ..Default::default()
+        },
+        est,
+    );
+    inc.schedule(&refs, &vs, 0.0);
+    let mut cursor = 0usize;
+    let pass = |cursor: &mut usize| {
+        let dirty: Vec<&RequestGroup> =
+            (0..4).map(|k| &groups[(*cursor + k) % N_GROUPS]).collect();
+        *cursor = (*cursor + 4) % N_GROUPS;
+        let d = SchedDelta {
+            dirty,
+            removed: vec![],
+            total_groups: N_GROUPS,
+            groups: None,
+        };
+        inc.try_schedule_delta(&d, &vs, 0.0).expect("warm cache")
+    };
+    // Warm passes: scratch buffers and cached queues reach steady size.
+    for _ in 0..8 {
+        pass(&mut cursor);
+    }
+    const PASSES: u64 = 100;
+    let a0 = alloc_count::allocs();
+    for _ in 0..PASSES {
+        pass(&mut cursor);
+    }
+    let per_pass = (alloc_count::allocs() - a0) as f64 / PASSES as f64;
+
+    let trace = Trace::generate(&WorkloadSpec::w_a(ModelId(0), 20.0, 64), 7);
+    let cfg = SimConfig::new(fleet_a100(64), ModelCatalog::paper(), Policy::qlm());
+    let mut sim = Simulation::new(cfg, &trace);
+    for _ in 0..8 {
+        sim.refresh_views_for_bench();
+    }
+    let r0 = alloc_count::allocs();
+    for _ in 0..PASSES {
+        sim.refresh_views_for_bench();
+    }
+    let per_refresh = (alloc_count::allocs() - r0) as f64 / PASSES as f64;
+    println!(
+        "hot_alloc/delta pass (4 dirty, 1562 grp)     {per_pass:>9.1} allocs/pass \
+         (driver's own Vecs included)"
+    );
+    println!("hot_alloc/view refresh (64 instances)        {per_refresh:>9.1} allocs/pass");
+    perf_log::record("alloc_per_pass", per_pass);
+    perf_log::record("alloc_per_view_refresh", per_refresh);
+}
+
+/// Wall-clock budget for the full megascale run (generous: CI runners
+/// are slow and shared; a timer-wheel or arena regression blows it by
+/// an order of magnitude, not by percent).
+const MEGASCALE_BUDGET_S: f64 = 600.0;
+
+/// The 1M-request scale gate: generate and run `--scenario megascale`
+/// end to end, record the wall time, and fail if it blows the budget.
+/// Explicit-only (`cargo bench -- megascale`): a full-default bench run
+/// should not cost minutes. `QLM_SKIP_SCALE_GATE=1` skips the budget
+/// assert for known-slow hosts; the wall time is still recorded.
+fn bench_megascale() {
+    let scenario = Scenario::Megascale;
+    let knobs = ScenarioKnobs {
+        rate: scenario.default_rate(),
+        requests: scenario.requests_for(scenario.default_rate(), 7200.0),
+        fleet: scenario.default_fleet(),
+        seed: 7,
+    };
+    let run = scenario.build(&knobs);
+    let trace = Trace::generate(&run.spec, knobs.seed);
+    assert!(
+        trace.len() >= 1_000_000,
+        "megascale must be a 1M+ request trace, got {}",
+        trace.len()
+    );
+    let mut cfg = run.sim_config(Policy::qlm());
+    cfg.seed = knobs.seed;
+    let t0 = Instant::now();
+    let m = Simulation::new(cfg, &trace).run(&trace);
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "megascale/{} reqs end-to-end               {wall:>9.1} s wall ({} completed)",
+        trace.len(),
+        m.completed_count()
+    );
+    perf_log::record("megascale_wall_s", wall);
+    perf_log::record("megascale_requests", trace.len() as f64);
+    if std::env::var_os("QLM_SKIP_SCALE_GATE").is_none() {
+        assert!(
+            wall <= MEGASCALE_BUDGET_S,
+            "megascale run blew its wall-clock budget: {wall:.1} s > {MEGASCALE_BUDGET_S} s \
+             (set QLM_SKIP_SCALE_GATE=1 to waive on a known-slow host)"
+        );
+    }
+}
+
 #[cfg(feature = "pjrt")]
 fn bench_runtime_decode() {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
@@ -901,6 +1128,19 @@ fn main() {
     println!("qlm benchmarks (mean ± stddev over timed iterations)\n");
     if runs("queue") {
         bench_queue_hot_path();
+    }
+    if runs("event_core") {
+        bench_event_core();
+    }
+    if runs("hot_alloc") {
+        bench_hot_alloc();
+    }
+    // Explicit-only: the 1M-request end-to-end run costs minutes, so it
+    // never rides along on an unfiltered `cargo bench`.
+    if filter.as_deref() == Some("megascale") {
+        bench_megascale();
+    } else if filter.is_none() {
+        println!("megascale: run explicitly with `cargo bench -- megascale` (1M-request gate)");
     }
     if runs("rwt") {
         bench_rwt();

@@ -40,6 +40,7 @@ pub enum Rule {
     UnsafeConfinement,
     SafetyComment,
     HotPathPanic,
+    HotLoopAlloc,
     PricingSeam,
     WaiverHygiene,
 }
@@ -55,7 +56,7 @@ pub struct RuleInfo {
 }
 
 /// The rule table, in reporting order.
-pub const RULES: [RuleInfo; 8] = [
+pub const RULES: [RuleInfo; 9] = [
     RuleInfo {
         rule: Rule::HashCollections,
         id: "hash-collections",
@@ -149,6 +150,25 @@ pub const RULES: [RuleInfo; 8] = [
                   Fix: handle the failure arm (match/if-let/unwrap_or_else), replace \
                   float partial_cmp().unwrap() with total_cmp, or waive with \
                   `// audit:allow(hot-path-panic): <why this cannot fire>`.",
+    },
+    RuleInfo {
+        rule: Rule::HotLoopAlloc,
+        id: "hot-loop-alloc",
+        group: "architecture",
+        summary: "no Vec::new/.to_vec()/.clone()/.collect() inside `audit:hot-loop` \
+                  extents in sim/ + coordinator/",
+        explain: "The per-pass loops annotated `// audit:hot-loop` (the repricing \
+                  walk, the view digest, the timer-wheel drain) run per event or per \
+                  scheduler pass at megascale request counts, where a stray \
+                  per-iteration allocation dominates the profile (`cargo bench -- \
+                  hot_alloc` counts them). The rule is a heuristic: it flags the \
+                  allocation-shaped tokens Vec::new / .to_vec() / .clone() / \
+                  .collect() on any line inside a marked brace extent in sim/ and \
+                  coordinator/. #[cfg(test)] items are exempt.\n\
+                  Fix: hoist the allocation out of the loop (reused scratch buffer, \
+                  std::mem::take, in-place clear+extend), or — for a judged-\
+                  acceptable site — waive with \
+                  `// audit:allow(hot-loop-alloc): <why this allocation is fine>`.",
     },
     RuleInfo {
         rule: Rule::PricingSeam,
@@ -323,6 +343,7 @@ mod tests {
             Rule::UnsafeConfinement,
             Rule::SafetyComment,
             Rule::HotPathPanic,
+            Rule::HotLoopAlloc,
             Rule::PricingSeam,
             Rule::WaiverHygiene,
         ];

@@ -25,6 +25,16 @@ const DET_DIRS: [&str; 8] = [
 /// The scheduling hot path (hot-path-panic rule).
 const HOT_DIRS: [&str; 3] = ["src/sim/", "src/coordinator/", "src/baselines/"];
 
+/// Directories where `// audit:hot-loop` extents are honored
+/// (hot-loop-alloc rule): the simulation core and the scheduler.
+const ALLOC_DIRS: [&str; 2] = ["src/sim/", "src/coordinator/"];
+
+/// Allocation-shaped tokens the hot-loop-alloc rule flags inside a
+/// marked extent. Heuristic by design: `.collect::<` catches the
+/// turbofish spelling the plain `.collect(` pattern misses.
+const ALLOC_PATTERNS: [&str; 5] =
+    ["Vec::new(", ".to_vec()", ".clone()", ".collect(", ".collect::<"];
+
 /// The only files allowed to spawn or scope OS threads.
 const THREAD_OK: [&str; 2] = ["src/util/pool.rs", "src/util/par.rs"];
 
@@ -91,6 +101,51 @@ fn test_extents(lines: &[LineInfo]) -> Vec<bool> {
         li = lj + 1;
     }
     test
+}
+
+/// Mark every line inside an `// audit:hot-loop` brace extent: the
+/// marker's own line when it carries code (trailing marker on the loop
+/// header), else the next code-carrying line, through the close of that
+/// line's brace block. Same comment-aware depth counting as
+/// [`test_extents`], so braces in literals or comments cannot desync it.
+fn hot_loop_extents(lines: &[LineInfo]) -> Vec<bool> {
+    let mut hot = vec![false; lines.len()];
+    let mut li = 0;
+    while li < lines.len() {
+        if !lines[li].comment.contains("audit:hot-loop") {
+            li += 1;
+            continue;
+        }
+        let mut start = li;
+        while start < lines.len() && lines[start].code.trim().is_empty() {
+            start += 1;
+        }
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut lj = start;
+        while lj < lines.len() {
+            for c in lines[lj].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            lj += 1;
+        }
+        let end = lj.min(lines.len() - 1);
+        for h in hot.iter_mut().take(end + 1).skip(start) {
+            *h = true;
+        }
+        li = lj + 1;
+    }
+    hot
 }
 
 /// A parsed `audit:allow(<rule>): <reason>` annotation (well-formed or
@@ -183,6 +238,12 @@ pub(super) fn scan_lines(rel: &str, source: &str) -> (Vec<Violation>, Vec<Waiver
 
     let in_det = in_any(rel, &DET_DIRS);
     let in_hot = in_any(rel, &HOT_DIRS);
+    let in_alloc = in_any(rel, &ALLOC_DIRS);
+    let hot_loops = if in_alloc {
+        hot_loop_extents(&lines)
+    } else {
+        Vec::new()
+    };
     let thread_ok = THREAD_OK.contains(&rel);
     let unsafe_ok = rel == UNSAFE_OK;
     let seam_ok = rel.starts_with(SEAM_PREFIX) || SEAM_FILES.contains(&rel);
@@ -259,6 +320,16 @@ pub(super) fn scan_lines(rel: &str, source: &str) -> (Vec<Violation>, Vec<Waiver
             for pat in ["panic!", ".unwrap()", ".expect("] {
                 if code.contains(pat) {
                     emit(Rule::HotPathPanic, format!("`{pat}` in the scheduling hot path"));
+                }
+            }
+        }
+        if in_alloc && !test[idx] && hot_loops.get(idx).copied().unwrap_or(false) {
+            for pat in ALLOC_PATTERNS {
+                if code.contains(pat) {
+                    emit(
+                        Rule::HotLoopAlloc,
+                        format!("`{pat}` inside a marked hot loop"),
+                    );
                 }
             }
         }
@@ -389,6 +460,50 @@ mod tests {
         assert_eq!(fired, vec![Rule::WaiverHygiene, Rule::HashCollections]);
         let unknown = "// audit:allow(no-such-rule): reason\nlet x = 1;\n";
         assert_eq!(rules_of("src/sim/x.rs", unknown), vec![Rule::WaiverHygiene]);
+    }
+
+    #[test]
+    fn hot_loop_alloc_fires_only_inside_marked_extents() {
+        let src = "fn cold() { let v: Vec<u64> = xs.to_vec(); }\n\
+                   // audit:hot-loop\n\
+                   for x in xs {\n\
+                       let y = x.clone();\n\
+                   }\n\
+                   let after = ys.to_vec();\n";
+        assert_eq!(rules_of("src/sim/x.rs", src), vec![Rule::HotLoopAlloc]);
+        // Outside sim/ + coordinator/, the marker is inert.
+        assert!(rules_of("src/util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hot_loop_alloc_trailing_marker_covers_the_loop() {
+        let src = "for x in xs { // audit:hot-loop\n\
+                       total += x.iter().collect::<Vec<_>>().len();\n\
+                   }\n";
+        assert_eq!(
+            rules_of("src/coordinator/sched/pricing.rs", src),
+            vec![Rule::HotLoopAlloc]
+        );
+    }
+
+    #[test]
+    fn hot_loop_alloc_waiver_and_test_exemption() {
+        let waived = "// audit:hot-loop\n\
+                      for x in xs {\n\
+                          // audit:allow(hot-loop-alloc): one-time copy, measured harmless\n\
+                          let y = x.to_vec();\n\
+                      }\n";
+        assert!(rules_of("src/sim/x.rs", waived).is_empty());
+        let test_only = "#[cfg(test)]\n\
+                         mod tests {\n\
+                             fn t() {\n\
+                                 // audit:hot-loop\n\
+                                 for x in xs {\n\
+                                     let y = x.clone();\n\
+                                 }\n\
+                             }\n\
+                         }\n";
+        assert!(rules_of("src/sim/x.rs", test_only).is_empty());
     }
 
     #[test]

@@ -44,6 +44,7 @@ impl SchedulingPolicy for QlmPolicy {
                 dirty,
                 removed: ctx.removed.to_vec(),
                 total_groups: ctx.groups.len(),
+                groups: Some(ctx.groups),
             };
             self.scheduler.try_schedule_delta(&delta, ctx.views, ctx.now)
         };

@@ -32,7 +32,6 @@
 //! to whole planning windows would reject every fleet.)
 
 use std::cell::RefCell;
-use std::collections::VecDeque;
 
 use crate::backend::perf::PROFILE_MEAN_PROMPT_TOKENS;
 use crate::backend::{GpuKind, ModelCatalog, ModelId, PerfModel};
@@ -377,7 +376,7 @@ impl CapacityPlanner {
                         class: d.class,
                         slo: d.class.target(),
                         earliest_arrival_s: 0.0,
-                        members: VecDeque::from_iter(0..len as u64),
+                        members: (0..len as u64).collect(),
                         mega: d.mega,
                     }
                 })

@@ -183,7 +183,6 @@ impl QlmAgent {
 mod tests {
     use super::*;
     use crate::workload::{SloClass, SloTarget};
-    use std::collections::VecDeque;
 
     fn grp(id: u64, model: u32, members: &[u64]) -> RequestGroup {
         RequestGroup {
@@ -192,7 +191,7 @@ mod tests {
             class: SloClass::Batch1,
             slo: SloTarget::new(60.0, 1.0),
             earliest_arrival_s: 0.0,
-            members: VecDeque::from(members.to_vec()),
+            members: members.to_vec(),
             mega: false,
         }
     }

@@ -10,16 +10,73 @@
 //!
 //! §Perf: broker ids are dense and monotonically increasing, so the
 //! store is a slab (`Vec<Option<Request>>` indexed by id) rather than a
-//! keyed map, and the waiting set is an ordered `BTreeSet` rather than a
-//! linearly-scanned `Vec`. Every per-request operation on the simulator
-//! hot path (submit, mark_running, requeue, ack) is O(1) or O(log n);
-//! the seed implementation paid an O(n) `Vec::retain` per pull and per
-//! ack, which dominated profiles at tens of thousands of queued
-//! requests.
-
-use std::collections::BTreeSet;
+//! keyed map, and the waiting set is a dense [`IdBitSet`] over the same
+//! indices rather than a keyed set. Every per-request operation on the
+//! simulator hot path (submit, mark_running, requeue, ack) is O(1) with
+//! no per-node allocation; the seed implementation paid an O(n)
+//! `Vec::retain` per pull and per ack, which dominated profiles at tens
+//! of thousands of queued requests, and the `BTreeSet` that replaced it
+//! still paid a node allocation and a pointer-chasing O(log n) walk per
+//! membership change — measurable at the million-request scale of
+//! `--scenario megascale`.
 
 use crate::coordinator::request::{Request, RequestState};
+
+/// Ordered set of dense slab ids: one bit per slot. Insert / remove /
+/// contains are O(1); iteration is an ascending word scan, so — ids
+/// being assigned in submit order — iteration order *is* arrival order,
+/// exactly like the `BTreeSet<u64>` this replaces.
+#[derive(Debug, Default)]
+struct IdBitSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl IdBitSet {
+    fn insert(&mut self, id: u64) {
+        let (w, b) = ((id / 64) as usize, id % 64);
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        let mask = 1u64 << b;
+        if self.words[w] & mask == 0 {
+            self.words[w] |= mask;
+            self.len += 1;
+        }
+    }
+
+    fn remove(&mut self, id: u64) {
+        let (w, b) = ((id / 64) as usize, id % 64);
+        if let Some(word) = self.words.get_mut(w) {
+            let mask = 1u64 << b;
+            if *word & mask != 0 {
+                *word &= !mask;
+                self.len -= 1;
+            }
+        }
+    }
+
+    fn contains(&self, id: u64) -> bool {
+        let (w, b) = ((id / 64) as usize, id % 64);
+        self.words.get(w).is_some_and(|word| word & (1 << b) != 0)
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Set ids, ascending. Per word, peel set bits lowest-first
+    /// (`trailing_zeros` + clear-lowest) — allocation-free.
+    fn iter(&self) -> impl Iterator<Item = u64> + '_ {
+        self.words.iter().enumerate().flat_map(|(w, &word)| {
+            std::iter::successors((word != 0).then_some(word), |&bits| {
+                let rest = bits & (bits - 1);
+                (rest != 0).then_some(rest)
+            })
+            .map(move |bits| (w as u64) * 64 + bits.trailing_zeros() as u64)
+        })
+    }
+}
 
 /// The single-replica request store + waiting set.
 #[derive(Debug, Default)]
@@ -31,7 +88,7 @@ pub struct GlobalQueue {
     live: usize,
     /// Waiting request ids. Ids are assigned in submit order, so the
     /// set's natural ordering *is* arrival order (FCFS base ordering).
-    waiting: BTreeSet<u64>,
+    waiting: IdBitSet,
     pub completed: Vec<Request>,
     /// Ids refused by admission control (state `Shed`). The requests
     /// stay in the slab (they must appear in the final records as
@@ -77,12 +134,12 @@ impl GlobalQueue {
 
     /// Ids currently waiting, in arrival order (FCFS base ordering).
     pub fn waiting_ids(&self) -> impl Iterator<Item = u64> + '_ {
-        self.waiting.iter().copied()
+        self.waiting.iter()
     }
 
     /// Is `id` in the waiting set?
     pub fn is_waiting(&self, id: u64) -> bool {
-        self.waiting.contains(&id)
+        self.waiting.contains(id)
     }
 
     /// Mark a request as pulled into a running batch (Request Pulling LSO).
@@ -99,7 +156,7 @@ impl GlobalQueue {
             }
             None => None,
         };
-        self.waiting.remove(&id);
+        self.waiting.remove(id);
         prior
     }
 
@@ -135,7 +192,7 @@ impl GlobalQueue {
                 self.completed.push(r);
             }
         }
-        self.waiting.remove(&id);
+        self.waiting.remove(id);
     }
 
     /// Shed a request (admission control / unservable-group retirement):
@@ -150,7 +207,7 @@ impl GlobalQueue {
             return false;
         }
         r.state = RequestState::Shed;
-        self.waiting.remove(&id);
+        self.waiting.remove(id);
         self.shed.push(id);
         true
     }
@@ -336,6 +393,25 @@ mod tests {
         assert!(!q.shed(b));
         // The shed request still lives in the broker for the records.
         assert_eq!(q.len_total(), 2);
+    }
+
+    #[test]
+    fn bitset_iterates_ascending_across_word_boundaries() {
+        let mut s = IdBitSet::default();
+        for id in [200, 0, 63, 64, 127, 128, 5, 64] {
+            s.insert(id);
+        }
+        assert_eq!(s.len(), 7, "duplicate insert must not double-count");
+        let got: Vec<u64> = s.iter().collect();
+        assert_eq!(got, vec![0, 5, 63, 64, 127, 128, 200]);
+        s.remove(64);
+        s.remove(64);
+        s.remove(9999); // out of range: no-op
+        assert_eq!(s.len(), 6, "duplicate remove must not double-count");
+        assert!(!s.contains(64));
+        assert!(s.contains(63));
+        let got: Vec<u64> = s.iter().collect();
+        assert_eq!(got, vec![0, 5, 63, 127, 128, 200]);
     }
 
     #[test]

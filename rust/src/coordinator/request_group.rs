@@ -6,8 +6,6 @@
 //! partition, then large groups are split to at most δ × avg_batch_size
 //! members. Requests within a group are served FCFS.
 
-use std::collections::VecDeque;
-
 use crate::backend::ModelId;
 use crate::coordinator::request::Request;
 use crate::util::{kmeans::kmeans, Rng};
@@ -28,8 +26,10 @@ pub struct RequestGroup {
     pub slo: SloTarget,
     /// Earliest member arrival (deadline anchor for the group).
     pub earliest_arrival_s: f64,
-    /// Member request ids in FCFS order.
-    pub members: VecDeque<u64>,
+    /// Member request ids in FCFS order. A flat `Vec` (members are
+    /// appended, retained, and iterated — never rotated), so the ids sit
+    /// contiguously and the per-group VecDeque ring bookkeeping is gone.
+    pub members: Vec<u64>,
     /// Whether members are mega prompts (distinct token distribution —
     /// kept separate so the RWT estimator sees the right moments, §8.3).
     pub mega: bool,
@@ -188,7 +188,7 @@ impl Grouper {
                 && g.mega == req.mega
                 && g.len() < cap
         }) {
-            g.members.push_back(req.id);
+            g.members.push(req.id);
             g.slo = g.slo.min(req.slo);
             g.earliest_arrival_s = g.earliest_arrival_s.min(req.arrival_s);
             return g.id;
@@ -199,7 +199,7 @@ impl Grouper {
             class: req.class,
             slo: req.slo,
             earliest_arrival_s: req.arrival_s,
-            members: VecDeque::from([req.id]),
+            members: vec![req.id],
             mega: req.mega,
         };
         let id = g.id;

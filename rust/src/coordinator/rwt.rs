@@ -371,7 +371,6 @@ mod tests {
     use super::*;
     use crate::backend::{GpuKind, ModelCatalog};
     use crate::workload::WorkloadSpec;
-    use std::collections::VecDeque;
 
     fn perf() -> PerfModel {
         let c = ModelCatalog::paper();
@@ -395,7 +394,7 @@ mod tests {
             class: SloClass::Batch1,
             slo: crate::workload::SloTarget::new(slo, 1.0),
             earliest_arrival_s: arrival,
-            members: VecDeque::from_iter(0..n as u64),
+            members: (0..n as u64).collect(),
             mega: false,
         }
     }
@@ -507,7 +506,7 @@ mod tests {
         let p = perf();
         let mut g = mk_group(2, 0, 64, 0.0, 60.0);
         let (full, _) = est.group_service(&g, &p);
-        g.members.pop_front();
+        g.members.remove(0);
         let (smaller, _) = est.group_service(&g, &p);
         assert!(
             smaller < full,

@@ -174,13 +174,19 @@ pub struct SchedDelta<'a> {
     pub removed: Vec<GroupId>,
     /// Live group count (for the full-solve dirtiness threshold).
     pub total_groups: usize,
+    /// Full live group table, for the delta path's in-pass `Auto`-mode
+    /// MILP refinement — re-ordering a touched queue's head window
+    /// needs the *clean* groups on it too, which `dirty` alone can't
+    /// supply. `None` disables the refinement (the patch itself never
+    /// needs it).
+    pub groups: Option<&'a BTreeMap<GroupId, RequestGroup>>,
 }
 
 /// Shared fixtures for the layer tests (estimator / views / groups built
 /// the same way across `plan`, `cache`, and `solve` suites).
 #[cfg(test)]
 pub(crate) mod testutil {
-    use std::collections::{BTreeMap, VecDeque};
+    use std::collections::BTreeMap;
 
     use crate::backend::{GpuKind, InstanceId, ModelCatalog, ModelId, PerfModel};
     use crate::coordinator::request_group::{GroupId, RequestGroup};
@@ -224,7 +230,7 @@ pub(crate) mod testutil {
             },
             slo: crate::workload::SloTarget::new(slo, 1.0),
             earliest_arrival_s: arrival,
-            members: VecDeque::from_iter(0..n as u64),
+            members: (0..n as u64).collect(),
             mega: false,
         }
     }

@@ -121,6 +121,8 @@ pub(crate) fn reprice_queue(
     let mut viol = 0u32;
     cq.crossings.clear();
     cq.crossed = 0;
+    // audit:hot-loop — the per-pass repricing walk; `crossings` is
+    // cleared and refilled in place, so the walk allocates nothing.
     for gid in &cq.order {
         let Some(p) = pricing.get(gid) else { continue };
         if tail.tail_model != Some(p.model) {

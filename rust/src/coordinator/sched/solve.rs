@@ -305,8 +305,13 @@ impl GlobalScheduler {
     /// the last walk are picked up by the crossing scan over the
     /// violation-slope data recorded per queue — see
     /// [`CachedQueue::reanchor`]. Per-queue ordering on touched queues
-    /// is greedy affinity-EDF only; `Auto`-mode MILP refinement
-    /// re-applies at the next full solve.
+    /// is greedy affinity-EDF, then — under [`SolverKind::Auto`], when
+    /// the delta carries the group table — MILP refinement re-applies
+    /// *in this pass* to any touched queue whose MILP-eligible head
+    /// window changed membership, behind the same heuristic-regression
+    /// guard as the full solve. Queues whose window membership is
+    /// unchanged keep their standing order (the previous refinement
+    /// still covers them), so steady-state deltas stay walk-free.
     pub fn try_schedule_delta(
         &self,
         delta: &SchedDelta,
@@ -330,6 +335,29 @@ impl GlobalScheduler {
             pricing: group_pricing,
             unservable,
         } = cache;
+
+        // The sorted membership of one queue's MILP-eligible head window
+        // (reorderable groups past the pinned executing head), or empty
+        // when the window is too small / too large to refine. Captured
+        // per queue *before* the patch below so step 4.5 can detect
+        // membership changes.
+        let window = self.cfg.milp_max_groups.min(MILP_HARD_CAP);
+        let milp_window = |cq: &CachedQueue| -> Vec<GroupId> {
+            let start =
+                usize::from(cq.executing.is_some() && cq.order.first() == cq.executing.as_ref());
+            let rest = &cq.order[start..];
+            if rest.len() < 2 || rest.len() > window {
+                return Vec::new();
+            }
+            let mut ids = rest.to_vec();
+            ids.sort_unstable();
+            ids
+        };
+        let refine = delta.groups.filter(|_| self.cfg.solver == SolverKind::Auto);
+        let pre_window: Vec<Vec<GroupId>> = match refine {
+            Some(_) => queues.iter().map(&milp_window).collect(),
+            None => Vec::new(),
+        };
 
         // Executing groups stay pinned at their heads even when dirty.
         let pinned: BTreeMap<GroupId, usize> = instances
@@ -477,6 +505,67 @@ impl GlobalScheduler {
             }
         }
 
+        // 4.5 `Auto`-mode MILP refinement, in-pass: any touched queue
+        //     whose MILP-eligible head window changed membership gets
+        //     the same exact refinement a full solve would apply,
+        //     accepted only if it doesn't regress the heuristic order
+        //     (node-limit exhaustion can truncate the search). This
+        //     closes the carry-over gap where delta passes left touched
+        //     queues greedy-only until the next full solve.
+        let mut milp_nodes = 0usize;
+        let mut used_milp = false;
+        if let Some(by_id) = refine {
+            for (k, v) in instances.iter().enumerate() {
+                if !touched[k] {
+                    continue;
+                }
+                let cq = &mut queues[k];
+                let post = milp_window(cq);
+                if post.len() < 2 || post == pre_window[k] {
+                    continue;
+                }
+                let start = usize::from(
+                    cq.executing.is_some() && cq.order.first() == cq.executing.as_ref(),
+                );
+                let head: Vec<&RequestGroup> = cq.order[..start]
+                    .iter()
+                    .filter_map(|g| by_id.get(g))
+                    .collect();
+                let rest: Vec<&RequestGroup> = cq.order[start..]
+                    .iter()
+                    .filter_map(|g| by_id.get(g))
+                    .collect();
+                // A stale lookup (id missing from the live table) means
+                // the window can't be priced faithfully: keep greedy.
+                if head.len() != start || rest.len() != cq.order.len() - start {
+                    continue;
+                }
+                let Some((perm, nodes)) = self.milp_order(&rest, v, now) else {
+                    continue;
+                };
+                milp_nodes += nodes;
+                used_milp = true;
+                let full_h: Vec<&RequestGroup> =
+                    head.iter().copied().chain(rest.iter().copied()).collect();
+                let full_m: Vec<&RequestGroup> = head
+                    .iter()
+                    .copied()
+                    .chain(perm.iter().map(|&i| rest[i]))
+                    .collect();
+                if self.queue_penalty(&full_m, v, now)
+                    <= self.queue_penalty(&full_h, v, now) + 1e-9
+                {
+                    for (slot, g) in cq.order[start..]
+                        .iter_mut()
+                        .zip(perm.iter().map(|&i| rest[i]))
+                    {
+                        *slot = g.id;
+                    }
+                    pricing::reprice_queue(cq, group_pricing, v, now);
+                }
+            }
+        }
+
         // 5. Assemble the patch: orders only for queues that changed.
         let mut orders = BTreeMap::new();
         for (k, cq) in queues.iter().enumerate() {
@@ -495,11 +584,12 @@ impl GlobalScheduler {
             unservable: unservable_ids,
             stats: SolveStats {
                 groups: delta.total_groups,
+                milp_nodes,
+                used_milp,
                 incremental: true,
                 dirty: delta.dirty.len(),
                 touched_instances,
                 crossings_drained,
-                ..Default::default()
             },
         })
     }
@@ -937,6 +1027,7 @@ mod tests {
             dirty: vec![groups.last().unwrap()],
             removed: vec![],
             total_groups: groups.len(),
+            ..Default::default()
         };
         let a = inc.try_schedule_delta(&d, &views, 0.0).expect("warm cache");
         assert!(a.stats.incremental);
@@ -971,6 +1062,7 @@ mod tests {
                 dirty,
                 removed: vec![],
                 total_groups: base.len() + fresh.len(),
+                ..Default::default()
             };
             sched.try_schedule_delta(&d, &views, 0.0).expect("warm");
             sched.cached_orders().unwrap()
@@ -999,11 +1091,101 @@ mod tests {
             dirty: vec![],
             removed: vec![GroupId(3)],
             total_groups: 5,
+            ..Default::default()
         };
         let a = sched.try_schedule_delta(&d, &views, 0.0).expect("warm");
         let order = &a.orders[&InstanceId(0)];
         assert!(!order.contains(&GroupId(3)));
         assert_eq!(order.len(), 5);
+    }
+
+    #[test]
+    fn delta_reapplies_milp_on_head_window_membership_change() {
+        // Carry-over gap closed: an `Auto`-mode delta pass that changes
+        // a queue's MILP-eligible head window must refine it *now*, not
+        // at the next full solve — and land on the same plan a cold
+        // full solve of the identical state produces.
+        use crate::coordinator::request_group::GroupId;
+        let mk = || {
+            GlobalScheduler::new(
+                SchedulerConfig {
+                    solver: SolverKind::Auto,
+                    milp_max_groups: 4,
+                    node_limit: 50_000,
+                    ..Default::default()
+                },
+                estimator(),
+            )
+        };
+        // Two models with relaxed SLOs — the swap-clustering structure
+        // MILP refines — delivered incrementally.
+        let mut groups = vec![
+            grp(1, 0, 16, 0.0, 7200.0),
+            grp(2, 3, 16, 0.0, 7200.0),
+            grp(3, 0, 16, 0.0, 7200.0),
+        ];
+        let views = vec![view(0, &[0, 3], Some(0))];
+        let inc = mk();
+        let refs: Vec<_> = groups.iter().collect();
+        inc.schedule(&refs, &views, 0.0);
+        groups.push(grp(4, 3, 16, 0.0, 7200.0));
+        let by_id: BTreeMap<GroupId, RequestGroup> =
+            groups.iter().map(|g| (g.id, g.clone())).collect();
+        let d = SchedDelta {
+            dirty: vec![&by_id[&GroupId(4)]],
+            removed: vec![],
+            total_groups: groups.len(),
+            groups: Some(&by_id),
+        };
+        let a = inc.try_schedule_delta(&d, &views, 0.0).expect("warm cache");
+        assert!(a.stats.incremental);
+        assert!(
+            a.stats.used_milp,
+            "head-window membership change must trigger in-pass MILP"
+        );
+        let full = mk();
+        let refs: Vec<_> = groups.iter().collect();
+        let b = full.schedule(&refs, &views, 0.0);
+        assert!(b.stats.used_milp);
+        assert_eq!(
+            inc.cached_orders().unwrap(),
+            b.orders,
+            "refined delta plan must match the cold full solve"
+        );
+    }
+
+    #[test]
+    fn delta_without_group_table_keeps_greedy_order() {
+        // `groups: None` disables the in-pass refinement (the patch
+        // itself never needs the table) — the pass still succeeds and
+        // stays greedy-only.
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Auto,
+                milp_max_groups: 4,
+                node_limit: 50_000,
+                ..Default::default()
+            },
+            estimator(),
+        );
+        let mut groups = vec![
+            grp(1, 0, 16, 0.0, 7200.0),
+            grp(2, 3, 16, 0.0, 7200.0),
+            grp(3, 0, 16, 0.0, 7200.0),
+        ];
+        let views = vec![view(0, &[0, 3], Some(0))];
+        let refs: Vec<_> = groups.iter().collect();
+        sched.schedule(&refs, &views, 0.0);
+        groups.push(grp(4, 3, 16, 0.0, 7200.0));
+        let d = SchedDelta {
+            dirty: vec![groups.last().unwrap()],
+            removed: vec![],
+            total_groups: groups.len(),
+            groups: None,
+        };
+        let a = sched.try_schedule_delta(&d, &views, 0.0).expect("warm");
+        assert!(a.stats.incremental);
+        assert!(!a.stats.used_milp, "no group table, no refinement");
     }
 
     #[test]
@@ -1025,6 +1207,7 @@ mod tests {
             dirty: groups.iter().take(4).collect(),
             removed: vec![],
             total_groups: groups.len(),
+            ..Default::default()
         };
         assert!(
             sched.try_schedule_delta(&d, &views, 0.0).is_none(),

@@ -2,7 +2,6 @@
 //! trade-off, and global-scheduler overhead.
 
 use std::collections::BTreeMap;
-use std::collections::VecDeque;
 // audit:allow(wall-clock): Fig. 20 measures real scheduler-pass latency on
 // the host; the stopwatch never feeds back into any plan or sim clock.
 use std::time::Instant;
@@ -136,7 +135,7 @@ pub fn fig20(scale: Scale) -> Figure {
                 class: SloClass::Batch1,
                 slo: crate::workload::SloTarget::new(60.0 + (g % 7) as f64 * 300.0, 1.0),
                 earliest_arrival_s: 0.0,
-                members: VecDeque::from_iter(0..group_sz as u64),
+                members: (0..group_sz as u64).collect(),
                 mega: false,
             })
             .collect();
@@ -168,7 +167,7 @@ pub fn fig20(scale: Scale) -> Figure {
             class: SloClass::Batch1,
             slo: crate::workload::SloTarget::new(60.0, 1.0),
             earliest_arrival_s: 0.0,
-            members: VecDeque::from_iter(0..group_sz as u64),
+            members: (0..group_sz as u64).collect(),
             mega: false,
         })
         .collect();

@@ -103,7 +103,7 @@ fn usage() -> ExitCode {
 
 USAGE:
   qlm sim [--scenario burst|diurnal|mixed-slo|multi-model|failover|scale
-          |autoscale|mega] [--list] [--policy P] [--rate R] [--requests N]
+          |autoscale|mega|megascale] [--list] [--policy P] [--rate R] [--requests N]
           [--fleet N] [--seed S] [--horizon SECS] [--full-solve] [--threads N]
           [--chunk-tokens N] [--slice-tokens N] [--trace-out FILE]
           [--telemetry-out FILE] [--telemetry-every SECS]
@@ -141,7 +141,7 @@ fn parse_scenario(args: &Args) -> Option<Scenario> {
         eprintln!(
             "unknown scenario {name} \
              (known: burst, diurnal, mixed-slo, multi-model, failover, scale, \
-             autoscale, mega)"
+             autoscale, mega, megascale)"
         );
     }
     scenario

@@ -31,7 +31,7 @@
 //! what lets `--scenario scale` push 100K+ queued requests through the
 //! paper's Fig. 20 regime.
 
-use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 // audit:allow(wall-clock): wall time feeds only the diagnostic pass-duration
 // histogram, never simulated time or any scheduling decision.
@@ -181,7 +181,8 @@ fn waiting_members(
 /// The simulator.
 pub struct Simulation {
     cfg: SimConfig,
-    /// Clock + event heap + wake dedup (the time-ordering seam).
+    /// Clock + timer-wheel event queue + wake dedup (the time-ordering
+    /// seam).
     clock: EventCore,
     /// Instances + lifecycle + the capacity bridge (the fleet seam).
     fleet: FleetController,
@@ -232,10 +233,32 @@ pub struct Simulation {
     /// each, so the hot path pays nothing. The observer records; it
     /// never feeds back into scheduling decisions.
     obs: Option<Box<ObsState>>,
+    /// Reused scratch for the per-pass collections in `maybe_schedule`
+    /// (dirty-group deadline re-anchoring) — cleared each pass, freed
+    /// never, so the steady-state pass allocates nothing
+    /// (`cargo bench -- hot_alloc` counts this).
+    scratch_earliest: Vec<(GroupId, f64)>,
+    /// Reused scratch for post-pass wake fan-outs (`maybe_schedule`,
+    /// `wake_idle`).
+    scratch_wake: Vec<(InstanceId, f64)>,
+    /// Reused scratch for the instances touched by a policy patch.
+    scratch_touched: Vec<InstanceId>,
 }
 
 impl Simulation {
     pub fn new(cfg: SimConfig, trace: &Trace) -> Self {
+        Self::new_inner(cfg, trace, false)
+    }
+
+    /// Run the simulation on the retained `BinaryHeap` event queue
+    /// instead of the timer wheel — the golden suite's wheel ≡ heap
+    /// equivalence runs drive whole scenarios through both.
+    #[doc(hidden)]
+    pub fn new_with_heap_clock(cfg: SimConfig, trace: &Trace) -> Self {
+        Self::new_inner(cfg, trace, true)
+    }
+
+    fn new_inner(cfg: SimConfig, trace: &Trace, heap_clock: bool) -> Self {
         // Workload profiling (§6, Offline Profiling): moments from the
         // request history dataset — we use the trace itself as history.
         let mut profiles = ProfileTable::from_trace(trace);
@@ -302,7 +325,11 @@ impl Simulation {
         let admission = AdmissionController::new(cfg.admission);
         let fleet = FleetController::new(instances, cfg.catalog.clone(), autoscaler, admission);
         let mut sim = Simulation {
-            clock: EventCore::new(n_instances),
+            clock: if heap_clock {
+                EventCore::new_heap_baseline(n_instances)
+            } else {
+                EventCore::new(n_instances)
+            },
             fleet,
             policy,
             vqs,
@@ -325,6 +352,9 @@ impl Simulation {
             pool,
             open_groups: BTreeMap::new(),
             obs: cfg.obs.enabled().then(|| Box::new(ObsState::new(&cfg.obs))),
+            scratch_earliest: Vec::new(),
+            scratch_wake: Vec::new(),
+            scratch_touched: Vec::new(),
             cfg,
         };
         sim.build_views();
@@ -602,7 +632,7 @@ impl Simulation {
                     class: req.class,
                     slo: req.slo,
                     earliest_arrival_s: req.arrival_s,
-                    members: VecDeque::from([id]),
+                    members: vec![id],
                     mega: req.mega,
                 },
             );
@@ -631,7 +661,7 @@ impl Simulation {
                 // before their group leaves the table.
                 let g = self.groups.get_mut(&gid).expect("open-group index is live");
                 debug_assert!(g.len() < cap, "index must only hold open groups");
-                g.members.push_back(req.id);
+                g.members.push(req.id);
                 g.slo = g.slo.min(req.slo);
                 g.earliest_arrival_s = g.earliest_arrival_s.min(req.arrival_s);
                 if g.len() >= cap {
@@ -654,16 +684,19 @@ impl Simulation {
 
     fn wake_idle(&mut self) {
         let now = self.clock.now;
-        let ids: Vec<(InstanceId, f64)> = self
-            .fleet
-            .instances()
-            .iter()
-            .filter(|i| self.fleet.alive(i.config.id) && i.is_idle())
-            .map(|i| (i.config.id, now.max(i.busy_until())))
-            .collect();
-        for (id, t) in ids {
+        let mut ids = std::mem::take(&mut self.scratch_wake);
+        ids.clear();
+        ids.extend(
+            self.fleet
+                .instances()
+                .iter()
+                .filter(|i| self.fleet.alive(i.config.id) && i.is_idle())
+                .map(|i| (i.config.id, now.max(i.busy_until()))),
+        );
+        for &(id, t) in &ids {
             self.wake(id, t);
         }
+        self.scratch_wake = ids;
     }
 
     fn observation(&self, id: InstanceId) -> InstanceObservation {
@@ -1213,37 +1246,40 @@ impl Simulation {
         // those marks the group dirty — so this is equivalent to the old
         // all-groups walk, which was O(all queued requests) per pass and
         // capped queue scale.
-        let earliest: Vec<(GroupId, f64)> = self
-            .dirty_groups
-            .iter()
-            .filter_map(|gid| self.groups.get(gid))
-            .map(|g| {
-                let e = g
-                    .members
-                    .iter()
-                    .filter(|&&m| {
-                        self.queue
-                            .get(m)
-                            .map(|r| {
-                                matches!(
-                                    r.state,
-                                    RequestState::Waiting | RequestState::Evicted
-                                )
-                            })
-                            .unwrap_or(false)
-                    })
-                    .filter_map(|&m| self.queue.get(m).map(|r| r.arrival_s))
-                    .fold(f64::INFINITY, f64::min);
-                (g.id, e)
-            })
-            .collect();
-        for (gid, e) in earliest {
+        let mut earliest = std::mem::take(&mut self.scratch_earliest);
+        earliest.clear();
+        earliest.extend(
+            self.dirty_groups
+                .iter()
+                .filter_map(|gid| self.groups.get(gid))
+                .map(|g| {
+                    let e = g
+                        .members
+                        .iter()
+                        .filter(|&&m| {
+                            self.queue
+                                .get(m)
+                                .map(|r| {
+                                    matches!(
+                                        r.state,
+                                        RequestState::Waiting | RequestState::Evicted
+                                    )
+                                })
+                                .unwrap_or(false)
+                        })
+                        .filter_map(|&m| self.queue.get(m).map(|r| r.arrival_s))
+                        .fold(f64::INFINITY, f64::min);
+                    (g.id, e)
+                }),
+        );
+        for &(gid, e) in &earliest {
             if e.is_finite() {
                 if let Some(g) = self.groups.get_mut(&gid) {
                     g.earliest_arrival_s = e;
                 }
             }
         }
+        self.scratch_earliest = earliest;
         // audit:allow(wall-clock): measures real scheduler-pass latency for the
         // diagnostics report; sim time comes solely from the event clock.
         let wall = WallInstant::now();
@@ -1269,7 +1305,9 @@ impl Simulation {
         if let (Some(obs), Some(stats)) = (self.obs.as_deref_mut(), plan.stats.as_ref()) {
             obs.sched.absorb(stats);
         }
-        let touched: Vec<InstanceId> = plan.orders.keys().copied().collect();
+        let mut touched = std::mem::take(&mut self.scratch_touched);
+        touched.clear();
+        touched.extend(plan.orders.keys().copied());
         for (id, order) in plan.orders {
             self.vqs[id.0 as usize].set_order(order);
         }
@@ -1282,7 +1320,7 @@ impl Simulation {
         }
         // Refresh warm sets for the queues that changed (§5 swapping).
         if self.policy.refreshes_warm_sets() {
-            for id in touched {
+            for &id in &touched {
                 let idx = id.0 as usize;
                 let order: Vec<ModelId> = {
                     let vq = &self.vqs[idx];
@@ -1292,6 +1330,7 @@ impl Simulation {
                 self.fleet.inst_mut(id).registry_mut().set_warm_set(&order);
             }
         }
+        self.scratch_touched = touched;
         self.views_cache = views;
         // Every policy consumes (or rebuilds from scratch over) the full
         // group table per pass, so the dirt is spent either way.
@@ -1313,16 +1352,19 @@ impl Simulation {
         self.capacity_tick();
         // New orders may unblock idle instances.
         let now = self.clock.now;
-        let ids: Vec<(InstanceId, f64)> = self
-            .fleet
-            .instances()
-            .iter()
-            .filter(|i| self.fleet.alive(i.config.id))
-            .map(|i| (i.config.id, now.max(i.busy_until())))
-            .collect();
-        for (id, t) in ids {
+        let mut ids = std::mem::take(&mut self.scratch_wake);
+        ids.clear();
+        ids.extend(
+            self.fleet
+                .instances()
+                .iter()
+                .filter(|i| self.fleet.alive(i.config.id))
+                .map(|i| (i.config.id, now.max(i.busy_until()))),
+        );
+        for &(id, t) in &ids {
             self.wake(id, t);
         }
+        self.scratch_wake = ids;
     }
 
     fn finish(self) -> RunMetrics {
@@ -1480,7 +1522,7 @@ mod tests {
                             class: SloClass::Interactive,
                             slo: crate::workload::SloTarget::new(20.0, 0.25),
                             earliest_arrival_s: (i % 7) as f64,
-                            members: VecDeque::from([i]),
+                            members: vec![i],
                             mega: false,
                         },
                     );

@@ -1,12 +1,45 @@
 //! EventCore: the simulation's time-ordering layer.
 //!
-//! Owns the clock, the (time, seq)-ordered event heap, the per-instance
+//! Owns the clock, the (time, seq)-ordered event queue, the per-instance
 //! wake-deduplication state, and the per-instance iteration-end times.
 //! The serving engine reacts to events; EventCore decides *when* they
-//! fire — splitting the two keeps heap/dedup invariants in one place
+//! fire — splitting the two keeps queue/dedup invariants in one place
 //! and lets every policy / fleet change land without touching the
 //! time-ordering logic (the §5 layering: LSO actuation and scheduling
 //! sit above a dumb, correct clock).
+//!
+//! # The timer wheel
+//!
+//! The event queue is a two-level bucketed **timer wheel**
+//! ([`TimerWheel`]) instead of a `BinaryHeap`: a heap pays O(log n) per
+//! push/pop with pointer-chasing sift paths, which at the million-event
+//! scale of `--scenario megascale` is ~20 cache-hostile levels per
+//! operation. The wheel pays O(1) amortized:
+//!
+//! * **Level 0** — [`L0_BUCKETS`] buckets of [`BUCKET_S`] simulated
+//!   seconds each (a 512 s window at the cursor). A push appends to its
+//!   bucket; the drain sorts one bucket at a time by `(t, seq)` when the
+//!   cursor reaches it.
+//! * **Level 1** — [`L1_BUCKETS`] buckets of `L0_BUCKETS × BUCKET_S`
+//!   (512 s) each, covering ~24 simulated days. When the cursor enters a
+//!   new level-1 bucket its events cascade down into level 0 — each
+//!   event moves down at most once.
+//! * **Overflow** — events beyond the level-1 window sit in an unsorted
+//!   list; when both wheel levels drain empty the window re-bases at the
+//!   overflow's earliest bucket and redistributes. (Sim horizons are
+//!   hours, so this level exists for correctness, not for the hot path.)
+//!
+//! **Ordering invariant**: pops are in exactly `BinaryHeap` `(t, seq)`
+//! order. Buckets partition time, so cross-bucket order is strict-by-`t`;
+//! equal timestamps land in the same bucket and the per-bucket sort
+//! breaks the tie by insertion `seq`. An event pushed *behind* the
+//! cursor (its bucket already drained) is spliced into the live drain
+//! buffer by binary search — exactly where the heap would yield it.
+//! `tests/properties.rs` checks the equivalence against a real heap
+//! under random workloads, and the golden suite runs whole simulations
+//! on both implementations ([`EventCore::new_heap_baseline`] keeps the
+//! heap alive as the bench/golden baseline, the way `benches/` keeps the
+//! legacy queue).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -15,7 +48,7 @@ use crate::backend::InstanceId;
 
 /// What happens when an event fires.
 #[derive(Debug, Clone, Copy, PartialEq)]
-pub(crate) enum EventKind {
+pub enum EventKind {
     /// Trace request `i` arrives at the global queue.
     Arrival(usize),
     /// An instance runs one continuous-batching iteration.
@@ -28,7 +61,7 @@ pub(crate) enum EventKind {
 }
 
 #[derive(Debug, Clone, Copy)]
-pub(crate) struct Event {
+pub struct Event {
     pub t: f64,
     pub seq: u64,
     pub kind: EventKind,
@@ -51,17 +84,217 @@ impl Ord for Event {
     }
 }
 
-/// Clock + event heap + wake dedup. Instances are identified by dense
+/// Level-0 bucket width in simulated seconds.
+const BUCKET_S: f64 = 0.125;
+/// Level-0 buckets (cursor window: 4096 × 0.125 s = 512 s).
+const L0_BUCKETS: usize = 4096;
+/// Level-1 buckets (window: 4096 × 512 s ≈ 24 simulated days).
+const L1_BUCKETS: usize = 4096;
+
+/// Absolute level-0 bucket index of time `t`. The cast saturates
+/// (negative/NaN → 0, huge → max) and the clamp keeps downstream
+/// `bucket × L0_BUCKETS`-style arithmetic far from u64 overflow;
+/// clamped events still pop in `(t, seq)` order because the in-bucket
+/// sort compares the exact timestamps.
+fn bucket_of(t: f64) -> u64 {
+    const MAX_B0: u64 = u64::MAX / (L0_BUCKETS as u64 * L1_BUCKETS as u64);
+    ((t / BUCKET_S) as u64).min(MAX_B0)
+}
+
+/// Two-level bucketed timer wheel (see the module docs for the level
+/// geometry, cascade, overflow, and ordering-invariant discussion).
+#[derive(Debug)]
+pub struct TimerWheel {
+    /// Next absolute level-0 bucket the drain will load. Buckets below
+    /// it are already drained (or draining via `drain`).
+    c0: u64,
+    /// The level-1 bucket currently cascaded into level 0.
+    b1_cur: u64,
+    /// Exclusive end of the level-1 window: live level-1 buckets are in
+    /// `(b1_cur, l1_end)`, which spans at most [`L1_BUCKETS`] — the ring
+    /// mapping `b1 % L1_BUCKETS` stays collision-free.
+    l1_end: u64,
+    /// Level-0 ring: slot `b0 % L0_BUCKETS` for absolute bucket `b0` in
+    /// the current level-1 bucket's span.
+    slots0: Vec<Vec<Event>>,
+    /// Level-1 ring: slot `b1 % L1_BUCKETS`.
+    slots1: Vec<Vec<Event>>,
+    /// Events past the level-1 window, unsorted until a re-base.
+    overflow: Vec<Event>,
+    /// The bucket being drained, sorted ascending by `(t, seq)`;
+    /// `drain[..drain_pos]` is already popped. Reused across buckets.
+    drain: Vec<Event>,
+    drain_pos: usize,
+    /// Events currently resident in `slots0` / `slots1`.
+    count_l0: usize,
+    count_l1: usize,
+    /// Total live events (all levels + overflow + undrained `drain`).
+    len: usize,
+}
+
+impl TimerWheel {
+    fn new() -> Self {
+        TimerWheel {
+            c0: 0,
+            b1_cur: 0,
+            l1_end: L1_BUCKETS as u64,
+            slots0: vec![Vec::new(); L0_BUCKETS],
+            slots1: vec![Vec::new(); L1_BUCKETS],
+            overflow: Vec::new(),
+            drain: Vec::new(),
+            drain_pos: 0,
+            count_l0: 0,
+            count_l1: 0,
+            len: 0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn push(&mut self, ev: Event) {
+        self.len += 1;
+        let b0 = bucket_of(ev.t);
+        if b0 < self.c0 {
+            // Behind the cursor: its bucket is already drained. The heap
+            // would pop it next among everything ≥ it, so splice it into
+            // the undrained tail of the live drain buffer at its exact
+            // (t, seq) position.
+            let pos = self.drain[self.drain_pos..].partition_point(|e| *e < ev);
+            self.drain.insert(self.drain_pos + pos, ev);
+        } else if b0 < (self.b1_cur + 1) * L0_BUCKETS as u64 {
+            self.slots0[(b0 % L0_BUCKETS as u64) as usize].push(ev);
+            self.count_l0 += 1;
+        } else {
+            let b1 = b0 / L0_BUCKETS as u64;
+            if b1 < self.l1_end {
+                self.slots1[(b1 % L1_BUCKETS as u64) as usize].push(ev);
+                self.count_l1 += 1;
+            } else {
+                self.overflow.push(ev);
+            }
+        }
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        // audit:hot-loop — one iteration per event at megascale counts;
+        // the drain buffer and slot vectors are reused, never reallocated.
+        loop {
+            if self.drain_pos < self.drain.len() {
+                let ev = self.drain[self.drain_pos];
+                self.drain_pos += 1;
+                self.len -= 1;
+                return Some(ev);
+            }
+            if self.len == 0 {
+                return None;
+            }
+            self.drain.clear();
+            self.drain_pos = 0;
+            if self.load_next_l0_bucket() {
+                continue;
+            }
+            self.advance_l1();
+        }
+    }
+
+    /// Load the next non-empty level-0 bucket of the current level-1
+    /// span into `drain` (sorted). False when the span is exhausted.
+    fn load_next_l0_bucket(&mut self) -> bool {
+        let span_end = (self.b1_cur + 1) * L0_BUCKETS as u64;
+        if self.count_l0 == 0 {
+            self.c0 = span_end;
+            return false;
+        }
+        while self.c0 < span_end {
+            let slot = (self.c0 % L0_BUCKETS as u64) as usize;
+            self.c0 += 1;
+            if !self.slots0[slot].is_empty() {
+                std::mem::swap(&mut self.drain, &mut self.slots0[slot]);
+                self.count_l0 -= self.drain.len();
+                self.drain.sort_unstable();
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Advance to the next level-1 bucket holding events and cascade it
+    /// into level 0. Re-bases the window from overflow when both wheel
+    /// levels are empty. Caller guarantees `len > 0`.
+    fn advance_l1(&mut self) {
+        loop {
+            if self.count_l1 == 0 {
+                debug_assert_eq!(self.count_l0, 0, "l0 drained before advancing l1");
+                self.rebase_overflow();
+            }
+            self.b1_cur += 1;
+            let slot = (self.b1_cur % L1_BUCKETS as u64) as usize;
+            self.c0 = self.b1_cur * L0_BUCKETS as u64;
+            if self.slots1[slot].is_empty() {
+                continue;
+            }
+            let evs = std::mem::take(&mut self.slots1[slot]);
+            self.count_l1 -= evs.len();
+            self.count_l0 += evs.len();
+            for ev in evs {
+                let b0 = bucket_of(ev.t);
+                debug_assert_eq!(b0 / L0_BUCKETS as u64, self.b1_cur, "cascade stays in-span");
+                self.slots0[(b0 % L0_BUCKETS as u64) as usize].push(ev);
+            }
+            return;
+        }
+    }
+
+    /// Both wheel levels are empty but events remain: everything live is
+    /// in overflow. Re-base the level-1 window at the overflow's
+    /// earliest bucket and redistribute what now fits.
+    fn rebase_overflow(&mut self) {
+        debug_assert!(!self.overflow.is_empty(), "len > 0 with empty wheel ⇒ overflow");
+        let min_b1 = self
+            .overflow
+            .iter()
+            .map(|e| bucket_of(e.t) / L0_BUCKETS as u64)
+            .fold(u64::MAX, u64::min);
+        // Overflow only ever holds buckets ≥ the old `l1_end` ≥ 1, so
+        // the window base below never underflows.
+        self.b1_cur = min_b1 - 1;
+        self.l1_end = min_b1 + L1_BUCKETS as u64;
+        let mut i = 0;
+        while i < self.overflow.len() {
+            let b1 = bucket_of(self.overflow[i].t) / L0_BUCKETS as u64;
+            if b1 < self.l1_end {
+                let ev = self.overflow.swap_remove(i);
+                self.slots1[(b1 % L1_BUCKETS as u64) as usize].push(ev);
+                self.count_l1 += 1;
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+/// The queue behind [`EventCore`]: the timer wheel in production, the
+/// `BinaryHeap` it replaced as the bench/golden baseline.
+#[derive(Debug)]
+enum EventQueue {
+    Wheel(TimerWheel),
+    Heap(BinaryHeap<Reverse<Event>>),
+}
+
+/// Clock + event queue + wake dedup. Instances are identified by dense
 /// indices (`InstanceId.0`), matching the engine's per-instance `Vec`s.
-pub(crate) struct EventCore {
+#[derive(Debug)]
+pub struct EventCore {
     /// Simulated time of the event being processed.
     pub now: f64,
     seq: u64,
-    heap: BinaryHeap<Reverse<Event>>,
+    queue: EventQueue,
     /// Per-instance wake deduplication: at most one pending Wake per
     /// instance (avoids event-storm blowup). An earlier wake supersedes
-    /// a later pending one; the superseded heap entry cannot be removed
-    /// from the `BinaryHeap` and is dropped at pop time instead (see
+    /// a later pending one; the superseded queue entry cannot be removed
+    /// in place and is dropped at pop time instead (see
     /// [`EventCore::take_due_wake`]).
     wake_pending: Vec<Option<f64>>,
     /// End time of each instance's in-flight iteration: a step is an
@@ -74,10 +307,23 @@ pub(crate) struct EventCore {
 
 impl EventCore {
     pub fn new(n_instances: usize) -> Self {
+        Self::with_queue(n_instances, EventQueue::Wheel(TimerWheel::new()))
+    }
+
+    /// The pre-wheel `BinaryHeap` implementation, kept as the baseline
+    /// for `cargo bench -- event_core` and the golden wheel ≡ heap
+    /// equivalence runs. Semantics are identical by contract; only the
+    /// asymptotics differ.
+    #[doc(hidden)]
+    pub fn new_heap_baseline(n_instances: usize) -> Self {
+        Self::with_queue(n_instances, EventQueue::Heap(BinaryHeap::new()))
+    }
+
+    fn with_queue(n_instances: usize, queue: EventQueue) -> Self {
         EventCore {
             now: 0.0,
             seq: 0,
-            heap: BinaryHeap::new(),
+            queue,
             wake_pending: vec![None; n_instances],
             next_free: vec![0.0; n_instances],
             wakes_executed: 0,
@@ -91,23 +337,39 @@ impl EventCore {
         self.next_free.push(0.0);
     }
 
+    /// Live events queued (all wheel levels, or the whole heap).
+    #[doc(hidden)]
+    pub fn queue_len(&self) -> usize {
+        match &self.queue {
+            EventQueue::Wheel(w) => w.len(),
+            EventQueue::Heap(h) => h.len(),
+        }
+    }
+
     pub fn push(&mut self, t: f64, kind: EventKind) {
         self.seq += 1;
-        self.heap.push(Reverse(Event {
+        let ev = Event {
             t,
             seq: self.seq,
             kind,
-        }));
+        };
+        match &mut self.queue {
+            EventQueue::Wheel(w) => w.push(ev),
+            EventQueue::Heap(h) => h.push(Reverse(ev)),
+        }
     }
 
     pub fn pop(&mut self) -> Option<Event> {
-        self.heap.pop().map(|Reverse(ev)| ev)
+        match &mut self.queue {
+            EventQueue::Wheel(w) => w.pop(),
+            EventQueue::Heap(h) => h.pop().map(|Reverse(ev)| ev),
+        }
     }
 
     /// Request a wake for `id` at `t`. Callers are responsible for the
     /// liveness check — EventCore only owns the dedup. Coalesces: a
     /// pending earlier-or-equal wake absorbs this one; an *earlier*
-    /// wake supersedes a pending later one, whose heap entry stays
+    /// wake supersedes a pending later one, whose queue entry stays
     /// behind and is discarded at pop time by [`Self::take_due_wake`].
     pub fn wake(&mut self, id: InstanceId, t: f64) {
         let idx = id.0 as usize;
@@ -169,6 +431,7 @@ impl EventCore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
 
     #[test]
     fn events_pop_in_time_then_seq_order() {
@@ -188,7 +451,7 @@ mod tests {
     #[test]
     fn stale_superseded_wake_is_dropped() {
         // Out-of-order wake requests: the earlier wake supersedes the
-        // pending later one, whose heap entry cannot be cancelled.
+        // pending later one, whose queue entry cannot be cancelled.
         let mut core = EventCore::new(1);
         core.wake(InstanceId(0), 10.0);
         core.wake(InstanceId(0), 5.0);
@@ -215,5 +478,107 @@ mod tests {
             pops += 1;
         }
         assert_eq!(pops, 1, "the later wake must not enqueue an event");
+    }
+
+    #[test]
+    fn cascade_preserves_order_across_level_one_buckets() {
+        // Times spanning several level-1 buckets (512 s each) plus a
+        // duplicate timestamp right at a bucket boundary: the cascade
+        // and per-bucket sort must reproduce global (t, seq) order.
+        let mut core = EventCore::new(1);
+        let times = [1536.0, 0.1, 512.0, 512.0, 3000.0, 511.999, 513.0];
+        for (i, &t) in times.iter().enumerate() {
+            core.push(t, EventKind::Arrival(i));
+        }
+        let got: Vec<usize> = std::iter::from_fn(|| core.pop())
+            .map(|e| match e.kind {
+                EventKind::Arrival(i) => i,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(got, vec![1, 5, 2, 3, 6, 0, 4]);
+    }
+
+    #[test]
+    fn overflow_rebase_preserves_order() {
+        // Events beyond the level-1 window (~2.1e6 s) force the
+        // overflow path and a window re-base once the wheel drains.
+        let mut core = EventCore::new(1);
+        let times = [5e6, 1.0, 3e6, 7e9, 3e6];
+        for (i, &t) in times.iter().enumerate() {
+            core.push(t, EventKind::Arrival(i));
+        }
+        let got: Vec<usize> = std::iter::from_fn(|| core.pop())
+            .map(|e| match e.kind {
+                EventKind::Arrival(i) => i,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(got, vec![1, 2, 4, 0, 3]);
+    }
+
+    #[test]
+    fn late_push_behind_the_cursor_pops_next() {
+        // A push whose bucket already drained must come out exactly
+        // where a heap would yield it: immediately, before everything
+        // later, and in (t, seq) order among other late pushes.
+        let mut core = EventCore::new(1);
+        core.push(100.0, EventKind::Arrival(0));
+        core.push(600.0, EventKind::Arrival(1));
+        assert!(matches!(core.pop().map(|e| e.kind), Some(EventKind::Arrival(0))));
+        core.push(50.0, EventKind::Arrival(2));
+        core.push(10.0, EventKind::Arrival(3));
+        let got: Vec<usize> = std::iter::from_fn(|| core.pop())
+            .map(|e| match e.kind {
+                EventKind::Arrival(i) => i,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(got, vec![3, 2, 1], "late pushes pop before queued future work");
+    }
+
+    #[test]
+    fn wheel_matches_heap_on_random_workloads() {
+        // Interleaved random pushes and pops against the retained heap
+        // baseline — the full property sweep (duplicate timestamps,
+        // stale wakes) lives in tests/properties.rs.
+        for seed in 0..10 {
+            let mut rng = Rng::new(seed);
+            let mut wheel = EventCore::new(4);
+            let mut heap = EventCore::new_heap_baseline(4);
+            let mut popped: Vec<(u64, u64)> = Vec::new();
+            let mut floor = 0.0_f64;
+            for _ in 0..400 {
+                if rng.f64() < 0.6 {
+                    // Pushes at/after the latest pop, like the engine.
+                    let t = floor + rng.f64() * 900.0;
+                    let i = rng.usize(1000);
+                    wheel.push(t, EventKind::Arrival(i));
+                    heap.push(t, EventKind::Arrival(i));
+                } else {
+                    let a = wheel.pop();
+                    let b = heap.pop();
+                    match (a, b) {
+                        (Some(x), Some(y)) => {
+                            assert_eq!((x.t, x.seq, x.kind), (y.t, y.seq, y.kind), "seed {seed}");
+                            floor = x.t;
+                            popped.push((x.seq, x.t.to_bits()));
+                        }
+                        (None, None) => {}
+                        (a, b) => panic!("seed {seed}: wheel {a:?} vs heap {b:?}"),
+                    }
+                }
+            }
+            loop {
+                match (wheel.pop(), heap.pop()) {
+                    (Some(x), Some(y)) => {
+                        assert_eq!((x.t, x.seq), (y.t, y.seq), "seed {seed}: tail");
+                    }
+                    (None, None) => break,
+                    (a, b) => panic!("seed {seed}: tail {a:?} vs {b:?}"),
+                }
+            }
+            assert_eq!(wheel.queue_len(), 0);
+        }
     }
 }

@@ -4,7 +4,11 @@
 //! control path exactly as in Fig. 6.
 
 pub mod engine;
-mod event;
+// Public (but doc-hidden) so the bench harness and the property/golden
+// suites — external crates — can drive the timer wheel against the
+// retained heap baseline directly.
+#[doc(hidden)]
+pub mod event;
 pub mod fleet;
 mod fleet_controller;
 pub mod profiler;

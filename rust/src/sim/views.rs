@@ -73,10 +73,11 @@ fn refresh_one(v: &mut InstanceView, instances: &[Instance], group_of: &BTreeMap
 
 /// Refresh every view for one scheduler pass, fanning out over the
 /// persistent pool's lanes when there are enough views to split (the
-/// gate and chunking match [`crate::util::par_chunks_mut`], the
-/// scoped-spawn baseline the bench compares against). Serial and
-/// parallel paths produce identical views: the work per view is
-/// independent and chunks stay in index order.
+/// engagement gate matches [`crate::util::par_chunks_mut`], the
+/// scoped-spawn baseline the bench compares against; the pool steals
+/// over finer chunks — see `util/pool.rs`). Serial and parallel paths
+/// produce identical views: the work per view is independent and chunks
+/// stay in index order.
 pub(crate) fn refresh_all(
     views: &mut [InstanceView],
     instances: &[Instance],
@@ -106,19 +107,17 @@ pub(crate) fn digest(views: &[InstanceView]) -> u64 {
         *h ^= x;
         *h = h.wrapping_mul(0x100000001b3);
     };
+    // audit:hot-loop — runs once per pass over every view; the mix
+    // closure and BTreeMap walk below must stay allocation-free.
     for v in views {
         mix(&mut h, v.id.0 as u64);
         mix(&mut h, v.active_model.map(|m| m.0 as u64 + 1).unwrap_or(0));
         mix(&mut h, v.executing.map(|g| g.0 + 1).unwrap_or(0));
-        let mut swaps: Vec<(u32, u64)> = v
-            .swap_time
-            .iter()
-            .map(|(m, t)| (m.0, t.to_bits()))
-            .collect();
-        swaps.sort_unstable();
-        for (m, t) in swaps {
-            mix(&mut h, m as u64);
-            mix(&mut h, t);
+        // `swap_time` is a BTreeMap: iteration is already ModelId-sorted,
+        // so the digest needs no per-view sort scratch.
+        for (m, t) in &v.swap_time {
+            mix(&mut h, m.0 as u64);
+            mix(&mut h, t.to_bits());
         }
     }
     h

@@ -13,11 +13,23 @@
 //! Semantics are identical to the scoped primitive, deliberately rigid
 //! so "threaded ≡ serial bit-for-bit" holds at every call site: the same
 //! engagement gate (`len ≥ 2 × threads`, below it the pass runs serially
-//! on the caller), the same index-ordered `div_ceil` chunking, each lane
-//! mutates only its own chunk, and nothing is reduced across lanes
-//! (callers fold results serially afterwards). Which lane runs which
-//! chunk cannot affect the result: chunks are disjoint `&mut` slices and
-//! the items never move.
+//! on the caller), index-ordered chunking, each lane mutates only its
+//! own claimed chunks, and nothing is reduced across lanes (callers fold
+//! results serially afterwards). Which lane runs which chunk cannot
+//! affect the result: chunks are disjoint `&mut` slices and the items
+//! never move.
+//!
+//! Lanes **work-steal**: instead of pre-assigning one `div_ceil` chunk
+//! per lane, the input is cut into [`STEAL_CHUNKS_PER_LANE`]× more
+//! chunks than lanes and every lane claims the next unclaimed chunk from
+//! a shared counter until none remain. With one fixed chunk per lane, a
+//! skewed pass — one mega virtual queue among many near-empty ones —
+//! serialized on whichever lane drew the expensive chunk while the rest
+//! idled; with the finer steal queue the fast lanes drain the cheap
+//! chunks and converge on the expensive tail. The claim counter was
+//! always raced under the pool lock (caller and workers alike), so
+//! stealing is purely a chunk-geometry change: the digest-equality and
+//! panic-safety guarantees are untouched.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -78,6 +90,19 @@ struct ChunkJob<'f, T, F> {
     len: usize,
     chunk: usize,
     f: &'f F,
+}
+
+/// Steal-queue granularity: chunks per lane. Finer chunks bound the
+/// idle tail on skewed inputs (a lane is stuck behind at most one
+/// expensive chunk ~1/4 the lane's nominal share) while keeping claim
+/// traffic — one pool-lock acquisition per chunk — negligible.
+const STEAL_CHUNKS_PER_LANE: usize = 4;
+
+/// Chunk geometry for a stealing pass: `(chunk_len, chunk_count)`.
+/// Chunks tile `[0, len)` in index order; the last may be short.
+fn chunk_geometry(len: usize, threads: usize) -> (usize, usize) {
+    let chunk = len.div_ceil(threads * STEAL_CHUNKS_PER_LANE).max(1);
+    (chunk, len.div_ceil(chunk))
 }
 
 /// Run chunk `idx` of the job behind `ctx`. SAFETY: `ctx` must point at
@@ -161,10 +186,11 @@ impl WorkerPool {
     }
 
     /// Apply `f` to every item, fanning out over the pool's lanes when
-    /// there are enough items to split (same gate and chunking as
-    /// [`super::par_chunks_mut`]). Either way `f` sees each item exactly
-    /// once; chunks stay in index order and are disjoint, so the result
-    /// is bit-identical to the serial pass whatever the lane count.
+    /// there are enough items to split (same engagement gate as
+    /// [`super::par_chunks_mut`]; finer work-stealing chunks — see the
+    /// module docs). Either way `f` sees each item exactly once; chunks
+    /// stay in index order and are disjoint, so the result is
+    /// bit-identical to the serial pass whatever the lane count.
     pub fn run_chunks_mut<T, F>(&self, items: &mut [T], f: F)
     where
         T: Send,
@@ -176,8 +202,7 @@ impl WorkerPool {
             }
             return;
         }
-        let chunk = items.len().div_ceil(self.threads);
-        let chunks = items.len().div_ceil(chunk);
+        let (chunk, chunks) = chunk_geometry(items.len(), self.threads);
         let job = ChunkJob {
             base: items.as_mut_ptr(),
             len: items.len(),
@@ -358,9 +383,55 @@ mod tests {
     }
 
     #[test]
+    fn chunk_geometry_tiles_the_input_and_over_partitions() {
+        for (len, threads) in [(8, 4), (97, 4), (131, 3), (2048, 4), (1_000_000, 8)] {
+            let (chunk, chunks) = chunk_geometry(len, threads);
+            assert!(chunk >= 1);
+            // Index-ordered chunks must tile [0, len) exactly.
+            assert!((chunks - 1) * chunk < len, "len={len} threads={threads}");
+            assert!(chunks * chunk >= len, "len={len} threads={threads}");
+            // Stealing needs more chunks than lanes whenever the input
+            // is large enough to cut that fine.
+            if len >= threads * STEAL_CHUNKS_PER_LANE {
+                assert_eq!(chunks, threads * STEAL_CHUNKS_PER_LANE, "len={len} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_chunk_costs_still_produce_identical_results() {
+        // One "mega" item orders of magnitude costlier than the rest:
+        // the steal queue reassigns the cheap chunks to idle lanes, and
+        // the output must stay identical to the serial pass regardless.
+        let pool = WorkerPool::new(4);
+        let mut items: Vec<u64> = (0..256).collect();
+        pool.run_chunks_mut(&mut items, |x| {
+            let spins = if *x == 0 { 20_000 } else { 10 };
+            let mut acc = *x;
+            for _ in 0..spins {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            }
+            *x = acc;
+        });
+        let want: Vec<u64> = (0..256u64)
+            .map(|x| {
+                let spins = if x == 0 { 20_000 } else { 10 };
+                let mut acc = x;
+                for _ in 0..spins {
+                    acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                }
+                acc
+            })
+            .collect();
+        assert_eq!(items, want);
+    }
+
+    #[test]
     fn pool_agrees_with_scoped_baseline() {
-        // The pool and the scoped-spawn primitive share gate + chunking,
-        // so they must transform any buffer identically.
+        // The pool steals over finer chunks than the scoped-spawn
+        // primitive's one-per-lane split, but chunks are disjoint index
+        // ranges either way, so both must transform any buffer
+        // identically.
         for threads in [2, 3, 4] {
             let pool = WorkerPool::new(threads);
             let mut a: Vec<u64> = (0..131).map(|x| x * 7).collect();

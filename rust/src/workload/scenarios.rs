@@ -42,6 +42,11 @@ pub enum Scenario {
     /// tokens behind multi-thousand-token prompts (the chunked-prefill
     /// policy's showcase).
     Mega,
+    /// The scale shape at a million-plus queued requests: the hot-path
+    /// gate for the timer-wheel event core, arena request storage, and
+    /// the work-stealing lanes. Same mixed-SLO multi-model streams as
+    /// `scale`, sized an order of magnitude past Fig. 20.
+    Megascale,
 }
 
 /// Tunable knobs shared by every scenario.
@@ -112,6 +117,7 @@ impl Scenario {
         Scenario::Scale,
         Scenario::Autoscale,
         Scenario::Mega,
+        Scenario::Megascale,
     ];
 
     pub fn from_name(name: &str) -> Option<Scenario> {
@@ -124,6 +130,7 @@ impl Scenario {
             "scale" => Scenario::Scale,
             "autoscale" => Scenario::Autoscale,
             "mega" => Scenario::Mega,
+            "megascale" => Scenario::Megascale,
             _ => return None,
         })
     }
@@ -138,6 +145,7 @@ impl Scenario {
             Scenario::Scale => "scale",
             Scenario::Autoscale => "autoscale",
             Scenario::Mega => "mega",
+            Scenario::Megascale => "megascale",
         }
     }
 
@@ -168,6 +176,9 @@ impl Scenario {
             Scenario::Mega => {
                 "W_A with heavy mega-prompt batch traffic (chunked-prefill stress)"
             }
+            Scenario::Megascale => {
+                "the scale shape at 1M+ requests (timer-wheel/arena hot-path gate)"
+            }
         }
     }
 
@@ -180,6 +191,10 @@ impl Scenario {
             // a lower headline rate keeps the default fleet pressured
             // rather than hopeless.
             Scenario::Mega => 10.0,
+            // 1.7 × 100 req/s × 7200 s ≈ 1.22M requests: past the
+            // million-request floor with the arrival span still ending
+            // at ~85% of the default horizon so the tail drains.
+            Scenario::Megascale => 100.0,
             _ => 12.0,
         }
     }
@@ -189,7 +204,11 @@ impl Scenario {
         match self {
             // Vicuna-13B (mixed-slo) and the W_B variant set are far
             // heavier per token than Mistral-7B; give them more devices.
-            Scenario::MixedSlo | Scenario::MultiModel | Scenario::Scale | Scenario::Mega => 8,
+            Scenario::MixedSlo
+            | Scenario::MultiModel
+            | Scenario::Scale
+            | Scenario::Mega
+            | Scenario::Megascale => 8,
             // The autoscale fleet knob is the *trough* size; the
             // autoscaler may grow it 4× (matching the arrival swing).
             Scenario::Autoscale => 4,
@@ -209,14 +228,18 @@ impl Scenario {
             Scenario::MultiModel => rate,
             // Arrivals stop at ~85% of the horizon so the tail drains
             // and the run *completes* inside it (Fig. 20 regime).
-            Scenario::Scale | Scenario::Autoscale => 1.7 * rate,
+            Scenario::Scale | Scenario::Autoscale | Scenario::Megascale => 1.7 * rate,
         };
-        let lo = if matches!(self, Scenario::Scale | Scenario::Autoscale) {
-            100_000
-        } else {
-            200
+        let (lo, hi) = match self {
+            // The floor *is* the point: `megascale` must queue a
+            // million-plus requests whatever the knobs — the hot-path
+            // gate for the timer wheel, arena storage, and stealing
+            // lanes runs here.
+            Scenario::Megascale => (1_000_000, 4_000_000),
+            Scenario::Scale | Scenario::Autoscale => (100_000, 400_000),
+            _ => (200, 400_000),
         };
-        ((per_second * horizon_s) as usize).clamp(lo, 400_000)
+        ((per_second * horizon_s) as usize).clamp(lo, hi)
     }
 
     /// Expand the scenario into a concrete run description.
@@ -293,6 +316,17 @@ impl Scenario {
                 spec: mega_spec(k),
                 ..base
             },
+            Scenario::Megascale => {
+                // Same stream structure as `scale` — the point is the
+                // request count, not a new traffic shape.
+                let mut spec = scale_spec(k);
+                spec.name = format!("megascale(rate={})", k.rate);
+                ScenarioRun {
+                    catalog: ModelCatalog::paper_multi_model(),
+                    spec,
+                    ..base
+                }
+            }
             Scenario::Failover => {
                 let fleet = fleet_a100(k.fleet.max(2));
                 // Kill the last instance a tenth into the nominal run:
@@ -538,6 +572,25 @@ mod tests {
         assert!(batch_span <= 0.85 * 7200.0, "batch span {batch_span}");
         let inter_span = (n as f64 / 2.0) / (rate * 1.25); // diurnal mean
         assert!(inter_span <= 0.85 * 7200.0, "interactive span {inter_span}");
+    }
+
+    #[test]
+    fn megascale_scenario_sizes_to_a_million_requests() {
+        let s = Scenario::Megascale;
+        let n = s.requests_for(s.default_rate(), 7200.0);
+        assert!(n >= 1_000_000, "{n}");
+        // Even hostile knobs can't shrink it below the floor.
+        assert!(s.requests_for(0.001, 1.0) >= 1_000_000);
+        // Arrivals still stop inside the horizon at the default rate.
+        let span = (n as f64 / 2.0) / s.default_rate();
+        assert!(span <= 0.9 * 7200.0, "arrival span {span}");
+        // Same mixed-SLO multi-model shape as `scale`.
+        let run = s.build(&ScenarioKnobs::default());
+        assert!(run.spec.name.starts_with("megascale"));
+        let classes: std::collections::BTreeSet<_> =
+            run.spec.streams.iter().map(|s| s.class).collect();
+        assert!(classes.len() >= 3, "mixed SLO classes required");
+        assert!(run.catalog.models.len() >= 7);
     }
 
     #[test]

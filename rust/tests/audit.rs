@@ -43,6 +43,8 @@ const FIXTURES: &[(&str, &str, Option<Rule>)] = &[
     ("hot_path_panic_bad.rs", "src/coordinator/fixture.rs", Some(Rule::HotPathPanic)),
     ("hot_path_panic_waived.rs", "src/coordinator/fixture.rs", None),
     ("hot_path_panic_test_exempt.rs", "src/coordinator/fixture.rs", None),
+    ("hot_loop_alloc_bad.rs", "src/sim/fixture.rs", Some(Rule::HotLoopAlloc)),
+    ("hot_loop_alloc_waived.rs", "src/coordinator/sched/fixture.rs", None),
     ("pricing_seam_bad.rs", "src/sim/fixture.rs", Some(Rule::PricingSeam)),
     ("pricing_seam_waived.rs", "src/sim/fixture.rs", None),
     ("waiver_hygiene_bad.rs", "src/sim/fixture.rs", Some(Rule::WaiverHygiene)),

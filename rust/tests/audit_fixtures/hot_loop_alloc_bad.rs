@@ -1,0 +1,13 @@
+//! Fixture: per-iteration allocation churn inside a marked hot loop.
+//! Scanned as src/sim/fixture.rs, where `audit:hot-loop` extents are
+//! honored — the `.to_vec()` inside the loop must fire hot-loop-alloc.
+
+pub fn walk(xs: &[Vec<u64>]) -> usize {
+    let mut total = 0;
+    // audit:hot-loop
+    for x in xs {
+        let copy = x.to_vec();
+        total += copy.len();
+    }
+    total
+}

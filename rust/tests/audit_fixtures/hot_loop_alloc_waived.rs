@@ -1,0 +1,14 @@
+//! Fixture: a judged-acceptable allocation inside a marked hot loop,
+//! waived in place with its justification.
+
+pub fn walk(xs: &[Vec<u64>]) -> usize {
+    let mut total = 0;
+    // audit:hot-loop
+    for x in xs {
+        // audit:allow(hot-loop-alloc): one small copy per group, amortized
+        // away by the per-group service-time estimate that follows it.
+        let copy = x.to_vec();
+        total += copy.len();
+    }
+    total
+}

@@ -52,6 +52,66 @@ fn run_scenario(scenario: Scenario, policy: Policy, requests: usize, threads: us
     Simulation::new(cfg, &trace).run(&trace)
 }
 
+/// The same run on the retained `BinaryHeap` clock instead of the
+/// timer wheel (`Simulation::new_with_heap_clock`) — the wheel ≡ heap
+/// equivalence gate below drives whole scenarios through both.
+fn run_scenario_heap_clock(
+    scenario: Scenario,
+    policy: Policy,
+    requests: usize,
+    threads: usize,
+) -> RunMetrics {
+    let knobs = ScenarioKnobs {
+        rate: scenario.default_rate(),
+        requests,
+        fleet: scenario.default_fleet(),
+        seed: 42,
+    };
+    let run = scenario.build(&knobs);
+    let trace = Trace::generate(&run.spec, knobs.seed);
+    let mut cfg = run.sim_config(policy);
+    cfg.seed = knobs.seed;
+    cfg.threads = threads;
+    Simulation::new_with_heap_clock(cfg, &trace).run(&trace)
+}
+
+#[test]
+fn timer_wheel_equals_heap_clock_on_scale_scenario() {
+    // The tentpole's correctness half: swapping the event queue must be
+    // invisible in the metrics. The scale shape (incremental scheduler
+    // in steady state, multi-model swaps) at test size, at every lane
+    // count — the wheel-backed run and the heap-backed run must collide
+    // digest for digest.
+    for threads in [1, 2, 4] {
+        let wheel = run_scenario(Scenario::Scale, Policy::qlm(), 2500, threads);
+        let heap = run_scenario_heap_clock(Scenario::Scale, Policy::qlm(), 2500, threads);
+        assert_eq!(wheel.completed_count(), heap.completed_count(), "threads={threads}");
+        assert_eq!(
+            wheel.digest(),
+            heap.digest(),
+            "threads={threads}: timer wheel diverged from the heap clock"
+        );
+    }
+}
+
+#[test]
+fn timer_wheel_equals_heap_clock_on_autoscale_scenario() {
+    // Autoscale adds provision events and view-set churn — the clock
+    // carries a moving instance population and far-future provision
+    // timers, the wheel's cascade-heavy regime.
+    for threads in [1, 2, 4] {
+        let wheel = run_scenario(Scenario::Autoscale, Policy::qlm(), 2000, threads);
+        let heap = run_scenario_heap_clock(Scenario::Autoscale, Policy::qlm(), 2000, threads);
+        assert_eq!(wheel.scale_ups, heap.scale_ups, "threads={threads}");
+        assert_eq!(wheel.scale_downs, heap.scale_downs, "threads={threads}");
+        assert_eq!(
+            wheel.digest(),
+            heap.digest(),
+            "threads={threads}: timer wheel diverged from the heap clock"
+        );
+    }
+}
+
 #[test]
 fn threaded_equals_serial_on_scale_scenario() {
     // The scale shape (mixed SLO classes, multiple models, incremental

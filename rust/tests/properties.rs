@@ -6,7 +6,6 @@
 
 use std::collections::BTreeMap;
 use std::collections::HashSet;
-use std::collections::VecDeque;
 
 use qlm::backend::{
     GpuKind, Instance, InstanceConfig, InstanceId, KvCache, ModelCatalog, ModelId, PerfModel,
@@ -104,7 +103,7 @@ fn prop_scheduler_assignment_is_partition() {
                 class: SloClass::Batch1,
                 slo: SloTarget::new(30.0 + rng.f64() * 3600.0, 1.0),
                 earliest_arrival_s: rng.f64() * 50.0,
-                members: VecDeque::from_iter(0..(1 + rng.usize(64)) as u64),
+                members: (0..(1 + rng.usize(64)) as u64).collect(),
                 mega: false,
             })
             .collect();
@@ -454,6 +453,76 @@ fn prop_virtual_queues_rebuild_identically_after_failure() {
     }
 }
 
+/// Property (million-request hot path): the timer wheel pops in exactly
+/// the `BinaryHeap` `(t, seq)` order under adversarial workloads —
+/// coarse-quantized times (duplicate timestamps are common), far-future
+/// pushes (level-1 cascade and overflow re-base), pushes *behind* the
+/// drain cursor (late events spliced into the live drain buffer), and
+/// the wake-coalescing / stale-`take_due_wake` paths the engine leans
+/// on. Every pop and every wake decision must agree bit-for-bit.
+#[test]
+fn prop_timer_wheel_matches_heap_order() {
+    use qlm::sim::event::{EventCore, EventKind};
+    for seed in 900..940 {
+        let mut rng = Rng::new(seed);
+        let mut wheel = EventCore::new(4);
+        let mut heap = EventCore::new_heap_baseline(4);
+        let compare = |a: Option<qlm::sim::event::Event>, b: Option<qlm::sim::event::Event>| {
+            let key = |e: &qlm::sim::event::Event| (e.t.to_bits(), e.seq);
+            assert_eq!(a.as_ref().map(key), b.as_ref().map(key), "seed {seed}: pop diverged");
+            assert_eq!(a.map(|e| e.kind), b.map(|e| e.kind), "seed {seed}: kind diverged");
+            a
+        };
+        let mut last_t = 0.0f64;
+        let n_ops = 200 + rng.usize(600);
+        for i in 0..n_ops {
+            let roll = rng.f64();
+            if roll < 0.55 {
+                let t = if rng.f64() < 0.1 {
+                    // Far future: level-1 cascade / overflow re-base.
+                    rng.range(1.0e4, 3.0e6)
+                } else if rng.f64() < 0.2 {
+                    // Behind the cursor: a late push into the drain.
+                    (last_t - rng.f64() * 5.0).max(0.0)
+                } else {
+                    // Quantized: duplicate timestamps are common.
+                    last_t + rng.usize(400) as f64 * 0.05
+                };
+                let kind = if rng.f64() < 0.5 {
+                    EventKind::Arrival(i)
+                } else {
+                    EventKind::Fail(InstanceId(rng.usize(4) as u32))
+                };
+                wheel.push(t, kind);
+                heap.push(t, kind);
+            } else if roll < 0.8 {
+                if let Some(e) = compare(wheel.pop(), heap.pop()) {
+                    last_t = e.t;
+                }
+            } else {
+                // Wake coalescing and stale-wake takes must agree too.
+                let id = InstanceId(rng.usize(4) as u32);
+                if rng.f64() < 0.6 {
+                    let t = last_t + rng.f64() * 2.0;
+                    wheel.wake(id, t);
+                    heap.wake(id, t);
+                } else {
+                    let t = last_t + rng.range(-1.0, 1.0);
+                    assert_eq!(
+                        wheel.take_due_wake(id, t),
+                        heap.take_due_wake(id, t),
+                        "seed {seed}: stale-wake decision diverged"
+                    );
+                }
+            }
+            assert_eq!(wheel.queue_len(), heap.queue_len(), "seed {seed}: len diverged");
+        }
+        // Drain both to empty: the tails must match event for event.
+        while compare(wheel.pop(), heap.pop()).is_some() {}
+        assert_eq!(wheel.queue_len(), 0, "seed {seed}");
+    }
+}
+
 /// Property: RWT estimates are monotone — adding a group ahead never
 /// decreases a group's waiting time; swap charges only at model changes.
 #[test]
@@ -471,7 +540,7 @@ fn prop_rwt_monotone_in_queue_prefix() {
                 class: SloClass::Batch1,
                 slo: SloTarget::new(60.0, 1.0),
                 earliest_arrival_s: 0.0,
-                members: VecDeque::from_iter(0..(1 + rng.usize(128)) as u64),
+                members: (0..(1 + rng.usize(128)) as u64).collect(),
                 mega: false,
             })
             .collect();
