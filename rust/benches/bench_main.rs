@@ -131,27 +131,66 @@ mod alloc_count {
     use std::sync::atomic::{AtomicU64, Ordering};
 
     static ALLOCS: AtomicU64 = AtomicU64::new(0);
+    /// Live heap bytes (adds on alloc, subtracts on free) and the
+    /// high-water mark — the memory half of the gigascale gate: a
+    /// streamed-compact 10M-request run must peak at O(in-flight)
+    /// bytes, while a materialized trace shows up as gigabytes here.
+    static BYTES: AtomicU64 = AtomicU64::new(0);
+    static PEAK: AtomicU64 = AtomicU64::new(0);
 
     pub struct Counting;
 
-    // SAFETY: delegates verbatim to `System`; the only addition is a
-    // relaxed atomic increment, which allocates nothing itself.
+    fn note_grow(sz: u64) {
+        let cur = BYTES.fetch_add(sz, Ordering::Relaxed) + sz;
+        // Relaxed max-update CAS loop: racing threads can only raise it.
+        let mut peak = PEAK.load(Ordering::Relaxed);
+        while cur > peak {
+            match PEAK.compare_exchange_weak(peak, cur, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(p) => peak = p,
+            }
+        }
+    }
+
+    // SAFETY: delegates verbatim to `System`; the only addition is
+    // relaxed atomic accounting, which allocates nothing itself.
     unsafe impl GlobalAlloc for Counting {
         unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
-            unsafe { System.alloc(layout) }
+            let p = unsafe { System.alloc(layout) };
+            if !p.is_null() {
+                note_grow(layout.size() as u64);
+            }
+            p
         }
         unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            BYTES.fetch_sub(layout.size() as u64, Ordering::Relaxed);
             unsafe { System.dealloc(ptr, layout) }
         }
         unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
-            unsafe { System.realloc(ptr, layout, new_size) }
+            let p = unsafe { System.realloc(ptr, layout, new_size) };
+            if !p.is_null() {
+                BYTES.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+                note_grow(new_size as u64);
+            }
+            p
         }
     }
 
     pub fn allocs() -> u64 {
         ALLOCS.load(Ordering::Relaxed)
+    }
+
+    /// High-water heap mark (bytes) since process start / last reset.
+    pub fn peak_bytes() -> u64 {
+        PEAK.load(Ordering::Relaxed)
+    }
+
+    /// Drop the high-water mark to the current live size, so a bench
+    /// measures its own peak rather than inheriting an earlier bench's.
+    pub fn reset_peak() {
+        PEAK.store(BYTES.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 }
 
@@ -1092,6 +1131,152 @@ fn bench_megascale() {
     }
 }
 
+/// Wall-clock budget for the 10M-request gigascale run: ~8.5× the
+/// megascale event count, so ~8.5× its budget, rounded up for shared
+/// CI runners. A streaming or sharding regression blows it by an order
+/// of magnitude, not by percent.
+const GIGASCALE_BUDGET_S: f64 = 3600.0;
+
+/// Peak-heap budget for gigascale: the streamed-compact path holds
+/// O(in-flight) request state plus the broker's 8-byte-per-id route
+/// table (~80 MB at 10M). A materialized trace (~0.6 GB) or an
+/// archived completed set (~2 GB) lands far past this line.
+const GIGASCALE_PEAK_BYTES: u64 = 2_000_000_000;
+
+/// The 10M-request gigascale gate: run `--scenario gigascale` through
+/// the streamed-arrival + compact-records path end to end, recording
+/// wall time AND peak heap bytes (the counting allocator's high-water
+/// mark) into `BENCH_qlm.json`. Explicit-only (`cargo bench --
+/// gigascale`); `QLM_SKIP_SCALE_GATE=1` waives both budget asserts on
+/// known-slow hosts while still recording the numbers. The trace is
+/// never materialized — `Simulation::new_streaming` profiles and
+/// replays the seeded stream, which is the whole point of the gate.
+fn bench_gigascale() {
+    let scenario = Scenario::Gigascale;
+    let knobs = ScenarioKnobs {
+        rate: scenario.default_rate(),
+        requests: scenario.requests_for(scenario.default_rate(), 7200.0),
+        fleet: scenario.default_fleet(),
+        seed: 7,
+    };
+    let run = scenario.build(&knobs);
+    let total = run.spec.total_requests();
+    assert!(
+        total >= 10_000_000,
+        "gigascale must be a 10M+ request workload, got {total}"
+    );
+    let mut cfg = run.sim_config(Policy::qlm());
+    cfg.seed = knobs.seed;
+    cfg.compact_records = true;
+    alloc_count::reset_peak();
+    let t0 = Instant::now();
+    let m = Simulation::new_streaming(cfg, &run.spec, knobs.seed).run_streaming();
+    let wall = t0.elapsed().as_secs_f64();
+    let peak = alloc_count::peak_bytes();
+    println!(
+        "gigascale/{total} reqs streamed end-to-end   {wall:>9.1} s wall \
+         ({} completed, peak heap {:.2} GB)",
+        m.completed_count(),
+        peak as f64 / 1e9,
+    );
+    perf_log::record("gigascale_wall_s", wall);
+    perf_log::record("gigascale_requests", total as f64);
+    perf_log::record("gigascale_peak_alloc_bytes", peak as f64);
+    if std::env::var_os("QLM_SKIP_SCALE_GATE").is_none() {
+        assert!(
+            wall <= GIGASCALE_BUDGET_S,
+            "gigascale run blew its wall-clock budget: {wall:.1} s > {GIGASCALE_BUDGET_S} s \
+             (set QLM_SKIP_SCALE_GATE=1 to waive on a known-slow host)"
+        );
+        assert!(
+            peak <= GIGASCALE_PEAK_BYTES,
+            "gigascale run blew its peak-heap budget: {peak} B > {GIGASCALE_PEAK_BYTES} B — \
+             something materialized O(total-requests) state on the streamed path"
+        );
+    }
+}
+
+/// The shard-parallel scheduling claim: per-queue repricing walks on a
+/// multi-model `scale`-shaped cached plan are disjoint by construction
+/// (one model's shard feeds one queue's groups), so the delta pass fans
+/// them over the worker pool. This bench runs the same warm delta-pass
+/// sequence through a serial (threads=1) and a sharded-parallel
+/// (threads=4) scheduler, asserts the plans are identical, and reports
+/// the speedup the CI bench-smoke job floors at >= 1.5x.
+fn bench_shard_sched() {
+    const N_INSTANCES: u32 = 16;
+    const N_GROUPS: usize = 8192;
+    const DIRTY_PER_PASS: usize = 16;
+    const PASSES: usize = 24;
+    let catalog = ModelCatalog::paper_multi_model();
+    let vs = views(N_INSTANCES, &catalog);
+    // Multi-model scale shape: groups spread over four models and seven
+    // deadline tiers, ~512 groups per queue once placed.
+    let groups: Vec<RequestGroup> = (0..N_GROUPS as u64)
+        .map(|g| grp(g, (g % 4) as u32, 256, 60.0 + (g % 7) as f64 * 300.0))
+        .collect();
+    let refs: Vec<&RequestGroup> = groups.iter().collect();
+    let drive = |threads: usize| -> (f64, Vec<(u32, Vec<GroupId>)>) {
+        let sched = GlobalScheduler::new(
+            SchedulerConfig {
+                solver: SolverKind::Greedy,
+                threads,
+                ..Default::default()
+            },
+            RwtEstimator::new(ProfileTable::default()),
+        );
+        sched.schedule(&refs, &vs, 0.0);
+        let mut cursor = 0usize;
+        let mut pass = |cursor: &mut usize| {
+            let dirty: Vec<&RequestGroup> = (0..DIRTY_PER_PASS)
+                .map(|k| &groups[(*cursor + k * 37) % N_GROUPS])
+                .collect();
+            *cursor = (*cursor + DIRTY_PER_PASS) % N_GROUPS;
+            let d = SchedDelta {
+                dirty,
+                removed: vec![],
+                total_groups: N_GROUPS,
+                groups: None,
+            };
+            sched.try_schedule_delta(&d, &vs, 0.0).expect("warm cache")
+        };
+        // Warm passes: scratch buffers and cached queues reach steady
+        // size before the timed window.
+        for _ in 0..4 {
+            pass(&mut cursor);
+        }
+        let t0 = Instant::now();
+        let mut last = None;
+        for _ in 0..PASSES {
+            last = Some(pass(&mut cursor));
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1000.0 / PASSES as f64;
+        let mut orders: Vec<(u32, Vec<GroupId>)> = last
+            .expect("at least one pass")
+            .orders
+            .into_iter()
+            .map(|(id, o)| (id.0, o))
+            .collect();
+        orders.sort_by_key(|(id, _)| *id);
+        (ms, orders)
+    };
+    let (serial_ms, serial_orders) = drive(1);
+    let (par_ms, par_orders) = drive(4);
+    assert_eq!(
+        serial_orders, par_orders,
+        "shard-parallel delta pass diverged from the serial plan"
+    );
+    let speedup = serial_ms / par_ms.max(1e-9);
+    println!(
+        "shard_sched/delta pass {DIRTY_PER_PASS} dirty, {N_GROUPS} grp, {N_INSTANCES} q  \
+         {serial_ms:>7.2} ms serial -> {par_ms:>7.2} ms x4"
+    );
+    println!("shard_sched speedup: {speedup:.1}x sharded vs unified (target >= 1.5x)");
+    perf_log::record("shard_sched_serial_ms", serial_ms);
+    perf_log::record("shard_sched_par_ms", par_ms);
+    perf_log::record("shard_sched_speedup_x", speedup);
+}
+
 #[cfg(feature = "pjrt")]
 fn bench_runtime_decode() {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
@@ -1141,6 +1326,19 @@ fn main() {
         bench_megascale();
     } else if filter.is_none() {
         println!("megascale: run explicitly with `cargo bench -- megascale` (1M-request gate)");
+    }
+    // Explicit-only for the same reason, an order of magnitude up: the
+    // 10M-request streamed run is the wall + peak-heap CI gate.
+    if filter.as_deref() == Some("gigascale") {
+        bench_gigascale();
+    } else if filter.is_none() {
+        println!(
+            "gigascale: run explicitly with `cargo bench -- gigascale` \
+             (10M-request streamed gate)"
+        );
+    }
+    if runs("shard_sched") {
+        bench_shard_sched();
     }
     if runs("rwt") {
         bench_rwt();

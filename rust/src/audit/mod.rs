@@ -42,6 +42,7 @@ pub enum Rule {
     HotPathPanic,
     HotLoopAlloc,
     PricingSeam,
+    ImportLayering,
     WaiverHygiene,
 }
 
@@ -56,7 +57,7 @@ pub struct RuleInfo {
 }
 
 /// The rule table, in reporting order.
-pub const RULES: [RuleInfo; 9] = [
+pub const RULES: [RuleInfo; 10] = [
     RuleInfo {
         rule: Rule::HashCollections,
         id: "hash-collections",
@@ -185,6 +186,29 @@ pub const RULES: [RuleInfo; 9] = [
                   one-price/one-comparator invariant exists to prevent.\n\
                   Fix: call through GlobalScheduler / pricing's public helpers, or \
                   waive with `// audit:allow(pricing-seam): <reason>`.",
+    },
+    RuleInfo {
+        rule: Rule::ImportLayering,
+        id: "import-layering",
+        group: "architecture",
+        summary: "cross-module `crate::` imports must respect the layer table \
+                  (workload/ never imports coordinator/, sim/ never imports figures/, …)",
+        explain: "The module graph is layered on purpose: util/ sits below \
+                  everything, workload/ produces traces without knowing who consumes \
+                  them, coordinator/ schedules without knowing it is being simulated, \
+                  and the reporting layers (metrics/, figures/, obs/) sit on top. The \
+                  sharded-queue work leans on this — shard routing stays correct only \
+                  because nothing below coordinator/ can reach into its internals, and \
+                  streamed trace generation only composes because workload/ has no \
+                  back-edge into the scheduler it feeds. The rule scans the code view \
+                  for `crate::<module>` paths and flags any edge the per-directory \
+                  forbidden table names (e.g. workload/ -> coordinator/, sim/ -> \
+                  figures/, metrics/ -> sim/). Directories outside the table \
+                  (backend/, runtime/, solver/, audit/) and the tests/ tree are \
+                  unconstrained.\n\
+                  Fix: move the shared type down a layer (usually into backend/ or \
+                  util/), invert the dependency, or waive with \
+                  `// audit:allow(import-layering): <why this edge is sound>`.",
     },
     RuleInfo {
         rule: Rule::WaiverHygiene,
@@ -345,6 +369,7 @@ mod tests {
             Rule::HotPathPanic,
             Rule::HotLoopAlloc,
             Rule::PricingSeam,
+            Rule::ImportLayering,
             Rule::WaiverHygiene,
         ];
         assert_eq!(RULES.len(), all.len());

@@ -48,6 +48,27 @@ const UNSAFE_OK: &str = "src/util/pool.rs";
 const SEAM_PREFIX: &str = "src/coordinator/sched/";
 const SEAM_FILES: [&str; 2] = ["src/coordinator/rwt.rs", "src/coordinator/scheduler.rs"];
 
+/// The layer table (import-layering rule): for each constrained
+/// directory, the top-level modules it must never import via a
+/// `crate::<module>` path. Directories absent from the table
+/// (backend/, runtime/, solver/, audit/, main.rs, tests/) are
+/// unconstrained. The table encodes chosen forbidden edges, not a
+/// strict total order — e.g. workload/ may size scenarios off sim/
+/// fleet shapes, but must never reach into the coordinator it feeds.
+const LAYER_EDGES: [(&str, &[&str]); 8] = [
+    (
+        "src/util/",
+        &["workload", "coordinator", "sim", "baselines", "capacity", "metrics", "figures", "obs"],
+    ),
+    ("src/workload/", &["coordinator", "metrics", "figures", "obs"]),
+    ("src/coordinator/", &["sim", "baselines", "capacity", "metrics", "figures", "obs"]),
+    ("src/baselines/", &["sim", "capacity", "metrics", "figures", "obs"]),
+    ("src/metrics/", &["sim", "baselines", "capacity", "figures", "obs"]),
+    ("src/capacity/", &["baselines", "metrics", "figures", "obs"]),
+    ("src/sim/", &["figures"]),
+    ("src/obs/", &["sim", "capacity", "figures", "metrics"]),
+];
+
 /// Identifiers that constitute the scoring/affinity seam.
 const SEAM_TOKENS: [&str; 6] = [
     "price_group",
@@ -60,6 +81,29 @@ const SEAM_TOKENS: [&str; 6] = [
 
 fn in_any(rel: &str, prefixes: &[&str]) -> bool {
     prefixes.iter().any(|p| rel.starts_with(p))
+}
+
+/// The top-level module each `crate::<ident>` path on one code line
+/// points at. Token-boundary-checked on the left so `my_crate::x`
+/// (a different crate) never matches.
+fn crate_targets(code: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut rest = code;
+    while let Some(pos) = rest.find("crate::") {
+        let bounded = match rest[..pos].bytes().last() {
+            None => true,
+            Some(b) => !(b.is_ascii_alphanumeric() || b == b'_'),
+        };
+        let after = &rest[pos + "crate::".len()..];
+        let end = after
+            .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+            .unwrap_or(after.len());
+        if bounded && end > 0 {
+            out.push(&after[..end]);
+        }
+        rest = &after[end..];
+    }
+    out
 }
 
 /// Mark every line that belongs to a `#[cfg(test)]` item (the attribute
@@ -247,6 +291,7 @@ pub(super) fn scan_lines(rel: &str, source: &str) -> (Vec<Violation>, Vec<Waiver
     let thread_ok = THREAD_OK.contains(&rel);
     let unsafe_ok = rel == UNSAFE_OK;
     let seam_ok = rel.starts_with(SEAM_PREFIX) || SEAM_FILES.contains(&rel);
+    let layering = LAYER_EDGES.iter().find(|(dir, _)| rel.starts_with(dir));
 
     // Pass 2: token rules over the code view.
     for (idx, line) in lines.iter().enumerate() {
@@ -339,6 +384,16 @@ pub(super) fn scan_lines(rel: &str, source: &str) -> (Vec<Violation>, Vec<Waiver
                     emit(
                         Rule::PricingSeam,
                         format!("`{word}` named outside the sched core"),
+                    );
+                }
+            }
+        }
+        if let Some((dir, forbidden)) = layering {
+            for target in crate_targets(code) {
+                if forbidden.contains(&target) {
+                    emit(
+                        Rule::ImportLayering,
+                        format!("`crate::{target}` imported from `{dir}`"),
                     );
                 }
             }
@@ -504,6 +559,37 @@ mod tests {
                              }\n\
                          }\n";
         assert!(rules_of("src/sim/x.rs", test_only).is_empty());
+    }
+
+    #[test]
+    fn import_layering_blocks_forbidden_edges_only() {
+        let down = "use crate::coordinator::GlobalQueue;\n";
+        assert_eq!(rules_of("src/workload/x.rs", down), vec![Rule::ImportLayering]);
+        // sim/ sits above the coordinator, so the same import is fine there.
+        assert!(rules_of("src/sim/x.rs", down).is_empty());
+        let fig = "use crate::figures::plot_attainment;\n";
+        assert_eq!(rules_of("src/sim/x.rs", fig), vec![Rule::ImportLayering]);
+        // figures/ is the top layer: it may import anything.
+        assert!(rules_of("src/figures/x.rs", "use crate::sim::Simulation;\n").is_empty());
+        // Directories outside the table are unconstrained.
+        assert!(rules_of("src/backend/x.rs", down).is_empty());
+    }
+
+    #[test]
+    fn import_layering_needs_a_real_crate_root_path() {
+        // `my_crate::coordinator` is a different crate; comments and
+        // strings never fire (code view only).
+        let src = "use my_crate::coordinator::X;\n\
+                   // crate::coordinator named in prose\n\
+                   let s = \"crate::coordinator\";\n";
+        assert!(rules_of("src/workload/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn import_layering_is_waivable() {
+        let src = "// audit:allow(import-layering): transitional shim, tracked for removal\n\
+                   use crate::coordinator::GlobalQueue;\n";
+        assert!(rules_of("src/workload/x.rs", src).is_empty());
     }
 
     #[test]

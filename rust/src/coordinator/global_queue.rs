@@ -8,92 +8,66 @@
 //! that virtual queues can be rebuilt from the global queue alone after
 //! an instance failure.
 //!
-//! §Perf: broker ids are dense and monotonically increasing, so the
-//! store is a slab (`Vec<Option<Request>>` indexed by id) rather than a
-//! keyed map, and the waiting set is a dense [`IdBitSet`] over the same
-//! indices rather than a keyed set. Every per-request operation on the
-//! simulator hot path (submit, mark_running, requeue, ack) is O(1) with
-//! no per-node allocation; the seed implementation paid an O(n)
-//! `Vec::retain` per pull and per ack, which dominated profiles at tens
-//! of thousands of queued requests, and the `BTreeSet` that replaced it
-//! still paid a node allocation and a pointer-chasing O(log n) walk per
-//! membership change — measurable at the million-request scale of
-//! `--scenario megascale`.
+//! §Perf: the broker is **sharded by model** ([`QueueShard`]): each
+//! model gets its own slot-recycling slab, waiting bitset, and
+//! open-group index, behind this thin routing façade. The public API
+//! and the global id semantics are unchanged from the flat-slab
+//! implementation — broker ids are dense and monotonically increasing
+//! across the whole fleet (`route.len()` at submit), and ids are never
+//! reused. A `route` table (one u64 per all-time id, packing shard +
+//! local slot; `u64::MAX` once acked) resolves every id in O(1).
+//! Shards are disjoint by construction — a request never changes model
+//! — which is what makes the per-shard scheduler fan-out sound, and
+//! per-shard dirty flags let a scheduler pass skip shards whose
+//! requests haven't changed since the last pass ([`Self::begin_pass`]).
+//!
+//! Every per-request operation on the simulator hot path (submit,
+//! mark_running, requeue, ack) is O(1) with no per-request allocation
+//! in steady state; the waiting-set union iterates shards' bitset words
+//! OR-ed per index, preserving the ascending-global-id (FCFS) order of
+//! the flat bitset at the same cost for a single model.
 
+use std::collections::BTreeMap;
+
+use crate::backend::{InstanceId, ModelId};
 use crate::coordinator::request::{Request, RequestState};
+use crate::coordinator::request_group::GroupId;
+use crate::coordinator::shard::QueueShard;
+use crate::workload::SloClass;
 
-/// Ordered set of dense slab ids: one bit per slot. Insert / remove /
-/// contains are O(1); iteration is an ascending word scan, so — ids
-/// being assigned in submit order — iteration order *is* arrival order,
-/// exactly like the `BTreeSet<u64>` this replaces.
-#[derive(Debug, Default)]
-struct IdBitSet {
-    words: Vec<u64>,
-    len: usize,
+/// Route-table sentinel: the id has been acked and its slot recycled.
+const RETIRED: u64 = u64::MAX;
+
+fn pack(shard: usize, slot: u32) -> u64 {
+    ((shard as u64) << 32) | slot as u64
 }
 
-impl IdBitSet {
-    fn insert(&mut self, id: u64) {
-        let (w, b) = ((id / 64) as usize, id % 64);
-        if w >= self.words.len() {
-            self.words.resize(w + 1, 0);
-        }
-        let mask = 1u64 << b;
-        if self.words[w] & mask == 0 {
-            self.words[w] |= mask;
-            self.len += 1;
-        }
-    }
-
-    fn remove(&mut self, id: u64) {
-        let (w, b) = ((id / 64) as usize, id % 64);
-        if let Some(word) = self.words.get_mut(w) {
-            let mask = 1u64 << b;
-            if *word & mask != 0 {
-                *word &= !mask;
-                self.len -= 1;
-            }
-        }
-    }
-
-    fn contains(&self, id: u64) -> bool {
-        let (w, b) = ((id / 64) as usize, id % 64);
-        self.words.get(w).is_some_and(|word| word & (1 << b) != 0)
-    }
-
-    fn len(&self) -> usize {
-        self.len
-    }
-
-    /// Set ids, ascending. Per word, peel set bits lowest-first
-    /// (`trailing_zeros` + clear-lowest) — allocation-free.
-    fn iter(&self) -> impl Iterator<Item = u64> + '_ {
-        self.words.iter().enumerate().flat_map(|(w, &word)| {
-            std::iter::successors((word != 0).then_some(word), |&bits| {
-                let rest = bits & (bits - 1);
-                (rest != 0).then_some(rest)
-            })
-            .map(move |bits| (w as u64) * 64 + bits.trailing_zeros() as u64)
-        })
-    }
-}
-
-/// The single-replica request store + waiting set.
+/// The single-replica request store + waiting set, sharded by model.
 #[derive(Debug, Default)]
 pub struct GlobalQueue {
-    /// Slab of live requests, indexed by broker id. Acked requests leave
-    /// a `None` tombstone so ids are never reused.
-    slots: Vec<Option<Request>>,
-    /// Number of `Some` entries in `slots`.
+    /// Per-model shards, in first-seen order.
+    shards: Vec<QueueShard>,
+    shard_of_model: BTreeMap<ModelId, usize>,
+    /// Broker id → packed (shard, slot); [`RETIRED`] once acked. Grows
+    /// with the all-time submit count (8 B/request) — the only O(total)
+    /// state a streamed, compact-records run keeps per request.
+    route: Vec<u64>,
+    /// Number of resident (un-acked) requests across all shards.
     live: usize,
-    /// Waiting request ids. Ids are assigned in submit order, so the
-    /// set's natural ordering *is* arrival order (FCFS base ordering).
-    waiting: IdBitSet,
+    /// Acked requests, archived for metrics. Empty in compact mode.
     pub completed: Vec<Request>,
+    /// Acks so far — equals `completed.len()` unless compact.
+    completed_count: usize,
+    /// Compact-records mode (gigascale benches): drop acked requests
+    /// instead of archiving them; callers fold their own tallies.
+    compact: bool,
     /// Ids refused by admission control (state `Shed`). The requests
-    /// stay in the slab (they must appear in the final records as
+    /// stay resident (they must appear in the final records as
     /// violations) but leave the waiting set for good.
     shed: Vec<u64>,
+    /// Cumulative scheduler-pass dirt counters (see [`Self::begin_pass`]).
+    shards_scanned: u64,
+    shards_skipped: u64,
 }
 
 impl GlobalQueue {
@@ -101,19 +75,55 @@ impl GlobalQueue {
         Self::default()
     }
 
-    /// Enqueue a new request; returns its broker id.
+    /// Compact-records mode: acked requests are dropped instead of
+    /// archived, keeping residency O(in-flight) at any request count.
+    /// The engine folds completion tallies before calling
+    /// [`Self::complete`]; `metrics::collect_records` sees no
+    /// completed requests, so this is for bench/scale runs only.
+    pub fn set_compact(&mut self, on: bool) {
+        self.compact = on;
+    }
+
+    pub fn is_compact(&self) -> bool {
+        self.compact
+    }
+
+    fn ensure_shard(&mut self, model: ModelId) -> usize {
+        if let Some(&i) = self.shard_of_model.get(&model) {
+            return i;
+        }
+        self.shards.push(QueueShard::new(model));
+        let i = self.shards.len() - 1;
+        self.shard_of_model.insert(model, i);
+        i
+    }
+
+    /// Resolve a live broker id to its shard + local slot.
+    fn locate(&self, id: u64) -> Option<(usize, u32)> {
+        let packed = *self.route.get(id as usize)?;
+        if packed == RETIRED {
+            return None;
+        }
+        Some(((packed >> 32) as usize, packed as u32))
+    }
+
+    /// Enqueue a new request; returns its broker id. Ids are global and
+    /// dense across shards: submit order *is* id order fleet-wide.
     pub fn submit(&mut self, mut req: Request) -> u64 {
-        let id = self.slots.len() as u64;
+        let id = self.route.len() as u64;
         req.id = id;
         req.state = RequestState::Waiting;
-        self.slots.push(Some(req));
+        let si = self.ensure_shard(req.model);
+        let shard = &mut self.shards[si];
+        let slot = shard.place(req);
+        shard.waiting.insert(id);
+        self.route.push(pack(si, slot));
         self.live += 1;
-        self.waiting.insert(id);
         id
     }
 
     pub fn len_waiting(&self) -> usize {
-        self.waiting.len()
+        self.shards.iter().map(|s| s.waiting.len()).sum()
     }
 
     pub fn len_total(&self) -> usize {
@@ -124,22 +134,49 @@ impl GlobalQueue {
         self.live == 0
     }
 
+    /// Acks so far. Use this (not `completed.len()`) for termination
+    /// checks — in compact mode the archive stays empty.
+    pub fn len_completed(&self) -> usize {
+        self.completed_count
+    }
+
     pub fn get(&self, id: u64) -> Option<&Request> {
-        self.slots.get(id as usize).and_then(|s| s.as_ref())
+        let (si, slot) = self.locate(id)?;
+        self.shards[si].get(slot)
     }
 
     pub fn get_mut(&mut self, id: u64) -> Option<&mut Request> {
-        self.slots.get_mut(id as usize).and_then(|s| s.as_mut())
+        let (si, slot) = self.locate(id)?;
+        self.shards[si].get_mut(slot)
     }
 
     /// Ids currently waiting, in arrival order (FCFS base ordering).
+    /// Shards hold disjoint global ids, so OR-ing their bitset words
+    /// per index walks the exact union, ascending.
     pub fn waiting_ids(&self) -> impl Iterator<Item = u64> + '_ {
-        self.waiting.iter()
+        let words = self
+            .shards
+            .iter()
+            .map(|s| s.waiting.words().len())
+            .max()
+            .unwrap_or(0);
+        (0..words).flat_map(move |w| {
+            let word = self
+                .shards
+                .iter()
+                .fold(0u64, |or, s| or | s.waiting.words().get(w).copied().unwrap_or(0));
+            std::iter::successors((word != 0).then_some(word), |&bits| {
+                let rest = bits & (bits - 1);
+                (rest != 0).then_some(rest)
+            })
+            .map(move |bits| (w as u64) * 64 + bits.trailing_zeros() as u64)
+        })
     }
 
     /// Is `id` in the waiting set?
     pub fn is_waiting(&self, id: u64) -> bool {
-        self.waiting.contains(id)
+        self.locate(id)
+            .is_some_and(|(si, _)| self.shards[si].waiting.contains(id))
     }
 
     /// Mark a request as pulled into a running batch (Request Pulling LSO).
@@ -148,51 +185,62 @@ impl GlobalQueue {
     /// this was the first pull (the waiting→running edge the RWT-accuracy
     /// ledger joins on), `Evicted` a re-pull after eviction.
     pub fn mark_running(&mut self, id: u64) -> Option<RequestState> {
-        let prior = match self.get_mut(id) {
-            Some(r) => {
-                let prior = r.state;
-                r.state = RequestState::Running;
-                Some(prior)
-            }
-            None => None,
-        };
-        self.waiting.remove(id);
-        prior
+        let (si, slot) = self.locate(id)?;
+        let shard = &mut self.shards[si];
+        let r = shard.get_mut(slot)?;
+        let prior = r.state;
+        r.state = RequestState::Running;
+        shard.waiting.remove(id);
+        shard.dirty = true;
+        Some(prior)
     }
 
     /// Re-queue an evicted request (Request Eviction LSO): it returns to
     /// the waiting set, retaining progress metadata.
-    pub fn requeue_evicted(
-        &mut self,
-        id: u64,
-        generated: u32,
-        evicted_from: crate::backend::InstanceId,
-    ) {
-        if let Some(r) = self.get_mut(id) {
-            r.state = RequestState::Evicted;
-            r.generated = generated;
-            r.evicted_from = Some(evicted_from);
-            self.waiting.insert(id);
+    pub fn requeue_evicted(&mut self, id: u64, generated: u32, evicted_from: InstanceId) {
+        if let Some((si, slot)) = self.locate(id) {
+            let shard = &mut self.shards[si];
+            if let Some(r) = shard.get_mut(slot) {
+                r.state = RequestState::Evicted;
+                r.generated = generated;
+                r.evicted_from = Some(evicted_from);
+                shard.waiting.insert(id);
+                shard.dirty = true;
+            }
         }
     }
 
     /// Ack a completed request: removed from the broker, archived for
-    /// metrics. `generated` is the final decode-token count — TPOT
-    /// accounting needs it alongside the first-token timestamp.
+    /// metrics (dropped in compact mode), its shard slot recycled, its
+    /// route entry retired — so the id keeps resolving to nothing and a
+    /// second ack is a no-op. `generated` is the final decode-token
+    /// count — TPOT accounting needs it alongside the first-token
+    /// timestamp.
     pub fn complete(&mut self, id: u64, first_token_s: Option<f64>, completed_s: f64, generated: u32) {
-        if let Some(slot) = self.slots.get_mut(id as usize) {
-            if let Some(mut r) = slot.take() {
-                self.live -= 1;
-                r.state = RequestState::Completed;
-                if r.first_token_s.is_none() {
-                    r.first_token_s = first_token_s;
-                }
-                r.completed_s = Some(completed_s);
-                r.generated = generated;
-                self.completed.push(r);
-            }
+        let Some((si, slot)) = self.locate(id) else {
+            return;
+        };
+        let shard = &mut self.shards[si];
+        let Some(mut r) = shard.take(slot) else {
+            return;
+        };
+        shard.waiting.remove(id);
+        // A completion shrinks the request's group, which the engine
+        // marks dirty — the shard must go dirty with it or a pass would
+        // skip a shard holding re-priceable work.
+        shard.dirty = true;
+        self.route[id as usize] = RETIRED;
+        self.live -= 1;
+        r.state = RequestState::Completed;
+        if r.first_token_s.is_none() {
+            r.first_token_s = first_token_s;
         }
-        self.waiting.remove(id);
+        r.completed_s = Some(completed_s);
+        r.generated = generated;
+        self.completed_count += 1;
+        if !self.compact {
+            self.completed.push(r);
+        }
     }
 
     /// Shed a request (admission control / unservable-group retirement):
@@ -200,14 +248,19 @@ impl GlobalQueue {
     /// the final records count it exactly once, as a violation. Only
     /// unserved requests can be shed; returns whether the state changed.
     pub fn shed(&mut self, id: u64) -> bool {
-        let Some(r) = self.get_mut(id) else {
+        let Some((si, slot)) = self.locate(id) else {
+            return false;
+        };
+        let shard = &mut self.shards[si];
+        let Some(r) = shard.get_mut(slot) else {
             return false;
         };
         if !matches!(r.state, RequestState::Waiting | RequestState::Evicted) {
             return false;
         }
         r.state = RequestState::Shed;
-        self.waiting.remove(id);
+        shard.waiting.remove(id);
+        shard.dirty = true;
         self.shed.push(id);
         true
     }
@@ -234,29 +287,132 @@ impl GlobalQueue {
     /// running on the lost instance reverts to Waiting; evicted-KV
     /// references to that instance are invalidated (the KV is gone, so
     /// generation restarts from the prompt). Returns affected ids.
-    pub fn fail_instance(
-        &mut self,
-        inst: crate::backend::InstanceId,
-        running_ids: &[u64],
-    ) -> Vec<u64> {
+    ///
+    /// Evicted-KV pointers are *instance*-scoped, not model-scoped: a
+    /// model swap parks the displaced requests of the instance's
+    /// **previous** model on it, so a failed instance can hold KV for
+    /// models other than the one it was last serving. The invalidation
+    /// sweep therefore crosses every shard, never just the shard of the
+    /// instance's current model.
+    pub fn fail_instance(&mut self, inst: InstanceId, running_ids: &[u64]) -> Vec<u64> {
         let mut affected = Vec::new();
         for &id in running_ids {
-            if let Some(r) = self.get_mut(id) {
-                r.state = RequestState::Waiting;
-                r.generated = 0;
-                r.evicted_from = None;
-                self.waiting.insert(id);
-                affected.push(id);
+            if let Some((si, slot)) = self.locate(id) {
+                let shard = &mut self.shards[si];
+                if let Some(r) = shard.get_mut(slot) {
+                    r.state = RequestState::Waiting;
+                    r.generated = 0;
+                    r.evicted_from = None;
+                    shard.waiting.insert(id);
+                    shard.dirty = true;
+                    affected.push(id);
+                }
             }
         }
         // Invalidate stale eviction pointers into the dead instance.
-        for r in self.slots.iter_mut().filter_map(|s| s.as_mut()) {
-            if r.evicted_from == Some(inst) {
-                r.evicted_from = None;
-                r.generated = 0;
+        for shard in &mut self.shards {
+            let mut touched = false;
+            for r in shard.iter_mut() {
+                if r.evicted_from == Some(inst) {
+                    r.evicted_from = None;
+                    r.generated = 0;
+                    touched = true;
+                }
+            }
+            if touched {
+                shard.dirty = true;
             }
         }
         affected
+    }
+
+    // ----- open-group index (shard-resident; engine-facing) -----
+
+    /// Lowest-id open (below-capacity) group for the key, if any — the
+    /// group new arrivals of that key should join first.
+    pub fn open_group_first(&self, model: ModelId, class: SloClass, mega: bool) -> Option<GroupId> {
+        let &si = self.shard_of_model.get(&model)?;
+        self.shards[si]
+            .open_groups
+            .get(&(class, mega))?
+            .iter()
+            .next()
+            .copied()
+    }
+
+    /// Register `gid` as open for the key.
+    pub fn open_group_insert(&mut self, model: ModelId, class: SloClass, mega: bool, gid: GroupId) {
+        let si = self.ensure_shard(model);
+        self.shards[si]
+            .open_groups
+            .entry((class, mega))
+            .or_default()
+            .insert(gid);
+    }
+
+    /// Remove `gid` from the key's open set (group filled or retired).
+    pub fn open_group_remove(&mut self, model: ModelId, class: SloClass, mega: bool, gid: GroupId) {
+        if let Some(&si) = self.shard_of_model.get(&model) {
+            let shard = &mut self.shards[si];
+            if let Some(set) = shard.open_groups.get_mut(&(class, mega)) {
+                set.remove(&gid);
+                if set.is_empty() {
+                    shard.open_groups.remove(&(class, mega));
+                }
+            }
+        }
+    }
+
+    /// Test-facing snapshot of the open-group index, sorted by key.
+    #[doc(hidden)]
+    pub fn open_groups_debug(&self) -> Vec<((ModelId, SloClass, bool), Vec<GroupId>)> {
+        let mut out: Vec<((ModelId, SloClass, bool), Vec<GroupId>)> = Vec::new();
+        for s in &self.shards {
+            for (&(class, mega), set) in &s.open_groups {
+                out.push(((s.model, class, mega), set.iter().copied().collect()));
+            }
+        }
+        out.sort_by_key(|&((m, c, mg), _)| (m, c, mg));
+        out
+    }
+
+    // ----- per-shard dirt (scheduler-pass skipping) -----
+
+    /// Start a scheduler pass: returns `(dirty, clean)` shard counts
+    /// and clears the flags. The scheduler's queue reads in a pass are
+    /// confined to dirty groups' members, and every mutation that
+    /// dirties a group dirties its model's shard (drains use
+    /// [`Self::touch_model`]), so dirty groups' shards ⊆ the dirty set
+    /// — the clean count is work the pass provably skips.
+    pub fn begin_pass(&mut self) -> (usize, usize) {
+        let mut scanned = 0usize;
+        for s in &mut self.shards {
+            if s.dirty {
+                scanned += 1;
+                s.dirty = false;
+            }
+        }
+        let skipped = self.shards.len() - scanned;
+        self.shards_scanned += scanned as u64;
+        self.shards_skipped += skipped as u64;
+        (scanned, skipped)
+    }
+
+    /// Cumulative `(scanned, skipped)` shard counts across passes.
+    pub fn shard_stats(&self) -> (u64, u64) {
+        (self.shards_scanned, self.shards_skipped)
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Mark a model's shard dirty without a request mutation — for
+    /// engine events (e.g. drains) that re-dirty groups directly.
+    pub fn touch_model(&mut self, model: ModelId) {
+        if let Some(&si) = self.shard_of_model.get(&model) {
+            self.shards[si].dirty = true;
+        }
     }
 }
 
@@ -280,6 +436,12 @@ mod tests {
 
     fn submit_one(q: &mut GlobalQueue, arrival: f64) -> u64 {
         q.submit(Request::from_trace(0, &trace_req(arrival)))
+    }
+
+    fn submit_model(q: &mut GlobalQueue, arrival: f64, model: ModelId) -> u64 {
+        let mut t = trace_req(arrival);
+        t.model = model;
+        q.submit(Request::from_trace(0, &t))
     }
 
     fn waiting_vec(q: &GlobalQueue) -> Vec<u64> {
@@ -307,6 +469,7 @@ mod tests {
         q.complete(id, None, 10.0, 50);
         assert!(q.get(id).is_none());
         assert_eq!(q.completed.len(), 1);
+        assert_eq!(q.len_completed(), 1);
         assert_eq!(q.completed[0].ttft(), Some(3.0));
     }
 
@@ -372,9 +535,15 @@ mod tests {
         q.mark_running(a);
         q.complete(a, Some(1.0), 2.0, 50);
         let b = submit_one(&mut q, 3.0);
-        assert!(b > a, "tombstoned slot must not be recycled");
+        assert!(b > a, "retired broker id must not be recycled");
         assert!(q.get(a).is_none());
         assert_eq!(q.len_total(), 1);
+        // The recycled *slot* now holds b; the stale id a still resolves
+        // to nothing — route retirement, not slot identity, is the
+        // liveness authority.
+        assert_eq!(q.get(b).unwrap().id, b);
+        assert!(!q.is_waiting(a));
+        assert!(q.mark_running(a).is_none());
     }
 
     #[test]
@@ -396,25 +565,6 @@ mod tests {
     }
 
     #[test]
-    fn bitset_iterates_ascending_across_word_boundaries() {
-        let mut s = IdBitSet::default();
-        for id in [200, 0, 63, 64, 127, 128, 5, 64] {
-            s.insert(id);
-        }
-        assert_eq!(s.len(), 7, "duplicate insert must not double-count");
-        let got: Vec<u64> = s.iter().collect();
-        assert_eq!(got, vec![0, 5, 63, 64, 127, 128, 200]);
-        s.remove(64);
-        s.remove(64);
-        s.remove(9999); // out of range: no-op
-        assert_eq!(s.len(), 6, "duplicate remove must not double-count");
-        assert!(!s.contains(64));
-        assert!(s.contains(63));
-        let got: Vec<u64> = s.iter().collect();
-        assert_eq!(got, vec![0, 5, 63, 127, 128, 200]);
-    }
-
-    #[test]
     fn double_complete_is_idempotent() {
         let mut q = GlobalQueue::new();
         let a = submit_one(&mut q, 0.0);
@@ -422,6 +572,103 @@ mod tests {
         q.complete(a, Some(1.0), 2.0, 50);
         q.complete(a, Some(5.0), 6.0, 50);
         assert_eq!(q.completed.len(), 1);
+        assert_eq!(q.len_completed(), 1);
         assert_eq!(q.len_total(), 0);
+    }
+
+    #[test]
+    fn multi_model_waiting_order_is_global_fcfs() {
+        // Requests interleaved across three models: the merged waiting
+        // scan must yield ascending global ids, not shard-major order.
+        let mut q = GlobalQueue::new();
+        let mut ids = Vec::new();
+        for i in 0..9 {
+            ids.push(submit_model(&mut q, i as f64, ModelId(i % 3)));
+        }
+        assert_eq!(q.shard_count(), 3);
+        assert_eq!(waiting_vec(&q), ids);
+        // Pull one per model; the rest keep global arrival order.
+        q.mark_running(ids[0]);
+        q.mark_running(ids[4]);
+        q.mark_running(ids[8]);
+        let expect: Vec<u64> = ids
+            .iter()
+            .copied()
+            .filter(|i| ![ids[0], ids[4], ids[8]].contains(i))
+            .collect();
+        assert_eq!(waiting_vec(&q), expect);
+        assert_eq!(q.len_waiting(), 6);
+    }
+
+    #[test]
+    fn cross_shard_eviction_pointers_invalidated_on_failure() {
+        // A request of model 1 parked its KV on instance 7, which last
+        // served model 0: the failure sweep must cross shards.
+        let mut q = GlobalQueue::new();
+        let a = submit_model(&mut q, 0.0, ModelId(0));
+        let b = submit_model(&mut q, 1.0, ModelId(1));
+        q.mark_running(b);
+        q.requeue_evicted(b, 12, InstanceId(7));
+        let affected = q.fail_instance(InstanceId(7), &[]);
+        assert!(affected.is_empty());
+        let rb = q.get(b).unwrap();
+        assert_eq!(rb.evicted_from, None, "other-shard KV pointer must be swept");
+        assert_eq!(rb.generated, 0);
+        assert_eq!(q.get(a).unwrap().state, RequestState::Waiting);
+    }
+
+    #[test]
+    fn begin_pass_skips_clean_shards() {
+        let mut q = GlobalQueue::new();
+        submit_model(&mut q, 0.0, ModelId(0));
+        submit_model(&mut q, 0.0, ModelId(1));
+        assert_eq!(q.begin_pass(), (2, 0), "both shards saw submits");
+        // No mutations: everything is skippable.
+        assert_eq!(q.begin_pass(), (0, 2));
+        // Touch only model 0.
+        let c = submit_model(&mut q, 1.0, ModelId(0));
+        assert_eq!(q.begin_pass(), (1, 1));
+        // Reads never dirty.
+        let _ = q.get(c);
+        let _ = q.is_waiting(c);
+        assert_eq!(q.begin_pass(), (0, 2));
+        q.touch_model(ModelId(1));
+        assert_eq!(q.begin_pass(), (1, 1));
+        assert_eq!(q.shard_stats(), (4, 6));
+    }
+
+    #[test]
+    fn compact_mode_counts_without_archiving() {
+        let mut q = GlobalQueue::new();
+        q.set_compact(true);
+        let a = submit_one(&mut q, 0.0);
+        let b = submit_one(&mut q, 1.0);
+        q.mark_running(a);
+        q.complete(a, Some(1.0), 2.0, 50);
+        q.complete(a, Some(9.0), 9.5, 50);
+        assert!(q.completed.is_empty(), "compact mode drops acked requests");
+        assert_eq!(q.len_completed(), 1);
+        assert_eq!(q.len_total(), 1);
+        assert_eq!(q.get(b).unwrap().id, b);
+    }
+
+    #[test]
+    fn open_group_index_is_per_shard_lowest_id_first() {
+        use crate::coordinator::request_group::GroupId;
+        let mut q = GlobalQueue::new();
+        let key = (SloClass::Interactive, false);
+        q.open_group_insert(ModelId(0), key.0, key.1, GroupId(5));
+        q.open_group_insert(ModelId(0), key.0, key.1, GroupId(2));
+        q.open_group_insert(ModelId(1), key.0, key.1, GroupId(9));
+        assert_eq!(q.open_group_first(ModelId(0), key.0, key.1), Some(GroupId(2)));
+        assert_eq!(q.open_group_first(ModelId(1), key.0, key.1), Some(GroupId(9)));
+        assert_eq!(q.open_group_first(ModelId(2), key.0, key.1), None);
+        q.open_group_remove(ModelId(0), key.0, key.1, GroupId(2));
+        assert_eq!(q.open_group_first(ModelId(0), key.0, key.1), Some(GroupId(5)));
+        q.open_group_remove(ModelId(0), key.0, key.1, GroupId(5));
+        assert_eq!(q.open_group_first(ModelId(0), key.0, key.1), None);
+        let dbg = q.open_groups_debug();
+        assert_eq!(dbg.len(), 1);
+        assert_eq!(dbg[0], ((ModelId(1), SloClass::Interactive, false), vec![GroupId(9)]));
     }
 }

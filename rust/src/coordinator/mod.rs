@@ -9,6 +9,7 @@
 //! (implicit in assignment), and model swapping.
 
 pub mod request;
+pub mod shard;
 pub mod global_queue;
 pub mod request_group;
 pub mod virtual_queue;

@@ -76,6 +76,11 @@ impl ProfileTable {
         self.map.insert((model, class, mega), p);
     }
 
+    /// Iterate the profiled (model, class, mega) keys in sorted order.
+    pub fn keys(&self) -> impl Iterator<Item = (ModelId, SloClass, bool)> + '_ {
+        self.map.keys().copied()
+    }
+
     pub fn get(&self, model: ModelId, class: SloClass, mega: bool) -> WorkloadProfile {
         if let Some(p) = self.map.get(&(model, class, mega)) {
             return *p;

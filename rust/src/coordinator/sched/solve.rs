@@ -439,10 +439,27 @@ impl GlobalScheduler {
         //     candidates against tails that still include the groups
         //     just removed above, steering arrivals away from queues
         //     that freed capacity this very pass.
-        for (k, v) in instances.iter().enumerate() {
-            if touched[k] {
-                pricing::reprice_queue(&mut queues[k], group_pricing, v, now);
-            }
+        //
+        // §Perf: the touched queues are disjoint per-instance state and
+        // the walk reads only the shared pricing table, so it fans out
+        // over the same persistent pool as the full solve's walk
+        // (store_cache). Index-ordered disjoint chunks ⇒ bit-identical
+        // to the serial loop at any lane count; with few touched queues
+        // the pool's engagement gate keeps it serial and allocation-free.
+        let view_of: BTreeMap<InstanceId, &InstanceView> =
+            instances.iter().map(|v| (v.id, v)).collect();
+        {
+            let pricing_ref = &*group_pricing;
+            let view_ref = &view_of;
+            let mut walk: Vec<&mut CachedQueue> = queues
+                .iter_mut()
+                .enumerate()
+                .filter(|(k, _)| touched[*k])
+                .map(|(_, q)| q)
+                .collect();
+            self.pool.run_chunks_mut(&mut walk, |cq| {
+                pricing::reprice_queue(cq, pricing_ref, view_ref[&cq.id], now);
+            });
         }
 
         // 3. Greedy re-insertion of dirty groups in deadline order —
@@ -494,14 +511,29 @@ impl GlobalScheduler {
         //    re-anchor untouched queues' penalties to `now` via the
         //    amortized-constant-time epoch offset (slope term plus the
         //    crossing scan — no walk needed).
+        //
+        // §Perf: same fan-out as step 2.5 — reorder + walk are pure
+        // per-queue functions of the (now frozen) pricing table, so the
+        // touched set goes wide while the untouched re-anchor (a
+        // counter fold) stays serial.
+        {
+            let pricing_ref = &*group_pricing;
+            let view_ref = &view_of;
+            let mut walk: Vec<&mut CachedQueue> = queues
+                .iter_mut()
+                .enumerate()
+                .filter(|(k, _)| touched[*k])
+                .map(|(_, q)| q)
+                .collect();
+            self.pool.run_chunks_mut(&mut walk, |cq| {
+                reorder_cached(cq, pricing_ref);
+                pricing::reprice_queue(cq, pricing_ref, view_ref[&cq.id], now);
+            });
+        }
         let mut crossings_drained = 0usize;
-        for (k, v) in instances.iter().enumerate() {
-            if touched[k] {
-                let cq = &mut queues[k];
-                reorder_cached(cq, group_pricing);
-                pricing::reprice_queue(cq, group_pricing, v, now);
-            } else {
-                crossings_drained += queues[k].reanchor(now);
+        for (k, q) in queues.iter_mut().enumerate() {
+            if !touched[k] {
+                crossings_drained += q.reanchor(now);
             }
         }
 

@@ -1,0 +1,245 @@
+//! Per-model queue shards: the storage layer behind [`GlobalQueue`].
+//!
+//! The broker used to be one flat slab + one waiting bitset. Sharding it
+//! by model gives each model its own slab, its own waiting set, and its
+//! own open-group index, with three payoffs:
+//!
+//! * **Disjointness** — a request lives in exactly one shard (requests
+//!   never change model), so per-shard scheduler work touches disjoint
+//!   state and can fan out over worker threads without locks.
+//! * **Dirt tracking** — each shard records whether any of its requests
+//!   changed state since the last scheduler pass; a pass skips clean
+//!   shards entirely ([`GlobalQueue::begin_pass`]).
+//! * **O(in-flight) residency** — shard slots are recycled through a
+//!   free list after ack, so at gigascale (10M+ requests) the resident
+//!   request memory tracks the number *in flight*, not the all-time
+//!   submit count. (Global ids are still never reused: the façade's
+//!   route table maps each broker id to its shard slot exactly once.)
+//!
+//! Waiting sets are keyed by **global** broker id, so the façade's
+//! merged iteration (a per-word OR across shards) yields ascending
+//! global ids — the FCFS arrival order the scheduler depends on. The
+//! bitset words grow with the all-time id space (1 bit per id ≈ 1.2 MB
+//! per shard at 10M requests) — accepted: it is two orders of magnitude
+//! below what materialized requests would cost.
+//!
+//! [`GlobalQueue`]: crate::coordinator::GlobalQueue
+//! [`GlobalQueue::begin_pass`]: crate::coordinator::GlobalQueue::begin_pass
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::backend::ModelId;
+use crate::coordinator::request::Request;
+use crate::coordinator::request_group::GroupId;
+use crate::workload::SloClass;
+
+/// Ordered set of dense ids: one bit per id. Insert / remove / contains
+/// are O(1); iteration is an ascending word scan, so — ids being
+/// assigned in submit order — iteration order *is* arrival order,
+/// exactly like the `BTreeSet<u64>` this replaced.
+#[derive(Debug, Default)]
+pub(crate) struct IdBitSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl IdBitSet {
+    pub(crate) fn insert(&mut self, id: u64) {
+        let (w, b) = ((id / 64) as usize, id % 64);
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        let mask = 1u64 << b;
+        if self.words[w] & mask == 0 {
+            self.words[w] |= mask;
+            self.len += 1;
+        }
+    }
+
+    pub(crate) fn remove(&mut self, id: u64) {
+        let (w, b) = ((id / 64) as usize, id % 64);
+        if let Some(word) = self.words.get_mut(w) {
+            let mask = 1u64 << b;
+            if *word & mask != 0 {
+                *word &= !mask;
+                self.len -= 1;
+            }
+        }
+    }
+
+    pub(crate) fn contains(&self, id: u64) -> bool {
+        let (w, b) = ((id / 64) as usize, id % 64);
+        self.words.get(w).is_some_and(|word| word & (1 << b) != 0)
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Set ids, ascending. Per word, peel set bits lowest-first
+    /// (`trailing_zeros` + clear-lowest) — allocation-free.
+    pub(crate) fn iter(&self) -> impl Iterator<Item = u64> + '_ {
+        self.words.iter().enumerate().flat_map(|(w, &word)| {
+            std::iter::successors((word != 0).then_some(word), |&bits| {
+                let rest = bits & (bits - 1);
+                (rest != 0).then_some(rest)
+            })
+            .map(move |bits| (w as u64) * 64 + bits.trailing_zeros() as u64)
+        })
+    }
+
+    /// Raw word view — the façade ORs words across shards to iterate
+    /// the union waiting set without materializing it.
+    pub(crate) fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+/// One per-model shard: a locally-indexed, slot-recycling slab, the
+/// model's waiting set (global ids), its open-group index, and a dirty
+/// flag for pass skipping.
+#[derive(Debug)]
+pub(crate) struct QueueShard {
+    pub(crate) model: ModelId,
+    /// Local slab. Slots are recycled through `free` after ack, so the
+    /// resident size is O(live + shed), not O(all-time submits). Safe
+    /// because the façade's route table retires a broker id *before*
+    /// its slot is freed — a stale id can never alias a recycled slot.
+    slots: Vec<Option<Request>>,
+    free: Vec<u32>,
+    /// Waiting *global* broker ids (ascending = FCFS arrival order).
+    pub(crate) waiting: IdBitSet,
+    pub(crate) live: usize,
+    /// Did any request in this shard change state since the last
+    /// scheduler pass? Cleared by [`GlobalQueue::begin_pass`].
+    ///
+    /// [`GlobalQueue::begin_pass`]: crate::coordinator::GlobalQueue::begin_pass
+    pub(crate) dirty: bool,
+    /// Open (below-capacity) request groups of this shard's model,
+    /// keyed by (class, mega). `BTreeSet` ⇒ the lowest (oldest) group
+    /// id wins, matching the engine's historical fill order.
+    pub(crate) open_groups: BTreeMap<(SloClass, bool), BTreeSet<GroupId>>,
+}
+
+impl QueueShard {
+    pub(crate) fn new(model: ModelId) -> Self {
+        QueueShard {
+            model,
+            slots: Vec::new(),
+            free: Vec::new(),
+            waiting: IdBitSet::default(),
+            live: 0,
+            dirty: false,
+            open_groups: BTreeMap::new(),
+        }
+    }
+
+    /// Store a request, recycling a freed slot when one is available.
+    /// Returns the local slot index.
+    pub(crate) fn place(&mut self, req: Request) -> u32 {
+        self.live += 1;
+        self.dirty = true;
+        if let Some(slot) = self.free.pop() {
+            debug_assert!(self.slots[slot as usize].is_none(), "free slot must be vacant");
+            self.slots[slot as usize] = Some(req);
+            slot
+        } else {
+            self.slots.push(Some(req));
+            (self.slots.len() - 1) as u32
+        }
+    }
+
+    /// Remove the request at `slot` and recycle the slot.
+    pub(crate) fn take(&mut self, slot: u32) -> Option<Request> {
+        let r = self.slots.get_mut(slot as usize)?.take()?;
+        self.live -= 1;
+        self.dirty = true;
+        self.free.push(slot);
+        Some(r)
+    }
+
+    pub(crate) fn get(&self, slot: u32) -> Option<&Request> {
+        self.slots.get(slot as usize).and_then(|s| s.as_ref())
+    }
+
+    pub(crate) fn get_mut(&mut self, slot: u32) -> Option<&mut Request> {
+        self.slots.get_mut(slot as usize).and_then(|s| s.as_mut())
+    }
+
+    /// Mutable walk over resident requests (instance-failure sweep).
+    pub(crate) fn iter_mut(&mut self) -> impl Iterator<Item = &mut Request> {
+        self.slots.iter_mut().filter_map(|s| s.as_mut())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::RequestState;
+    use crate::workload::{SloTarget, TraceRequest};
+
+    #[test]
+    fn bitset_iterates_ascending_across_word_boundaries() {
+        let mut s = IdBitSet::default();
+        for id in [200, 0, 63, 64, 127, 128, 5, 64] {
+            s.insert(id);
+        }
+        assert_eq!(s.len(), 7, "duplicate insert must not double-count");
+        let got: Vec<u64> = s.iter().collect();
+        assert_eq!(got, vec![0, 5, 63, 64, 127, 128, 200]);
+        s.remove(64);
+        s.remove(64);
+        s.remove(9999); // out of range: no-op
+        assert_eq!(s.len(), 6, "duplicate remove must not double-count");
+        assert!(!s.contains(64));
+        assert!(s.contains(63));
+        let got: Vec<u64> = s.iter().collect();
+        assert_eq!(got, vec![0, 5, 63, 127, 128, 200]);
+    }
+
+    fn req(id: u64) -> Request {
+        Request::from_trace(
+            id,
+            &TraceRequest {
+                arrival_s: id as f64,
+                model: ModelId(0),
+                class: SloClass::Interactive,
+                slo: SloTarget::new(20.0, 0.25),
+                input_tokens: 100,
+                output_tokens: 50,
+                mega: false,
+            },
+        )
+    }
+
+    #[test]
+    fn slots_are_recycled_through_the_free_list() {
+        let mut s = QueueShard::new(ModelId(0));
+        let a = s.place(req(10));
+        let b = s.place(req(11));
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(s.live, 2);
+        let taken = s.take(a).unwrap();
+        assert_eq!(taken.id, 10);
+        assert_eq!(s.live, 1);
+        assert!(s.get(a).is_none());
+        assert!(s.take(a).is_none(), "double take is a no-op");
+        assert_eq!(s.live, 1);
+        // The freed slot is reused; the slab does not grow.
+        let c = s.place(req(12));
+        assert_eq!(c, a, "freed slot must be recycled");
+        assert_eq!(s.get(c).unwrap().id, 12);
+        assert_eq!(s.get(c).unwrap().state, RequestState::Waiting);
+    }
+
+    #[test]
+    fn place_and_take_set_the_dirty_flag() {
+        let mut s = QueueShard::new(ModelId(0));
+        assert!(!s.dirty);
+        let slot = s.place(req(0));
+        assert!(s.dirty);
+        s.dirty = false;
+        s.take(slot);
+        assert!(s.dirty);
+    }
+}

@@ -7,8 +7,12 @@
 //! ```text
 //! qlm sim [--scenario S] [--list] [--policy P] [--rate R] [--requests N]
 //!         [--fleet N] [--seed S] [--horizon SECS] [--threads N]
-//!         [--chunk-tokens N] [--slice-tokens N]
+//!         [--chunk-tokens N] [--slice-tokens N] [--stream] [--compact]
 //!         [--trace-out FILE] [--telemetry-out FILE] [--telemetry-every SECS]
+//!         `--stream` replays arrivals lazily from the seed (no
+//!         materialized trace; bit-identical metrics); `--compact` folds
+//!         completions into aggregates instead of archiving records.
+//!         Both default ON for `--scenario gigascale` (10M+ requests).
 //! qlm report <trace.jsonl> [--req ID] [--timelines N]   render a recorded
 //!            flight-recorder trace: event counts, the RWT-accuracy table,
 //!            per-request timelines
@@ -103,10 +107,14 @@ fn usage() -> ExitCode {
 
 USAGE:
   qlm sim [--scenario burst|diurnal|mixed-slo|multi-model|failover|scale
-          |autoscale|mega|megascale] [--list] [--policy P] [--rate R] [--requests N]
-          [--fleet N] [--seed S] [--horizon SECS] [--full-solve] [--threads N]
-          [--chunk-tokens N] [--slice-tokens N] [--trace-out FILE]
+          |autoscale|mega|megascale|gigascale] [--list] [--policy P] [--rate R]
+          [--requests N] [--fleet N] [--seed S] [--horizon SECS] [--full-solve]
+          [--threads N] [--chunk-tokens N] [--slice-tokens N]
+          [--stream] [--compact] [--trace-out FILE]
           [--telemetry-out FILE] [--telemetry-every SECS]
+          (--stream = seeded lazy arrivals, no materialized trace;
+          --compact = aggregate-only completion records; both default on
+          for gigascale)
   qlm report <trace.jsonl> [--req ID] [--timelines N]   event counts, the
              per-class RWT prediction-error table, request timelines from a
              `--trace-out` flight-recorder file
@@ -141,7 +149,7 @@ fn parse_scenario(args: &Args) -> Option<Scenario> {
         eprintln!(
             "unknown scenario {name} \
              (known: burst, diurnal, mixed-slo, multi-model, failover, scale, \
-             autoscale, mega, megascale)"
+             autoscale, mega, megascale, gigascale)"
         );
     }
     scenario
@@ -285,15 +293,29 @@ fn cmd_sim(args: &Args) -> ExitCode {
     };
     let scenario = cli.scenario;
     let run = scenario.build(&cli.knobs);
-    let trace = Trace::generate(&run.spec, cli.knobs.seed);
+    // Streamed arrivals + compact records are how the 10M-request
+    // gigascale regime stays O(in-flight); they default on there (a
+    // materialized 10M-request trace is the failure mode the streamed
+    // path exists to remove) and are opt-in everywhere else. Metrics
+    // are bit-identical either way for --stream; --compact trades
+    // per-request records for aggregates.
+    let streamed = args.has("stream") || scenario == Scenario::Gigascale;
+    let compact = args.has("compact") || scenario == Scenario::Gigascale;
+    let total_requests = run.spec.total_requests();
     println!(
-        "scenario {}: {}\n  {} requests, {} instances, rate {:.1} req/s, horizon {:.0}s",
+        "scenario {}: {}\n  {} requests, {} instances, rate {:.1} req/s, horizon {:.0}s{}",
         run.name,
         scenario.description(),
-        trace.len(),
+        total_requests,
         run.fleet.len(),
         cli.knobs.rate,
         cli.horizon_s,
+        match (streamed, compact) {
+            (true, true) => " (streamed arrivals, compact records)",
+            (true, false) => " (streamed arrivals)",
+            (false, true) => " (compact records)",
+            (false, false) => "",
+        },
     );
     for (t, inst) in &run.failures {
         println!("  failure injected: instance {} dies at t={t:.0}s", inst.0);
@@ -316,6 +338,7 @@ fn cmd_sim(args: &Args) -> ExitCode {
         }
     }
     let mut cfg = cli.sim_config(&run, policy);
+    cfg.compact_records = compact;
     // Observability: `--trace-out` turns the flight recorder (and the
     // RWT-accuracy ledger riding on it) on; `--telemetry-out` the fleet
     // sampler. Both recorded in sim time — off, the engine allocates no
@@ -327,22 +350,40 @@ fn cmd_sim(args: &Args) -> ExitCode {
         cfg.obs.telemetry_every_s = Some(args.get_f64("telemetry-every", 10.0));
     }
     let wall = std::time::Instant::now();
-    let (m, obs) = Simulation::new(cfg, &trace).run_with_obs(&trace);
+    let (m, obs) = if streamed {
+        Simulation::new_streaming(cfg, &run.spec, cli.knobs.seed).run_streaming_with_obs()
+    } else {
+        let trace = Trace::generate(&run.spec, cli.knobs.seed);
+        Simulation::new(cfg, &trace).run_with_obs(&trace)
+    };
     let wall_s = wall.elapsed().as_secs_f64();
     println!("{}", m.summary());
-    for class in [SloClass::Interactive, SloClass::Batch1, SloClass::Batch2] {
+    if let Some(t) = &m.compact {
+        // Compact runs archive no per-request records; the per-class
+        // table has nothing to read, so report the folded aggregates.
         println!(
-            "  {:<12} SLO attainment {:5.1}%  (TTFT {:5.1}%, TPOT {:5.1}%)",
-            class.name(),
-            100.0 * m.slo_attainment_class(class),
-            100.0 * m.ttft_attainment_class(class),
-            100.0 * m.tpot_attainment_class(class),
+            "  compact tally: {} completed, TTFT attainment {:5.1}%, mean TTFT {:.2}s, \
+             {} tokens generated",
+            t.completed,
+            100.0 * t.ttft_attainment(),
+            t.mean_ttft(),
+            t.tokens_generated,
         );
+    } else {
+        for class in [SloClass::Interactive, SloClass::Batch1, SloClass::Batch2] {
+            println!(
+                "  {:<12} SLO attainment {:5.1}%  (TTFT {:5.1}%, TPOT {:5.1}%)",
+                class.name(),
+                100.0 * m.slo_attainment_class(class),
+                100.0 * m.ttft_attainment_class(class),
+                100.0 * m.tpot_attainment_class(class),
+            );
+        }
     }
     println!(
         "  completed {}/{} requests over {:.0} simulated seconds ({:.1}s wall)",
         m.completed_count(),
-        m.records.len(),
+        total_requests,
         m.duration_s,
         wall_s,
     );
@@ -444,7 +485,6 @@ fn cmd_compare(args: &Args) -> ExitCode {
         return ExitCode::from(2);
     };
     let run = cli.scenario.build(&cli.knobs);
-    let trace = Trace::generate(&run.spec, cli.knobs.seed);
     let policies: Vec<Policy> = vec![
         Policy::qlm(),
         Policy::qlm_with(LsoConfig::without_eviction()),
@@ -460,9 +500,10 @@ fn cmd_compare(args: &Args) -> ExitCode {
         Policy::Chunked,
     ];
     println!(
-        "compare on scenario {} — {} requests, {} instances, rate {:.1} req/s, seed {}",
+        "compare on scenario {} — {} requests, {} instances, rate {:.1} req/s, seed {} \
+         (seeded replay)",
         run.name,
-        trace.len(),
+        run.spec.total_requests(),
         run.fleet.len(),
         cli.knobs.rate,
         cli.knobs.seed,
@@ -482,9 +523,14 @@ fn cmd_compare(args: &Args) -> ExitCode {
         "evict",
         "swaps"
     );
+    // Every row replays the same trace from the seed through the
+    // arrival stream (`Trace::generate` is defined as the stream
+    // collected, so the rows see byte-identical request sequences)
+    // instead of sharing one materialized Vec — the table never holds a
+    // trace at all, which is what lets `--scenario gigascale` fit.
     for policy in policies {
         let cfg = cli.sim_config(&run, policy);
-        let m = Simulation::new(cfg, &trace).run(&trace);
+        let m = Simulation::new_streaming(cfg, &run.spec, cli.knobs.seed).run_streaming();
         println!(
             "{:<12} {:>6.1} {:>6.1} {:>6.1} {:>6.1} {:>6.1} {:>6.1} {:>9.2} {:>8.2}s {:>8} {:>7} {:>6}",
             m.policy,

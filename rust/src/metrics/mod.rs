@@ -115,6 +115,59 @@ pub struct InstanceMetrics {
     pub mean_batch: f64,
 }
 
+/// O(1)-memory completion accounting for compact-records runs: when the
+/// broker runs in compact mode (gigascale benches), acked requests are
+/// dropped instead of archived, so the engine folds each completion
+/// into this tally before the ack. Aggregates only — per-request
+/// percentiles need full records.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CompactTally {
+    pub completed: usize,
+    /// Completions whose TTFT met the request's bound.
+    pub ttft_met: usize,
+    pub ttft_sum_s: f64,
+    pub tokens_generated: u64,
+}
+
+impl CompactTally {
+    /// Fold one completion (called with the request's fields *before*
+    /// the ack removes it from the broker).
+    pub fn note(
+        &mut self,
+        arrival_s: f64,
+        first_token_s: Option<f64>,
+        ttft_slo_s: f64,
+        generated: u32,
+    ) {
+        self.completed += 1;
+        self.tokens_generated += generated as u64;
+        if let Some(ft) = first_token_s {
+            let ttft = ft - arrival_s;
+            self.ttft_sum_s += ttft;
+            if ttft <= ttft_slo_s {
+                self.ttft_met += 1;
+            }
+        }
+    }
+
+    pub fn mean_ttft(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.ttft_sum_s / self.completed as f64
+        }
+    }
+
+    /// TTFT attainment over completions (vacuously 1.0 when empty).
+    pub fn ttft_attainment(&self) -> f64 {
+        if self.completed == 0 {
+            1.0
+        } else {
+            self.ttft_met as f64 / self.completed as f64
+        }
+    }
+}
+
 /// Complete metrics for one simulated (or real) run.
 #[derive(Debug, Clone, Default)]
 pub struct RunMetrics {
@@ -132,6 +185,16 @@ pub struct RunMetrics {
     /// Autoscaler actions taken during the run.
     pub scale_ups: u64,
     pub scale_downs: u64,
+    /// Completion aggregates for compact-records runs (`None` on normal
+    /// runs, where `records` holds every completion individually).
+    pub compact: Option<CompactTally>,
+    /// Per-model shard passes the scheduler actually scanned vs. skipped
+    /// as provably clean (per-shard dirt tracking). Overhead telemetry,
+    /// deterministic but excluded from the digest — like
+    /// `scheduler_wall_s`, it describes how the run was computed, not
+    /// what was served.
+    pub shards_scanned: u64,
+    pub shards_skipped: u64,
 }
 
 impl RunMetrics {
@@ -188,11 +251,7 @@ impl RunMetrics {
         if self.duration_s <= 0.0 {
             return 0.0;
         }
-        self.records
-            .iter()
-            .filter(|r| r.completed_s.is_some())
-            .count() as f64
-            / self.duration_s
+        self.completed_count() as f64 / self.duration_s
     }
 
     /// Generated tokens per second (cluster aggregate).
@@ -274,11 +333,14 @@ impl RunMetrics {
         self.instances.iter().map(|i| i.internal_preemptions).sum()
     }
 
+    /// Completions: per-request records plus (in compact mode) the
+    /// tally of acked-and-dropped requests.
     pub fn completed_count(&self) -> usize {
         self.records
             .iter()
             .filter(|r| r.completed_s.is_some())
             .count()
+            + self.compact.as_ref().map_or(0, |t| t.completed)
     }
 
     /// Requests refused by admission control / unservable retirement.
@@ -335,6 +397,15 @@ impl RunMetrics {
         mix(self.scale_ups);
         mix(self.scale_downs);
         mix(self.scheduler_invocations);
+        // Compact runs carry their completions here instead of in
+        // `records`; absent on normal runs, so their digests are
+        // unchanged by the field's existence.
+        if let Some(t) = &self.compact {
+            mix(t.completed as u64);
+            mix(t.ttft_met as u64);
+            mix(t.ttft_sum_s.to_bits());
+            mix(t.tokens_generated);
+        }
         h
     }
 
@@ -536,6 +607,31 @@ mod tests {
         assert!(u.ttft_met());
         assert!(!u.tpot_met());
         assert!(!u.slo_met());
+    }
+
+    #[test]
+    fn compact_tally_aggregates_completions() {
+        let mut t = CompactTally::default();
+        t.note(0.0, Some(5.0), 20.0, 50); // met
+        t.note(0.0, Some(30.0), 20.0, 10); // missed
+        t.note(0.0, None, 20.0, 1); // completed without a first token
+        assert_eq!(t.completed, 3);
+        assert_eq!(t.ttft_met, 1);
+        assert_eq!(t.tokens_generated, 61);
+        assert!((t.ttft_attainment() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((t.mean_ttft() - 35.0 / 3.0).abs() < 1e-12);
+        let m = RunMetrics {
+            compact: Some(t),
+            duration_s: 10.0,
+            ..Default::default()
+        };
+        assert_eq!(m.completed_count(), 3);
+        assert!((m.throughput_rps() - 0.3).abs() < 1e-12);
+        let bare = RunMetrics {
+            duration_s: 10.0,
+            ..Default::default()
+        };
+        assert_ne!(m.digest(), bare.digest(), "the tally must reach the digest");
     }
 
     #[test]

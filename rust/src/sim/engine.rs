@@ -52,14 +52,14 @@ use crate::coordinator::rwt::{ProfileTable, RwtEstimator};
 use crate::coordinator::scheduler::{InstanceView, SchedulerConfig, SolverKind};
 use crate::coordinator::virtual_queue::VirtualQueue;
 use crate::coordinator::GlobalQueue;
-use crate::metrics::{collect_records, instance_metrics, RunMetrics};
+use crate::metrics::{collect_records, instance_metrics, CompactTally, RunMetrics};
 use crate::obs::{InstanceSample, ObsConfig, ObsReport, ObsState, TelemetrySample, TraceEventKind};
 use crate::sim::event::{EventCore, EventKind};
 use crate::sim::fleet_controller::{static_pinning, FleetController};
-use crate::sim::profiler::{conservative_profiles, ThetaCache};
+use crate::sim::profiler::{conservative_profiles, profile_spec, ThetaCache};
 use crate::sim::views;
 use crate::util::WorkerPool;
-use crate::workload::{SloClass, Trace};
+use crate::workload::{ArrivalStream, SloClass, Trace, WorkloadSpec};
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
@@ -114,6 +114,12 @@ pub struct SimConfig {
     /// Default off; when off the engine allocates no observer state and
     /// every hook is a single skipped `if let`.
     pub obs: ObsConfig,
+    /// Compact records (gigascale benches): acked requests are dropped
+    /// from the broker instead of archived, and completions are folded
+    /// into a [`CompactTally`] — resident memory stays O(in-flight) at
+    /// any request count. Per-request records then cover only unserved
+    /// and shed requests; aggregates live in `RunMetrics::compact`.
+    pub compact_records: bool,
 }
 
 impl SimConfig {
@@ -135,6 +141,7 @@ impl SimConfig {
             chunk_tokens: None,
             slice_tokens: None,
             obs: ObsConfig::default(),
+            compact_records: false,
         }
     }
 
@@ -223,11 +230,16 @@ pub struct Simulation {
     /// once here, shared with the policy's global scheduler (one set of
     /// parked workers serves the view refresh *and* the repricing walk).
     pool: Arc<WorkerPool>,
-    /// Open-group index: groups with spare capacity per
-    /// (model, class, mega). Makes `classify_in_place` O(1) per arrival
-    /// instead of a scan of the live group table; `BTreeSet` keeps the
-    /// lowest-id-wins rule of the scan it replaces.
-    open_groups: BTreeMap<(ModelId, SloClass, bool), BTreeSet<GroupId>>,
+    /// Streamed arrivals for [`Self::run_streaming`] — pulled lazily
+    /// and merged against the event clock, so a streamed run never
+    /// materializes the trace. `None` for materialized runs.
+    stream: Option<Box<ArrivalStream>>,
+    /// Total requests a streamed run will see (`spec.total_requests()`)
+    /// — the termination count `run` reads off `trace.len()`.
+    stream_total: usize,
+    /// Completion aggregates for compact-records mode (folded before
+    /// each ack, since the ack drops the request).
+    tally: CompactTally,
     /// Observability state (flight recorder + telemetry + RWT ledger).
     /// `None` when disabled — the hooks are then a skipped `if let`
     /// each, so the hot path pays nothing. The observer records; it
@@ -261,11 +273,58 @@ impl Simulation {
     fn new_inner(cfg: SimConfig, trace: &Trace, heap_clock: bool) -> Self {
         // Workload profiling (§6, Offline Profiling): moments from the
         // request history dataset — we use the trace itself as history.
-        let mut profiles = ProfileTable::from_trace(trace);
+        let profiles = ProfileTable::from_trace(trace);
+        let mut counts: BTreeMap<ModelId, usize> = BTreeMap::new();
+        for r in &trace.requests {
+            *counts.entry(r.model).or_insert(0) += 1;
+        }
+        let mut sim = Self::assemble(cfg, profiles, &counts, heap_clock);
+        // Arrivals strictly before failures: arrival events take the
+        // low seqs, so at equal timestamps an arrival fires first —
+        // the ordering the streamed merge reproduces.
+        for (i, r) in trace.requests.iter().enumerate() {
+            sim.clock.push(r.arrival_s, EventKind::Arrival(i));
+        }
+        sim.push_failures();
+        sim
+    }
+
+    /// Streaming construction: workload moments and pinning counts come
+    /// from seeded [`ArrivalStream`] replays (bit-identical to the
+    /// trace-derived ones), and the arrival stream itself is held for
+    /// [`Self::run_streaming`] — nothing O(total-requests) is ever
+    /// materialized except the broker's 8-byte-per-id route table.
+    /// `trace_seed` must be the seed the materialized run would pass to
+    /// `Trace::generate`.
+    pub fn new_streaming(cfg: SimConfig, spec: &WorkloadSpec, trace_seed: u64) -> Self {
+        let (profiles, counts) = profile_spec(spec, trace_seed);
+        let mut sim = Self::assemble(cfg, profiles, &counts, false);
+        sim.push_failures();
+        sim.stream = Some(Box::new(ArrivalStream::new(spec, trace_seed)));
+        sim.stream_total = spec.total_requests();
+        sim
+    }
+
+    fn push_failures(&mut self) {
+        let failures = self.cfg.failures.clone();
+        for (t, inst) in failures {
+            self.clock.push(t, EventKind::Fail(inst));
+        }
+    }
+
+    /// Everything both constructors share: fleet, policy, pinning,
+    /// grouper, controller. Pushes no events — the callers own the
+    /// arrival/failure seq ordering.
+    fn assemble(
+        cfg: SimConfig,
+        mut profiles: ProfileTable,
+        model_counts: &BTreeMap<ModelId, usize>,
+        heap_clock: bool,
+    ) -> Self {
         if cfg.policy.conservative_estimator() {
             // SHEPHERD-style deterministic worst-case estimates: every
             // request is assumed to run to the max output length.
-            profiles = conservative_profiles(&profiles, trace);
+            profiles = conservative_profiles(&profiles);
         }
         let estimator = RwtEstimator::new(profiles.clone());
         let solver = match cfg.policy {
@@ -304,7 +363,7 @@ impl Simulation {
         for (idx, inst) in instances.iter().enumerate() {
             debug_assert_eq!(inst.config.id.0 as usize, idx, "fleet ids must be dense");
         }
-        let pinned_model = static_pinning(&mut instances, &cfg.catalog, &cfg.policy, trace);
+        let pinned_model = static_pinning(&mut instances, &cfg.catalog, &cfg.policy, model_counts);
         let vqs = instances
             .iter()
             .map(|i| VirtualQueue::new(i.config.id))
@@ -334,7 +393,11 @@ impl Simulation {
             policy,
             vqs,
             agents,
-            queue: GlobalQueue::new(),
+            queue: {
+                let mut q = GlobalQueue::new();
+                q.set_compact(cfg.compact_records);
+                q
+            },
             groups: BTreeMap::new(),
             group_of: BTreeMap::new(),
             grouper,
@@ -350,7 +413,9 @@ impl Simulation {
             thetas: ThetaCache::new(),
             views_cache: Vec::new(),
             pool,
-            open_groups: BTreeMap::new(),
+            stream: None,
+            stream_total: 0,
+            tally: CompactTally::default(),
             obs: cfg.obs.enabled().then(|| Box::new(ObsState::new(&cfg.obs))),
             scratch_earliest: Vec::new(),
             scratch_wake: Vec::new(),
@@ -358,13 +423,6 @@ impl Simulation {
             cfg,
         };
         sim.build_views();
-        for (i, r) in trace.requests.iter().enumerate() {
-            sim.clock.push(r.arrival_s, EventKind::Arrival(i));
-        }
-        let failures = sim.cfg.failures.clone();
-        for (t, inst) in failures {
-            sim.clock.push(t, EventKind::Fail(inst));
-        }
         sim
     }
 
@@ -493,7 +551,87 @@ impl Simulation {
                 EventKind::Provision(id) => self.on_provision(id),
             }
             self.maybe_schedule();
-            if self.queue.completed.len() + self.queue.len_shed() == total {
+            if self.queue.len_completed() + self.queue.len_shed() == total {
+                break;
+            }
+        }
+        let obs = self.obs.take();
+        let metrics = self.finish();
+        (metrics, obs.map(|o| o.into_report()))
+    }
+
+    /// Run a [`Self::new_streaming`] simulation to completion. Arrivals
+    /// are pulled lazily from the seeded stream and merged against the
+    /// event clock, so memory stays O(in-flight): the trace is never
+    /// materialized. Bit-identical to `run` on the generated trace —
+    /// materialized arrivals occupy seqs `0..N-1` (pushed before
+    /// failures and all runtime wakes), so at equal timestamps the
+    /// arrival fires first; the `ta <= te` take rule below reproduces
+    /// exactly that order.
+    pub fn run_streaming(self) -> RunMetrics {
+        self.run_streaming_with_obs().0
+    }
+
+    /// [`run_streaming`](Self::run_streaming) with the observability
+    /// report (see [`run_with_obs`](Self::run_with_obs)).
+    pub fn run_streaming_with_obs(mut self) -> (RunMetrics, Option<ObsReport>) {
+        let total = self.stream_total;
+        let mut stream = self
+            .stream
+            .take()
+            .expect("run_streaming requires new_streaming construction");
+        loop {
+            let ta = stream.peek_t();
+            let te = self.clock.peek_t();
+            let take_arrival = match (ta, te) {
+                (None, None) => break,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (Some(a), Some(e)) => a <= e,
+            };
+            if take_arrival {
+                let tr = stream.next().expect("peeked arrival must exist");
+                if tr.arrival_s > self.cfg.horizon_s {
+                    // Horizon hit on an arrival: register it and every
+                    // later one so metrics count them (mirrors the
+                    // materialized drain — remaining events drop).
+                    self.queue.submit(Request::from_trace(0, &tr));
+                    for late in stream.by_ref() {
+                        self.queue.submit(Request::from_trace(0, &late));
+                    }
+                    break;
+                }
+                self.sample_telemetry_until(tr.arrival_s);
+                self.clock.now = tr.arrival_s;
+                self.on_arrival(&tr);
+            } else {
+                let ev = self.clock.pop().expect("peeked event must exist");
+                if ev.t > self.cfg.horizon_s {
+                    // Horizon hit on a runtime event: in the materialized
+                    // drain every remaining arrival (all later than this
+                    // event) still gets submitted in trace order.
+                    for late in stream.by_ref() {
+                        self.queue.submit(Request::from_trace(0, &late));
+                    }
+                    break;
+                }
+                self.sample_telemetry_until(ev.t);
+                self.clock.now = ev.t;
+                match ev.kind {
+                    EventKind::Arrival(_) => {
+                        unreachable!("streamed runs push no Arrival events")
+                    }
+                    EventKind::Wake(id) => {
+                        if self.clock.take_due_wake(id, ev.t) {
+                            self.on_wake(id);
+                        }
+                    }
+                    EventKind::Fail(id) => self.on_fail(id),
+                    EventKind::Provision(id) => self.on_provision(id),
+                }
+            }
+            self.maybe_schedule();
+            if self.queue.len_completed() + self.queue.len_shed() == total {
                 break;
             }
         }
@@ -655,20 +793,18 @@ impl Simulation {
     fn classify_in_place(&mut self, req: &Request) -> GroupId {
         let cap = self.grouper.max_group_size();
         let key = (req.model, req.class, req.mega);
-        if let Some(set) = self.open_groups.get_mut(&key) {
-            if let Some(&gid) = set.iter().next() {
-                // audit:allow(hot-path-panic): open-group index entries are removed
-                // before their group leaves the table.
-                let g = self.groups.get_mut(&gid).expect("open-group index is live");
-                debug_assert!(g.len() < cap, "index must only hold open groups");
-                g.members.push(req.id);
-                g.slo = g.slo.min(req.slo);
-                g.earliest_arrival_s = g.earliest_arrival_s.min(req.arrival_s);
-                if g.len() >= cap {
-                    set.remove(&gid);
-                }
-                return gid;
+        if let Some(gid) = self.queue.open_group_first(key.0, key.1, key.2) {
+            // audit:allow(hot-path-panic): open-group index entries are removed
+            // before their group leaves the table.
+            let g = self.groups.get_mut(&gid).expect("open-group index is live");
+            debug_assert!(g.len() < cap, "index must only hold open groups");
+            g.members.push(req.id);
+            g.slo = g.slo.min(req.slo);
+            g.earliest_arrival_s = g.earliest_arrival_s.min(req.arrival_s);
+            if g.len() >= cap {
+                self.queue.open_group_remove(key.0, key.1, key.2, gid);
             }
+            return gid;
         }
         let mut list = Vec::new();
         let gid = self.grouper.classify(req, &mut list);
@@ -677,7 +813,7 @@ impl Simulation {
         let open = g.len() < cap;
         self.groups.insert(gid, g);
         if open {
-            self.open_groups.entry(key).or_default().insert(gid);
+            self.queue.open_group_insert(key.0, key.1, key.2, gid);
         }
         gid
     }
@@ -815,6 +951,20 @@ impl Simulation {
         }
         let t_done = self.clock.now + out.dt;
         for seq in out.completed {
+            // Compact runs archive no per-request records, so the
+            // aggregate SLO numerators fold here, while the request is
+            // still resident — the only moment both its arrival stamp
+            // and its outcome coexist.
+            if self.queue.is_compact() {
+                if let Some(r) = self.queue.get(seq.req_id) {
+                    self.tally.note(
+                        r.arrival_s,
+                        r.first_token_s.or(seq.first_token_at),
+                        r.slo.ttft_s,
+                        seq.generated,
+                    );
+                }
+            }
             self.queue
                 .complete(seq.req_id, seq.first_token_at, t_done, seq.generated);
             self.on_request_done(seq.req_id, id);
@@ -1086,7 +1236,12 @@ impl Simulation {
         // keeps delta-path bookkeeping consistent).
         let held: Vec<GroupId> = self.vqs[idx].groups.iter().copied().collect();
         for g in held {
-            if self.groups.contains_key(&g) {
+            if let Some(grp) = self.groups.get(&g) {
+                // No queue mutation happens here, so the broker's
+                // per-shard dirt must be raised by hand — the invariant
+                // "a dirty group's shard is dirty" is what lets a pass
+                // skip clean shards wholesale.
+                self.queue.touch_model(grp.model);
                 self.dirty_groups.insert(g);
             }
         }
@@ -1172,9 +1327,7 @@ impl Simulation {
             };
             if empty {
                 self.groups.remove(&gid);
-                if let Some(set) = self.open_groups.get_mut(&key) {
-                    set.remove(&gid);
-                }
+                self.queue.open_group_remove(key.0, key.1, key.2, gid);
                 for vq in self.vqs.iter_mut() {
                     vq.remove(gid);
                 }
@@ -1203,9 +1356,7 @@ impl Simulation {
         if empty {
             self.groups.remove(&gid);
             if grouped {
-                if let Some(set) = self.open_groups.get_mut(&key) {
-                    set.remove(&gid);
-                }
+                self.queue.open_group_remove(key.0, key.1, key.2, gid);
             }
             for vq in self.vqs.iter_mut() {
                 vq.remove(gid);
@@ -1220,7 +1371,7 @@ impl Simulation {
             // Shrunk group: it has room again (open-group index), and it
             // must be re-priced and re-anchored at the next pass.
             if grouped && self.groups[&gid].len() < cap {
-                self.open_groups.entry(key).or_default().insert(gid);
+                self.queue.open_group_insert(key.0, key.1, key.2, gid);
             }
             self.dirty_groups.insert(gid);
         }
@@ -1234,6 +1385,11 @@ impl Simulation {
         }
         self.needs_schedule = false;
         self.last_schedule = self.clock.now;
+        // Shard-dirt bookkeeping: count which model shards this pass
+        // actually has to look at, and reset their flags. Every queue
+        // mutation (and `touch_model` for mutation-free group dirt)
+        // raised the flag, so the skip count is exact.
+        self.queue.begin_pass();
         // Re-anchor each group's deadline to its earliest *unserved*
         // member: served members have their TTFT already, so a group's
         // binding constraint is the oldest request still waiting. Without
@@ -1376,6 +1532,7 @@ impl Simulation {
             .max(self.clock.now);
         let device_seconds = self.fleet.device_seconds(duration);
         let (scale_ups, scale_downs) = self.fleet.scale_stats();
+        let (shards_scanned, shards_skipped) = self.queue.shard_stats();
         RunMetrics {
             policy: self.cfg.policy.name(),
             records,
@@ -1386,7 +1543,18 @@ impl Simulation {
             device_seconds,
             scale_ups,
             scale_downs,
+            compact: self.queue.is_compact().then_some(self.tally),
+            shards_scanned,
+            shards_skipped,
         }
+    }
+
+    /// Shard-dirt counters from the broker: `(scanned, skipped)` shard
+    /// totals across all scheduler passes (observability for the
+    /// per-shard dirt gate).
+    #[doc(hidden)]
+    pub fn shard_stats(&self) -> (u64, u64) {
+        self.queue.shard_stats()
     }
 }
 
@@ -1588,10 +1756,11 @@ mod tests {
         sim.on_request_done(0, InstanceId(0));
         sim.on_arrival(&tr(5));
         assert_eq!(sim.group_of[&5], g0, "reopened lowest-id group wins");
-        // Full groups never sit in the index.
-        for (key, set) in &sim.open_groups {
-            for gid in set {
-                assert!(sim.groups[gid].len() < 2, "{key:?} holds a full group");
+        // Full groups never sit in the index (now broker-owned,
+        // sharded by model).
+        for (key, gids) in sim.queue.open_groups_debug() {
+            for gid in gids {
+                assert!(sim.groups[&gid].len() < 2, "{key:?} holds a full group");
             }
         }
     }

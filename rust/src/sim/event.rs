@@ -178,17 +178,37 @@ impl TimerWheel {
     }
 
     fn pop(&mut self) -> Option<Event> {
+        if !self.ensure_front() {
+            return None;
+        }
+        let ev = self.drain[self.drain_pos];
+        self.drain_pos += 1;
+        self.len -= 1;
+        Some(ev)
+    }
+
+    /// Timestamp of the next event without consuming it. Loads the next
+    /// bucket into the drain buffer if needed — transparent to ordering:
+    /// later pushes behind the cursor splice into the buffer at their
+    /// exact `(t, seq)` position, exactly as they do between pops.
+    fn peek_t(&mut self) -> Option<f64> {
+        if !self.ensure_front() {
+            return None;
+        }
+        Some(self.drain[self.drain_pos].t)
+    }
+
+    /// Advance the drain machinery until the buffer fronts the global
+    /// minimum event. False iff the wheel is empty.
+    fn ensure_front(&mut self) -> bool {
         // audit:hot-loop — one iteration per event at megascale counts;
         // the drain buffer and slot vectors are reused, never reallocated.
         loop {
             if self.drain_pos < self.drain.len() {
-                let ev = self.drain[self.drain_pos];
-                self.drain_pos += 1;
-                self.len -= 1;
-                return Some(ev);
+                return true;
             }
             if self.len == 0 {
-                return None;
+                return false;
             }
             self.drain.clear();
             self.drain_pos = 0;
@@ -366,6 +386,19 @@ impl EventCore {
         }
     }
 
+    /// Timestamp of the next event without consuming it. The streamed
+    /// run loop merges trace arrivals against this (`arrival wins on
+    /// ties`, reproducing the materialized seq order, where arrivals
+    /// are pushed before everything else). `&mut` because the wheel may
+    /// advance its cursor into the drain buffer — semantically
+    /// transparent (see [`TimerWheel`]).
+    pub fn peek_t(&mut self) -> Option<f64> {
+        match &mut self.queue {
+            EventQueue::Wheel(w) => w.peek_t(),
+            EventQueue::Heap(h) => h.peek().map(|Reverse(ev)| ev.t),
+        }
+    }
+
     /// Request a wake for `id` at `t`. Callers are responsible for the
     /// liveness check — EventCore only owns the dedup. Coalesces: a
     /// pending earlier-or-equal wake absorbs this one; an *earlier*
@@ -535,6 +568,32 @@ mod tests {
             })
             .collect();
         assert_eq!(got, vec![3, 2, 1], "late pushes pop before queued future work");
+    }
+
+    #[test]
+    fn peek_is_transparent_to_pop_order() {
+        // A push earlier than an already-peeked event must still pop
+        // first: the peek's bucket load leaves the behind-cursor splice
+        // path intact. Checked on both queue implementations.
+        for core in [EventCore::new(1), EventCore::new_heap_baseline(1)] {
+            let mut core = core;
+            core.push(100.0, EventKind::Arrival(0));
+            core.push(600.0, EventKind::Arrival(1));
+            assert_eq!(core.peek_t(), Some(100.0));
+            assert_eq!(core.peek_t(), Some(100.0), "peek must not consume");
+            assert!(matches!(core.pop().map(|e| e.kind), Some(EventKind::Arrival(0))));
+            assert_eq!(core.peek_t(), Some(600.0));
+            core.push(50.0, EventKind::Arrival(2));
+            assert_eq!(core.peek_t(), Some(50.0), "earlier late push fronts the queue");
+            let got: Vec<usize> = std::iter::from_fn(|| core.pop())
+                .map(|e| match e.kind {
+                    EventKind::Arrival(i) => i,
+                    _ => unreachable!(),
+                })
+                .collect();
+            assert_eq!(got, vec![2, 1]);
+            assert_eq!(core.peek_t(), None);
+        }
     }
 
     #[test]

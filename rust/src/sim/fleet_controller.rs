@@ -17,27 +17,25 @@ use crate::baselines::Policy;
 use crate::capacity::{AdmissionController, Autoscaler, ClassPressure, ScaleDecision};
 use crate::coordinator::rwt::ProfileTable;
 use crate::coordinator::scheduler::InstanceView;
-use crate::workload::{SloClass, Trace};
+use crate::workload::SloClass;
 
 /// Static model placement for policies without model swapping:
 /// distribute instances over models proportionally to request share
-/// (what an operator running vanilla vLLM would provision). Runs over
-/// the bare instance slice before the controller takes ownership.
+/// (what an operator running vanilla vLLM would provision). Takes the
+/// per-model request counts (from a materialized trace or a streaming
+/// profile pass) and runs over the bare instance slice before the
+/// controller takes ownership.
 pub(crate) fn static_pinning(
     instances: &mut [Instance],
     catalog: &ModelCatalog,
     policy: &Policy,
-    trace: &Trace,
+    counts: &BTreeMap<ModelId, usize>,
 ) -> BTreeMap<InstanceId, ModelId> {
     let mut pinned = BTreeMap::new();
     if policy.lso().model_swapping {
         return pinned;
     }
-    let mut counts: BTreeMap<ModelId, usize> = BTreeMap::new();
-    for r in &trace.requests {
-        *counts.entry(r.model).or_default() += 1;
-    }
-    let mut models: Vec<(ModelId, usize)> = counts.into_iter().collect();
+    let mut models: Vec<(ModelId, usize)> = counts.iter().map(|(&m, &c)| (m, c)).collect();
     models.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
     let total: usize = models.iter().map(|(_, c)| c).sum();
     let n_inst = instances.len();

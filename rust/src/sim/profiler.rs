@@ -14,28 +14,98 @@ use std::collections::BTreeMap;
 use crate::backend::{
     GpuKind, Instance, InstanceConfig, ModelCatalog, ModelId, PerfModel, RunningSeq,
 };
-use crate::coordinator::rwt::ProfileTable;
+use crate::coordinator::rwt::{ProfileTable, WorkloadProfile};
 use crate::util::Rng;
-use crate::workload::{ShareGptSampler, Trace};
+use crate::workload::{ArrivalStream, ShareGptSampler, WorkloadSpec};
 
 /// SHEPHERD's deterministic worst-case profile: μ_out := max_out, σ := 0
 /// — the DNN-serving estimation assumption Fig. 1 critiques.
-pub(crate) fn conservative_profiles(profiles: &ProfileTable, trace: &Trace) -> ProfileTable {
+pub(crate) fn conservative_profiles(profiles: &ProfileTable) -> ProfileTable {
     let mut out = ProfileTable::default();
-    let mut keys: Vec<(ModelId, crate::workload::SloClass, bool)> = trace
-        .requests
-        .iter()
-        .map(|r| (r.model, r.class, r.mega))
-        .collect();
-    keys.sort();
-    keys.dedup();
-    for (m, c, mg) in keys {
+    for (m, c, mg) in profiles.keys().collect::<Vec<_>>() {
         let mut p = profiles.get(m, c, mg);
         p.mu_out = p.max_out;
         p.sigma_out = 0.0;
         out.insert(m, c, mg, p);
     }
     out
+}
+
+/// Streaming workload profiling: the moments [`ProfileTable::from_trace`]
+/// measures, plus the per-model request counts static pinning consumes,
+/// computed from two seeded [`ArrivalStream`] replays instead of a
+/// materialized trace — O(keys) memory at any request count.
+///
+/// Bit-identical to `ProfileTable::from_trace(&Trace::generate(spec,
+/// seed))`: the replay emits requests in exactly the order the sorted
+/// trace stores them, and `util::{mean, stddev}` are sequential-sum
+/// formulas, so accumulating in replay order reproduces them (pass 1:
+/// Σx and max; pass 2: Σ(x−μ)², preserving the n<2 ⇒ σ=0 convention).
+pub(crate) fn profile_spec(
+    spec: &WorkloadSpec,
+    seed: u64,
+) -> (ProfileTable, BTreeMap<ModelId, usize>) {
+    type Key = (ModelId, crate::workload::SloClass, bool);
+    struct Acc {
+        n: usize,
+        sum_in: f64,
+        sum_out: f64,
+        max_out: f64,
+        sq_in: f64,
+        sq_out: f64,
+    }
+    let mut acc: BTreeMap<Key, Acc> = BTreeMap::new();
+    let mut counts: BTreeMap<ModelId, usize> = BTreeMap::new();
+    for r in ArrivalStream::new(spec, seed) {
+        *counts.entry(r.model).or_insert(0) += 1;
+        let e = acc.entry((r.model, r.class, r.mega)).or_insert(Acc {
+            n: 0,
+            sum_in: 0.0,
+            sum_out: 0.0,
+            max_out: 0.0,
+            sq_in: 0.0,
+            sq_out: 0.0,
+        });
+        e.n += 1;
+        e.sum_in += r.input_tokens as f64;
+        e.sum_out += r.output_tokens as f64;
+        e.max_out = e.max_out.max(r.output_tokens as f64);
+    }
+    // Pass 2: centered second moments in the same replay order, exactly
+    // as the two-pass `util::variance` computes them over the trace.
+    for r in ArrivalStream::new(spec, seed) {
+        if let Some(e) = acc.get_mut(&(r.model, r.class, r.mega)) {
+            let mu_in = e.sum_in / e.n as f64;
+            let mu_out = e.sum_out / e.n as f64;
+            let di = r.input_tokens as f64 - mu_in;
+            let dout = r.output_tokens as f64 - mu_out;
+            e.sq_in += di * di;
+            e.sq_out += dout * dout;
+        }
+    }
+    let mut table = ProfileTable::default();
+    for ((m, c, mg), e) in &acc {
+        let n = e.n as f64;
+        // `util::variance` returns 0.0 below two samples.
+        let (var_in, var_out) = if e.n < 2 {
+            (0.0, 0.0)
+        } else {
+            (e.sq_in / n, e.sq_out / n)
+        };
+        table.insert(
+            *m,
+            *c,
+            *mg,
+            WorkloadProfile {
+                mu_in: e.sum_in / n,
+                sigma_in: var_in.sqrt(),
+                mu_out: e.sum_out / n,
+                sigma_out: var_out.sqrt(),
+                max_out: e.max_out,
+            },
+        );
+    }
+    (table, counts)
 }
 
 /// Cache of profiled Θ per (gpu, model).
@@ -177,6 +247,38 @@ mod tests {
         assert_eq!(a, b);
         let p = c.perf(GpuKind::A100, ModelId(0), &catalog, 161.0).unwrap();
         assert_eq!(p.measured_theta, Some(a));
+    }
+
+    #[test]
+    fn profile_spec_matches_from_trace_bit_for_bit() {
+        use crate::workload::Trace;
+        let spec = crate::workload::WorkloadSpec::w_c(
+            vec![ModelId(0), ModelId(1)],
+            vec![ModelId(2)],
+            40.0,
+            2400,
+            0.15,
+        );
+        let trace = Trace::generate(&spec, 21);
+        let from_trace = ProfileTable::from_trace(&trace);
+        let (streamed, counts) = profile_spec(&spec, 21);
+        let keys: Vec<_> = from_trace.keys().collect();
+        assert_eq!(keys, streamed.keys().collect::<Vec<_>>());
+        assert!(!keys.is_empty());
+        for (m, c, mg) in keys {
+            let a = from_trace.get(m, c, mg);
+            let b = streamed.get(m, c, mg);
+            assert_eq!(a.mu_in.to_bits(), b.mu_in.to_bits());
+            assert_eq!(a.sigma_in.to_bits(), b.sigma_in.to_bits());
+            assert_eq!(a.mu_out.to_bits(), b.mu_out.to_bits());
+            assert_eq!(a.sigma_out.to_bits(), b.sigma_out.to_bits());
+            assert_eq!(a.max_out.to_bits(), b.max_out.to_bits());
+        }
+        let mut by_model: BTreeMap<ModelId, usize> = BTreeMap::new();
+        for r in &trace.requests {
+            *by_model.entry(r.model).or_insert(0) += 1;
+        }
+        assert_eq!(counts, by_model);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 pub mod sharegpt;
 pub mod arrivals;
 pub mod spec;
+pub mod stream;
 pub mod trace;
 pub mod scenarios;
 
@@ -12,4 +13,5 @@ pub use sharegpt::ShareGptSampler;
 pub use arrivals::{ArrivalProcess, Arrivals};
 pub use scenarios::{Scenario, ScenarioKnobs, ScenarioRun};
 pub use spec::{RequestClassSpec, SloClass, SloTarget, WorkloadSpec};
+pub use stream::ArrivalStream;
 pub use trace::{Trace, TraceRequest};

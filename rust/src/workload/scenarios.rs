@@ -47,6 +47,14 @@ pub enum Scenario {
     /// the work-stealing lanes. Same mixed-SLO multi-model streams as
     /// `scale`, sized an order of magnitude past Fig. 20.
     Megascale,
+    /// The 10M-request gate: the scale shape another order of magnitude
+    /// up, runnable only through the streamed-arrival path (`qlm sim
+    /// --stream` / `Simulation::new_streaming`) with compact records —
+    /// the trace is never materialized, so resident memory stays
+    /// O(in-flight) while the sharded broker absorbs the multi-model
+    /// churn. The CI wall-clock + peak-alloc gate for this PR's sharded
+    /// queue and streaming generation runs here.
+    Gigascale,
 }
 
 /// Tunable knobs shared by every scenario.
@@ -118,6 +126,7 @@ impl Scenario {
         Scenario::Autoscale,
         Scenario::Mega,
         Scenario::Megascale,
+        Scenario::Gigascale,
     ];
 
     pub fn from_name(name: &str) -> Option<Scenario> {
@@ -131,6 +140,7 @@ impl Scenario {
             "autoscale" => Scenario::Autoscale,
             "mega" => Scenario::Mega,
             "megascale" => Scenario::Megascale,
+            "gigascale" => Scenario::Gigascale,
             _ => return None,
         })
     }
@@ -146,6 +156,7 @@ impl Scenario {
             Scenario::Autoscale => "autoscale",
             Scenario::Mega => "mega",
             Scenario::Megascale => "megascale",
+            Scenario::Gigascale => "gigascale",
         }
     }
 
@@ -179,6 +190,9 @@ impl Scenario {
             Scenario::Megascale => {
                 "the scale shape at 1M+ requests (timer-wheel/arena hot-path gate)"
             }
+            Scenario::Gigascale => {
+                "the scale shape at 10M+ requests (streamed arrivals + sharded queue gate)"
+            }
         }
     }
 
@@ -195,6 +209,10 @@ impl Scenario {
             // million-request floor with the arrival span still ending
             // at ~85% of the default horizon so the tail drains.
             Scenario::Megascale => 100.0,
+            // 1.7 × 850 req/s × 7200 s ≈ 10.4M requests: past the
+            // ten-million floor, arrivals still ending at ~85% of the
+            // default horizon so the tail drains.
+            Scenario::Gigascale => 850.0,
             _ => 12.0,
         }
     }
@@ -208,7 +226,8 @@ impl Scenario {
             | Scenario::MultiModel
             | Scenario::Scale
             | Scenario::Mega
-            | Scenario::Megascale => 8,
+            | Scenario::Megascale
+            | Scenario::Gigascale => 8,
             // The autoscale fleet knob is the *trough* size; the
             // autoscaler may grow it 4× (matching the arrival swing).
             Scenario::Autoscale => 4,
@@ -228,7 +247,10 @@ impl Scenario {
             Scenario::MultiModel => rate,
             // Arrivals stop at ~85% of the horizon so the tail drains
             // and the run *completes* inside it (Fig. 20 regime).
-            Scenario::Scale | Scenario::Autoscale | Scenario::Megascale => 1.7 * rate,
+            Scenario::Scale
+            | Scenario::Autoscale
+            | Scenario::Megascale
+            | Scenario::Gigascale => 1.7 * rate,
         };
         let (lo, hi) = match self {
             // The floor *is* the point: `megascale` must queue a
@@ -236,6 +258,11 @@ impl Scenario {
             // gate for the timer wheel, arena storage, and stealing
             // lanes runs here.
             Scenario::Megascale => (1_000_000, 4_000_000),
+            // And `gigascale` ten million: the streamed-arrival +
+            // sharded-broker gate. Only the stream path should build
+            // it — a materialized trace this size is the bug the
+            // scenario exists to catch.
+            Scenario::Gigascale => (10_000_000, 40_000_000),
             Scenario::Scale | Scenario::Autoscale => (100_000, 400_000),
             _ => (200, 400_000),
         };
@@ -321,6 +348,19 @@ impl Scenario {
                 // request count, not a new traffic shape.
                 let mut spec = scale_spec(k);
                 spec.name = format!("megascale(rate={})", k.rate);
+                ScenarioRun {
+                    catalog: ModelCatalog::paper_multi_model(),
+                    spec,
+                    ..base
+                }
+            }
+            Scenario::Gigascale => {
+                // The scale shape again, an order of magnitude past
+                // megascale. The spec is cheap to build (three stream
+                // descriptors); expanding it is what must go through
+                // the streamed path.
+                let mut spec = scale_spec(k);
+                spec.name = format!("gigascale(rate={})", k.rate);
                 ScenarioRun {
                     catalog: ModelCatalog::paper_multi_model(),
                     spec,
@@ -587,6 +627,27 @@ mod tests {
         // Same mixed-SLO multi-model shape as `scale`.
         let run = s.build(&ScenarioKnobs::default());
         assert!(run.spec.name.starts_with("megascale"));
+        let classes: std::collections::BTreeSet<_> =
+            run.spec.streams.iter().map(|s| s.class).collect();
+        assert!(classes.len() >= 3, "mixed SLO classes required");
+        assert!(run.catalog.models.len() >= 7);
+    }
+
+    #[test]
+    fn gigascale_scenario_sizes_to_ten_million_requests() {
+        let s = Scenario::Gigascale;
+        let n = s.requests_for(s.default_rate(), 7200.0);
+        assert!(n >= 10_000_000, "{n}");
+        // Even hostile knobs can't shrink it below the floor.
+        assert!(s.requests_for(0.001, 1.0) >= 10_000_000);
+        // Arrivals still stop inside the horizon at the default rate.
+        let span = (n as f64 / 2.0) / s.default_rate();
+        assert!(span <= 0.9 * 7200.0, "arrival span {span}");
+        // Same mixed-SLO multi-model shape as `scale` — but note: the
+        // spec here is only descriptors; expanding 10M requests must go
+        // through `ArrivalStream`, never `Trace::generate`.
+        let run = s.build(&ScenarioKnobs::default());
+        assert!(run.spec.name.starts_with("gigascale"));
         let classes: std::collections::BTreeSet<_> =
             run.spec.streams.iter().map(|s| s.class).collect();
         assert!(classes.len() >= 3, "mixed SLO classes required");

@@ -1,0 +1,254 @@
+//! Pull-based trace generation: an [`ArrivalStream`] expands a
+//! `WorkloadSpec` one request at a time, in global arrival order,
+//! without ever materializing the full trace. A 10M-request run holds
+//! O(streams) generator state instead of a multi-GB `Vec<TraceRequest>`.
+//!
+//! Determinism contract: [`crate::workload::Trace::generate`] is defined
+//! as `ArrivalStream::new(spec, seed).collect()`, so a streamed run and a
+//! materialized run of the same `(spec, seed)` see byte-identical request
+//! sequences *by construction*. The merge reproduces what
+//! `sort_by(arrival_s)` (a stable sort over stream-major generation
+//! order) produces: each stream's arrivals are monotone non-decreasing,
+//! so a k-way head merge that takes the strictly-smallest head and
+//! breaks ties by lowest stream index yields exactly the stable-sorted
+//! order.
+
+use crate::backend::ModelId;
+use crate::util::Rng;
+use crate::workload::arrivals::Arrivals;
+use crate::workload::{ShareGptSampler, SloClass, SloTarget, TraceRequest, WorkloadSpec};
+
+/// Generator state for one request stream of the spec.
+#[derive(Debug, Clone)]
+struct StreamState {
+    class: SloClass,
+    slo: SloTarget,
+    models: Vec<ModelId>,
+    mega_fraction: f64,
+    arrivals: Arrivals,
+    /// Per-stream RNG, forked from the seed in stream order, so one
+    /// stream's draw count never perturbs another stream's values.
+    rng: Rng,
+    /// Requests this stream has yet to emit (its head excluded).
+    left: usize,
+}
+
+/// A seeded, deterministic iterator over the spec's requests in global
+/// arrival order. `peek_t` exposes the next arrival time without
+/// consuming it, which is what lets the sim's timer wheel interleave
+/// generated arrivals with runtime events.
+#[derive(Debug, Clone)]
+pub struct ArrivalStream {
+    sampler: ShareGptSampler,
+    streams: Vec<StreamState>,
+    /// One primed head per stream (`None` once the stream is dry).
+    heads: Vec<Option<TraceRequest>>,
+    remaining: usize,
+}
+
+impl ArrivalStream {
+    /// Build the stream for `spec`, deterministically from `seed`.
+    pub fn new(spec: &WorkloadSpec, seed: u64) -> ArrivalStream {
+        let mut base = Rng::new(seed);
+        let streams: Vec<StreamState> = spec
+            .streams
+            .iter()
+            .map(|s| StreamState {
+                class: s.class,
+                slo: s.class.target(),
+                models: s.models.clone(),
+                mega_fraction: s.mega_fraction,
+                arrivals: Arrivals::new(s.arrivals),
+                rng: base.fork(),
+                left: s.count,
+            })
+            .collect();
+        let mut stream = ArrivalStream {
+            sampler: spec.sampler.clone(),
+            heads: vec![None; streams.len()],
+            remaining: streams.iter().map(|s| s.left).sum(),
+            streams,
+        };
+        for i in 0..stream.streams.len() {
+            stream.refill(i);
+        }
+        stream
+    }
+
+    /// Draw the next request of stream `i` into its head slot. The
+    /// per-request draw order (arrival, mega coin, tokens, model) is the
+    /// same sequence `Trace::generate` has always used.
+    fn refill(&mut self, i: usize) {
+        let s = &mut self.streams[i];
+        self.heads[i] = if s.left == 0 {
+            None
+        } else {
+            s.left -= 1;
+            let arrival_s = s.arrivals.next(&mut s.rng);
+            let mega = s.rng.f64() < s.mega_fraction;
+            let (input_tokens, output_tokens) = if mega {
+                self.sampler.mega_prompt(&mut s.rng)
+            } else {
+                self.sampler.sample(&mut s.rng)
+            };
+            let model = *s.rng.choose(&s.models);
+            Some(TraceRequest {
+                arrival_s,
+                model,
+                class: s.class,
+                slo: s.slo,
+                input_tokens,
+                output_tokens,
+                mega,
+            })
+        };
+    }
+
+    /// Index of the head with the smallest arrival time; ties go to the
+    /// lowest stream index (the stable-sort tiebreak).
+    fn best_head(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, head) in self.heads.iter().enumerate() {
+            let Some(r) = head else { continue };
+            match best {
+                None => best = Some(i),
+                Some(b) => {
+                    let bt = match &self.heads[b] {
+                        Some(h) => h.arrival_s,
+                        None => f64::INFINITY,
+                    };
+                    if r.arrival_s < bt {
+                        best = Some(i);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Arrival time of the next request, without consuming it.
+    pub fn peek_t(&self) -> Option<f64> {
+        self.best_head()
+            .and_then(|i| self.heads[i].as_ref().map(|r| r.arrival_s))
+    }
+
+    /// Requests not yet emitted.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+}
+
+impl Iterator for ArrivalStream {
+    type Item = TraceRequest;
+
+    fn next(&mut self) -> Option<TraceRequest> {
+        let i = self.best_head()?;
+        let req = self.heads[i].take();
+        self.refill(i);
+        self.remaining -= 1;
+        req
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl ExactSizeIterator for ArrivalStream {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Trace;
+
+    #[test]
+    fn streamed_equals_materialized() {
+        let spec = WorkloadSpec::w_b(
+            vec![ModelId(0), ModelId(1)],
+            vec![ModelId(2), ModelId(1)],
+            80.0,
+            3000,
+        );
+        let trace = Trace::generate(&spec, 11);
+        let streamed: Vec<TraceRequest> = ArrivalStream::new(&spec, 11).collect();
+        assert_eq!(streamed.len(), trace.len());
+        for (a, b) in streamed.iter().zip(&trace.requests) {
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.input_tokens, b.input_tokens);
+            assert_eq!(a.output_tokens, b.output_tokens);
+            assert_eq!(a.mega, b.mega);
+        }
+    }
+
+    #[test]
+    fn emits_in_sorted_order_with_exact_count() {
+        let spec = WorkloadSpec::w_a(ModelId(0), 40.0, 2000);
+        let mut stream = ArrivalStream::new(&spec, 5);
+        assert_eq!(stream.len(), spec.total_requests());
+        let mut last = f64::NEG_INFINITY;
+        let mut n = 0usize;
+        while let Some(r) = stream.next() {
+            assert!(r.arrival_s >= last, "stream must be time-sorted");
+            last = r.arrival_s;
+            n += 1;
+        }
+        assert_eq!(n, spec.total_requests());
+        assert_eq!(stream.remaining(), 0);
+    }
+
+    #[test]
+    fn peek_matches_next() {
+        let spec = WorkloadSpec::w_a(ModelId(0), 25.0, 500);
+        let mut stream = ArrivalStream::new(&spec, 9);
+        while let Some(t) = stream.peek_t() {
+            let r = stream.next().expect("peek implies next");
+            assert_eq!(r.arrival_s, t);
+        }
+        assert!(stream.next().is_none());
+        assert!(stream.peek_t().is_none());
+    }
+
+    #[test]
+    fn replay_from_seed_is_reproducible() {
+        let spec = WorkloadSpec::w_c(vec![ModelId(0)], vec![ModelId(1)], 60.0, 1200, 0.2);
+        let a: Vec<TraceRequest> = ArrivalStream::new(&spec, 3).collect();
+        let b: Vec<TraceRequest> = ArrivalStream::new(&spec, 3).collect();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.input_tokens, y.input_tokens);
+            assert_eq!(x.output_tokens, y.output_tokens);
+        }
+    }
+
+    #[test]
+    fn dump_streams_tie_break_by_stream_index() {
+        // Two Dump streams: every arrival is t=0, so the merge order is
+        // purely the stable tiebreak — all of stream 0, then stream 1.
+        let spec = WorkloadSpec {
+            name: "ties".to_string(),
+            streams: vec![
+                crate::workload::RequestClassSpec {
+                    class: SloClass::Interactive,
+                    models: vec![ModelId(0)],
+                    arrivals: crate::workload::ArrivalProcess::Dump,
+                    count: 5,
+                    mega_fraction: 0.0,
+                },
+                crate::workload::RequestClassSpec {
+                    class: SloClass::Batch1,
+                    models: vec![ModelId(1)],
+                    arrivals: crate::workload::ArrivalProcess::Dump,
+                    count: 5,
+                    mega_fraction: 0.0,
+                },
+            ],
+            sampler: ShareGptSampler::default(),
+        };
+        let reqs: Vec<TraceRequest> = ArrivalStream::new(&spec, 1).collect();
+        assert_eq!(reqs.len(), 10);
+        assert!(reqs[..5].iter().all(|r| r.class == SloClass::Interactive));
+        assert!(reqs[5..].iter().all(|r| r.class == SloClass::Batch1));
+    }
+}

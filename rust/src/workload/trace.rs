@@ -5,9 +5,8 @@
 //! as in the paper (§6: output tokens are unknown a priori).
 
 use crate::backend::ModelId;
-use crate::util::Rng;
+use crate::workload::stream::ArrivalStream;
 use crate::workload::{SloClass, SloTarget, WorkloadSpec};
-use crate::workload::arrivals::Arrivals;
 
 /// A single concrete request in a trace.
 #[derive(Debug, Clone)]
@@ -32,32 +31,12 @@ pub struct Trace {
 
 impl Trace {
     /// Expand a spec into a concrete trace. Deterministic given `seed`.
+    ///
+    /// Defined as a collect over [`ArrivalStream`], so a streamed run
+    /// (which never materializes this Vec) sees byte-identical requests.
     pub fn generate(spec: &WorkloadSpec, seed: u64) -> Trace {
-        let mut rng = Rng::new(seed);
         let mut requests = Vec::with_capacity(spec.total_requests());
-        for stream in &spec.streams {
-            let mut arrivals = Arrivals::new(stream.arrivals);
-            for _ in 0..stream.count {
-                let arrival_s = arrivals.next(&mut rng);
-                let mega = rng.f64() < stream.mega_fraction;
-                let (input_tokens, output_tokens) = if mega {
-                    spec.sampler.mega_prompt(&mut rng)
-                } else {
-                    spec.sampler.sample(&mut rng)
-                };
-                let model = *rng.choose(&stream.models);
-                requests.push(TraceRequest {
-                    arrival_s,
-                    model,
-                    class: stream.class,
-                    slo: stream.class.target(),
-                    input_tokens,
-                    output_tokens,
-                    mega,
-                });
-            }
-        }
-        requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        requests.extend(ArrivalStream::new(spec, seed));
         Trace {
             name: spec.name.clone(),
             requests,

@@ -47,6 +47,8 @@ const FIXTURES: &[(&str, &str, Option<Rule>)] = &[
     ("hot_loop_alloc_waived.rs", "src/coordinator/sched/fixture.rs", None),
     ("pricing_seam_bad.rs", "src/sim/fixture.rs", Some(Rule::PricingSeam)),
     ("pricing_seam_waived.rs", "src/sim/fixture.rs", None),
+    ("import_layering_bad.rs", "src/workload/fixture.rs", Some(Rule::ImportLayering)),
+    ("import_layering_waived.rs", "src/workload/fixture.rs", None),
     ("waiver_hygiene_bad.rs", "src/sim/fixture.rs", Some(Rule::WaiverHygiene)),
     // The hygiene rule is unwaivable; its clean counterpart is simply a
     // well-formed waiver.

@@ -1,0 +1,9 @@
+//! Fixture: the workload layer reaching down into the coordinator it
+//! feeds — the exact back-edge the import-layering rule forbids.
+//! Scanned under the pretend path `src/workload/fixture.rs`.
+
+use crate::coordinator::GlobalQueue;
+
+pub fn peek(q: &GlobalQueue) -> usize {
+    q.len_waiting()
+}

@@ -1,0 +1,10 @@
+//! Fixture: the same forbidden edge carrying a reasoned waiver, so
+//! nothing fires. Scanned under the pretend path
+//! `src/workload/fixture.rs`.
+
+// audit:allow(import-layering): transitional shim while the scenario builder migrates off the queue type
+use crate::coordinator::GlobalQueue;
+
+pub fn peek(q: &GlobalQueue) -> usize {
+    q.len_waiting()
+}

@@ -75,6 +75,96 @@ fn run_scenario_heap_clock(
     Simulation::new_with_heap_clock(cfg, &trace).run(&trace)
 }
 
+/// The same scenario driven end-to-end by the pull-based
+/// [`qlm::workload::ArrivalStream`] (`Simulation::new_streaming`)
+/// instead of a materialized trace — the gigascale path's correctness
+/// half. Profiling moments come from the two-pass seeded replay
+/// (`profile_spec`), arrivals are merged into the event loop on
+/// demand, and the result must still collide digest for digest with
+/// the materialized run.
+fn run_scenario_streamed(
+    scenario: Scenario,
+    policy: Policy,
+    requests: usize,
+    threads: usize,
+) -> RunMetrics {
+    let knobs = ScenarioKnobs {
+        rate: scenario.default_rate(),
+        requests,
+        fleet: scenario.default_fleet(),
+        seed: 42,
+    };
+    let run = scenario.build(&knobs);
+    let mut cfg = run.sim_config(policy);
+    cfg.seed = knobs.seed;
+    cfg.threads = threads;
+    Simulation::new_streaming(cfg, &run.spec, knobs.seed).run_streaming()
+}
+
+#[test]
+fn streamed_equals_materialized_on_scale_scenario() {
+    // Streaming is a memory-layout change, not a behavior change: the
+    // merged (stream, clock) pop order must reproduce the materialized
+    // push order exactly — arrivals before same-timestamp events, trace
+    // order within a timestamp — at every lane count.
+    for threads in [1, 2, 4] {
+        let mat = run_scenario(Scenario::Scale, Policy::qlm(), 2500, threads);
+        let streamed = run_scenario_streamed(Scenario::Scale, Policy::qlm(), 2500, threads);
+        assert_eq!(mat.completed_count(), streamed.completed_count(), "threads={threads}");
+        assert_eq!(
+            mat.digest(),
+            streamed.digest(),
+            "threads={threads}: streamed arrivals diverged from the materialized trace"
+        );
+    }
+}
+
+#[test]
+fn streamed_equals_materialized_on_megascale_scenario() {
+    // The megascale shape at test size: the multi-model catalog spreads
+    // arrivals across every per-model shard, so this doubles as a
+    // sharded-routing equivalence check under streaming.
+    for threads in [1, 2, 4] {
+        let mat = run_scenario(Scenario::Megascale, Policy::qlm(), 2000, threads);
+        let streamed = run_scenario_streamed(Scenario::Megascale, Policy::qlm(), 2000, threads);
+        assert_eq!(mat.completed_count(), streamed.completed_count(), "threads={threads}");
+        assert_eq!(
+            mat.digest(),
+            streamed.digest(),
+            "threads={threads}: streamed arrivals diverged from the materialized trace"
+        );
+    }
+}
+
+#[test]
+fn compact_records_preserve_the_aggregate_tally() {
+    // Compact mode drops per-request records at ack time, so the run
+    // can only report through the CompactTally — which must agree with
+    // the full-records run on what was served.
+    let full = run_scenario(Scenario::Scale, Policy::qlm(), 2000, 1);
+    let knobs = ScenarioKnobs {
+        rate: Scenario::Scale.default_rate(),
+        requests: 2000,
+        fleet: Scenario::Scale.default_fleet(),
+        seed: 42,
+    };
+    let run = Scenario::Scale.build(&knobs);
+    let mut cfg = run.sim_config(Policy::qlm());
+    cfg.seed = knobs.seed;
+    cfg.threads = 1;
+    cfg.compact_records = true;
+    let m = Simulation::new_streaming(cfg, &run.spec, knobs.seed).run_streaming();
+    let tally = m.compact.expect("compact run must carry a tally");
+    assert_eq!(
+        tally.completed,
+        full.completed_count(),
+        "compact tally lost completions"
+    );
+    let att = tally.ttft_attainment();
+    assert!((0.0..=1.0).contains(&att), "attainment out of range: {att}");
+    assert!(tally.tokens_generated > 0, "no tokens recorded in the tally");
+}
+
 #[test]
 fn timer_wheel_equals_heap_clock_on_scale_scenario() {
     // The tentpole's correctness half: swapping the event queue must be

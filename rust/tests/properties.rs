@@ -364,6 +364,168 @@ fn prop_global_queue_state_machine() {
     }
 }
 
+/// Ids in `oracle` whose state satisfies `pred`, ascending (global
+/// submit order — what a single unsharded FCFS queue serves).
+fn oracle_ids(
+    oracle: &BTreeMap<u64, (ModelId, RequestState)>,
+    pred: fn(RequestState) -> bool,
+) -> Vec<u64> {
+    oracle
+        .iter()
+        .filter(|(_, &(_, s))| pred(s))
+        .map(|(&id, _)| id)
+        .collect()
+}
+
+/// Property (tentpole: sharded routing ≡ unified queue): the
+/// per-model-sharded broker must be observationally identical to one
+/// unified FCFS queue. The oracle is a flat map keyed by global submit
+/// id — exactly the pre-sharding single-slab state — and after every
+/// randomized multi-model op the waiting set (full sequence, not just
+/// order), the id→model routing, and every counter must agree with it.
+#[test]
+fn prop_sharded_routing_equals_unified_queue() {
+    let is_waiting =
+        |s: RequestState| matches!(s, RequestState::Waiting | RequestState::Evicted);
+    let is_running = |s: RequestState| matches!(s, RequestState::Running);
+    for seed in 1000..1040 {
+        let mut rng = Rng::new(seed);
+        let mut q = GlobalQueue::new();
+        // 1..=8 models: from the degenerate single-shard case up to a
+        // catalog wide enough that every op crosses shard boundaries.
+        let n_models = 1 + rng.usize(8) as u32;
+        let mut oracle: BTreeMap<u64, (ModelId, RequestState)> = BTreeMap::new();
+        let mut on_inst: BTreeMap<u64, u32> = BTreeMap::new();
+        let mut next_id = 0u64;
+        let mut completed = 0usize;
+        let mut shed = 0usize;
+        for _ in 0..1200 {
+            match rng.usize(7) {
+                0 | 1 => {
+                    let r = rand_request(&mut rng, next_id, n_models);
+                    let model = r.model;
+                    let id = q.submit(r);
+                    assert_eq!(id, next_id, "seed {seed}: ids not dense and global");
+                    oracle.insert(id, (model, RequestState::Waiting));
+                    next_id += 1;
+                }
+                2 => {
+                    // Pull an arbitrary waiting request (not just the head).
+                    let waiting = oracle_ids(&oracle, is_waiting);
+                    if !waiting.is_empty() {
+                        let id = *rng.choose(&waiting);
+                        assert!(q.mark_running(id).is_some(), "seed {seed}");
+                        oracle.get_mut(&id).unwrap().1 = RequestState::Running;
+                        on_inst.insert(id, rng.usize(3) as u32);
+                    }
+                }
+                3 => {
+                    let running = oracle_ids(&oracle, is_running);
+                    if !running.is_empty() {
+                        let id = *rng.choose(&running);
+                        let inst = on_inst.remove(&id).unwrap();
+                        q.requeue_evicted(id, 4, InstanceId(inst));
+                        oracle.get_mut(&id).unwrap().1 = RequestState::Evicted;
+                    }
+                }
+                4 => {
+                    let running = oracle_ids(&oracle, is_running);
+                    if !running.is_empty() {
+                        let id = *rng.choose(&running);
+                        q.complete(id, Some(1.0), 2.0, 7);
+                        oracle.remove(&id);
+                        on_inst.remove(&id);
+                        completed += 1;
+                    }
+                }
+                5 if rng.f64() < 0.2 => {
+                    let waiting = oracle_ids(&oracle, is_waiting);
+                    if !waiting.is_empty() {
+                        let id = *rng.choose(&waiting);
+                        assert!(q.shed(id), "seed {seed}: shed refused a waiting id");
+                        oracle.get_mut(&id).unwrap().1 = RequestState::Shed;
+                        shed += 1;
+                    }
+                }
+                6 if rng.f64() < 0.1 => {
+                    // Down one instance: its running requests — spread
+                    // across many model shards — all revert to Waiting.
+                    let dead = rng.usize(3) as u32;
+                    let downed: Vec<u64> = on_inst
+                        .iter()
+                        .filter(|(_, &i)| i == dead)
+                        .map(|(&id, _)| id)
+                        .collect();
+                    let affected = q.fail_instance(InstanceId(dead), &downed);
+                    assert_eq!(affected, downed, "seed {seed}: fail missed requests");
+                    for id in downed {
+                        on_inst.remove(&id);
+                        oracle.get_mut(&id).unwrap().1 = RequestState::Waiting;
+                    }
+                }
+                _ => {}
+            }
+            // The sharded broker must present the unified view.
+            let want = oracle_ids(&oracle, is_waiting);
+            let got: Vec<u64> = q.waiting_ids().collect();
+            assert_eq!(got, want, "seed {seed}: waiting set diverged from oracle");
+            assert_eq!(q.len_waiting(), want.len(), "seed {seed}");
+            assert_eq!(q.len_total(), oracle.len(), "seed {seed}");
+            assert_eq!(q.len_completed(), completed, "seed {seed}");
+            assert_eq!(q.len_shed(), shed, "seed {seed}");
+            for &id in &want {
+                assert_eq!(
+                    q.get(id).map(|r| r.model),
+                    Some(oracle[&id].0),
+                    "seed {seed}: id {id} routed to the wrong shard"
+                );
+            }
+        }
+        // Route-table retirement: every live id resolves, every
+        // completed id is gone for good.
+        for id in 0..next_id {
+            assert_eq!(
+                q.get(id).is_some(),
+                oracle.contains_key(&id),
+                "seed {seed}: stale route for id {id}"
+            );
+        }
+    }
+}
+
+/// Property (scheduler-pass skipping): per-shard dirt tracks exactly
+/// the models that mutated since the last pass — `begin_pass` reports
+/// clean shards as provably skippable and resets the flags.
+#[test]
+fn prop_shard_dirt_skips_clean_models() {
+    let mut rng = Rng::new(77);
+    let mut q = GlobalQueue::new();
+    let k = 6usize;
+    let mut head: Vec<u64> = Vec::new();
+    for m in 0..k {
+        let mut r = rand_request(&mut rng, m as u64, 1);
+        r.model = ModelId(m as u32);
+        head.push(q.submit(r));
+    }
+    assert_eq!(q.shard_count(), k, "one shard per model");
+    assert_eq!(q.begin_pass(), (k, 0), "submits dirtied every shard");
+    assert_eq!(q.begin_pass(), (0, k), "an idle pass scans nothing");
+    // One model mutates → exactly one shard rescans.
+    assert!(q.mark_running(head[3]).is_some());
+    assert_eq!(q.begin_pass(), (1, k - 1));
+    // Mutation-free group dirt (drain re-dirty) goes through touch_model.
+    q.touch_model(ModelId(1));
+    assert_eq!(q.begin_pass(), (1, k - 1));
+    // A completion shrinks its group, so its shard must rescan too
+    // (the engine marks the shrunk group dirty).
+    q.complete(head[3], Some(1.0), 2.0, 3);
+    assert_eq!(q.begin_pass(), (1, k - 1));
+    // Cumulative stats cover every pass above.
+    let (scanned, skipped) = q.shard_stats();
+    assert_eq!(scanned + skipped, 5 * k as u64);
+    assert_eq!(scanned, k as u64 + 3);
+}
+
 /// A100 view serving every paper-catalog model.
 fn a100_view(i: u32) -> InstanceView {
     let catalog = ModelCatalog::paper();
